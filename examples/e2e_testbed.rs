@@ -1,0 +1,53 @@
+//! End-to-end validation driver (EXPERIMENTS.md §E2E): exercises every
+//! layer of the stack on a realistic workload and reports the paper's
+//! headline metrics.
+//!
+//! 1. Control plane — a 10-worker Oakestra cluster vs K3s/K8s/MicroK8s:
+//!    deployment latency and idle overheads (headline: ≈10× CPU and ≈30%
+//!    memory reduction).
+//! 2. Scheduling at scale — LDP over 500 simulated edge servers, host path
+//!    vs the PJRT-compiled Pallas kernel artifact.
+//! 3. Data plane — semantic `closest` addressing vs round-robin balancing.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example e2e_testbed
+//! ```
+
+use oakestra::bench_harness as bh;
+
+fn main() {
+    println!("== end-to-end testbed (headline reproduction) ==\n");
+
+    println!("--- 1. deployment latency, 2..10 workers (Fig. 4a shape) ---");
+    let t = bh::fig4a_deploy_time(&[2, 6, 10], 3);
+    println!("{t}");
+
+    println!("--- 2. idle overheads at 10 workers (Fig. 4b/4c, headline) ---");
+    let (cpu, mem) = bh::fig4bc_idle_overhead(&[10], 60.0);
+    println!("{cpu}");
+    println!("{mem}");
+    if let (Some(c), Some(m)) = (cpu.rows.first(), mem.rows.first()) {
+        let f = |s: &String| s.parse::<f64>().unwrap_or(f64::NAN);
+        println!(
+            "headline: worker CPU {:.1}× lower than K3s, master CPU {:.1}× lower, \
+             master memory {:.0}% lower\n",
+            f(&c[3]) / f(&c[1]),
+            f(&c[4]) / f(&c[2]),
+            (1.0 - f(&m[2]) / f(&m[4])) * 100.0
+        );
+    }
+
+    println!("--- 3. LDP at 500 workers: host vs PJRT artifact (Fig. 8b) ---");
+    let t = bh::fig8b_schedulers_scale(&[100, 500], 5);
+    println!("{t}");
+
+    println!("--- 4. semantic addressing (Fig. 9 left) ---");
+    let t = bh::fig9_left_closest_rtt(&[1, 4, 8], 400);
+    println!("{t}");
+
+    println!("--- 5. video pipeline (Fig. 10) ---");
+    let t = bh::fig10_video_analytics(60);
+    println!("{t}");
+
+    println!("done. Full sweeps: `cargo bench` or `oakestra bench all`.");
+}

@@ -1,0 +1,80 @@
+//! Quickstart: spin up a two-cluster Oakestra deployment, submit a small
+//! service through the root API, and watch the delegated scheduling +
+//! lifecycle play out.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use oakestra::bench_harness::{build_oakestra, OakTestbedConfig};
+use oakestra::coordinator::{RootOrchestrator, SchedulerKind};
+use oakestra::sla::simple_sla;
+use oakestra::util::SimTime;
+
+fn main() {
+    let mut tb = build_oakestra(OakTestbedConfig {
+        seed: 1,
+        clusters: 2,
+        workers_per_cluster: 3,
+        scheduler: SchedulerKind::RomBestFit,
+        ..OakTestbedConfig::default()
+    });
+
+    println!("== Oakestra quickstart ==");
+    println!("topology: root + 2 cluster orchestrators + 6 workers (S VMs)\n");
+
+    tb.warm_up();
+    {
+        let root = tb.sim.actor_as::<RootOrchestrator>(tb.root).unwrap();
+        println!(
+            "after warm-up: {} clusters registered at the root",
+            root.tree.len()
+        );
+        for c in root.tree.clusters() {
+            if let Some(stats) = root.tree.stats(c) {
+                println!(
+                    "  {c}: {} workers, Σcpu={} mc, μcpu={:.0} mc, σcpu={:.0} mc",
+                    stats.worker_count,
+                    stats.total.cpu_millicores,
+                    stats.mean_cpu_millicores,
+                    stats.std_cpu_millicores
+                );
+            }
+        }
+    }
+
+    println!("\nsubmitting SLA: frontend (200 mc, 64 MB) + backend (400 mc, 128 MB)");
+    let mut sla = simple_sla("frontend", 200, 64);
+    sla.constraints.push(simple_sla("backend", 400, 128).constraints[0].clone());
+    tb.submit(sla, SimTime::from_secs(13.0));
+    tb.sim.run_until(SimTime::from_secs(45.0));
+
+    let root = tb.sim.actor_as::<RootOrchestrator>(tb.root).unwrap();
+    for rec in root.db.services() {
+        println!("\nservice '{}':", rec.spec.name);
+        for inst in &rec.instances {
+            println!(
+                "  instance {} of task {}: {:?} on {}",
+                inst.instance,
+                inst.task,
+                inst.state,
+                inst.worker
+                    .map(|w| w.to_string())
+                    .unwrap_or_else(|| "-".into())
+            );
+        }
+        println!("  fully running: {}", rec.fully_running());
+    }
+
+    let times = tb.deploy_times_ms();
+    println!(
+        "\ndeploy time: {:.0} ms (submit → all tasks Running)",
+        oakestra::util::mean(&times)
+    );
+    let m = &tb.sim.core.metrics;
+    println!(
+        "control traffic: {} msgs / {} bytes total",
+        m.total_msgs(),
+        m.total_bytes()
+    );
+}

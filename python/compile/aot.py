@@ -1,0 +1,124 @@
+"""AOT compile path: lower every L2 entry point to HLO *text* artifacts.
+
+Run once by ``make artifacts``; Python never appears on the Rust request
+path. For each entry point we lower a jitted function at fixed example
+shapes to StableHLO, convert to an XlaComputation and dump HLO **text**
+(NOT ``.serialize()``): jax >= 0.5 emits HloModuleProto with 64-bit
+instruction ids which the image's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+
+Outputs (``artifacts/``):
+  <name>.hlo.txt      one per entry-point variant
+  manifest.json       machine-readable input/output specs consumed by
+                      ``rust/src/runtime/artifacts.rs``
+
+All entries are lowered with ``return_tuple=True``; the Rust side unwraps
+with ``Literal::to_tuple()``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# (name, fn, [(shape, dtype), ...]) -- shapes are the padded static sizes
+# the Rust runtime feeds. N variants let the scheduler pick the smallest
+# artifact that fits the live worker count.
+LDP_K = 4
+VIV_D = model.VIVALDI_DIM
+
+
+def _ldp_spec(n: int):
+    return [
+        ((n, 3), jnp.float32),     # caps
+        ((n,), jnp.int32),         # virt
+        ((n, 2), jnp.float32),     # geo
+        ((n, VIV_D), jnp.float32),  # viv
+        ((3,), jnp.float32),       # req
+        ((1,), jnp.int32),         # req_virt
+        ((LDP_K, 2), jnp.float32),  # cons_geo
+        ((LDP_K, VIV_D), jnp.float32),  # cons_viv
+        ((LDP_K, 2), jnp.float32),  # cons_thr
+        ((LDP_K,), jnp.float32),   # cons_active
+    ]
+
+
+ENTRIES = [
+    ("ldp_score_512", model.ldp_pipeline, _ldp_spec(512)),
+    ("ldp_score_2048", model.ldp_pipeline, _ldp_spec(2048)),
+    ("vivaldi_embed_256", functools.partial(model.vivaldi_embed, steps=16),
+     [((256, 256), jnp.float32)]),
+    ("trilaterate_16", model.trilaterate,
+     [((16, VIV_D), jnp.float32), ((16,), jnp.float32)]),
+    ("detector_1x64", model.detector_fwd, [((1, 64, 64, 3), jnp.float32)]),
+    ("detector_8x64", model.detector_fwd, [((8, 64, 64, 3), jnp.float32)]),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the interchange format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_entry(fn, in_specs):
+    args = [jax.ShapeDtypeStruct(shape, dtype) for shape, dtype in in_specs]
+    lowered = jax.jit(fn).lower(*args)
+    out_avals = jax.eval_shape(fn, *args)
+    if not isinstance(out_avals, (tuple, list)):
+        out_avals = (out_avals,)
+    return to_hlo_text(lowered), out_avals
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out", default="../artifacts/model.hlo.txt",
+                        help="path of the marker artifact (its directory "
+                             "receives all artifacts + manifest.json)")
+    args = parser.parse_args()
+
+    out_dir = os.path.dirname(os.path.abspath(args.out))
+    os.makedirs(out_dir, exist_ok=True)
+
+    manifest = {}
+    for name, fn, in_specs in ENTRIES:
+        text, out_avals = lower_entry(fn, in_specs)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest[name] = {
+            "file": f"{name}.hlo.txt",
+            "inputs": [
+                {"shape": list(shape), "dtype": jnp.dtype(dtype).name}
+                for shape, dtype in in_specs
+            ],
+            "outputs": [
+                {"shape": list(a.shape), "dtype": jnp.dtype(a.dtype).name}
+                for a in out_avals
+            ],
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+
+    # Marker file keeps the Makefile's single-target dependency simple.
+    with open(os.path.abspath(args.out), "w") as f:
+        f.write("\n".join(sorted(manifest)) + "\n")
+    print(f"wrote manifest with {len(manifest)} entries")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,149 @@
+"""L1 Pallas kernel: batched LDP worker feasibility + scoring (paper Alg. 2).
+
+This is the compute hot-spot of Oakestra's Latency & Distance aware
+Placement scheduler (paper Fig. 8b shows its cost escalating with
+infrastructure size). For every candidate worker the kernel evaluates, in a
+single streaming pass:
+
+  * resource feasibility    (Alg. 2 line 1: cpu / mem / disk >= request,
+                             virtualization bitmask superset),
+  * S2S / S2U constraints   (Alg. 2 lines 2-16: great-circle distance to a
+                             geographic target under ``geo_thr`` AND Vivaldi
+                             Euclidean distance to a coordinate target under
+                             ``viv_thr``, per constraint row),
+  * the ROM score           (Alg. 1 strategy: (A_cpu - Q_cpu) + (A_mem -
+                             Q_mem)), masked to -inf for infeasible workers.
+
+TPU-shaped design (see DESIGN.md "Hardware adaptation"): workers are tiled
+in row blocks of ``BLOCK`` via ``BlockSpec`` so each grid step streams one
+(BLOCK, F) tile HBM->VMEM; the constraint table (K rows) is tiny and mapped
+whole into every step. All math is elementwise/VPU-friendly -- no gathers,
+no data-dependent control flow -- and the mask is carried in f32 so the
+kernel is a pure map over rows. ``interpret=True`` is mandatory on this
+image: real-TPU lowering emits a Mosaic custom-call the CPU PJRT client
+cannot execute.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Row-block size: multiple of the 8x128 VPU tile; 128 rows x ~16 f32
+# features is ~8 KiB of VMEM per input tile, far under the ~16 MiB budget.
+BLOCK = 128
+
+# Earth radius used for great-circle distances, in km (matches ref.py and
+# the rust `geo` module -- keep the three in sync).
+EARTH_RADIUS_KM = 6371.0
+
+NEG_INF = -1e30
+
+
+def _haversine_km(lat1, lon1, lat2, lon2):
+    """Great-circle distance in km; inputs in radians. dist_gc in Alg. 2."""
+    dlat = 0.5 * (lat2 - lat1)
+    dlon = 0.5 * (lon2 - lon1)
+    h = jnp.sin(dlat) ** 2 + jnp.cos(lat1) * jnp.cos(lat2) * jnp.sin(dlon) ** 2
+    # Clip for numerical safety: h can exceed 1 by epsilon in f32.
+    h = jnp.clip(h, 0.0, 1.0)
+    return 2.0 * EARTH_RADIUS_KM * jnp.arcsin(jnp.sqrt(h))
+
+
+def _ldp_kernel(
+    caps_ref,       # f32[BLOCK, 3]   available cpu, mem, disk
+    virt_ref,       # i32[BLOCK]      supported virtualization bitmask
+    geo_ref,        # f32[BLOCK, 2]   worker lat, lon (radians)
+    viv_ref,        # f32[BLOCK, D]   worker Vivaldi coordinates
+    req_ref,        # f32[3]          requested cpu, mem, disk
+    req_virt_ref,   # i32[1]          required virtualization bits
+    cons_geo_ref,   # f32[K, 2]       per-constraint geo target (radians)
+    cons_viv_ref,   # f32[K, D]       per-constraint Vivaldi target
+    cons_thr_ref,   # f32[K, 2]       per-constraint (geo_thr_km, viv_thr_ms)
+    cons_active_ref,  # f32[K]        1.0 = constraint enforced
+    score_ref,      # f32[BLOCK]      out: masked ROM score
+    mask_ref,       # f32[BLOCK]      out: 1.0 feasible / 0.0 infeasible
+):
+    caps = caps_ref[...]
+    req = req_ref[...]
+
+    # --- Alg. 2 line 1: resource + virtualization feasibility -------------
+    res_ok = jnp.all(caps >= req[None, :], axis=1)
+    virt = virt_ref[...]
+    req_virt = req_virt_ref[0]
+    virt_ok = jnp.bitwise_and(virt, req_virt) == req_virt
+    feasible = jnp.logical_and(res_ok, virt_ok)
+
+    # --- Alg. 2 lines 2-16: latency & distance constraints ----------------
+    # [BLOCK, K] great-circle distance worker -> constraint target.
+    geo = geo_ref[...]
+    cons_geo = cons_geo_ref[...]
+    d_gc = _haversine_km(
+        geo[:, 0:1], geo[:, 1:2], cons_geo[None, :, 0], cons_geo[None, :, 1]
+    )
+    # [BLOCK, K] Euclidean distance in the Vivaldi embedding (approx RTT ms).
+    viv = viv_ref[...]
+    cons_viv = cons_viv_ref[...]
+    diff = viv[:, None, :] - cons_viv[None, :, :]
+    d_viv = jnp.sqrt(jnp.sum(diff * diff, axis=-1))
+
+    thr = cons_thr_ref[...]
+    active = cons_active_ref[...] > 0.5
+    cons_ok = jnp.logical_and(d_gc <= thr[None, :, 0], d_viv <= thr[None, :, 1])
+    cons_ok = jnp.logical_or(cons_ok, jnp.logical_not(active)[None, :])
+    feasible = jnp.logical_and(feasible, jnp.all(cons_ok, axis=1))
+
+    # --- Alg. 1 scoring strategy: spare cpu + spare mem --------------------
+    score = (caps[:, 0] - req[0]) + (caps[:, 1] - req[1])
+    score_ref[...] = jnp.where(feasible, score, NEG_INF)
+    mask_ref[...] = feasible.astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def ldp_score(
+    caps, virt, geo, viv, req, req_virt, cons_geo, cons_viv, cons_thr,
+    cons_active, *, block: int = BLOCK,
+):
+    """Tiled LDP feasibility + score over ``N`` workers.
+
+    ``N`` must be a multiple of ``block`` (the AOT wrapper pads; padded rows
+    carry zero capacity so they are always infeasible). Returns
+    ``(score f32[N], mask f32[N])``.
+    """
+    n, _ = caps.shape
+    k, d = cons_viv.shape
+    if n % block != 0:
+        raise ValueError(f"N={n} must be a multiple of block={block}")
+    grid = (n // block,)
+
+    row = pl.BlockSpec((block, None), lambda i: (i, 0))
+    row1 = pl.BlockSpec((block,), lambda i: (i,))
+    # Small operands are replicated whole into every grid step.
+    whole = lambda *shape: pl.BlockSpec(shape, lambda i: tuple(0 for _ in shape))
+
+    return pl.pallas_call(
+        _ldp_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block, 3), lambda i: (i, 0)),
+            row1,
+            pl.BlockSpec((block, 2), lambda i: (i, 0)),
+            pl.BlockSpec((block, d), lambda i: (i, 0)),
+            whole(3),
+            whole(1),
+            whole(k, 2),
+            whole(k, d),
+            whole(k, 2),
+            whole(k),
+        ],
+        out_specs=[row1, row1],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+        ],
+        interpret=True,
+    )(caps, virt, geo, viv, req, req_virt, cons_geo, cons_viv, cons_thr,
+      cons_active)

@@ -1,0 +1,71 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+Every kernel in this package has a reference implementation here written in
+straight-line ``jax.numpy`` with no Pallas, no tiling and no grid -- the
+pytest suite (``python/tests/``) asserts ``allclose`` between kernel and
+oracle across hypothesis-generated shapes and inputs. Keep the constants in
+sync with the kernels (they are imported from there, not duplicated).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .ldp_score import EARTH_RADIUS_KM, NEG_INF
+from .vivaldi_step import CC, CE, EPS
+
+
+def haversine_km_ref(lat1, lon1, lat2, lon2):
+    """Great-circle distance in km, inputs in radians (broadcasting)."""
+    dlat = 0.5 * (lat2 - lat1)
+    dlon = 0.5 * (lon2 - lon1)
+    h = jnp.sin(dlat) ** 2 + jnp.cos(lat1) * jnp.cos(lat2) * jnp.sin(dlon) ** 2
+    h = jnp.clip(h, 0.0, 1.0)
+    return 2.0 * EARTH_RADIUS_KM * jnp.arcsin(jnp.sqrt(h))
+
+
+def ldp_score_ref(caps, virt, geo, viv, req, req_virt, cons_geo, cons_viv,
+                  cons_thr, cons_active):
+    """Oracle for ``ldp_score.ldp_score`` (paper Alg. 2 + Alg. 1 score)."""
+    res_ok = jnp.all(caps >= req[None, :], axis=1)
+    virt_ok = jnp.bitwise_and(virt, req_virt[0]) == req_virt[0]
+    feasible = jnp.logical_and(res_ok, virt_ok)
+
+    d_gc = haversine_km_ref(
+        geo[:, 0:1], geo[:, 1:2], cons_geo[None, :, 0], cons_geo[None, :, 1]
+    )
+    diff = viv[:, None, :] - cons_viv[None, :, :]
+    d_viv = jnp.sqrt(jnp.sum(diff * diff, axis=-1))
+
+    active = cons_active > 0.5
+    cons_ok = jnp.logical_and(
+        d_gc <= cons_thr[None, :, 0], d_viv <= cons_thr[None, :, 1]
+    )
+    cons_ok = jnp.logical_or(cons_ok, jnp.logical_not(active)[None, :])
+    feasible = jnp.logical_and(feasible, jnp.all(cons_ok, axis=1))
+
+    score = (caps[:, 0] - req[0]) + (caps[:, 1] - req[1])
+    return jnp.where(feasible, score, NEG_INF), feasible.astype(jnp.float32)
+
+
+def vivaldi_step_ref(x, err, rtt):
+    """Oracle for ``vivaldi_step.vivaldi_step``."""
+    valid = rtt > 0.0
+    diff = x[:, None, :] - x[None, :, :]
+    dist = jnp.sqrt(jnp.sum(diff * diff, axis=-1))
+    unit = diff / jnp.maximum(dist, EPS)[..., None]
+
+    w = err[:, None] / jnp.maximum(err[:, None] + err[None, :], EPS)
+    e = rtt - dist
+    wv = jnp.where(valid, w, 0.0)
+    n_valid = jnp.maximum(jnp.sum(valid.astype(jnp.float32), axis=1), 1.0)
+
+    force = jnp.sum((wv * e)[..., None] * unit, axis=1) / n_valid[:, None]
+    x_new = x + CC * force
+
+    rel = jnp.where(valid, jnp.abs(e) / jnp.maximum(rtt, EPS), 0.0)
+    rel_bar = jnp.sum(rel, axis=1) / n_valid
+    w_bar = jnp.sum(wv, axis=1) / n_valid
+    alpha = CE * w_bar
+    err_new = jnp.clip((1.0 - alpha) * err + alpha * rel_bar, 1e-3, 2.0)
+    return x_new, err_new

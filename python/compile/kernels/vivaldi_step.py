@@ -1,0 +1,106 @@
+"""L1 Pallas kernel: one batched Vivaldi spring-relaxation step.
+
+Vivaldi [Dabek et al., SIGCOMM'04] embeds networked nodes into a
+d-dimensional coordinate space such that Euclidean distance approximates
+round-trip time. Oakestra's LDP scheduler (paper Alg. 2) consumes these
+coordinates for its latency filters, and the simulator embeds its measured
+RTT matrix through repeated application of this kernel.
+
+The classic algorithm processes one (i, j) sample at a time; this kernel is
+the batched/synchronous variant: every node relaxes against *all* peers at
+once, which is the natural TPU formulation -- the (N, N) RTT matrix is
+tiled into (BLOCK, N) row strips via ``BlockSpec`` (one grid step per
+strip), and the full coordinate/error vectors (small: N*(D+1) f32) ride
+along whole in VMEM. Pairs with ``rtt <= 0`` (self-pairs, unmeasured links)
+are masked out.
+
+Update rule (matching ``ref.vivaldi_step_ref`` exactly -- the pytest oracle):
+
+  w_ij   = e_i / (e_i + e_j)                    confidence weighting
+  err_ij = rtt_ij - ||x_i - x_j||               raw spring displacement
+  u_ij   = (x_i - x_j) / max(||x_i - x_j||, eps)
+  x_i   += cc * mean_j[ w_ij * err_ij * u_ij ]  coordinate step
+  e_i    = (1-ce*wbar_i) * e_i + ce*wbar_i * mean_j[ |err_ij| / rtt_ij ]
+
+``interpret=True`` is mandatory (CPU PJRT cannot run Mosaic custom-calls).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 64
+EPS = 1e-6
+CC = 0.25   # coordinate gain (delta in the paper's Vivaldi reference)
+CE = 0.25   # error-estimate gain
+
+
+def _vivaldi_kernel(
+    x_rows_ref,   # f32[BLOCK, D]  coordinates of this row strip
+    err_rows_ref,  # f32[BLOCK]    error estimates of this row strip
+    x_all_ref,    # f32[N, D]      all coordinates (replicated per step)
+    err_all_ref,  # f32[N]         all error estimates (replicated)
+    rtt_ref,      # f32[BLOCK, N]  measured RTTs, row strip
+    x_out_ref,    # f32[BLOCK, D]  out: updated coordinates
+    err_out_ref,  # f32[BLOCK]     out: updated error estimates
+):
+    x_i = x_rows_ref[...]
+    e_i = err_rows_ref[...]
+    x_j = x_all_ref[...]
+    e_j = err_all_ref[...]
+    rtt = rtt_ref[...]
+
+    valid = rtt > 0.0                                   # [B, N]
+    diff = x_i[:, None, :] - x_j[None, :, :]            # [B, N, D]
+    dist = jnp.sqrt(jnp.sum(diff * diff, axis=-1))      # [B, N]
+    unit = diff / jnp.maximum(dist, EPS)[..., None]     # [B, N, D]
+
+    w = e_i[:, None] / jnp.maximum(e_i[:, None] + e_j[None, :], EPS)  # [B, N]
+    err = rtt - dist                                    # [B, N]
+    wv = jnp.where(valid, w, 0.0)
+    n_valid = jnp.maximum(jnp.sum(valid.astype(jnp.float32), axis=1), 1.0)
+
+    force = jnp.sum((wv * err)[..., None] * unit, axis=1) / n_valid[:, None]
+    x_out_ref[...] = x_i + CC * force
+
+    rel = jnp.where(valid, jnp.abs(err) / jnp.maximum(rtt, EPS), 0.0)
+    rel_bar = jnp.sum(rel, axis=1) / n_valid
+    w_bar = jnp.sum(wv, axis=1) / n_valid
+    alpha = CE * w_bar
+    err_out_ref[...] = jnp.clip((1.0 - alpha) * e_i + alpha * rel_bar, 1e-3, 2.0)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def vivaldi_step(x, err, rtt, *, block: int = BLOCK):
+    """One synchronous Vivaldi iteration. ``x: f32[N,D]``, ``err: f32[N]``,
+    ``rtt: f32[N,N]`` (ms; <=0 entries ignored). Returns ``(x', err')``.
+    """
+    n, d = x.shape
+    if n % block != 0:
+        raise ValueError(f"N={n} must be a multiple of block={block}")
+    grid = (n // block,)
+
+    return pl.pallas_call(
+        _vivaldi_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block, d), lambda i: (i, 0)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((n, d), lambda i: (0, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((block, n), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block, d), lambda i: (i, 0)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, d), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+        ],
+        interpret=True,
+    )(x, err, x, err, rtt)

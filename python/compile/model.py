@@ -1,0 +1,138 @@
+"""L2: the JAX compute graphs AOT-lowered for the Rust coordinator.
+
+Four entry points, each exported to HLO text by ``aot.py`` and executed at
+runtime through ``rust/src/runtime`` (PJRT CPU client):
+
+* ``ldp_pipeline``   -- batched LDP feasibility+score (calls the L1 Pallas
+                        kernel); the scheduler hot path for large clusters.
+* ``vivaldi_embed``  -- embeds a measured RTT matrix into Vivaldi
+                        coordinates by scanning the L1 spring-update kernel.
+* ``trilaterate``    -- approximates a user's Vivaldi position from RTT
+                        probes to anchor workers (paper Alg. 2 line 13) by
+                        fixed-step gradient descent.
+* ``detector_fwd``   -- small CNN standing in for YOLOv3 in the
+                        video-analytics workload (weights baked into the
+                        artifact from a fixed seed; see DESIGN.md
+                        substitution ledger).
+
+Python never runs on the request path: these functions exist to be lowered
+once (``make artifacts``) and then served from Rust.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.ldp_score import ldp_score
+from .kernels.vivaldi_step import vivaldi_step
+
+VIVALDI_DIM = 4        # 3 spatial dims + height-like slack dimension
+TRILAT_ITERS = 128     # fixed GD iterations for user-position estimation
+TRILAT_LR = 0.5
+
+
+def ldp_pipeline(caps, virt, geo, viv, req, req_virt, cons_geo, cons_viv,
+                 cons_thr, cons_active):
+    """LDP scoring over a padded worker table. Returns (score, mask).
+
+    Shapes (N static per artifact variant, K = max constraint rows):
+      caps f32[N,3], virt i32[N], geo f32[N,2], viv f32[N,D], req f32[3],
+      req_virt i32[1], cons_geo f32[K,2], cons_viv f32[K,D], cons_thr
+      f32[K,2], cons_active f32[K].
+    Padded rows must carry zero capacity so they fail feasibility.
+    """
+    return ldp_score(caps, virt, geo, viv, req, req_virt, cons_geo,
+                     cons_viv, cons_thr, cons_active)
+
+
+def vivaldi_embed(rtt, steps: int = 16):
+    """Embed ``rtt f32[N,N]`` into Vivaldi space; returns (coords, err).
+
+    Deterministic non-random init (index-based spiral) so the artifact has a
+    single input; repeated spring relaxation breaks the symmetry.
+    """
+    n = rtt.shape[0]
+    idx = jnp.arange(n, dtype=jnp.float32)
+    # Deterministic low-symmetry init: points on a small spiral.
+    init = jnp.stack(
+        [
+            jnp.cos(0.7 * idx) * (1.0 + 0.01 * idx),
+            jnp.sin(0.7 * idx) * (1.0 + 0.01 * idx),
+            0.05 * idx,
+            jnp.ones_like(idx),
+        ],
+        axis=1,
+    )[:, :VIVALDI_DIM]
+    err0 = jnp.ones((n,), jnp.float32)
+
+    def body(carry, _):
+        x, e = carry
+        x, e = vivaldi_step(x, e, rtt)
+        return (x, e), None
+
+    (x, e), _ = jax.lax.scan(body, (init, err0), None, length=steps)
+    return x, e
+
+
+def trilaterate(anchors, rtts):
+    """Estimate a user's Vivaldi coordinates from probe RTTs (Alg. 2 l.13).
+
+    ``anchors f32[M,D]`` are Vivaldi coordinates of the sampled workers,
+    ``rtts f32[M]`` the measured worker->user round-trip times in ms
+    (<=0 entries are ignored as failed probes). Minimizes
+    sum_i (||u - a_i|| - rtt_i)^2 by TRILAT_ITERS fixed GD steps from the
+    weighted anchor centroid. Returns (u f32[D], residual f32[1]).
+    """
+    valid = (rtts > 0.0).astype(jnp.float32)
+    n_valid = jnp.maximum(jnp.sum(valid), 1.0)
+    u0 = jnp.sum(anchors * valid[:, None], axis=0) / n_valid
+
+    def step(_, u):
+        diff = u[None, :] - anchors
+        dist = jnp.sqrt(jnp.sum(diff * diff, axis=1) + 1e-9)
+        g = 2.0 * valid * (dist - rtts) / dist
+        grad = jnp.sum(g[:, None] * diff, axis=0) / n_valid
+        return u - TRILAT_LR * grad
+
+    u = jax.lax.fori_loop(0, TRILAT_ITERS, step, u0)
+    diff = u[None, :] - anchors
+    dist = jnp.sqrt(jnp.sum(diff * diff, axis=1) + 1e-9)
+    residual = jnp.sum(valid * (dist - rtts) ** 2) / n_valid
+    return u, residual.reshape((1,))
+
+
+def _detector_params(key=None):
+    """Fixed-seed CNN weights, baked into the HLO artifact as constants."""
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    k1, k2, k3 = jax.random.split(key, 3)
+    scale = 0.1
+    return {
+        "c1": jax.random.normal(k1, (3, 3, 3, 8), jnp.float32) * scale,
+        "c2": jax.random.normal(k2, (3, 3, 8, 16), jnp.float32) * scale,
+        "head": jax.random.normal(k3, (16, 5), jnp.float32) * scale,
+    }
+
+
+def detector_fwd(frames):
+    """Tiny detector over ``frames f32[B,64,64,3]`` -> grid ``f32[B,8,8,5]``.
+
+    Two stride-2 convs + ReLU, a stride-2 average pool, and a per-cell
+    linear head emitting (objectness, dx, dy, w, h) -- a YOLO-shaped output
+    at toy scale. The point is a fixed, real compute cost executed through
+    the PJRT runtime by the video-analytics workload, not detection quality.
+    """
+    p = _detector_params()
+    x = jax.lax.conv_general_dilated(
+        frames, p["c1"], window_strides=(2, 2), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    x = jax.nn.relu(x)
+    x = jax.lax.conv_general_dilated(
+        x, p["c2"], window_strides=(2, 2), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    x = jax.nn.relu(x)
+    # 16x16 -> 8x8 grid cells.
+    x = jax.lax.reduce_window(
+        x, 0.0, jax.lax.add, (1, 2, 2, 1), (1, 2, 2, 1), "VALID") / 4.0
+    return jnp.einsum("bhwc,co->bhwo", x, p["head"])

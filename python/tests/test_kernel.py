@@ -1,0 +1,150 @@
+"""Kernel-vs-oracle correctness: the CORE signal for the L1 layer.
+
+Hypothesis sweeps shapes and input distributions; every case asserts
+``allclose`` between the tiled Pallas kernel (interpret=True) and the
+straight-line jnp oracle in ``compile.kernels.ref``.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.ldp_score import NEG_INF, ldp_score
+from compile.kernels.vivaldi_step import vivaldi_step
+
+SET = dict(deadline=None, max_examples=20, print_blob=True)
+D = 4
+
+
+def _ldp_inputs(seed: int, n: int, k: int, feasible_bias: bool):
+    rng = np.random.default_rng(seed)
+    caps = rng.uniform(0.0, 8.0, (n, 3)).astype(np.float32)
+    virt = rng.integers(0, 8, (n,)).astype(np.int32)
+    geo = np.stack(
+        [rng.uniform(-np.pi / 2, np.pi / 2, n), rng.uniform(-np.pi, np.pi, n)], 1
+    ).astype(np.float32)
+    viv = rng.normal(0.0, 40.0, (n, D)).astype(np.float32)
+    if feasible_bias:
+        req = np.array([0.5, 0.5, 0.0], np.float32)
+        req_virt = np.array([0], np.int32)
+        thr = np.stack([rng.uniform(5000, 20000, k), rng.uniform(150, 400, k)], 1)
+    else:
+        req = rng.uniform(0.0, 8.0, 3).astype(np.float32)
+        req_virt = np.array([rng.integers(0, 8)], np.int32)
+        thr = np.stack([rng.uniform(10, 5000, k), rng.uniform(5, 200, k)], 1)
+    cons_geo = np.stack(
+        [rng.uniform(-np.pi / 2, np.pi / 2, k), rng.uniform(-np.pi, np.pi, k)], 1
+    ).astype(np.float32)
+    cons_viv = rng.normal(0.0, 40.0, (k, D)).astype(np.float32)
+    cons_active = (rng.uniform(0, 1, k) > 0.4).astype(np.float32)
+    return (caps, virt, geo, viv, req, req_virt, cons_geo, cons_viv,
+            thr.astype(np.float32), cons_active)
+
+
+@settings(**SET)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    n_blocks=st.integers(1, 4),
+    feasible_bias=st.booleans(),
+)
+def test_ldp_score_matches_ref(seed, n_blocks, feasible_bias):
+    args = _ldp_inputs(seed, 128 * n_blocks, 4, feasible_bias)
+    s, m = ldp_score(*map(jnp.asarray, args))
+    sr, mr = ref.ldp_score_ref(*map(jnp.asarray, args))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=1e-5, atol=1e-4)
+    np.testing.assert_array_equal(np.asarray(m), np.asarray(mr))
+
+
+@settings(**SET)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_ldp_score_all_constraints_inactive_is_rom(seed):
+    """With no active S2S/S2U rows, LDP degenerates to the ROM filter."""
+    (caps, virt, geo, viv, req, req_virt, cg, cv, thr, _) = _ldp_inputs(
+        seed, 128, 4, True
+    )
+    inactive = np.zeros(4, np.float32)
+    s, m = ldp_score(*map(jnp.asarray,
+                          (caps, virt, geo, viv, req, req_virt, cg, cv, thr,
+                           inactive)))
+    res_ok = (caps >= req[None, :]).all(1) & ((virt & req_virt[0]) == req_virt[0])
+    np.testing.assert_array_equal(np.asarray(m).astype(bool), res_ok)
+    # Feasible scores are exactly the ROM strategy value.
+    want = (caps[:, 0] - req[0]) + (caps[:, 1] - req[1])
+    np.testing.assert_allclose(
+        np.asarray(s)[res_ok], want[res_ok], rtol=1e-5, atol=1e-5
+    )
+
+
+def test_ldp_score_zero_capacity_rows_infeasible():
+    """Padded rows (zero capacity) must never be selected."""
+    args = list(_ldp_inputs(7, 256, 4, True))
+    args[0][128:] = 0.0  # zero out capacity of the tail rows
+    s, m = ldp_score(*map(jnp.asarray, args))
+    assert float(np.asarray(m)[128:].max()) == 0.0
+    assert float(np.asarray(s)[128:].max()) == float(np.float32(NEG_INF))
+
+
+def test_ldp_score_rejects_non_multiple_of_block():
+    args = _ldp_inputs(0, 128, 4, True)
+    args = list(map(jnp.asarray, args))
+    bad = [jnp.concatenate([a, a[:7]]) if i in (0, 1, 2, 3) else a
+           for i, a in enumerate(args)]
+    with pytest.raises(ValueError, match="multiple of block"):
+        ldp_score(*bad)
+
+
+def _vivaldi_inputs(seed: int, n: int):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(0.0, 10.0, (n, D)).astype(np.float32)
+    err = rng.uniform(0.05, 1.5, (n,)).astype(np.float32)
+    rtt = np.abs(rng.normal(60.0, 25.0, (n, n))).astype(np.float32)
+    rtt = (rtt + rtt.T) / 2.0
+    np.fill_diagonal(rtt, 0.0)
+    # Knock out a few pairs to exercise the missing-measurement mask.
+    drop = rng.uniform(0, 1, (n, n)) < 0.05
+    rtt[drop | drop.T] = 0.0
+    return x, err, rtt
+
+
+@settings(**SET)
+@given(seed=st.integers(0, 2**31 - 1), n_blocks=st.integers(1, 3))
+def test_vivaldi_step_matches_ref(seed, n_blocks):
+    x, err, rtt = _vivaldi_inputs(seed, 64 * n_blocks)
+    xn, en = vivaldi_step(jnp.asarray(x), jnp.asarray(err), jnp.asarray(rtt))
+    xr, er = ref.vivaldi_step_ref(jnp.asarray(x), jnp.asarray(err), jnp.asarray(rtt))
+    np.testing.assert_allclose(np.asarray(xn), np.asarray(xr), rtol=1e-4, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(en), np.asarray(er), rtol=1e-4, atol=1e-4)
+
+
+@settings(**SET)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_vivaldi_error_bounded(seed):
+    """Error estimates stay inside the clip range under iteration."""
+    x, err, rtt = _vivaldi_inputs(seed, 64)
+    x, err, rtt = jnp.asarray(x), jnp.asarray(err), jnp.asarray(rtt)
+    for _ in range(5):
+        x, err = vivaldi_step(x, err, rtt)
+    e = np.asarray(err)
+    assert (e >= 1e-3 - 1e-7).all() and (e <= 2.0 + 1e-7).all()
+    assert np.isfinite(np.asarray(x)).all()
+
+
+def test_vivaldi_converges_on_line_topology():
+    """Three collinear nodes: embedding distances approach the RTTs."""
+    rtt = np.array(
+        [[0, 50, 100], [50, 0, 50], [100, 50, 0]], np.float32
+    )
+    pad = np.zeros((64, 64), np.float32)
+    pad[:3, :3] = rtt
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(0, 30, (64, D)), jnp.float32)
+    err = jnp.ones((64,), jnp.float32)
+    r = jnp.asarray(pad)
+    for _ in range(200):
+        x, err = vivaldi_step(x, err, r)
+    xa = np.asarray(x)
+    d01 = np.linalg.norm(xa[0] - xa[1])
+    d12 = np.linalg.norm(xa[1] - xa[2])
+    assert abs(d01 - 50) < 10 and abs(d12 - 50) < 10

@@ -1,0 +1,108 @@
+"""L2 model-layer tests: shapes, trilateration accuracy, embedding quality,
+detector determinism. These are the graphs the AOT path exports."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+
+SET = dict(deadline=None, max_examples=15, print_blob=True)
+D = model.VIVALDI_DIM
+
+
+def _grid_rtt(n_side: int, spacing_ms: float) -> np.ndarray:
+    """Ground-truth RTT matrix of an n_side x n_side grid of nodes."""
+    pts = np.array(
+        [(i, j) for i in range(n_side) for j in range(n_side)], np.float32
+    ) * spacing_ms
+    d = np.linalg.norm(pts[:, None, :] - pts[None, :, :], axis=-1)
+    return d.astype(np.float32)
+
+
+def test_vivaldi_embed_recovers_grid_distances():
+    """Embedding a metric RTT matrix must approximate it well (median
+    relative error under 20% after 64 steps) -- this is what LDP's latency
+    filter quality rests on (paper sec. 7.3 'minor lapses due to Vivaldi')."""
+    rtt = np.zeros((64, 64), np.float32)
+    g = _grid_rtt(6, 20.0)  # 36 real nodes, 20 ms lattice spacing
+    rtt[:36, :36] = g
+    x, err = model.vivaldi_embed(jnp.asarray(rtt), steps=64)
+    xa = np.asarray(x)[:36]
+    est = np.linalg.norm(xa[:, None, :] - xa[None, :, :], axis=-1)
+    mask = g > 0
+    rel = np.abs(est[mask] - g[mask]) / g[mask]
+    assert np.median(rel) < 0.20, f"median rel err {np.median(rel):.3f}"
+
+
+@settings(**SET)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_trilaterate_recovers_planted_user(seed):
+    """A user planted in Vivaldi space is recovered from exact RTTs."""
+    rng = np.random.default_rng(seed)
+    anchors = rng.normal(0.0, 50.0, (16, D)).astype(np.float32)
+    user = rng.normal(0.0, 30.0, (D,)).astype(np.float32)
+    rtts = np.linalg.norm(anchors - user[None, :], axis=1).astype(np.float32)
+    u, res = model.trilaterate(jnp.asarray(anchors), jnp.asarray(rtts))
+    est_d = np.linalg.norm(anchors - np.asarray(u)[None, :], axis=1)
+    # Positions may differ (mirror symmetries) but distances must fit.
+    np.testing.assert_allclose(est_d, rtts, rtol=0.15, atol=8.0)
+    assert float(res[0]) < 25.0
+
+
+def test_trilaterate_ignores_failed_probes():
+    rng = np.random.default_rng(0)
+    anchors = rng.normal(0.0, 50.0, (16, D)).astype(np.float32)
+    user = np.zeros((D,), np.float32)
+    rtts = np.linalg.norm(anchors - user[None, :], axis=1).astype(np.float32)
+    # Mark half the probes failed with garbage coordinates in those anchors.
+    bad = rtts.copy()
+    bad[8:] = 0.0
+    anchors2 = anchors.copy()
+    anchors2[8:] = 1e4
+    u, _ = model.trilaterate(jnp.asarray(anchors2), jnp.asarray(bad))
+    d = np.linalg.norm(anchors[:8] - np.asarray(u)[None, :], axis=1)
+    np.testing.assert_allclose(d, rtts[:8], rtol=0.2, atol=10.0)
+
+
+def test_detector_shapes_and_determinism():
+    frames = jnp.asarray(
+        np.random.default_rng(1).uniform(0, 1, (8, 64, 64, 3)), jnp.float32
+    )
+    out1 = model.detector_fwd(frames)
+    out2 = model.detector_fwd(frames)
+    assert out1.shape == (8, 8, 8, 5)
+    np.testing.assert_array_equal(np.asarray(out1), np.asarray(out2))
+    assert np.isfinite(np.asarray(out1)).all()
+
+
+def test_detector_batch_consistency():
+    """Per-frame results are independent of batching."""
+    rng = np.random.default_rng(2)
+    frames = jnp.asarray(rng.uniform(0, 1, (4, 64, 64, 3)), jnp.float32)
+    full = np.asarray(model.detector_fwd(frames))
+    for b in range(4):
+        one = np.asarray(model.detector_fwd(frames[b:b + 1]))
+        np.testing.assert_allclose(one[0], full[b], rtol=1e-5, atol=1e-5)
+
+
+def test_ldp_pipeline_is_kernel_passthrough():
+    from compile.kernels import ref
+    rng = np.random.default_rng(4)
+    n, k = 128, 4
+    args = (
+        rng.uniform(0, 8, (n, 3)).astype(np.float32),
+        rng.integers(0, 8, (n,)).astype(np.int32),
+        rng.uniform(-1, 1, (n, 2)).astype(np.float32),
+        rng.normal(0, 40, (n, D)).astype(np.float32),
+        np.array([1, 1, 0], np.float32),
+        np.array([0], np.int32),
+        rng.uniform(-1, 1, (k, 2)).astype(np.float32),
+        rng.normal(0, 40, (k, D)).astype(np.float32),
+        rng.uniform(100, 9000, (k, 2)).astype(np.float32),
+        np.ones((k,), np.float32),
+    )
+    s, m = model.ldp_pipeline(*map(jnp.asarray, args))
+    sr, mr = ref.ldp_score_ref(*map(jnp.asarray, args))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=1e-5, atol=1e-4)
+    np.testing.assert_array_equal(np.asarray(m), np.asarray(mr))

@@ -1,0 +1,20 @@
+//! Bench target regenerating design-choice ablations of the paper. Plain `main` harness
+//! (harness = false; the offline crate set has no criterion) — prints the
+//! table and wall time. Pass `--quick` for a reduced sweep.
+
+use std::time::Instant;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let t0 = Instant::now();
+    let t1 = oakestra::bench_harness::ablations::ablate_telemetry(1200, 0.1);
+    println!("{t1}");
+    let t2 = oakestra::bench_harness::ablations::ablate_delegation(500, 10, if quick { 3 } else { 20 });
+    println!("{t2}");
+    let t3 = oakestra::bench_harness::ablations::ablate_tunnel_lru(&[4, 8, 16, 32, 64], 64, 5000);
+    println!("{t3}");
+    println!("{}", t1.to_markdown());
+    println!("{}", t2.to_markdown());
+    println!("{}", t3.to_markdown());
+    eprintln!("[bench ablations] completed in {:.1} s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,15 @@
+//! Bench target regenerating Fig. 10 (video analytics pipeline) of the paper. Plain `main` harness
+//! (harness = false; the offline crate set has no criterion) — prints the
+//! table and wall time. Pass `--quick` for a reduced sweep.
+
+use std::time::Instant;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let t0 = Instant::now();
+    let frames = if quick { 30 } else { 150 };
+    let t = oakestra::bench_harness::fig10_video_analytics(frames);
+    println!("{t}");
+    println!("{}", t.to_markdown());
+    eprintln!("[bench fig10_video_analytics] completed in {:.1} s", t0.elapsed().as_secs_f64());
+}

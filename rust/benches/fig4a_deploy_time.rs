@@ -1,0 +1,16 @@
+//! Bench target regenerating Fig. 4a (deployment time vs cluster size) of the paper. Plain `main` harness
+//! (harness = false; the offline crate set has no criterion) — prints the
+//! table and wall time. Pass `--quick` for a reduced sweep.
+
+use std::time::Instant;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let t0 = Instant::now();
+    let sizes: Vec<usize> = if quick { vec![2, 10] } else { vec![2, 4, 6, 8, 10] };
+    let reps = if quick { 2 } else { 5 };
+    let t = oakestra::bench_harness::fig4a_deploy_time(&sizes, reps);
+    println!("{t}");
+    println!("{}", t.to_markdown());
+    eprintln!("[bench fig4a_deploy_time] completed in {:.1} s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,17 @@
+//! Bench target regenerating Fig. 4b/4c (idle CPU & memory) of the paper. Plain `main` harness
+//! (harness = false; the offline crate set has no criterion) — prints the
+//! table and wall time. Pass `--quick` for a reduced sweep.
+
+use std::time::Instant;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let t0 = Instant::now();
+    let sizes: Vec<usize> = if quick { vec![2, 10] } else { vec![2, 4, 6, 8, 10] };
+    let (cpu, mem) = oakestra::bench_harness::fig4bc_idle_overhead(&sizes, 60.0);
+    println!("{cpu}");
+    println!("{mem}");
+    println!("{}", cpu.to_markdown());
+    println!("{}", mem.to_markdown());
+    eprintln!("[bench fig4bc_idle_overhead] completed in {:.1} s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,18 @@
+//! Bench target regenerating Fig. 5 (deployment time vs network impairment) of the paper. Plain `main` harness
+//! (harness = false; the offline crate set has no criterion) — prints the
+//! table and wall time. Pass `--quick` for a reduced sweep.
+
+use std::time::Instant;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let t0 = Instant::now();
+    let delays: Vec<f64> = if quick { vec![0.0, 250.0] } else { vec![0.0, 50.0, 100.0, 175.0, 250.0] };
+    let reps = if quick { 2 } else { 5 };
+    let (t, l) = oakestra::bench_harness::fig5_network_degradation(&delays, reps);
+    println!("{t}");
+    println!("{l}");
+    println!("{}", t.to_markdown());
+    println!("{}", l.to_markdown());
+    eprintln!("[bench fig5_network_degradation] completed in {:.1} s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,15 @@
+//! Bench target regenerating Fig. 6 (cluster/worker factorization) of the paper. Plain `main` harness
+//! (harness = false; the offline crate set has no criterion) — prints the
+//! table and wall time. Pass `--quick` for a reduced sweep.
+
+use std::time::Instant;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let t0 = Instant::now();
+    let reps = if quick { 2 } else { 10 };
+    let t = oakestra::bench_harness::fig6_cluster_ratio(45, reps);
+    println!("{t}");
+    println!("{}", t.to_markdown());
+    eprintln!("[bench fig6_cluster_ratio] completed in {:.1} s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,15 @@
+//! Bench target regenerating Fig. 7a (control message volume) of the paper. Plain `main` harness
+//! (harness = false; the offline crate set has no criterion) — prints the
+//! table and wall time. Pass `--quick` for a reduced sweep.
+
+use std::time::Instant;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let t0 = Instant::now();
+    let counts: Vec<usize> = if quick { vec![20] } else { vec![10, 50, 100, 200] };
+    let t = oakestra::bench_harness::fig7a_control_messages(&counts);
+    println!("{t}");
+    println!("{}", t.to_markdown());
+    eprintln!("[bench fig7a_control_messages] completed in {:.1} s", t0.elapsed().as_secs_f64());
+}

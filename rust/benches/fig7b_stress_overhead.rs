@@ -1,0 +1,15 @@
+//! Bench target regenerating Fig. 7b (stress-deploy utilization) of the paper. Plain `main` harness
+//! (harness = false; the offline crate set has no criterion) — prints the
+//! table and wall time. Pass `--quick` for a reduced sweep.
+
+use std::time::Instant;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let t0 = Instant::now();
+    let checkpoints: Vec<usize> = if quick { vec![30] } else { vec![10, 30, 60, 100] };
+    let t = oakestra::bench_harness::fig7b_stress(&checkpoints);
+    println!("{t}");
+    println!("{}", t.to_markdown());
+    eprintln!("[bench fig7b_stress_overhead] completed in {:.1} s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,15 @@
+//! Bench target regenerating Fig. 8a (ROM vs LDP, HPC scale) of the paper. Plain `main` harness
+//! (harness = false; the offline crate set has no criterion) — prints the
+//! table and wall time. Pass `--quick` for a reduced sweep.
+
+use std::time::Instant;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let t0 = Instant::now();
+    let reps = if quick { 10 } else { 50 };
+    let t = oakestra::bench_harness::fig8a_schedulers_hpc(&[2, 4, 6, 8, 10], reps);
+    println!("{t}");
+    println!("{}", t.to_markdown());
+    eprintln!("[bench fig8a_schedulers_hpc] completed in {:.1} s", t0.elapsed().as_secs_f64());
+}

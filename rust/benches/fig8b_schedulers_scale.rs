@@ -1,0 +1,16 @@
+//! Bench target regenerating Fig. 8b (LDP at up to 500 workers) of the paper. Plain `main` harness
+//! (harness = false; the offline crate set has no criterion) — prints the
+//! table and wall time. Pass `--quick` for a reduced sweep.
+
+use std::time::Instant;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let t0 = Instant::now();
+    let reps = if quick { 3 } else { 10 };
+    let sizes: Vec<usize> = if quick { vec![100, 500] } else { vec![50, 100, 200, 350, 500] };
+    let t = oakestra::bench_harness::fig8b_schedulers_scale(&sizes, reps);
+    println!("{t}");
+    println!("{}", t.to_markdown());
+    eprintln!("[bench fig8b_schedulers_scale] completed in {:.1} s", t0.elapsed().as_secs_f64());
+}

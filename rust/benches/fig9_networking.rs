@@ -1,0 +1,22 @@
+//! Bench target regenerating Fig. 9 (semantic balancing + tunnel transfer) of the paper. Plain `main` harness
+//! (harness = false; the offline crate set has no criterion) — prints the
+//! table and wall time. Pass `--quick` for a reduced sweep.
+
+use std::time::Instant;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let t0 = Instant::now();
+    let reqs = if quick { 100 } else { 1000 };
+    let left = oakestra::bench_harness::fig9_left_closest_rtt(&[1, 2, 4, 8], reqs);
+    println!("{left}");
+    let right = oakestra::bench_harness::fig9_right_tunnel_transfer(
+        &[10.0, 50.0, 100.0, 175.0, 250.0], 0.0);
+    println!("{right}");
+    let lossy = oakestra::bench_harness::fig9_right_tunnel_transfer(
+        &[50.0], 0.05);
+    println!("{lossy}");
+    println!("{}", left.to_markdown());
+    println!("{}", right.to_markdown());
+    eprintln!("[bench fig9_networking] completed in {:.1} s", t0.elapsed().as_secs_f64());
+}

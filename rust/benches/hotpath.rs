@@ -1,0 +1,55 @@
+//! Bench target regenerating hot-path microbenchmarks (§Perf) of the paper. Plain `main` harness
+//! (harness = false; the offline crate set has no criterion) — prints the
+//! table and wall time. Pass `--quick` for a reduced sweep.
+
+use std::time::Instant;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let t0 = Instant::now();
+    use oakestra::bench_harness::{build_oakestra, OakTestbedConfig};
+    use oakestra::util::SimTime;
+    // L3: simulator event throughput on a 10-worker steady-state cluster.
+    let mut tb = build_oakestra(OakTestbedConfig { workers_per_cluster: 10, ..OakTestbedConfig::default() });
+    let w0 = Instant::now();
+    tb.sim.run_until(SimTime::from_secs(600.0));
+    let events_wall = w0.elapsed().as_secs_f64();
+    let msgs = tb.sim.core.metrics.total_msgs();
+    println!("sim steady-state: {msgs} control msgs over 600 sim-s in {events_wall:.3} wall-s");
+
+    // L3: host LDP placement throughput.
+    let fabric = oakestra::bench_harness::sched_fabric(500, 1);
+    let sla = oakestra::bench_harness::sched_paper_sla();
+    let reps = if quick { 50 } else { 500 };
+    let w0 = Instant::now();
+    let mut placed = 0usize;
+    for r in 0..reps {
+        if oakestra::bench_harness::sched_run_host(&fabric, &sla.constraints[0], true, r as u64).1.is_some() {
+            placed += 1;
+        }
+    }
+    let per = w0.elapsed().as_secs_f64() * 1000.0 / reps as f64;
+    println!("host LDP @500 workers: {per:.3} ms/placement ({placed}/{reps} placed)");
+
+    // L1/L2: PJRT LDP batch scoring throughput (compile amortized).
+    if let Ok(mut accel) = oakestra::runtime::LdpAccel::discover() {
+        let rows: Vec<oakestra::runtime::LdpWorkerRow> = (0..500)
+            .map(|i| oakestra::runtime::LdpWorkerRow {
+                cpu: 1.0 + (i % 8) as f32, mem: 1.0 + (i % 4) as f32, disk: 10.0,
+                virt_bits: 1, lat_rad: 0.84, lon_rad: 0.2,
+                viv: [(i % 30) as f32, (i % 20) as f32, 0.0, 0.0],
+            })
+            .collect();
+        accel.score(&rows, [1.0, 0.5, 0.0], 1, &[]).unwrap(); // warm (compile)
+        let w0 = Instant::now();
+        let reps = if quick { 20 } else { 200 };
+        for _ in 0..reps {
+            accel.score(&rows, [1.0, 0.5, 0.0], 1, &[]).unwrap();
+        }
+        let per = w0.elapsed().as_secs_f64() * 1000.0 / reps as f64;
+        println!("PJRT LDP @500 workers (512-variant): {per:.3} ms/batch");
+    } else {
+        println!("PJRT accel skipped (artifacts not built)");
+    }
+    eprintln!("[bench hotpath] completed in {:.1} s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,724 @@
+//! Flat master–worker baseline control planes: architectural protocol
+//! models of Kubernetes, K3s and MicroK8s (DESIGN.md substitution ledger),
+//! plus the WireGuard tunnel comparator used by Fig. 9 (right).
+//!
+//! These are not parodies — the actors execute the real control flow of a
+//! kubelet/apiserver deployment: list/watch with periodic resync, node
+//! status pushes, store write round-trips (etcd / dqlite / sqlite),
+//! scheduler watch polling, controller-manager reconciliation. Per-event
+//! CPU costs are calibrated so the *idle* utilization lands where the
+//! paper measured each system (Fig. 4b/4c); event **counts** fall out of
+//! the protocol itself, which is what Figs. 4a/5/7 actually compare.
+
+use std::any::Any;
+use std::collections::BTreeMap;
+
+use crate::messaging::labels;
+use crate::model::{Capacity, NodeClass};
+use crate::sim::{Actor, ActorId, Ctx, KubeMsg, SimMsg, TimerKind};
+use crate::util::{NodeId, ServiceId, SimTime};
+
+pub use crate::netmanager::{
+    tunnel_transfer_time, OAK_PKT_OVERHEAD_MS, WG_PKT_OVERHEAD_MS,
+};
+
+/// Per-framework protocol + cost parameters.
+#[derive(Clone, Debug)]
+pub struct FrameworkProfile {
+    pub name: &'static str,
+    // -- master-side costs (ms of one x86 core) --------------------------
+    /// apiserver admission + validation per API op.
+    pub api_op_ms: f64,
+    /// Base store (etcd/dqlite/sqlite) write CPU.
+    pub store_write_ms: f64,
+    /// Extra store write CPU *per registered node* (dqlite's raft grows
+    /// with cluster size — this is what sinks MicroK8s in Fig. 4a).
+    pub store_write_per_node_ms: f64,
+    /// Store commit latency (fsync + quorum), wall time.
+    pub store_commit_latency_ms: f64,
+    /// Scheduler: cost per node scored.
+    pub sched_per_node_ms: f64,
+    /// Scheduler watch poll period (pod pickup latency).
+    pub sched_poll_ms: f64,
+    /// Controller-manager reconcile period + base cost + per-pod cost.
+    pub reconcile_period_s: f64,
+    pub reconcile_base_ms: f64,
+    pub reconcile_per_pod_ms: f64,
+    /// Master handling of one node status.
+    pub node_status_handle_ms: f64,
+    /// Master handling of one watch resync (full list).
+    pub resync_handle_ms: f64,
+    // -- kubelet-side costs ----------------------------------------------
+    /// Housekeeping tick (1 s): cAdvisor stats, PLEG relist...
+    pub kubelet_tick_ms: f64,
+    /// Extra housekeeping per running pod.
+    pub kubelet_per_pod_ms: f64,
+    /// Node status production cost.
+    pub node_status_ms: f64,
+    /// Status push period (Kubernetes default: 10 s).
+    pub node_status_period_s: f64,
+    /// Watch resync period (full relist).
+    pub resync_period_s: f64,
+    /// Fixed control-plane latency added per deployment (admission chain,
+    /// quota checks, controller hand-offs; snap/dqlite pile-up for
+    /// MicroK8s) — base + per-registered-node components.
+    pub deploy_extra_ms_base: f64,
+    pub deploy_extra_ms_per_node: f64,
+    // -- memory (MB) -------------------------------------------------------
+    pub master_mem_mb: f64,
+    pub kubelet_mem_mb: f64,
+    pub master_per_pod_mem_mb: f64,
+    pub kubelet_per_pod_mem_mb: f64,
+}
+
+impl FrameworkProfile {
+    /// Kubernetes: full control plane, heavy but scale-tested (Fig. 4b:
+    /// "K8s supports scaling better as its master stays consistent").
+    pub fn kubernetes() -> Self {
+        FrameworkProfile {
+            name: "k8s",
+            api_op_ms: 6.0,
+            store_write_ms: 4.0,
+            store_write_per_node_ms: 0.0, // etcd: flat in cluster size
+            store_commit_latency_ms: 12.0,
+            sched_per_node_ms: 0.6,
+            sched_poll_ms: 200.0,
+            reconcile_period_s: 5.0,
+            reconcile_base_ms: 80.0,
+            reconcile_per_pod_ms: 0.6,
+            node_status_handle_ms: 18.0,
+            resync_handle_ms: 40.0,
+            kubelet_tick_ms: 15.0,
+            kubelet_per_pod_ms: 20.0, // per 1 s tick (cAdvisor per-container)
+            node_status_ms: 120.0,
+            node_status_period_s: 10.0,
+            resync_period_s: 30.0,
+            deploy_extra_ms_base: 600.0,
+            deploy_extra_ms_per_node: 5.0,
+            master_mem_mb: 1100.0,
+            kubelet_mem_mb: 350.0,
+            master_per_pod_mem_mb: 1.2,
+            kubelet_per_pod_mem_mb: 2.5,
+        }
+    }
+
+    /// K3s: single-binary rewrite; the strongest baseline (Fig. 4a/5).
+    pub fn k3s() -> Self {
+        FrameworkProfile {
+            name: "k3s",
+            api_op_ms: 3.0,
+            store_write_ms: 2.0,
+            store_write_per_node_ms: 0.0, // sqlite/kine: flat
+            store_commit_latency_ms: 6.0,
+            sched_per_node_ms: 0.4,
+            sched_poll_ms: 100.0,
+            reconcile_period_s: 5.0,
+            reconcile_base_ms: 40.0,
+            reconcile_per_pod_ms: 0.4,
+            node_status_handle_ms: 10.0,
+            resync_handle_ms: 20.0,
+            kubelet_tick_ms: 6.0,
+            kubelet_per_pod_ms: 11.0,
+            node_status_ms: 60.0,
+            node_status_period_s: 10.0,
+            resync_period_s: 30.0,
+            deploy_extra_ms_base: 80.0,
+            deploy_extra_ms_per_node: 2.0,
+            master_mem_mb: 500.0,
+            kubelet_mem_mb: 160.0,
+            master_per_pod_mem_mb: 0.8,
+            kubelet_per_pod_mem_mb: 1.8,
+        }
+    }
+
+    /// MicroK8s: snap-packaged K8s over dqlite — the store's raft cost
+    /// grows with cluster size, which is why its deploy time degrades
+    /// ~10× in Fig. 4a.
+    pub fn microk8s() -> Self {
+        FrameworkProfile {
+            name: "microk8s",
+            api_op_ms: 7.0,
+            store_write_ms: 10.0,
+            store_write_per_node_ms: 14.0, // dqlite raft fan-out
+            store_commit_latency_ms: 30.0,
+            sched_per_node_ms: 0.7,
+            sched_poll_ms: 250.0,
+            reconcile_period_s: 5.0,
+            reconcile_base_ms: 100.0,
+            reconcile_per_pod_ms: 0.8,
+            node_status_handle_ms: 22.0,
+            resync_handle_ms: 50.0,
+            kubelet_tick_ms: 20.0,
+            kubelet_per_pod_ms: 25.0,
+            node_status_ms: 150.0,
+            node_status_period_s: 10.0,
+            resync_period_s: 30.0,
+            deploy_extra_ms_base: 2200.0,
+            deploy_extra_ms_per_node: 150.0,
+            master_mem_mb: 900.0,
+            kubelet_mem_mb: 300.0,
+            master_per_pod_mem_mb: 1.5,
+            kubelet_per_pod_mem_mb: 2.8,
+        }
+    }
+}
+
+/// Pod lifecycle inside the master.
+#[derive(Clone, Debug, PartialEq)]
+enum PodPhase {
+    /// Written to store, awaiting scheduler pickup.
+    Pending { request: Capacity, image_mb: u32 },
+    /// Bound, watch event delivered to kubelet.
+    Bound { node: NodeId },
+    Running { node: NodeId },
+}
+
+/// Flat master: apiserver + store + scheduler + controller-manager.
+pub struct FlatMaster {
+    pub profile: FrameworkProfile,
+    nodes: Vec<(NodeId, ActorId)>,
+    node_caps: BTreeMap<NodeId, (Capacity, Capacity)>, // (total, used)
+    pods: BTreeMap<ServiceId, PodPhase>,
+    reply_to: BTreeMap<ServiceId, (Option<ActorId>, SimTime)>,
+    /// Pods awaiting the scheduler's next poll.
+    sched_queue: Vec<ServiceId>,
+    started: bool,
+    /// store write seq for commit callbacks
+    next_commit: u64,
+    commits: BTreeMap<u64, ServiceId>,
+}
+
+impl FlatMaster {
+    pub fn new(profile: FrameworkProfile) -> Self {
+        FlatMaster {
+            profile,
+            nodes: Vec::new(),
+            node_caps: BTreeMap::new(),
+            pods: BTreeMap::new(),
+            reply_to: BTreeMap::new(),
+            sched_queue: Vec::new(),
+            started: false,
+            next_commit: 0,
+            commits: BTreeMap::new(),
+        }
+    }
+
+    /// Driver-side registration (kubelets bootstrap against a known
+    /// master address; no discovery protocol to model).
+    pub fn add_node(&mut self, node: NodeId, kubelet: ActorId, class: NodeClass) {
+        self.nodes.push((node, kubelet));
+        self.node_caps.insert(node, (class.capacity(), Capacity::ZERO));
+    }
+
+    fn store_write(&mut self, ctx: &mut Ctx<'_>, pod: Option<ServiceId>) -> SimTime {
+        let p = &self.profile;
+        let cost = p.store_write_ms + p.store_write_per_node_ms * self.nodes.len() as f64;
+        ctx.charge_cpu(p.api_op_ms + cost);
+        let latency = SimTime::from_millis(
+            p.store_commit_latency_ms
+                + p.store_write_per_node_ms * 0.5 * self.nodes.len() as f64,
+        );
+        if let Some(sid) = pod {
+            let k = self.next_commit;
+            self.next_commit += 1;
+            self.commits.insert(k, sid);
+            ctx.schedule(latency, SimMsg::Kube(KubeMsg::StoreCommit { key: k }));
+        }
+        latency
+    }
+
+    fn ensure_started(&mut self, ctx: &mut Ctx<'_>) {
+        if !self.started {
+            self.started = true;
+            ctx.add_mem(self.profile.master_mem_mb);
+            ctx.schedule(
+                SimTime::from_secs(self.profile.reconcile_period_s),
+                SimMsg::Timer(TimerKind::Reconcile),
+            );
+            ctx.schedule(
+                SimTime::from_millis(self.profile.sched_poll_ms),
+                SimMsg::Timer(TimerKind::KubeletSync),
+            );
+        }
+    }
+
+    /// Scheduler pass: score all nodes for each queued pod (default
+    /// kube-scheduler: filter+score over every node).
+    fn run_scheduler(&mut self, ctx: &mut Ctx<'_>) {
+        let queue = std::mem::take(&mut self.sched_queue);
+        for sid in queue {
+            let Some(PodPhase::Pending { request, image_mb }) = self.pods.get(&sid).cloned()
+            else {
+                continue;
+            };
+            ctx.charge_cpu(self.profile.sched_per_node_ms * self.nodes.len().max(1) as f64);
+            // Best-fit on spare cpu (kube-scheduler LeastAllocated-ish).
+            let mut best: Option<(f64, NodeId, ActorId)> = None;
+            for (node, kubelet) in &self.nodes {
+                let (total, used) = self.node_caps[node];
+                let avail = total.saturating_sub(&used);
+                if avail.fits(&request) {
+                    let score = avail.spare_score(&request);
+                    if best.map(|(s, _, _)| score > s).unwrap_or(true) {
+                        best = Some((score, *node, *kubelet));
+                    }
+                }
+            }
+            match best {
+                Some((_, node, kubelet)) => {
+                    if let Some((_, used)) = self.node_caps.get_mut(&node) {
+                        *used += request;
+                    }
+                    self.pods.insert(sid, PodPhase::Bound { node });
+                    // Bind = another store write + the framework's fixed
+                    // deployment-path latency, then the watch event.
+                    let commit = self.store_write(ctx, None)
+                        + SimTime::from_millis(
+                            self.profile.deploy_extra_ms_base
+                                + self.profile.deploy_extra_ms_per_node
+                                    * self.nodes.len() as f64,
+                        );
+                    let ev = SimMsg::Kube(KubeMsg::WatchEvent { bytes: 2048 });
+                    let b = ev.default_wire_bytes();
+                    let _ = ev;
+                    let msg = SimMsg::Kube(KubeMsg::SubmitPod {
+                        service: sid,
+                        request,
+                        image_mb,
+                        reply_to: None,
+                    });
+                    // Watch delivery happens after the bind commits.
+                    ctx.metrics().record_msg(labels::KUBE_MASTER_TO_NODE, b);
+                    ctx.schedule_for(kubelet, commit, msg);
+                }
+                None => {
+                    ctx.metrics().inc("kube.unschedulable");
+                    self.pods.remove(&sid);
+                    self.reply_to.remove(&sid);
+                }
+            }
+        }
+    }
+}
+
+impl Actor for FlatMaster {
+    fn handle(&mut self, ctx: &mut Ctx<'_>, msg: SimMsg) {
+        self.ensure_started(ctx);
+        let p = self.profile.clone();
+        match msg {
+            SimMsg::Kube(KubeMsg::SubmitPod {
+                service,
+                request,
+                image_mb,
+                reply_to,
+            }) => {
+                self.reply_to.insert(service, (reply_to, ctx.now));
+                self.pods
+                    .insert(service, PodPhase::Pending { request, image_mb });
+                ctx.add_mem(p.master_per_pod_mem_mb);
+                // apiserver + initial store write; scheduler sees the pod
+                // on its next poll after the commit.
+                self.store_write(ctx, Some(service));
+            }
+
+            SimMsg::Kube(KubeMsg::StoreCommit { key }) => {
+                if let Some(sid) = self.commits.remove(&key) {
+                    if matches!(self.pods.get(&sid), Some(PodPhase::Pending { .. })) {
+                        self.sched_queue.push(sid);
+                    }
+                }
+            }
+
+            SimMsg::Kube(KubeMsg::NodeStatus { node, used }) => {
+                ctx.charge_cpu(p.node_status_handle_ms);
+                if let Some((_, u)) = self.node_caps.get_mut(&node) {
+                    *u = used;
+                }
+            }
+
+            SimMsg::Kube(KubeMsg::LeaseRenew { .. }) => {
+                // Lease objects are cheap but still an apiserver op + store
+                // write (no per-pod fanout).
+                ctx.charge_cpu(p.api_op_ms * 0.3 + p.store_write_ms * 0.3);
+            }
+
+            SimMsg::Kube(KubeMsg::SpecFetch { service, node, round }) => {
+                // Pod spec / secret / configmap GET before the kubelet can
+                // start the container — a full apiserver round trip each.
+                ctx.charge_cpu(p.api_op_ms);
+                if let Some((_, kubelet)) = self.nodes.iter().find(|(n, _)| *n == node) {
+                    let msg = SimMsg::Kube(KubeMsg::SpecReply { service, round });
+                    let b = msg.default_wire_bytes();
+                    ctx.send(*kubelet, msg, b, labels::KUBE_MASTER_TO_NODE);
+                }
+            }
+
+            SimMsg::Kube(KubeMsg::ConditionPatch { .. }) => {
+                // Initialized/Ready/ContainersReady condition writes.
+                ctx.charge_cpu(p.api_op_ms);
+                self.store_write(ctx, None);
+            }
+
+            SimMsg::Kube(KubeMsg::WatchSync { node: _ }) => {
+                ctx.charge_cpu(p.resync_handle_ms);
+                // Full list response: size grows with tracked objects.
+                let bytes = 4096 + 512 * self.pods.len();
+                ctx.metrics().record_msg(labels::KUBE_MASTER_TO_NODE, bytes);
+            }
+
+            SimMsg::Kube(KubeMsg::PodStatus {
+                service,
+                node,
+                running,
+            }) => {
+                ctx.charge_cpu(p.api_op_ms);
+                self.store_write(ctx, None);
+                if running {
+                    self.pods.insert(service, PodPhase::Running { node });
+                    // Endpoints/service-discovery update fans out to every
+                    // node's kube-proxy watch (the per-service broadcast
+                    // that dominates Fig. 7a at scale).
+                    let kubelets: Vec<ActorId> =
+                        self.nodes.iter().map(|(_, k)| *k).collect();
+                    for k in kubelets {
+                        let ev = SimMsg::Kube(KubeMsg::WatchEvent { bytes: 1536 });
+                        let b = ev.default_wire_bytes();
+                        ctx.send(k, ev, b, labels::KUBE_MASTER_TO_NODE);
+                    }
+                    if let Some((reply, at)) = self.reply_to.get(&service).copied() {
+                        let elapsed = ctx.now.saturating_sub(at);
+                        ctx.metrics()
+                            .observe("kube.deploy_time_ms", elapsed.as_millis());
+                        if let Some(r) = reply {
+                            ctx.send_local(
+                                r,
+                                SimMsg::Kube(KubeMsg::PodDeployed { service, elapsed }),
+                            );
+                        }
+                    }
+                } else {
+                    ctx.metrics().inc("kube.pod_failed");
+                }
+            }
+
+            SimMsg::Timer(TimerKind::KubeletSync) => {
+                // Scheduler poll tick.
+                self.run_scheduler(ctx);
+                ctx.schedule(
+                    SimTime::from_millis(p.sched_poll_ms),
+                    SimMsg::Timer(TimerKind::KubeletSync),
+                );
+            }
+
+            SimMsg::Timer(TimerKind::Reconcile) => {
+                ctx.charge_cpu(p.reconcile_base_ms + p.reconcile_per_pod_ms * self.pods.len() as f64);
+                ctx.schedule(
+                    SimTime::from_secs(p.reconcile_period_s),
+                    SimMsg::Timer(TimerKind::Reconcile),
+                );
+            }
+
+            _ => {}
+        }
+    }
+
+    fn as_any(&self) -> &dyn Any {
+        self
+    }
+    fn as_any_mut(&mut self) -> &mut dyn Any {
+        self
+    }
+}
+
+/// Flat kubelet: housekeeping loop, status pushes, watch resyncs, pod
+/// lifecycle against the shared container runtime.
+pub struct FlatKubelet {
+    pub profile: FrameworkProfile,
+    pub node: NodeId,
+    master: ActorId,
+    pods: BTreeMap<ServiceId, Capacity>,
+    /// Pods whose spec/secret fetches are still in flight.
+    pending: BTreeMap<ServiceId, (Capacity, u32, u8)>, // (request, image_mb, rounds_done)
+    pub used: Capacity,
+    ticks: u64,
+    started: bool,
+}
+
+impl FlatKubelet {
+    pub fn new(profile: FrameworkProfile, node: NodeId, master: ActorId) -> Self {
+        FlatKubelet {
+            profile,
+            node,
+            master,
+            pods: BTreeMap::new(),
+            pending: BTreeMap::new(),
+            used: Capacity::ZERO,
+            ticks: 0,
+            started: false,
+        }
+    }
+}
+
+impl Actor for FlatKubelet {
+    fn handle(&mut self, ctx: &mut Ctx<'_>, msg: SimMsg) {
+        if !self.started {
+            self.started = true;
+            ctx.add_mem(self.profile.kubelet_mem_mb);
+            ctx.schedule(SimTime::from_secs(1.0), SimMsg::Timer(TimerKind::KubeletSync));
+        }
+        let p = self.profile.clone();
+        match msg {
+            SimMsg::Timer(TimerKind::KubeletSync) => {
+                self.ticks += 1;
+                // Housekeeping: cAdvisor/PLEG, per-pod stats.
+                ctx.charge_cpu(p.kubelet_tick_ms + p.kubelet_per_pod_ms * self.pods.len() as f64);
+                // Container idle cost (the pods themselves).
+                ctx.charge_cpu(5.0 * self.pods.len() as f64);
+                // Node status push.
+                if self.ticks % p.node_status_period_s as u64 == 0 {
+                    ctx.charge_cpu(p.node_status_ms);
+                    let msg = SimMsg::Kube(KubeMsg::NodeStatus {
+                        node: self.node,
+                        used: self.used,
+                    });
+                    let b = msg.default_wire_bytes();
+                    ctx.send(self.master, msg, b, labels::KUBE_NODE_TO_MASTER);
+                }
+                // Node lease renewal (10 s default).
+                if self.ticks % 10 == 0 {
+                    let msg = SimMsg::Kube(KubeMsg::LeaseRenew { node: self.node });
+                    let b = msg.default_wire_bytes();
+                    ctx.send(self.master, msg, b, labels::KUBE_NODE_TO_MASTER);
+                }
+                // Watch resync (full relist).
+                if self.ticks % p.resync_period_s as u64 == 0 {
+                    let msg = SimMsg::Kube(KubeMsg::WatchSync { node: self.node });
+                    let b = msg.default_wire_bytes();
+                    ctx.send(self.master, msg, b, labels::KUBE_NODE_TO_MASTER);
+                }
+                ctx.schedule(SimTime::from_secs(1.0), SimMsg::Timer(TimerKind::KubeletSync));
+            }
+
+            // Bound-pod watch event: fetch pod spec + secrets/configmaps
+            // (2 apiserver round trips) before starting the container —
+            // the kubelet's real start sequence, and the reason the
+            // Kubernetes family degrades under network delay (Fig. 5).
+            SimMsg::Kube(KubeMsg::SubmitPod {
+                service,
+                request,
+                image_mb,
+                ..
+            }) => {
+                ctx.charge_cpu(p.kubelet_tick_ms);
+                self.pending.insert(service, (request, image_mb, 0));
+                let msg = SimMsg::Kube(KubeMsg::SpecFetch {
+                    service,
+                    node: self.node,
+                    round: 0,
+                });
+                let b = msg.default_wire_bytes();
+                ctx.send(self.master, msg, b, labels::KUBE_NODE_TO_MASTER);
+            }
+
+            SimMsg::Kube(KubeMsg::SpecReply { service, round }) => {
+                let Some((request, image_mb, rounds)) = self.pending.get(&service).copied()
+                else {
+                    return;
+                };
+                let _ = round;
+                if rounds < 2 {
+                    // Secrets round, then configmaps round — each its own
+                    // apiserver GET in the kubelet's start sequence.
+                    let next = rounds + 1;
+                    self.pending.insert(service, (request, image_mb, next));
+                    let msg = SimMsg::Kube(KubeMsg::SpecFetch {
+                        service,
+                        node: self.node,
+                        round: next,
+                    });
+                    let b = msg.default_wire_bytes();
+                    ctx.send(self.master, msg, b, labels::KUBE_NODE_TO_MASTER);
+                    return;
+                }
+                self.pending.remove(&service);
+                self.pods.insert(service, request);
+                self.used += request;
+                ctx.add_mem(p.kubelet_per_pod_mem_mb);
+                let me = self.node;
+                let pull = ctx
+                    .core
+                    .containers
+                    .pull_time(me, 0x2000 + service.0 as u64, image_mb);
+                let start = {
+                    let rng = &mut ctx.core.rng;
+                    ctx.core.containers.start_latency(rng)
+                };
+                let speed = ctx.core.node_class(me).speed_factor();
+                let total =
+                    SimTime::from_micros(((pull + start).as_micros() as f64 / speed) as u64);
+                ctx.schedule(
+                    total,
+                    SimMsg::Timer(TimerKind::Custom(2_000_000 + service.0)),
+                );
+            }
+
+            SimMsg::Timer(TimerKind::Custom(code)) if code >= 2_000_000 => {
+                let service = ServiceId(code - 2_000_000);
+                if self.pods.contains_key(&service) {
+                    let msg = SimMsg::Kube(KubeMsg::PodStatus {
+                        service,
+                        node: self.node,
+                        running: true,
+                    });
+                    let b = msg.default_wire_bytes();
+                    ctx.send(self.master, msg, b, labels::KUBE_NODE_TO_MASTER);
+                    // Condition PATCHes trail the phase change.
+                    for i in 1..=3u64 {
+                        let patch = SimMsg::Kube(KubeMsg::ConditionPatch {
+                            service,
+                            node: self.node,
+                        });
+                        let pb = patch.default_wire_bytes();
+                        ctx.metrics().record_msg(labels::KUBE_NODE_TO_MASTER, pb);
+                        ctx.schedule_for(
+                            self.master,
+                            SimTime::from_millis(80.0 * i as f64),
+                            patch,
+                        );
+                    }
+                }
+            }
+
+            SimMsg::Data(crate::sim::DataMsg::StressLoad { rps }) => {
+                ctx.charge_cpu(rps * 0.2);
+            }
+
+            _ => {}
+        }
+    }
+
+    fn as_any(&self) -> &dyn Any {
+        self
+    }
+    fn as_any_mut(&mut self) -> &mut dyn Any {
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::Sim;
+
+    fn deploy_one(profile: FrameworkProfile, n_workers: u32) -> (f64, Sim) {
+        let mut sim = Sim::new(42);
+        let master_node = NodeId(0);
+        sim.add_node(master_node, NodeClass::L);
+        let master = sim.add_actor(master_node, Box::new(FlatMaster::new(profile.clone())));
+        let mut kubelets = Vec::new();
+        for i in 1..=n_workers {
+            let node = NodeId(i);
+            sim.add_node(node, NodeClass::S);
+            let k = sim.add_actor(
+                node,
+                Box::new(FlatKubelet::new(profile.clone(), node, master)),
+            );
+            kubelets.push((node, k));
+        }
+        for (node, k) in &kubelets {
+            sim.actor_as_mut::<FlatMaster>(master)
+                .unwrap()
+                .add_node(*node, *k, NodeClass::S);
+        }
+        sim.inject(
+            SimTime::from_secs(5.0),
+            master,
+            SimMsg::Kube(KubeMsg::SubmitPod {
+                service: ServiceId(1),
+                request: Capacity::new(100, 64, 0),
+                image_mb: 50,
+                reply_to: None,
+            }),
+        );
+        sim.run_until(SimTime::from_secs(60.0));
+        let t = sim
+            .core
+            .metrics
+            .histogram("kube.deploy_time_ms")
+            .map(|h| h.mean())
+            .unwrap_or(f64::NAN);
+        (t, sim)
+    }
+
+    #[test]
+    fn k3s_deploys_faster_than_microk8s() {
+        let (k3s, _) = deploy_one(FrameworkProfile::k3s(), 4);
+        let (mk8s, _) = deploy_one(FrameworkProfile::microk8s(), 4);
+        assert!(k3s.is_finite() && mk8s.is_finite());
+        assert!(mk8s > 2.0 * k3s, "microk8s={mk8s} k3s={k3s}");
+    }
+
+    #[test]
+    fn microk8s_degrades_with_cluster_size() {
+        let (small, _) = deploy_one(FrameworkProfile::microk8s(), 2);
+        let (large, _) = deploy_one(FrameworkProfile::microk8s(), 10);
+        assert!(large > small, "large={large} small={small}");
+        // K8s (etcd) stays roughly flat by comparison.
+        let (ks, _) = deploy_one(FrameworkProfile::kubernetes(), 2);
+        let (kl, _) = deploy_one(FrameworkProfile::kubernetes(), 10);
+        assert!((kl - ks).abs() / ks < 0.5, "k8s small={ks} large={kl}");
+    }
+
+    #[test]
+    fn idle_worker_cpu_ordering_matches_paper() {
+        // Run each framework idle for 60 s and compare worker CPU.
+        let util = |profile: FrameworkProfile| {
+            let (_, sim) = deploy_one(profile, 4);
+            sim.core
+                .metrics
+                .usage(NodeId(1))
+                .map(|u| {
+                    u.cpu_util(SimTime::from_secs(10.0), SimTime::from_secs(60.0))
+                })
+                .unwrap_or(0.0)
+        };
+        let k8s = util(FrameworkProfile::kubernetes());
+        let k3s = util(FrameworkProfile::k3s());
+        let mk8s = util(FrameworkProfile::microk8s());
+        assert!(k3s < k8s, "k3s={k3s} k8s={k8s}");
+        assert!(k8s < mk8s, "k8s={k8s} microk8s={mk8s}");
+        // Sanity band (paper Fig. 4b: a few percent of one core).
+        assert!(k3s > 0.002 && mk8s < 0.2, "k3s={k3s} mk8s={mk8s}");
+    }
+
+    #[test]
+    fn unschedulable_pod_is_dropped() {
+        let mut sim = Sim::new(1);
+        sim.add_node(NodeId(0), NodeClass::L);
+        let master = sim.add_actor(
+            NodeId(0),
+            Box::new(FlatMaster::new(FrameworkProfile::k3s())),
+        );
+        // One tiny node that can't fit the request.
+        sim.add_node(NodeId(1), NodeClass::S);
+        let k = sim.add_actor(
+            NodeId(1),
+            Box::new(FlatKubelet::new(FrameworkProfile::k3s(), NodeId(1), master)),
+        );
+        sim.actor_as_mut::<FlatMaster>(master)
+            .unwrap()
+            .add_node(NodeId(1), k, NodeClass::S);
+        sim.inject(
+            SimTime::from_secs(1.0),
+            master,
+            SimMsg::Kube(KubeMsg::SubmitPod {
+                service: ServiceId(9),
+                request: Capacity::new(64_000, 64_000, 0),
+                image_mb: 10,
+                reply_to: None,
+            }),
+        );
+        sim.run_until(SimTime::from_secs(30.0));
+        assert_eq!(sim.core.metrics.counter("kube.unschedulable"), 1);
+    }
+}

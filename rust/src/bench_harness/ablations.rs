@@ -1,0 +1,200 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//! telemetry update policies, delegated vs flat scheduling, and the
+//! tunnel LRU cap.
+
+use crate::metrics::Table;
+use crate::model::Capacity;
+use crate::netmanager::ProxyTun;
+use crate::scheduler::{PlacementInput, RomScheduler, RomStrategy, TaskScheduler};
+use crate::telemetry::{TelemetryGovernor, UpdatePolicy};
+use crate::util::{mean, NodeId, Rng, ServiceId, SimTime};
+
+use super::sched::{paper_sla, synthetic_fabric};
+
+/// Telemetry policy ablation: messages published for the same utilization
+/// trace under Periodic / Δ-threshold / age-adaptive policies.
+pub fn ablate_telemetry(duration_s: u64, churn: f64) -> Table {
+    let mut t = Table::new(
+        "Ablation — telemetry messages vs update policy",
+        &["policy", "published", "suppressed", "mean_staleness_s"],
+    );
+    let total = Capacity::new(4000, 4096, 0);
+    let policies: Vec<(&str, UpdatePolicy)> = vec![
+        (
+            "periodic_2s",
+            UpdatePolicy::Periodic {
+                interval: SimTime::from_secs(2.0),
+            },
+        ),
+        (
+            "delta_10pct",
+            UpdatePolicy::DeltaThreshold {
+                interval: SimTime::from_secs(2.0),
+                threshold: 0.10,
+                max_age: SimTime::from_secs(30.0),
+            },
+        ),
+        (
+            "age_adaptive",
+            UpdatePolicy::AgeAdaptive {
+                min_interval: SimTime::from_secs(2.0),
+                max_interval: SimTime::from_secs(16.0),
+            },
+        ),
+    ];
+    for (name, policy) in policies {
+        let mut gov = TelemetryGovernor::new(policy);
+        let mut rng = Rng::seeded(7);
+        let mut used = Capacity::new(1000, 1024, 0);
+        let mut now = SimTime::ZERO;
+        let mut last_pub = SimTime::ZERO;
+        let mut staleness = Vec::new();
+        while now.as_secs() < duration_s as f64 {
+            // Utilization random walk; `churn` controls movement rate.
+            if rng.chance(churn) {
+                let delta = rng.range(-400.0, 400.0);
+                used.cpu_millicores =
+                    (used.cpu_millicores as f64 + delta).clamp(0.0, 4000.0) as u32;
+            }
+            if gov.should_publish(now, used, total) {
+                last_pub = now;
+            }
+            staleness.push(now.saturating_sub(last_pub).as_secs());
+            now += gov.tick_interval();
+        }
+        t.row(vec![
+            name.to_string(),
+            gov.published.to_string(),
+            gov.suppressed.to_string(),
+            format!("{:.2}", mean(&staleness)),
+        ]);
+    }
+    t
+}
+
+/// Delegation ablation: scheduling cost of the 2-step hierarchy vs one
+/// flat scheduler scanning every worker (per placement, at scale).
+pub fn ablate_delegation(total_workers: usize, clusters: usize, reps: usize) -> Table {
+    let mut t = Table::new(
+        "Ablation — delegated vs flat scheduling cost (ms per placement)",
+        &["shape", "flat_ms", "delegated_ms", "speedup"],
+    );
+    let sla = paper_sla();
+    let per = total_workers / clusters;
+    let mut flat_ms = Vec::new();
+    let mut del_ms = Vec::new();
+    for r in 0..reps {
+        // Flat: one scheduler over everything.
+        let fabric = synthetic_fabric(total_workers, 400 + r as u64);
+        let input = PlacementInput {
+            sla: &sla.constraints[0],
+            workers: &fabric.workers,
+            service_hint: ServiceId(0),
+        };
+        let t0 = std::time::Instant::now();
+        let mut s = RomScheduler {
+            strategy: RomStrategy::BestFit,
+        };
+        let _ = s.place(&input);
+        flat_ms.push(t0.elapsed().as_secs_f64() * 1000.0);
+
+        // Delegated: rank aggregates, then scan one cluster.
+        let fabrics: Vec<_> = (0..clusters)
+            .map(|c| synthetic_fabric(per, 500 + (r * 64 + c) as u64))
+            .collect();
+        let t0 = std::time::Instant::now();
+        let aggs: Vec<crate::hierarchy::AggregateStats> = fabrics
+            .iter()
+            .map(|f| {
+                let avail: Vec<_> = f
+                    .workers
+                    .iter()
+                    .map(|w| (w.available(), w.spec.virtualization()))
+                    .collect();
+                crate::hierarchy::AggregateStats::from_workers(
+                    avail.iter().map(|(c, v)| (c, *v)),
+                    None,
+                )
+            })
+            .collect();
+        let pairs: Vec<_> = aggs
+            .iter()
+            .enumerate()
+            .map(|(i, a)| (crate::util::ClusterId(i as u32 + 1), a))
+            .collect();
+        let ranked = crate::scheduler::rank_clusters(&sla.constraints[0], &pairs);
+        if let Some(best) = ranked.first() {
+            let f = &fabrics[(best.cluster.0 - 1) as usize];
+            let input = PlacementInput {
+                sla: &sla.constraints[0],
+                workers: &f.workers,
+                service_hint: ServiceId(0),
+            };
+            let mut s = RomScheduler {
+                strategy: RomStrategy::BestFit,
+            };
+            let _ = s.place(&input);
+        }
+        del_ms.push(t0.elapsed().as_secs_f64() * 1000.0);
+    }
+    t.row(vec![
+        format!("{clusters}x{per}"),
+        format!("{:.4}", mean(&flat_ms)),
+        format!("{:.4}", mean(&del_ms)),
+        format!("{:.2}x", mean(&flat_ms) / mean(&del_ms).max(1e-9)),
+    ]);
+    t
+}
+
+/// Tunnel LRU ablation: handshakes and evictions as the active-tunnel cap
+/// k varies against a zipf-ish peer access trace.
+pub fn ablate_tunnel_lru(caps: &[usize], peers: usize, accesses: usize) -> Table {
+    let mut t = Table::new(
+        "Ablation — ProxyTUN LRU cap k vs handshakes/evictions",
+        &["k", "handshakes", "evictions", "handshake_rate"],
+    );
+    for &k in caps {
+        let mut tun = ProxyTun::with_cap(k);
+        let mut rng = Rng::seeded(11);
+        for a in 0..accesses {
+            // Zipf-ish: favor low peer ids.
+            let r = rng.f64();
+            let peer = ((r * r) * peers as f64) as usize % peers;
+            tun.activate(NodeId(peer as u32), SimTime::from_millis(a as f64 * 10.0));
+            tun.check_invariants().unwrap();
+        }
+        t.row(vec![
+            k.to_string(),
+            tun.handshakes.to_string(),
+            tun.evictions.to_string(),
+            format!("{:.3}", tun.handshakes as f64 / accesses as f64),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn delta_policy_publishes_fewer_messages() {
+        let t = ablate_telemetry(600, 0.1);
+        let published: Vec<u64> = t.rows.iter().map(|r| r[1].parse().unwrap()).collect();
+        assert!(published[1] < published[0], "delta < periodic: {published:?}");
+    }
+
+    #[test]
+    fn delegation_is_cheaper_per_placement() {
+        let t = ablate_delegation(500, 10, 5);
+        let speedup: f64 = t.rows[0][3].trim_end_matches('x').parse().unwrap();
+        assert!(speedup > 1.0, "speedup {speedup}");
+    }
+
+    #[test]
+    fn bigger_cap_fewer_handshakes() {
+        let t = ablate_tunnel_lru(&[4, 64], 64, 2000);
+        let h: Vec<u64> = t.rows.iter().map(|r| r[1].parse().unwrap()).collect();
+        assert!(h[1] <= h[0], "handshakes {h:?}");
+    }
+}

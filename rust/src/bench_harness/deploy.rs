@@ -1,0 +1,221 @@
+//! Fig. 4a (deployment time vs cluster size, scheduler on/off) and
+//! Fig. 5 (deployment time under network impairment, HET testbed).
+
+use crate::baselines::FrameworkProfile;
+use crate::coordinator::SchedulerKind;
+use crate::metrics::Table;
+use crate::sla::simple_sla;
+use crate::util::{mean, ServiceId, SimTime};
+
+use super::testbed::{build_flat, build_oakestra, OakTestbedConfig};
+
+/// Deploy `reps` tracker apps sequentially on an Oakestra testbed and
+/// return the mean deployment time (ms).
+fn oakestra_deploy_ms(
+    seed: u64,
+    workers: usize,
+    scheduler: SchedulerKind,
+    heterogeneous: bool,
+    impair_delay_ms: f64,
+    impair_loss: f64,
+    reps: usize,
+) -> f64 {
+    let mut tb = build_oakestra(OakTestbedConfig {
+        seed,
+        clusters: 1,
+        workers_per_cluster: workers,
+        scheduler,
+        heterogeneous,
+        ..OakTestbedConfig::default()
+    });
+    tb.warm_up();
+    tb.sim.core.net.impair_all(impair_delay_ms, impair_loss);
+    for r in 0..reps {
+        tb.submit(
+            simple_sla(&format!("tracker-{r}"), 50, 32),
+            SimTime::from_secs(13.0 + 3.0 * r as f64),
+        );
+    }
+    tb.sim
+        .run_until(SimTime::from_secs(13.0 + 3.0 * reps as f64 + 30.0));
+    let times = tb.deploy_times_ms();
+    mean(&times)
+}
+
+/// Same for a flat baseline.
+fn flat_deploy_ms(
+    profile: FrameworkProfile,
+    seed: u64,
+    workers: usize,
+    heterogeneous: bool,
+    impair_delay_ms: f64,
+    impair_loss: f64,
+    reps: usize,
+) -> f64 {
+    let mut tb = build_flat(
+        profile,
+        seed,
+        workers,
+        crate::model::NodeClass::S,
+        heterogeneous,
+        2_000.0,
+    );
+    tb.warm_up();
+    tb.sim.core.net.impair_all(impair_delay_ms, impair_loss);
+    for r in 0..reps {
+        tb.submit_pod(
+            ServiceId(1 + r as u32),
+            SimTime::from_secs(13.0 + 3.0 * r as f64),
+        );
+    }
+    tb.sim
+        .run_until(SimTime::from_secs(13.0 + 3.0 * reps as f64 + 30.0));
+    mean(&tb.deploy_times_ms())
+}
+
+/// "no scheduler" variants: Oakestra falls back to first-fit with zero
+/// scoring; baselines get a near-instant scheduler poll and free scoring.
+fn ns_profile(mut p: FrameworkProfile) -> FrameworkProfile {
+    p.sched_per_node_ms = 0.0;
+    p.sched_poll_ms = 10.0;
+    p
+}
+
+/// Fig. 4a: mean service deployment time vs cluster size for each
+/// framework, with (s) and without (ns) the scheduler.
+pub fn fig4a_deploy_time(sizes: &[usize], reps: usize) -> Table {
+    let mut t = Table::new(
+        "Fig 4a — service deployment time (ms) vs cluster size",
+        &[
+            "workers",
+            "oakestra_s",
+            "oakestra_ns",
+            "k3s_s",
+            "k3s_ns",
+            "k8s_s",
+            "k8s_ns",
+            "microk8s_s",
+            "microk8s_ns",
+        ],
+    );
+    // Average every cell over several independent seeds (the paper
+    // repeats each experiment ≥10×, §7.1).
+    const SEEDS: u64 = 3;
+    for &n in sizes {
+        let oak = |sched: SchedulerKind, base: u64| {
+            let v: Vec<f64> = (0..SEEDS)
+                .map(|s| oakestra_deploy_ms(base + s, n, sched, false, 0.0, 0.0, reps))
+                .collect();
+            mean(&v)
+        };
+        let row = |p: FrameworkProfile, base: u64| {
+            let v: Vec<f64> = (0..SEEDS)
+                .map(|s| flat_deploy_ms(p.clone(), base + s, n, false, 0.0, 0.0, reps))
+                .collect();
+            mean(&v)
+        };
+        let oak_s = oak(SchedulerKind::RomBestFit, 42);
+        let oak_ns = oak(SchedulerKind::RomFirstFit, 52);
+        let k3s_s = row(FrameworkProfile::k3s(), 62);
+        let k3s_ns = row(ns_profile(FrameworkProfile::k3s()), 72);
+        let k8s_s = row(FrameworkProfile::kubernetes(), 82);
+        let k8s_ns = row(ns_profile(FrameworkProfile::kubernetes()), 92);
+        let mk_s = row(FrameworkProfile::microk8s(), 102);
+        let mk_ns = row(ns_profile(FrameworkProfile::microk8s()), 112);
+        t.row(vec![
+            n.to_string(),
+            format!("{oak_s:.0}"),
+            format!("{oak_ns:.0}"),
+            format!("{k3s_s:.0}"),
+            format!("{k3s_ns:.0}"),
+            format!("{k8s_s:.0}"),
+            format!("{k8s_ns:.0}"),
+            format!("{mk_s:.0}"),
+            format!("{mk_ns:.0}"),
+        ]);
+    }
+    t
+}
+
+/// Fig. 5: Oakestra vs K3s deployment time in the HET testbed as `tc`
+/// adds delay (and a loss variant the paper describes in prose: ~50%/60%
+/// reduction at 20%/50% loss).
+pub fn fig5_network_degradation(delays_ms: &[f64], reps: usize) -> (Table, Table) {
+    let mut t = Table::new(
+        "Fig 5 — HET deployment time (ms) vs added network delay",
+        &["delay_ms", "oakestra", "k3s", "k3s/oakestra"],
+    );
+    for &d in delays_ms {
+        let oakv: Vec<f64> = (0..3)
+            .map(|s| oakestra_deploy_ms(152 + s, 6, SchedulerKind::RomBestFit, true, d, 0.0, reps))
+            .collect();
+        let k3sv: Vec<f64> = (0..3)
+            .map(|s| flat_deploy_ms(FrameworkProfile::k3s(), 153 + s, 6, true, d, 0.0, reps))
+            .collect();
+        let oak = mean(&oakv);
+        let k3s = mean(&k3sv);
+        t.row(vec![
+            format!("{d:.0}"),
+            format!("{oak:.0}"),
+            format!("{k3s:.0}"),
+            format!("{:.2}", k3s / oak),
+        ]);
+    }
+    let mut l = Table::new(
+        "Fig 5 (prose) — HET deployment time (ms) vs packet loss",
+        &["loss", "oakestra", "k3s", "reduction"],
+    );
+    for &loss in &[0.0, 0.2, 0.5] {
+        let oak = oakestra_deploy_ms(54, 6, SchedulerKind::RomBestFit, true, 0.0, loss, reps);
+        let k3s = flat_deploy_ms(FrameworkProfile::k3s(), 55, 6, true, 0.0, loss, reps);
+        l.row(vec![
+            format!("{loss:.0}%", loss = loss * 100.0),
+            format!("{oak:.0}"),
+            format!("{k3s:.0}"),
+            format!("{:.0}%", (1.0 - oak / k3s) * 100.0),
+        ]);
+    }
+    (t, l)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig4a_shape_holds() {
+        // Container-start noise is exponential; average across seeds ×
+        // reps (the paper repeats every experiment ≥10×, §7.1).
+        let avg = |f: &dyn Fn(u64) -> f64| {
+            let v: Vec<f64> = (0..4).map(|s| f(s)).collect();
+            crate::util::mean(&v)
+        };
+        let oak = avg(&|s| oakestra_deploy_ms(s, 6, SchedulerKind::RomBestFit, false, 0.0, 0.0, 4));
+        let k3s = avg(&|s| flat_deploy_ms(FrameworkProfile::k3s(), s, 6, false, 0.0, 0.0, 4));
+        let mk8s = flat_deploy_ms(FrameworkProfile::microk8s(), 3, 6, false, 0.0, 0.0, 4);
+        let k8s = flat_deploy_ms(FrameworkProfile::kubernetes(), 4, 6, false, 0.0, 0.0, 4);
+        // Paper: "K3s's performance closely matched Oakestra" on the LAN
+        // testbed — they separate under network degradation (Fig. 5).
+        assert!(oak < 1.2 * k3s, "oakestra {oak} should match/beat k3s {k3s}");
+        assert!(k3s < k8s, "k3s {k3s} should beat k8s {k8s}");
+        assert!(mk8s > 5.0 * oak, "microk8s {mk8s} should be ≫ oakestra {oak}");
+        // Oakestra stays flat with size (container-start noise is the
+        // dominant variance; average across seeds before comparing).
+        let oak6 = avg(&|s| oakestra_deploy_ms(s, 6, SchedulerKind::RomBestFit, false, 0.0, 0.0, 4));
+        let oak10 = avg(&|s| oakestra_deploy_ms(s, 10, SchedulerKind::RomBestFit, false, 0.0, 0.0, 4));
+        assert!(
+            (oak10 - oak6).abs() / oak6 < 0.4,
+            "oak6={oak6} oak10={oak10}"
+        );
+    }
+
+    #[test]
+    fn fig5_oakestra_wins_under_delay() {
+        let oak = oakestra_deploy_ms(5, 4, SchedulerKind::RomBestFit, true, 100.0, 0.0, 2);
+        let k3s = flat_deploy_ms(FrameworkProfile::k3s(), 6, 4, true, 100.0, 0.0, 2);
+        assert!(
+            k3s > 1.15 * oak,
+            "k3s {k3s} should exceed oakestra {oak} by ≥15% at 100 ms delay"
+        );
+    }
+}

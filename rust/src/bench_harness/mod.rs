@@ -1,0 +1,36 @@
+//! Experiment drivers: one function per figure of the paper's evaluation
+//! (§7), shared between `cargo bench` targets, the CLI (`oakestra bench`)
+//! and the examples. Every driver returns a [`crate::metrics::Table`]
+//! whose rows mirror the series the paper plots; EXPERIMENTS.md records
+//! paper-vs-measured per figure.
+
+mod deploy;
+mod net;
+mod overhead;
+mod sched;
+mod testbed;
+mod video;
+
+pub use deploy::{fig4a_deploy_time, fig5_network_degradation};
+pub use net::{fig9_left_closest_rtt, fig9_right_tunnel_transfer};
+pub use overhead::{fig4bc_idle_overhead, fig7a_control_messages, fig7b_stress};
+pub use sched::{
+    fig6_cluster_ratio, fig8a_schedulers_hpc, fig8b_schedulers_scale,
+    paper_sla as sched_paper_sla, run_host as sched_run_host,
+    synthetic_fabric as sched_fabric, SyntheticFabric,
+};
+pub use testbed::{
+    build_flat, build_oakestra, FlatTestbed, Framework, OakTestbed, OakTestbedConfig,
+};
+pub use video::fig10_video_analytics;
+
+pub mod ablations;
+
+/// Render a set of tables as one markdown document section.
+pub fn tables_to_markdown(tables: &[crate::metrics::Table]) -> String {
+    tables
+        .iter()
+        .map(|t| t.to_markdown())
+        .collect::<Vec<_>>()
+        .join("\n")
+}

@@ -1,0 +1,301 @@
+//! Fig. 4b/4c (idle CPU & memory at worker and master vs cluster size),
+//! Fig. 7a (control-message volume vs deployed services) and Fig. 7b
+//! (worker/orchestrator utilization during the Nginx stress deploy).
+
+use crate::baselines::FrameworkProfile;
+use crate::messaging::labels;
+use crate::metrics::Table;
+use crate::sla::simple_sla;
+use crate::util::{NodeId, ServiceId, SimTime};
+
+use super::testbed::{build_flat, build_oakestra, OakTestbedConfig};
+
+/// Measure idle (cpu%, mem MB) at one worker and the master over a
+/// window, after warm-up.
+fn idle_sample(
+    sim: &crate::sim::Sim,
+    worker: NodeId,
+    master: NodeId,
+    from: SimTime,
+    to: SimTime,
+) -> (f64, f64, f64, f64) {
+    let u = |n: NodeId| {
+        sim.core
+            .metrics
+            .usage(n)
+            .map(|u| (u.cpu_util(from, to) * 100.0, u.mem_mb))
+            .unwrap_or((0.0, 0.0))
+    };
+    let (wc, wm) = u(worker);
+    let (mc, mm) = u(master);
+    (wc, wm, mc, mm)
+}
+
+/// Fig. 4b/4c: idle overheads vs cluster size for every framework.
+/// Returns (cpu table, memory table).
+pub fn fig4bc_idle_overhead(sizes: &[usize], window_s: f64) -> (Table, Table) {
+    let mut cpu = Table::new(
+        "Fig 4b — idle CPU (% of one core): worker / master vs cluster size",
+        &[
+            "workers",
+            "oak_worker",
+            "oak_master",
+            "k3s_worker",
+            "k3s_master",
+            "k8s_worker",
+            "k8s_master",
+            "mk8s_worker",
+            "mk8s_master",
+        ],
+    );
+    let mut mem = Table::new(
+        "Fig 4c — idle memory (MB): worker / master vs cluster size",
+        &[
+            "workers",
+            "oak_worker",
+            "oak_master",
+            "k3s_worker",
+            "k3s_master",
+            "k8s_worker",
+            "k8s_master",
+            "mk8s_worker",
+            "mk8s_master",
+        ],
+    );
+    let from = SimTime::from_secs(15.0);
+    for &n in sizes {
+        let to = SimTime::from_secs(15.0 + window_s);
+
+        let mut oak = build_oakestra(OakTestbedConfig {
+            seed: 60,
+            workers_per_cluster: n,
+            ..OakTestbedConfig::default()
+        });
+        oak.sim.run_until(to);
+        let w = oak.workers[0].0;
+        let m = oak.clusters[0].0;
+        let (owc, owm, omc, omm) = idle_sample(&oak.sim, w, m, from, to);
+
+        let flat = |p: FrameworkProfile, seed: u64| {
+            let mut tb = build_flat(p, seed, n, crate::model::NodeClass::S, false, 2_000.0);
+            tb.sim.run_until(to);
+            idle_sample(&tb.sim, tb.kubelets[0].0, tb.master_node, from, to)
+        };
+        let (k3wc, k3wm, k3mc, k3mm) = flat(FrameworkProfile::k3s(), 61);
+        let (k8wc, k8wm, k8mc, k8mm) = flat(FrameworkProfile::kubernetes(), 62);
+        let (mkwc, mkwm, mkmc, mkmm) = flat(FrameworkProfile::microk8s(), 63);
+
+        cpu.row(vec![
+            n.to_string(),
+            format!("{owc:.2}"),
+            format!("{omc:.2}"),
+            format!("{k3wc:.2}"),
+            format!("{k3mc:.2}"),
+            format!("{k8wc:.2}"),
+            format!("{k8mc:.2}"),
+            format!("{mkwc:.2}"),
+            format!("{mkmc:.2}"),
+        ]);
+        mem.row(vec![
+            n.to_string(),
+            format!("{owm:.0}"),
+            format!("{omm:.0}"),
+            format!("{k3wm:.0}"),
+            format!("{k3mm:.0}"),
+            format!("{k8wm:.0}"),
+            format!("{k8mm:.0}"),
+            format!("{mkwm:.0}"),
+            format!("{mkmm:.0}"),
+        ]);
+    }
+    (cpu, mem)
+}
+
+/// Fig. 7a: total control-plane messages vs number of deployed services
+/// (10-worker cluster), Oakestra vs K3s.
+pub fn fig7a_control_messages(service_counts: &[usize]) -> Table {
+    let mut t = Table::new(
+        "Fig 7a — control messages (count) during deploy+steady state",
+        &["services", "oakestra_msgs", "k3s_msgs", "k3s/oakestra"],
+    );
+    for &s in service_counts {
+        // Oakestra.
+        let mut oak = build_oakestra(OakTestbedConfig {
+            seed: 70,
+            workers_per_cluster: 10,
+            ..OakTestbedConfig::default()
+        });
+        oak.warm_up();
+        let m0: u64 = [
+            labels::WORKER_TO_CLUSTER,
+            labels::CLUSTER_TO_WORKER,
+            labels::CLUSTER_TO_ROOT,
+            labels::ROOT_TO_CLUSTER,
+        ]
+        .iter()
+        .map(|l| oak.sim.core.metrics.msgs(l))
+        .sum();
+        for r in 0..s {
+            oak.submit(
+                simple_sla(&format!("ng-{r}"), 5, 4),
+                SimTime::from_secs(13.0 + 0.2 * r as f64),
+            );
+        }
+        let end = SimTime::from_secs(13.0 + 0.2 * s as f64 + 60.0);
+        oak.sim.run_until(end);
+        let oak_msgs: u64 = [
+            labels::WORKER_TO_CLUSTER,
+            labels::CLUSTER_TO_WORKER,
+            labels::CLUSTER_TO_ROOT,
+            labels::ROOT_TO_CLUSTER,
+        ]
+        .iter()
+        .map(|l| oak.sim.core.metrics.msgs(l))
+        .sum::<u64>()
+            - m0;
+
+        // K3s.
+        let mut k3s = build_flat(
+            FrameworkProfile::k3s(),
+            71,
+            10,
+            crate::model::NodeClass::S,
+            false,
+            2_000.0,
+        );
+        k3s.warm_up();
+        let k0: u64 = [labels::KUBE_NODE_TO_MASTER, labels::KUBE_MASTER_TO_NODE]
+            .iter()
+            .map(|l| k3s.sim.core.metrics.msgs(l))
+            .sum();
+        for r in 0..s {
+            k3s.submit_pod_sized(
+                ServiceId(1 + r as u32),
+                crate::model::Capacity::new(5, 4, 0),
+                SimTime::from_secs(13.0 + 0.2 * r as f64),
+            );
+        }
+        k3s.sim.run_until(end);
+        let k3s_msgs: u64 = [labels::KUBE_NODE_TO_MASTER, labels::KUBE_MASTER_TO_NODE]
+            .iter()
+            .map(|l| k3s.sim.core.metrics.msgs(l))
+            .sum::<u64>()
+            - k0;
+
+        t.row(vec![
+            s.to_string(),
+            oak_msgs.to_string(),
+            k3s_msgs.to_string(),
+            format!("{:.2}", k3s_msgs as f64 / oak_msgs.max(1) as f64),
+        ]);
+    }
+    t
+}
+
+/// Fig. 7b: worker & orchestrator CPU as up to `max_per_worker` Nginx
+/// containers are deployed on each of 10 workers. Samples utilization at
+/// several container counts.
+pub fn fig7b_stress(checkpoints: &[usize]) -> Table {
+    let mut t = Table::new(
+        "Fig 7b — CPU (% core) under increasing containers per worker",
+        &[
+            "containers/worker",
+            "oak_worker",
+            "oak_orch",
+            "k3s_worker",
+            "k3s_master",
+        ],
+    );
+    for &per_worker in checkpoints {
+        let total = per_worker * 10;
+
+        let mut oak = build_oakestra(OakTestbedConfig {
+            seed: 75,
+            workers_per_cluster: 10,
+            worker_class: crate::model::NodeClass::S,
+            ..OakTestbedConfig::default()
+        });
+        oak.warm_up();
+        for r in 0..total {
+            oak.submit(
+                simple_sla(&format!("ng-{r}"), 5, 4),
+                SimTime::from_secs(13.0 + 0.1 * r as f64),
+            );
+        }
+        let settle = SimTime::from_secs(13.0 + 0.1 * total as f64 + 30.0);
+        let end = settle + SimTime::from_secs(30.0);
+        oak.sim.run_until(end);
+        let (owc, _, _, _) = idle_sample(&oak.sim, oak.workers[0].0, oak.clusters[0].0, settle, end);
+        let (_, _, omc, _) = idle_sample(&oak.sim, oak.workers[0].0, oak.clusters[0].0, settle, end);
+
+        let mut k3s = build_flat(
+            FrameworkProfile::k3s(),
+            76,
+            10,
+            crate::model::NodeClass::S,
+            false,
+            2_000.0,
+        );
+        k3s.warm_up();
+        for r in 0..total {
+            k3s.submit_pod_sized(
+                ServiceId(1 + r as u32),
+                crate::model::Capacity::new(5, 4, 0),
+                SimTime::from_secs(13.0 + 0.1 * r as f64),
+            );
+        }
+        k3s.sim.run_until(end);
+        let (kwc, _, kmc, _) =
+            idle_sample(&k3s.sim, k3s.kubelets[0].0, k3s.master_node, settle, end);
+
+        t.row(vec![
+            per_worker.to_string(),
+            format!("{:.1}", owc.min(100.0)),
+            format!("{omc:.1}"),
+            format!("{:.1}", kwc.min(100.0)),
+            format!("{kmc:.1}"),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn idle_overhead_ratios_match_paper_claims() {
+        let (cpu, mem) = fig4bc_idle_overhead(&[4], 45.0);
+        let row = &cpu.rows[0];
+        let v = |i: usize| row[i].parse::<f64>().unwrap();
+        let (oak_w, oak_m, k3s_w, k3s_m, k8s_w, k8s_m) =
+            (v(1), v(2), v(3), v(4), v(5), v(6));
+        // Paper: ≈6× less worker CPU, ≈11× less master CPU vs best rival.
+        assert!(k3s_w / oak_w > 3.0, "worker: k3s={k3s_w} oak={oak_w}");
+        assert!(k3s_m / oak_m > 5.0, "master: k3s={k3s_m} oak={oak_m}");
+        assert!(k8s_w > k3s_w && k8s_m > k3s_m);
+        // Memory: ≈18% (worker) / ≈33% (master) lighter than K3s.
+        let m = &mem.rows[0];
+        let mv = |i: usize| m[i].parse::<f64>().unwrap();
+        let (omw, omm, kmw, kmm) = (mv(1), mv(2), mv(3), mv(4));
+        assert!(omw < kmw && omw / kmw > 0.6, "worker mem {omw} vs {kmw}");
+        assert!(omm < kmm && omm / kmm > 0.5, "master mem {omm} vs {kmm}");
+    }
+
+    #[test]
+    fn k3s_sends_about_twice_the_messages() {
+        let t = fig7a_control_messages(&[20]);
+        let ratio: f64 = t.rows[0][3].parse().unwrap();
+        assert!(ratio > 1.4, "k3s/oakestra message ratio {ratio} too small");
+    }
+
+    #[test]
+    fn stress_exhausts_k3s_before_oakestra() {
+        let t = fig7b_stress(&[60]);
+        let oak: f64 = t.rows[0][1].parse().unwrap();
+        let k3s: f64 = t.rows[0][3].parse().unwrap();
+        assert!(k3s > oak, "k3s {k3s}% should exceed oakestra {oak}%");
+        assert!(k3s > 70.0, "k3s should be near exhaustion at 60/worker: {k3s}");
+        assert!(oak < 80.0, "oakestra should have headroom at 60/worker: {oak}");
+    }
+}

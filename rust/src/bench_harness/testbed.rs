@@ -1,0 +1,402 @@
+//! Testbed assembly: build a full Oakestra deployment (root + clusters +
+//! workers + driver) or a flat baseline deployment inside one simulator,
+//! mirroring the paper's HPC/HET experiment setups (§7.1: XL VM root,
+//! L VM cluster orchestrator / master, S VM workers).
+
+use crate::baselines::{FlatKubelet, FlatMaster, FrameworkProfile};
+use crate::coordinator::{
+    ClusterConfig, ClusterOrchestrator, RootConfig, RootOrchestrator, SchedulerKind,
+    WorkerConfig, WorkerEngine,
+};
+use crate::geo::GeoPoint;
+use crate::model::{NodeClass, WorkerSpec};
+use crate::sim::{ActorId, LinkProfile, Sim, SimMsg, TimerKind};
+use crate::util::{ClusterId, NodeId, SimTime};
+use crate::workload::DeployDriver;
+
+/// Which control plane a testbed runs.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Framework {
+    Oakestra,
+    K8s,
+    MicroK8s,
+    K3s,
+}
+
+impl Framework {
+    pub fn name(self) -> &'static str {
+        match self {
+            Framework::Oakestra => "oakestra",
+            Framework::K8s => "k8s",
+            Framework::MicroK8s => "microk8s",
+            Framework::K3s => "k3s",
+        }
+    }
+    pub fn profile(self) -> Option<FrameworkProfile> {
+        match self {
+            Framework::Oakestra => None,
+            Framework::K8s => Some(FrameworkProfile::kubernetes()),
+            Framework::MicroK8s => Some(FrameworkProfile::microk8s()),
+            Framework::K3s => Some(FrameworkProfile::k3s()),
+        }
+    }
+    pub fn all() -> [Framework; 4] {
+        [
+            Framework::Oakestra,
+            Framework::K8s,
+            Framework::MicroK8s,
+            Framework::K3s,
+        ]
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct OakTestbedConfig {
+    pub seed: u64,
+    pub clusters: usize,
+    pub workers_per_cluster: usize,
+    pub scheduler: SchedulerKind,
+    pub worker_class: NodeClass,
+    /// HET testbed: mixed device classes + WiFi links.
+    pub heterogeneous: bool,
+    /// Fast local registry (pre-warmed images between repeated runs).
+    pub registry_mbps: f64,
+}
+
+impl Default for OakTestbedConfig {
+    fn default() -> Self {
+        OakTestbedConfig {
+            seed: 42,
+            clusters: 1,
+            workers_per_cluster: 4,
+            scheduler: SchedulerKind::RomBestFit,
+            worker_class: NodeClass::S,
+            heterogeneous: false,
+            registry_mbps: 2_000.0,
+        }
+    }
+}
+
+/// An assembled Oakestra deployment inside a simulator.
+pub struct OakTestbed {
+    pub sim: Sim,
+    pub root: ActorId,
+    pub root_node: NodeId,
+    pub clusters: Vec<(NodeId, ActorId)>,
+    /// All worker (node, engine) pairs across clusters.
+    pub workers: Vec<(NodeId, ActorId)>,
+    pub driver: ActorId,
+    pub cfg: OakTestbedConfig,
+}
+
+/// Geographic scatter used by both testbeds (Munich metro area grid).
+pub fn scatter_location(i: usize) -> GeoPoint {
+    GeoPoint::from_degrees(
+        48.0 + 0.02 * (i % 16) as f64,
+        11.4 + 0.03 * (i / 16) as f64,
+    )
+}
+
+pub fn het_class(i: usize) -> NodeClass {
+    match i % 4 {
+        0 => NodeClass::RaspberryPi4,
+        1 => NodeClass::IntelNuc,
+        2 => NodeClass::MiniDesktop,
+        _ => NodeClass::JetsonXavier,
+    }
+}
+
+pub fn build_oakestra(cfg: OakTestbedConfig) -> OakTestbed {
+    let mut sim = Sim::new(cfg.seed);
+    sim.core.containers.registry_mbps = cfg.registry_mbps;
+    if cfg.heterogeneous {
+        sim.core.net.set_default(LinkProfile::wifi());
+    } else {
+        sim.core.net.set_default(LinkProfile::lan());
+    }
+
+    // Node 0: XL root VM (+ the experiment driver process).
+    let root_node = NodeId(0);
+    sim.add_node(root_node, NodeClass::XL);
+    let root = sim.add_actor(root_node, Box::new(RootOrchestrator::new(RootConfig::default())));
+    let driver = sim.add_actor(root_node, Box::new(DeployDriver::new(0)));
+
+    // Cluster orchestrators on L VMs, workers on S VMs (HPC) or HET mix.
+    let mut clusters = Vec::new();
+    let mut workers = Vec::new();
+    let mut next_node = 1u32;
+    for c in 0..cfg.clusters {
+        let cnode = NodeId(next_node);
+        next_node += 1;
+        sim.add_node(cnode, NodeClass::L);
+        let cid = ClusterId(c as u32 + 1);
+        let orch = sim.add_actor(
+            cnode,
+            Box::new(ClusterOrchestrator::new(
+                ClusterConfig::new(cid, cfg.scheduler),
+                root,
+            )),
+        );
+        clusters.push((cnode, orch));
+        // Register cluster at t=1ms.
+        sim.inject(
+            SimTime::from_millis(1.0),
+            orch,
+            SimMsg::Timer(TimerKind::Custom(0)),
+        );
+
+        for w in 0..cfg.workers_per_cluster {
+            let wi = (c * cfg.workers_per_cluster + w) as usize;
+            let wnode = NodeId(next_node);
+            next_node += 1;
+            let class = if cfg.heterogeneous {
+                het_class(wi)
+            } else {
+                cfg.worker_class
+            };
+            sim.add_node(wnode, class);
+            let spec = WorkerSpec {
+                node: wnode,
+                class,
+                location: scatter_location(wi),
+            };
+            let engine = sim.add_actor(
+                wnode,
+                Box::new(WorkerEngine::new(WorkerConfig::new(spec), orch)),
+            );
+            workers.push((wnode, engine));
+            // Register workers shortly after their cluster.
+            sim.inject(
+                SimTime::from_millis(20.0 + w as f64),
+                engine,
+                SimMsg::Timer(TimerKind::Custom(0)),
+            );
+        }
+    }
+
+    // Teach every worker the actor handles of its peers (tunnel endpoint
+    // discovery — carried by table entries in a live deployment).
+    let pairs: Vec<(NodeId, ActorId)> = workers.clone();
+    for (_, engine) in &workers {
+        for (n, a) in &pairs {
+            if let Some(w) = sim.actor_as_mut::<WorkerEngine>(*engine) {
+                w.learn_node_actor(*n, *a);
+            }
+        }
+    }
+
+    OakTestbed {
+        sim,
+        root,
+        root_node,
+        clusters,
+        workers,
+        driver,
+        cfg,
+    }
+}
+
+impl OakTestbed {
+    /// Let registration + first telemetry settle.
+    pub fn warm_up(&mut self) {
+        self.sim.run_until(SimTime::from_secs(12.0));
+    }
+
+    /// Submit an SLA through the root API; returns nothing — completion
+    /// lands on the driver (`DeployDriver::completed`).
+    pub fn submit(&mut self, sla: crate::sla::ServiceSla, at: SimTime) {
+        let driver = self.driver;
+        self.sim.inject(
+            at,
+            self.root,
+            SimMsg::Oak(crate::sim::OakMsg::SubmitService {
+                sla,
+                reply_to: Some(driver),
+            }),
+        );
+    }
+
+    pub fn deploy_times_ms(&self) -> Vec<f64> {
+        self.sim
+            .actor_as::<DeployDriver>(self.driver)
+            .map(|d| {
+                d.completed
+                    .values()
+                    .map(|t| t.as_millis())
+                    .collect::<Vec<f64>>()
+            })
+            .unwrap_or_default()
+    }
+}
+
+/// An assembled flat-baseline deployment (master + kubelets + driver).
+pub struct FlatTestbed {
+    pub sim: Sim,
+    pub master: ActorId,
+    pub master_node: NodeId,
+    pub kubelets: Vec<(NodeId, ActorId)>,
+    pub driver: ActorId,
+    pub profile: FrameworkProfile,
+}
+
+pub fn build_flat(
+    profile: FrameworkProfile,
+    seed: u64,
+    n_workers: usize,
+    worker_class: NodeClass,
+    heterogeneous: bool,
+    registry_mbps: f64,
+) -> FlatTestbed {
+    let mut sim = Sim::new(seed);
+    sim.core.containers.registry_mbps = registry_mbps;
+    if heterogeneous {
+        sim.core.net.set_default(LinkProfile::wifi());
+    } else {
+        sim.core.net.set_default(LinkProfile::lan());
+    }
+    let master_node = NodeId(0);
+    sim.add_node(master_node, NodeClass::L);
+    let master = sim.add_actor(master_node, Box::new(FlatMaster::new(profile.clone())));
+    let driver = sim.add_actor(master_node, Box::new(DeployDriver::new(0)));
+    let mut kubelets = Vec::new();
+    for i in 0..n_workers {
+        let node = NodeId(1 + i as u32);
+        let class = if heterogeneous {
+            het_class(i)
+        } else {
+            worker_class
+        };
+        sim.add_node(node, class);
+        let k = sim.add_actor(
+            node,
+            Box::new(FlatKubelet::new(profile.clone(), node, master)),
+        );
+        kubelets.push((node, k));
+        // Bootstrap (the kubelet schedules its own tick chain on first
+        // dispatch; injecting KubeletSync here would double the chain).
+        sim.inject(
+            SimTime::from_millis(20.0 + i as f64),
+            k,
+            SimMsg::Timer(TimerKind::Custom(0)),
+        );
+    }
+    for (node, k) in &kubelets {
+        sim.actor_as_mut::<FlatMaster>(master)
+            .unwrap()
+            .add_node(*node, *k, worker_class);
+    }
+    FlatTestbed {
+        sim,
+        master,
+        master_node,
+        kubelets,
+        driver,
+        profile,
+    }
+}
+
+impl FlatTestbed {
+    pub fn warm_up(&mut self) {
+        self.sim.run_until(SimTime::from_secs(12.0));
+    }
+
+    pub fn submit_pod(&mut self, service: crate::util::ServiceId, at: SimTime) {
+        self.submit_pod_sized(service, crate::model::Capacity::new(100, 32, 0), at);
+    }
+
+    pub fn submit_pod_sized(
+        &mut self,
+        service: crate::util::ServiceId,
+        request: crate::model::Capacity,
+        at: SimTime,
+    ) {
+        let driver = self.driver;
+        self.sim.inject(
+            at,
+            self.master,
+            SimMsg::Kube(crate::sim::KubeMsg::SubmitPod {
+                service,
+                request,
+                image_mb: 50,
+                reply_to: Some(driver),
+            }),
+        );
+    }
+
+    pub fn deploy_times_ms(&self) -> Vec<f64> {
+        self.sim
+            .actor_as::<DeployDriver>(self.driver)
+            .map(|d| {
+                d.completed
+                    .values()
+                    .map(|t| t.as_millis())
+                    .collect::<Vec<f64>>()
+            })
+            .unwrap_or_default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ServiceState;
+    use crate::sla::simple_sla;
+
+    #[test]
+    fn oakestra_testbed_deploys_end_to_end() {
+        let mut tb = build_oakestra(OakTestbedConfig::default());
+        tb.warm_up();
+        tb.submit(simple_sla("app", 200, 64), SimTime::from_secs(13.0));
+        tb.sim.run_until(SimTime::from_secs(40.0));
+        let times = tb.deploy_times_ms();
+        assert_eq!(times.len(), 1, "service must reach Running");
+        assert!(times[0] > 100.0 && times[0] < 5_000.0, "t={}", times[0]);
+
+        // The root's DB agrees.
+        let root = tb
+            .sim
+            .actor_as::<crate::coordinator::RootOrchestrator>(tb.root)
+            .unwrap();
+        let rec = root.db.services().next().unwrap();
+        assert!(rec.fully_running());
+        assert_eq!(rec.instances[0].state, ServiceState::Running);
+    }
+
+    #[test]
+    fn multi_cluster_testbed_spreads_registration() {
+        let mut tb = build_oakestra(OakTestbedConfig {
+            clusters: 3,
+            workers_per_cluster: 2,
+            ..OakTestbedConfig::default()
+        });
+        tb.warm_up();
+        let root = tb
+            .sim
+            .actor_as::<crate::coordinator::RootOrchestrator>(tb.root)
+            .unwrap();
+        assert_eq!(root.tree.len(), 3);
+        for (_, orch) in &tb.clusters {
+            let c = tb
+                .sim
+                .actor_as::<crate::coordinator::ClusterOrchestrator>(*orch)
+                .unwrap();
+            assert_eq!(c.workers.len(), 2);
+        }
+    }
+
+    #[test]
+    fn flat_testbed_deploys_end_to_end() {
+        let mut tb = build_flat(
+            FrameworkProfile::k3s(),
+            7,
+            4,
+            NodeClass::S,
+            false,
+            2_000.0,
+        );
+        tb.warm_up();
+        tb.submit_pod(crate::util::ServiceId(1), SimTime::from_secs(13.0));
+        tb.sim.run_until(SimTime::from_secs(40.0));
+        assert_eq!(tb.deploy_times_ms().len(), 1);
+    }
+}

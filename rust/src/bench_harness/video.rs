@@ -1,0 +1,131 @@
+//! Fig. 10: the live video-analytics pipeline (Fig. 3) on four S-VM
+//! workers, one stage per worker, under native / Oakestra / K3s. The
+//! per-stage slowdown comes from the co-resident platform agent's CPU
+//! share (measured by the Fig. 4b experiment); detection cost is anchored
+//! to real execution of the AOT detector artifact when available.
+
+use crate::metrics::Table;
+use crate::model::NodeClass;
+use crate::sim::{ActorId, Sim, SimMsg, TimerKind};
+use crate::util::{NodeId, SimTime};
+use crate::workload::{VideoSourceDriver, VideoStage, VideoStageCosts};
+
+/// Agent CPU share stolen per platform on an S VM running the pipeline
+/// (one busy container + monitoring; consistent with Fig. 4b/7b).
+pub fn agent_overhead(platform: &str) -> f64 {
+    match platform {
+        "native" => 0.0,
+        "oakestra" => 0.022, // NodeEngine tick + per-instance monitoring
+        "k3s" => 0.12,       // kubelet tick + cAdvisor on a busy node
+        _ => 0.25,           // k8s/microk8s (fail to run reliably — §7.4)
+    }
+}
+
+/// Run the pipeline on one platform; returns per-stage means + e2e mean.
+pub fn run_pipeline(
+    platform: &str,
+    costs: VideoStageCosts,
+    frames: u64,
+    fps: f64,
+    seed: u64,
+) -> (Vec<f64>, f64) {
+    let mut sim = Sim::new(seed);
+    for i in 0..5 {
+        sim.add_node(NodeId(i), NodeClass::S);
+    }
+    let ov = agent_overhead(platform);
+    let mk = |stage: u8, next: Option<ActorId>, sim: &mut Sim| {
+        let mut vs = VideoStage::new(stage, costs, next);
+        vs.agent_overhead = ov;
+        sim.add_actor(NodeId(stage as u32 + 1), Box::new(vs))
+    };
+    let s3 = mk(3, None, &mut sim);
+    let s2 = mk(2, Some(s3), &mut sim);
+    let s1 = mk(1, Some(s2), &mut sim);
+    let s0 = mk(0, Some(s1), &mut sim);
+    let drv = sim.add_actor(NodeId(0), Box::new(VideoSourceDriver::new(s0, fps, frames)));
+    sim.inject(SimTime::ZERO, drv, SimMsg::Timer(TimerKind::Workload));
+    sim.run_until(SimTime::from_secs(frames as f64 / fps + 60.0));
+
+    let stage_mean = |key: &'static str| {
+        sim.core
+            .metrics
+            .histogram(key)
+            .map(|h| h.mean())
+            .unwrap_or(0.0)
+    };
+    let stages = vec![
+        stage_mean("video.source_ms"),
+        stage_mean("video.aggregation_ms"),
+        stage_mean("video.detection_ms"),
+        stage_mean("video.tracking_ms"),
+    ];
+    let e2e = stage_mean("video.e2e_ms");
+    (stages, e2e)
+}
+
+/// Fig. 10 driver. Uses PJRT-anchored detection cost when artifacts are
+/// built, the calibrated default otherwise.
+pub fn fig10_video_analytics(frames: u64) -> Table {
+    let costs = crate::workload::video_stage_costs_real()
+        .unwrap_or_else(|_| VideoStageCosts::default());
+    let mut t = Table::new(
+        "Fig 10 — video analytics per-stage latency (ms)",
+        &[
+            "platform",
+            "source",
+            "aggregation",
+            "detection",
+            "tracking",
+            "e2e",
+            "vs_native",
+        ],
+    );
+    let (native_stages, native_e2e) = run_pipeline("native", costs, frames, 5.0, 1);
+    for platform in ["native", "oakestra", "k3s"] {
+        let (stages, e2e) = if platform == "native" {
+            (native_stages.clone(), native_e2e)
+        } else {
+            run_pipeline(platform, costs, frames, 5.0, 1)
+        };
+        t.row(vec![
+            platform.to_string(),
+            format!("{:.0}", stages[0]),
+            format!("{:.0}", stages[1]),
+            format!("{:.0}", stages[2]),
+            format!("{:.0}", stages[3]),
+            format!("{e2e:.0}"),
+            format!("{:+.1}%", (e2e / native_e2e - 1.0) * 100.0),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn oakestra_close_to_native_k3s_behind() {
+        let costs = VideoStageCosts::default();
+        let (_, native) = run_pipeline("native", costs, 30, 5.0, 2);
+        let (_, oak) = run_pipeline("oakestra", costs, 30, 5.0, 2);
+        let (_, k3s) = run_pipeline("k3s", costs, 30, 5.0, 2);
+        assert!(oak > native && oak < 1.1 * native, "oak={oak} native={native}");
+        assert!(k3s > 1.05 * oak, "k3s={k3s} oak={oak}");
+        // Paper: ~10% overall advantage for Oakestra over K3s.
+        let adv = k3s / oak - 1.0;
+        assert!(adv > 0.05 && adv < 0.30, "advantage {adv}");
+    }
+
+    #[test]
+    fn detection_dominates_all_platforms() {
+        let costs = VideoStageCosts::default();
+        let (stages, _) = run_pipeline("oakestra", costs, 20, 5.0, 3);
+        assert!(stages[2] > stages[0] + stages[1] + stages[3]);
+        // Object tracking lands in the paper's 300–400 ms? No — tracking
+        // is ~60 ms here; the 300–400 ms paper figure is detection+track
+        // on S VMs. Shape check only: tracking < detection.
+        assert!(stages[3] < stages[2]);
+    }
+}

@@ -1,0 +1,213 @@
+//! Configuration system: JSON documents describing a testbed topology and
+//! experiment parameters, loadable by the CLI (`oakestra run --config`)
+//! and the examples. Offline build ⇒ parsing goes through [`crate::json`].
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::coordinator::SchedulerKind;
+use crate::model::NodeClass;
+
+/// Top-level experiment configuration.
+#[derive(Clone, Debug)]
+pub struct Config {
+    pub seed: u64,
+    pub topology: Topology,
+    /// Simulated duration, seconds.
+    pub duration_s: f64,
+    /// Services to submit at t=13s, as (name, cpu millicores, mem MB).
+    pub services: Vec<(String, u32, u32)>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Topology {
+    pub clusters: usize,
+    pub workers_per_cluster: usize,
+    pub scheduler: SchedulerKind,
+    pub worker_class: NodeClass,
+    pub heterogeneous: bool,
+    /// Added network impairment (delay ms, loss fraction).
+    pub impair_delay_ms: f64,
+    pub impair_loss: f64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            seed: 42,
+            topology: Topology {
+                clusters: 1,
+                workers_per_cluster: 4,
+                scheduler: SchedulerKind::RomBestFit,
+                worker_class: NodeClass::S,
+                heterogeneous: false,
+                impair_delay_ms: 0.0,
+                impair_loss: 0.0,
+            },
+            duration_s: 60.0,
+            services: vec![("quickstart".into(), 200, 64)],
+        }
+    }
+}
+
+pub fn parse_scheduler(s: &str) -> Result<SchedulerKind> {
+    Ok(match s.to_ascii_lowercase().as_str() {
+        "rom" | "rom-bestfit" | "best_fit" => SchedulerKind::RomBestFit,
+        "rom-firstfit" | "first_fit" => SchedulerKind::RomFirstFit,
+        "ldp" => SchedulerKind::Ldp,
+        other => return Err(anyhow!("unknown scheduler '{other}'")),
+    })
+}
+
+pub fn parse_node_class(s: &str) -> Result<NodeClass> {
+    Ok(match s.to_ascii_uppercase().as_str() {
+        "S" => NodeClass::S,
+        "M" => NodeClass::M,
+        "L" => NodeClass::L,
+        "XL" => NodeClass::XL,
+        "RPI" | "RASPBERRYPI4" => NodeClass::RaspberryPi4,
+        "NUC" | "INTELNUC" => NodeClass::IntelNuc,
+        "DESKTOP" | "MINIDESKTOP" => NodeClass::MiniDesktop,
+        "JETSON" | "JETSONXAVIER" => NodeClass::JetsonXavier,
+        other => return Err(anyhow!("unknown node class '{other}'")),
+    })
+}
+
+impl Config {
+    pub fn from_json(text: &str) -> Result<Config> {
+        let v = crate::json::parse(text)?;
+        let mut cfg = Config::default();
+        if let Some(seed) = v.get("seed").as_u64() {
+            cfg.seed = seed;
+        }
+        if let Some(d) = v.get("duration_s").as_f64() {
+            cfg.duration_s = d;
+        }
+        let t = v.get("topology");
+        if !t.is_null() {
+            if let Some(c) = t.get("clusters").as_u64() {
+                cfg.topology.clusters = c as usize;
+            }
+            if let Some(w) = t.get("workers_per_cluster").as_u64() {
+                cfg.topology.workers_per_cluster = w as usize;
+            }
+            if let Some(s) = t.get("scheduler").as_str() {
+                cfg.topology.scheduler = parse_scheduler(s)?;
+            }
+            if let Some(s) = t.get("worker_class").as_str() {
+                cfg.topology.worker_class = parse_node_class(s)?;
+            }
+            if let Some(h) = t.get("heterogeneous").as_bool() {
+                cfg.topology.heterogeneous = h;
+            }
+            if let Some(d) = t.get("impair_delay_ms").as_f64() {
+                cfg.topology.impair_delay_ms = d;
+            }
+            if let Some(l) = t.get("impair_loss").as_f64() {
+                cfg.topology.impair_loss = l;
+            }
+        }
+        if let Some(list) = v.get("services").as_array() {
+            cfg.services.clear();
+            for s in list {
+                cfg.services.push((
+                    s.get("name").as_str().unwrap_or("svc").to_string(),
+                    s.get("vcpus_millicores").as_u64().unwrap_or(100) as u32,
+                    s.get("memory_mb").as_u64().unwrap_or(64) as u32,
+                ));
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn from_file(path: impl AsRef<Path>) -> Result<Config> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        Self::from_json(&text)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.topology.clusters == 0 || self.topology.workers_per_cluster == 0 {
+            return Err(anyhow!("topology must have ≥1 cluster and ≥1 worker"));
+        }
+        if !(0.0..1.0).contains(&self.topology.impair_loss) {
+            return Err(anyhow!("impair_loss must be in [0,1)"));
+        }
+        Ok(())
+    }
+
+    /// Translate into a testbed-builder config.
+    pub fn testbed(&self) -> crate::bench_harness::OakTestbedConfig {
+        crate::bench_harness::OakTestbedConfig {
+            seed: self.seed,
+            clusters: self.topology.clusters,
+            workers_per_cluster: self.topology.workers_per_cluster,
+            scheduler: self.topology.scheduler,
+            worker_class: self.topology.worker_class,
+            heterogeneous: self.topology.heterogeneous,
+            registry_mbps: 2_000.0,
+        }
+    }
+
+    /// Example config document (what `oakestra init-config` emits).
+    pub fn example_json() -> &'static str {
+        r#"{
+  "seed": 42,
+  "duration_s": 60.0,
+  "topology": {
+    "clusters": 2,
+    "workers_per_cluster": 5,
+    "scheduler": "ldp",
+    "worker_class": "S",
+    "heterogeneous": false,
+    "impair_delay_ms": 0.0,
+    "impair_loss": 0.0
+  },
+  "services": [
+    {"name": "frontend", "vcpus_millicores": 200, "memory_mb": 64},
+    {"name": "detector", "vcpus_millicores": 800, "memory_mb": 256}
+  ]
+}"#
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn example_config_parses() {
+        let cfg = Config::from_json(Config::example_json()).unwrap();
+        assert_eq!(cfg.topology.clusters, 2);
+        assert_eq!(cfg.topology.workers_per_cluster, 5);
+        assert_eq!(cfg.topology.scheduler, SchedulerKind::Ldp);
+        assert_eq!(cfg.services.len(), 2);
+        assert_eq!(cfg.services[1].1, 800);
+    }
+
+    #[test]
+    fn defaults_fill_missing_fields() {
+        let cfg = Config::from_json(r#"{"seed": 7}"#).unwrap();
+        assert_eq!(cfg.seed, 7);
+        assert_eq!(cfg.topology.clusters, 1);
+        assert!(!cfg.services.is_empty());
+    }
+
+    #[test]
+    fn validation_rejects_bad_topologies() {
+        assert!(Config::from_json(r#"{"topology": {"clusters": 0}}"#).is_err());
+        assert!(
+            Config::from_json(r#"{"topology": {"impair_loss": 1.5}}"#).is_err()
+        );
+        assert!(Config::from_json(r#"{"topology": {"scheduler": "magic"}}"#).is_err());
+    }
+
+    #[test]
+    fn parse_helpers() {
+        assert_eq!(parse_scheduler("LDP").unwrap(), SchedulerKind::Ldp);
+        assert!(matches!(parse_node_class("rpi"), Ok(NodeClass::RaspberryPi4)));
+        assert!(parse_node_class("quantum").is_err());
+    }
+}

@@ -1,0 +1,759 @@
+//! Cluster orchestrator (paper §3.2.2): the root's logical twin scoped to
+//! one cluster. Ingests push-based worker telemetry over the MQTT broker,
+//! aggregates ⟨Σ,μ,σ⟩ upward, runs the cluster-tier scheduler plugin
+//! (ROM/LDP), deploys onto workers, sweeps worker health, recovers
+//! failures locally and escalates to the root when the cluster cannot.
+
+use std::any::Any;
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::geo::Area;
+use crate::hierarchy::AggregateStats;
+use crate::messaging::{labels, MqttBroker, MQTT_FRAME_OVERHEAD, WS_FRAME_OVERHEAD};
+use crate::model::{Capacity, NodeProfile, ServiceState};
+use crate::netmanager::{InstanceLocation, ServiceIp, SubnetAllocator, TableEntry};
+use crate::scheduler::{
+    LdpContext, LdpScheduler, Placement, PlacementInput, RomScheduler, RomStrategy,
+    TaskScheduler,
+};
+use crate::sim::{Actor, ActorId, Ctx, OakMsg, SimMsg, TimerKind};
+use crate::sla::TaskSla;
+use crate::util::{ClusterId, InstanceId, NodeId, SimTime, TaskId};
+use crate::vivaldi::Coord;
+
+use super::{costs, intervals, mem};
+
+/// Which placement plugin this cluster runs (paper §6: pluggable; each
+/// operator may customize).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum SchedulerKind {
+    RomBestFit,
+    RomFirstFit,
+    Ldp,
+}
+
+#[derive(Clone, Debug)]
+pub struct ClusterConfig {
+    pub id: ClusterId,
+    pub scheduler: SchedulerKind,
+    pub aggregate_interval: SimTime,
+    pub health_interval: SimTime,
+    pub worker_dead_after: SimTime,
+    /// Advertised operation zone.
+    pub area: Option<Area>,
+    /// Gossip fan-out for Vivaldi peer hints.
+    pub peer_hint_size: usize,
+}
+
+impl ClusterConfig {
+    pub fn new(id: ClusterId, scheduler: SchedulerKind) -> Self {
+        ClusterConfig {
+            id,
+            scheduler,
+            aggregate_interval: intervals::cluster_aggregate(),
+            health_interval: intervals::health_sweep(),
+            worker_dead_after: intervals::worker_dead_after(),
+            area: None,
+            peer_hint_size: 3,
+        }
+    }
+}
+
+/// Cluster-side record of one instance it manages.
+#[derive(Clone, Debug)]
+struct LocalInstance {
+    task: TaskId,
+    node: NodeId,
+    state: ServiceState,
+    request: Capacity,
+    sla: TaskSla,
+}
+
+pub struct ClusterOrchestrator {
+    pub cfg: ClusterConfig,
+    root: ActorId,
+    /// Worker table: node → profile (A_n view).
+    pub workers: Vec<NodeProfile>,
+    worker_actors: BTreeMap<NodeId, ActorId>,
+    last_report: BTreeMap<NodeId, SimTime>,
+    pub broker: MqttBroker,
+    subnets: SubnetAllocator,
+    instances: BTreeMap<InstanceId, LocalInstance>,
+    /// Task → running locations within this cluster (LDP context + table
+    /// resolution source).
+    ldp_ctx: LdpContext,
+    /// Workers that requested each task's ServiceIP (paper §5: "any
+    /// future updates to the requested serviceIPs are automatically
+    /// pushed to the worker") — updates go only to interested workers.
+    interest: BTreeMap<TaskId, BTreeSet<NodeId>>,
+    /// In-flight SLA-violation migrations: replacement → original
+    /// instance (the original is undeployed once the replacement runs —
+    /// paper §6: "the previous instance is undeployed" after the migrated
+    /// one becomes operational).
+    migrations: BTreeMap<InstanceId, InstanceId>,
+    /// Last scheduler wall time (reported to root for Fig. 6/8).
+    pub last_calc: SimTime,
+    pub sched_ops: u64,
+    aggregate_ticks: u64,
+    registered: bool,
+    started: bool,
+}
+
+impl ClusterOrchestrator {
+    pub fn new(cfg: ClusterConfig, root: ActorId) -> Self {
+        ClusterOrchestrator {
+            cfg,
+            root,
+            workers: Vec::new(),
+            worker_actors: BTreeMap::new(),
+            last_report: BTreeMap::new(),
+            broker: MqttBroker::default(),
+            subnets: SubnetAllocator::default(),
+            instances: BTreeMap::new(),
+            ldp_ctx: LdpContext::default(),
+            interest: BTreeMap::new(),
+            migrations: BTreeMap::new(),
+            last_calc: SimTime::ZERO,
+            sched_ops: 0,
+            aggregate_ticks: 0,
+            registered: false,
+            started: false,
+        }
+    }
+
+    fn ensure_started(&mut self, ctx: &mut Ctx<'_>) {
+        if !self.started {
+            self.started = true;
+            ctx.add_mem(mem::CLUSTER_BASE_MB);
+            ctx.schedule(
+                self.cfg.aggregate_interval,
+                SimMsg::Timer(TimerKind::ClusterAggregate),
+            );
+            ctx.schedule(
+                self.cfg.health_interval,
+                SimMsg::Timer(TimerKind::HealthSweep),
+            );
+        }
+    }
+
+    /// Register with the root (call once after spawning).
+    pub fn register(&mut self, ctx: &mut Ctx<'_>) {
+        if !self.registered {
+            self.registered = true;
+            let msg = SimMsg::Oak(OakMsg::RegisterCluster {
+                cluster: self.cfg.id,
+                orchestrator: ctx.self_id,
+                parent: crate::hierarchy::ROOT,
+            });
+            let bytes = msg.default_wire_bytes() + WS_FRAME_OVERHEAD;
+            ctx.send(self.root, msg, bytes, labels::CLUSTER_TO_ROOT);
+        }
+    }
+
+    fn profile_mut(&mut self, node: NodeId) -> Option<&mut NodeProfile> {
+        self.workers.iter_mut().find(|w| w.spec.node == node)
+    }
+    fn profile(&self, node: NodeId) -> Option<&NodeProfile> {
+        self.workers.iter().find(|w| w.spec.node == node)
+    }
+
+    /// Run the configured placement plugin over the live worker table.
+    fn run_scheduler(
+        &mut self,
+        ctx: &mut Ctx<'_>,
+        task: TaskId,
+        sla: &TaskSla,
+    ) -> Placement {
+        self.sched_ops += 1;
+        let n = self.workers.len().max(1) as f64;
+        let input = PlacementInput {
+            sla,
+            workers: &self.workers,
+            service_hint: task.service,
+        };
+        let (placement, cost_ms) = match self.cfg.scheduler {
+            SchedulerKind::RomBestFit => (
+                RomScheduler {
+                    strategy: RomStrategy::BestFit,
+                }
+                .place(&input),
+                costs::ROM_PER_WORKER_MS * n,
+            ),
+            SchedulerKind::RomFirstFit => (
+                RomScheduler {
+                    strategy: RomStrategy::FirstFit,
+                }
+                .place(&input),
+                costs::ROM_PER_WORKER_MS * n * 0.5,
+            ),
+            SchedulerKind::Ldp => {
+                let seed = ctx.rng().next_u64();
+                let orch_node = ctx.my_node();
+                // Probe pings are ground-truth network RTTs measured from
+                // candidate workers towards the user's uplink (the
+                // orchestrator node stands in for the user's attachment
+                // point, Alg. 2 line 11). Pre-measure every worker so the
+                // scheduler's ping closure stays pure.
+                let rtts: std::collections::BTreeMap<NodeId, f64> = self
+                    .workers
+                    .iter()
+                    .map(|w| (w.spec.node, ctx.rtt_ms(w.spec.node, orch_node)))
+                    .collect();
+                let probes = sla.s2u.len() as u32;
+                let ping = move |node: NodeId, _c: &crate::sla::S2uConstraint| {
+                    rtts.get(&node).copied().unwrap_or(0.0)
+                };
+                let mut ldp =
+                    LdpScheduler::new(&self.ldp_ctx, Box::new(ping), seed);
+                (
+                    ldp.place(&input),
+                    costs::LDP_PER_WORKER_MS * n
+                        + costs::LDP_TRILATERATION_MS * probes as f64,
+                )
+            }
+        };
+        ctx.charge_cpu(cost_ms);
+        self.last_calc = SimTime::from_millis(cost_ms);
+        placement
+    }
+
+    /// Push the current locations of a task to the workers that either
+    /// host an instance of it or have requested its ServiceIP (paper §5's
+    /// subscription semantics — no cluster-wide broadcast).
+    fn push_table_update(&mut self, ctx: &mut Ctx<'_>, task: TaskId) {
+        let locations = self.locations_of(task);
+        let entry = TableEntry {
+            task,
+            locations,
+        };
+        let mut targets: BTreeSet<NodeId> = self
+            .interest
+            .get(&task)
+            .cloned()
+            .unwrap_or_default();
+        for li in self.instances.values() {
+            if li.task == task {
+                targets.insert(li.node);
+            }
+        }
+        let actors: Vec<ActorId> = targets
+            .iter()
+            .filter_map(|n| self.worker_actors.get(n).copied())
+            .collect();
+        for a in actors {
+            let msg = SimMsg::Oak(OakMsg::TableUpdate {
+                entries: vec![entry.clone()],
+            });
+            let bytes = msg.default_wire_bytes() + MQTT_FRAME_OVERHEAD;
+            ctx.send(a, msg, bytes, labels::CLUSTER_TO_WORKER);
+        }
+    }
+
+    fn locations_of(&self, task: TaskId) -> Vec<InstanceLocation> {
+        self.instances
+            .iter()
+            .filter(|(_, li)| li.task == task && li.state == ServiceState::Running)
+            .map(|(iid, li)| {
+                let rtt = self
+                    .profile(li.node)
+                    .map(|p| p.vivaldi.coord.distance(&Coord([0.0; 4])))
+                    .unwrap_or(0.0);
+                InstanceLocation {
+                    instance: *iid,
+                    task,
+                    node: li.node,
+                    rtt_ms: rtt,
+                }
+            })
+            .collect()
+    }
+
+    /// Update LDP context after placement changes.
+    fn refresh_ldp_target(&mut self, task: TaskId) {
+        let locs: Vec<(crate::geo::GeoPoint, Coord)> = self
+            .instances
+            .values()
+            .filter(|li| li.task == task && li.state == ServiceState::Running)
+            .filter_map(|li| {
+                self.profile(li.node)
+                    .map(|p| (p.spec.location, p.vivaldi.coord))
+            })
+            .collect();
+        if locs.is_empty() {
+            self.ldp_ctx.clear_target(task);
+        } else {
+            self.ldp_ctx.set_target(task, locs);
+        }
+    }
+
+    /// Handle a dead worker: fail its instances, try local re-placement,
+    /// escalate to root when the cluster cannot host them (paper §4.2).
+    fn handle_worker_dead(&mut self, ctx: &mut Ctx<'_>, node: NodeId) {
+        ctx.metrics().inc("cluster.worker_dead");
+        self.workers.retain(|w| w.spec.node != node);
+        self.worker_actors.remove(&node);
+        self.last_report.remove(&node);
+        self.subnets.release(node);
+
+        let affected: Vec<(InstanceId, TaskId, TaskSla)> = self
+            .instances
+            .iter()
+            .filter(|(_, li)| li.node == node && !li.state.is_terminal())
+            .map(|(iid, li)| (*iid, li.task, li.sla.clone()))
+            .collect();
+        for (iid, task, sla) in affected {
+            if let Some(li) = self.instances.get_mut(&iid) {
+                li.state = ServiceState::Failed;
+            }
+            self.refresh_ldp_target(task);
+            self.push_table_update(ctx, task);
+            // Report failure upward, then attempt local recovery.
+            let msg = SimMsg::Oak(OakMsg::InstanceStatus {
+                instance: iid,
+                node,
+                state: ServiceState::Failed,
+            });
+            let bytes = msg.default_wire_bytes() + WS_FRAME_OVERHEAD;
+            ctx.send(self.root, msg, bytes, labels::CLUSTER_TO_ROOT);
+
+            match self.run_scheduler(ctx, task, &sla) {
+                Placement::Placed { worker, .. } => {
+                    // Local recovery: deploy a replacement instance with a
+                    // locally minted id offset (root will reconcile ids on
+                    // its next report; for sim purposes the generation
+                    // bump happens at the root on escalation only).
+                    let new_id = InstanceId(iid.0 | (1 << 63));
+                    self.deploy_to(ctx, new_id, task, sla, worker);
+                    ctx.metrics().inc("cluster.local_recovery");
+                }
+                Placement::Infeasible => {
+                    ctx.metrics().inc("cluster.escalated");
+                    let msg = SimMsg::Oak(OakMsg::EscalateReschedule {
+                        task,
+                        instance: iid,
+                        sla,
+                    });
+                    let bytes = msg.default_wire_bytes() + WS_FRAME_OVERHEAD;
+                    ctx.send(self.root, msg, bytes, labels::CLUSTER_TO_ROOT);
+                }
+            }
+        }
+    }
+
+    /// Begin an SLA-violation migration: find a different worker for the
+    /// instance's task, deploy a replacement there, and remember to
+    /// undeploy the original once the replacement reports Running
+    /// (paper §4.2/§6: migration = rescheduling + deferred teardown).
+    fn start_migration(&mut self, ctx: &mut Ctx<'_>, original: InstanceId) {
+        if self.migrations.values().any(|o| *o == original) {
+            return; // already migrating
+        }
+        let Some(li) = self.instances.get(&original) else {
+            return;
+        };
+        if li.state != ServiceState::Running {
+            return;
+        }
+        let (task, sla, current_node) = (li.task, li.sla.clone(), li.node);
+        // Exclude the violating worker from candidates.
+        let mut others: Vec<NodeProfile> = self
+            .workers
+            .iter()
+            .filter(|w| w.spec.node != current_node)
+            .cloned()
+            .collect();
+        if others.is_empty() {
+            return;
+        }
+        // Run the placement over the reduced table (same plugin).
+        let saved = std::mem::take(&mut self.workers);
+        self.workers = std::mem::take(&mut others);
+        let placement = self.run_scheduler(ctx, task, &sla);
+        self.workers = saved;
+        match placement {
+            Placement::Placed { worker, .. } => {
+                ctx.metrics().inc("cluster.migration_started");
+                let replacement = InstanceId(original.0 | (1 << 62));
+                self.migrations.insert(replacement, original);
+                self.deploy_to(ctx, replacement, task, sla, worker);
+            }
+            Placement::Infeasible => {
+                // Cannot improve locally; escalate (paper §4.2).
+                let msg = SimMsg::Oak(OakMsg::EscalateReschedule {
+                    task,
+                    instance: original,
+                    sla,
+                });
+                let bytes = msg.default_wire_bytes() + WS_FRAME_OVERHEAD;
+                ctx.send(self.root, msg, bytes, labels::CLUSTER_TO_ROOT);
+            }
+        }
+    }
+
+    fn deploy_to(
+        &mut self,
+        ctx: &mut Ctx<'_>,
+        instance: InstanceId,
+        task: TaskId,
+        sla: TaskSla,
+        worker: NodeId,
+    ) {
+        // Reserve capacity eagerly so concurrent placements see it.
+        let request = sla.request();
+        if let Some(p) = self.profile_mut(worker) {
+            p.used += request;
+            p.instances += 1;
+        }
+        self.instances.insert(
+            instance,
+            LocalInstance {
+                task,
+                node: worker,
+                state: ServiceState::Scheduled,
+                request,
+                sla,
+            },
+        );
+        ctx.add_mem(mem::PER_INSTANCE_MB);
+        let actor = self.worker_actors[&worker];
+        let msg = SimMsg::Oak(OakMsg::DeployInstance {
+            instance,
+            task,
+            request,
+            image_mb: 60,
+            service_ips: vec![
+                ServiceIp::RoundRobin(task),
+                ServiceIp::Closest(task),
+            ],
+        });
+        let bytes = msg.default_wire_bytes() + MQTT_FRAME_OVERHEAD;
+        ctx.send(actor, msg, bytes, labels::CLUSTER_TO_WORKER);
+    }
+}
+
+impl Actor for ClusterOrchestrator {
+    fn handle(&mut self, ctx: &mut Ctx<'_>, msg: SimMsg) {
+        self.ensure_started(ctx);
+        match msg {
+            // Driver bootstrap: register with the root.
+            SimMsg::Timer(TimerKind::Custom(0)) => {
+                self.register(ctx);
+            }
+
+            SimMsg::Oak(OakMsg::RegisterClusterAck { accepted }) => {
+                ctx.charge_cpu(costs::PING_MS);
+                if !accepted {
+                    ctx.metrics().inc("cluster.register_rejected");
+                }
+            }
+
+            SimMsg::Oak(OakMsg::RegisterWorker { spec, engine }) => {
+                ctx.charge_cpu(costs::SUBMIT_MS * 0.5);
+                ctx.add_mem(mem::PER_WORKER_MB);
+                let node = spec.node;
+                let subnet = self.subnets.subnet_for(node);
+                self.broker.subscribe(
+                    &format!("cluster/{}/worker/{}/cmd", self.cfg.id.0, node.0),
+                    engine,
+                );
+                self.worker_actors.insert(node, engine);
+                self.last_report.insert(node, ctx.now);
+                self.workers.push(NodeProfile::new(spec));
+                let msg = SimMsg::Oak(OakMsg::RegisterWorkerAck { subnet });
+                let bytes = msg.default_wire_bytes() + MQTT_FRAME_OVERHEAD;
+                ctx.send(engine, msg, bytes, labels::CLUSTER_TO_WORKER);
+            }
+
+            SimMsg::Oak(OakMsg::WorkerReport {
+                node,
+                used,
+                vivaldi,
+                instances,
+            }) => {
+                ctx.charge_cpu(costs::WORKER_REPORT_MS);
+                self.last_report.insert(node, ctx.now);
+                if let Some(p) = self.profile_mut(node) {
+                    p.used = used;
+                    p.vivaldi = vivaldi;
+                }
+                // Reconcile instance states reported by the NodeEngine.
+                let mut changed_tasks = Vec::new();
+                let mut violations: Vec<InstanceId> = Vec::new();
+                for (iid, state, qos_ms) in instances {
+                    let mut forward = None;
+                    if let Some(li) = self.instances.get_mut(&iid) {
+                        if li.state != state {
+                            li.state = state;
+                            forward = Some((li.task, li.node));
+                        }
+                        // SLA violation check (paper §6: observed lapses
+                        // trigger implicit migration as a new scheduling
+                        // request, weighted by rigidness).
+                        let viol = li
+                            .sla
+                            .s2u
+                            .iter()
+                            .any(|c| qos_ms > c.latency_threshold_ms * 1.5);
+                        if viol && li.sla.rigidness > 0.5 && state == ServiceState::Running
+                        {
+                            ctx.metrics().inc("cluster.sla_violation");
+                            violations.push(iid);
+                        }
+                    }
+                    if let Some((task, lnode)) = forward {
+                        changed_tasks.push(task);
+                        let msg = SimMsg::Oak(OakMsg::InstanceStatus {
+                            instance: iid,
+                            node: lnode,
+                            state,
+                        });
+                        let bytes = msg.default_wire_bytes() + WS_FRAME_OVERHEAD;
+                        ctx.send(self.root, msg, bytes, labels::CLUSTER_TO_ROOT);
+                    }
+                }
+                for task in changed_tasks {
+                    self.refresh_ldp_target(task);
+                    self.push_table_update(ctx, task);
+                }
+                for iid in violations {
+                    self.start_migration(ctx, iid);
+                }
+            }
+
+            SimMsg::Oak(OakMsg::InstanceStatus {
+                instance,
+                node,
+                state,
+            }) => {
+                // Direct status from a NodeEngine (deploy ack path).
+                ctx.charge_cpu(costs::WORKER_REPORT_MS);
+                // Migration completion: the replacement is operational →
+                // terminate the original (paper §6).
+                if state == ServiceState::Running {
+                    if let Some(original) = self.migrations.remove(&instance) {
+                        ctx.metrics().inc("cluster.migration_completed");
+                        let undeploy = SimMsg::Oak(OakMsg::UndeployInstance {
+                            instance: original,
+                        });
+                        ctx.send_local(ctx.self_id, undeploy);
+                    }
+                }
+                let mut task_changed = None;
+                if let Some(li) = self.instances.get_mut(&instance) {
+                    if li.state != state {
+                        li.state = state;
+                        task_changed = Some(li.task);
+                    }
+                    if state.is_terminal() {
+                        let request = li.request;
+                        let lnode = li.node;
+                        if let Some(p) = self.profile_mut(lnode) {
+                            p.used -= request;
+                            p.instances = p.instances.saturating_sub(1);
+                        }
+                    }
+                }
+                if let Some(task) = task_changed {
+                    self.refresh_ldp_target(task);
+                    self.push_table_update(ctx, task);
+                    let msg = SimMsg::Oak(OakMsg::InstanceStatus {
+                        instance,
+                        node,
+                        state,
+                    });
+                    let bytes = msg.default_wire_bytes() + WS_FRAME_OVERHEAD;
+                    ctx.send(self.root, msg, bytes, labels::CLUSTER_TO_ROOT);
+                }
+            }
+
+            SimMsg::Oak(OakMsg::DelegateTask {
+                task,
+                instance,
+                sla,
+                attempt: _,
+            }) => {
+                let placement = self.run_scheduler(ctx, task, &sla);
+                let calc_time = self.last_calc;
+                match placement {
+                    Placement::Placed { worker, .. } => {
+                        self.deploy_to(ctx, instance, task, sla, worker);
+                        let msg = SimMsg::Oak(OakMsg::DelegationResult {
+                            task,
+                            instance,
+                            worker: Some(worker),
+                            calc_time,
+                        });
+                        let bytes = msg.default_wire_bytes() + WS_FRAME_OVERHEAD;
+                        ctx.send(self.root, msg, bytes, labels::CLUSTER_TO_ROOT);
+                    }
+                    Placement::Infeasible => {
+                        ctx.metrics().inc("cluster.infeasible");
+                        let msg = SimMsg::Oak(OakMsg::DelegationResult {
+                            task,
+                            instance,
+                            worker: None,
+                            calc_time,
+                        });
+                        let bytes = msg.default_wire_bytes() + WS_FRAME_OVERHEAD;
+                        ctx.send(self.root, msg, bytes, labels::CLUSTER_TO_ROOT);
+                    }
+                }
+            }
+
+            SimMsg::Oak(OakMsg::UndeployInstance { instance }) => {
+                if let Some(li) = self.instances.get(&instance) {
+                    let actor = self.worker_actors.get(&li.node).copied();
+                    if let Some(a) = actor {
+                        let msg = SimMsg::Oak(OakMsg::UndeployInstance { instance });
+                        let bytes = msg.default_wire_bytes() + MQTT_FRAME_OVERHEAD;
+                        ctx.send(a, msg, bytes, labels::CLUSTER_TO_WORKER);
+                    }
+                }
+            }
+
+            SimMsg::Oak(OakMsg::ResolveIp { from, query }) => {
+                ctx.charge_cpu(costs::TABLE_OP_MS);
+                if let Some(task) = query.task() {
+                    self.interest.entry(task).or_default().insert(from);
+                    let locations = self.locations_of(task);
+                    if locations.is_empty() {
+                        // Recursive resolution up the hierarchy (§5).
+                        let msg = SimMsg::Oak(OakMsg::ResolveIpUp {
+                            cluster: self.cfg.id,
+                            from,
+                            query,
+                        });
+                        let bytes = msg.default_wire_bytes() + WS_FRAME_OVERHEAD;
+                        ctx.send(self.root, msg, bytes, labels::CLUSTER_TO_ROOT);
+                    } else if let Some(actor) = self.worker_actors.get(&from) {
+                        let msg = SimMsg::Oak(OakMsg::TableUpdate {
+                            entries: vec![TableEntry {
+                                task,
+                                locations,
+                            }],
+                        });
+                        let bytes = msg.default_wire_bytes() + MQTT_FRAME_OVERHEAD;
+                        ctx.send(*actor, msg, bytes, labels::CLUSTER_TO_WORKER);
+                    }
+                }
+            }
+
+            SimMsg::Oak(OakMsg::TableUpdate { entries }) => {
+                // Root answered a recursive resolution: fan out to the
+                // workers interested in the resolved tasks.
+                ctx.charge_cpu(costs::TABLE_OP_MS);
+                let mut targets: BTreeSet<NodeId> = BTreeSet::new();
+                for e in &entries {
+                    if let Some(set) = self.interest.get(&e.task) {
+                        targets.extend(set.iter().copied());
+                    }
+                }
+                let actors: Vec<ActorId> = targets
+                    .iter()
+                    .filter_map(|n| self.worker_actors.get(n).copied())
+                    .collect();
+                for a in actors {
+                    let msg = SimMsg::Oak(OakMsg::TableUpdate {
+                        entries: entries.clone(),
+                    });
+                    let bytes = msg.default_wire_bytes() + MQTT_FRAME_OVERHEAD;
+                    ctx.send(a, msg, bytes, labels::CLUSTER_TO_WORKER);
+                }
+            }
+
+            SimMsg::Oak(OakMsg::Ping) => {
+                ctx.charge_cpu(costs::PING_MS);
+                let msg = SimMsg::Oak(OakMsg::Pong);
+                let bytes = msg.default_wire_bytes() + WS_FRAME_OVERHEAD;
+                ctx.send(self.root, msg, bytes, labels::CLUSTER_TO_ROOT);
+            }
+
+            SimMsg::Timer(TimerKind::ClusterAggregate) => {
+                ctx.charge_cpu(costs::AGGREGATE_MS);
+                // Aggregate over *available* capacities A_n = C_n − U_n.
+                let avail: Vec<(Capacity, crate::model::Virtualization)> = self
+                    .workers
+                    .iter()
+                    .map(|w| (w.available(), w.spec.virtualization()))
+                    .collect();
+                let stats = AggregateStats::from_workers(
+                    avail.iter().map(|(c, v)| (c, *v)),
+                    self.cfg.area,
+                );
+                let running = self
+                    .instances
+                    .values()
+                    .filter(|li| li.state == ServiceState::Running)
+                    .count();
+                let msg = SimMsg::Oak(OakMsg::ClusterReport {
+                    cluster: self.cfg.id,
+                    stats,
+                    running_instances: running,
+                });
+                let bytes = msg.default_wire_bytes() + WS_FRAME_OVERHEAD;
+                ctx.send(self.root, msg, bytes, labels::CLUSTER_TO_ROOT);
+
+                // Vivaldi gossip: send each worker a small peer sample
+                // (every 4th tick — membership changes slowly).
+                self.aggregate_ticks += 1;
+                let n = self.workers.len();
+                if n > 1 && self.aggregate_ticks % 4 == 1 {
+                    let hints: Vec<(NodeId, ActorId)> = self
+                        .worker_actors
+                        .iter()
+                        .map(|(n, a)| (*n, *a))
+                        .collect();
+                    for (node, actor) in hints {
+                        let mut peers = Vec::new();
+                        for _ in 0..self.cfg.peer_hint_size {
+                            let i = ctx.rng().below(n);
+                            let p = &self.workers[i];
+                            if p.spec.node != node {
+                                peers.push((p.spec.node, p.vivaldi));
+                            }
+                        }
+                        if !peers.is_empty() {
+                            let msg = SimMsg::Oak(OakMsg::PeerHint { peers });
+                            let bytes = msg.default_wire_bytes() + MQTT_FRAME_OVERHEAD;
+                            ctx.send(actor, msg, bytes, labels::CLUSTER_TO_WORKER);
+                        }
+                    }
+                }
+                ctx.schedule(
+                    self.cfg.aggregate_interval,
+                    SimMsg::Timer(TimerKind::ClusterAggregate),
+                );
+            }
+
+            SimMsg::Timer(TimerKind::HealthSweep) => {
+                ctx.charge_cpu(costs::IDLE_TICK_MS);
+                let dead: Vec<NodeId> = self
+                    .last_report
+                    .iter()
+                    .filter(|(_, at)| {
+                        ctx.now.saturating_sub(**at) >= self.cfg.worker_dead_after
+                    })
+                    .map(|(n, _)| *n)
+                    .collect();
+                for node in dead {
+                    self.handle_worker_dead(ctx, node);
+                }
+                ctx.schedule(
+                    self.cfg.health_interval,
+                    SimMsg::Timer(TimerKind::HealthSweep),
+                );
+            }
+
+            _ => {}
+        }
+    }
+
+    fn as_any(&self) -> &dyn Any {
+        self
+    }
+    fn as_any_mut(&mut self) -> &mut dyn Any {
+        self
+    }
+}
+
+// Re-export for WorkerSpec construction convenience in benches.

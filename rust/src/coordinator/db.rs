@@ -1,0 +1,221 @@
+//! The root database (paper §3.2.1): current state of all submitted
+//! services and reported operational information from clusters.
+
+use std::collections::HashMap;
+
+use crate::model::{InstanceRecord, ServiceSpec, ServiceState, TaskSpec};
+use crate::sla::ServiceSla;
+use crate::util::{ClusterId, InstanceId, NodeId, ServiceId, SimTime, TaskId};
+
+/// Root-side record of one submitted service.
+#[derive(Clone, Debug)]
+pub struct ServiceRecord {
+    pub spec: ServiceSpec,
+    pub sla: ServiceSla,
+    pub submitted_at: SimTime,
+    /// All instances ever created for this service (incl. migrations).
+    pub instances: Vec<InstanceRecord>,
+    /// Which cluster each live instance was delegated to.
+    pub placement: HashMap<InstanceId, ClusterId>,
+}
+
+impl ServiceRecord {
+    /// The service counts as deployed when every task has ≥1 Running
+    /// instance.
+    pub fn fully_running(&self) -> bool {
+        self.spec.tasks.iter().all(|t| {
+            self.instances
+                .iter()
+                .any(|i| i.task == t.id && i.state == ServiceState::Running)
+        })
+    }
+
+    pub fn instance_mut(&mut self, id: InstanceId) -> Option<&mut InstanceRecord> {
+        self.instances.iter_mut().find(|i| i.instance == id)
+    }
+
+    pub fn instance(&self, id: InstanceId) -> Option<&InstanceRecord> {
+        self.instances.iter().find(|i| i.instance == id)
+    }
+}
+
+/// In-memory service database with id minting.
+#[derive(Clone, Debug, Default)]
+pub struct ServiceDb {
+    services: HashMap<ServiceId, ServiceRecord>,
+    next_service: u32,
+    next_instance: u64,
+}
+
+impl ServiceDb {
+    /// Register a validated SLA as a new service; returns the id and the
+    /// freshly minted per-task instances (all `Requested`).
+    pub fn register(&mut self, sla: ServiceSla, now: SimTime) -> (ServiceId, Vec<InstanceId>) {
+        let id = ServiceId(self.next_service);
+        self.next_service += 1;
+
+        let tasks: Vec<TaskSpec> = sla
+            .constraints
+            .iter()
+            .enumerate()
+            .map(|(i, row)| TaskSpec {
+                id: TaskId {
+                    service: id,
+                    index: i as u16,
+                },
+                name: format!("{}-{}", sla.name, i),
+                request: row.request(),
+                virtualization: row
+                    .virtualization_mask()
+                    .unwrap_or(crate::model::Virtualization::CONTAINER),
+                image_mb: 50 + 10 * i as u32,
+                sla: row.clone(),
+            })
+            .collect();
+
+        let mut instances = Vec::new();
+        let mut ids = Vec::new();
+        for t in &tasks {
+            let iid = InstanceId(self.next_instance);
+            self.next_instance += 1;
+            instances.push(InstanceRecord::new(iid, t.id));
+            ids.push(iid);
+        }
+
+        self.services.insert(
+            id,
+            ServiceRecord {
+                spec: ServiceSpec {
+                    id,
+                    name: sla.name.clone(),
+                    tasks,
+                },
+                sla,
+                submitted_at: now,
+                instances,
+                placement: HashMap::new(),
+            },
+        );
+        (id, ids)
+    }
+
+    /// Mint a replacement instance for a task (rescheduling/migration/
+    /// replication — paper §4.2/§6).
+    pub fn mint_replacement(&mut self, task: TaskId) -> Option<InstanceId> {
+        let rec = self.services.get_mut(&task.service)?;
+        let iid = InstanceId(self.next_instance);
+        self.next_instance += 1;
+        let mut inst = InstanceRecord::new(iid, task);
+        inst.generation = rec
+            .instances
+            .iter()
+            .filter(|i| i.task == task)
+            .map(|i| i.generation + 1)
+            .max()
+            .unwrap_or(0);
+        rec.instances.push(inst);
+        Some(iid)
+    }
+
+    pub fn service(&self, id: ServiceId) -> Option<&ServiceRecord> {
+        self.services.get(&id)
+    }
+    pub fn service_mut(&mut self, id: ServiceId) -> Option<&mut ServiceRecord> {
+        self.services.get_mut(&id)
+    }
+    pub fn services(&self) -> impl Iterator<Item = &ServiceRecord> {
+        self.services.values()
+    }
+    pub fn len(&self) -> usize {
+        self.services.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.services.is_empty()
+    }
+
+    /// All running locations of a task across clusters (root-tier
+    /// ServiceIP resolution, paper §5 recursive table refresh).
+    pub fn running_locations(&self, task: TaskId) -> Vec<(InstanceId, NodeId)> {
+        self.services
+            .get(&task.service)
+            .map(|rec| {
+                rec.instances
+                    .iter()
+                    .filter(|i| i.task == task && i.state == ServiceState::Running)
+                    .filter_map(|i| i.worker.map(|w| (i.instance, w)))
+                    .collect()
+            })
+            .unwrap_or_default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sla::simple_sla;
+
+    #[test]
+    fn register_creates_instances_per_task() {
+        let mut db = ServiceDb::default();
+        let mut sla = simple_sla("app", 1000, 100);
+        sla.constraints.push(sla.constraints[0].clone());
+        let (id, ids) = db.register(sla, SimTime::ZERO);
+        assert_eq!(ids.len(), 2);
+        let rec = db.service(id).unwrap();
+        assert_eq!(rec.spec.tasks.len(), 2);
+        assert!(!rec.fully_running());
+        // Ids unique and sequential per registration.
+        let (_, ids2) = db.register(simple_sla("b", 500, 64), SimTime::ZERO);
+        assert!(ids2[0] > ids[1]);
+    }
+
+    #[test]
+    fn fully_running_requires_every_task() {
+        let mut db = ServiceDb::default();
+        let mut sla = simple_sla("app", 1000, 100);
+        sla.constraints.push(sla.constraints[0].clone());
+        let (id, ids) = db.register(sla, SimTime::ZERO);
+        for (k, iid) in ids.iter().enumerate() {
+            {
+                let rec = db.service_mut(id).unwrap();
+                let inst = rec.instance_mut(*iid).unwrap();
+                inst.transition(ServiceState::Scheduled).unwrap();
+                inst.worker = Some(NodeId(k as u32));
+                inst.transition(ServiceState::Running).unwrap();
+            }
+            if k == 0 {
+                assert!(!db.service(id).unwrap().fully_running());
+            }
+        }
+        assert!(db.service(id).unwrap().fully_running());
+        assert_eq!(
+            db.running_locations(TaskId {
+                service: id,
+                index: 1
+            })
+            .len(),
+            1
+        );
+    }
+
+    #[test]
+    fn replacement_bumps_generation() {
+        let mut db = ServiceDb::default();
+        let (id, _) = db.register(simple_sla("app", 1000, 100), SimTime::ZERO);
+        let task = TaskId {
+            service: id,
+            index: 0,
+        };
+        let r1 = db.mint_replacement(task).unwrap();
+        let r2 = db.mint_replacement(task).unwrap();
+        let rec = db.service(id).unwrap();
+        assert_eq!(rec.instance(r1).unwrap().generation, 1);
+        assert_eq!(rec.instance(r2).unwrap().generation, 2);
+        assert!(db
+            .mint_replacement(TaskId {
+                service: ServiceId(99),
+                index: 0
+            })
+            .is_none());
+    }
+}

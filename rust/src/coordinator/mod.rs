@@ -1,0 +1,109 @@
+//! The Oakestra control plane (paper §3): root orchestrator, cluster
+//! orchestrators and worker NodeEngines as simulation actors speaking the
+//! [`crate::sim::OakMsg`] protocol over MQTT-like (intra-cluster) and
+//! WebSocket-like (inter-cluster) transports.
+//!
+//! Responsibilities follow Fig. 1:
+//! * [`RootOrchestrator`] — system manager + service manager + database:
+//!   cluster registry, SLA intake, root-tier scheduling (priority list of
+//!   clusters), delegation, service lifecycle tracking, recursive
+//!   ServiceIP resolution, liveness of cluster links.
+//! * [`ClusterOrchestrator`] — logical twin of the root scoped to one
+//!   cluster: worker registry + telemetry ingestion, cluster-tier
+//!   scheduling (ROM/LDP plugins), deployment, health sweeps, failure
+//!   recovery and migration, conversion-table resolution.
+//! * [`WorkerEngine`] — NodeEngine + NetManager on each worker: telemetry
+//!   governor, Vivaldi updates, container deploy/undeploy, semantic
+//!   addressing (conversion table, ProxyTUN, mDNS), data-plane serving.
+
+mod cluster;
+mod db;
+mod root;
+mod worker;
+
+pub use cluster::{ClusterConfig, ClusterOrchestrator, SchedulerKind};
+pub use db::{ServiceDb, ServiceRecord};
+pub use root::{RootConfig, RootOrchestrator};
+pub use worker::{WorkerConfig, WorkerEngine};
+
+use crate::util::SimTime;
+
+/// Control-plane CPU cost model, in milliseconds of one x86 core, charged
+/// through [`crate::sim::Ctx::charge_cpu`]. These are Oakestra-side costs;
+/// the baselines carry their own (heavier) tables in
+/// [`crate::baselines::costs`]. Values are small because the paper's
+/// measurement shows Oakestra's idle control plane at ~0.1–0.5% CPU.
+pub mod costs {
+    /// Parse + apply one worker telemetry report.
+    pub const WORKER_REPORT_MS: f64 = 0.08;
+    /// NodeEngine housekeeping per telemetry tick (2 s): stats collection,
+    /// MQTT client, Vivaldi updates. ~0.1% of a core — the paper's ≈6×
+    /// worker-CPU advantage over K3s comes from here vs kubelet ticks.
+    pub const WORKER_TICK_MS: f64 = 4.0;
+    /// Worker-side per-hosted-instance monitoring per tick (container
+    /// stats via runtime API; 100 containers ≈ 65% of an S VM, leaving
+    /// ~30% available — Fig. 7b).
+    pub const PER_INSTANCE_TICK_MS: f64 = 13.0;
+    /// Produce one aggregate + push to parent.
+    pub const AGGREGATE_MS: f64 = 2.5;
+    /// Root-side handling of a cluster report.
+    pub const CLUSTER_REPORT_MS: f64 = 0.12;
+    /// SLA validation + service registration at the root.
+    pub const SUBMIT_MS: f64 = 0.8;
+    /// Root scheduling: per candidate cluster scored.
+    pub const ROOT_SCHED_PER_CLUSTER_MS: f64 = 0.02;
+    /// Cluster scheduling: per worker scored (ROM).
+    pub const ROM_PER_WORKER_MS: f64 = 0.012;
+    /// Cluster scheduling: per worker scored (LDP, distance math).
+    pub const LDP_PER_WORKER_MS: f64 = 0.055;
+    /// LDP per S2U trilateration (fixed GD solve).
+    pub const LDP_TRILATERATION_MS: f64 = 0.9;
+    /// Worker-side deploy bookkeeping (excl. container runtime itself).
+    pub const DEPLOY_MS: f64 = 0.5;
+    /// NetManager table resolution / update application.
+    pub const TABLE_OP_MS: f64 = 0.03;
+    /// Idle loop tick of any Oakestra component (health sweep, liveness).
+    pub const IDLE_TICK_MS: f64 = 5.0;
+    /// Liveness ping handling.
+    pub const PING_MS: f64 = 0.01;
+}
+
+/// Resident-set sizes of the components in MB (paper Fig. 4c: Oakestra's
+/// worker footprint ≈ tens of MB vs hundreds for kubelet).
+pub mod mem {
+    /// Root: Python services + database.
+    pub const ROOT_BASE_MB: f64 = 410.0;
+    /// Cluster orchestrator: Python twin + MQTT broker + local DB — ≈33%
+    /// below the K3s master (paper Fig. 4c).
+    pub const CLUSTER_BASE_MB: f64 = 330.0;
+    /// NodeEngine + NetManager (Go): ≈18% below the K3s agent (Fig. 4c).
+    pub const WORKER_BASE_MB: f64 = 130.0;
+    /// Bookkeeping per tracked service instance.
+    pub const PER_INSTANCE_MB: f64 = 0.6;
+    /// Per registered worker at the cluster orchestrator.
+    pub const PER_WORKER_MB: f64 = 0.8;
+}
+
+/// Default control-loop periods.
+pub mod intervals {
+    use super::SimTime;
+    pub fn worker_telemetry() -> SimTime {
+        SimTime::from_secs(2.0)
+    }
+    pub fn cluster_aggregate() -> SimTime {
+        SimTime::from_secs(5.0)
+    }
+    pub fn health_sweep() -> SimTime {
+        SimTime::from_secs(5.0)
+    }
+    pub fn liveness_ping() -> SimTime {
+        SimTime::from_secs(5.0)
+    }
+    pub fn tunnel_gc() -> SimTime {
+        SimTime::from_secs(30.0)
+    }
+    /// Worker considered dead after this much report silence.
+    pub fn worker_dead_after() -> SimTime {
+        SimTime::from_secs(12.0)
+    }
+}

@@ -1,0 +1,410 @@
+//! Root orchestrator (paper §3.2.1): the centralized control plane.
+//! System manager (cluster registry, liveness), service manager (SLA
+//! intake, lifecycle, remedial actions) and root scheduler (cluster
+//! priority lists + delegation) over the [`crate::coordinator::db`].
+
+use std::any::Any;
+use std::collections::BTreeMap;
+
+use crate::hierarchy::{ClusterTree, ROOT};
+use crate::messaging::{labels, WsLink, WS_FRAME_OVERHEAD};
+use crate::model::ServiceState;
+use crate::scheduler::rank_clusters;
+use crate::sim::{Actor, ActorId, Ctx, OakMsg, SimMsg, TimerKind};
+use crate::sla::TaskSla;
+use crate::util::{ClusterId, InstanceId, ServiceId, SimTime, TaskId};
+
+use super::db::ServiceDb;
+use super::{costs, intervals, mem};
+
+/// Root tunables.
+#[derive(Clone, Debug)]
+pub struct RootConfig {
+    /// How many clusters from the priority list to try before failing a
+    /// task (paper: iterate the list highest-priority-first).
+    pub max_delegation_attempts: u32,
+    pub liveness_interval: SimTime,
+}
+
+impl Default for RootConfig {
+    fn default() -> Self {
+        RootConfig {
+            max_delegation_attempts: 4,
+            liveness_interval: intervals::liveness_ping(),
+        }
+    }
+}
+
+/// In-flight delegation bookkeeping for one task instance.
+#[derive(Clone, Debug)]
+struct PendingDelegation {
+    task: TaskId,
+    sla: TaskSla,
+    /// Remaining candidate clusters (highest priority first).
+    remaining: Vec<ClusterId>,
+    attempt: u32,
+}
+
+/// Per-service deployment tracking for driver callbacks.
+#[derive(Clone, Debug)]
+struct DeployTracking {
+    reply_to: Option<ActorId>,
+    submitted_at: SimTime,
+    notified: bool,
+}
+
+pub struct RootOrchestrator {
+    pub cfg: RootConfig,
+    pub tree: ClusterTree,
+    /// ClusterId → orchestrator actor.
+    cluster_actors: BTreeMap<ClusterId, ActorId>,
+    links: BTreeMap<ClusterId, WsLink>,
+    pub db: ServiceDb,
+    pending: BTreeMap<InstanceId, PendingDelegation>,
+    tracking: BTreeMap<ServiceId, DeployTracking>,
+    /// Scheduling decisions taken (for Fig. 6 instrumentation).
+    pub root_sched_ops: u64,
+    started: bool,
+}
+
+impl RootOrchestrator {
+    pub fn new(cfg: RootConfig) -> Self {
+        RootOrchestrator {
+            cfg,
+            tree: ClusterTree::new(),
+            cluster_actors: BTreeMap::new(),
+            links: BTreeMap::new(),
+            db: ServiceDb::default(),
+            pending: BTreeMap::new(),
+            tracking: BTreeMap::new(),
+            root_sched_ops: 0,
+            started: false,
+        }
+    }
+
+    fn ensure_started(&mut self, ctx: &mut Ctx<'_>) {
+        if !self.started {
+            self.started = true;
+            ctx.add_mem(mem::ROOT_BASE_MB);
+            ctx.schedule(self.cfg.liveness_interval, SimMsg::Timer(TimerKind::LivenessPing));
+        }
+    }
+
+    /// Root-tier scheduling step (paper §4.2 step 1): rank clusters for a
+    /// task and delegate to the best; on later attempts continue down the
+    /// priority list.
+    fn delegate(&mut self, ctx: &mut Ctx<'_>, instance: InstanceId, task: TaskId, sla: TaskSla) {
+        let stats: Vec<(ClusterId, &crate::hierarchy::AggregateStats)> = self
+            .tree
+            .children_of(ROOT)
+            .iter()
+            .filter_map(|c| self.tree.stats(*c).map(|s| (*c, s)))
+            .collect();
+        ctx.charge_cpu(costs::ROOT_SCHED_PER_CLUSTER_MS * stats.len().max(1) as f64);
+        self.root_sched_ops += 1;
+
+        let ranked = rank_clusters(&sla, &stats);
+        let remaining: Vec<ClusterId> = ranked
+            .iter()
+            .take(self.cfg.max_delegation_attempts as usize)
+            .map(|c| c.cluster)
+            .collect();
+
+        let mut pd = PendingDelegation {
+            task,
+            sla,
+            remaining,
+            attempt: 0,
+        };
+        if let Some(next) = pd.remaining.first().copied() {
+            pd.remaining.remove(0);
+            let actor = self.cluster_actors[&next];
+            let msg = SimMsg::Oak(OakMsg::DelegateTask {
+                task,
+                instance,
+                sla: pd.sla.clone(),
+                attempt: pd.attempt,
+            });
+            let bytes = msg.default_wire_bytes() + WS_FRAME_OVERHEAD;
+            if let Some(rec) = self.db.service_mut(task.service) {
+                rec.placement.insert(instance, next);
+            }
+            self.pending.insert(instance, pd);
+            ctx.send(actor, msg, bytes, labels::ROOT_TO_CLUSTER);
+        } else {
+            // No candidate clusters at all: the task fails immediately.
+            self.fail_instance(ctx, instance, task);
+        }
+    }
+
+    fn fail_instance(&mut self, ctx: &mut Ctx<'_>, instance: InstanceId, task: TaskId) {
+        ctx.metrics().inc("root.placement_failed");
+        if let Some(rec) = self.db.service_mut(task.service) {
+            if let Some(inst) = rec.instance_mut(instance) {
+                let _ = inst.transition(ServiceState::Failed);
+            }
+        }
+        self.pending.remove(&instance);
+    }
+
+    fn maybe_notify_deployed(&mut self, ctx: &mut Ctx<'_>, service: ServiceId) {
+        let Some(rec) = self.db.service(service) else {
+            return;
+        };
+        if !rec.fully_running() {
+            return;
+        }
+        let submitted = rec.submitted_at;
+        if let Some(tr) = self.tracking.get_mut(&service) {
+            if tr.notified {
+                return;
+            }
+            tr.notified = true;
+            let elapsed = ctx.now.saturating_sub(submitted);
+            ctx.metrics().observe("root.deploy_time_ms", elapsed.as_millis());
+            if let Some(dst) = tr.reply_to {
+                ctx.send_local(
+                    dst,
+                    SimMsg::Oak(OakMsg::ServiceDeployed { service, elapsed }),
+                );
+            }
+        }
+    }
+}
+
+impl Actor for RootOrchestrator {
+    fn handle(&mut self, ctx: &mut Ctx<'_>, msg: SimMsg) {
+        self.ensure_started(ctx);
+        match msg {
+            SimMsg::Oak(OakMsg::RegisterCluster {
+                cluster,
+                orchestrator,
+                parent,
+            }) => {
+                ctx.charge_cpu(costs::SUBMIT_MS);
+                let accepted = self.tree.attach(cluster, parent).is_ok();
+                if accepted {
+                    self.cluster_actors.insert(cluster, orchestrator);
+                    self.links.insert(cluster, WsLink::new(ctx.now));
+                }
+                let msg = SimMsg::Oak(OakMsg::RegisterClusterAck { accepted });
+                let bytes = msg.default_wire_bytes() + WS_FRAME_OVERHEAD;
+                ctx.send(orchestrator, msg, bytes, labels::ROOT_TO_CLUSTER);
+            }
+
+            SimMsg::Oak(OakMsg::ClusterReport {
+                cluster,
+                stats,
+                running_instances,
+            }) => {
+                ctx.charge_cpu(costs::CLUSTER_REPORT_MS);
+                let _ = self.tree.update_stats(cluster, stats);
+                if let Some(l) = self.links.get_mut(&cluster) {
+                    l.on_activity(ctx.now);
+                }
+                ctx.metrics()
+                    .add("root.instances_reported", running_instances as u64);
+            }
+
+            SimMsg::Oak(OakMsg::SubmitService { sla, reply_to }) => {
+                ctx.charge_cpu(costs::SUBMIT_MS);
+                if sla.validate().is_err() {
+                    ctx.metrics().inc("root.sla_rejected");
+                    return;
+                }
+                ctx.add_mem(mem::PER_INSTANCE_MB * sla.constraints.len() as f64);
+                let (service, instances) = self.db.register(sla, ctx.now);
+                self.tracking.insert(
+                    service,
+                    DeployTracking {
+                        reply_to,
+                        submitted_at: ctx.now,
+                        notified: false,
+                    },
+                );
+                // Delegate every task (deploy order = SLA order so that
+                // S2S chain targets usually exist by dependents' turn).
+                let rec = self.db.service(service).unwrap();
+                let work: Vec<(InstanceId, TaskId, TaskSla)> = rec
+                    .instances
+                    .iter()
+                    .zip(rec.spec.tasks.iter())
+                    .map(|(inst, t)| (inst.instance, t.id, t.sla.clone()))
+                    .collect();
+                debug_assert_eq!(work.len(), instances.len());
+                for (iid, tid, sla) in work {
+                    self.delegate(ctx, iid, tid, sla);
+                }
+            }
+
+            SimMsg::Oak(OakMsg::DelegationResult {
+                task,
+                instance,
+                worker,
+                calc_time,
+            }) => {
+                ctx.charge_cpu(costs::CLUSTER_REPORT_MS);
+                ctx.metrics()
+                    .observe("root.cluster_calc_ms", calc_time.as_millis());
+                match worker {
+                    Some(node) => {
+                        self.pending.remove(&instance);
+                        if let Some(rec) = self.db.service_mut(task.service) {
+                            if let Some(inst) = rec.instance_mut(instance) {
+                                if inst.state == ServiceState::Requested {
+                                    let _ = inst.transition(ServiceState::Scheduled);
+                                }
+                                inst.worker = Some(node);
+                            }
+                        }
+                    }
+                    None => {
+                        // Try next cluster in the priority list (§4.2
+                        // multi-cluster spill).
+                        if let Some(mut pd) = self.pending.remove(&instance) {
+                            pd.attempt += 1;
+                            if let Some(next) = pd.remaining.first().copied() {
+                                pd.remaining.remove(0);
+                                let actor = self.cluster_actors[&next];
+                                let msg = SimMsg::Oak(OakMsg::DelegateTask {
+                                    task,
+                                    instance,
+                                    sla: pd.sla.clone(),
+                                    attempt: pd.attempt,
+                                });
+                                let bytes =
+                                    msg.default_wire_bytes() + WS_FRAME_OVERHEAD;
+                                if let Some(rec) = self.db.service_mut(task.service) {
+                                    rec.placement.insert(instance, next);
+                                }
+                                self.pending.insert(instance, pd);
+                                ctx.send(actor, msg, bytes, labels::ROOT_TO_CLUSTER);
+                            } else {
+                                self.fail_instance(ctx, instance, task);
+                            }
+                        }
+                    }
+                }
+            }
+
+            SimMsg::Oak(OakMsg::InstanceStatus {
+                instance,
+                node,
+                state,
+            }) => {
+                ctx.charge_cpu(costs::CLUSTER_REPORT_MS);
+                // Find owning service (instance ids are globally unique).
+                let service = self
+                    .db
+                    .services()
+                    .find(|r| r.instance(instance).is_some())
+                    .map(|r| r.spec.id);
+                if let Some(sid) = service {
+                    if let Some(rec) = self.db.service_mut(sid) {
+                        if let Some(inst) = rec.instance_mut(instance) {
+                            inst.worker = Some(node);
+                            if inst.state != state && inst.state.can_transition(state) {
+                                let _ = inst.transition(state);
+                            }
+                        }
+                    }
+                    if state == ServiceState::Running {
+                        self.maybe_notify_deployed(ctx, sid);
+                    }
+                }
+            }
+
+            SimMsg::Oak(OakMsg::ReplicateTask { task }) => {
+                // Replication = a fresh scheduling request for the same
+                // task; the original instance keeps running (§6).
+                ctx.charge_cpu(costs::SUBMIT_MS * 0.5);
+                let sla = self
+                    .db
+                    .service(task.service)
+                    .and_then(|rec| rec.spec.task(task).map(|t| t.sla.clone()));
+                if let (Some(sla), Some(new_id)) = (sla, self.db.mint_replacement(task)) {
+                    ctx.metrics().inc("root.replications");
+                    self.delegate(ctx, new_id, task, sla);
+                }
+            }
+
+            SimMsg::Oak(OakMsg::EscalateReschedule {
+                task,
+                instance: _,
+                sla,
+            }) => {
+                // Cluster could not recover locally: root re-runs the
+                // priority-list scheduling with a fresh instance (§4.2).
+                if let Some(new_id) = self.db.mint_replacement(task) {
+                    ctx.metrics().inc("root.reschedules");
+                    self.delegate(ctx, new_id, task, sla);
+                }
+            }
+
+            SimMsg::Oak(OakMsg::ResolveIpUp {
+                cluster,
+                from,
+                query,
+            }) => {
+                ctx.charge_cpu(costs::TABLE_OP_MS);
+                if let Some(task) = query.task() {
+                    let locs: Vec<crate::netmanager::InstanceLocation> = self
+                        .db
+                        .running_locations(task)
+                        .into_iter()
+                        .map(|(instance, node)| crate::netmanager::InstanceLocation {
+                            instance,
+                            task,
+                            node,
+                            rtt_ms: 0.0,
+                        })
+                        .collect();
+                    if let Some(actor) = self.cluster_actors.get(&cluster) {
+                        let msg = SimMsg::Oak(OakMsg::TableUpdate {
+                            entries: vec![crate::netmanager::TableEntry {
+                                task,
+                                locations: locs,
+                            }],
+                        });
+                        let bytes = msg.default_wire_bytes() + WS_FRAME_OVERHEAD;
+                        ctx.send(*actor, msg, bytes, labels::ROOT_TO_CLUSTER);
+                    }
+                    let _ = from;
+                }
+            }
+
+            SimMsg::Oak(OakMsg::Pong) => {
+                ctx.charge_cpu(costs::PING_MS);
+                // Activity tracking is per-cluster; pongs arrive tagged by
+                // transport in a full implementation. Reports double as
+                // liveness here (on_activity in ClusterReport).
+            }
+
+            SimMsg::Timer(TimerKind::LivenessPing) => {
+                ctx.charge_cpu(costs::IDLE_TICK_MS);
+                let actors: Vec<ActorId> = self.cluster_actors.values().copied().collect();
+                for a in actors {
+                    let msg = SimMsg::Oak(OakMsg::Ping);
+                    let bytes = msg.default_wire_bytes() + WS_FRAME_OVERHEAD;
+                    ctx.send(a, msg, bytes, labels::ROOT_TO_CLUSTER);
+                }
+                for l in self.links.values_mut() {
+                    l.on_ping_sent();
+                }
+                ctx.schedule(
+                    self.cfg.liveness_interval,
+                    SimMsg::Timer(TimerKind::LivenessPing),
+                );
+            }
+
+            _ => {}
+        }
+    }
+
+    fn as_any(&self) -> &dyn Any {
+        self
+    }
+    fn as_any_mut(&mut self) -> &mut dyn Any {
+        self
+    }
+}

@@ -1,0 +1,424 @@
+//! Worker NodeEngine + NetManager (paper §3.2.3 and §5): registers with
+//! its cluster orchestrator, runs the push-based telemetry governor,
+//! maintains its Vivaldi coordinate from peer gossip, deploys service
+//! instances into the (simulated) container runtime, and serves
+//! data-plane traffic through the semantic addressing stack (conversion
+//! table → balancing policy → ProxyTUN tunnel).
+
+use std::any::Any;
+use std::collections::BTreeMap;
+
+use crate::messaging::{labels, MQTT_FRAME_OVERHEAD};
+use crate::model::{Capacity, ServiceState, WorkerSpec};
+use crate::netmanager::{
+    pick_instance, ConversionTable, Mdns, ProxyTun, ServiceIp,
+};
+use crate::sim::{Actor, ActorId, Ctx, DataMsg, OakMsg, SimMsg, TimerKind};
+use crate::telemetry::{TelemetryGovernor, UpdatePolicy};
+use crate::util::{InstanceId, NodeId, SimTime, TaskId};
+use crate::vivaldi::VivaldiState;
+
+use super::{costs, intervals, mem};
+
+#[derive(Clone, Debug)]
+pub struct WorkerConfig {
+    pub spec: WorkerSpec,
+    pub telemetry: UpdatePolicy,
+    /// Per-request service time for hosted instances, ms (data plane).
+    pub service_time_ms: f64,
+}
+
+impl WorkerConfig {
+    pub fn new(spec: WorkerSpec) -> Self {
+        WorkerConfig {
+            spec,
+            // Paper §4.1: "a worker may only publish an update if its Δ
+            // utilization crosses a threshold" — the default governor
+            // suppresses no-change ticks with a 10 s freshness bound.
+            telemetry: UpdatePolicy::DeltaThreshold {
+                interval: intervals::worker_telemetry(),
+                threshold: 0.05,
+                max_age: SimTime::from_secs(10.0),
+            },
+            service_time_ms: 0.4,
+        }
+    }
+}
+
+/// One locally hosted instance.
+#[derive(Clone, Debug)]
+struct HostedInstance {
+    task: TaskId,
+    request: Capacity,
+    state: ServiceState,
+    /// Simulated QoS sample reported upstream (ms).
+    qos_ms: f64,
+}
+
+pub struct WorkerEngine {
+    pub cfg: WorkerConfig,
+    orchestrator: ActorId,
+    pub used: Capacity,
+    hosted: BTreeMap<InstanceId, HostedInstance>,
+    governor: TelemetryGovernor,
+    pub vivaldi: VivaldiState,
+    /// Latest peer states received via gossip (NodeId → state).
+    peers: BTreeMap<NodeId, VivaldiState>,
+    pub table: ConversionTable,
+    pub tun: ProxyTun,
+    pub mdns: Mdns,
+    pub subnet: Option<u32>,
+    /// Requests parked on a table miss, keyed by the queried ServiceIp.
+    parked: Vec<(ServiceIp, DataMsg)>,
+    /// Worker actors by node for tunnel forwarding (learned from table
+    /// updates; the data plane needs actor handles to deliver).
+    node_actors: BTreeMap<NodeId, ActorId>,
+    registered: bool,
+}
+
+impl WorkerEngine {
+    pub fn new(cfg: WorkerConfig, orchestrator: ActorId) -> Self {
+        let governor = TelemetryGovernor::new(cfg.telemetry);
+        WorkerEngine {
+            cfg,
+            orchestrator,
+            used: Capacity::ZERO,
+            hosted: BTreeMap::new(),
+            governor,
+            vivaldi: VivaldiState::default(),
+            peers: BTreeMap::new(),
+            table: ConversionTable::default(),
+            tun: ProxyTun::default(),
+            mdns: Mdns::default(),
+            subnet: None,
+            parked: Vec::new(),
+            node_actors: BTreeMap::new(),
+            registered: false,
+        }
+    }
+
+    /// Let the data plane know how to reach a peer worker's actor (set up
+    /// by the experiment driver; in a live system this is the tunnel
+    /// endpoint address carried in table entries).
+    pub fn learn_node_actor(&mut self, node: NodeId, actor: ActorId) {
+        self.node_actors.insert(node, actor);
+    }
+
+    /// Failure/QoS injection for tests and experiments: set the QoS sample
+    /// every hosted instance will report on the next telemetry tick.
+    pub fn inject_qos(&mut self, qos_ms: f64) {
+        for h in self.hosted.values_mut() {
+            h.qos_ms = qos_ms;
+        }
+    }
+
+    /// Number of instances currently hosted (running or starting).
+    pub fn hosted_count(&self) -> usize {
+        self.hosted.len()
+    }
+
+    /// Kick off registration (call once via an injected Custom timer, or
+    /// directly from the driver).
+    fn register(&mut self, ctx: &mut Ctx<'_>) {
+        if self.registered {
+            return;
+        }
+        self.registered = true;
+        ctx.add_mem(mem::WORKER_BASE_MB);
+        let msg = SimMsg::Oak(OakMsg::RegisterWorker {
+            spec: self.cfg.spec.clone(),
+            engine: ctx.self_id,
+        });
+        let bytes = msg.default_wire_bytes() + MQTT_FRAME_OVERHEAD;
+        ctx.send(self.orchestrator, msg, bytes, labels::WORKER_TO_CLUSTER);
+    }
+
+    fn report(&mut self, ctx: &mut Ctx<'_>) {
+        let total = self.cfg.spec.capacity();
+        if self
+            .governor
+            .should_publish(ctx.now, self.used, total)
+        {
+            let instances: Vec<(InstanceId, ServiceState, f64)> = self
+                .hosted
+                .iter()
+                .map(|(id, h)| (*id, h.state, h.qos_ms))
+                .collect();
+            let msg = SimMsg::Oak(OakMsg::WorkerReport {
+                node: self.cfg.spec.node,
+                used: self.used,
+                vivaldi: self.vivaldi,
+                instances,
+            });
+            let bytes = msg.default_wire_bytes() + MQTT_FRAME_OVERHEAD;
+            ctx.send(self.orchestrator, msg, bytes, labels::WORKER_TO_CLUSTER);
+        }
+        // NodeEngine housekeeping + per-container monitoring (Fig. 7b).
+        ctx.charge_cpu(
+            costs::WORKER_TICK_MS
+                + costs::PER_INSTANCE_TICK_MS * self.hosted.len() as f64,
+        );
+    }
+
+    /// Update own Vivaldi coordinate against gossiped peers using ground-
+    /// truth RTT samples (the NodeEngine pings; the sim provides truth).
+    fn vivaldi_tick(&mut self, ctx: &mut Ctx<'_>) {
+        let me = self.cfg.spec.node;
+        let peers: Vec<(NodeId, VivaldiState)> =
+            self.peers.iter().map(|(n, s)| (*n, *s)).collect();
+        for (node, state) in peers.iter().take(4) {
+            let rtt = ctx.rtt_ms(me, *node);
+            self.vivaldi.observe(state, rtt);
+        }
+        // Also spring against the orchestrator (always reachable).
+        let orch_node = ctx.core.node_of(self.orchestrator);
+        let rtt = ctx.rtt_ms(me, orch_node);
+        self.vivaldi.observe(&VivaldiState::default(), rtt);
+    }
+
+    /// Serve a data-plane request addressed to a semantic ServiceIp.
+    fn serve_request(&mut self, ctx: &mut Ctx<'_>, req: DataMsg) {
+        let DataMsg::Request {
+            id,
+            from,
+            target,
+            bytes,
+            sent_at,
+        } = req
+        else {
+            return;
+        };
+        ctx.charge_cpu(costs::TABLE_OP_MS);
+        match pick_instance(&mut self.table, &target) {
+            Some(loc) => {
+                if loc.node == self.cfg.spec.node {
+                    // Local instance: serve immediately.
+                    ctx.charge_cpu(self.cfg.service_time_ms);
+                    let msg = SimMsg::Data(DataMsg::Response {
+                        id,
+                        bytes: 2048,
+                        sent_at,
+                    });
+                    let b = bytes.max(2048);
+                    ctx.send(from, msg, b, labels::DATA_PLANE);
+                } else if let Some(actor) = self.node_actors.get(&loc.node).copied() {
+                    // Tunnel to the hosting worker (per-packet overhead +
+                    // possible handshake latency folded into a delayed
+                    // forward).
+                    let setup = self.tun.activate(loc.node, ctx.now);
+                    self.tun.touch(loc.node, ctx.now);
+                    let fwd = SimMsg::Data(DataMsg::Request {
+                        id,
+                        from,
+                        target: ServiceIp::Instance(loc.instance),
+                        bytes,
+                        sent_at,
+                    });
+                    let b = bytes + 60; // tunnel encapsulation
+                    if setup > SimTime::ZERO {
+                        ctx.schedule_for(actor, setup, fwd);
+                        ctx.metrics().record_msg(labels::DATA_PLANE, b);
+                    } else {
+                        ctx.send(actor, fwd, b, labels::DATA_PLANE);
+                    }
+                } else {
+                    ctx.metrics().inc("worker.no_route");
+                }
+            }
+            None => {
+                // Table miss: park the request and resolve via cluster.
+                self.parked.push((
+                    target,
+                    DataMsg::Request {
+                        id,
+                        from,
+                        target,
+                        bytes,
+                        sent_at,
+                    },
+                ));
+                let msg = SimMsg::Oak(OakMsg::ResolveIp {
+                    from: self.cfg.spec.node,
+                    query: target,
+                });
+                let b = msg.default_wire_bytes() + MQTT_FRAME_OVERHEAD;
+                ctx.send(self.orchestrator, msg, b, labels::WORKER_TO_CLUSTER);
+            }
+        }
+    }
+}
+
+impl Actor for WorkerEngine {
+    fn handle(&mut self, ctx: &mut Ctx<'_>, msg: SimMsg) {
+        match msg {
+            // Driver bootstrap: a Custom(0) timer triggers registration.
+            SimMsg::Timer(TimerKind::Custom(0)) => {
+                self.register(ctx);
+            }
+
+            SimMsg::Oak(OakMsg::RegisterWorkerAck { subnet }) => {
+                self.subnet = Some(subnet);
+                // Start the telemetry loop.
+                let iv = self.governor.tick_interval();
+                ctx.schedule(iv, SimMsg::Timer(TimerKind::WorkerTelemetry));
+                ctx.schedule(
+                    intervals::tunnel_gc(),
+                    SimMsg::Timer(TimerKind::TunnelGc),
+                );
+            }
+
+            SimMsg::Timer(TimerKind::WorkerTelemetry) => {
+                self.vivaldi_tick(ctx);
+                self.report(ctx);
+                let iv = self.governor.tick_interval();
+                ctx.schedule(iv, SimMsg::Timer(TimerKind::WorkerTelemetry));
+            }
+
+            SimMsg::Timer(TimerKind::TunnelGc) => {
+                self.tun.gc(ctx.now);
+                ctx.charge_cpu(costs::TABLE_OP_MS);
+                ctx.schedule(
+                    intervals::tunnel_gc(),
+                    SimMsg::Timer(TimerKind::TunnelGc),
+                );
+            }
+
+            SimMsg::Oak(OakMsg::PeerHint { peers }) => {
+                ctx.charge_cpu(costs::PING_MS);
+                for (n, s) in peers {
+                    self.peers.insert(n, s);
+                }
+            }
+
+            SimMsg::Oak(OakMsg::DeployInstance {
+                instance,
+                task,
+                request,
+                image_mb,
+                service_ips: _,
+            }) => {
+                ctx.charge_cpu(costs::DEPLOY_MS);
+                let cap = self.cfg.spec.capacity();
+                let after = self.used + request;
+                if !cap.fits(&after) {
+                    // Over-commitment race: reject; orchestrator frees the
+                    // reservation on the Failed status.
+                    let msg = SimMsg::Oak(OakMsg::InstanceStatus {
+                        instance,
+                        node: self.cfg.spec.node,
+                        state: ServiceState::Failed,
+                    });
+                    let b = msg.default_wire_bytes() + MQTT_FRAME_OVERHEAD;
+                    ctx.send(self.orchestrator, msg, b, labels::WORKER_TO_CLUSTER);
+                    ctx.metrics().inc("worker.deploy_rejected");
+                    return;
+                }
+                self.used = after;
+                ctx.add_mem(request.mem_mb as f64 * 0.05 + 4.0); // runtime overhead
+                self.hosted.insert(
+                    instance,
+                    HostedInstance {
+                        task,
+                        request,
+                        state: ServiceState::Scheduled,
+                        qos_ms: 0.0,
+                    },
+                );
+                self.mdns
+                    .register(&format!("task-{}-{}", task.service.0, task.index), task);
+                // Container runtime: image pull + start latency.
+                let me = self.cfg.spec.node;
+                let pull = ctx
+                    .core
+                    .containers
+                    .pull_time(me, 0x1000 + task.service.0 as u64, image_mb);
+                let start = {
+                    let rng = &mut ctx.core.rng;
+                    ctx.core.containers.start_latency(rng)
+                };
+                let speed = ctx.core.node_class(me).speed_factor();
+                let total = SimTime::from_micros(
+                    ((pull + start).as_micros() as f64 / speed) as u64,
+                );
+                ctx.schedule(
+                    total,
+                    SimMsg::Timer(TimerKind::Custom(1_000_000 + instance.0 as u32)),
+                );
+            }
+
+            // Container start completion (deploy ack).
+            SimMsg::Timer(TimerKind::Custom(code)) if code >= 1_000_000 => {
+                let instance = InstanceId((code - 1_000_000) as u64);
+                // Locally-recovered instances carry the high bit; recover
+                // the map key by scanning (codes are 32-bit truncated).
+                let key = self
+                    .hosted
+                    .keys()
+                    .copied()
+                    .find(|k| (k.0 as u32) == instance.0 as u32);
+                if let Some(k) = key {
+                    if let Some(h) = self.hosted.get_mut(&k) {
+                        h.state = ServiceState::Running;
+                        h.qos_ms = 1.0;
+                    }
+                    let msg = SimMsg::Oak(OakMsg::InstanceStatus {
+                        instance: k,
+                        node: self.cfg.spec.node,
+                        state: ServiceState::Running,
+                    });
+                    let b = msg.default_wire_bytes() + MQTT_FRAME_OVERHEAD;
+                    ctx.send(self.orchestrator, msg, b, labels::WORKER_TO_CLUSTER);
+                }
+            }
+
+            SimMsg::Oak(OakMsg::UndeployInstance { instance }) => {
+                ctx.charge_cpu(costs::DEPLOY_MS * 0.3);
+                if let Some(h) = self.hosted.remove(&instance) {
+                    self.used -= h.request;
+                    ctx.add_mem(-(h.request.mem_mb as f64 * 0.05 + 4.0));
+                    let msg = SimMsg::Oak(OakMsg::InstanceStatus {
+                        instance,
+                        node: self.cfg.spec.node,
+                        state: ServiceState::Terminated,
+                    });
+                    let b = msg.default_wire_bytes() + MQTT_FRAME_OVERHEAD;
+                    ctx.send(self.orchestrator, msg, b, labels::WORKER_TO_CLUSTER);
+                }
+            }
+
+            SimMsg::Oak(OakMsg::TableUpdate { entries }) => {
+                ctx.charge_cpu(costs::TABLE_OP_MS);
+                for e in entries {
+                    self.table.apply(e);
+                }
+                // Retry parked requests whose task is now resolvable.
+                let parked = std::mem::take(&mut self.parked);
+                for (ip, req) in parked {
+                    if self.table.lookup(&ip).is_some() {
+                        self.serve_request(ctx, req);
+                    } else {
+                        self.parked.push((ip, req));
+                    }
+                }
+            }
+
+            SimMsg::Data(req @ DataMsg::Request { .. }) => {
+                self.serve_request(ctx, req);
+            }
+
+            SimMsg::Data(DataMsg::StressLoad { rps }) => {
+                // Nginx stress model: each request costs ~0.2 ms cpu.
+                ctx.charge_cpu(rps * 0.2);
+            }
+
+            _ => {}
+        }
+    }
+
+    fn as_any(&self) -> &dyn Any {
+        self
+    }
+    fn as_any_mut(&mut self) -> &mut dyn Any {
+        self
+    }
+}

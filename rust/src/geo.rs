@@ -1,0 +1,115 @@
+//! Geographic positions and great-circle distances (`dist_gc` in paper
+//! Alg. 2). Must stay numerically consistent with the L1 kernel
+//! (`python/compile/kernels/ldp_score.py`): same Earth radius, same
+//! haversine formulation — the pytest+proptest suites cross-check both.
+
+/// Earth radius in km — keep in sync with `ldp_score.EARTH_RADIUS_KM`.
+pub const EARTH_RADIUS_KM: f64 = 6371.0;
+
+/// A geographic point in **radians** (consistent with the HLO artifacts).
+#[derive(Clone, Copy, PartialEq, Debug, Default)]
+pub struct GeoPoint {
+    pub lat: f64,
+    pub lon: f64,
+}
+
+impl GeoPoint {
+    /// Construct from degrees (the SLA format uses degrees; everything
+    /// internal uses radians).
+    pub fn from_degrees(lat_deg: f64, lon_deg: f64) -> Self {
+        GeoPoint {
+            lat: lat_deg.to_radians(),
+            lon: lon_deg.to_radians(),
+        }
+    }
+
+    /// Great-circle (haversine) distance in km.
+    pub fn distance_km(&self, other: &GeoPoint) -> f64 {
+        let dlat = 0.5 * (other.lat - self.lat);
+        let dlon = 0.5 * (other.lon - self.lon);
+        let h = dlat.sin().powi(2)
+            + self.lat.cos() * other.lat.cos() * dlon.sin().powi(2);
+        2.0 * EARTH_RADIUS_KM * h.clamp(0.0, 1.0).sqrt().asin()
+    }
+}
+
+/// A named operational area: the SLA `area` field maps to one of these
+/// (paper Schema 1); clusters advertise their area so the root scheduler
+/// can pre-filter (paper §4.2, "approximate geographical operation zones").
+#[derive(Clone, Copy, PartialEq, Debug)]
+pub struct Area {
+    pub center: GeoPoint,
+    pub radius_km: f64,
+}
+
+impl Area {
+    pub fn contains(&self, p: &GeoPoint) -> bool {
+        self.center.distance_km(p) <= self.radius_km
+    }
+
+    /// Whether two areas could overlap (root-level coarse filter).
+    pub fn intersects(&self, other: &Area) -> bool {
+        self.center.distance_km(&other.center) <= self.radius_km + other.radius_km
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn munich() -> GeoPoint {
+        GeoPoint::from_degrees(48.137, 11.575)
+    }
+    fn berlin() -> GeoPoint {
+        GeoPoint::from_degrees(52.520, 13.405)
+    }
+
+    #[test]
+    fn zero_distance_to_self() {
+        let p = munich();
+        assert!(p.distance_km(&p) < 1e-9);
+    }
+
+    #[test]
+    fn known_city_pair_distance() {
+        // Munich–Berlin is ~504 km great-circle.
+        let d = munich().distance_km(&berlin());
+        assert!((d - 504.0).abs() < 5.0, "got {d}");
+    }
+
+    #[test]
+    fn symmetric() {
+        assert!(
+            (munich().distance_km(&berlin()) - berlin().distance_km(&munich())).abs()
+                < 1e-9
+        );
+    }
+
+    #[test]
+    fn antipodal_is_half_circumference() {
+        let a = GeoPoint::from_degrees(0.0, 0.0);
+        let b = GeoPoint::from_degrees(0.0, 180.0);
+        let d = a.distance_km(&b);
+        assert!((d - std::f64::consts::PI * EARTH_RADIUS_KM).abs() < 1.0);
+    }
+
+    #[test]
+    fn area_contains_and_intersects() {
+        let area = Area {
+            center: munich(),
+            radius_km: 100.0,
+        };
+        assert!(area.contains(&munich()));
+        assert!(!area.contains(&berlin()));
+        let wide = Area {
+            center: berlin(),
+            radius_km: 450.0,
+        };
+        assert!(area.intersects(&wide));
+        let narrow = Area {
+            center: berlin(),
+            radius_km: 100.0,
+        };
+        assert!(!area.intersects(&narrow));
+    }
+}

@@ -1,0 +1,363 @@
+//! The federated cluster hierarchy *I = ⟨C, E⟩* (paper §4.1): an oriented
+//! tree of clusters rooted at the root orchestrator `C₀ = {RO}`, plus the
+//! aggregate statistics `∪(Aⁱ) = ⟨Σ(Aⁱ), μ(Aⁱ), σ(Aⁱ)⟩` each cluster
+//! pushes to its parent — the only resource information that crosses
+//! cluster boundaries (administrative-control preservation).
+
+use std::collections::HashMap;
+
+use crate::geo::Area;
+use crate::model::{Capacity, Virtualization};
+use crate::util::ClusterId;
+
+/// Root pseudo-cluster id (`C₀`).
+pub const ROOT: ClusterId = ClusterId(0);
+
+/// Aggregated capacity distribution a cluster advertises upward:
+/// `⟨Σ, μ, σ⟩` over available worker (+ sub-cluster) capacities, per
+/// resource dimension, plus coarse metadata the root scheduler filters on.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct AggregateStats {
+    pub total: Capacity,
+    pub mean_cpu_millicores: f64,
+    pub mean_mem_mb: f64,
+    pub std_cpu_millicores: f64,
+    pub std_mem_mb: f64,
+    /// Largest single-worker available capacity — the root must not pick a
+    /// cluster whose *sum* fits but where no single worker does.
+    pub max_worker: Capacity,
+    pub worker_count: usize,
+    /// Union of virtualization technologies available in the cluster.
+    pub virtualization: Virtualization,
+    /// Approximate operation zone (for SLA `area`/`location` filters).
+    pub area: Option<Area>,
+}
+
+impl AggregateStats {
+    /// Aggregate a set of per-worker available capacities (§4.1:
+    /// `Aⁱ = {A₁ⁱ…Aₙⁱ} ∪ {Aʲ | (Cᵢ,Cⱼ) ∈ E}`; sub-cluster aggregates are
+    /// folded in by treating their max-worker/total like member entries).
+    pub fn from_workers<'a>(
+        workers: impl Iterator<Item = (&'a Capacity, Virtualization)>,
+        area: Option<Area>,
+    ) -> AggregateStats {
+        let mut agg = AggregateStats {
+            area,
+            ..AggregateStats::default()
+        };
+        let mut cpus = Vec::new();
+        let mut mems = Vec::new();
+        for (cap, virt) in workers {
+            agg.total += *cap;
+            cpus.push(cap.cpu_millicores as f64);
+            mems.push(cap.mem_mb as f64);
+            if cap.cpu_millicores >= agg.max_worker.cpu_millicores {
+                // Track the componentwise max to stay conservative.
+                agg.max_worker.cpu_millicores =
+                    agg.max_worker.cpu_millicores.max(cap.cpu_millicores);
+            }
+            agg.max_worker.mem_mb = agg.max_worker.mem_mb.max(cap.mem_mb);
+            agg.max_worker.disk_mb = agg.max_worker.disk_mb.max(cap.disk_mb);
+            agg.max_worker.gpus = agg.max_worker.gpus.max(cap.gpus);
+            agg.max_worker.tpus = agg.max_worker.tpus.max(cap.tpus);
+            agg.virtualization = agg.virtualization.union(virt);
+            agg.worker_count += 1;
+        }
+        agg.mean_cpu_millicores = crate::util::mean(&cpus);
+        agg.mean_mem_mb = crate::util::mean(&mems);
+        agg.std_cpu_millicores = crate::util::std_dev(&cpus);
+        agg.std_mem_mb = crate::util::std_dev(&mems);
+        agg
+    }
+
+    /// Merge a sub-cluster's aggregate into this one (multi-tier roll-up).
+    pub fn absorb(&mut self, child: &AggregateStats) {
+        let n1 = self.worker_count as f64;
+        let n2 = child.worker_count as f64;
+        if n2 == 0.0 {
+            return;
+        }
+        let merge_mean_std = |m1: f64, s1: f64, m2: f64, s2: f64| {
+            let n = n1 + n2;
+            let m = (n1 * m1 + n2 * m2) / n;
+            // Pooled variance with mean shift.
+            let v = (n1 * (s1 * s1 + (m1 - m) * (m1 - m))
+                + n2 * (s2 * s2 + (m2 - m) * (m2 - m)))
+                / n;
+            (m, v.sqrt())
+        };
+        let (mc, sc) = merge_mean_std(
+            self.mean_cpu_millicores,
+            self.std_cpu_millicores,
+            child.mean_cpu_millicores,
+            child.std_cpu_millicores,
+        );
+        let (mm, sm) = merge_mean_std(
+            self.mean_mem_mb,
+            self.std_mem_mb,
+            child.mean_mem_mb,
+            child.std_mem_mb,
+        );
+        self.mean_cpu_millicores = mc;
+        self.std_cpu_millicores = sc;
+        self.mean_mem_mb = mm;
+        self.std_mem_mb = sm;
+        self.total += child.total;
+        self.max_worker.cpu_millicores = self
+            .max_worker
+            .cpu_millicores
+            .max(child.max_worker.cpu_millicores);
+        self.max_worker.mem_mb = self.max_worker.mem_mb.max(child.max_worker.mem_mb);
+        self.max_worker.disk_mb = self.max_worker.disk_mb.max(child.max_worker.disk_mb);
+        self.max_worker.gpus = self.max_worker.gpus.max(child.max_worker.gpus);
+        self.max_worker.tpus = self.max_worker.tpus.max(child.max_worker.tpus);
+        self.virtualization = self.virtualization.union(child.virtualization);
+        self.worker_count += child.worker_count;
+    }
+}
+
+/// The oriented cluster tree. Parent links define the inter-cluster
+/// control edges `E`; every non-root cluster has exactly one parent and
+/// the structure is cycle-free by construction.
+#[derive(Clone, Debug, Default)]
+pub struct ClusterTree {
+    parent: HashMap<ClusterId, ClusterId>,
+    children: HashMap<ClusterId, Vec<ClusterId>>,
+    latest: HashMap<ClusterId, AggregateStats>,
+}
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum TreeError {
+    AlreadyRegistered(ClusterId),
+    UnknownParent(ClusterId),
+    UnknownCluster(ClusterId),
+    RootImmutable,
+}
+
+impl ClusterTree {
+    pub fn new() -> Self {
+        let mut t = ClusterTree::default();
+        t.children.insert(ROOT, Vec::new());
+        t
+    }
+
+    /// Register a cluster under `parent` (paper: operators register via
+    /// the root API; sub-clusters attach to their parent orchestrator).
+    pub fn attach(&mut self, id: ClusterId, parent: ClusterId) -> Result<(), TreeError> {
+        if id == ROOT {
+            return Err(TreeError::RootImmutable);
+        }
+        if self.parent.contains_key(&id) {
+            return Err(TreeError::AlreadyRegistered(id));
+        }
+        if parent != ROOT && !self.parent.contains_key(&parent) {
+            return Err(TreeError::UnknownParent(parent));
+        }
+        self.parent.insert(id, parent);
+        self.children.entry(parent).or_default().push(id);
+        self.children.entry(id).or_default();
+        Ok(())
+    }
+
+    /// Remove a leaf cluster (operators may scale down freely, §4.1).
+    pub fn detach(&mut self, id: ClusterId) -> Result<(), TreeError> {
+        if id == ROOT {
+            return Err(TreeError::RootImmutable);
+        }
+        let parent = *self
+            .parent
+            .get(&id)
+            .ok_or(TreeError::UnknownCluster(id))?;
+        if !self.children.get(&id).map(Vec::is_empty).unwrap_or(true) {
+            // Only leaves detach; callers must detach children first.
+            return Err(TreeError::UnknownCluster(id));
+        }
+        self.parent.remove(&id);
+        self.children.remove(&id);
+        self.latest.remove(&id);
+        if let Some(sibs) = self.children.get_mut(&parent) {
+            sibs.retain(|c| *c != id);
+        }
+        Ok(())
+    }
+
+    pub fn parent_of(&self, id: ClusterId) -> Option<ClusterId> {
+        self.parent.get(&id).copied()
+    }
+
+    pub fn children_of(&self, id: ClusterId) -> &[ClusterId] {
+        self.children.get(&id).map(Vec::as_slice).unwrap_or(&[])
+    }
+
+    pub fn contains(&self, id: ClusterId) -> bool {
+        id == ROOT || self.parent.contains_key(&id)
+    }
+
+    pub fn clusters(&self) -> impl Iterator<Item = ClusterId> + '_ {
+        self.parent.keys().copied()
+    }
+
+    pub fn len(&self) -> usize {
+        self.parent.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.parent.is_empty()
+    }
+
+    /// Record the latest aggregate pushed by a cluster orchestrator.
+    pub fn update_stats(&mut self, id: ClusterId, stats: AggregateStats) -> Result<(), TreeError> {
+        if !self.contains(id) || id == ROOT {
+            return Err(TreeError::UnknownCluster(id));
+        }
+        self.latest.insert(id, stats);
+        Ok(())
+    }
+
+    pub fn stats(&self, id: ClusterId) -> Option<&AggregateStats> {
+        self.latest.get(&id)
+    }
+
+    /// Depth of a cluster (root children = 1). The paper's `t`-tier
+    /// scheduling descends `depth` steps.
+    pub fn depth(&self, id: ClusterId) -> usize {
+        let mut d = 0;
+        let mut cur = id;
+        while let Some(p) = self.parent.get(&cur) {
+            d += 1;
+            cur = *p;
+        }
+        d
+    }
+
+    /// Invariant check used by the proptest suite: parent/children maps
+    /// mirror each other and the structure is acyclic.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        for (c, p) in &self.parent {
+            if !self
+                .children
+                .get(p)
+                .map(|v| v.contains(c))
+                .unwrap_or(false)
+            {
+                return Err(format!("{c} missing from children of {p}"));
+            }
+            // Acyclicity: walking up must terminate at ROOT.
+            let mut seen = 0;
+            let mut cur = *c;
+            while let Some(next) = self.parent.get(&cur) {
+                cur = *next;
+                seen += 1;
+                if seen > self.parent.len() + 1 {
+                    return Err(format!("cycle through {c}"));
+                }
+            }
+            if cur != ROOT {
+                return Err(format!("{c} does not reach root"));
+            }
+        }
+        for (p, kids) in &self.children {
+            for k in kids {
+                if self.parent.get(k) != Some(p) {
+                    return Err(format!("child {k} of {p} lacks back-edge"));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cap(cpu: u32, mem: u32) -> Capacity {
+        Capacity::new(cpu, mem, 0)
+    }
+
+    #[test]
+    fn attach_detach_roundtrip() {
+        let mut t = ClusterTree::new();
+        t.attach(ClusterId(1), ROOT).unwrap();
+        t.attach(ClusterId(2), ROOT).unwrap();
+        t.attach(ClusterId(3), ClusterId(2)).unwrap();
+        assert_eq!(t.len(), 3);
+        assert_eq!(t.depth(ClusterId(3)), 2);
+        assert_eq!(t.parent_of(ClusterId(3)), Some(ClusterId(2)));
+        t.check_invariants().unwrap();
+
+        // Can't detach a non-leaf.
+        assert!(t.detach(ClusterId(2)).is_err());
+        t.detach(ClusterId(3)).unwrap();
+        t.detach(ClusterId(2)).unwrap();
+        assert_eq!(t.len(), 1);
+        t.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn rejects_bad_edges() {
+        let mut t = ClusterTree::new();
+        t.attach(ClusterId(1), ROOT).unwrap();
+        assert_eq!(
+            t.attach(ClusterId(1), ROOT),
+            Err(TreeError::AlreadyRegistered(ClusterId(1)))
+        );
+        assert_eq!(
+            t.attach(ClusterId(5), ClusterId(9)),
+            Err(TreeError::UnknownParent(ClusterId(9)))
+        );
+        assert_eq!(t.attach(ROOT, ClusterId(1)), Err(TreeError::RootImmutable));
+    }
+
+    #[test]
+    fn aggregate_from_workers() {
+        let caps = [cap(1000, 1024), cap(3000, 2048), cap(2000, 4096)];
+        let agg = AggregateStats::from_workers(
+            caps.iter().map(|c| (c, Virtualization::CONTAINER)),
+            None,
+        );
+        assert_eq!(agg.worker_count, 3);
+        assert_eq!(agg.total.cpu_millicores, 6000);
+        assert!((agg.mean_cpu_millicores - 2000.0).abs() < 1e-9);
+        assert_eq!(agg.max_worker.cpu_millicores, 3000);
+        assert_eq!(agg.max_worker.mem_mb, 4096);
+        assert!((agg.std_cpu_millicores - 816.4965809).abs() < 1e-3);
+    }
+
+    #[test]
+    fn absorb_matches_flat_aggregation() {
+        let a = [cap(1000, 1000), cap(2000, 2000)];
+        let b = [cap(3000, 3000), cap(4000, 4000), cap(5000, 5000)];
+        let mut agg_a = AggregateStats::from_workers(
+            a.iter().map(|c| (c, Virtualization::CONTAINER)),
+            None,
+        );
+        let agg_b = AggregateStats::from_workers(
+            b.iter().map(|c| (c, Virtualization::WASM)),
+            None,
+        );
+        agg_a.absorb(&agg_b);
+
+        let flat: Vec<Capacity> = a.iter().chain(b.iter()).copied().collect();
+        let agg_flat = AggregateStats::from_workers(
+            flat.iter().map(|c| (c, Virtualization::CONTAINER)),
+            None,
+        );
+        assert_eq!(agg_a.worker_count, 5);
+        assert_eq!(agg_a.total, agg_flat.total);
+        assert!((agg_a.mean_cpu_millicores - agg_flat.mean_cpu_millicores).abs() < 1e-6);
+        assert!((agg_a.std_cpu_millicores - agg_flat.std_cpu_millicores).abs() < 1e-6);
+        assert!(agg_a.virtualization.supports(Virtualization::WASM));
+    }
+
+    #[test]
+    fn stats_update_requires_registration() {
+        let mut t = ClusterTree::new();
+        assert!(t
+            .update_stats(ClusterId(4), AggregateStats::default())
+            .is_err());
+        t.attach(ClusterId(4), ROOT).unwrap();
+        t.update_stats(ClusterId(4), AggregateStats::default())
+            .unwrap();
+        assert!(t.stats(ClusterId(4)).is_some());
+    }
+}

@@ -1,0 +1,52 @@
+//! # oakestra-rs — hierarchical orchestration for edge computing
+//!
+//! A from-scratch reproduction of *"Oakestra: An Orchestrator for Edge
+//! Computing"* (Bartolomeo et al., 2022): a hierarchical orchestration
+//! framework with federated cluster management, delegated task scheduling
+//! (ROM + LDP), and a semantic overlay network — plus every substrate the
+//! paper's evaluation depends on (a deterministic discrete-event testbed,
+//! flat Kubernetes/K3s/MicroK8s baseline protocol models, a WireGuard-like
+//! tunnel comparator, and the paper's workloads).
+//!
+//! ## Architecture (three layers)
+//!
+//! * **L3 (this crate)** — the coordination plane: [`coordinator`] (root /
+//!   cluster / worker state machines), [`scheduler`] (delegated ROM/LDP),
+//!   [`netmanager`] (ServiceIP semantic addressing + ProxyTUN tunnels),
+//!   [`telemetry`] (push-based λ-adaptive updates), [`hierarchy`] (the
+//!   cluster tree *I = ⟨C,E⟩* with ⟨Σ,μ,σ⟩ aggregation).
+//! * **L2/L1 (build-time Python, `python/compile`)** — the numeric
+//!   placement pipeline (batched LDP scoring, Vivaldi embedding,
+//!   trilateration) and the video-analytics detector, AOT-lowered to HLO
+//!   text artifacts.
+//! * **Runtime bridge** — [`runtime`] loads the artifacts through the PJRT
+//!   CPU client so the Rust hot path executes them without Python.
+//!
+//! ## Determinism
+//!
+//! Everything in [`sim`] is a deterministic discrete-event simulation:
+//! seeded RNG, virtual clock, reproducible event ordering. Benches and
+//! tests rely on this — the same seed always yields the same trace.
+
+pub mod baselines;
+pub mod bench_harness;
+pub mod config;
+pub mod coordinator;
+pub mod geo;
+pub mod hierarchy;
+pub mod json;
+pub mod messaging;
+pub mod metrics;
+pub mod model;
+pub mod netmanager;
+pub mod propcheck;
+pub mod runtime;
+pub mod scheduler;
+pub mod sim;
+pub mod sla;
+pub mod telemetry;
+pub mod util;
+pub mod vivaldi;
+pub mod workload;
+
+pub use util::{NodeId, ServiceId, SimTime, TaskId};

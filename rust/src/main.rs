@@ -1,0 +1,217 @@
+//! `oakestra` — CLI launcher for the Oakestra reproduction.
+//!
+//! Subcommands (hand-rolled arg parsing; the offline crate set has no
+//! clap):
+//!
+//! ```text
+//! oakestra run [--config cfg.json]        run a testbed from a config
+//! oakestra bench <fig|all>                regenerate a paper figure table
+//! oakestra ldp --workers N                one PJRT-accelerated LDP solve
+//! oakestra check-artifacts                verify AOT artifacts load + run
+//! oakestra init-config [path]             write an example config
+//! ```
+
+use anyhow::{anyhow, Result};
+use oakestra::bench_harness as bh;
+use oakestra::config::Config;
+use oakestra::metrics::Table;
+use oakestra::util::SimTime;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match dispatch(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn flag_value<'a>(args: &'a [String], flag: &str) -> Option<&'a str> {
+    args.iter()
+        .position(|a| a == flag)
+        .and_then(|i| args.get(i + 1))
+        .map(String::as_str)
+}
+
+fn dispatch(args: &[String]) -> Result<()> {
+    match args.first().map(String::as_str) {
+        Some("run") => cmd_run(args),
+        Some("bench") => cmd_bench(args),
+        Some("ldp") => cmd_ldp(args),
+        Some("check-artifacts") => cmd_check_artifacts(),
+        Some("init-config") => {
+            let path = args.get(1).map(String::as_str).unwrap_or("oakestra.json");
+            std::fs::write(path, Config::example_json())?;
+            println!("wrote {path}");
+            Ok(())
+        }
+        Some("help") | None => {
+            print_help();
+            Ok(())
+        }
+        Some(other) => Err(anyhow!("unknown subcommand '{other}' (try 'help')")),
+    }
+}
+
+fn print_help() {
+    println!(
+        "oakestra — hierarchical edge orchestration (paper reproduction)\n\
+         \n\
+         USAGE:\n\
+           oakestra run [--config cfg.json]   run a simulated testbed\n\
+           oakestra bench <fig|all>           figures: 4a 4bc 5 6 7a 7b 8a 8b 9 10 ablations\n\
+           oakestra ldp [--workers N]         PJRT-accelerated LDP placement demo\n\
+           oakestra check-artifacts           verify the AOT artifact bundle\n\
+           oakestra init-config [path]        write an example config"
+    );
+}
+
+fn cmd_run(args: &[String]) -> Result<()> {
+    let cfg = match flag_value(args, "--config") {
+        Some(path) => Config::from_file(path)?,
+        None => Config::default(),
+    };
+    println!(
+        "topology: {} cluster(s) × {} worker(s), scheduler {:?}, het={}",
+        cfg.topology.clusters,
+        cfg.topology.workers_per_cluster,
+        cfg.topology.scheduler,
+        cfg.topology.heterogeneous
+    );
+    let mut tb = bh::build_oakestra(cfg.testbed());
+    tb.sim
+        .core
+        .net
+        .impair_all(cfg.topology.impair_delay_ms, cfg.topology.impair_loss);
+    tb.warm_up();
+    for (i, (name, cpu, mem)) in cfg.services.iter().enumerate() {
+        tb.submit(
+            oakestra::sla::simple_sla(name, *cpu, *mem),
+            SimTime::from_secs(13.0 + i as f64),
+        );
+    }
+    tb.sim.run_until(SimTime::from_secs(cfg.duration_s));
+    let times = tb.deploy_times_ms();
+    println!(
+        "deployed {}/{} services; mean deploy time {:.0} ms",
+        times.len(),
+        cfg.services.len(),
+        oakestra::util::mean(&times)
+    );
+    let m = &tb.sim.core.metrics;
+    println!(
+        "control messages: worker→cluster {}  cluster→worker {}  cluster→root {}  root→cluster {}",
+        m.msgs(oakestra::messaging::labels::WORKER_TO_CLUSTER),
+        m.msgs(oakestra::messaging::labels::CLUSTER_TO_WORKER),
+        m.msgs(oakestra::messaging::labels::CLUSTER_TO_ROOT),
+        m.msgs(oakestra::messaging::labels::ROOT_TO_CLUSTER),
+    );
+    Ok(())
+}
+
+fn print_tables(tables: &[Table]) {
+    for t in tables {
+        println!("{t}");
+    }
+}
+
+fn cmd_bench(args: &[String]) -> Result<()> {
+    let which = args.get(1).map(String::as_str).unwrap_or("all");
+    let quick = args.iter().any(|a| a == "--quick");
+    let sizes: Vec<usize> = if quick {
+        vec![2, 6, 10]
+    } else {
+        vec![2, 4, 6, 8, 10]
+    };
+    let reps = if quick { 2 } else { 5 };
+
+    let run = |name: &str| -> Result<Vec<Table>> {
+        Ok(match name {
+            "4a" => vec![bh::fig4a_deploy_time(&sizes, reps)],
+            "4bc" => {
+                let (a, b) = bh::fig4bc_idle_overhead(&sizes, 60.0);
+                vec![a, b]
+            }
+            "5" => {
+                let (a, b) =
+                    bh::fig5_network_degradation(&[0.0, 50.0, 100.0, 175.0, 250.0], reps);
+                vec![a, b]
+            }
+            "6" => vec![bh::fig6_cluster_ratio(45, reps)],
+            "7a" => vec![bh::fig7a_control_messages(&[10, 50, 100, 200])],
+            "7b" => vec![bh::fig7b_stress(&[10, 30, 60, 100])],
+            "8a" => vec![bh::fig8a_schedulers_hpc(&[2, 4, 6, 8, 10], 10 * reps)],
+            "8b" => vec![bh::fig8b_schedulers_scale(&[50, 100, 200, 350, 500], reps)],
+            "9" => vec![
+                bh::fig9_left_closest_rtt(&[1, 2, 4, 8], 500),
+                bh::fig9_right_tunnel_transfer(&[10.0, 50.0, 100.0, 175.0, 250.0], 0.0),
+            ],
+            "10" => vec![bh::fig10_video_analytics(if quick { 30 } else { 100 })],
+            "ablations" => vec![
+                bh::ablations::ablate_telemetry(1200, 0.1),
+                bh::ablations::ablate_delegation(500, 10, 10),
+                bh::ablations::ablate_tunnel_lru(&[4, 8, 16, 32, 64], 64, 5000),
+            ],
+            other => return Err(anyhow!("unknown figure '{other}'")),
+        })
+    };
+
+    if which == "all" {
+        for name in ["4a", "4bc", "5", "6", "7a", "7b", "8a", "8b", "9", "10", "ablations"] {
+            print_tables(&run(name)?);
+        }
+    } else {
+        print_tables(&run(which)?);
+    }
+    Ok(())
+}
+
+fn cmd_ldp(args: &[String]) -> Result<()> {
+    let n: usize = flag_value(args, "--workers")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(500);
+    let t = bh::fig8b_schedulers_scale(&[n], 3);
+    println!("{t}");
+    Ok(())
+}
+
+fn cmd_check_artifacts() -> Result<()> {
+    let artifacts = oakestra::runtime::Artifacts::discover()?;
+    println!("artifact dir: {}", artifacts.dir.display());
+    let mut engine = oakestra::runtime::PjrtEngine::new(artifacts.clone())?;
+    let mut names: Vec<&String> = artifacts.entries.keys().collect();
+    names.sort();
+    for name in names {
+        engine.executable(name)?;
+        println!("  {name}: compiled OK");
+    }
+    // Exercise one end-to-end execution per wrapper.
+    let mut ldp = oakestra::runtime::LdpAccel::new(engine);
+    let workers = vec![
+        oakestra::runtime::LdpWorkerRow {
+            cpu: 4.0,
+            mem: 2.0,
+            disk: 10.0,
+            virt_bits: 1,
+            lat_rad: 0.84,
+            lon_rad: 0.2,
+            viv: [0.0; 4],
+        };
+        16
+    ];
+    let (scores, mask) = ldp.score(&workers, [1.0, 0.5, 0.0], 1, &[])?;
+    anyhow::ensure!(mask.iter().all(|m| *m) && scores.len() == 16);
+    println!("  ldp_score executes OK (16 workers, all feasible)");
+
+    let mut det = oakestra::runtime::Detector::discover()?;
+    let frames = vec![0.5f32; 64 * 64 * 3];
+    let grid = det.detect(&frames, 1)?;
+    anyhow::ensure!(grid[0].len() == 8 * 8 * 5);
+    println!("  detector executes OK (1 frame → 8×8×5 grid)");
+    println!("all artifacts healthy");
+    Ok(())
+}

@@ -1,0 +1,137 @@
+//! In-process MQTT-style broker: hierarchical topics with `+`/`#`
+//! wildcards, QoS-0 fan-out. The cluster orchestrator embeds one; workers
+//! publish telemetry to `cluster/<id>/worker/<n>/report` and subscribe to
+//! their command topics — mirroring Oakestra's real MQTT usage.
+
+use std::collections::HashMap;
+
+use crate::sim::ActorId;
+
+/// A parsed MQTT topic (or subscription filter).
+#[derive(Clone, PartialEq, Eq, Hash, Debug)]
+pub struct Topic(Vec<String>);
+
+impl Topic {
+    pub fn parse(s: &str) -> Topic {
+        Topic(s.split('/').map(str::to_string).collect())
+    }
+
+    /// MQTT matching: `+` matches one level, `#` matches the rest.
+    pub fn matches(filter: &Topic, topic: &Topic) -> bool {
+        let f = &filter.0;
+        let t = &t_ref(topic).0;
+        let mut i = 0;
+        while i < f.len() {
+            if f[i] == "#" {
+                return true;
+            }
+            if i >= t.len() {
+                return false;
+            }
+            if f[i] != "+" && f[i] != t[i] {
+                return false;
+            }
+            i += 1;
+        }
+        i == t.len()
+    }
+
+    pub fn as_string(&self) -> String {
+        self.0.join("/")
+    }
+
+    /// Wire length of the topic name (feeds framing overhead accounting).
+    pub fn wire_len(&self) -> usize {
+        self.as_string().len()
+    }
+}
+
+fn t_ref(t: &Topic) -> &Topic {
+    t
+}
+
+/// QoS-0 broker: subscriptions are (filter → subscriber actor) pairs.
+#[derive(Clone, Debug, Default)]
+pub struct MqttBroker {
+    subs: Vec<(Topic, ActorId)>,
+    /// Retained per-topic statistics (messages, bytes).
+    stats: HashMap<String, (u64, u64)>,
+}
+
+impl MqttBroker {
+    pub fn subscribe(&mut self, filter: &str, subscriber: ActorId) {
+        self.subs.push((Topic::parse(filter), subscriber));
+    }
+
+    pub fn unsubscribe_actor(&mut self, subscriber: ActorId) {
+        self.subs.retain(|(_, a)| *a != subscriber);
+    }
+
+    /// Resolve a publish to its subscriber set (delivery is the caller's
+    /// job — in the simulator the orchestrator actor forwards through
+    /// `Ctx::send`; dedups so one actor gets one copy).
+    pub fn route(&mut self, topic: &str, payload_bytes: usize) -> Vec<ActorId> {
+        let t = Topic::parse(topic);
+        let e = self.stats.entry(t.as_string()).or_insert((0, 0));
+        e.0 += 1;
+        e.1 += payload_bytes as u64;
+        let mut out: Vec<ActorId> = self
+            .subs
+            .iter()
+            .filter(|(f, _)| Topic::matches(f, &t))
+            .map(|(_, a)| *a)
+            .collect();
+        out.sort();
+        out.dedup();
+        out
+    }
+
+    pub fn topic_stats(&self, topic: &str) -> (u64, u64) {
+        self.stats.get(topic).copied().unwrap_or((0, 0))
+    }
+
+    pub fn subscription_count(&self) -> usize {
+        self.subs.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_and_wildcard_matching() {
+        let m = |f: &str, t: &str| Topic::matches(&Topic::parse(f), &Topic::parse(t));
+        assert!(m("a/b/c", "a/b/c"));
+        assert!(!m("a/b/c", "a/b"));
+        assert!(!m("a/b", "a/b/c"));
+        assert!(m("a/+/c", "a/b/c"));
+        assert!(!m("a/+/c", "a/b/d"));
+        assert!(m("a/#", "a/b/c/d"));
+        assert!(m("#", "anything/at/all"));
+        assert!(m("a/+/+", "a/b/c"));
+        assert!(!m("+", "a/b"));
+    }
+
+    #[test]
+    fn routing_fans_out_and_dedups() {
+        let mut b = MqttBroker::default();
+        b.subscribe("cluster/1/worker/+/report", ActorId(1));
+        b.subscribe("cluster/1/#", ActorId(1)); // overlapping sub, same actor
+        b.subscribe("cluster/1/worker/7/report", ActorId(2));
+        b.subscribe("cluster/2/#", ActorId(3));
+        let got = b.route("cluster/1/worker/7/report", 180);
+        assert_eq!(got, vec![ActorId(1), ActorId(2)]);
+        assert_eq!(b.topic_stats("cluster/1/worker/7/report"), (1, 180));
+    }
+
+    #[test]
+    fn unsubscribe_removes_all_filters() {
+        let mut b = MqttBroker::default();
+        b.subscribe("a/#", ActorId(1));
+        b.subscribe("b/#", ActorId(1));
+        b.unsubscribe_actor(ActorId(1));
+        assert!(b.route("a/x", 1).is_empty());
+        assert_eq!(b.subscription_count(), 0);
+    }
+}

@@ -1,0 +1,32 @@
+//! Control-plane transports (paper §6 "Orchestration"): an MQTT-style
+//! topic broker for *intra*-cluster traffic (lightweight pub/sub between
+//! workers and their cluster orchestrator) and a WebSocket-style duplex
+//! link with liveness monitoring for *inter*-cluster traffic (cluster ↔
+//! root). Byte overheads differ deliberately — that asymmetry is part of
+//! the paper's design argument and shows up in Figs. 5/7a.
+
+mod broker;
+mod wslink;
+
+pub use broker::{MqttBroker, Topic};
+pub use wslink::{LinkHealth, WsLink};
+
+/// Fixed per-message framing overhead in bytes.
+///
+/// MQTT's minimal header is 2 bytes + topic; WebSocket frames carry a
+/// few bytes but each HTTP(S)-upgraded connection and its TLS record
+/// layer amortize to tens of bytes per message in practice.
+pub const MQTT_FRAME_OVERHEAD: usize = 2 + 16;
+pub const WS_FRAME_OVERHEAD: usize = 6 + 48;
+
+/// Canonical accounting labels for control-plane message directions,
+/// used consistently so Fig. 7a can split traffic by link.
+pub mod labels {
+    pub const WORKER_TO_CLUSTER: &str = "oak.worker->cluster";
+    pub const CLUSTER_TO_WORKER: &str = "oak.cluster->worker";
+    pub const CLUSTER_TO_ROOT: &str = "oak.cluster->root";
+    pub const ROOT_TO_CLUSTER: &str = "oak.root->cluster";
+    pub const KUBE_NODE_TO_MASTER: &str = "kube.node->master";
+    pub const KUBE_MASTER_TO_NODE: &str = "kube.master->node";
+    pub const DATA_PLANE: &str = "data";
+}

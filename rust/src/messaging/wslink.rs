@@ -1,0 +1,97 @@
+//! WebSocket-style duplex link state machine with liveness pings (paper
+//! §6: HTTP(S) WebSockets between cluster and root "implicitly allows us
+//! to monitor the liveness of both orchestrator endpoints and trigger
+//! remedial actions in case of failures").
+
+use crate::util::SimTime;
+
+/// Liveness verdict for one direction of a root↔cluster link.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum LinkHealth {
+    Healthy,
+    /// No pong for > `suspect_after` — degrade gracefully.
+    Suspect,
+    /// No pong for > `dead_after` — peer considered failed.
+    Dead,
+}
+
+/// One endpoint's view of the link.
+#[derive(Clone, Debug)]
+pub struct WsLink {
+    pub ping_interval: SimTime,
+    pub suspect_after: SimTime,
+    pub dead_after: SimTime,
+    last_pong: SimTime,
+    pub pings_sent: u64,
+    pub pongs_received: u64,
+}
+
+impl WsLink {
+    pub fn new(now: SimTime) -> Self {
+        WsLink {
+            ping_interval: SimTime::from_secs(5.0),
+            suspect_after: SimTime::from_secs(12.0),
+            dead_after: SimTime::from_secs(30.0),
+            last_pong: now,
+            pings_sent: 0,
+            pongs_received: 0,
+        }
+    }
+
+    pub fn on_ping_sent(&mut self) {
+        self.pings_sent += 1;
+    }
+
+    pub fn on_pong(&mut self, now: SimTime) {
+        self.pongs_received += 1;
+        self.last_pong = now;
+    }
+
+    /// Any inbound application message also proves liveness.
+    pub fn on_activity(&mut self, now: SimTime) {
+        self.last_pong = now;
+    }
+
+    pub fn health(&self, now: SimTime) -> LinkHealth {
+        let silence = now.saturating_sub(self.last_pong);
+        if silence >= self.dead_after {
+            LinkHealth::Dead
+        } else if silence >= self.suspect_after {
+            LinkHealth::Suspect
+        } else {
+            LinkHealth::Healthy
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn health_degrades_with_silence() {
+        let mut l = WsLink::new(SimTime::ZERO);
+        assert_eq!(l.health(SimTime::from_secs(1.0)), LinkHealth::Healthy);
+        assert_eq!(l.health(SimTime::from_secs(15.0)), LinkHealth::Suspect);
+        assert_eq!(l.health(SimTime::from_secs(31.0)), LinkHealth::Dead);
+        l.on_pong(SimTime::from_secs(31.0));
+        assert_eq!(l.health(SimTime::from_secs(32.0)), LinkHealth::Healthy);
+    }
+
+    #[test]
+    fn activity_counts_as_liveness() {
+        let mut l = WsLink::new(SimTime::ZERO);
+        l.on_activity(SimTime::from_secs(29.0));
+        assert_eq!(l.health(SimTime::from_secs(35.0)), LinkHealth::Healthy);
+    }
+
+    #[test]
+    fn counters_track() {
+        let mut l = WsLink::new(SimTime::ZERO);
+        l.on_ping_sent();
+        l.on_ping_sent();
+        l.on_pong(SimTime::from_secs(1.0));
+        assert_eq!(l.pings_sent, 2);
+        assert_eq!(l.pongs_received, 1);
+    }
+}

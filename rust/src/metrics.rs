@@ -1,0 +1,293 @@
+//! Experiment metrics: counters, byte accounting, latency histograms and
+//! per-node windowed CPU/memory utilization — the raw material for every
+//! figure in the paper's evaluation (§7) and for `EXPERIMENTS.md`.
+
+use std::collections::HashMap;
+
+use crate::util::{percentile, NodeId, SimTime};
+
+/// Latency/size sample collector with percentile queries.
+#[derive(Clone, Debug, Default)]
+pub struct Histogram {
+    samples: Vec<f64>,
+}
+
+impl Histogram {
+    pub fn record(&mut self, v: f64) {
+        self.samples.push(v);
+    }
+    pub fn count(&self) -> usize {
+        self.samples.len()
+    }
+    pub fn mean(&self) -> f64 {
+        crate::util::mean(&self.samples)
+    }
+    pub fn p50(&self) -> f64 {
+        percentile(&self.samples, 50.0)
+    }
+    pub fn p95(&self) -> f64 {
+        percentile(&self.samples, 95.0)
+    }
+    pub fn p99(&self) -> f64 {
+        percentile(&self.samples, 99.0)
+    }
+    pub fn max(&self) -> f64 {
+        self.samples.iter().cloned().fold(f64::NAN, f64::max)
+    }
+    pub fn samples(&self) -> &[f64] {
+        &self.samples
+    }
+}
+
+/// CPU/memory accounting for one node, in windows of fixed width.
+///
+/// Control-plane work is charged as `cpu_ms` against the window in which
+/// it executes; utilization% = busy-ms / window-ms (capped at the node's
+/// core count by callers charging against multiple cores). Memory is a
+/// gauge sampled at charge points.
+#[derive(Clone, Debug)]
+pub struct NodeUsage {
+    window: SimTime,
+    /// (window index → busy cpu-ms)
+    cpu_busy_ms: HashMap<u64, f64>,
+    /// resident memory gauge in MB
+    pub mem_mb: f64,
+    /// peak memory over the run
+    pub peak_mem_mb: f64,
+}
+
+impl NodeUsage {
+    pub fn new(window: SimTime) -> Self {
+        NodeUsage {
+            window,
+            cpu_busy_ms: HashMap::new(),
+            mem_mb: 0.0,
+            peak_mem_mb: 0.0,
+        }
+    }
+
+    pub fn charge_cpu(&mut self, at: SimTime, cpu_ms: f64) {
+        let idx = at.as_micros() / self.window.as_micros().max(1);
+        *self.cpu_busy_ms.entry(idx).or_insert(0.0) += cpu_ms;
+    }
+
+    pub fn set_mem(&mut self, mem_mb: f64) {
+        self.mem_mb = mem_mb;
+        if mem_mb > self.peak_mem_mb {
+            self.peak_mem_mb = mem_mb;
+        }
+    }
+
+    pub fn add_mem(&mut self, delta_mb: f64) {
+        self.set_mem((self.mem_mb + delta_mb).max(0.0));
+    }
+
+    /// Mean CPU utilization (fraction of one core) across the window range
+    /// `[from, to)`. Empty windows count as idle.
+    pub fn cpu_util(&self, from: SimTime, to: SimTime) -> f64 {
+        let w_ms = self.window.as_millis();
+        let first = from.as_micros() / self.window.as_micros().max(1);
+        let last = (to.as_micros().saturating_sub(1)) / self.window.as_micros().max(1);
+        let n = (last - first + 1) as f64;
+        let busy: f64 = (first..=last)
+            .map(|i| self.cpu_busy_ms.get(&i).copied().unwrap_or(0.0))
+            .sum();
+        (busy / (n * w_ms)).max(0.0)
+    }
+}
+
+/// Metrics hub threaded through the simulator.
+#[derive(Clone, Debug)]
+pub struct Metrics {
+    window: SimTime,
+    pub counters: HashMap<&'static str, u64>,
+    pub histograms: HashMap<&'static str, Histogram>,
+    pub node_usage: HashMap<NodeId, NodeUsage>,
+    /// Control-plane messages (count, bytes) per direction label.
+    pub msg_count: HashMap<&'static str, u64>,
+    pub msg_bytes: HashMap<&'static str, u64>,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Metrics::new(SimTime::from_secs(1.0))
+    }
+}
+
+impl Metrics {
+    pub fn new(window: SimTime) -> Self {
+        Metrics {
+            window,
+            counters: HashMap::new(),
+            histograms: HashMap::new(),
+            node_usage: HashMap::new(),
+            msg_count: HashMap::new(),
+            msg_bytes: HashMap::new(),
+        }
+    }
+
+    pub fn inc(&mut self, key: &'static str) {
+        self.add(key, 1);
+    }
+    pub fn add(&mut self, key: &'static str, n: u64) {
+        *self.counters.entry(key).or_insert(0) += n;
+    }
+    pub fn counter(&self, key: &'static str) -> u64 {
+        self.counters.get(key).copied().unwrap_or(0)
+    }
+
+    pub fn observe(&mut self, key: &'static str, v: f64) {
+        self.histograms.entry(key).or_default().record(v);
+    }
+    pub fn histogram(&self, key: &'static str) -> Option<&Histogram> {
+        self.histograms.get(key)
+    }
+
+    pub fn record_msg(&mut self, label: &'static str, bytes: usize) {
+        *self.msg_count.entry(label).or_insert(0) += 1;
+        *self.msg_bytes.entry(label).or_insert(0) += bytes as u64;
+    }
+    pub fn msgs(&self, label: &'static str) -> u64 {
+        self.msg_count.get(label).copied().unwrap_or(0)
+    }
+    pub fn bytes(&self, label: &'static str) -> u64 {
+        self.msg_bytes.get(label).copied().unwrap_or(0)
+    }
+    pub fn total_msgs(&self) -> u64 {
+        self.msg_count.values().sum()
+    }
+    pub fn total_bytes(&self) -> u64 {
+        self.msg_bytes.values().sum()
+    }
+
+    pub fn usage_mut(&mut self, node: NodeId) -> &mut NodeUsage {
+        let w = self.window;
+        self.node_usage
+            .entry(node)
+            .or_insert_with(|| NodeUsage::new(w))
+    }
+    pub fn usage(&self, node: NodeId) -> Option<&NodeUsage> {
+        self.node_usage.get(&node)
+    }
+}
+
+/// A printable results table (one per reproduced figure); renders as
+/// GitHub-flavoured markdown for EXPERIMENTS.md and as aligned text for
+/// the CLI.
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "ragged table row");
+        self.rows.push(cells);
+    }
+
+    pub fn to_markdown(&self) -> String {
+        let mut s = format!("### {}\n\n", self.title);
+        s += &format!("| {} |\n", self.headers.join(" | "));
+        s += &format!("|{}\n", "---|".repeat(self.headers.len()));
+        for r in &self.rows {
+            s += &format!("| {} |\n", r.join(" | "));
+        }
+        s
+    }
+}
+
+impl std::fmt::Display for Table {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        writeln!(f, "== {} ==", self.title)?;
+        let line = |f: &mut std::fmt::Formatter<'_>, cells: &[String]| -> std::fmt::Result {
+            for (i, c) in cells.iter().enumerate() {
+                write!(f, "{:w$}  ", c, w = widths[i])?;
+            }
+            writeln!(f)
+        };
+        line(f, &self.headers)?;
+        for r in &self.rows {
+            line(f, r)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_percentiles() {
+        let mut h = Histogram::default();
+        for i in 1..=100 {
+            h.record(i as f64);
+        }
+        assert_eq!(h.count(), 100);
+        assert!((h.p50() - 50.0).abs() <= 1.0);
+        assert!((h.p95() - 95.0).abs() <= 1.0);
+        assert_eq!(h.max(), 100.0);
+    }
+
+    #[test]
+    fn node_usage_windows() {
+        let mut u = NodeUsage::new(SimTime::from_secs(1.0));
+        // 100ms busy in window 0, 500ms busy in window 1.
+        u.charge_cpu(SimTime::from_millis(10.0), 100.0);
+        u.charge_cpu(SimTime::from_millis(1500.0), 500.0);
+        let util = u.cpu_util(SimTime::ZERO, SimTime::from_secs(2.0));
+        assert!((util - 0.3).abs() < 1e-9, "util={util}");
+        // Idle windows dilute.
+        let util4 = u.cpu_util(SimTime::ZERO, SimTime::from_secs(4.0));
+        assert!((util4 - 0.15).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mem_gauge_tracks_peak() {
+        let mut u = NodeUsage::new(SimTime::from_secs(1.0));
+        u.add_mem(100.0);
+        u.add_mem(50.0);
+        u.add_mem(-120.0);
+        assert!((u.mem_mb - 30.0).abs() < 1e-9);
+        assert!((u.peak_mem_mb - 150.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn metrics_message_accounting() {
+        let mut m = Metrics::default();
+        m.record_msg("worker->cluster", 128);
+        m.record_msg("worker->cluster", 128);
+        m.record_msg("cluster->root", 512);
+        assert_eq!(m.msgs("worker->cluster"), 2);
+        assert_eq!(m.bytes("worker->cluster"), 256);
+        assert_eq!(m.total_msgs(), 3);
+        assert_eq!(m.total_bytes(), 768);
+    }
+
+    #[test]
+    fn table_renders() {
+        let mut t = Table::new("Fig X", &["col_a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        let md = t.to_markdown();
+        assert!(md.contains("| col_a | b |"));
+        assert!(md.contains("| 1 | 2 |"));
+        let txt = format!("{t}");
+        assert!(txt.contains("Fig X"));
+    }
+}

@@ -1,0 +1,137 @@
+//! Resource capacity vectors: `C_n` (max), `U_n` (used), `A_n = C_n − U_n`
+//! (available) in the paper's notation (§4.1).
+
+use std::ops::{Add, AddAssign, Sub, SubAssign};
+
+/// A resource capacity/usage vector.
+///
+/// * `cpu_millicores` — 1000 = one vCPU (Kubernetes-style millicores).
+/// * `mem_mb` / `disk_mb` — megabytes.
+/// * `gpus` / `tpus` — discrete accelerator counts (SLA `vgpus`/`vtpus`).
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Default)]
+pub struct Capacity {
+    pub cpu_millicores: u32,
+    pub mem_mb: u32,
+    pub disk_mb: u32,
+    pub gpus: u8,
+    pub tpus: u8,
+}
+
+impl Capacity {
+    pub const ZERO: Capacity = Capacity {
+        cpu_millicores: 0,
+        mem_mb: 0,
+        disk_mb: 0,
+        gpus: 0,
+        tpus: 0,
+    };
+
+    pub fn new(cpu_millicores: u32, mem_mb: u32, disk_mb: u32) -> Self {
+        Capacity {
+            cpu_millicores,
+            mem_mb,
+            disk_mb,
+            gpus: 0,
+            tpus: 0,
+        }
+    }
+
+    /// Component-wise `self >= other` — the feasibility test of Alg. 1/2.
+    pub fn fits(&self, req: &Capacity) -> bool {
+        self.cpu_millicores >= req.cpu_millicores
+            && self.mem_mb >= req.mem_mb
+            && self.disk_mb >= req.disk_mb
+            && self.gpus >= req.gpus
+            && self.tpus >= req.tpus
+    }
+
+    /// Saturating component-wise subtraction (A = C − U never underflows).
+    #[must_use]
+    pub fn saturating_sub(&self, rhs: &Capacity) -> Capacity {
+        Capacity {
+            cpu_millicores: self.cpu_millicores.saturating_sub(rhs.cpu_millicores),
+            mem_mb: self.mem_mb.saturating_sub(rhs.mem_mb),
+            disk_mb: self.disk_mb.saturating_sub(rhs.disk_mb),
+            gpus: self.gpus.saturating_sub(rhs.gpus),
+            tpus: self.tpus.saturating_sub(rhs.tpus),
+        }
+    }
+
+    /// ROM scoring strategy (paper Alg. 1 example): spare cpu + spare mem
+    /// after placing `req`, in comparable units (cores + GB).
+    pub fn spare_score(&self, req: &Capacity) -> f64 {
+        (self.cpu_millicores as f64 - req.cpu_millicores as f64) / 1000.0
+            + (self.mem_mb as f64 - req.mem_mb as f64) / 1024.0
+    }
+}
+
+impl Add for Capacity {
+    type Output = Capacity;
+    fn add(self, rhs: Capacity) -> Capacity {
+        Capacity {
+            cpu_millicores: self.cpu_millicores + rhs.cpu_millicores,
+            mem_mb: self.mem_mb + rhs.mem_mb,
+            disk_mb: self.disk_mb + rhs.disk_mb,
+            gpus: self.gpus + rhs.gpus,
+            tpus: self.tpus + rhs.tpus,
+        }
+    }
+}
+impl AddAssign for Capacity {
+    fn add_assign(&mut self, rhs: Capacity) {
+        *self = *self + rhs;
+    }
+}
+impl Sub for Capacity {
+    type Output = Capacity;
+    fn sub(self, rhs: Capacity) -> Capacity {
+        self.saturating_sub(&rhs)
+    }
+}
+impl SubAssign for Capacity {
+    fn sub_assign(&mut self, rhs: Capacity) {
+        *self = *self - rhs;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fits_is_componentwise() {
+        let cap = Capacity::new(2000, 4096, 10_000);
+        assert!(cap.fits(&Capacity::new(2000, 4096, 10_000)));
+        assert!(cap.fits(&Capacity::new(1, 1, 1)));
+        assert!(!cap.fits(&Capacity::new(2001, 1, 1)));
+        assert!(!cap.fits(&Capacity::new(1, 5000, 1)));
+        let gpu_req = Capacity {
+            gpus: 1,
+            ..Capacity::ZERO
+        };
+        assert!(!cap.fits(&gpu_req));
+    }
+
+    #[test]
+    fn saturating_sub_never_underflows() {
+        let a = Capacity::new(100, 100, 100);
+        let b = Capacity::new(200, 50, 300);
+        let d = a.saturating_sub(&b);
+        assert_eq!(d, Capacity::new(0, 50, 0));
+    }
+
+    #[test]
+    fn spare_score_matches_kernel_strategy() {
+        let a = Capacity::new(4000, 2048, 0);
+        let req = Capacity::new(1000, 1024, 0);
+        // (4-1) cores + (2-1) GB = 4.0
+        assert!((a.spare_score(&req) - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn add_sub_roundtrip() {
+        let a = Capacity::new(1000, 2000, 3000);
+        let b = Capacity::new(10, 20, 30);
+        assert_eq!((a + b) - b, a);
+    }
+}

@@ -1,0 +1,14 @@
+//! Core domain model: capacities, nodes, virtualization runtimes, services
+//! and the service-instance lifecycle state machine (paper §6).
+
+mod capacity;
+mod node;
+mod service;
+mod virt;
+
+pub use capacity::Capacity;
+pub use node::{NodeClass, NodeProfile, WorkerSpec};
+pub use service::{
+    InstanceRecord, ServiceSpec, ServiceState, StateError, TaskSpec,
+};
+pub use virt::Virtualization;

@@ -1,0 +1,145 @@
+//! Worker node descriptions: the paper's testbed VM classes (S/M/L/XL,
+//! §7.1) and heterogeneous edge device profiles (HET testbed: Raspberry
+//! Pi, Intel NUC, mini-desktop, Jetson AGX Xavier).
+
+use super::{Capacity, Virtualization};
+use crate::geo::GeoPoint;
+use crate::util::NodeId;
+use crate::vivaldi::VivaldiState;
+
+/// HPC testbed VM sizes (paper §7.1): S/M/L/XL with 1/2/4/8 CPUs and
+/// 1/2/4/8 GB RAM — plus the HET testbed device profiles.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum NodeClass {
+    S,
+    M,
+    L,
+    XL,
+    RaspberryPi4,
+    IntelNuc,
+    MiniDesktop,
+    JetsonXavier,
+}
+
+impl NodeClass {
+    pub fn capacity(self) -> Capacity {
+        match self {
+            NodeClass::S => Capacity::new(1_000, 1_024, 16_000),
+            NodeClass::M => Capacity::new(2_000, 2_048, 32_000),
+            NodeClass::L => Capacity::new(4_000, 4_096, 64_000),
+            NodeClass::XL => Capacity::new(8_000, 8_192, 128_000),
+            NodeClass::RaspberryPi4 => Capacity::new(4_000, 4_096, 32_000),
+            NodeClass::IntelNuc => Capacity::new(4_000, 8_192, 256_000),
+            NodeClass::MiniDesktop => Capacity::new(8_000, 16_384, 512_000),
+            NodeClass::JetsonXavier => {
+                let mut c = Capacity::new(8_000, 16_384, 32_000);
+                c.gpus = 1;
+                c
+            }
+        }
+    }
+
+    /// Relative single-core speed factor (x86 server core = 1.0). Scales
+    /// compute costs in the simulator — e.g. the Pi runs the same control
+    /// loop slower, which is exactly what the HET experiments show.
+    pub fn speed_factor(self) -> f64 {
+        match self {
+            NodeClass::S | NodeClass::M | NodeClass::L | NodeClass::XL => 1.0,
+            NodeClass::RaspberryPi4 => 0.35,
+            NodeClass::IntelNuc => 0.9,
+            NodeClass::MiniDesktop => 1.1,
+            NodeClass::JetsonXavier => 0.7,
+        }
+    }
+
+    pub fn virtualization(self) -> Virtualization {
+        match self {
+            NodeClass::RaspberryPi4 => Virtualization::CONTAINER.union(Virtualization::WASM),
+            _ => Virtualization::all(),
+        }
+    }
+}
+
+/// Static description of a worker at registration time (paper §3.2.3:
+/// capacity, capabilities, runtimes reported to the cluster orchestrator).
+#[derive(Clone, Debug)]
+pub struct WorkerSpec {
+    pub node: NodeId,
+    pub class: NodeClass,
+    pub location: GeoPoint,
+}
+
+impl WorkerSpec {
+    pub fn capacity(&self) -> Capacity {
+        self.class.capacity()
+    }
+    pub fn virtualization(&self) -> Virtualization {
+        self.class.virtualization()
+    }
+}
+
+/// Live view the cluster orchestrator keeps per worker (`A_n`, Alg. 1/2
+/// input): refreshed by push-based telemetry (§4.1).
+#[derive(Clone, Debug)]
+pub struct NodeProfile {
+    pub spec: WorkerSpec,
+    pub used: Capacity,
+    pub vivaldi: VivaldiState,
+    /// Number of service instances currently placed here.
+    pub instances: usize,
+}
+
+impl NodeProfile {
+    pub fn new(spec: WorkerSpec) -> Self {
+        NodeProfile {
+            spec,
+            used: Capacity::ZERO,
+            vivaldi: VivaldiState::default(),
+            instances: 0,
+        }
+    }
+
+    /// Available capacity `A_n = C_n − U_n`.
+    pub fn available(&self) -> Capacity {
+        self.spec.capacity().saturating_sub(&self.used)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn class_capacities_follow_paper_table() {
+        assert_eq!(NodeClass::S.capacity().cpu_millicores, 1_000);
+        assert_eq!(NodeClass::M.capacity().mem_mb, 2_048);
+        assert_eq!(NodeClass::L.capacity().cpu_millicores, 4_000);
+        assert_eq!(NodeClass::XL.capacity().mem_mb, 8_192);
+    }
+
+    #[test]
+    fn available_tracks_usage() {
+        let spec = WorkerSpec {
+            node: NodeId(1),
+            class: NodeClass::S,
+            location: GeoPoint::default(),
+        };
+        let mut p = NodeProfile::new(spec);
+        assert_eq!(p.available(), NodeClass::S.capacity());
+        p.used = Capacity::new(400, 512, 0);
+        assert_eq!(p.available().cpu_millicores, 600);
+        assert_eq!(p.available().mem_mb, 512);
+        // Overcommit reports zero available, not underflow.
+        p.used = Capacity::new(2_000, 4_096, 0);
+        assert_eq!(p.available().cpu_millicores, 0);
+    }
+
+    #[test]
+    fn het_devices_are_heterogeneous() {
+        assert!(NodeClass::RaspberryPi4.speed_factor() < NodeClass::IntelNuc.speed_factor());
+        assert_eq!(NodeClass::JetsonXavier.capacity().gpus, 1);
+        assert!(!NodeClass::RaspberryPi4
+            .virtualization()
+            .supports(Virtualization::VM));
+    }
+}

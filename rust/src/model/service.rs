@@ -1,0 +1,179 @@
+//! Services, tasks (microservices) and the instance lifecycle state
+//! machine (paper §6: requested → scheduled → running → {terminated,
+//! failed}, with migration/replication handled as new scheduling
+//! requests).
+
+use crate::model::{Capacity, Virtualization};
+use crate::sla::TaskSla;
+use crate::util::{InstanceId, NodeId, ServiceId, TaskId};
+
+/// One microservice `τ_{p,i}` of a service: what gets placed on a worker.
+#[derive(Clone, Debug)]
+pub struct TaskSpec {
+    pub id: TaskId,
+    pub name: String,
+    /// Requested capacity `Q_{τ_{p,i}}`.
+    pub request: Capacity,
+    pub virtualization: Virtualization,
+    /// Container image size in MB (drives simulated pull time).
+    pub image_mb: u32,
+    /// Full SLA row for this task (latency/geo constraints etc.).
+    pub sla: TaskSla,
+}
+
+/// An application service `s_p = {τ_{p,1}, …, τ_{p,n}}` submitted at the
+/// root (paper §4.2).
+#[derive(Clone, Debug)]
+pub struct ServiceSpec {
+    pub id: ServiceId,
+    pub name: String,
+    pub tasks: Vec<TaskSpec>,
+}
+
+impl ServiceSpec {
+    pub fn task(&self, id: TaskId) -> Option<&TaskSpec> {
+        self.tasks.iter().find(|t| t.id == id)
+    }
+}
+
+/// Lifecycle of one deployed task instance (paper §6 state machine).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum ServiceState {
+    /// Root scheduler has initiated scheduling.
+    Requested,
+    /// A cluster found a suitable worker; deployment command in flight.
+    Scheduled,
+    /// Worker reports the instance operational.
+    Running,
+    /// Undeployed deliberately (after successful migration, or teardown).
+    Terminated,
+    /// Unexpected early termination / resource failure / SLA violation.
+    Failed,
+}
+
+/// Error for illegal state-machine transitions.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub struct StateError {
+    pub from: ServiceState,
+    pub to: ServiceState,
+}
+
+impl std::fmt::Display for StateError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "illegal transition {:?} -> {:?}", self.from, self.to)
+    }
+}
+impl std::error::Error for StateError {}
+
+impl ServiceState {
+    /// Legal transitions of the paper's lifecycle. Failures are legal from
+    /// every live state (resources can die at any point at the edge).
+    pub fn can_transition(self, to: ServiceState) -> bool {
+        use ServiceState::*;
+        matches!(
+            (self, to),
+            (Requested, Scheduled)
+                | (Requested, Failed)
+                | (Scheduled, Running)
+                | (Scheduled, Failed)
+                | (Running, Terminated)
+                | (Running, Failed)
+        )
+    }
+
+    pub fn is_terminal(self) -> bool {
+        matches!(self, ServiceState::Terminated | ServiceState::Failed)
+    }
+}
+
+/// A deployed (or deploying) instance of a task, tracked by the service
+/// managers at both cluster and root tier.
+#[derive(Clone, Debug)]
+pub struct InstanceRecord {
+    pub instance: InstanceId,
+    pub task: TaskId,
+    pub state: ServiceState,
+    /// Worker hosting the instance (None until scheduled).
+    pub worker: Option<NodeId>,
+    /// Generation counter: bumped on every migration/replication.
+    pub generation: u32,
+}
+
+impl InstanceRecord {
+    pub fn new(instance: InstanceId, task: TaskId) -> Self {
+        InstanceRecord {
+            instance,
+            task,
+            state: ServiceState::Requested,
+            worker: None,
+            generation: 0,
+        }
+    }
+
+    /// Enforce the legal lifecycle; callers must handle errors (they mean
+    /// a protocol bug, not an environmental failure).
+    pub fn transition(&mut self, to: ServiceState) -> Result<(), StateError> {
+        if self.state.can_transition(to) {
+            self.state = to;
+            Ok(())
+        } else {
+            Err(StateError {
+                from: self.state,
+                to,
+            })
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use ServiceState::*;
+
+    #[test]
+    fn happy_path_lifecycle() {
+        let mut r = InstanceRecord::new(InstanceId(1), TaskId::default());
+        assert_eq!(r.state, Requested);
+        r.transition(Scheduled).unwrap();
+        r.transition(Running).unwrap();
+        r.transition(Terminated).unwrap();
+        assert!(r.state.is_terminal());
+    }
+
+    #[test]
+    fn failure_possible_from_all_live_states() {
+        for (path, expect_ok) in [
+            (vec![Failed], true),
+            (vec![Scheduled, Failed], true),
+            (vec![Scheduled, Running, Failed], true),
+        ] {
+            let mut r = InstanceRecord::new(InstanceId(1), TaskId::default());
+            let mut ok = true;
+            for s in path {
+                ok &= r.transition(s).is_ok();
+            }
+            assert_eq!(ok, expect_ok);
+        }
+    }
+
+    #[test]
+    fn illegal_transitions_rejected() {
+        let mut r = InstanceRecord::new(InstanceId(1), TaskId::default());
+        assert!(r.transition(Running).is_err()); // must schedule first
+        r.transition(Scheduled).unwrap();
+        assert!(r.transition(Requested).is_err()); // no going back
+        r.transition(Running).unwrap();
+        r.transition(Terminated).unwrap();
+        assert!(r.transition(Running).is_err()); // terminal is terminal
+        assert!(r.transition(Failed).is_err());
+    }
+
+    #[test]
+    fn terminal_states() {
+        assert!(Terminated.is_terminal());
+        assert!(Failed.is_terminal());
+        assert!(!Running.is_terminal());
+        assert!(!Requested.is_terminal());
+        assert!(!Scheduled.is_terminal());
+    }
+}

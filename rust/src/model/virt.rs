@@ -1,0 +1,73 @@
+//! Virtualization technologies (SLA `virtualization` field, Schema 1) as a
+//! bitmask — a worker advertises the set it supports, a task requires a
+//! subset (`Q^virt ∈ A^virt` in Alg. 1/2). The bit layout matches the i32
+//! encoding fed to the `ldp_score` HLO artifact.
+
+/// Supported execution runtimes as a bitmask.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug, Default)]
+pub struct Virtualization(pub u32);
+
+impl Virtualization {
+    pub const CONTAINER: Virtualization = Virtualization(1 << 0); // docker/containerd
+    pub const UNIKERNEL: Virtualization = Virtualization(1 << 1);
+    pub const VM: Virtualization = Virtualization(1 << 2); // kvm/qemu microVM
+    pub const WASM: Virtualization = Virtualization(1 << 3);
+    pub const NONE: Virtualization = Virtualization(0);
+
+    pub fn all() -> Virtualization {
+        Virtualization(0b1111)
+    }
+
+    /// Does this (advertised) set support every bit of `req`?
+    pub fn supports(&self, req: Virtualization) -> bool {
+        self.0 & req.0 == req.0
+    }
+
+    pub fn union(&self, other: Virtualization) -> Virtualization {
+        Virtualization(self.0 | other.0)
+    }
+
+    /// Parse the SLA string form (comma-separated names).
+    pub fn parse(s: &str) -> Option<Virtualization> {
+        let mut v = Virtualization::NONE;
+        for part in s.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            v = v.union(match part.to_ascii_lowercase().as_str() {
+                "container" | "docker" | "containerd" => Self::CONTAINER,
+                "unikernel" => Self::UNIKERNEL,
+                "vm" | "microvm" | "kvm" => Self::VM,
+                "wasm" | "webassembly" => Self::WASM,
+                _ => return None,
+            });
+        }
+        Some(v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn supports_requires_superset() {
+        let w = Virtualization::CONTAINER.union(Virtualization::WASM);
+        assert!(w.supports(Virtualization::CONTAINER));
+        assert!(w.supports(Virtualization::NONE));
+        assert!(w.supports(Virtualization::CONTAINER.union(Virtualization::WASM)));
+        assert!(!w.supports(Virtualization::VM));
+        assert!(!w.supports(Virtualization::CONTAINER.union(Virtualization::VM)));
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        assert_eq!(
+            Virtualization::parse("container"),
+            Some(Virtualization::CONTAINER)
+        );
+        assert_eq!(
+            Virtualization::parse("docker, wasm"),
+            Some(Virtualization::CONTAINER.union(Virtualization::WASM))
+        );
+        assert_eq!(Virtualization::parse(""), Some(Virtualization::NONE));
+        assert_eq!(Virtualization::parse("quantum"), None);
+    }
+}

@@ -1,0 +1,115 @@
+//! Edge-oriented load balancing (paper §5): clients want not only a
+//! lightly-loaded instance but the one deployed *closest* to them. Policy
+//! resolution happens in the worker's ProxyTUN at connection time.
+
+use super::{ConversionTable, InstanceLocation, ServiceIp};
+
+/// Balancing policy carried by a semantic ServiceIP.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum BalancePolicy {
+    RoundRobin,
+    Closest,
+}
+
+/// Resolve a ServiceIP to one concrete instance using the worker's table.
+/// Returns `None` when the table has no live locations (caller then asks
+/// the cluster service manager and retries).
+pub fn pick_instance(
+    table: &mut ConversionTable,
+    ip: &ServiceIp,
+) -> Option<InstanceLocation> {
+    match ip {
+        ServiceIp::Instance(inst) => {
+            let locs = table.lookup(ip)?;
+            locs.iter().find(|l| l.instance == *inst).copied()
+        }
+        ServiceIp::RoundRobin(task) => {
+            let locs = table.lookup(ip)?.to_vec();
+            let i = table.rr_next(*task, locs.len());
+            locs.get(i).copied()
+        }
+        ServiceIp::Closest(_) => {
+            let locs = table.lookup(ip)?;
+            locs.iter()
+                .min_by(|a, b| a.rtt_ms.partial_cmp(&b.rtt_ms).unwrap())
+                .copied()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netmanager::TableEntry;
+    use crate::util::{InstanceId, NodeId, ServiceId, TaskId};
+
+    fn tid() -> TaskId {
+        TaskId {
+            service: ServiceId(1),
+            index: 0,
+        }
+    }
+
+    fn table() -> ConversionTable {
+        let mut t = ConversionTable::default();
+        t.apply(TableEntry {
+            task: tid(),
+            locations: vec![
+                InstanceLocation {
+                    instance: InstanceId(1),
+                    task: tid(),
+                    node: NodeId(10),
+                    rtt_ms: 25.0,
+                },
+                InstanceLocation {
+                    instance: InstanceId(2),
+                    task: tid(),
+                    node: NodeId(11),
+                    rtt_ms: 5.0,
+                },
+                InstanceLocation {
+                    instance: InstanceId(3),
+                    task: tid(),
+                    node: NodeId(12),
+                    rtt_ms: 90.0,
+                },
+            ],
+        });
+        t
+    }
+
+    #[test]
+    fn closest_picks_min_rtt() {
+        let mut t = table();
+        let got = pick_instance(&mut t, &ServiceIp::Closest(tid())).unwrap();
+        assert_eq!(got.instance, InstanceId(2));
+    }
+
+    #[test]
+    fn round_robin_rotates_over_all() {
+        let mut t = table();
+        let picks: Vec<u64> = (0..6)
+            .map(|_| {
+                pick_instance(&mut t, &ServiceIp::RoundRobin(tid()))
+                    .unwrap()
+                    .instance
+                    .0
+            })
+            .collect();
+        assert_eq!(picks, vec![1, 2, 3, 1, 2, 3]);
+    }
+
+    #[test]
+    fn instance_address_is_exact() {
+        let mut t = table();
+        let got = pick_instance(&mut t, &ServiceIp::Instance(InstanceId(3))).unwrap();
+        assert_eq!(got.node, NodeId(12));
+    }
+
+    #[test]
+    fn empty_table_returns_none() {
+        let mut t = ConversionTable::default();
+        assert!(pick_instance(&mut t, &ServiceIp::Closest(tid())).is_none());
+        assert_eq!(t.misses, 1);
+    }
+}

@@ -1,0 +1,91 @@
+//! Local mDNS-style naming (paper §5): services address peers by
+//! `name.policy` names (e.g. `serviceB.closest`) instead of raw IPs; the
+//! worker-local resolver maps names to semantic ServiceIPs.
+
+use std::collections::HashMap;
+
+use crate::util::TaskId;
+
+use super::ServiceIp;
+
+/// Worker-local name resolver.
+#[derive(Clone, Debug, Default)]
+pub struct Mdns {
+    names: HashMap<String, TaskId>,
+}
+
+impl Mdns {
+    /// Register a service name (done by the NodeEngine at deploy time from
+    /// the orchestrator-provided service metadata).
+    pub fn register(&mut self, name: &str, task: TaskId) {
+        self.names.insert(name.to_ascii_lowercase(), task);
+    }
+
+    pub fn unregister(&mut self, name: &str) {
+        self.names.remove(&name.to_ascii_lowercase());
+    }
+
+    /// Resolve `service.policy` → ServiceIP. Bare names default to the
+    /// round-robin policy. Unknown names or policies resolve to `None`.
+    pub fn resolve(&self, qname: &str) -> Option<ServiceIp> {
+        let q = qname.to_ascii_lowercase();
+        let (name, policy) = match q.rsplit_once('.') {
+            Some((n, p)) => (n, p),
+            None => (q.as_str(), "round_robin"),
+        };
+        // A dot that isn't a known policy is part of the name itself.
+        let (name, policy) = match policy {
+            "closest" | "round_robin" | "rr" => (name, policy),
+            _ => (q.as_str(), "round_robin"),
+        };
+        let task = *self.names.get(name)?;
+        Some(match policy {
+            "closest" => ServiceIp::Closest(task),
+            _ => ServiceIp::RoundRobin(task),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::ServiceId;
+
+    fn tid(i: u16) -> TaskId {
+        TaskId {
+            service: ServiceId(3),
+            index: i,
+        }
+    }
+
+    #[test]
+    fn resolve_policies() {
+        let mut m = Mdns::default();
+        m.register("serviceB", tid(1));
+        assert_eq!(m.resolve("serviceB.closest"), Some(ServiceIp::Closest(tid(1))));
+        assert_eq!(
+            m.resolve("serviceb.round_robin"),
+            Some(ServiceIp::RoundRobin(tid(1)))
+        );
+        assert_eq!(m.resolve("serviceB"), Some(ServiceIp::RoundRobin(tid(1))));
+        assert_eq!(m.resolve("unknown.closest"), None);
+    }
+
+    #[test]
+    fn dotted_names_without_policy() {
+        let mut m = Mdns::default();
+        m.register("video.detector", tid(2));
+        assert_eq!(
+            m.resolve("video.detector"),
+            Some(ServiceIp::RoundRobin(tid(2)))
+        );
+    }
+
+    #[test]
+    fn unregister_removes() {
+        let mut m = Mdns::default();
+        m.register("x", tid(0));
+        m.unregister("X");
+        assert_eq!(m.resolve("x"), None);
+    }
+}

@@ -1,0 +1,55 @@
+//! Semantic overlay networking (paper §5): logical service addressing that
+//! stays stable across migrations/failures, balancing-policy ServiceIPs,
+//! per-worker address conversion tables, and the ProxyTUN tunnel manager
+//! with configured/active link distinction and LRU eviction.
+
+mod balancer;
+mod mdns;
+mod subnet;
+mod table;
+mod tunnel;
+
+pub use balancer::{pick_instance, BalancePolicy};
+pub use mdns::Mdns;
+pub use subnet::SubnetAllocator;
+pub use table::{ConversionTable, TableEntry};
+pub use tunnel::{
+    tunnel_transfer_time, ProxyTun, TunnelState, HANDSHAKE_MS, OAK_PKT_OVERHEAD_MS,
+    WG_PKT_OVERHEAD_MS,
+};
+
+use crate::util::{InstanceId, NodeId, TaskId};
+
+/// A semantic service address (paper §5): either a concrete instance's
+/// logical IP, or a policy address that resolves to "the instance that
+/// best suits that policy" at connection time.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub enum ServiceIp {
+    /// Logical address of one specific instance (stable across node moves).
+    Instance(InstanceId),
+    /// `serviceX.round_robin` — rotate over live instances.
+    RoundRobin(TaskId),
+    /// `serviceX.closest` — lowest-latency live instance (Vivaldi).
+    Closest(TaskId),
+}
+
+impl ServiceIp {
+    /// The task this address belongs to, if policy-addressed.
+    pub fn task(&self) -> Option<TaskId> {
+        match self {
+            ServiceIp::Instance(_) => None,
+            ServiceIp::RoundRobin(t) | ServiceIp::Closest(t) => Some(*t),
+        }
+    }
+}
+
+/// Where one live instance of a task currently is: the value side of the
+/// conversion table.
+#[derive(Clone, Copy, PartialEq, Debug)]
+pub struct InstanceLocation {
+    pub instance: InstanceId,
+    pub task: TaskId,
+    pub node: NodeId,
+    /// RTT estimate from the table owner to this instance, ms (Vivaldi).
+    pub rtt_ms: f64,
+}

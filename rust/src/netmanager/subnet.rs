@@ -1,0 +1,97 @@
+//! Per-worker overlay subnet allocation: each worker obtains a unique
+//! subnetwork during the registration handshake (paper §6 Networking) and
+//! maps each deployed instance to a logical address inside it.
+
+use std::collections::HashMap;
+
+use crate::util::{InstanceId, NodeId};
+
+/// Allocates `/24`-style index ranges out of a flat u32 space; subnet `s`
+/// spans logical addresses `[s << 8, (s+1) << 8)`.
+#[derive(Clone, Debug, Default)]
+pub struct SubnetAllocator {
+    next: u32,
+    by_node: HashMap<NodeId, u32>,
+    /// next host index within each subnet
+    host_next: HashMap<u32, u32>,
+    freed: Vec<u32>,
+}
+
+impl SubnetAllocator {
+    /// Assign (or return the existing) subnet for a worker.
+    pub fn subnet_for(&mut self, node: NodeId) -> u32 {
+        if let Some(s) = self.by_node.get(&node) {
+            return *s;
+        }
+        let s = self.freed.pop().unwrap_or_else(|| {
+            let s = self.next;
+            self.next += 1;
+            s
+        });
+        self.by_node.insert(node, s);
+        self.host_next.insert(s, 1);
+        s
+    }
+
+    /// Mint a logical address for an instance inside the worker's subnet.
+    pub fn logical_addr(&mut self, node: NodeId, _instance: InstanceId) -> u32 {
+        let s = self.subnet_for(node);
+        let h = self.host_next.entry(s).or_insert(1);
+        let addr = (s << 8) | (*h & 0xFF);
+        *h += 1;
+        addr
+    }
+
+    /// Release a departed worker's subnet for reuse.
+    pub fn release(&mut self, node: NodeId) {
+        if let Some(s) = self.by_node.remove(&node) {
+            self.host_next.remove(&s);
+            self.freed.push(s);
+        }
+    }
+
+    pub fn subnet_of_addr(addr: u32) -> u32 {
+        addr >> 8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn subnets_are_unique_per_node() {
+        let mut a = SubnetAllocator::default();
+        let s1 = a.subnet_for(NodeId(1));
+        let s2 = a.subnet_for(NodeId(2));
+        assert_ne!(s1, s2);
+        assert_eq!(a.subnet_for(NodeId(1)), s1); // stable
+    }
+
+    #[test]
+    fn logical_addrs_stay_inside_subnet() {
+        let mut a = SubnetAllocator::default();
+        let s = a.subnet_for(NodeId(9));
+        for i in 0..10 {
+            let addr = a.logical_addr(NodeId(9), InstanceId(i));
+            assert_eq!(SubnetAllocator::subnet_of_addr(addr), s);
+        }
+    }
+
+    #[test]
+    fn release_recycles() {
+        let mut a = SubnetAllocator::default();
+        let s1 = a.subnet_for(NodeId(1));
+        a.release(NodeId(1));
+        let s2 = a.subnet_for(NodeId(2));
+        assert_eq!(s1, s2);
+    }
+
+    #[test]
+    fn addrs_unique_within_node() {
+        let mut a = SubnetAllocator::default();
+        let x = a.logical_addr(NodeId(1), InstanceId(1));
+        let y = a.logical_addr(NodeId(1), InstanceId(2));
+        assert_ne!(x, y);
+    }
+}

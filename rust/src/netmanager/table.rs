@@ -1,0 +1,178 @@
+//! The per-worker address conversion table (paper §5, Fig. 2): maps
+//! semantic ServiceIPs to the current set of instance locations. Entries
+//! start `null` at worker boot (t=0), fill on demand via cluster
+//! resolution, and are invalidated/refreshed by push updates from the
+//! orchestrator on migrations, scaling and undeployment.
+
+use std::collections::HashMap;
+
+use crate::util::TaskId;
+
+use super::{InstanceLocation, ServiceIp};
+
+/// One pushed/resolved table row: all live locations for one task.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TableEntry {
+    pub task: TaskId,
+    pub locations: Vec<InstanceLocation>,
+}
+
+/// The conversion table held by each worker's NetManager.
+#[derive(Clone, Debug, Default)]
+pub struct ConversionTable {
+    entries: HashMap<TaskId, Vec<InstanceLocation>>,
+    /// Round-robin cursors per task.
+    rr_cursor: HashMap<TaskId, usize>,
+    /// Resolution misses observed (each triggers a ResolveIp round-trip).
+    pub misses: u64,
+    /// Push updates applied.
+    pub updates: u64,
+}
+
+impl ConversionTable {
+    /// Look up the instances backing a ServiceIP. `None` means unknown
+    /// task — the caller must ask the cluster service manager (step ⑩).
+    pub fn lookup(&mut self, ip: &ServiceIp) -> Option<&[InstanceLocation]> {
+        let task = match ip {
+            ServiceIp::Instance(inst) => {
+                // Instance addresses resolve by scanning known rows.
+                let hit = self
+                    .entries
+                    .values()
+                    .flatten()
+                    .any(|l| l.instance == *inst);
+                if !hit {
+                    self.misses += 1;
+                    return None;
+                }
+                return self
+                    .entries
+                    .values()
+                    .find(|locs| locs.iter().any(|l| l.instance == *inst))
+                    .map(|v| v.as_slice());
+            }
+            ServiceIp::RoundRobin(t) | ServiceIp::Closest(t) => *t,
+        };
+        match self.entries.get(&task) {
+            Some(v) if !v.is_empty() => Some(v.as_slice()),
+            _ => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Apply a pushed/resolved entry (replaces the task's full row —
+    /// updates are authoritative snapshots from the orchestrator).
+    pub fn apply(&mut self, entry: TableEntry) {
+        self.updates += 1;
+        if entry.locations.is_empty() {
+            self.entries.remove(&entry.task);
+        } else {
+            self.entries.insert(entry.task, entry.locations);
+        }
+    }
+
+    /// Drop every location on a given node (local failure observation —
+    /// the authoritative update will follow from the orchestrator).
+    pub fn invalidate_node(&mut self, node: crate::util::NodeId) {
+        for locs in self.entries.values_mut() {
+            locs.retain(|l| l.node != node);
+        }
+        self.entries.retain(|_, v| !v.is_empty());
+    }
+
+    /// Advance and return the round-robin cursor for a task.
+    pub fn rr_next(&mut self, task: TaskId, len: usize) -> usize {
+        let c = self.rr_cursor.entry(task).or_insert(0);
+        let i = *c % len.max(1);
+        *c = c.wrapping_add(1);
+        i
+    }
+
+    pub fn known_tasks(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn locations(&self, task: TaskId) -> Option<&[InstanceLocation]> {
+        self.entries.get(&task).map(Vec::as_slice)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{InstanceId, NodeId, ServiceId};
+
+    fn tid(i: u16) -> TaskId {
+        TaskId {
+            service: ServiceId(1),
+            index: i,
+        }
+    }
+    fn loc(inst: u64, node: u32, rtt: f64) -> InstanceLocation {
+        InstanceLocation {
+            instance: InstanceId(inst),
+            task: tid(0),
+            node: NodeId(node),
+            rtt_ms: rtt,
+        }
+    }
+
+    #[test]
+    fn starts_empty_and_counts_misses() {
+        let mut t = ConversionTable::default();
+        assert!(t.lookup(&ServiceIp::Closest(tid(0))).is_none());
+        assert!(t.lookup(&ServiceIp::Instance(InstanceId(1))).is_none());
+        assert_eq!(t.misses, 2);
+    }
+
+    #[test]
+    fn apply_then_lookup() {
+        let mut t = ConversionTable::default();
+        t.apply(TableEntry {
+            task: tid(0),
+            locations: vec![loc(1, 10, 5.0), loc(2, 11, 9.0)],
+        });
+        let got = t.lookup(&ServiceIp::RoundRobin(tid(0))).unwrap();
+        assert_eq!(got.len(), 2);
+        assert!(t.lookup(&ServiceIp::Instance(InstanceId(2))).is_some());
+        assert_eq!(t.misses, 0);
+    }
+
+    #[test]
+    fn empty_update_removes_row() {
+        let mut t = ConversionTable::default();
+        t.apply(TableEntry {
+            task: tid(0),
+            locations: vec![loc(1, 10, 5.0)],
+        });
+        t.apply(TableEntry {
+            task: tid(0),
+            locations: vec![],
+        });
+        assert!(t.lookup(&ServiceIp::Closest(tid(0))).is_none());
+    }
+
+    #[test]
+    fn invalidate_node_prunes() {
+        let mut t = ConversionTable::default();
+        t.apply(TableEntry {
+            task: tid(0),
+            locations: vec![loc(1, 10, 5.0), loc(2, 11, 9.0)],
+        });
+        t.invalidate_node(NodeId(10));
+        let got = t.locations(tid(0)).unwrap();
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].node, NodeId(11));
+        t.invalidate_node(NodeId(11));
+        assert!(t.locations(tid(0)).is_none());
+    }
+
+    #[test]
+    fn rr_cursor_cycles() {
+        let mut t = ConversionTable::default();
+        let seq: Vec<usize> = (0..6).map(|_| t.rr_next(tid(0), 3)).collect();
+        assert_eq!(seq, vec![0, 1, 2, 0, 1, 2]);
+    }
+}

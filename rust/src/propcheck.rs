@@ -1,0 +1,85 @@
+//! Lightweight property-based testing harness (the vendored offline crate
+//! set has no proptest, so invariant tests use this instead — see
+//! Cargo.toml). Runs a property over many deterministic random cases,
+//! reporting the failing case seed so a failure reproduces exactly.
+
+use crate::util::Rng;
+
+/// Run `property` over `cases` seeded RNG streams. Panics with the
+/// offending case seed on the first failure (re-run with
+/// `check_one(seed, property)` to reproduce).
+pub fn check<F>(name: &str, cases: u32, mut property: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let seed = 0x9E37_0000_u64 + case as u64;
+        let mut rng = Rng::seeded(seed);
+        if let Err(msg) = property(&mut rng) {
+            panic!("property '{name}' failed at case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Re-run one failing case by seed.
+pub fn check_one<F>(seed: u64, mut property: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    let mut rng = Rng::seeded(seed);
+    if let Err(msg) = property(&mut rng) {
+        panic!("property failed (seed {seed:#x}): {msg}");
+    }
+}
+
+/// Assertion helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !($cond) {
+            return Err(format!($($fmt)+));
+        }
+    };
+    ($cond:expr) => {
+        if !($cond) {
+            return Err(format!("assertion failed: {}", stringify!($cond)));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut runs = 0;
+        check("trivial", 50, |rng| {
+            runs += 1;
+            let x = rng.f64();
+            prop_assert!((0.0..1.0).contains(&x));
+            Ok(())
+        });
+        assert_eq!(runs, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'bad'")]
+    fn failing_property_panics_with_seed() {
+        check("bad", 10, |rng| {
+            let x = rng.f64();
+            prop_assert!(x < 0.5, "x={x} too big");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn check_one_reproduces() {
+        // Same seed must behave identically.
+        let probe = |rng: &mut crate::util::Rng| rng.next_u64();
+        let mut r1 = crate::util::Rng::seeded(0x9E37_0000);
+        let mut r2 = crate::util::Rng::seeded(0x9E37_0000);
+        assert_eq!(probe(&mut r1), probe(&mut r2));
+        check_one(12345, |_| Ok(()));
+    }
+}

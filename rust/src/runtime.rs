@@ -1,0 +1,532 @@
+//! PJRT runtime bridge: loads the HLO **text** artifacts produced by
+//! `python/compile/aot.py` and executes them from the Rust hot path —
+//! Python never runs at request time.
+//!
+//! Wiring follows /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`. Executables are compiled once and cached
+//! per entry name. All entries are lowered with `return_tuple=True`, so
+//! results unwrap via `Literal::to_tuple()`.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow as eyre, Context, Result};
+
+/// Input/output spec of one AOT entry (mirrors manifest.json).
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+#[derive(Clone, Debug)]
+pub struct EntrySpec {
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// Parsed artifact manifest + directory.
+#[derive(Clone, Debug)]
+pub struct Artifacts {
+    pub dir: PathBuf,
+    pub entries: HashMap<String, EntrySpec>,
+}
+
+impl Artifacts {
+    /// Load from an explicit directory.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Artifacts> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest)
+            .with_context(|| format!("reading {}", manifest.display()))?;
+        let v = crate::json::parse(&text)?;
+        let mut entries = HashMap::new();
+        let obj = v
+            .as_object()
+            .ok_or_else(|| eyre!("manifest root must be an object"))?;
+        for (name, e) in obj {
+            let tensor = |t: &crate::json::Value| -> Result<TensorSpec> {
+                Ok(TensorSpec {
+                    shape: t
+                        .get("shape")
+                        .as_array()
+                        .ok_or_else(|| eyre!("bad shape"))?
+                        .iter()
+                        .map(|d| d.as_u64().unwrap_or(0) as usize)
+                        .collect(),
+                    dtype: t
+                        .get("dtype")
+                        .as_str()
+                        .ok_or_else(|| eyre!("bad dtype"))?
+                        .to_string(),
+                })
+            };
+            let specs = |key: &str| -> Result<Vec<TensorSpec>> {
+                e.get(key)
+                    .as_array()
+                    .ok_or_else(|| eyre!("bad {key} list"))?
+                    .iter()
+                    .map(tensor)
+                    .collect()
+            };
+            entries.insert(
+                name.clone(),
+                EntrySpec {
+                    file: e
+                        .get("file")
+                        .as_str()
+                        .ok_or_else(|| eyre!("entry {name} missing file"))?
+                        .to_string(),
+                    inputs: specs("inputs")?,
+                    outputs: specs("outputs")?,
+                },
+            );
+        }
+        Ok(Artifacts { dir, entries })
+    }
+
+    /// Resolve via `OAKESTRA_ARTIFACTS` env var or `./artifacts`.
+    pub fn discover() -> Result<Artifacts> {
+        let dir = std::env::var("OAKESTRA_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"));
+        Self::load(dir)
+    }
+
+    pub fn path_of(&self, entry: &str) -> Result<PathBuf> {
+        let spec = self
+            .entries
+            .get(entry)
+            .ok_or_else(|| eyre!("unknown artifact entry {entry}"))?;
+        Ok(self.dir.join(&spec.file))
+    }
+}
+
+/// PJRT engine: CPU client + compile-once executable cache.
+pub struct PjrtEngine {
+    client: xla::PjRtClient,
+    artifacts: Artifacts,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// Executions performed (perf accounting).
+    pub executions: u64,
+}
+
+impl PjrtEngine {
+    pub fn new(artifacts: Artifacts) -> Result<PjrtEngine> {
+        let client = xla::PjRtClient::cpu()?;
+        Ok(PjrtEngine {
+            client,
+            artifacts,
+            cache: HashMap::new(),
+            executions: 0,
+        })
+    }
+
+    pub fn discover() -> Result<PjrtEngine> {
+        Self::new(Artifacts::discover()?)
+    }
+
+    pub fn has_entry(&self, entry: &str) -> bool {
+        self.artifacts.entries.contains_key(entry)
+    }
+
+    /// Compile (or fetch the cached) executable for an entry.
+    pub fn executable(&mut self, entry: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.cache.contains_key(entry) {
+            let path = self.artifacts.path_of(entry)?;
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| eyre!("non-utf8 path"))?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            self.cache.insert(entry.to_string(), exe);
+        }
+        Ok(&self.cache[entry])
+    }
+
+    /// Execute an entry with literal inputs; returns the unpacked tuple.
+    pub fn run(&mut self, entry: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        self.executions += 1;
+        let exe = self.executable(entry)?;
+        let result = exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
+        Ok(result.to_tuple()?)
+    }
+}
+
+/// Worker feature row fed to the accelerated LDP scorer.
+#[derive(Clone, Copy, Debug)]
+pub struct LdpWorkerRow {
+    pub cpu: f32,
+    pub mem: f32,
+    pub disk: f32,
+    pub virt_bits: i32,
+    pub lat_rad: f32,
+    pub lon_rad: f32,
+    pub viv: [f32; 4],
+}
+
+/// One constraint row (S2S or S2U after trilateration).
+#[derive(Clone, Copy, Debug)]
+pub struct LdpConstraintRow {
+    pub geo_lat_rad: f32,
+    pub geo_lon_rad: f32,
+    pub viv: [f32; 4],
+    pub geo_thr_km: f32,
+    pub viv_thr_ms: f32,
+    pub active: bool,
+}
+
+impl Default for LdpConstraintRow {
+    fn default() -> Self {
+        LdpConstraintRow {
+            geo_lat_rad: 0.0,
+            geo_lon_rad: 0.0,
+            viv: [0.0; 4],
+            geo_thr_km: 0.0,
+            viv_thr_ms: 0.0,
+            active: false,
+        }
+    }
+}
+
+/// PJRT-accelerated LDP batch scorer over the `ldp_score_{512,2048}`
+/// artifacts (paper Alg. 2 on the whole worker table at once). Pads the
+/// live worker count to the smallest fitting variant; padded rows carry
+/// zero capacity so they are never feasible.
+pub struct LdpAccel {
+    engine: PjrtEngine,
+    /// Reused flattening buffers (§Perf iteration 2: no per-call allocs
+    /// on the scheduler hot path).
+    scratch: LdpScratch,
+}
+
+#[derive(Default)]
+struct LdpScratch {
+    caps: Vec<f32>,
+    virt: Vec<i32>,
+    geo: Vec<f32>,
+    viv: Vec<f32>,
+}
+
+pub const LDP_VARIANTS: [(usize, &str); 2] =
+    [(512, "ldp_score_512"), (2048, "ldp_score_2048")];
+pub const LDP_MAX_CONSTRAINTS: usize = 4;
+
+impl LdpAccel {
+    pub fn new(engine: PjrtEngine) -> LdpAccel {
+        LdpAccel {
+            engine,
+            scratch: LdpScratch::default(),
+        }
+    }
+
+    pub fn discover() -> Result<LdpAccel> {
+        Ok(LdpAccel::new(PjrtEngine::discover()?))
+    }
+
+    pub fn executions(&self) -> u64 {
+        self.engine.executions
+    }
+
+    /// Score all workers; returns (scores, feasibility) of `workers.len()`.
+    pub fn score(
+        &mut self,
+        workers: &[LdpWorkerRow],
+        req: [f32; 3],
+        req_virt: i32,
+        constraints: &[LdpConstraintRow],
+    ) -> Result<(Vec<f32>, Vec<bool>)> {
+        anyhow::ensure!(
+            constraints.len() <= LDP_MAX_CONSTRAINTS,
+            "at most {LDP_MAX_CONSTRAINTS} constraint rows per call"
+        );
+        let (n, entry) = LDP_VARIANTS
+            .iter()
+            .find(|(n, _)| *n >= workers.len())
+            .copied()
+            .ok_or_else(|| {
+                eyre!(
+                    "worker count {} exceeds largest LDP variant",
+                    workers.len()
+                )
+            })?;
+
+        let sc = &mut self.scratch;
+        sc.caps.clear();
+        sc.caps.resize(n * 3, 0.0);
+        sc.virt.clear();
+        sc.virt.resize(n, 0);
+        sc.geo.clear();
+        sc.geo.resize(n * 2, 0.0);
+        sc.viv.clear();
+        sc.viv.resize(n * 4, 0.0);
+        let (caps, virt, geo, viv) = (&mut sc.caps, &mut sc.virt, &mut sc.geo, &mut sc.viv);
+        for (i, w) in workers.iter().enumerate() {
+            caps[i * 3] = w.cpu;
+            caps[i * 3 + 1] = w.mem;
+            caps[i * 3 + 2] = w.disk;
+            virt[i] = w.virt_bits;
+            geo[i * 2] = w.lat_rad;
+            geo[i * 2 + 1] = w.lon_rad;
+            viv[i * 4..i * 4 + 4].copy_from_slice(&w.viv);
+        }
+        let k = LDP_MAX_CONSTRAINTS;
+        let mut cons_geo = vec![0f32; k * 2];
+        let mut cons_viv = vec![0f32; k * 4];
+        let mut cons_thr = vec![0f32; k * 2];
+        let mut cons_active = vec![0f32; k];
+        for (j, c) in constraints.iter().enumerate() {
+            cons_geo[j * 2] = c.geo_lat_rad;
+            cons_geo[j * 2 + 1] = c.geo_lon_rad;
+            cons_viv[j * 4..j * 4 + 4].copy_from_slice(&c.viv);
+            cons_thr[j * 2] = c.geo_thr_km;
+            cons_thr[j * 2 + 1] = c.viv_thr_ms;
+            cons_active[j] = if c.active { 1.0 } else { 0.0 };
+        }
+
+        let inputs = vec![
+            xla::Literal::vec1(caps.as_slice()).reshape(&[n as i64, 3])?,
+            xla::Literal::vec1(virt.as_slice()),
+            xla::Literal::vec1(geo.as_slice()).reshape(&[n as i64, 2])?,
+            xla::Literal::vec1(viv.as_slice()).reshape(&[n as i64, 4])?,
+            xla::Literal::vec1(&req[..]),
+            xla::Literal::vec1(&[req_virt]),
+            xla::Literal::vec1(&cons_geo).reshape(&[k as i64, 2])?,
+            xla::Literal::vec1(&cons_viv).reshape(&[k as i64, 4])?,
+            xla::Literal::vec1(&cons_thr).reshape(&[k as i64, 2])?,
+            xla::Literal::vec1(&cons_active),
+        ];
+        let out = self.engine.run(entry, &inputs)?;
+        anyhow::ensure!(out.len() == 2, "ldp artifact must return (score, mask)");
+        let scores: Vec<f32> = out[0].to_vec::<f32>()?;
+        let mask: Vec<f32> = out[1].to_vec::<f32>()?;
+        Ok((
+            scores[..workers.len()].to_vec(),
+            mask[..workers.len()].iter().map(|&m| m > 0.5).collect(),
+        ))
+    }
+
+    /// Index of the best feasible worker, if any.
+    pub fn best(
+        &mut self,
+        workers: &[LdpWorkerRow],
+        req: [f32; 3],
+        req_virt: i32,
+        constraints: &[LdpConstraintRow],
+    ) -> Result<Option<usize>> {
+        let (scores, mask) = self.score(workers, req, req_virt, constraints)?;
+        Ok(scores
+            .iter()
+            .zip(mask.iter())
+            .enumerate()
+            .filter(|(_, (_, m))| **m)
+            .max_by(|a, b| a.1 .0.partial_cmp(b.1 .0).unwrap())
+            .map(|(i, _)| i))
+    }
+}
+
+/// Vivaldi embedding via the `vivaldi_embed_256` artifact: embeds an RTT
+/// matrix (≤256 nodes, zero-padded) into coordinates.
+pub struct VivaldiEmbed {
+    engine: PjrtEngine,
+}
+
+impl VivaldiEmbed {
+    pub fn new(engine: PjrtEngine) -> Self {
+        VivaldiEmbed { engine }
+    }
+
+    pub fn embed(&mut self, rtt: &[Vec<f64>]) -> Result<Vec<[f64; 4]>> {
+        const N: usize = 256;
+        anyhow::ensure!(rtt.len() <= N, "at most {N} nodes");
+        let mut flat = vec![0f32; N * N];
+        for (i, row) in rtt.iter().enumerate() {
+            for (j, v) in row.iter().enumerate() {
+                flat[i * N + j] = *v as f32;
+            }
+        }
+        let inputs = vec![xla::Literal::vec1(&flat).reshape(&[N as i64, N as i64])?];
+        let out = self.engine.run("vivaldi_embed_256", &inputs)?;
+        let coords: Vec<f32> = out[0].to_vec::<f32>()?;
+        Ok((0..rtt.len())
+            .map(|i| {
+                [
+                    coords[i * 4] as f64,
+                    coords[i * 4 + 1] as f64,
+                    coords[i * 4 + 2] as f64,
+                    coords[i * 4 + 3] as f64,
+                ]
+            })
+            .collect())
+    }
+}
+
+/// The video-analytics detector (`detector_{1,8}x64` artifacts): a fixed
+/// CNN standing in for YOLOv3 (DESIGN.md substitution ledger).
+pub struct Detector {
+    engine: PjrtEngine,
+}
+
+impl Detector {
+    pub fn new(engine: PjrtEngine) -> Self {
+        Detector { engine }
+    }
+
+    pub fn discover() -> Result<Detector> {
+        Ok(Detector::new(PjrtEngine::discover()?))
+    }
+
+    /// Run detection over `batch` frames of 64×64×3 f32; returns the
+    /// flattened detection grid per frame ([8×8×5] each).
+    pub fn detect(&mut self, frames: &[f32], batch: usize) -> Result<Vec<Vec<f32>>> {
+        let entry = match batch {
+            1 => "detector_1x64",
+            8 => "detector_8x64",
+            _ => return Err(eyre!("supported batch sizes: 1, 8")),
+        };
+        anyhow::ensure!(frames.len() == batch * 64 * 64 * 3, "bad frame buffer");
+        let inputs =
+            vec![xla::Literal::vec1(frames).reshape(&[batch as i64, 64, 64, 3])?];
+        let out = self.engine.run(entry, &inputs)?;
+        let grid: Vec<f32> = out[0].to_vec::<f32>()?;
+        let per = 8 * 8 * 5;
+        Ok((0..batch).map(|b| grid[b * per..(b + 1) * per].to_vec()).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_available() -> bool {
+        Artifacts::discover().is_ok()
+    }
+
+    fn mk_workers(n: usize) -> Vec<LdpWorkerRow> {
+        (0..n)
+            .map(|i| LdpWorkerRow {
+                cpu: 1.0 + (i % 8) as f32,
+                mem: 0.5 + (i % 4) as f32,
+                disk: 10.0,
+                virt_bits: 0b1111,
+                lat_rad: 0.84 + 0.001 * (i % 16) as f32,
+                lon_rad: 0.20 + 0.001 * (i / 16) as f32,
+                viv: [i as f32 % 30.0, (i / 2) as f32 % 20.0, 0.0, 0.0],
+            })
+            .collect()
+    }
+
+    #[test]
+    fn ldp_accel_matches_host_semantics() {
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let mut accel = LdpAccel::discover().unwrap();
+        let workers = mk_workers(100);
+        let req = [2.0, 1.0, 0.0];
+        let (scores, mask) = accel.score(&workers, req, 0b0001, &[]).unwrap();
+        assert_eq!(scores.len(), 100);
+        for (w, (s, m)) in workers.iter().zip(scores.iter().zip(mask.iter())) {
+            let feasible = w.cpu >= req[0] && w.mem >= req[1];
+            assert_eq!(*m, feasible, "worker {w:?}");
+            if feasible {
+                let want = (w.cpu - req[0]) + (w.mem - req[1]);
+                assert!((s - want).abs() < 1e-4);
+            } else {
+                assert!(*s < -1e29);
+            }
+        }
+    }
+
+    #[test]
+    fn ldp_accel_constraint_filters() {
+        if !artifacts_available() {
+            return;
+        }
+        let mut accel = LdpAccel::discover().unwrap();
+        let workers = mk_workers(64);
+        // Vivaldi constraint: within 15 ms of the origin.
+        let cons = LdpConstraintRow {
+            geo_lat_rad: 0.84,
+            geo_lon_rad: 0.20,
+            viv: [0.0; 4],
+            geo_thr_km: 100_000.0,
+            viv_thr_ms: 15.0,
+            active: true,
+        };
+        let (_, mask) = accel.score(&workers, [0.5, 0.2, 0.0], 0, &[cons]).unwrap();
+        for (w, m) in workers.iter().zip(mask.iter()) {
+            let d = (w.viv[0].powi(2) + w.viv[1].powi(2)).sqrt();
+            assert_eq!(*m, d <= 15.0, "viv dist {d}");
+        }
+        // Inactive constraint row: everything feasible again.
+        let inactive = LdpConstraintRow {
+            active: false,
+            ..cons
+        };
+        let (_, mask2) = accel
+            .score(&workers, [0.5, 0.2, 0.0], 0, &[inactive])
+            .unwrap();
+        assert!(mask2.iter().all(|m| *m));
+    }
+
+    #[test]
+    fn ldp_accel_uses_larger_variant_beyond_512() {
+        if !artifacts_available() {
+            return;
+        }
+        let mut accel = LdpAccel::discover().unwrap();
+        let workers = mk_workers(600);
+        let (scores, mask) = accel.score(&workers, [0.5, 0.2, 0.0], 0, &[]).unwrap();
+        assert_eq!(scores.len(), 600);
+        assert!(mask.iter().all(|m| *m));
+        let best = accel.best(&workers, [0.5, 0.2, 0.0], 0, &[]).unwrap();
+        assert!(best.is_some());
+    }
+
+    #[test]
+    fn vivaldi_embed_artifact_recovers_structure() {
+        if !artifacts_available() {
+            return;
+        }
+        let mut emb = VivaldiEmbed::new(PjrtEngine::discover().unwrap());
+        // 3-node line within a padded 8-node matrix.
+        let mut rtt = vec![vec![0.0; 8]; 8];
+        rtt[0][1] = 50.0;
+        rtt[1][0] = 50.0;
+        rtt[1][2] = 50.0;
+        rtt[2][1] = 50.0;
+        rtt[0][2] = 100.0;
+        rtt[2][0] = 100.0;
+        let coords = emb.embed(&rtt).unwrap();
+        let d = |a: [f64; 4], b: [f64; 4]| -> f64 {
+            a.iter()
+                .zip(b.iter())
+                .map(|(x, y)| (x - y) * (x - y))
+                .sum::<f64>()
+                .sqrt()
+        };
+        // 16 steps won't fully converge; structure must still order:
+        let d01 = d(coords[0], coords[1]);
+        let d02 = d(coords[0], coords[2]);
+        assert!(d02 > d01, "d02={d02} d01={d01}");
+    }
+
+    #[test]
+    fn detector_runs_and_is_deterministic() {
+        if !artifacts_available() {
+            return;
+        }
+        let mut det = Detector::discover().unwrap();
+        let frames: Vec<f32> = (0..64 * 64 * 3).map(|i| (i % 255) as f32 / 255.0).collect();
+        let g1 = det.detect(&frames, 1).unwrap();
+        let g2 = det.detect(&frames, 1).unwrap();
+        assert_eq!(g1.len(), 1);
+        assert_eq!(g1[0].len(), 8 * 8 * 5);
+        assert_eq!(g1, g2);
+        assert!(g1[0].iter().all(|v| v.is_finite()));
+    }
+}

@@ -1,0 +1,293 @@
+//! Latency & Distance aware Placement — LDP (paper Alg. 2).
+//!
+//! Builds on ROM's feasibility filter, then prunes candidates by
+//! service-to-service constraints (great-circle distance + Vivaldi
+//! distance to the target task's live placement) and service-to-user
+//! constraints (trilaterating the user's position in the Vivaldi network
+//! from RTT probes issued by random candidate workers — Alg. 2 lines
+//! 8-15). The PJRT-accelerated batch variant of the same math lives in
+//! [`crate::runtime::LdpAccel`]; both must agree (cross-checked in tests).
+
+use std::collections::HashMap;
+
+use super::{Placement, PlacementInput, TaskScheduler};
+use crate::geo::GeoPoint;
+use crate::model::Virtualization;
+use crate::sla::S2uConstraint;
+use crate::util::{NodeId, Rng, TaskId};
+use crate::vivaldi::{trilaterate, Coord};
+
+/// RTT probe callback: `(prober_worker, constraint) → measured RTT ms`.
+/// In the simulator this is a ground-truth network ping; live deployments
+/// would issue a real ICMP/UDP probe.
+pub type PingFn<'a> = dyn FnMut(NodeId, &S2uConstraint) -> f64 + 'a;
+
+/// Cross-task placement context: where each already-placed task lives
+/// (geo + Vivaldi of its hosting workers). Maintained by the cluster
+/// orchestrator's service manager.
+#[derive(Clone, Debug, Default)]
+pub struct LdpContext {
+    targets: HashMap<TaskId, Vec<(GeoPoint, Coord)>>,
+}
+
+impl LdpContext {
+    pub fn set_target(&mut self, task: TaskId, locations: Vec<(GeoPoint, Coord)>) {
+        self.targets.insert(task, locations);
+    }
+    pub fn clear_target(&mut self, task: TaskId) {
+        self.targets.remove(&task);
+    }
+    pub fn target(&self, task: TaskId) -> Option<&[(GeoPoint, Coord)]> {
+        self.targets.get(&task).map(Vec::as_slice)
+    }
+}
+
+pub struct LdpScheduler<'a> {
+    /// Borrowed placement context — cloning the full target table per
+    /// placement showed up on the cluster hot path (§Perf iteration 1).
+    pub context: &'a LdpContext,
+    pub ping: Box<PingFn<'a>>,
+    pub rng: Rng,
+}
+
+impl<'a> LdpScheduler<'a> {
+    pub fn new(context: &'a LdpContext, ping: Box<PingFn<'a>>, seed: u64) -> Self {
+        LdpScheduler {
+            context,
+            ping,
+            rng: Rng::seeded(seed),
+        }
+    }
+}
+
+impl<'a> TaskScheduler for LdpScheduler<'a> {
+    fn name(&self) -> &'static str {
+        "ldp"
+    }
+
+    fn place(&mut self, input: &PlacementInput<'_>) -> Placement {
+        let req = input.sla.request();
+        let req_virt = input
+            .sla
+            .virtualization_mask()
+            .unwrap_or(Virtualization::CONTAINER);
+
+        // Line 1: resource + virtualization feasibility.
+        let mut w: Vec<usize> = input
+            .workers
+            .iter()
+            .enumerate()
+            .filter(|(_, p)| {
+                p.available().fits(&req) && p.spec.virtualization().supports(req_virt)
+            })
+            .map(|(i, _)| i)
+            .collect();
+
+        // Lines 2-7: service-to-service constraints. A task whose target
+        // is not yet placed passes vacuously (chains deploy in SLA order,
+        // so targets are normally known by the time dependents place).
+        for c in &input.sla.s2s {
+            let target = TaskId {
+                service: input.service_hint,
+                index: c.target_task,
+            };
+            let Some(locs) = self.context.target(target) else {
+                continue;
+            };
+            if locs.is_empty() {
+                continue;
+            }
+            w.retain(|&i| {
+                let p = &input.workers[i];
+                locs.iter().any(|(geo, viv)| {
+                    p.spec.location.distance_km(geo) <= c.geo_threshold_km
+                        && p.vivaldi.coord.distance(viv) <= c.latency_threshold_ms
+                })
+            });
+        }
+
+        // Lines 8-15: service-to-user constraints via trilateration.
+        for c in &input.sla.s2u {
+            if w.is_empty() {
+                break;
+            }
+            // rnd(W): sample probe workers among current candidates.
+            let probes = self
+                .rng
+                .sample_indices(w.len(), c.probe_count.max(3).min(w.len()));
+            let anchors: Vec<Coord> = probes
+                .iter()
+                .map(|&pi| input.workers[w[pi]].vivaldi.coord)
+                .collect();
+            let rtts: Vec<f64> = probes
+                .iter()
+                .map(|&pi| (self.ping)(input.workers[w[pi]].spec.node, c))
+                .collect();
+            let user_hat = trilaterate(&anchors, &rtts);
+
+            w.retain(|&i| {
+                let p = &input.workers[i];
+                p.spec.location.distance_km(&c.user_location) <= c.geo_threshold_km
+                    && p.vivaldi.coord.distance(&user_hat) <= c.latency_threshold_ms
+            });
+        }
+
+        if w.is_empty() {
+            return Placement::Infeasible;
+        }
+        // Rank survivors by ROM's spare-capacity score.
+        w.sort_by(|&a, &b| {
+            let sa = input.workers[a].available().spare_score(&req);
+            let sb = input.workers[b].available().spare_score(&req);
+            sb.partial_cmp(&sa)
+                .unwrap()
+                .then(input.workers[a].spec.node.cmp(&input.workers[b].spec.node))
+        });
+        Placement::Placed {
+            worker: input.workers[w[0]].spec.node,
+            alternatives: w[1..]
+                .iter()
+                .take(3)
+                .map(|&i| input.workers[i].spec.node)
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geo::GeoPoint;
+    use crate::model::NodeClass;
+    use crate::scheduler::testutil::worker;
+    use crate::sla::{simple_sla, S2sConstraint};
+    use crate::util::ServiceId;
+
+    fn munich() -> GeoPoint {
+        GeoPoint::from_degrees(48.137, 11.575)
+    }
+    fn berlin() -> GeoPoint {
+        GeoPoint::from_degrees(52.520, 13.405)
+    }
+    fn garching() -> GeoPoint {
+        GeoPoint::from_degrees(48.249, 11.651)
+    }
+
+    fn input_workers() -> Vec<crate::model::NodeProfile> {
+        vec![
+            // Near Munich, 5ms from origin in Vivaldi space.
+            worker(1, NodeClass::L, 2000, 2048, garching(), [5.0, 0.0, 0.0, 0.0]),
+            // Berlin, 40ms away.
+            worker(2, NodeClass::L, 3000, 3072, berlin(), [40.0, 0.0, 0.0, 0.0]),
+            // Munich but resource-starved.
+            worker(3, NodeClass::S, 100, 64, munich(), [6.0, 0.0, 0.0, 0.0]),
+        ]
+    }
+
+    #[test]
+    fn s2s_constraint_prefers_nearby_worker() {
+        let mut sla = simple_sla("t", 1000, 512);
+        sla.constraints[0].s2s.push(S2sConstraint {
+            target_task: 1,
+            geo_threshold_km: 120.0,
+            latency_threshold_ms: 20.0,
+        });
+        let mut ctx = LdpContext::default();
+        // Target task 1 runs in Munich at Vivaldi origin-ish.
+        ctx.set_target(
+            TaskId {
+                service: ServiceId(0),
+                index: 1,
+            },
+            vec![(munich(), Coord([0.0, 0.0, 0.0, 0.0]))],
+        );
+        let ws = input_workers();
+        let mut s = LdpScheduler::new(&ctx, Box::new(|_, _| 10.0), 1);
+        match s.place(&PlacementInput {
+            sla: &sla.constraints[0],
+            workers: &ws,
+            service_hint: ServiceId(0),
+        }) {
+            Placement::Placed { worker, .. } => assert_eq!(worker, NodeId(1)),
+            p => panic!("{p:?}"),
+        }
+        // Without resources, even nearby worker 3 is ineligible; berlin
+        // (worker 2) violates both thresholds despite better resources.
+    }
+
+    #[test]
+    fn unplaced_s2s_target_passes_vacuously() {
+        let mut sla = simple_sla("t", 1000, 512);
+        sla.constraints[0].s2s.push(S2sConstraint {
+            target_task: 1,
+            geo_threshold_km: 1.0,
+            latency_threshold_ms: 1.0,
+        });
+        let ws = input_workers();
+        let ctx0 = LdpContext::default();
+        let mut s = LdpScheduler::new(&ctx0, Box::new(|_, _| 10.0), 1);
+        // Target never placed → constraint skipped → best-resource wins.
+        match s.place(&PlacementInput {
+            sla: &sla.constraints[0],
+            workers: &ws,
+            service_hint: ServiceId(0),
+        }) {
+            Placement::Placed { worker, .. } => assert_eq!(worker, NodeId(2)),
+            p => panic!("{p:?}"),
+        }
+    }
+
+    #[test]
+    fn s2u_constraint_filters_by_trilaterated_user() {
+        let mut sla = simple_sla("t", 1000, 512);
+        sla.constraints[0].s2u.push(S2uConstraint {
+            user_location: munich(),
+            geo_threshold_km: 120.0,
+            latency_threshold_ms: 20.0,
+            probe_count: 3,
+        });
+        let ws = input_workers();
+        // The "user" sits at the Vivaldi origin: pings return each
+        // worker's distance from origin.
+        let ctx0 = LdpContext::default();
+        let mut s = LdpScheduler::new(
+            &ctx0,
+            Box::new(|node, _| match node {
+                NodeId(1) => 5.0,
+                NodeId(2) => 40.0,
+                _ => 6.0,
+            }),
+            7,
+        );
+        match s.place(&PlacementInput {
+            sla: &sla.constraints[0],
+            workers: &ws,
+            service_hint: ServiceId(0),
+        }) {
+            Placement::Placed { worker, .. } => assert_eq!(worker, NodeId(1)),
+            p => panic!("{p:?}"),
+        }
+    }
+
+    #[test]
+    fn infeasible_when_constraints_empty_all() {
+        let mut sla = simple_sla("t", 1000, 512);
+        sla.constraints[0].s2u.push(S2uConstraint {
+            user_location: munich(),
+            geo_threshold_km: 0.5, // nobody is within 500 m
+            latency_threshold_ms: 1.0,
+            probe_count: 3,
+        });
+        let ws = input_workers();
+        let ctx0 = LdpContext::default();
+        let mut s = LdpScheduler::new(&ctx0, Box::new(|_, _| 50.0), 2);
+        assert_eq!(
+            s.place(&PlacementInput {
+                sla: &sla.constraints[0],
+                workers: &ws,
+                service_hint: ServiceId(0),
+            }),
+            Placement::Infeasible
+        );
+    }
+}

@@ -1,0 +1,85 @@
+//! Delegated service scheduling (paper §4.2): the root scheduler ranks
+//! candidate *clusters* from aggregate statistics; cluster schedulers pick
+//! concrete *workers* via pluggable placement algorithms — ROM (Alg. 1)
+//! and LDP (Alg. 2) ship built-in, mirroring Oakestra's language-agnostic
+//! scheduler plugins.
+
+mod ldp;
+mod rom;
+mod root;
+
+pub use ldp::{LdpContext, LdpScheduler, PingFn};
+pub use rom::{RomScheduler, RomStrategy};
+pub use root::{rank_clusters, ClusterCandidate};
+
+use crate::model::NodeProfile;
+use crate::sla::TaskSla;
+use crate::util::NodeId;
+
+/// What a cluster-tier scheduler sees: the SLA row of the task plus the
+/// live worker table (available capacities, Vivaldi coordinates, geo).
+pub struct PlacementInput<'a> {
+    pub sla: &'a TaskSla,
+    pub workers: &'a [NodeProfile],
+    /// Service the task belongs to — S2S targets are siblings inside it.
+    pub service_hint: crate::util::ServiceId,
+}
+
+/// Result of one placement attempt within a cluster.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Placement {
+    /// Chosen worker (plus the runner-up list for fast failover).
+    Placed {
+        worker: NodeId,
+        alternatives: Vec<NodeId>,
+    },
+    /// No feasible worker in this cluster — root must try the next
+    /// cluster in its priority list (§4.2 multi-cluster spill).
+    Infeasible,
+}
+
+/// A cluster-tier scheduler plugin (paper §6: ROM and LDP are plugins;
+/// operators may install their own).
+pub trait TaskScheduler {
+    fn name(&self) -> &'static str;
+    fn place(&mut self, input: &PlacementInput<'_>) -> Placement;
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use crate::geo::GeoPoint;
+    use crate::model::{Capacity, NodeClass, NodeProfile, WorkerSpec};
+    use crate::util::NodeId;
+    use crate::vivaldi::{Coord, VivaldiState};
+
+    /// Build a worker profile with explicit available capacity by setting
+    /// `used = capacity - available`.
+    pub fn worker(
+        id: u32,
+        class: NodeClass,
+        avail_cpu: u32,
+        avail_mem: u32,
+        geo: GeoPoint,
+        viv: [f64; 4],
+    ) -> NodeProfile {
+        let spec = WorkerSpec {
+            node: NodeId(id),
+            class,
+            location: geo,
+        };
+        let cap = spec.capacity();
+        let mut p = NodeProfile::new(spec);
+        p.used = Capacity {
+            cpu_millicores: cap.cpu_millicores.saturating_sub(avail_cpu),
+            mem_mb: cap.mem_mb.saturating_sub(avail_mem),
+            disk_mb: 0,
+            gpus: 0,
+            tpus: 0,
+        };
+        p.vivaldi = VivaldiState {
+            coord: Coord(viv),
+            error: 0.2,
+        };
+        p
+    }
+}

@@ -1,0 +1,165 @@
+//! Resource-Only Match (paper Alg. 1): find a worker satisfying the
+//! capacity + virtualization requirements, by one of the example
+//! strategies — greedy best-fit on spare (cpu+mem) or first-fit.
+
+use super::{Placement, PlacementInput, TaskScheduler};
+use crate::model::Virtualization;
+
+/// `f(A_n, Q_τ)` selection strategies from Alg. 1's comments.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum RomStrategy {
+    /// `argmax_n (A_cpu − Q_cpu) + (A_mem − Q_mem)` — most headroom.
+    BestFit,
+    /// `first_n [Q ≤ A]` — cheapest possible scan.
+    FirstFit,
+}
+
+pub struct RomScheduler {
+    pub strategy: RomStrategy,
+}
+
+impl Default for RomScheduler {
+    fn default() -> Self {
+        RomScheduler {
+            strategy: RomStrategy::BestFit,
+        }
+    }
+}
+
+impl TaskScheduler for RomScheduler {
+    fn name(&self) -> &'static str {
+        match self.strategy {
+            RomStrategy::BestFit => "rom-bestfit",
+            RomStrategy::FirstFit => "rom-firstfit",
+        }
+    }
+
+    fn place(&mut self, input: &PlacementInput<'_>) -> Placement {
+        let req = input.sla.request();
+        let req_virt = input
+            .sla
+            .virtualization_mask()
+            .unwrap_or(Virtualization::CONTAINER);
+
+        let feasible = input.workers.iter().filter(|w| {
+            w.available().fits(&req) && w.spec.virtualization().supports(req_virt)
+        });
+
+        match self.strategy {
+            RomStrategy::FirstFit => feasible
+                .map(|w| w.spec.node)
+                .next()
+                .map(|worker| Placement::Placed {
+                    worker,
+                    alternatives: vec![],
+                })
+                .unwrap_or(Placement::Infeasible),
+            RomStrategy::BestFit => {
+                let mut scored: Vec<(f64, crate::util::NodeId)> = feasible
+                    .map(|w| (w.available().spare_score(&req), w.spec.node))
+                    .collect();
+                if scored.is_empty() {
+                    return Placement::Infeasible;
+                }
+                scored.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1)));
+                Placement::Placed {
+                    worker: scored[0].1,
+                    alternatives: scored[1..].iter().take(3).map(|s| s.1).collect(),
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geo::GeoPoint;
+    use crate::model::NodeClass;
+    use crate::scheduler::testutil::worker;
+    use crate::sla::simple_sla;
+    use crate::util::NodeId;
+
+    fn workers() -> Vec<crate::model::NodeProfile> {
+        let g = GeoPoint::default();
+        vec![
+            worker(1, NodeClass::S, 200, 128, g, [0.0; 4]), // too small
+            worker(2, NodeClass::L, 3500, 3000, g, [0.0; 4]), // most headroom
+            worker(3, NodeClass::M, 1500, 1024, g, [0.0; 4]), // fits, tighter
+        ]
+    }
+
+    #[test]
+    fn bestfit_maximizes_headroom() {
+        let sla = simple_sla("t", 1000, 512);
+        let ws = workers();
+        let mut s = RomScheduler::default();
+        match s.place(&PlacementInput {
+            sla: &sla.constraints[0],
+            workers: &ws,
+            service_hint: crate::util::ServiceId(0),
+        }) {
+            Placement::Placed {
+                worker,
+                alternatives,
+            } => {
+                assert_eq!(worker, NodeId(2));
+                assert_eq!(alternatives, vec![NodeId(3)]);
+            }
+            p => panic!("{p:?}"),
+        }
+    }
+
+    #[test]
+    fn firstfit_takes_first_feasible() {
+        let sla = simple_sla("t", 1000, 512);
+        let ws = workers();
+        let mut s = RomScheduler {
+            strategy: RomStrategy::FirstFit,
+        };
+        match s.place(&PlacementInput {
+            sla: &sla.constraints[0],
+            workers: &ws,
+            service_hint: crate::util::ServiceId(0),
+        }) {
+            Placement::Placed { worker, .. } => assert_eq!(worker, NodeId(2)),
+            p => panic!("{p:?}"),
+        }
+    }
+
+    #[test]
+    fn infeasible_when_nothing_fits() {
+        let sla = simple_sla("t", 64_000, 512);
+        let ws = workers();
+        let mut s = RomScheduler::default();
+        assert_eq!(
+            s.place(&PlacementInput {
+                sla: &sla.constraints[0],
+                workers: &ws,
+                service_hint: crate::util::ServiceId(0),
+            }),
+            Placement::Infeasible
+        );
+    }
+
+    #[test]
+    fn virtualization_filter_applies() {
+        let mut sla = simple_sla("t", 500, 256);
+        sla.constraints[0].virtualization = "vm".into();
+        let g = GeoPoint::default();
+        // Pi does not support VMs; NUC does.
+        let ws = vec![
+            worker(1, NodeClass::RaspberryPi4, 4000, 4096, g, [0.0; 4]),
+            worker(2, NodeClass::IntelNuc, 1000, 1024, g, [0.0; 4]),
+        ];
+        let mut s = RomScheduler::default();
+        match s.place(&PlacementInput {
+            sla: &sla.constraints[0],
+            workers: &ws,
+            service_hint: crate::util::ServiceId(0),
+        }) {
+            Placement::Placed { worker, .. } => assert_eq!(worker, NodeId(2)),
+            p => panic!("{p:?}"),
+        }
+    }
+}

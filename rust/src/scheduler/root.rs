@@ -1,0 +1,171 @@
+//! Root-tier scheduling (paper §4.2, first of the *t* steps): match a
+//! task's requirements `Q_τ` against the aggregate statistics `∪(Aⁱ)` of
+//! every attached cluster and produce a priority list of candidate
+//! clusters. The root never sees individual workers — only the ⟨Σ,μ,σ⟩
+//! digests the clusters push (administrative-control boundary).
+
+use crate::hierarchy::AggregateStats;
+use crate::model::Virtualization;
+use crate::sla::TaskSla;
+use crate::util::ClusterId;
+
+/// One scored candidate in the root's priority list.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClusterCandidate {
+    pub cluster: ClusterId,
+    pub score: f64,
+}
+
+/// Filter + rank clusters for a task (highest-priority-first).
+///
+/// Filters (paper: "insufficient resource availability, not within target
+/// geographical region, no support for the desired virtualization"):
+/// * the cluster's *best single worker* must fit the request — a big sum
+///   over small workers is useless for one task;
+/// * required virtualization must exist in the cluster;
+/// * any geo pin (SLA `location`) must fall inside the cluster's area.
+///
+/// Ranking: spare-capacity headroom (mean available minus request, in
+/// comparable units), shaded by the capacity spread σ — a high-variance
+/// cluster is less certain to still fit by the time delegation lands.
+pub fn rank_clusters(
+    sla: &TaskSla,
+    clusters: &[(ClusterId, &AggregateStats)],
+) -> Vec<ClusterCandidate> {
+    let req = sla.request();
+    let req_virt = sla
+        .virtualization_mask()
+        .unwrap_or(Virtualization::CONTAINER);
+
+    let mut out: Vec<ClusterCandidate> = clusters
+        .iter()
+        .filter(|(_, agg)| agg.worker_count > 0)
+        .filter(|(_, agg)| agg.max_worker.fits(&req))
+        .filter(|(_, agg)| agg.virtualization.supports(req_virt))
+        .filter(|(_, agg)| match (&sla.location, &agg.area) {
+            (Some(pin), Some(area)) => area.contains(pin),
+            // No area advertised ⇒ cluster is location-agnostic (cloud).
+            _ => true,
+        })
+        .map(|(id, agg)| {
+            let headroom = (agg.mean_cpu_millicores - req.cpu_millicores as f64)
+                / 1000.0
+                + (agg.mean_mem_mb - req.mem_mb as f64) / 1024.0;
+            let spread_penalty = (agg.std_cpu_millicores / 1000.0
+                + agg.std_mem_mb / 1024.0)
+                * 0.25;
+            ClusterCandidate {
+                cluster: *id,
+                score: headroom - spread_penalty,
+            }
+        })
+        .collect();
+
+    out.sort_by(|a, b| {
+        b.score
+            .partial_cmp(&a.score)
+            .unwrap()
+            .then(a.cluster.cmp(&b.cluster))
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geo::{Area, GeoPoint};
+    use crate::hierarchy::AggregateStats;
+    use crate::model::Capacity;
+    use crate::sla::simple_sla;
+
+    fn agg(workers: &[(u32, u32)]) -> AggregateStats {
+        let caps: Vec<Capacity> =
+            workers.iter().map(|(c, m)| Capacity::new(*c, *m, 0)).collect();
+        AggregateStats::from_workers(
+            caps.iter().map(|c| (c, Virtualization::all())),
+            None,
+        )
+    }
+
+    #[test]
+    fn ranks_by_headroom() {
+        let sla = simple_sla("t", 1000, 512);
+        let small = agg(&[(1500, 1024), (1500, 1024)]);
+        let big = agg(&[(6000, 6000), (6000, 6000)]);
+        let ranked = rank_clusters(
+            &sla.constraints[0],
+            &[(ClusterId(1), &small), (ClusterId(2), &big)],
+        );
+        assert_eq!(ranked.len(), 2);
+        assert_eq!(ranked[0].cluster, ClusterId(2));
+        assert!(ranked[0].score > ranked[1].score);
+    }
+
+    #[test]
+    fn filters_clusters_without_fitting_worker() {
+        let sla = simple_sla("t", 4000, 512);
+        // Sum is 6000 mc but no single worker fits 4000.
+        let shards = agg(&[(2000, 4096), (2000, 4096), (2000, 4096)]);
+        let ok = agg(&[(8000, 8192)]);
+        let ranked = rank_clusters(
+            &sla.constraints[0],
+            &[(ClusterId(1), &shards), (ClusterId(2), &ok)],
+        );
+        assert_eq!(ranked.len(), 1);
+        assert_eq!(ranked[0].cluster, ClusterId(2));
+    }
+
+    #[test]
+    fn filters_by_virtualization_and_area() {
+        let mut sla = simple_sla("t", 500, 256);
+        sla.constraints[0].virtualization = "vm".into();
+        sla.constraints[0].location = Some(GeoPoint::from_degrees(48.1, 11.6));
+
+        let mut munich_vm = agg(&[(4000, 4096)]);
+        munich_vm.area = Some(Area {
+            center: GeoPoint::from_degrees(48.137, 11.575),
+            radius_km: 50.0,
+        });
+
+        let mut berlin_vm = agg(&[(4000, 4096)]);
+        berlin_vm.area = Some(Area {
+            center: GeoPoint::from_degrees(52.52, 13.405),
+            radius_km: 50.0,
+        });
+
+        let mut munich_container_only = agg(&[(4000, 4096)]);
+        munich_container_only.virtualization = Virtualization::CONTAINER;
+        munich_container_only.area = munich_vm.area;
+
+        let ranked = rank_clusters(
+            &sla.constraints[0],
+            &[
+                (ClusterId(1), &munich_vm),
+                (ClusterId(2), &berlin_vm),
+                (ClusterId(3), &munich_container_only),
+            ],
+        );
+        assert_eq!(ranked.len(), 1);
+        assert_eq!(ranked[0].cluster, ClusterId(1));
+    }
+
+    #[test]
+    fn variance_penalty_breaks_ties() {
+        let sla = simple_sla("t", 1000, 512);
+        let uniform = agg(&[(4000, 4096), (4000, 4096)]);
+        let spread = agg(&[(7000, 8000), (1000, 192)]);
+        let ranked = rank_clusters(
+            &sla.constraints[0],
+            &[(ClusterId(1), &uniform), (ClusterId(2), &spread)],
+        );
+        assert_eq!(ranked[0].cluster, ClusterId(1));
+    }
+
+    #[test]
+    fn empty_cluster_never_ranked() {
+        let sla = simple_sla("t", 1000, 512);
+        let empty = AggregateStats::default();
+        let ranked = rank_clusters(&sla.constraints[0], &[(ClusterId(1), &empty)]);
+        assert!(ranked.is_empty());
+    }
+}

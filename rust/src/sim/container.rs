@@ -1,0 +1,87 @@
+//! Container runtime model: image pulls and container start latency.
+//!
+//! The paper's workloads are Docker containers (§7.1); orchestration
+//! overhead is measured *around* container start, so the runtime model
+//! only needs realistic, deterministic-given-seed timings: a per-node
+//! image cache (first pull pays bytes/bandwidth, repeats are free) plus a
+//! lognormal-ish start latency.
+
+use std::collections::HashSet;
+
+use crate::util::{NodeId, Rng, SimTime};
+
+/// Shared container-runtime state across all simulated nodes.
+#[derive(Clone, Debug, Default)]
+pub struct ContainerRuntime {
+    /// (node, image-id) pairs already present locally.
+    cache: HashSet<(NodeId, u64)>,
+    /// Registry bandwidth for image pulls, Mbit/s.
+    pub registry_mbps: f64,
+}
+
+impl ContainerRuntime {
+    /// Time to pull an image on `node` (0 if cached), marking it cached.
+    pub fn pull_time(&mut self, node: NodeId, image_id: u64, image_mb: u32) -> SimTime {
+        if self.cache.contains(&(node, image_id)) {
+            return SimTime::ZERO;
+        }
+        self.cache.insert((node, image_id));
+        let mbps = if self.registry_mbps > 0.0 {
+            self.registry_mbps
+        } else {
+            200.0
+        };
+        SimTime::from_secs(image_mb as f64 * 8.0 / mbps)
+    }
+
+    /// Container start latency: containerd+runc cold start, scaled by the
+    /// node's speed factor at the call site. Mean ~270 ms with spread,
+    /// floor 120 ms, tail capped at 800 ms — consistent with published
+    /// containerd numbers for cached images.
+    pub fn start_latency(&self, rng: &mut Rng) -> SimTime {
+        let ms = 120.0 + rng.exponential(150.0);
+        SimTime::from_millis(ms.min(800.0))
+    }
+
+    /// Forget a node's cache (node reset between experiment runs — the
+    /// paper flushes memory/disk between runs, §7.1).
+    pub fn flush_node(&mut self, node: NodeId) {
+        self.cache.retain(|(n, _)| *n != node);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pull_is_cached_after_first() {
+        let mut rt = ContainerRuntime::default();
+        let t1 = rt.pull_time(NodeId(1), 42, 100);
+        assert!(t1 > SimTime::ZERO);
+        let t2 = rt.pull_time(NodeId(1), 42, 100);
+        assert_eq!(t2, SimTime::ZERO);
+        // Different node pulls again.
+        let t3 = rt.pull_time(NodeId(2), 42, 100);
+        assert!(t3 > SimTime::ZERO);
+    }
+
+    #[test]
+    fn flush_invalidates_cache() {
+        let mut rt = ContainerRuntime::default();
+        rt.pull_time(NodeId(1), 42, 100);
+        rt.flush_node(NodeId(1));
+        assert!(rt.pull_time(NodeId(1), 42, 100) > SimTime::ZERO);
+    }
+
+    #[test]
+    fn start_latency_bounded() {
+        let mut rng = Rng::seeded(4);
+        let mut rt = ContainerRuntime::default();
+        rt.registry_mbps = 200.0;
+        for _ in 0..1000 {
+            let t = rt.start_latency(&mut rng).as_millis();
+            assert!((120.0..=800.0).contains(&t), "{t}");
+        }
+    }
+}

@@ -1,0 +1,471 @@
+//! Deterministic discrete-event simulator — the testbed substrate standing
+//! in for the paper's HPC (VM cluster) and HET (heterogeneous edge) setups
+//! (§7.1, and DESIGN.md's substitution ledger).
+//!
+//! Entities (orchestrators, workers, baseline control planes, workload
+//! drivers) are [`Actor`]s pinned to simulated nodes. Actors exchange
+//! [`SimMsg`]s through a network model with per-link delay/jitter/loss/
+//! bandwidth, consume CPU via explicit cost charging (feeding the
+//! utilization figures), and set timers. Event order is fully
+//! deterministic: ties on the virtual clock break by sequence number, and
+//! all randomness flows from one seeded RNG.
+
+mod container;
+mod msg;
+mod network;
+
+pub use container::ContainerRuntime;
+pub use msg::{DataMsg, KubeMsg, OakMsg, SimMsg, TimerKind};
+pub use network::{LinkProfile, Network, Transport};
+
+use std::any::Any;
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap};
+
+use crate::metrics::Metrics;
+use crate::model::NodeClass;
+use crate::util::{NodeId, Rng, SimTime};
+
+/// Dense actor handle (index into the actor table).
+#[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord, Debug)]
+pub struct ActorId(pub u32);
+
+/// A simulated entity. `handle` runs to completion at a virtual instant;
+/// side effects (sends, timers, cpu charges) go through [`Ctx`].
+pub trait Actor {
+    fn handle(&mut self, ctx: &mut Ctx<'_>, msg: SimMsg);
+    /// Downcasting support so tests/benches can inspect actor state.
+    fn as_any(&self) -> &dyn Any;
+    fn as_any_mut(&mut self) -> &mut dyn Any;
+}
+
+#[derive(Debug)]
+struct Event {
+    at: SimTime,
+    seq: u64,
+    target: ActorId,
+    msg: SimMsg,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at && self.seq == other.seq
+    }
+}
+impl Eq for Event {}
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        (self.at, self.seq).cmp(&(other.at, other.seq))
+    }
+}
+
+/// Static description of a simulated node.
+#[derive(Clone, Debug)]
+pub struct SimNode {
+    pub class: NodeClass,
+}
+
+/// Everything except the actor table — actors receive `&mut SimCore`
+/// through [`Ctx`] while they are temporarily detached for dispatch.
+pub struct SimCore {
+    pub clock: SimTime,
+    queue: BinaryHeap<Reverse<Event>>,
+    seq: u64,
+    pub net: Network,
+    pub rng: Rng,
+    pub metrics: Metrics,
+    nodes: HashMap<NodeId, SimNode>,
+    actor_node: Vec<NodeId>,
+    /// Nodes currently failed (messages to/from them are dropped).
+    failed: HashMap<NodeId, bool>,
+    pub containers: ContainerRuntime,
+}
+
+impl SimCore {
+    fn push(&mut self, at: SimTime, target: ActorId, msg: SimMsg) {
+        let seq = self.seq;
+        self.seq += 1;
+        self.queue.push(Reverse(Event {
+            at,
+            seq,
+            target,
+            msg,
+        }));
+    }
+
+    pub fn node_of(&self, actor: ActorId) -> NodeId {
+        self.actor_node[actor.0 as usize]
+    }
+
+    pub fn node_class(&self, node: NodeId) -> NodeClass {
+        self.nodes[&node].class
+    }
+
+    pub fn is_failed(&self, node: NodeId) -> bool {
+        self.failed.get(&node).copied().unwrap_or(false)
+    }
+
+    pub fn set_failed(&mut self, node: NodeId, failed: bool) {
+        self.failed.insert(node, failed);
+    }
+}
+
+/// Actor-facing API for one dispatch.
+pub struct Ctx<'a> {
+    pub now: SimTime,
+    pub self_id: ActorId,
+    pub core: &'a mut SimCore,
+}
+
+impl<'a> Ctx<'a> {
+    /// Send over the network; delivery is delayed by the link model and
+    /// message accounting is recorded under `label` (figure 7a counts
+    /// these). Messages involving failed nodes are silently dropped —
+    /// exactly what a dead edge node looks like from the outside.
+    pub fn send(&mut self, to: ActorId, msg: SimMsg, bytes: usize, label: &'static str) {
+        let src = self.core.node_of(self.self_id);
+        let dst = self.core.node_of(to);
+        if self.core.is_failed(src) || self.core.is_failed(dst) {
+            self.core.metrics.inc("net.dropped_failed_node");
+            return;
+        }
+        self.core.metrics.record_msg(label, bytes);
+        match self
+            .core
+            .net
+            .delivery_delay(src, dst, bytes, Transport::Reliable, &mut self.core.rng)
+        {
+            Some(delay) => {
+                let at = self.now + delay;
+                self.core.push(at, to, msg);
+            }
+            None => self.core.metrics.inc("net.lost"),
+        }
+    }
+
+    /// Send via an unreliable (UDP-like) transport: lost messages vanish.
+    pub fn send_unreliable(
+        &mut self,
+        to: ActorId,
+        msg: SimMsg,
+        bytes: usize,
+        label: &'static str,
+    ) {
+        let src = self.core.node_of(self.self_id);
+        let dst = self.core.node_of(to);
+        if self.core.is_failed(src) || self.core.is_failed(dst) {
+            self.core.metrics.inc("net.dropped_failed_node");
+            return;
+        }
+        self.core.metrics.record_msg(label, bytes);
+        match self
+            .core
+            .net
+            .delivery_delay(src, dst, bytes, Transport::Unreliable, &mut self.core.rng)
+        {
+            Some(delay) => {
+                let at = self.now + delay;
+                self.core.push(at, to, msg);
+            }
+            None => self.core.metrics.inc("net.lost"),
+        }
+    }
+
+    /// Deliver without touching the network (same-process components, e.g.
+    /// service manager → scheduler inside one orchestrator).
+    pub fn send_local(&mut self, to: ActorId, msg: SimMsg) {
+        let at = self.now;
+        self.core.push(at, to, msg);
+    }
+
+    /// Set a timer on self.
+    pub fn schedule(&mut self, delay: SimTime, msg: SimMsg) {
+        let at = self.now + delay;
+        let id = self.self_id;
+        self.core.push(at, id, msg);
+    }
+
+    /// Set a timer for another actor (used by experiment drivers).
+    pub fn schedule_for(&mut self, to: ActorId, delay: SimTime, msg: SimMsg) {
+        let at = self.now + delay;
+        self.core.push(at, to, msg);
+    }
+
+    /// Charge control-plane CPU time to this actor's node, scaled by the
+    /// node's speed factor (a Pi burns more wall-clock per unit work).
+    pub fn charge_cpu(&mut self, cpu_ms: f64) {
+        let node = self.core.node_of(self.self_id);
+        let scaled = cpu_ms / self.core.node_class(node).speed_factor();
+        let now = self.now;
+        self.core.metrics.usage_mut(node).charge_cpu(now, scaled);
+    }
+
+    /// Adjust this node's resident-memory gauge.
+    pub fn add_mem(&mut self, delta_mb: f64) {
+        let node = self.core.node_of(self.self_id);
+        self.core.metrics.usage_mut(node).add_mem(delta_mb);
+    }
+
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.core.rng
+    }
+
+    pub fn metrics(&mut self) -> &mut Metrics {
+        &mut self.core.metrics
+    }
+
+    pub fn my_node(&self) -> NodeId {
+        self.core.node_of(self.self_id)
+    }
+
+    /// Ground-truth RTT between two nodes (for ping emulation: Vivaldi
+    /// feeds on these; the *scheduler* never reads them directly).
+    pub fn rtt_ms(&mut self, a: NodeId, b: NodeId) -> f64 {
+        self.core.net.rtt_ms(a, b, &mut self.core.rng)
+    }
+}
+
+/// The simulator: actor table + core.
+pub struct Sim {
+    actors: Vec<Option<Box<dyn Actor>>>,
+    pub core: SimCore,
+}
+
+impl Sim {
+    pub fn new(seed: u64) -> Self {
+        Sim {
+            actors: Vec::new(),
+            core: SimCore {
+                clock: SimTime::ZERO,
+                queue: BinaryHeap::new(),
+                seq: 0,
+                net: Network::default(),
+                rng: Rng::seeded(seed),
+                metrics: Metrics::default(),
+                nodes: HashMap::new(),
+                actor_node: Vec::new(),
+                failed: HashMap::new(),
+                containers: ContainerRuntime::default(),
+            },
+        }
+    }
+
+    pub fn add_node(&mut self, node: NodeId, class: NodeClass) {
+        let prev = self.core.nodes.insert(node, SimNode { class });
+        assert!(prev.is_none(), "node {node} registered twice");
+    }
+
+    pub fn add_actor(&mut self, node: NodeId, actor: Box<dyn Actor>) -> ActorId {
+        assert!(
+            self.core.nodes.contains_key(&node),
+            "actor on unknown node {node}"
+        );
+        let id = ActorId(self.actors.len() as u32);
+        self.actors.push(Some(actor));
+        self.core.actor_node.push(node);
+        id
+    }
+
+    /// Inject a message at a given virtual time (experiment drivers).
+    pub fn inject(&mut self, at: SimTime, target: ActorId, msg: SimMsg) {
+        self.core.push(at, target, msg);
+    }
+
+    /// Run until the queue drains or the next event lies beyond `until`.
+    /// The clock is left at the last *executed* event.
+    pub fn run_until(&mut self, until: SimTime) {
+        while let Some(Reverse(ev)) = self.core.queue.peek().map(|e| Reverse(&e.0)) {
+            if ev.at > until {
+                break;
+            }
+            let Reverse(ev) = self.core.queue.pop().unwrap();
+            self.core.clock = ev.at;
+            let idx = ev.target.0 as usize;
+            // Detach the actor so it can borrow the core mutably.
+            let mut actor = match self.actors[idx].take() {
+                Some(a) => a,
+                None => continue, // actor removed mid-flight
+            };
+            {
+                let mut ctx = Ctx {
+                    now: ev.at,
+                    self_id: ev.target,
+                    core: &mut self.core,
+                };
+                actor.handle(&mut ctx, ev.msg);
+            }
+            self.actors[idx] = Some(actor);
+        }
+    }
+
+    /// Drain every queued event (careful with self-rescheduling timers).
+    pub fn run_to_quiescence(&mut self, hard_limit: SimTime) {
+        self.run_until(hard_limit);
+    }
+
+    pub fn now(&self) -> SimTime {
+        self.core.clock
+    }
+
+    /// Inspect an actor's state (tests/benches).
+    pub fn actor_as<T: 'static>(&self, id: ActorId) -> Option<&T> {
+        self.actors[id.0 as usize]
+            .as_deref()
+            .and_then(|a| a.as_any().downcast_ref::<T>())
+    }
+
+    pub fn actor_as_mut<T: 'static>(&mut self, id: ActorId) -> Option<&mut T> {
+        self.actors[id.0 as usize]
+            .as_deref_mut()
+            .and_then(|a| a.as_any_mut().downcast_mut::<T>())
+    }
+
+    /// Fail / recover a node (failure-injection experiments, §4.2).
+    pub fn set_node_failed(&mut self, node: NodeId, failed: bool) {
+        self.core.set_failed(node, failed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Ping-pong actor pair used to validate ordering and determinism.
+    struct Pinger {
+        peer: Option<ActorId>,
+        sent: u32,
+        got: u32,
+        limit: u32,
+    }
+    impl Actor for Pinger {
+        fn handle(&mut self, ctx: &mut Ctx<'_>, msg: SimMsg) {
+            match msg {
+                SimMsg::Timer(TimerKind::Custom(_)) => {
+                    if let Some(p) = self.peer {
+                        self.sent += 1;
+                        ctx.send(p, SimMsg::Data(DataMsg::Ping { seq: self.sent }), 64, "test");
+                    }
+                }
+                SimMsg::Data(DataMsg::Ping { seq }) => {
+                    self.got += 1;
+                    if seq < self.limit {
+                        if let Some(p) = self.peer {
+                            ctx.send(p, SimMsg::Data(DataMsg::Ping { seq: seq + 1 }), 64, "test");
+                        }
+                    }
+                    ctx.charge_cpu(0.1);
+                }
+                _ => {}
+            }
+        }
+        fn as_any(&self) -> &dyn Any {
+            self
+        }
+        fn as_any_mut(&mut self) -> &mut dyn Any {
+            self
+        }
+    }
+
+    fn build() -> (Sim, ActorId, ActorId) {
+        let mut sim = Sim::new(1);
+        sim.add_node(NodeId(0), NodeClass::S);
+        sim.add_node(NodeId(1), NodeClass::S);
+        sim.core.net.set_default(LinkProfile::lan());
+        let a = sim.add_actor(
+            NodeId(0),
+            Box::new(Pinger {
+                peer: None,
+                sent: 0,
+                got: 0,
+                limit: 10,
+            }),
+        );
+        let b = sim.add_actor(
+            NodeId(1),
+            Box::new(Pinger {
+                peer: Some(a),
+                sent: 0,
+                got: 0,
+                limit: 10,
+            }),
+        );
+        sim.actor_as_mut::<Pinger>(a).unwrap().peer = Some(b);
+        (sim, a, b)
+    }
+
+    #[test]
+    fn ping_pong_advances_clock_and_counts() {
+        let (mut sim, a, b) = build();
+        sim.inject(SimTime::ZERO, a, SimMsg::Timer(TimerKind::Custom(0)));
+        sim.run_until(SimTime::from_secs(10.0));
+        let pa = sim.actor_as::<Pinger>(a).unwrap();
+        let pb = sim.actor_as::<Pinger>(b).unwrap();
+        assert_eq!(pb.got, 5); // seqs 1,3,5,7,9
+        assert_eq!(pa.got, 5); // seqs 2,4,6,8,10
+        assert!(sim.now() > SimTime::ZERO);
+        assert_eq!(sim.core.metrics.msgs("test"), 10);
+    }
+
+    #[test]
+    fn identical_seeds_identical_traces() {
+        let run = |seed| {
+            let (mut sim, a, _) = build();
+            sim.core.rng = Rng::seeded(seed);
+            sim.core.net.set_default(LinkProfile::wan(50.0, 5.0, 0.0));
+            sim.inject(SimTime::ZERO, a, SimMsg::Timer(TimerKind::Custom(0)));
+            sim.run_until(SimTime::from_secs(30.0));
+            sim.now().as_micros()
+        };
+        assert_eq!(run(7), run(7));
+        assert_ne!(run(7), run(8)); // jitter differs with seed
+    }
+
+    #[test]
+    fn failed_nodes_drop_traffic() {
+        let (mut sim, a, _) = build();
+        sim.set_node_failed(NodeId(1), true);
+        sim.inject(SimTime::ZERO, a, SimMsg::Timer(TimerKind::Custom(0)));
+        sim.run_until(SimTime::from_secs(5.0));
+        assert_eq!(
+            sim.core.metrics.counter("net.dropped_failed_node"),
+            1,
+            "send to failed node must be dropped"
+        );
+        let pa = sim.actor_as::<Pinger>(a).unwrap();
+        assert_eq!(pa.got, 0);
+    }
+
+    #[test]
+    fn cpu_charges_scale_with_node_speed() {
+        let mut sim = Sim::new(2);
+        sim.add_node(NodeId(0), NodeClass::RaspberryPi4);
+        struct Burner;
+        impl Actor for Burner {
+            fn handle(&mut self, ctx: &mut Ctx<'_>, _: SimMsg) {
+                ctx.charge_cpu(35.0);
+            }
+            fn as_any(&self) -> &dyn Any {
+                self
+            }
+            fn as_any_mut(&mut self) -> &mut dyn Any {
+                self
+            }
+        }
+        let a = sim.add_actor(NodeId(0), Box::new(Burner));
+        sim.inject(SimTime::ZERO, a, SimMsg::Timer(TimerKind::Custom(0)));
+        sim.run_until(SimTime::from_secs(1.0));
+        let util = sim
+            .core
+            .metrics
+            .usage(NodeId(0))
+            .unwrap()
+            .cpu_util(SimTime::ZERO, SimTime::from_secs(1.0));
+        // 35ms at 0.35 speed = 100ms busy in a 1000ms window.
+        assert!((util - 0.1).abs() < 1e-9, "util={util}");
+    }
+}

@@ -1,0 +1,327 @@
+//! The unified simulation message set: Oakestra's control protocol
+//! ([`OakMsg`]), the flat Kubernetes-family baseline protocol
+//! ([`KubeMsg`]), data-plane traffic ([`DataMsg`]) and timers.
+//!
+//! Wire sizes are charged explicitly at each send site (the byte counts
+//! behind Fig. 7a); keeping payloads as plain structs in one place keeps
+//! the protocol reviewable the way a `.proto` file would be.
+
+use crate::hierarchy::AggregateStats;
+use crate::model::{Capacity, ServiceState, WorkerSpec};
+use crate::netmanager::{ServiceIp, TableEntry};
+use crate::sim::ActorId;
+use crate::sla::{ServiceSla, TaskSla};
+use crate::util::{ClusterId, InstanceId, NodeId, ServiceId, SimTime, TaskId};
+use crate::vivaldi::VivaldiState;
+
+/// Periodic timer kinds (the owner interprets them).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum TimerKind {
+    /// Worker → cluster push-based telemetry tick (λ(Rₙⁱ), §4.1).
+    WorkerTelemetry,
+    /// Cluster → parent aggregate push tick.
+    ClusterAggregate,
+    /// Orchestrator health sweep (failure detection).
+    HealthSweep,
+    /// Root↔cluster WebSocket liveness ping (§6 Orchestration).
+    LivenessPing,
+    /// Kubelet status update / watch resync (baselines).
+    KubeletSync,
+    /// Controller-manager reconcile loop (baselines).
+    Reconcile,
+    /// Workload-specific tick (frame generation, request generation...).
+    Workload,
+    /// Tunnel garbage collection sweep (§5 configured/active links).
+    TunnelGc,
+    Custom(u32),
+}
+
+/// Oakestra control-plane protocol (paper Fig. 1 steps ①–⑪).
+#[derive(Clone, Debug)]
+pub enum OakMsg {
+    // -- registration ----------------------------------------------------
+    /// Operator registers a cluster orchestrator with the root (or a
+    /// sub-cluster with its parent).
+    RegisterCluster {
+        cluster: ClusterId,
+        orchestrator: ActorId,
+        parent: ClusterId,
+    },
+    RegisterClusterAck {
+        accepted: bool,
+    },
+    /// Worker joins its cluster orchestrator; carries capacity &
+    /// capabilities (§3.2.3) and receives its overlay subnet.
+    RegisterWorker {
+        spec: WorkerSpec,
+        engine: ActorId,
+    },
+    RegisterWorkerAck {
+        subnet: u32,
+    },
+
+    // -- telemetry (§4.1) --------------------------------------------------
+    /// Push-based worker report over the intra-cluster MQTT link.
+    WorkerReport {
+        node: NodeId,
+        used: Capacity,
+        vivaldi: VivaldiState,
+        instances: Vec<(InstanceId, ServiceState, f64)>, // (id, state, qos_ms)
+    },
+    /// Push-based aggregate over the inter-cluster WebSocket link.
+    ClusterReport {
+        cluster: ClusterId,
+        stats: AggregateStats,
+        running_instances: usize,
+    },
+    /// WS liveness ping/pong.
+    Ping,
+    Pong,
+    /// Membership gossip: orchestrator → worker sample of peer Vivaldi
+    /// states so workers can run decentralized coordinate updates.
+    PeerHint {
+        peers: Vec<(NodeId, VivaldiState)>,
+    },
+
+    // -- deployment (steps ①–⑨) -------------------------------------------
+    /// Developer submits an SLA at the root API.
+    SubmitService {
+        sla: ServiceSla,
+        reply_to: Option<ActorId>,
+    },
+    /// Root delegates one task to a cluster orchestrator (step ③/④),
+    /// carrying τ and Q_τ. `attempt` counts priority-list retries.
+    DelegateTask {
+        task: TaskId,
+        instance: InstanceId,
+        sla: TaskSla,
+        attempt: u32,
+    },
+    /// Cluster answers the root: placed on `worker`, or infeasible.
+    DelegationResult {
+        task: TaskId,
+        instance: InstanceId,
+        worker: Option<NodeId>,
+        calc_time: SimTime,
+    },
+    /// Cluster orchestrator instructs a worker's NodeEngine (step ⑦).
+    DeployInstance {
+        instance: InstanceId,
+        task: TaskId,
+        request: Capacity,
+        image_mb: u32,
+        service_ips: Vec<ServiceIp>,
+    },
+    /// NodeEngine confirms the container is up (→ Running) or failed.
+    InstanceStatus {
+        instance: InstanceId,
+        node: NodeId,
+        state: ServiceState,
+    },
+    UndeployInstance {
+        instance: InstanceId,
+    },
+    /// Root/driver callback when a whole service reaches Running.
+    ServiceDeployed {
+        service: ServiceId,
+        elapsed: SimTime,
+    },
+    /// Developer asks for one more instance of a task (paper §6:
+    /// replication follows the migration procedure minus the teardown).
+    ReplicateTask {
+        task: TaskId,
+    },
+
+    // -- overlay networking (steps ⑩–⑪, §5) --------------------------------
+    /// Worker asks its cluster service manager to resolve a ServiceIP.
+    ResolveIp {
+        from: NodeId,
+        query: ServiceIp,
+    },
+    /// Resolution answer / push update of conversion-table entries.
+    TableUpdate {
+        entries: Vec<TableEntry>,
+    },
+    /// Recursive resolution: cluster asks root for foreign instances.
+    ResolveIpUp {
+        cluster: ClusterId,
+        from: NodeId,
+        query: ServiceIp,
+    },
+
+    // -- failure handling ---------------------------------------------------
+    /// Health sweep found a dead worker: all its instances failed.
+    WorkerDead {
+        node: NodeId,
+    },
+    /// Cluster tells root it cannot host an instance anymore (reschedule
+    /// up the hierarchy, §4.2).
+    EscalateReschedule {
+        task: TaskId,
+        instance: InstanceId,
+        sla: TaskSla,
+    },
+}
+
+/// Flat Kubernetes-family control protocol (baselines; DESIGN.md ledger).
+#[derive(Clone, Debug)]
+pub enum KubeMsg {
+    /// kubelet → apiserver node status (10 s default period).
+    NodeStatus {
+        node: NodeId,
+        used: Capacity,
+    },
+    /// kubelet list/watch registration + periodic resync (full state).
+    WatchSync {
+        node: NodeId,
+    },
+    /// apiserver → kubelet watch event (pod spec changed).
+    WatchEvent {
+        bytes: usize,
+    },
+    /// Client submits a pod/deployment.
+    SubmitPod {
+        service: ServiceId,
+        request: Capacity,
+        image_mb: u32,
+        reply_to: Option<ActorId>,
+    },
+    /// scheduler binds pod → node (goes through apiserver + store).
+    Bind {
+        service: ServiceId,
+        node: NodeId,
+    },
+    /// kubelet reports pod phase.
+    PodStatus {
+        service: ServiceId,
+        node: NodeId,
+        running: bool,
+    },
+    /// store (etcd/dqlite/sqlite) write round-trip completion.
+    StoreCommit {
+        key: u64,
+    },
+    /// kubelet node lease renewal (default 10 s period, light object).
+    LeaseRenew {
+        node: NodeId,
+    },
+    /// kubelet → apiserver object fetch before running a pod (pod spec,
+    /// secrets/configmaps — each a full round trip).
+    SpecFetch {
+        service: ServiceId,
+        node: NodeId,
+        round: u8,
+    },
+    SpecReply {
+        service: ServiceId,
+        round: u8,
+    },
+    /// Post-Running condition PATCH (Initialized/Ready/ContainersReady).
+    ConditionPatch {
+        service: ServiceId,
+        node: NodeId,
+    },
+    /// Driver callback mirroring `ServiceDeployed`.
+    PodDeployed {
+        service: ServiceId,
+        elapsed: SimTime,
+    },
+}
+
+/// Application/data-plane traffic.
+#[derive(Clone, Debug)]
+pub enum DataMsg {
+    Ping {
+        seq: u32,
+    },
+    /// HTTP-ish request to a semantic ServiceIP (Fig. 9 left).
+    Request {
+        id: u64,
+        from: ActorId,
+        target: ServiceIp,
+        bytes: usize,
+        sent_at: SimTime,
+    },
+    Response {
+        id: u64,
+        bytes: usize,
+        sent_at: SimTime,
+    },
+    /// Video pipeline: a frame (or batch) handed to the next stage.
+    Frame {
+        stream: u32,
+        frame: u64,
+        stage: u8,
+        produced_at: SimTime,
+    },
+    /// Nginx stress workload tick: apply load to the hosting worker.
+    StressLoad {
+        rps: f64,
+    },
+}
+
+/// Top-level message envelope.
+#[derive(Clone, Debug)]
+pub enum SimMsg {
+    Timer(TimerKind),
+    Oak(OakMsg),
+    Kube(KubeMsg),
+    Data(DataMsg),
+}
+
+impl SimMsg {
+    /// Approximate wire size used when a call site has no better estimate.
+    pub fn default_wire_bytes(&self) -> usize {
+        match self {
+            SimMsg::Timer(_) => 0,
+            SimMsg::Oak(m) => match m {
+                OakMsg::RegisterCluster { .. } => 512,
+                OakMsg::RegisterClusterAck { .. } => 64,
+                OakMsg::RegisterWorker { .. } => 768,
+                OakMsg::RegisterWorkerAck { .. } => 64,
+                OakMsg::WorkerReport { instances, .. } => 180 + 24 * instances.len(),
+                OakMsg::ClusterReport { .. } => 256,
+                OakMsg::Ping | OakMsg::Pong => 16,
+                OakMsg::PeerHint { peers } => 16 + 40 * peers.len(),
+                OakMsg::SubmitService { sla, .. } => 512 + 256 * sla.constraints.len(),
+                OakMsg::DelegateTask { .. } => 640,
+                OakMsg::DelegationResult { .. } => 96,
+                OakMsg::DeployInstance { service_ips, .. } => {
+                    256 + 32 * service_ips.len()
+                }
+                OakMsg::InstanceStatus { .. } => 96,
+                OakMsg::UndeployInstance { .. } => 64,
+                OakMsg::ServiceDeployed { .. } => 64,
+                OakMsg::ReplicateTask { .. } => 96,
+                OakMsg::ResolveIp { .. } | OakMsg::ResolveIpUp { .. } => 96,
+                OakMsg::TableUpdate { entries } => 48 + 48 * entries.len(),
+                OakMsg::WorkerDead { .. } => 64,
+                OakMsg::EscalateReschedule { .. } => 640,
+            },
+            SimMsg::Kube(m) => match m {
+                // Kubernetes node status objects are famously fat
+                // (conditions, images, allocatable...) — ~10 KB uncompressed;
+                // K3s trims but stays KB-scale. (Fig. 7a's 2× message volume
+                // comes from *counts*; sizes feed the bandwidth lines.)
+                KubeMsg::NodeStatus { .. } => 8 * 1024,
+                KubeMsg::WatchSync { .. } => 2 * 1024,
+                KubeMsg::WatchEvent { bytes } => *bytes,
+                KubeMsg::SubmitPod { .. } => 2 * 1024,
+                KubeMsg::Bind { .. } => 1024,
+                KubeMsg::PodStatus { .. } => 2 * 1024,
+                KubeMsg::StoreCommit { .. } => 512,
+                KubeMsg::LeaseRenew { .. } => 512,
+                KubeMsg::SpecFetch { .. } => 512,
+                KubeMsg::SpecReply { .. } => 3 * 1024,
+                KubeMsg::ConditionPatch { .. } => 2 * 1024,
+                KubeMsg::PodDeployed { .. } => 64,
+            },
+            SimMsg::Data(m) => match m {
+                DataMsg::Ping { .. } => 64,
+                DataMsg::Request { bytes, .. } | DataMsg::Response { bytes, .. } => *bytes,
+                DataMsg::Frame { .. } => 64 * 1024,
+                DataMsg::StressLoad { .. } => 0,
+            },
+        }
+    }
+}

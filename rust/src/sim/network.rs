@@ -1,0 +1,282 @@
+//! Link model: per-pair delay/jitter/loss/bandwidth with `tc`-style
+//! impairment overlays (the paper degrades its HET testbed with `tc`,
+//! Fig. 5). Reliable transports absorb loss as retransmission delay
+//! (TCP-like RTO); unreliable transports drop.
+
+use std::collections::HashMap;
+
+use crate::util::{NodeId, Rng, SimTime};
+
+/// One direction of a network link.
+#[derive(Clone, Copy, Debug)]
+pub struct LinkProfile {
+    /// One-way propagation delay, ms.
+    pub delay_ms: f64,
+    /// Uniform jitter amplitude, ms (delay ± U(0, jitter)).
+    pub jitter_ms: f64,
+    /// Packet/message loss probability in [0, 1).
+    pub loss: f64,
+    /// Bandwidth in Mbit/s (serialization delay = bytes / bw).
+    pub bandwidth_mbps: f64,
+}
+
+impl LinkProfile {
+    /// Datacenter-grade LAN: the paper's HPC testbed (1 Gbps ethernet).
+    pub fn lan() -> LinkProfile {
+        LinkProfile {
+            delay_ms: 0.25,
+            jitter_ms: 0.05,
+            loss: 0.0,
+            bandwidth_mbps: 1000.0,
+        }
+    }
+
+    /// Edge WiFi-ish link: HET testbed interconnect.
+    pub fn wifi() -> LinkProfile {
+        LinkProfile {
+            delay_ms: 3.0,
+            jitter_ms: 2.0,
+            loss: 0.005,
+            bandwidth_mbps: 100.0,
+        }
+    }
+
+    /// Wide-area link with explicit parameters (inter-cluster, cloud).
+    pub fn wan(delay_ms: f64, jitter_ms: f64, loss: f64) -> LinkProfile {
+        LinkProfile {
+            delay_ms,
+            jitter_ms,
+            loss,
+            bandwidth_mbps: 100.0,
+        }
+    }
+
+    /// Apply a `tc netem`-style impairment on top (Fig. 5: added delay /
+    /// loss).
+    #[must_use]
+    pub fn impaired(mut self, add_delay_ms: f64, add_loss: f64) -> LinkProfile {
+        self.delay_ms += add_delay_ms;
+        self.loss = (self.loss + add_loss).min(0.95);
+        self
+    }
+}
+
+/// Transport semantics for a message.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Transport {
+    /// TCP-like: loss becomes retransmission delay, delivery guaranteed.
+    Reliable,
+    /// UDP-like: loss drops the message.
+    Unreliable,
+}
+
+/// The network: default profile + per-pair overrides (symmetric).
+#[derive(Clone, Debug)]
+pub struct Network {
+    default: LinkProfile,
+    overrides: HashMap<(NodeId, NodeId), LinkProfile>,
+    /// Global impairment applied to every link (tc on the shared segment).
+    impair_delay_ms: f64,
+    impair_loss: f64,
+}
+
+impl Default for Network {
+    fn default() -> Self {
+        Network {
+            default: LinkProfile::lan(),
+            overrides: HashMap::new(),
+            impair_delay_ms: 0.0,
+            impair_loss: 0.0,
+        }
+    }
+}
+
+impl Network {
+    fn key(a: NodeId, b: NodeId) -> (NodeId, NodeId) {
+        if a <= b {
+            (a, b)
+        } else {
+            (b, a)
+        }
+    }
+
+    pub fn set_default(&mut self, p: LinkProfile) {
+        self.default = p;
+    }
+
+    pub fn set_link(&mut self, a: NodeId, b: NodeId, p: LinkProfile) {
+        self.overrides.insert(Self::key(a, b), p);
+    }
+
+    /// Global `tc netem`-style impairment (Fig. 5 sweeps this).
+    pub fn impair_all(&mut self, add_delay_ms: f64, add_loss: f64) {
+        self.impair_delay_ms = add_delay_ms;
+        self.impair_loss = add_loss;
+    }
+
+    pub fn profile(&self, a: NodeId, b: NodeId) -> LinkProfile {
+        let base = self
+            .overrides
+            .get(&Self::key(a, b))
+            .copied()
+            .unwrap_or(self.default);
+        base.impaired(self.impair_delay_ms, self.impair_loss)
+    }
+
+    /// Ground-truth RTT sample (ping), ms.
+    pub fn rtt_ms(&self, a: NodeId, b: NodeId, rng: &mut Rng) -> f64 {
+        if a == b {
+            return 0.05; // loopback
+        }
+        let p = self.profile(a, b);
+        2.0 * (p.delay_ms + rng.range(0.0, p.jitter_ms.max(1e-9)))
+    }
+
+    /// Delivery delay for one message, or `None` if dropped (unreliable
+    /// only). Reliable loss turns into RTO-backoff retransmissions.
+    pub fn delivery_delay(
+        &self,
+        src: NodeId,
+        dst: NodeId,
+        bytes: usize,
+        transport: Transport,
+        rng: &mut Rng,
+    ) -> Option<SimTime> {
+        if src == dst {
+            return Some(SimTime::from_micros(50)); // local socket
+        }
+        let p = self.profile(src, dst);
+        let serialize_ms = (bytes as f64 * 8.0) / (p.bandwidth_mbps * 1000.0);
+        let base_ms = p.delay_ms + rng.range(0.0, p.jitter_ms.max(1e-9)) + serialize_ms;
+        match transport {
+            Transport::Unreliable => {
+                if rng.chance(p.loss) {
+                    None
+                } else {
+                    Some(SimTime::from_millis(base_ms))
+                }
+            }
+            Transport::Reliable => {
+                // Geometric retransmission count; each retry waits an RTO
+                // of max(200ms, 2*RTT) — the classic TCP floor.
+                let mut total = base_ms;
+                let rto_ms = (2.0 * 2.0 * p.delay_ms).max(200.0);
+                let mut tries = 0;
+                while rng.chance(p.loss) && tries < 16 {
+                    total += rto_ms;
+                    tries += 1;
+                }
+                Some(SimTime::from_millis(total))
+            }
+        }
+    }
+
+    /// Steady-state TCP throughput on this link in Mbit/s: the minimum of
+    /// the link bandwidth, the receive-window limit (1 MiB window / RTT)
+    /// and the Mathis loss model MSS/(RTT·√loss) — used for the bulk
+    /// transfer experiments (Fig. 9 right).
+    pub fn tcp_throughput_mbps(&self, a: NodeId, b: NodeId) -> f64 {
+        let p = self.profile(a, b);
+        let rtt_s = (2.0 * p.delay_ms / 1000.0).max(1e-4);
+        const WINDOW_BITS: f64 = 8.0 * 1024.0 * 1024.0; // 1 MiB rwnd
+        let window_limit = WINDOW_BITS / rtt_s / 1e6;
+        let mut tput = p.bandwidth_mbps.min(window_limit);
+        if p.loss > 0.0 {
+            const MSS_BITS: f64 = 1460.0 * 8.0;
+            tput = tput.min(MSS_BITS / (rtt_s * p.loss.sqrt()) / 1e6);
+        }
+        tput
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lan_delivery_fast_and_lossless() {
+        let net = Network::default();
+        let mut rng = Rng::seeded(1);
+        let d = net
+            .delivery_delay(NodeId(0), NodeId(1), 256, Transport::Unreliable, &mut rng)
+            .unwrap();
+        assert!(d.as_millis() < 1.0, "{d}");
+    }
+
+    #[test]
+    fn local_delivery_is_socket_cost() {
+        let net = Network::default();
+        let mut rng = Rng::seeded(1);
+        let d = net
+            .delivery_delay(NodeId(3), NodeId(3), 1 << 20, Transport::Reliable, &mut rng)
+            .unwrap();
+        assert_eq!(d.as_micros(), 50);
+    }
+
+    #[test]
+    fn unreliable_drops_at_high_loss() {
+        let mut net = Network::default();
+        net.set_default(LinkProfile::wan(10.0, 0.0, 0.5));
+        let mut rng = Rng::seeded(2);
+        let mut drops = 0;
+        for _ in 0..1000 {
+            if net
+                .delivery_delay(NodeId(0), NodeId(1), 64, Transport::Unreliable, &mut rng)
+                .is_none()
+            {
+                drops += 1;
+            }
+        }
+        assert!((400..600).contains(&drops), "drops={drops}");
+    }
+
+    #[test]
+    fn reliable_converts_loss_to_delay() {
+        let mut net = Network::default();
+        net.set_default(LinkProfile::wan(10.0, 0.0, 0.3));
+        let mut rng = Rng::seeded(3);
+        let mut total = 0.0;
+        for _ in 0..1000 {
+            total += net
+                .delivery_delay(NodeId(0), NodeId(1), 64, Transport::Reliable, &mut rng)
+                .unwrap()
+                .as_millis();
+        }
+        let mean = total / 1000.0;
+        // ~0.3/(1-0.3) expected retransmissions * 200ms RTO + 10ms base.
+        assert!(mean > 60.0 && mean < 130.0, "mean={mean}");
+    }
+
+    #[test]
+    fn impairment_stacks_on_overrides() {
+        let mut net = Network::default();
+        net.set_link(NodeId(0), NodeId(1), LinkProfile::wan(20.0, 0.0, 0.0));
+        net.impair_all(100.0, 0.1);
+        let p = net.profile(NodeId(0), NodeId(1));
+        assert!((p.delay_ms - 120.0).abs() < 1e-9);
+        assert!((p.loss - 0.1).abs() < 1e-9);
+        // Symmetric lookup.
+        let q = net.profile(NodeId(1), NodeId(0));
+        assert!((q.delay_ms - p.delay_ms).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tcp_throughput_decreases_with_rtt_and_loss() {
+        let mut net = Network::default();
+        net.set_default(LinkProfile::wan(10.0, 0.0, 0.01));
+        let t10 = net.tcp_throughput_mbps(NodeId(0), NodeId(1));
+        net.set_default(LinkProfile::wan(100.0, 0.0, 0.01));
+        let t100 = net.tcp_throughput_mbps(NodeId(0), NodeId(1));
+        assert!(t10 > t100);
+        net.set_default(LinkProfile::wan(100.0, 0.0, 0.1));
+        let lossy = net.tcp_throughput_mbps(NodeId(0), NodeId(1));
+        assert!(lossy < t100);
+        // No loss, tiny RTT → bandwidth-limited.
+        net.set_default(LinkProfile::lan());
+        assert_eq!(net.tcp_throughput_mbps(NodeId(0), NodeId(1)), 1000.0);
+        // No loss, large RTT → window-limited.
+        net.set_default(LinkProfile::wan(250.0, 0.0, 0.0));
+        let w = net.tcp_throughput_mbps(NodeId(0), NodeId(1));
+        assert!((w - 16.777).abs() < 0.1, "window limit {w}");
+    }
+}

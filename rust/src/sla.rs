@@ -1,0 +1,338 @@
+//! Service Level Agreement descriptors (paper Schema 1, §4.2).
+//!
+//! Application providers submit a JSON SLA alongside their code; the root
+//! service manager validates it and derives task requirements
+//! `Q_{τ_{p,i}}`. In addition to cloud-style capacity fields the schema
+//! carries edge-specific constraints: geographic `area`/`location`,
+//! end-to-end `latency`, service-to-service (S2S) and service-to-user
+//! (S2U) link constraints (Alg. 2), plus the scheduling-heuristic tuning
+//! knobs `convergence_time` and `rigidness`.
+
+use crate::geo::GeoPoint;
+use crate::model::{Capacity, Virtualization};
+use crate::util::TaskId;
+
+/// Constraint on a service-to-service link (`Q^{s2s}` in Alg. 2): this
+/// task must sit within both thresholds of the *target* task's placement.
+#[derive(Clone, Debug, PartialEq)]
+pub struct S2sConstraint {
+    /// Index of the target microservice within the same service.
+    pub target_task: u16,
+    /// Max great-circle distance to the target instance, km (`geo_thr`).
+    pub geo_threshold_km: f64,
+    /// Max Vivaldi (≈RTT) distance to the target instance, ms (`viv_thr`).
+    pub latency_threshold_ms: f64,
+}
+
+/// Constraint on a service-to-user link (`Q^{s2u}` in Alg. 2).
+#[derive(Clone, Debug, PartialEq)]
+pub struct S2uConstraint {
+    /// Where the users are expected (degrees in the JSON form).
+    pub user_location: GeoPoint,
+    /// Max great-circle distance to `user_location`, km (`geo_thr`).
+    pub geo_threshold_km: f64,
+    /// Max RTT to the (trilaterated) user position, ms (`lat_thr`).
+    pub latency_threshold_ms: f64,
+    /// How many random workers ping the user for trilateration (Alg. 2
+    /// line 11, `rnd(W)`).
+    pub probe_count: usize,
+}
+
+/// Per-task SLA row (one entry of Schema 1's `constraints` list).
+#[derive(Clone, Debug, Default)]
+pub struct TaskSla {
+    pub memory_mb: u32,
+    pub vcpus_millicores: u32,
+    pub vgpus: u8,
+    pub vtpus: u8,
+    pub disk_mb: u32,
+    pub bandwidth_in_mbps: u32,
+    pub bandwidth_out_mbps: u32,
+    /// Target operational area name (resolved against the registry).
+    pub area: Option<String>,
+    /// Explicit location pin, degrees.
+    pub location: Option<GeoPoint>,
+    /// Scheduler sensitivity to SLA violations before re-scheduling is
+    /// triggered (0.0 = never re-schedule, 1.0 = immediately; §4.2).
+    pub rigidness: f64,
+    /// Max time the scheduler may spend finding a placement, ms (§4.2).
+    pub convergence_time_ms: u64,
+    /// Required virtualization technologies (comma-separated names).
+    pub virtualization: String,
+    pub s2s: Vec<S2sConstraint>,
+    pub s2u: Vec<S2uConstraint>,
+}
+
+impl TaskSla {
+    /// Requested capacity vector `Q_{τ_{p,i}}`.
+    pub fn request(&self) -> Capacity {
+        Capacity {
+            cpu_millicores: self.vcpus_millicores,
+            mem_mb: self.memory_mb,
+            disk_mb: self.disk_mb,
+            gpus: self.vgpus,
+            tpus: self.vtpus,
+        }
+    }
+
+    pub fn virtualization_mask(&self) -> Option<Virtualization> {
+        Virtualization::parse(&self.virtualization)
+    }
+}
+
+/// A full service SLA: the JSON document submitted to the root API.
+#[derive(Clone, Debug, Default)]
+pub struct ServiceSla {
+    pub name: String,
+    /// One row per microservice, ordered by microservice id.
+    pub constraints: Vec<TaskSla>,
+}
+
+/// Validation failure for a submitted SLA.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SlaError {
+    NoTasks,
+    ZeroResources(usize),
+    UnknownVirtualization(usize),
+    BadS2sTarget { task: usize, target: u16 },
+    SelfS2sTarget(usize),
+    BadThreshold(usize),
+}
+
+impl std::fmt::Display for SlaError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SlaError::NoTasks => write!(f, "SLA has no microservice constraints"),
+            SlaError::ZeroResources(i) => {
+                write!(f, "task {i}: zero cpu and memory request")
+            }
+            SlaError::UnknownVirtualization(i) => {
+                write!(f, "task {i}: unknown virtualization string")
+            }
+            SlaError::BadS2sTarget { task, target } => {
+                write!(f, "task {task}: s2s target {target} out of range")
+            }
+            SlaError::SelfS2sTarget(i) => write!(f, "task {i}: s2s targets itself"),
+            SlaError::BadThreshold(i) => {
+                write!(f, "task {i}: non-positive constraint threshold")
+            }
+        }
+    }
+}
+impl std::error::Error for SlaError {}
+
+impl ServiceSla {
+    /// Parse the JSON SLA document (Schema 1 shape). Unknown fields are
+    /// ignored; missing numeric fields default to zero, mirroring how the
+    /// paper's schema marks most properties optional.
+    pub fn parse_json(s: &str) -> anyhow::Result<ServiceSla> {
+        let v = crate::json::parse(s)?;
+        let name = v.get("name").as_str().unwrap_or("unnamed").to_string();
+        let mut constraints = Vec::new();
+        for row in v.get("constraints").as_array().unwrap_or(&[]) {
+            let num = |k: &str| row.get(k).as_f64().unwrap_or(0.0);
+            let geo = |val: &crate::json::Value| -> Option<GeoPoint> {
+                if val.is_null() {
+                    return None;
+                }
+                Some(GeoPoint::from_degrees(
+                    val.get("lat_deg").as_f64()?,
+                    val.get("lon_deg").as_f64()?,
+                ))
+            };
+            let mut t = TaskSla {
+                memory_mb: num("memory_mb") as u32,
+                vcpus_millicores: num("vcpus_millicores") as u32,
+                vgpus: num("vgpus") as u8,
+                vtpus: num("vtpus") as u8,
+                disk_mb: num("disk_mb") as u32,
+                bandwidth_in_mbps: num("bandwidth_in_mbps") as u32,
+                bandwidth_out_mbps: num("bandwidth_out_mbps") as u32,
+                area: row.get("area").as_str().map(str::to_string),
+                location: geo(row.get("location")),
+                rigidness: num("rigidness"),
+                convergence_time_ms: num("convergence_time_ms") as u64,
+                virtualization: row
+                    .get("virtualization")
+                    .as_str()
+                    .unwrap_or("container")
+                    .to_string(),
+                s2s: Vec::new(),
+                s2u: Vec::new(),
+            };
+            for c in row.get("s2s").as_array().unwrap_or(&[]) {
+                t.s2s.push(S2sConstraint {
+                    target_task: c.get("target_task").as_u64().unwrap_or(0) as u16,
+                    geo_threshold_km: c.get("geo_threshold_km").as_f64().unwrap_or(0.0),
+                    latency_threshold_ms: c
+                        .get("latency_threshold_ms")
+                        .as_f64()
+                        .unwrap_or(0.0),
+                });
+            }
+            for c in row.get("s2u").as_array().unwrap_or(&[]) {
+                t.s2u.push(S2uConstraint {
+                    user_location: geo(c.get("user_location")).unwrap_or_default(),
+                    geo_threshold_km: c.get("geo_threshold_km").as_f64().unwrap_or(0.0),
+                    latency_threshold_ms: c
+                        .get("latency_threshold_ms")
+                        .as_f64()
+                        .unwrap_or(0.0),
+                    probe_count: c.get("probe_count").as_u64().unwrap_or(3) as usize,
+                });
+            }
+            constraints.push(t);
+        }
+        Ok(ServiceSla { name, constraints })
+    }
+
+    /// Structural validation performed by the root service manager before
+    /// a deployment request is accepted (paper step ①).
+    pub fn validate(&self) -> Result<(), SlaError> {
+        if self.constraints.is_empty() {
+            return Err(SlaError::NoTasks);
+        }
+        let n = self.constraints.len() as u16;
+        for (i, t) in self.constraints.iter().enumerate() {
+            if t.vcpus_millicores == 0 && t.memory_mb == 0 {
+                return Err(SlaError::ZeroResources(i));
+            }
+            if t.virtualization_mask().is_none() {
+                return Err(SlaError::UnknownVirtualization(i));
+            }
+            for s in &t.s2s {
+                if s.target_task >= n {
+                    return Err(SlaError::BadS2sTarget {
+                        task: i,
+                        target: s.target_task,
+                    });
+                }
+                if s.target_task as usize == i {
+                    return Err(SlaError::SelfS2sTarget(i));
+                }
+                if s.geo_threshold_km <= 0.0 || s.latency_threshold_ms <= 0.0 {
+                    return Err(SlaError::BadThreshold(i));
+                }
+            }
+            for u in &t.s2u {
+                if u.geo_threshold_km <= 0.0 || u.latency_threshold_ms <= 0.0 {
+                    return Err(SlaError::BadThreshold(i));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Task ids this SLA will create under a given service id.
+    pub fn task_ids(&self, service: crate::util::ServiceId) -> Vec<TaskId> {
+        (0..self.constraints.len() as u16)
+            .map(|index| TaskId { service, index })
+            .collect()
+    }
+}
+
+/// Convenience builder for the common "1 CPU, 100 MB" style test SLAs
+/// used throughout the paper's evaluation (§7.3).
+pub fn simple_sla(name: &str, cpu_millicores: u32, mem_mb: u32) -> ServiceSla {
+    ServiceSla {
+        name: name.to_string(),
+        constraints: vec![TaskSla {
+            memory_mb: mem_mb,
+            vcpus_millicores: cpu_millicores,
+            virtualization: "container".into(),
+            rigidness: 0.5,
+            convergence_time_ms: 5_000,
+            ..TaskSla::default()
+        }],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::ServiceId;
+
+    #[test]
+    fn parse_schema1_style_json() {
+        let json = r#"{
+            "name": "video-analytics",
+            "constraints": [
+                {
+                    "memory_mb": 100, "vcpus_millicores": 1000,
+                    "vgpus": 0, "vtpus": 0, "disk_mb": 50,
+                    "bandwidth_in_mbps": 10, "bandwidth_out_mbps": 5,
+                    "area": "munich", "location": null,
+                    "rigidness": 0.5, "convergence_time_ms": 5000,
+                    "virtualization": "container",
+                    "s2s": [{"target_task": 1, "geo_threshold_km": 120.0,
+                             "latency_threshold_ms": 20.0}],
+                    "s2u": []
+                },
+                {
+                    "memory_mb": 200, "vcpus_millicores": 500,
+                    "vgpus": 0, "vtpus": 0, "disk_mb": 0,
+                    "bandwidth_in_mbps": 0, "bandwidth_out_mbps": 0,
+                    "area": null, "location": null,
+                    "rigidness": 0.1, "convergence_time_ms": 5000,
+                    "virtualization": "container,wasm",
+                    "s2s": [], "s2u": []
+                }
+            ]
+        }"#;
+        let sla = ServiceSla::parse_json(json).unwrap();
+        assert_eq!(sla.constraints.len(), 2);
+        sla.validate().unwrap();
+        assert_eq!(sla.constraints[0].request().cpu_millicores, 1000);
+        assert_eq!(
+            sla.constraints[1].virtualization_mask().unwrap(),
+            Virtualization::CONTAINER.union(Virtualization::WASM)
+        );
+    }
+
+    #[test]
+    fn validation_catches_structural_errors() {
+        let mut sla = simple_sla("x", 1000, 100);
+        sla.constraints[0].s2s.push(S2sConstraint {
+            target_task: 5,
+            geo_threshold_km: 10.0,
+            latency_threshold_ms: 10.0,
+        });
+        assert_eq!(
+            sla.validate(),
+            Err(SlaError::BadS2sTarget { task: 0, target: 5 })
+        );
+
+        let mut sla = simple_sla("x", 1000, 100);
+        sla.constraints[0].s2s.push(S2sConstraint {
+            target_task: 0,
+            geo_threshold_km: 10.0,
+            latency_threshold_ms: 10.0,
+        });
+        assert_eq!(sla.validate(), Err(SlaError::SelfS2sTarget(0)));
+
+        let empty = ServiceSla {
+            name: "e".into(),
+            constraints: vec![],
+        };
+        assert_eq!(empty.validate(), Err(SlaError::NoTasks));
+
+        let mut sla = simple_sla("x", 0, 0);
+        sla.constraints[0].memory_mb = 0;
+        assert_eq!(sla.validate(), Err(SlaError::ZeroResources(0)));
+
+        let mut sla = simple_sla("x", 1000, 100);
+        sla.constraints[0].virtualization = "quantum".into();
+        assert_eq!(sla.validate(), Err(SlaError::UnknownVirtualization(0)));
+    }
+
+    #[test]
+    fn task_ids_are_sequential() {
+        let mut sla = simple_sla("x", 1000, 100);
+        sla.constraints.push(sla.constraints[0].clone());
+        let ids = sla.task_ids(ServiceId(7));
+        assert_eq!(ids.len(), 2);
+        assert_eq!(ids[0].index, 0);
+        assert_eq!(ids[1].index, 1);
+        assert!(ids.iter().all(|t| t.service == ServiceId(7)));
+    }
+}

@@ -1,0 +1,187 @@
+//! Push-based resource telemetry (paper §4.1): each worker pushes its
+//! utilization `U_n` to the cluster orchestrator at frequency `λ(R_n)`,
+//! which may differ per resource and adapt dynamically — the paper
+//! sketches Δ-threshold suppression and age-of-information adaptation;
+//! both are implemented here (and ablated in `benches/ablations.rs`).
+
+use crate::model::Capacity;
+use crate::util::SimTime;
+
+/// Update-rate policy for one worker's telemetry stream.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum UpdatePolicy {
+    /// Fixed period λ.
+    Periodic { interval: SimTime },
+    /// Publish only when utilization moved more than `threshold` (fraction
+    /// of total capacity) since the last published value, with a hard
+    /// max-age bound so the orchestrator never sees stale-forever state.
+    DeltaThreshold {
+        interval: SimTime,
+        threshold: f64,
+        max_age: SimTime,
+    },
+    /// Age-of-information adaptation: busy workers (high churn) publish at
+    /// `min_interval`; quiet ones back off exponentially to `max_interval`.
+    AgeAdaptive {
+        min_interval: SimTime,
+        max_interval: SimTime,
+    },
+}
+
+/// Per-worker telemetry governor: decides at each tick whether to publish.
+#[derive(Clone, Debug)]
+pub struct TelemetryGovernor {
+    pub policy: UpdatePolicy,
+    last_published: Option<(SimTime, Capacity)>,
+    /// Current backoff (AgeAdaptive only).
+    current_interval: SimTime,
+    /// Published / suppressed counters (ablation metrics).
+    pub published: u64,
+    pub suppressed: u64,
+}
+
+impl TelemetryGovernor {
+    pub fn new(policy: UpdatePolicy) -> Self {
+        let current_interval = match policy {
+            UpdatePolicy::Periodic { interval } => interval,
+            UpdatePolicy::DeltaThreshold { interval, .. } => interval,
+            UpdatePolicy::AgeAdaptive { min_interval, .. } => min_interval,
+        };
+        TelemetryGovernor {
+            policy,
+            last_published: None,
+            current_interval,
+            published: 0,
+            suppressed: 0,
+        }
+    }
+
+    /// The tick period the worker should schedule next.
+    pub fn tick_interval(&self) -> SimTime {
+        self.current_interval
+    }
+
+    /// Decide whether `used` (capacity in use, against `total`) should be
+    /// published at `now`. Updates internal state accordingly.
+    pub fn should_publish(&mut self, now: SimTime, used: Capacity, total: Capacity) -> bool {
+        let decision = match self.policy {
+            UpdatePolicy::Periodic { .. } => true,
+            UpdatePolicy::DeltaThreshold {
+                threshold, max_age, ..
+            } => match self.last_published {
+                None => true,
+                Some((at, last)) => {
+                    let age = now.saturating_sub(at);
+                    let d_cpu = (used.cpu_millicores as f64
+                        - last.cpu_millicores as f64)
+                        .abs()
+                        / total.cpu_millicores.max(1) as f64;
+                    let d_mem = (used.mem_mb as f64 - last.mem_mb as f64).abs()
+                        / total.mem_mb.max(1) as f64;
+                    age >= max_age || d_cpu > threshold || d_mem > threshold
+                }
+            },
+            UpdatePolicy::AgeAdaptive {
+                min_interval,
+                max_interval,
+            } => {
+                // Publish every tick, but stretch the tick when nothing
+                // changes (snap back to fast cadence on movement).
+                let changed = match self.last_published {
+                    None => true,
+                    Some((_, last)) => last != used,
+                };
+                self.current_interval = if changed {
+                    min_interval
+                } else {
+                    SimTime::from_micros(
+                        (self.current_interval.as_micros() * 2)
+                            .min(max_interval.as_micros()),
+                    )
+                };
+                true
+            }
+        };
+        if decision {
+            self.published += 1;
+            self.last_published = Some((now, used));
+        } else {
+            self.suppressed += 1;
+        }
+        decision
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cap(cpu: u32) -> Capacity {
+        Capacity::new(cpu, 1024, 0)
+    }
+
+    const TOTAL: Capacity = Capacity {
+        cpu_millicores: 1000,
+        mem_mb: 1024,
+        disk_mb: 0,
+        gpus: 0,
+        tpus: 0,
+    };
+
+    #[test]
+    fn periodic_always_publishes() {
+        let mut g = TelemetryGovernor::new(UpdatePolicy::Periodic {
+            interval: SimTime::from_secs(1.0),
+        });
+        for i in 0..5 {
+            assert!(g.should_publish(SimTime::from_secs(i as f64), cap(100), TOTAL));
+        }
+        assert_eq!(g.published, 5);
+        assert_eq!(g.suppressed, 0);
+    }
+
+    #[test]
+    fn delta_threshold_suppresses_small_changes() {
+        let mut g = TelemetryGovernor::new(UpdatePolicy::DeltaThreshold {
+            interval: SimTime::from_secs(1.0),
+            threshold: 0.10,
+            max_age: SimTime::from_secs(30.0),
+        });
+        assert!(g.should_publish(SimTime::from_secs(0.0), cap(100), TOTAL)); // first
+        assert!(!g.should_publish(SimTime::from_secs(1.0), cap(150), TOTAL)); // 5% move
+        assert!(g.should_publish(SimTime::from_secs(2.0), cap(260), TOTAL)); // 16% move
+        assert_eq!(g.published, 2);
+        assert_eq!(g.suppressed, 1);
+    }
+
+    #[test]
+    fn delta_threshold_max_age_forces_publish() {
+        let mut g = TelemetryGovernor::new(UpdatePolicy::DeltaThreshold {
+            interval: SimTime::from_secs(1.0),
+            threshold: 0.5,
+            max_age: SimTime::from_secs(10.0),
+        });
+        assert!(g.should_publish(SimTime::from_secs(0.0), cap(100), TOTAL));
+        assert!(!g.should_publish(SimTime::from_secs(5.0), cap(100), TOTAL));
+        assert!(g.should_publish(SimTime::from_secs(11.0), cap(100), TOTAL));
+    }
+
+    #[test]
+    fn age_adaptive_backs_off_when_quiet() {
+        let mut g = TelemetryGovernor::new(UpdatePolicy::AgeAdaptive {
+            min_interval: SimTime::from_secs(1.0),
+            max_interval: SimTime::from_secs(8.0),
+        });
+        g.should_publish(SimTime::from_secs(0.0), cap(100), TOTAL);
+        g.should_publish(SimTime::from_secs(1.0), cap(100), TOTAL);
+        assert_eq!(g.tick_interval(), SimTime::from_secs(2.0));
+        g.should_publish(SimTime::from_secs(3.0), cap(100), TOTAL);
+        assert_eq!(g.tick_interval(), SimTime::from_secs(4.0));
+        g.should_publish(SimTime::from_secs(7.0), cap(100), TOTAL);
+        g.should_publish(SimTime::from_secs(15.0), cap(100), TOTAL);
+        assert_eq!(g.tick_interval(), SimTime::from_secs(8.0)); // capped
+        // Movement snaps back to fast cadence.
+        g.should_publish(SimTime::from_secs(23.0), cap(500), TOTAL);
+        assert_eq!(g.tick_interval(), SimTime::from_secs(1.0));
+    }
+}

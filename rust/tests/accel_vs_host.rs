@@ -1,0 +1,185 @@
+//! Cross-layer equivalence: the PJRT-accelerated LDP batch scorer (L1/L2
+//! artifacts) must agree with the host Rust implementation of the same
+//! math — the two sides of the paper's Alg. 2 in this repo. Skipped
+//! gracefully when artifacts are not built (`make artifacts`).
+
+use oakestra::geo::{GeoPoint, EARTH_RADIUS_KM};
+use oakestra::propcheck::check;
+use oakestra::prop_assert;
+use oakestra::runtime::{Artifacts, LdpAccel, LdpConstraintRow, LdpWorkerRow};
+use oakestra::util::Rng;
+
+fn artifacts_available() -> bool {
+    Artifacts::discover().is_ok()
+}
+
+fn random_workers(rng: &mut Rng, n: usize) -> Vec<LdpWorkerRow> {
+    (0..n)
+        .map(|_| LdpWorkerRow {
+            cpu: rng.range(0.0, 8.0) as f32,
+            mem: rng.range(0.0, 8.0) as f32,
+            disk: rng.range(0.0, 64.0) as f32,
+            virt_bits: rng.below(16) as i32,
+            lat_rad: rng.range(-1.2, 1.2) as f32,
+            lon_rad: rng.range(-3.0, 3.0) as f32,
+            viv: [
+                rng.range(-60.0, 60.0) as f32,
+                rng.range(-60.0, 60.0) as f32,
+                rng.range(-60.0, 60.0) as f32,
+                rng.range(-60.0, 60.0) as f32,
+            ],
+        })
+        .collect()
+}
+
+/// Host-side reimplementation of exactly what the kernel computes.
+fn host_score(
+    w: &LdpWorkerRow,
+    req: [f32; 3],
+    req_virt: i32,
+    cons: &[LdpConstraintRow],
+) -> (f64, bool) {
+    let mut feasible = w.cpu >= req[0] && w.mem >= req[1] && w.disk >= req[2];
+    feasible &= (w.virt_bits & req_virt) == req_virt;
+    for c in cons.iter().filter(|c| c.active) {
+        let a = GeoPoint {
+            lat: w.lat_rad as f64,
+            lon: w.lon_rad as f64,
+        };
+        let b = GeoPoint {
+            lat: c.geo_lat_rad as f64,
+            lon: c.geo_lon_rad as f64,
+        };
+        let gc = a.distance_km(&b);
+        let dv = w
+            .viv
+            .iter()
+            .zip(c.viv.iter())
+            .map(|(x, y)| (*x as f64 - *y as f64).powi(2))
+            .sum::<f64>()
+            .sqrt();
+        feasible &= gc <= c.geo_thr_km as f64 && dv <= c.viv_thr_ms as f64;
+    }
+    let score = (w.cpu - req[0]) as f64 + (w.mem - req[1]) as f64;
+    (score, feasible)
+}
+
+#[test]
+fn accel_matches_host_on_random_inputs() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let mut accel = LdpAccel::discover().unwrap();
+    check("accel≡host", 15, |rng| {
+        let n = 1 + rng.below(500);
+        let workers = random_workers(rng, n);
+        let req = [
+            rng.range(0.0, 4.0) as f32,
+            rng.range(0.0, 4.0) as f32,
+            rng.range(0.0, 32.0) as f32,
+        ];
+        let req_virt = rng.below(8) as i32;
+        let k = rng.below(4);
+        let cons: Vec<LdpConstraintRow> = (0..k)
+            .map(|_| LdpConstraintRow {
+                geo_lat_rad: rng.range(-1.2, 1.2) as f32,
+                geo_lon_rad: rng.range(-3.0, 3.0) as f32,
+                viv: [
+                    rng.range(-60.0, 60.0) as f32,
+                    rng.range(-60.0, 60.0) as f32,
+                    0.0,
+                    0.0,
+                ],
+                geo_thr_km: rng.range(10.0, EARTH_RADIUS_KM) as f32,
+                viv_thr_ms: rng.range(5.0, 150.0) as f32,
+                active: rng.chance(0.7),
+            })
+            .collect();
+
+        let (scores, mask) = accel
+            .score(&workers, req, req_virt, &cons)
+            .map_err(|e| e.to_string())?;
+        prop_assert!(scores.len() == n, "len");
+        for (i, w) in workers.iter().enumerate() {
+            let (hs, hf) = host_score(w, req, req_virt, &cons);
+            // Borderline geo/viv comparisons can flip between f32 (kernel)
+            // and f64 (host); tolerate only near-threshold disagreements.
+            if mask[i] != hf {
+                let near_threshold = cons.iter().filter(|c| c.active).any(|c| {
+                    let a = GeoPoint {
+                        lat: w.lat_rad as f64,
+                        lon: w.lon_rad as f64,
+                    };
+                    let b = GeoPoint {
+                        lat: c.geo_lat_rad as f64,
+                        lon: c.geo_lon_rad as f64,
+                    };
+                    let gc = a.distance_km(&b);
+                    let dv = w
+                        .viv
+                        .iter()
+                        .zip(c.viv.iter())
+                        .map(|(x, y)| (*x as f64 - *y as f64).powi(2))
+                        .sum::<f64>()
+                        .sqrt();
+                    (gc - c.geo_thr_km as f64).abs() < 1.0
+                        || (dv - c.viv_thr_ms as f64).abs() < 0.05
+                }) || (w.cpu - req[0]).abs() < 1e-5
+                    || (w.mem - req[1]).abs() < 1e-5
+                    || (w.disk - req[2]).abs() < 1e-4;
+                prop_assert!(
+                    near_threshold,
+                    "worker {i}: accel mask {} vs host {hf} (not borderline)",
+                    mask[i]
+                );
+                continue;
+            }
+            if mask[i] {
+                prop_assert!(
+                    (scores[i] as f64 - hs).abs() < 1e-3,
+                    "worker {i}: score {} vs host {hs}",
+                    scores[i]
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn accel_best_matches_host_argmax() {
+    if !artifacts_available() {
+        return;
+    }
+    let mut accel = LdpAccel::discover().unwrap();
+    check("accel argmax", 10, |rng| {
+        let n = 2 + rng.below(300);
+        let workers = random_workers(rng, n);
+        let req = [1.0f32, 1.0, 0.0];
+        let best = accel
+            .best(&workers, req, 0, &[])
+            .map_err(|e| e.to_string())?;
+        // Host argmax over the same semantics.
+        let host_best = workers
+            .iter()
+            .enumerate()
+            .filter(|(_, w)| w.cpu >= req[0] && w.mem >= req[1])
+            .max_by(|a, b| {
+                let sa = (a.1.cpu - req[0]) + (a.1.mem - req[1]);
+                let sb = (b.1.cpu - req[0]) + (b.1.mem - req[1]);
+                sa.partial_cmp(&sb).unwrap()
+            })
+            .map(|(i, _)| i);
+        match (best, host_best) {
+            (Some(a), Some(h)) => {
+                let sa = (workers[a].cpu - req[0]) + (workers[a].mem - req[1]);
+                let sh = (workers[h].cpu - req[0]) + (workers[h].mem - req[1]);
+                prop_assert!((sa - sh).abs() < 1e-4, "score {sa} vs {sh}");
+            }
+            (None, None) => {}
+            (a, h) => prop_assert!(false, "best mismatch: {a:?} vs {h:?}"),
+        }
+        Ok(())
+    });
+}

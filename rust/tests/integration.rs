@@ -1,0 +1,352 @@
+//! End-to-end integration tests over the full simulated control plane:
+//! registration → scheduling → deployment → failure recovery → overlay
+//! resolution, across multiple clusters.
+
+use oakestra::bench_harness::{build_oakestra, OakTestbedConfig};
+use oakestra::coordinator::{ClusterOrchestrator, RootOrchestrator, SchedulerKind, WorkerEngine};
+use oakestra::model::ServiceState;
+use oakestra::netmanager::ServiceIp;
+use oakestra::sim::{DataMsg, SimMsg, TimerKind};
+use oakestra::sla::{simple_sla, S2sConstraint};
+use oakestra::util::{ServiceId, SimTime, TaskId};
+use oakestra::workload::HttpClient;
+
+#[test]
+fn multi_service_deployment_reaches_running() {
+    let mut tb = build_oakestra(OakTestbedConfig {
+        clusters: 2,
+        workers_per_cluster: 4,
+        ..OakTestbedConfig::default()
+    });
+    tb.warm_up();
+    for i in 0..6 {
+        tb.submit(
+            simple_sla(&format!("svc-{i}"), 150, 64),
+            SimTime::from_secs(13.0 + i as f64),
+        );
+    }
+    tb.sim.run_until(SimTime::from_secs(60.0));
+    assert_eq!(tb.deploy_times_ms().len(), 6);
+
+    let root = tb.sim.actor_as::<RootOrchestrator>(tb.root).unwrap();
+    assert_eq!(root.db.len(), 6);
+    for rec in root.db.services() {
+        assert!(rec.fully_running(), "{} not running", rec.spec.name);
+    }
+}
+
+#[test]
+fn worker_failure_triggers_recovery_within_cluster() {
+    let mut tb = build_oakestra(OakTestbedConfig {
+        clusters: 1,
+        workers_per_cluster: 4,
+        ..OakTestbedConfig::default()
+    });
+    tb.warm_up();
+    tb.submit(simple_sla("victim", 150, 64), SimTime::from_secs(13.0));
+    tb.sim.run_until(SimTime::from_secs(30.0));
+
+    // Find the hosting worker and kill its node.
+    let hosting = {
+        let root = tb.sim.actor_as::<RootOrchestrator>(tb.root).unwrap();
+        root.db
+            .services()
+            .next()
+            .unwrap()
+            .instances
+            .iter()
+            .find(|i| i.state == ServiceState::Running)
+            .and_then(|i| i.worker)
+            .expect("instance must have a worker")
+    };
+    tb.sim.set_node_failed(hosting, true);
+    tb.sim.run_until(SimTime::from_secs(90.0));
+
+    let m = &tb.sim.core.metrics;
+    assert!(
+        m.counter("cluster.worker_dead") >= 1,
+        "health sweep must detect the dead worker"
+    );
+    assert!(
+        m.counter("cluster.local_recovery") >= 1,
+        "the cluster must re-place the lost instance locally"
+    );
+    // The replacement landed on a different, live worker.
+    let orch = tb
+        .sim
+        .actor_as::<ClusterOrchestrator>(tb.clusters[0].1)
+        .unwrap();
+    assert!(orch.workers.iter().all(|w| w.spec.node != hosting));
+}
+
+#[test]
+fn infeasible_everywhere_escalates_and_fails() {
+    let mut tb = build_oakestra(OakTestbedConfig::default());
+    tb.warm_up();
+    // Request far beyond any S VM.
+    tb.submit(simple_sla("huge", 64_000, 64_000), SimTime::from_secs(13.0));
+    tb.sim.run_until(SimTime::from_secs(40.0));
+    assert!(tb.deploy_times_ms().is_empty());
+    let root = tb.sim.actor_as::<RootOrchestrator>(tb.root).unwrap();
+    let rec = root.db.services().next().unwrap();
+    assert!(rec
+        .instances
+        .iter()
+        .all(|i| i.state == ServiceState::Failed));
+}
+
+#[test]
+fn delegation_spills_to_second_cluster_when_first_fills() {
+    // Cluster 1 has tiny workers; cluster 2 has L workers. A large request
+    // must land in cluster 2 even if cluster 1 ranks first by count.
+    let mut tb = build_oakestra(OakTestbedConfig {
+        clusters: 2,
+        workers_per_cluster: 3,
+        worker_class: oakestra::model::NodeClass::L,
+        ..OakTestbedConfig::default()
+    });
+    tb.warm_up();
+    // Saturate every worker of cluster 1 via direct deploys of big pods.
+    for i in 0..3 {
+        tb.submit(
+            simple_sla(&format!("filler-{i}"), 3_500, 3_500),
+            SimTime::from_secs(13.0 + 0.5 * i as f64),
+        );
+    }
+    tb.sim.run_until(SimTime::from_secs(40.0));
+    tb.submit(simple_sla("spill", 3_500, 3_500), SimTime::from_secs(41.0));
+    tb.sim.run_until(SimTime::from_secs(80.0));
+    // All four services including the spill one must run somewhere.
+    assert_eq!(tb.deploy_times_ms().len(), 4);
+}
+
+#[test]
+fn data_plane_resolves_closest_and_serves() {
+    let mut tb = build_oakestra(OakTestbedConfig {
+        clusters: 1,
+        workers_per_cluster: 4,
+        ..OakTestbedConfig::default()
+    });
+    tb.warm_up();
+    tb.submit(simple_sla("web", 100, 32), SimTime::from_secs(13.0));
+    tb.sim.run_until(SimTime::from_secs(30.0));
+
+    // Attach an HTTP client on the root node using worker 0 as gateway.
+    let gateway = tb.workers[0].1;
+    let task = TaskId {
+        service: ServiceId(0),
+        index: 0,
+    };
+    let client = tb.sim.add_actor(
+        tb.root_node,
+        Box::new(HttpClient::new(gateway, ServiceIp::Closest(task), 50)),
+    );
+    tb.sim
+        .inject(SimTime::from_secs(31.0), client, SimMsg::Timer(TimerKind::Workload));
+    tb.sim.run_until(SimTime::from_secs(60.0));
+
+    let c = tb.sim.actor_as::<HttpClient>(client).unwrap();
+    assert!(
+        c.rtts_ms.len() >= 45,
+        "most requests should complete, got {}",
+        c.rtts_ms.len()
+    );
+    assert!(oakestra::util::mean(&c.rtts_ms) < 50.0);
+    // The gateway either served locally or resolved + tunneled.
+    let gw = tb.sim.actor_as::<WorkerEngine>(gateway).unwrap();
+    assert!(gw.table.known_tasks() >= 1);
+}
+
+#[test]
+fn s2s_chain_places_dependents_near_targets() {
+    let mut tb = build_oakestra(OakTestbedConfig {
+        clusters: 1,
+        workers_per_cluster: 8,
+        scheduler: SchedulerKind::Ldp,
+        ..OakTestbedConfig::default()
+    });
+    tb.warm_up();
+
+    let mut sla = simple_sla("chain", 150, 64);
+    sla.constraints.push(sla.constraints[0].clone());
+    sla.constraints[1].s2s.push(S2sConstraint {
+        target_task: 0,
+        geo_threshold_km: 400.0,
+        latency_threshold_ms: 60.0,
+    });
+    tb.submit(sla, SimTime::from_secs(13.0));
+    tb.sim.run_until(SimTime::from_secs(50.0));
+    assert_eq!(tb.deploy_times_ms().len(), 1, "chained service must deploy");
+
+    let root = tb.sim.actor_as::<RootOrchestrator>(tb.root).unwrap();
+    let rec = root.db.services().next().unwrap();
+    assert!(rec.fully_running());
+    assert_eq!(rec.instances.len(), 2);
+}
+
+#[test]
+fn undeploy_terminates_and_frees_capacity() {
+    let mut tb = build_oakestra(OakTestbedConfig::default());
+    tb.warm_up();
+    tb.submit(simple_sla("temp", 800, 512), SimTime::from_secs(13.0));
+    tb.sim.run_until(SimTime::from_secs(30.0));
+
+    let (instance, orch_actor) = {
+        let root = tb.sim.actor_as::<RootOrchestrator>(tb.root).unwrap();
+        let rec = root.db.services().next().unwrap();
+        (rec.instances[0].instance, tb.clusters[0].1)
+    };
+    tb.sim.inject(
+        SimTime::from_secs(31.0),
+        orch_actor,
+        SimMsg::Oak(oakestra::sim::OakMsg::UndeployInstance { instance }),
+    );
+    tb.sim.run_until(SimTime::from_secs(50.0));
+
+    let root = tb.sim.actor_as::<RootOrchestrator>(tb.root).unwrap();
+    let rec = root.db.services().next().unwrap();
+    assert_eq!(rec.instances[0].state, ServiceState::Terminated);
+    // Cluster-side worker table shows the capacity freed.
+    let orch = tb.sim.actor_as::<ClusterOrchestrator>(orch_actor).unwrap();
+    assert!(orch
+        .workers
+        .iter()
+        .all(|w| w.used.cpu_millicores == 0 || w.used.cpu_millicores < 800));
+}
+
+#[test]
+fn invalid_sla_is_rejected_at_the_root() {
+    let mut tb = build_oakestra(OakTestbedConfig::default());
+    tb.warm_up();
+    let mut sla = simple_sla("bad", 100, 32);
+    sla.constraints[0].virtualization = "quantum".into();
+    tb.submit(sla, SimTime::from_secs(13.0));
+    tb.sim.run_until(SimTime::from_secs(30.0));
+    assert!(tb.deploy_times_ms().is_empty());
+    assert_eq!(tb.sim.core.metrics.counter("root.sla_rejected"), 1);
+}
+
+#[test]
+fn deterministic_replay_same_seed_same_outcome() {
+    let run = |seed| {
+        let mut tb = build_oakestra(OakTestbedConfig {
+            seed,
+            clusters: 2,
+            workers_per_cluster: 3,
+            ..OakTestbedConfig::default()
+        });
+        tb.warm_up();
+        for i in 0..4 {
+            tb.submit(
+                simple_sla(&format!("d-{i}"), 120, 48),
+                SimTime::from_secs(13.0 + i as f64),
+            );
+        }
+        tb.sim.run_until(SimTime::from_secs(60.0));
+        let mut t = tb.deploy_times_ms();
+        t.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        (t, tb.sim.core.metrics.total_msgs())
+    };
+    let a = run(1234);
+    let b = run(1234);
+    assert_eq!(a, b, "same seed must reproduce the exact trace");
+    let c = run(99);
+    assert!(a != c, "different seeds should differ somewhere");
+}
+
+#[test]
+fn replication_adds_a_second_running_instance() {
+    let mut tb = build_oakestra(OakTestbedConfig {
+        clusters: 1,
+        workers_per_cluster: 4,
+        ..OakTestbedConfig::default()
+    });
+    tb.warm_up();
+    tb.submit(simple_sla("repl", 150, 64), SimTime::from_secs(13.0));
+    tb.sim.run_until(SimTime::from_secs(30.0));
+
+    let task = TaskId {
+        service: ServiceId(0),
+        index: 0,
+    };
+    tb.sim.inject(
+        SimTime::from_secs(31.0),
+        tb.root,
+        SimMsg::Oak(oakestra::sim::OakMsg::ReplicateTask { task }),
+    );
+    tb.sim.run_until(SimTime::from_secs(60.0));
+
+    let root = tb.sim.actor_as::<RootOrchestrator>(tb.root).unwrap();
+    let rec = root.db.services().next().unwrap();
+    let running: Vec<_> = rec
+        .instances
+        .iter()
+        .filter(|i| i.state == ServiceState::Running)
+        .collect();
+    assert_eq!(running.len(), 2, "replication must yield two live instances");
+    assert_eq!(tb.sim.core.metrics.counter("root.replications"), 1);
+    // The replica carries a bumped generation.
+    assert!(rec.instances.iter().any(|i| i.generation == 1));
+}
+
+#[test]
+fn sla_violation_triggers_migration_and_teardown() {
+    let mut tb = build_oakestra(OakTestbedConfig {
+        clusters: 1,
+        workers_per_cluster: 4,
+        ..OakTestbedConfig::default()
+    });
+    tb.warm_up();
+    // Rigid SLA with a tight S2U latency bound.
+    let mut sla = simple_sla("strict", 150, 64);
+    sla.constraints[0].rigidness = 0.9;
+    sla.constraints[0].s2u.push(oakestra::sla::S2uConstraint {
+        user_location: oakestra::geo::GeoPoint::from_degrees(48.1, 11.6),
+        geo_threshold_km: 10_000.0,
+        latency_threshold_ms: 20.0,
+        probe_count: 3,
+    });
+    tb.submit(sla, SimTime::from_secs(13.0));
+    tb.sim.run_until(SimTime::from_secs(30.0));
+
+    // Inject a violating QoS sample at the hosting worker.
+    let hosting = {
+        let root = tb.sim.actor_as::<RootOrchestrator>(tb.root).unwrap();
+        root.db
+            .services()
+            .next()
+            .unwrap()
+            .instances
+            .iter()
+            .find(|i| i.state == ServiceState::Running)
+            .and_then(|i| i.worker)
+            .unwrap()
+    };
+    let engine = tb
+        .workers
+        .iter()
+        .find(|(n, _)| *n == hosting)
+        .map(|(_, a)| *a)
+        .unwrap();
+    tb.sim
+        .actor_as_mut::<WorkerEngine>(engine)
+        .unwrap()
+        .inject_qos(500.0); // way past 20 ms × 1.5
+    tb.sim.run_until(SimTime::from_secs(90.0));
+
+    let m = &tb.sim.core.metrics;
+    assert!(m.counter("cluster.sla_violation") >= 1, "violation detected");
+    assert_eq!(m.counter("cluster.migration_started"), 1);
+    assert_eq!(m.counter("cluster.migration_completed"), 1);
+    // The original worker no longer hosts the instance.
+    let old = tb.sim.actor_as::<WorkerEngine>(engine).unwrap();
+    assert_eq!(old.hosted_count(), 0, "original instance must be undeployed");
+    // Exactly one replacement runs elsewhere.
+    let hosted_elsewhere: usize = tb
+        .workers
+        .iter()
+        .filter(|(n, _)| *n != hosting)
+        .map(|(_, a)| tb.sim.actor_as::<WorkerEngine>(*a).unwrap().hosted_count())
+        .sum();
+    assert_eq!(hosted_elsewhere, 1);
+}

@@ -1,0 +1,330 @@
+//! Property-based invariant tests (via `oakestra::propcheck`; the offline
+//! crate set has no proptest — see Cargo.toml): routing tables, tunnel
+//! caps, the hierarchy tree, state machines, schedulers and aggregation
+//! hold their invariants under randomized operation sequences.
+
+use oakestra::geo::GeoPoint;
+use oakestra::hierarchy::{AggregateStats, ClusterTree, ROOT};
+use oakestra::model::{Capacity, InstanceRecord, NodeClass, ServiceState, Virtualization};
+use oakestra::netmanager::{
+    pick_instance, ConversionTable, InstanceLocation, ProxyTun, ServiceIp,
+    SubnetAllocator, TableEntry,
+};
+use oakestra::prop_assert;
+use oakestra::propcheck::check;
+use oakestra::scheduler::{
+    Placement, PlacementInput, RomScheduler, RomStrategy, TaskScheduler,
+};
+use oakestra::util::{ClusterId, InstanceId, NodeId, ServiceId, SimTime, TaskId};
+
+fn tid(s: u32, i: u16) -> TaskId {
+    TaskId {
+        service: ServiceId(s),
+        index: i,
+    }
+}
+
+#[test]
+fn prop_tunnel_active_count_never_exceeds_cap() {
+    check("tunnel cap", 200, |rng| {
+        let cap = 1 + rng.below(16);
+        let mut tun = ProxyTun::with_cap(cap);
+        for step in 0..200 {
+            let peer = NodeId(rng.below(40) as u32);
+            let now = SimTime::from_millis(step as f64 * rng.range(1.0, 50.0));
+            match rng.below(4) {
+                0..=1 => {
+                    tun.activate(peer, now);
+                }
+                2 => tun.touch(peer, now),
+                _ => tun.gc(now),
+            }
+            prop_assert!(
+                tun.active_count() <= cap,
+                "active {} > cap {cap}",
+                tun.active_count()
+            );
+            tun.check_invariants().map_err(|e| e.to_string())?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_conversion_table_never_returns_invalidated_nodes() {
+    check("conversion table", 200, |rng| {
+        let mut table = ConversionTable::default();
+        let mut dead: Vec<NodeId> = Vec::new();
+        for _ in 0..100 {
+            match rng.below(4) {
+                0 | 1 => {
+                    // Push an authoritative row.
+                    let task = tid(rng.below(4) as u32, rng.below(3) as u16);
+                    let n = rng.below(5);
+                    let mut locations = Vec::with_capacity(n);
+                    for _ in 0..n {
+                        let mut l = InstanceLocation {
+                            instance: InstanceId(rng.next_u64() % 1000),
+                            task,
+                            node: NodeId(rng.below(20) as u32),
+                            rtt_ms: rng.range(1.0, 100.0),
+                        };
+                        // Authoritative updates never contain dead nodes.
+                        while dead.contains(&l.node) {
+                            l.node = NodeId(rng.below(20) as u32);
+                        }
+                        locations.push(l);
+                    }
+                    table.apply(TableEntry { task, locations });
+                }
+                2 => {
+                    let node = NodeId(rng.below(20) as u32);
+                    if !dead.contains(&node) {
+                        dead.push(node);
+                    }
+                    table.invalidate_node(node);
+                }
+                _ => {
+                    let task = tid(rng.below(4) as u32, rng.below(3) as u16);
+                    let ip = if rng.chance(0.5) {
+                        ServiceIp::Closest(task)
+                    } else {
+                        ServiceIp::RoundRobin(task)
+                    };
+                    if let Some(loc) = pick_instance(&mut table, &ip) {
+                        prop_assert!(
+                            !dead.contains(&loc.node),
+                            "resolved dead node {:?}",
+                            loc.node
+                        );
+                        prop_assert!(loc.task == task, "task mismatch");
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_hierarchy_tree_invariants_under_random_ops() {
+    check("cluster tree", 150, |rng| {
+        let mut tree = ClusterTree::new();
+        let mut live: Vec<ClusterId> = Vec::new();
+        for step in 0..80u32 {
+            if rng.chance(0.6) || live.is_empty() {
+                let id = ClusterId(1000 + step);
+                let parent = if live.is_empty() || rng.chance(0.4) {
+                    ROOT
+                } else {
+                    live[rng.below(live.len())]
+                };
+                if tree.attach(id, parent).is_ok() {
+                    live.push(id);
+                }
+            } else {
+                let id = live[rng.below(live.len())];
+                if tree.detach(id).is_ok() {
+                    live.retain(|c| *c != id);
+                }
+            }
+            tree.check_invariants()?;
+            // Depth is finite and positive for all live clusters.
+            for c in &live {
+                let d = tree.depth(*c);
+                prop_assert!(d >= 1 && d <= live.len() + 1, "depth {d}");
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_state_machine_never_leaves_terminal() {
+    use ServiceState::*;
+    check("lifecycle", 300, |rng| {
+        let states = [Requested, Scheduled, Running, Terminated, Failed];
+        let mut rec = InstanceRecord::new(InstanceId(1), tid(0, 0));
+        for _ in 0..30 {
+            let was_terminal = rec.state.is_terminal();
+            let to = states[rng.below(states.len())];
+            let ok = rec.transition(to).is_ok();
+            if was_terminal {
+                prop_assert!(!ok, "terminal state accepted transition to {to:?}");
+            }
+            if ok {
+                prop_assert!(
+                    !matches!(rec.state, Requested),
+                    "transition landed back in Requested"
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_rom_never_places_on_infeasible_worker() {
+    check("rom feasibility", 300, |rng| {
+        let n = 1 + rng.below(40);
+        let workers: Vec<oakestra::model::NodeProfile> = (0..n)
+            .map(|i| {
+                let spec = oakestra::model::WorkerSpec {
+                    node: NodeId(i as u32),
+                    class: [NodeClass::S, NodeClass::M, NodeClass::L][rng.below(3)],
+                    location: GeoPoint::default(),
+                };
+                let mut p = oakestra::model::NodeProfile::new(spec);
+                p.used = Capacity::new(
+                    rng.below(4001) as u32,
+                    rng.below(4097) as u32,
+                    0,
+                );
+                p
+            })
+            .collect();
+        let req_cpu = rng.below(3000) as u32;
+        let req_mem = rng.below(3000) as u32;
+        let sla = oakestra::sla::simple_sla("p", req_cpu.max(1), req_mem.max(1));
+        let input = PlacementInput {
+            sla: &sla.constraints[0],
+            workers: &workers,
+            service_hint: ServiceId(0),
+        };
+        for strategy in [RomStrategy::BestFit, RomStrategy::FirstFit] {
+            let mut s = RomScheduler { strategy };
+            match s.place(&input) {
+                Placement::Placed { worker, .. } => {
+                    let w = workers.iter().find(|w| w.spec.node == worker).unwrap();
+                    prop_assert!(
+                        w.available().fits(&sla.constraints[0].request()),
+                        "placed on infeasible worker {worker:?} ({strategy:?})"
+                    );
+                }
+                Placement::Infeasible => {
+                    // Then truly nobody fits.
+                    for w in &workers {
+                        prop_assert!(
+                            !w.available().fits(&sla.constraints[0].request()),
+                            "scheduler missed feasible worker {:?}",
+                            w.spec.node
+                        );
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_aggregate_absorb_equals_flat_aggregation() {
+    check("aggregation", 200, |rng| {
+        let n = 2 + rng.below(30);
+        let caps: Vec<Capacity> = (0..n)
+            .map(|_| {
+                Capacity::new(rng.below(8000) as u32, rng.below(8192) as u32, 0)
+            })
+            .collect();
+        let split = 1 + rng.below(n - 1);
+        let (a, b) = caps.split_at(split);
+        let mut agg_a = AggregateStats::from_workers(
+            a.iter().map(|c| (c, Virtualization::CONTAINER)),
+            None,
+        );
+        let agg_b = AggregateStats::from_workers(
+            b.iter().map(|c| (c, Virtualization::WASM)),
+            None,
+        );
+        agg_a.absorb(&agg_b);
+        let flat = AggregateStats::from_workers(
+            caps.iter().map(|c| (c, Virtualization::CONTAINER)),
+            None,
+        );
+        prop_assert!(agg_a.worker_count == flat.worker_count, "count");
+        prop_assert!(agg_a.total == flat.total, "total");
+        prop_assert!(
+            (agg_a.mean_cpu_millicores - flat.mean_cpu_millicores).abs() < 1e-6,
+            "mean cpu {} vs {}",
+            agg_a.mean_cpu_millicores,
+            flat.mean_cpu_millicores
+        );
+        prop_assert!(
+            (agg_a.std_cpu_millicores - flat.std_cpu_millicores).abs() < 1e-6,
+            "std cpu {} vs {}",
+            agg_a.std_cpu_millicores,
+            flat.std_cpu_millicores
+        );
+        prop_assert!(
+            agg_a.max_worker.cpu_millicores == flat.max_worker.cpu_millicores,
+            "max worker"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_subnets_unique_across_churn() {
+    check("subnet allocator", 200, |rng| {
+        let mut alloc = SubnetAllocator::default();
+        let mut live: Vec<(NodeId, u32)> = Vec::new();
+        for step in 0..100u32 {
+            if rng.chance(0.7) || live.is_empty() {
+                let node = NodeId(step);
+                let s = alloc.subnet_for(node);
+                prop_assert!(
+                    live.iter().all(|(_, other)| *other != s),
+                    "subnet {s} reused while still live"
+                );
+                live.push((node, s));
+            } else {
+                let i = rng.below(live.len());
+                let (node, _) = live.swap_remove(i);
+                alloc.release(node);
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_json_parser_never_panics_on_garbage() {
+    check("json fuzz", 500, |rng| {
+        let len = rng.below(200);
+        const ALPHABET: &[u8] = b" {}[]\",:0123456789truefalsnl\\e.-+eE";
+        let bytes: Vec<u8> = (0..len)
+            .map(|_| ALPHABET[rng.below(ALPHABET.len())])
+            .collect();
+        let s = String::from_utf8_lossy(&bytes).into_owned();
+        let _ = oakestra::json::parse(&s); // must return, never panic
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_balancer_closest_is_minimal() {
+    check("closest policy", 200, |rng| {
+        let task = tid(1, 0);
+        let n = 1 + rng.below(10);
+        let locations: Vec<InstanceLocation> = (0..n)
+            .map(|i| InstanceLocation {
+                instance: InstanceId(i as u64),
+                task,
+                node: NodeId(100 + i as u32),
+                rtt_ms: rng.range(1.0, 200.0),
+            })
+            .collect();
+        let best = locations
+            .iter()
+            .map(|l| l.rtt_ms)
+            .fold(f64::INFINITY, f64::min);
+        let mut table = ConversionTable::default();
+        table.apply(TableEntry {
+            task,
+            locations,
+        });
+        let got = pick_instance(&mut table, &ServiceIp::Closest(task)).unwrap();
+        prop_assert!((got.rtt_ms - best).abs() < 1e-12, "picked {} best {best}", got.rtt_ms);
+        Ok(())
+    });
+}
