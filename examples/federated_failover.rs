@@ -75,4 +75,18 @@ fn main() {
     }
     println!("\nfinal instance states: {running} running, {failed} failed records");
     println!("(failed records are the pre-failure incarnations; replacements run)");
+
+    // Confirm the same view through the northbound API.
+    let now = tb.sim.now();
+    let ls = tb.list_services(now + oakestra::util::SimTime::from_secs(1.0));
+    tb.sim.run_until(now + oakestra::util::SimTime::from_secs(2.0));
+    if let Some(oakestra::api::ApiResponse::Services(rows)) = tb.ack(ls) {
+        println!("\nAPI ListServices view:");
+        for s in rows {
+            println!(
+                "  {} '{}': {} running instance(s), fully_running={}",
+                s.service, s.name, s.running_instances, s.fully_running
+            );
+        }
+    }
 }

@@ -1,11 +1,12 @@
-//! Quickstart: spin up a two-cluster Oakestra deployment, submit a small
-//! service through the root API, and watch the delegated scheduling +
-//! lifecycle play out.
+//! Quickstart: spin up a two-cluster Oakestra deployment and drive the
+//! full service lifecycle through the typed northbound API v1 — submit,
+//! status, scale up, scale down, undeploy (paper §3.2.1, §4.2, §6).
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example quickstart
 //! ```
 
+use oakestra::api::ApiResponse;
 use oakestra::bench_harness::{build_oakestra, OakTestbedConfig};
 use oakestra::coordinator::{RootOrchestrator, SchedulerKind};
 use oakestra::sla::simple_sla;
@@ -20,7 +21,7 @@ fn main() {
         ..OakTestbedConfig::default()
     });
 
-    println!("== Oakestra quickstart ==");
+    println!("== Oakestra quickstart (northbound API v1) ==");
     println!("topology: root + 2 cluster orchestrators + 6 workers (S VMs)\n");
 
     tb.warm_up();
@@ -43,37 +44,76 @@ fn main() {
         }
     }
 
-    println!("\nsubmitting SLA: frontend (200 mc, 64 MB) + backend (400 mc, 128 MB)");
+    // ① Submit: frontend (200 mc, 64 MB) + backend (400 mc, 128 MB).
+    println!("\n① submit: frontend (200 mc, 64 MB) + backend (400 mc, 128 MB)");
     let mut sla = simple_sla("frontend", 200, 64);
-    sla.constraints.push(simple_sla("backend", 400, 128).constraints[0].clone());
-    tb.submit(sla, SimTime::from_secs(13.0));
+    sla.constraints
+        .push(simple_sla("backend", 400, 128).constraints[0].clone());
+    let submit = tb.submit(sla, SimTime::from_secs(13.0));
     tb.sim.run_until(SimTime::from_secs(45.0));
-
-    let root = tb.sim.actor_as::<RootOrchestrator>(tb.root).unwrap();
-    for rec in root.db.services() {
-        println!("\nservice '{}':", rec.spec.name);
-        for inst in &rec.instances {
+    let service = match tb.ack(submit) {
+        Some(ApiResponse::Submitted { service, instances }) => {
             println!(
-                "  instance {} of task {}: {:?} on {}",
-                inst.instance,
-                inst.task,
-                inst.state,
-                inst.worker
-                    .map(|w| w.to_string())
-                    .unwrap_or_else(|| "-".into())
+                "   accepted as {service}, {} instance(s) delegated",
+                instances.len()
             );
+            *service
         }
-        println!("  fully running: {}", rec.fully_running());
-    }
-
+        other => panic!("submission not accepted: {other:?}"),
+    };
     let times = tb.deploy_times_ms();
     println!(
-        "\ndeploy time: {:.0} ms (submit → all tasks Running)",
+        "   deploy time: {:.0} ms (submit → all tasks Running)",
         oakestra::util::mean(&times)
     );
+
+    // ② Status through the API.
+    let sreq = tb.query_status(service, SimTime::from_secs(46.0));
+    tb.sim.run_until(SimTime::from_secs(47.0));
+    if let Some(ApiResponse::Status(s)) = tb.ack(sreq) {
+        println!("\n② status:\n{}", oakestra::api::format_status(s));
+    }
+
+    // ③ Scale the frontend task to 3 replicas.
+    println!("③ scale: frontend task → 3 replicas");
+    let sc = tb.scale(service, Some(0), 3, SimTime::from_secs(48.0));
+    tb.sim.run_until(SimTime::from_secs(75.0));
+    if let Some(ApiResponse::ScaleStarted { added, .. }) = tb.ack(sc) {
+        println!("   {} replica(s) entered the delegation pipeline", added.len());
+    }
+    let sreq = tb.query_status(service, SimTime::from_secs(76.0));
+    tb.sim.run_until(SimTime::from_secs(77.0));
+    if let Some(ApiResponse::Status(s)) = tb.ack(sreq) {
+        println!(
+            "   now {} running instance(s) across the hierarchy",
+            s.count(oakestra::model::ServiceState::Running)
+        );
+    }
+
+    // ④ Scale back down to 1 replica, then ⑤ undeploy everything.
+    println!("④ scale: frontend task → 1 replica");
+    tb.scale(service, Some(0), 1, SimTime::from_secs(78.0));
+    tb.sim.run_until(SimTime::from_secs(95.0));
+
+    println!("⑤ undeploy: tearing the service down");
+    let ud = tb.undeploy(service, SimTime::from_secs(96.0));
+    tb.sim.run_until(SimTime::from_secs(115.0));
+    if let Some(ApiResponse::UndeployStarted { instances, .. }) = tb.ack(ud) {
+        println!("   teardown issued for {instances} live instance(s)");
+    }
+    let sreq = tb.query_status(service, SimTime::from_secs(116.0));
+    tb.sim.run_until(SimTime::from_secs(117.0));
+    if let Some(ApiResponse::Status(s)) = tb.ack(sreq) {
+        println!(
+            "   final state: {} live instance(s), fully_running={}",
+            s.live(),
+            s.fully_running
+        );
+    }
+
     let m = &tb.sim.core.metrics;
     println!(
-        "control traffic: {} msgs / {} bytes total",
+        "\ncontrol traffic: {} msgs / {} bytes total",
         m.total_msgs(),
         m.total_bytes()
     );

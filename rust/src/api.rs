@@ -1,0 +1,478 @@
+//! Northbound service lifecycle API **v1** (paper §3.2.1 System/Service
+//! Manager, §4.2): the single typed front door through which developers —
+//! the CLI, the testbed, the examples and the integration tests — drive
+//! the hierarchy. Every lifecycle operation of the paper's service
+//! manager is covered: intake ([`ApiRequest::SubmitService`], full
+//! Schema 1 JSON via [`crate::sla::ServiceSla::parse_json`]), horizontal
+//! scaling ([`ApiRequest::ScaleService`]), explicit migration
+//! ([`ApiRequest::MigrateInstance`]), teardown
+//! ([`ApiRequest::UndeployService`]) and observation
+//! ([`ApiRequest::ServiceStatus`], [`ApiRequest::ListServices`]).
+//!
+//! ## Protocol
+//!
+//! Requests travel to the root orchestrator as
+//! [`crate::sim::OakMsg::ApiCall`] carrying an [`ApiEnvelope`]; every
+//! call is answered with at least one
+//! [`crate::sim::OakMsg::ApiReturn`] tagged with the envelope's
+//! `request_id`. The first return is synchronous from the root handler
+//! (acknowledgement or a structured [`ApiError`]); operations with
+//! asynchronous outcomes additionally emit **events** under the same
+//! `request_id` — today a placement failure anywhere down the delegation
+//! chain surfaces as [`ApiError::NoFeasiblePlacement`]. Full-service
+//! deployment completion keeps its dedicated
+//! [`crate::sim::OakMsg::ServiceDeployed`] callback (the Fig. 4a timer).
+//!
+//! Versioning: envelopes carry [`API_VERSION`]; the root rejects any
+//! other version with [`ApiError::UnsupportedVersion`] so future schema
+//! revisions can coexist with v1 clients.
+
+use std::any::Any;
+use std::collections::HashMap;
+
+use crate::coordinator::{ServiceDb, ServiceRecord};
+use crate::model::ServiceState;
+use crate::sim::{Actor, ActorId, Ctx, OakMsg, SimMsg};
+use crate::sla::{ServiceSla, SlaError};
+use crate::util::{ClusterId, InstanceId, NodeId, ServiceId, SimTime, TaskId};
+
+/// Current northbound API version (carried in every [`ApiEnvelope`]).
+pub const API_VERSION: u32 = 1;
+
+/// Upper bound on per-task replicas accepted by [`ApiRequest::ScaleService`]
+/// (guards the control plane against runaway fan-out requests).
+pub const MAX_REPLICAS: usize = 64;
+
+/// One northbound call: version + correlation id + operation + reply
+/// address. Built by [`ApiClient::envelope`] or directly by drivers.
+#[derive(Clone, Debug)]
+pub struct ApiEnvelope {
+    pub version: u32,
+    /// Caller-chosen correlation id echoed on every [`ApiResponse`].
+    pub request_id: u64,
+    pub request: ApiRequest,
+    /// Where `ApiReturn`s (and the `ServiceDeployed` callback for
+    /// submissions) are delivered. `None` = fire-and-forget.
+    pub reply_to: Option<ActorId>,
+}
+
+/// The v1 operation set (paper §3.2.1: "deployment, migration, scaling
+/// and teardown of services" plus status observation).
+#[derive(Clone, Debug)]
+pub enum ApiRequest {
+    /// Submit a validated SLA (paper step ①). Use
+    /// [`ServiceSla::parse_json`] to build one from a Schema 1 document.
+    SubmitService { sla: ServiceSla },
+    /// Set the replica count of one task (or every task) of a service.
+    /// Scale-up mints fresh instances through the ROM/LDP schedulers;
+    /// scale-down tears surplus instances down via `UndeployInstance`.
+    ScaleService {
+        service: ServiceId,
+        /// `None` scales every task of the service to `replicas`.
+        task: Option<u16>,
+        replicas: usize,
+    },
+    /// Explicitly migrate one running instance away from its current
+    /// worker (paper §6: rescheduling + deferred teardown).
+    MigrateInstance {
+        service: ServiceId,
+        instance: InstanceId,
+    },
+    /// Tear down every live instance of a service.
+    UndeployService { service: ServiceId },
+    /// Read the full lifecycle state of one service.
+    ServiceStatus { service: ServiceId },
+    /// Enumerate all submitted services with summary state.
+    ListServices,
+}
+
+/// Structured failure modes of the v1 API.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ApiError {
+    /// Envelope version is not [`API_VERSION`].
+    UnsupportedVersion { requested: u32, supported: u32 },
+    /// SLA failed the root service manager's structural validation.
+    InvalidSla(SlaError),
+    UnknownService(ServiceId),
+    UnknownTask(TaskId),
+    UnknownInstance(InstanceId),
+    /// Migration requires a Running instance.
+    NotRunning(InstanceId),
+    /// Replica count out of the accepted (1..=[`MAX_REPLICAS`]) range.
+    InvalidReplicas { requested: usize, max: usize },
+    /// Asynchronous event: the delegation chain exhausted the cluster
+    /// priority list without a feasible placement (paper §4.2).
+    NoFeasiblePlacement { service: ServiceId, task: TaskId },
+}
+
+impl std::fmt::Display for ApiError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ApiError::UnsupportedVersion {
+                requested,
+                supported,
+            } => write!(f, "unsupported API version {requested} (supported: {supported})"),
+            ApiError::InvalidSla(e) => write!(f, "invalid SLA: {e}"),
+            ApiError::UnknownService(s) => write!(f, "unknown service {s}"),
+            ApiError::UnknownTask(t) => write!(f, "unknown task {t}"),
+            ApiError::UnknownInstance(i) => write!(f, "unknown instance {i}"),
+            ApiError::NotRunning(i) => write!(f, "instance {i} is not running"),
+            ApiError::InvalidReplicas { requested, max } => {
+                write!(f, "replica count {requested} outside 1..={max}")
+            }
+            ApiError::NoFeasiblePlacement { service, task } => {
+                write!(f, "no feasible placement for {service} task {task}")
+            }
+        }
+    }
+}
+impl std::error::Error for ApiError {}
+
+/// Lifecycle state of one instance as reported by [`ApiResponse::Status`].
+#[derive(Clone, Debug)]
+pub struct InstanceStatusInfo {
+    pub instance: InstanceId,
+    pub task: TaskId,
+    pub state: ServiceState,
+    pub worker: Option<NodeId>,
+    /// Cluster the instance was delegated to (None for instances the
+    /// cluster re-placed locally without root involvement).
+    pub cluster: Option<ClusterId>,
+    pub generation: u32,
+}
+
+/// Full status of one service (paper's database view, §3.2.1).
+#[derive(Clone, Debug)]
+pub struct ServiceStatusInfo {
+    pub service: ServiceId,
+    pub name: String,
+    pub submitted_at: SimTime,
+    pub fully_running: bool,
+    pub tasks: usize,
+    pub instances: Vec<InstanceStatusInfo>,
+}
+
+impl ServiceStatusInfo {
+    /// Instances currently in a given state.
+    pub fn count(&self, state: ServiceState) -> usize {
+        self.instances.iter().filter(|i| i.state == state).count()
+    }
+    /// Live (non-terminal) instances.
+    pub fn live(&self) -> usize {
+        self.instances
+            .iter()
+            .filter(|i| !i.state.is_terminal())
+            .count()
+    }
+}
+
+/// One row of [`ApiResponse::Services`].
+#[derive(Clone, Debug)]
+pub struct ServiceSummary {
+    pub service: ServiceId,
+    pub name: String,
+    pub tasks: usize,
+    pub running_instances: usize,
+    pub fully_running: bool,
+}
+
+/// Every answer the root can give; each is tagged with the originating
+/// `request_id` by [`crate::sim::OakMsg::ApiReturn`].
+#[derive(Clone, Debug)]
+pub enum ApiResponse {
+    /// Submission accepted; instances are being delegated.
+    Submitted {
+        service: ServiceId,
+        instances: Vec<InstanceId>,
+    },
+    /// Scaling accepted: `added` instances entered the delegation
+    /// pipeline, `removed` instances entered teardown.
+    ScaleStarted {
+        service: ServiceId,
+        added: Vec<InstanceId>,
+        removed: Vec<InstanceId>,
+    },
+    /// Migration accepted and forwarded to the owning cluster. The
+    /// cluster may still reject it (no alternative worker fits —
+    /// `cluster.migration_rejected` metric); observe progress via
+    /// [`ApiRequest::ServiceStatus`].
+    MigrationStarted { instance: InstanceId },
+    /// Teardown accepted for `instances` live instances.
+    UndeployStarted {
+        service: ServiceId,
+        instances: usize,
+    },
+    Status(ServiceStatusInfo),
+    Services(Vec<ServiceSummary>),
+    Error(ApiError),
+}
+
+impl ApiResponse {
+    pub fn is_error(&self) -> bool {
+        matches!(self, ApiResponse::Error(_))
+    }
+}
+
+/// Build the status view of one service record (shared by the root's
+/// `ServiceStatus` handler and by tests inspecting the DB directly).
+pub fn status_of(rec: &ServiceRecord) -> ServiceStatusInfo {
+    ServiceStatusInfo {
+        service: rec.spec.id,
+        name: rec.spec.name.clone(),
+        submitted_at: rec.submitted_at,
+        fully_running: rec.fully_running(),
+        tasks: rec.spec.tasks.len(),
+        instances: rec
+            .instances
+            .iter()
+            .map(|i| InstanceStatusInfo {
+                instance: i.instance,
+                task: i.task,
+                state: i.state,
+                worker: i.worker,
+                cluster: rec.placement.get(&i.instance).copied(),
+                generation: i.generation,
+            })
+            .collect(),
+    }
+}
+
+/// Summarize every service in the database ([`ApiRequest::ListServices`]).
+pub fn summarize(db: &ServiceDb) -> Vec<ServiceSummary> {
+    let mut rows: Vec<ServiceSummary> = db
+        .services()
+        .map(|rec| ServiceSummary {
+            service: rec.spec.id,
+            name: rec.spec.name.clone(),
+            tasks: rec.spec.tasks.len(),
+            running_instances: rec
+                .instances
+                .iter()
+                .filter(|i| i.state == ServiceState::Running)
+                .count(),
+            fully_running: rec.fully_running(),
+        })
+        .collect();
+    rows.sort_by_key(|r| r.service);
+    rows
+}
+
+/// Render a status view as a human-readable block (CLI `status` output).
+pub fn format_status(s: &ServiceStatusInfo) -> String {
+    let mut out = format!(
+        "service {} '{}': {} task(s), {} instance record(s), fully_running={}\n",
+        s.service,
+        s.name,
+        s.tasks,
+        s.instances.len(),
+        s.fully_running
+    );
+    for i in &s.instances {
+        out.push_str(&format!(
+            "  {} task {} gen {}: {:?} on {} (cluster {})\n",
+            i.instance,
+            i.task,
+            i.generation,
+            i.state,
+            i.worker.map(|w| w.to_string()).unwrap_or_else(|| "-".into()),
+            i.cluster
+                .map(|c| c.to_string())
+                .unwrap_or_else(|| "-".into()),
+        ));
+    }
+    out
+}
+
+/// Northbound client actor: mints correlation ids, keeps every response
+/// keyed by `request_id`, and mirrors `ServiceDeployed` callbacks (the
+/// deployment-time tracker role of [`crate::workload::DeployDriver`] for
+/// the API-driven path).
+#[derive(Default)]
+pub struct ApiClient {
+    next_id: u64,
+    /// Every response received, in arrival order.
+    pub responses: Vec<(u64, ApiResponse)>,
+    /// request_id → indices into `responses` (churn workloads issue
+    /// thousands of requests; lookups must not scan the full history).
+    by_request: HashMap<u64, Vec<usize>>,
+    /// submit→fully-Running latency per service (Fig. 4a metric).
+    pub deployed: HashMap<ServiceId, SimTime>,
+}
+
+impl ApiClient {
+    pub fn new() -> Self {
+        ApiClient::default()
+    }
+
+    /// Build a v1 envelope around `request`, minting a fresh
+    /// `request_id`. `reply_to` should be this client's actor id.
+    pub fn envelope(&mut self, request: ApiRequest, reply_to: ActorId) -> ApiEnvelope {
+        let request_id = self.next_id;
+        self.next_id += 1;
+        ApiEnvelope {
+            version: API_VERSION,
+            request_id,
+            request,
+            reply_to: Some(reply_to),
+        }
+    }
+
+    /// Record one response (the actor's receive path; also usable by
+    /// tests injecting responses directly).
+    pub fn record(&mut self, request_id: u64, response: ApiResponse) {
+        self.by_request
+            .entry(request_id)
+            .or_default()
+            .push(self.responses.len());
+        self.responses.push((request_id, response));
+    }
+
+    /// All responses recorded for one request id (first is the
+    /// synchronous ack; later entries are asynchronous events).
+    pub fn responses_for(&self, request_id: u64) -> Vec<&ApiResponse> {
+        self.by_request
+            .get(&request_id)
+            .map(|idxs| idxs.iter().map(|&i| &self.responses[i].1).collect())
+            .unwrap_or_default()
+    }
+
+    /// The synchronous ack for a request id, if it arrived.
+    pub fn ack(&self, request_id: u64) -> Option<&ApiResponse> {
+        self.responses_for(request_id).first().copied()
+    }
+
+    /// Errors observed across all requests (sync and async).
+    pub fn errors(&self) -> Vec<&ApiError> {
+        self.responses
+            .iter()
+            .filter_map(|(_, r)| match r {
+                ApiResponse::Error(e) => Some(e),
+                _ => None,
+            })
+            .collect()
+    }
+}
+
+impl Actor for ApiClient {
+    fn handle(&mut self, ctx: &mut Ctx<'_>, msg: SimMsg) {
+        match msg {
+            SimMsg::Oak(OakMsg::ApiReturn {
+                request_id,
+                response,
+            }) => {
+                if response.is_error() {
+                    ctx.metrics().inc("api.client_errors");
+                }
+                self.record(request_id, *response);
+            }
+            SimMsg::Oak(OakMsg::ServiceDeployed { service, elapsed }) => {
+                self.deployed.insert(service, elapsed);
+                ctx.metrics()
+                    .observe("driver.deploy_ms", elapsed.as_millis());
+            }
+            _ => {}
+        }
+    }
+    fn as_any(&self) -> &dyn Any {
+        self
+    }
+    fn as_any_mut(&mut self) -> &mut dyn Any {
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sla::simple_sla;
+
+    #[test]
+    fn status_of_reflects_record_state() {
+        let mut db = ServiceDb::default();
+        let mut sla = simple_sla("app", 1000, 100);
+        sla.constraints.push(sla.constraints[0].clone());
+        let (id, ids) = db.register(sla, SimTime::from_secs(1.0));
+        {
+            let rec = db.service_mut(id).unwrap();
+            let inst = rec.instance_mut(ids[0]).unwrap();
+            inst.transition(ServiceState::Scheduled).unwrap();
+            inst.worker = Some(NodeId(3));
+            inst.transition(ServiceState::Running).unwrap();
+            rec.placement.insert(ids[0], ClusterId(1));
+        }
+        let s = status_of(db.service(id).unwrap());
+        assert_eq!(s.tasks, 2);
+        assert_eq!(s.instances.len(), 2);
+        assert_eq!(s.count(ServiceState::Running), 1);
+        assert_eq!(s.count(ServiceState::Requested), 1);
+        assert_eq!(s.live(), 2);
+        assert!(!s.fully_running);
+        assert_eq!(s.instances[0].cluster, Some(ClusterId(1)));
+        assert_eq!(s.instances[0].worker, Some(NodeId(3)));
+        assert!(format_status(&s).contains("Running"));
+    }
+
+    #[test]
+    fn summarize_orders_by_service_id() {
+        let mut db = ServiceDb::default();
+        db.register(simple_sla("a", 100, 10), SimTime::ZERO);
+        db.register(simple_sla("b", 100, 10), SimTime::ZERO);
+        let rows = summarize(&db);
+        assert_eq!(rows.len(), 2);
+        assert!(rows[0].service < rows[1].service);
+        assert_eq!(rows[0].name, "a");
+        assert!(!rows[0].fully_running);
+    }
+
+    #[test]
+    fn client_mints_sequential_request_ids() {
+        let mut c = ApiClient::new();
+        let e0 = c.envelope(ApiRequest::ListServices, ActorId(0));
+        let e1 = c.envelope(ApiRequest::ListServices, ActorId(0));
+        assert_eq!(e0.version, API_VERSION);
+        assert_eq!(e0.request_id, 0);
+        assert_eq!(e1.request_id, 1);
+        assert_eq!(e0.reply_to, Some(ActorId(0)));
+    }
+
+    #[test]
+    fn client_groups_responses_by_request() {
+        let mut c = ApiClient::new();
+        c.record(
+            7,
+            ApiResponse::Submitted {
+                service: ServiceId(0),
+                instances: vec![InstanceId(0)],
+            },
+        );
+        c.record(
+            7,
+            ApiResponse::Error(ApiError::NoFeasiblePlacement {
+                service: ServiceId(0),
+                task: TaskId::default(),
+            }),
+        );
+        assert_eq!(c.responses_for(7).len(), 2);
+        assert!(matches!(c.ack(7), Some(ApiResponse::Submitted { .. })));
+        assert_eq!(c.errors().len(), 1);
+        assert!(c.ack(9).is_none());
+    }
+
+    #[test]
+    fn api_errors_display() {
+        let e = ApiError::UnsupportedVersion {
+            requested: 2,
+            supported: 1,
+        };
+        assert!(e.to_string().contains("version 2"));
+        assert!(ApiError::UnknownService(ServiceId(4))
+            .to_string()
+            .contains("s4"));
+        assert!(ApiError::InvalidReplicas {
+            requested: 900,
+            max: MAX_REPLICAS
+        }
+        .to_string()
+        .contains("900"));
+    }
+}

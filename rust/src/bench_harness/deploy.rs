@@ -65,6 +65,7 @@ fn flat_deploy_ms(
     for r in 0..reps {
         tb.submit_pod(
             ServiceId(1 + r as u32),
+            None,
             SimTime::from_secs(13.0 + 3.0 * r as f64),
         );
     }

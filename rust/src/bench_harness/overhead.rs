@@ -169,9 +169,9 @@ pub fn fig7a_control_messages(service_counts: &[usize]) -> Table {
             .map(|l| k3s.sim.core.metrics.msgs(l))
             .sum();
         for r in 0..s {
-            k3s.submit_pod_sized(
+            k3s.submit_pod(
                 ServiceId(1 + r as u32),
-                crate::model::Capacity::new(5, 4, 0),
+                Some(crate::model::Capacity::new(5, 4, 0)),
                 SimTime::from_secs(13.0 + 0.2 * r as f64),
             );
         }
@@ -238,9 +238,9 @@ pub fn fig7b_stress(checkpoints: &[usize]) -> Table {
         );
         k3s.warm_up();
         for r in 0..total {
-            k3s.submit_pod_sized(
+            k3s.submit_pod(
                 ServiceId(1 + r as u32),
-                crate::model::Capacity::new(5, 4, 0),
+                Some(crate::model::Capacity::new(5, 4, 0)),
                 SimTime::from_secs(13.0 + 0.1 * r as f64),
             );
         }

@@ -3,15 +3,16 @@
 //! mirroring the paper's HPC/HET experiment setups (§7.1: XL VM root,
 //! L VM cluster orchestrator / master, S VM workers).
 
+use crate::api::{ApiClient, ApiRequest, ApiResponse};
 use crate::baselines::{FlatKubelet, FlatMaster, FrameworkProfile};
 use crate::coordinator::{
     ClusterConfig, ClusterOrchestrator, RootConfig, RootOrchestrator, SchedulerKind,
     WorkerConfig, WorkerEngine,
 };
 use crate::geo::GeoPoint;
-use crate::model::{NodeClass, WorkerSpec};
-use crate::sim::{ActorId, LinkProfile, Sim, SimMsg, TimerKind};
-use crate::util::{ClusterId, NodeId, SimTime};
+use crate::model::{Capacity, NodeClass, WorkerSpec};
+use crate::sim::{ActorId, LinkProfile, OakMsg, Sim, SimMsg, TimerKind};
+use crate::util::{ClusterId, InstanceId, NodeId, ServiceId, SimTime};
 use crate::workload::DeployDriver;
 
 /// Which control plane a testbed runs.
@@ -77,7 +78,9 @@ impl Default for OakTestbedConfig {
     }
 }
 
-/// An assembled Oakestra deployment inside a simulator.
+/// An assembled Oakestra deployment inside a simulator. All lifecycle
+/// operations go through the typed northbound API ([`crate::api`]); the
+/// `client` actor records every [`ApiResponse`] and deployment callback.
 pub struct OakTestbed {
     pub sim: Sim,
     pub root: ActorId,
@@ -85,7 +88,8 @@ pub struct OakTestbed {
     pub clusters: Vec<(NodeId, ActorId)>,
     /// All worker (node, engine) pairs across clusters.
     pub workers: Vec<(NodeId, ActorId)>,
-    pub driver: ActorId,
+    /// The northbound [`ApiClient`] actor (the "developer").
+    pub client: ActorId,
     pub cfg: OakTestbedConfig,
 }
 
@@ -119,7 +123,7 @@ pub fn build_oakestra(cfg: OakTestbedConfig) -> OakTestbed {
     let root_node = NodeId(0);
     sim.add_node(root_node, NodeClass::XL);
     let root = sim.add_actor(root_node, Box::new(RootOrchestrator::new(RootConfig::default())));
-    let driver = sim.add_actor(root_node, Box::new(DeployDriver::new(0)));
+    let client = sim.add_actor(root_node, Box::new(ApiClient::new()));
 
     // Cluster orchestrators on L VMs, workers on S VMs (HPC) or HET mix.
     let mut clusters = Vec::new();
@@ -191,7 +195,7 @@ pub fn build_oakestra(cfg: OakTestbedConfig) -> OakTestbed {
         root_node,
         clusters,
         workers,
-        driver,
+        client,
         cfg,
     }
 }
@@ -202,30 +206,83 @@ impl OakTestbed {
         self.sim.run_until(SimTime::from_secs(12.0));
     }
 
-    /// Submit an SLA through the root API; returns nothing — completion
-    /// lands on the driver (`DeployDriver::completed`).
-    pub fn submit(&mut self, sla: crate::sla::ServiceSla, at: SimTime) {
-        let driver = self.driver;
-        self.sim.inject(
+    /// Issue one northbound API call at virtual time `at`; returns the
+    /// request id under which responses land on the [`ApiClient`].
+    pub fn api(&mut self, request: ApiRequest, at: SimTime) -> u64 {
+        let client = self.client;
+        let env = self
+            .sim
+            .actor_as_mut::<ApiClient>(client)
+            .expect("testbed client is an ApiClient")
+            .envelope(request, client);
+        let id = env.request_id;
+        self.sim
+            .inject(at, self.root, SimMsg::Oak(OakMsg::ApiCall(Box::new(env))));
+        id
+    }
+
+    /// Submit an SLA through the northbound API; deployment completion
+    /// lands on the client ([`ApiClient::deployed`]).
+    pub fn submit(&mut self, sla: crate::sla::ServiceSla, at: SimTime) -> u64 {
+        self.api(ApiRequest::SubmitService { sla }, at)
+    }
+
+    /// Scale one task (or all tasks) of a service to `replicas`.
+    pub fn scale(
+        &mut self,
+        service: ServiceId,
+        task: Option<u16>,
+        replicas: usize,
+        at: SimTime,
+    ) -> u64 {
+        self.api(
+            ApiRequest::ScaleService {
+                service,
+                task,
+                replicas,
+            },
             at,
-            self.root,
-            SimMsg::Oak(crate::sim::OakMsg::SubmitService {
-                sla,
-                reply_to: Some(driver),
-            }),
-        );
+        )
+    }
+
+    /// Migrate one running instance away from its current worker.
+    pub fn migrate(&mut self, service: ServiceId, instance: InstanceId, at: SimTime) -> u64 {
+        self.api(ApiRequest::MigrateInstance { service, instance }, at)
+    }
+
+    /// Tear down every live instance of a service.
+    pub fn undeploy(&mut self, service: ServiceId, at: SimTime) -> u64 {
+        self.api(ApiRequest::UndeployService { service }, at)
+    }
+
+    /// Query the full lifecycle status of a service.
+    pub fn query_status(&mut self, service: ServiceId, at: SimTime) -> u64 {
+        self.api(ApiRequest::ServiceStatus { service }, at)
+    }
+
+    /// Enumerate all services.
+    pub fn list_services(&mut self, at: SimTime) -> u64 {
+        self.api(ApiRequest::ListServices, at)
+    }
+
+    /// The client's recorded responses (inspect after `run_until`).
+    pub fn api_client(&self) -> &ApiClient {
+        self.sim
+            .actor_as::<ApiClient>(self.client)
+            .expect("testbed client is an ApiClient")
+    }
+
+    /// Synchronous ack recorded for one request id, if any.
+    pub fn ack(&self, request_id: u64) -> Option<&ApiResponse> {
+        self.api_client().ack(request_id)
     }
 
     pub fn deploy_times_ms(&self) -> Vec<f64> {
-        self.sim
-            .actor_as::<DeployDriver>(self.driver)
-            .map(|d| {
-                d.completed
-                    .values()
-                    .map(|t| t.as_millis())
-                    .collect::<Vec<f64>>()
-            })
-            .unwrap_or_default()
+        self.api_client()
+            .deployed
+            .values()
+            .map(|t| t.as_millis())
+            .collect()
     }
 }
 
@@ -300,16 +357,15 @@ impl FlatTestbed {
         self.sim.run_until(SimTime::from_secs(12.0));
     }
 
-    pub fn submit_pod(&mut self, service: crate::util::ServiceId, at: SimTime) {
-        self.submit_pod_sized(service, crate::model::Capacity::new(100, 32, 0), at);
-    }
-
-    pub fn submit_pod_sized(
+    /// The one submission helper of the baseline path. `None` requests
+    /// the default small-pod footprint (100 mc, 32 MB).
+    pub fn submit_pod(
         &mut self,
-        service: crate::util::ServiceId,
-        request: crate::model::Capacity,
+        service: ServiceId,
+        request: Option<Capacity>,
         at: SimTime,
     ) {
+        let request = request.unwrap_or(Capacity::new(100, 32, 0));
         let driver = self.driver;
         self.sim.inject(
             at,
@@ -395,7 +451,7 @@ mod tests {
             2_000.0,
         );
         tb.warm_up();
-        tb.submit_pod(crate::util::ServiceId(1), SimTime::from_secs(13.0));
+        tb.submit_pod(crate::util::ServiceId(1), None, SimTime::from_secs(13.0));
         tb.sim.run_until(SimTime::from_secs(40.0));
         assert_eq!(tb.deploy_times_ms().len(), 1);
     }

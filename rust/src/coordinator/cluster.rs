@@ -340,19 +340,29 @@ impl ClusterOrchestrator {
         }
     }
 
-    /// Begin an SLA-violation migration: find a different worker for the
-    /// instance's task, deploy a replacement there, and remember to
-    /// undeploy the original once the replacement reports Running
-    /// (paper §4.2/§6: migration = rescheduling + deferred teardown).
-    fn start_migration(&mut self, ctx: &mut Ctx<'_>, original: InstanceId) {
+    /// Begin a migration: find a different worker for the instance's
+    /// task, deploy a replacement there, and remember to undeploy the
+    /// original once the replacement reports Running (paper §4.2/§6:
+    /// migration = rescheduling + deferred teardown). Returns true when a
+    /// replacement deployment actually started. `escalate` selects the
+    /// SLA-violation behavior (infeasible local placement escalates to
+    /// the root); API-driven migrations pass false and are rejected
+    /// instead — escalation would replicate without ever tearing the
+    /// original down.
+    fn start_migration(
+        &mut self,
+        ctx: &mut Ctx<'_>,
+        original: InstanceId,
+        escalate: bool,
+    ) -> bool {
         if self.migrations.values().any(|o| *o == original) {
-            return; // already migrating
+            return false; // already migrating
         }
         let Some(li) = self.instances.get(&original) else {
-            return;
+            return false;
         };
         if li.state != ServiceState::Running {
-            return;
+            return false;
         }
         let (task, sla, current_node) = (li.task, li.sla.clone(), li.node);
         // Exclude the violating worker from candidates.
@@ -363,7 +373,7 @@ impl ClusterOrchestrator {
             .cloned()
             .collect();
         if others.is_empty() {
-            return;
+            return false;
         }
         // Run the placement over the reduced table (same plugin).
         let saved = std::mem::take(&mut self.workers);
@@ -376,16 +386,20 @@ impl ClusterOrchestrator {
                 let replacement = InstanceId(original.0 | (1 << 62));
                 self.migrations.insert(replacement, original);
                 self.deploy_to(ctx, replacement, task, sla, worker);
+                true
             }
             Placement::Infeasible => {
-                // Cannot improve locally; escalate (paper §4.2).
-                let msg = SimMsg::Oak(OakMsg::EscalateReschedule {
-                    task,
-                    instance: original,
-                    sla,
-                });
-                let bytes = msg.default_wire_bytes() + WS_FRAME_OVERHEAD;
-                ctx.send(self.root, msg, bytes, labels::CLUSTER_TO_ROOT);
+                if escalate {
+                    // Cannot improve locally; escalate (paper §4.2).
+                    let msg = SimMsg::Oak(OakMsg::EscalateReschedule {
+                        task,
+                        instance: original,
+                        sla,
+                    });
+                    let bytes = msg.default_wire_bytes() + WS_FRAME_OVERHEAD;
+                    ctx.send(self.root, msg, bytes, labels::CLUSTER_TO_ROOT);
+                }
+                false
             }
         }
     }
@@ -516,7 +530,7 @@ impl Actor for ClusterOrchestrator {
                     self.push_table_update(ctx, task);
                 }
                 for iid in violations {
-                    self.start_migration(ctx, iid);
+                    self.start_migration(ctx, iid, true);
                 }
             }
 
@@ -544,16 +558,11 @@ impl Actor for ClusterOrchestrator {
                         li.state = state;
                         task_changed = Some(li.task);
                     }
-                    if state.is_terminal() {
-                        let request = li.request;
-                        let lnode = li.node;
-                        if let Some(p) = self.profile_mut(lnode) {
-                            p.used -= request;
-                            p.instances = p.instances.saturating_sub(1);
-                        }
-                    }
                 }
                 if let Some(task) = task_changed {
+                    // Push while the record is still present so the
+                    // (former) host receives the authoritative update —
+                    // on teardown that update clears its table row.
                     self.refresh_ldp_target(task);
                     self.push_table_update(ctx, task);
                     let msg = SimMsg::Oak(OakMsg::InstanceStatus {
@@ -563,6 +572,19 @@ impl Actor for ClusterOrchestrator {
                     });
                     let bytes = msg.default_wire_bytes() + WS_FRAME_OVERHEAD;
                     ctx.send(self.root, msg, bytes, labels::CLUSTER_TO_ROOT);
+                }
+                if state.is_terminal() {
+                    // Drop the record and release the reserved capacity:
+                    // doing both on removal means a late duplicate
+                    // terminal report cannot double-free (API lifecycle:
+                    // undeploy → capacity release happens exactly once).
+                    if let Some(li) = self.instances.remove(&instance) {
+                        if let Some(p) = self.profile_mut(li.node) {
+                            p.used -= li.request;
+                            p.instances = p.instances.saturating_sub(1);
+                        }
+                        ctx.add_mem(-mem::PER_INSTANCE_MB);
+                    }
                 }
             }
 
@@ -601,10 +623,47 @@ impl Actor for ClusterOrchestrator {
             }
 
             SimMsg::Oak(OakMsg::UndeployInstance { instance }) => {
+                ctx.charge_cpu(costs::TABLE_OP_MS);
                 if let Some(li) = self.instances.get(&instance) {
                     let actor = self.worker_actors.get(&li.node).copied();
                     if let Some(a) = actor {
                         let msg = SimMsg::Oak(OakMsg::UndeployInstance { instance });
+                        let bytes = msg.default_wire_bytes() + MQTT_FRAME_OVERHEAD;
+                        ctx.send(a, msg, bytes, labels::CLUSTER_TO_WORKER);
+                    }
+                }
+            }
+
+            // API-driven migration (paper §6): reschedule the instance on
+            // a different worker; the original is torn down once the
+            // replacement reports Running. No escalation on rejection —
+            // the caller observes the (lack of) progress via status.
+            SimMsg::Oak(OakMsg::MigrateInstance { instance }) => {
+                ctx.charge_cpu(costs::SUBMIT_MS * 0.5);
+                if !self.start_migration(ctx, instance, false) {
+                    ctx.metrics().inc("cluster.migration_rejected");
+                }
+            }
+
+            // Service-wide teardown: undeploy every local instance of the
+            // service — including replacements this cluster minted itself
+            // (migration/local recovery), which the root never tracked.
+            SimMsg::Oak(OakMsg::UndeployService { service }) => {
+                ctx.charge_cpu(costs::SUBMIT_MS * 0.5);
+                let local: Vec<(InstanceId, NodeId)> = self
+                    .instances
+                    .iter()
+                    .filter(|(_, li)| li.task.service == service && !li.state.is_terminal())
+                    .map(|(iid, li)| (*iid, li.node))
+                    .collect();
+                // Abandon in-flight migrations of this service.
+                let doomed: BTreeSet<InstanceId> =
+                    local.iter().map(|(iid, _)| *iid).collect();
+                self.migrations
+                    .retain(|r, o| !(doomed.contains(r) || doomed.contains(o)));
+                for (iid, node) in local {
+                    if let Some(a) = self.worker_actors.get(&node).copied() {
+                        let msg = SimMsg::Oak(OakMsg::UndeployInstance { instance: iid });
                         let bytes = msg.default_wire_bytes() + MQTT_FRAME_OVERHEAD;
                         ctx.send(a, msg, bytes, labels::CLUSTER_TO_WORKER);
                     }

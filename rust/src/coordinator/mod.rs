@@ -5,9 +5,13 @@
 //!
 //! Responsibilities follow Fig. 1:
 //! * [`RootOrchestrator`] — system manager + service manager + database:
-//!   cluster registry, SLA intake, root-tier scheduling (priority list of
-//!   clusters), delegation, service lifecycle tracking, recursive
-//!   ServiceIP resolution, liveness of cluster links.
+//!   cluster registry, the typed northbound API (`OakMsg::ApiCall` /
+//!   `OakMsg::ApiReturn` carrying [`crate::api::ApiRequest`] /
+//!   [`crate::api::ApiResponse`]: SLA intake, scale up/down, explicit
+//!   migration, teardown, status and listing), root-tier scheduling
+//!   (priority list of clusters), delegation, service lifecycle
+//!   tracking, recursive ServiceIP resolution, liveness of cluster
+//!   links.
 //! * [`ClusterOrchestrator`] — logical twin of the root scoped to one
 //!   cluster: worker registry + telemetry ingestion, cluster-tier
 //!   scheduling (ROM/LDP plugins), deployment, health sweeps, failure

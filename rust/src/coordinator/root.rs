@@ -1,11 +1,13 @@
 //! Root orchestrator (paper §3.2.1): the centralized control plane.
 //! System manager (cluster registry, liveness), service manager (SLA
-//! intake, lifecycle, remedial actions) and root scheduler (cluster
-//! priority lists + delegation) over the [`crate::coordinator::db`].
+//! intake via the typed northbound API [`crate::api`], lifecycle,
+//! remedial actions) and root scheduler (cluster priority lists +
+//! delegation) over the [`crate::coordinator::db`].
 
 use std::any::Any;
 use std::collections::BTreeMap;
 
+use crate::api::{self, ApiEnvelope, ApiError, ApiRequest, ApiResponse, API_VERSION, MAX_REPLICAS};
 use crate::hierarchy::{ClusterTree, ROOT};
 use crate::messaging::{labels, WsLink, WS_FRAME_OVERHEAD};
 use crate::model::ServiceState;
@@ -53,6 +55,14 @@ struct DeployTracking {
     notified: bool,
 }
 
+/// An API caller waiting on the asynchronous outcome of one instance's
+/// delegation (placement failures surface as `NoFeasiblePlacement`).
+#[derive(Clone, Copy, Debug)]
+struct ApiWaiter {
+    request_id: u64,
+    reply_to: Option<ActorId>,
+}
+
 pub struct RootOrchestrator {
     pub cfg: RootConfig,
     pub tree: ClusterTree,
@@ -62,6 +72,8 @@ pub struct RootOrchestrator {
     pub db: ServiceDb,
     pending: BTreeMap<InstanceId, PendingDelegation>,
     tracking: BTreeMap<ServiceId, DeployTracking>,
+    /// Instance → API caller to notify if its placement fails.
+    placement_watch: BTreeMap<InstanceId, ApiWaiter>,
     /// Scheduling decisions taken (for Fig. 6 instrumentation).
     pub root_sched_ops: u64,
     started: bool,
@@ -77,6 +89,7 @@ impl RootOrchestrator {
             db: ServiceDb::default(),
             pending: BTreeMap::new(),
             tracking: BTreeMap::new(),
+            placement_watch: BTreeMap::new(),
             root_sched_ops: 0,
             started: false,
         }
@@ -137,14 +150,395 @@ impl RootOrchestrator {
         }
     }
 
+    /// Apply a lifecycle transition to a root DB record. Releases the
+    /// per-instance bookkeeping memory exactly once: on the first
+    /// transition into a terminal state (every live instance was charged
+    /// at registration/mint time, so this is the single release point —
+    /// scale-down, undeploy, failure and worker death all funnel here).
+    fn transition_instance(
+        &mut self,
+        ctx: &mut Ctx<'_>,
+        instance: InstanceId,
+        service: ServiceId,
+        to: ServiceState,
+    ) -> bool {
+        let Some(rec) = self.db.service_mut(service) else {
+            return false;
+        };
+        let Some(inst) = rec.instance_mut(instance) else {
+            return false;
+        };
+        if inst.state != to && inst.state.can_transition(to) {
+            let _ = inst.transition(to);
+            if to.is_terminal() {
+                ctx.add_mem(-mem::PER_INSTANCE_MB);
+            }
+            true
+        } else {
+            false
+        }
+    }
+
     fn fail_instance(&mut self, ctx: &mut Ctx<'_>, instance: InstanceId, task: TaskId) {
         ctx.metrics().inc("root.placement_failed");
-        if let Some(rec) = self.db.service_mut(task.service) {
-            if let Some(inst) = rec.instance_mut(instance) {
-                let _ = inst.transition(ServiceState::Failed);
+        self.transition_instance(ctx, instance, task.service, ServiceState::Failed);
+        self.pending.remove(&instance);
+        // Surface the exhausted priority list to the API caller (§4.2).
+        if let Some(w) = self.placement_watch.remove(&instance) {
+            self.respond(
+                ctx,
+                w.reply_to,
+                w.request_id,
+                ApiResponse::Error(ApiError::NoFeasiblePlacement {
+                    service: task.service,
+                    task,
+                }),
+            );
+        }
+    }
+
+    /// Deliver one API response/event to the caller.
+    fn respond(
+        &mut self,
+        ctx: &mut Ctx<'_>,
+        reply_to: Option<ActorId>,
+        request_id: u64,
+        response: ApiResponse,
+    ) {
+        if let Some(dst) = reply_to {
+            ctx.send_local(
+                dst,
+                SimMsg::Oak(OakMsg::ApiReturn {
+                    request_id,
+                    response: Box::new(response),
+                }),
+            );
+        }
+    }
+
+    /// Instruct the owning cluster to tear one instance down. Returns
+    /// false when the instance's cluster is unknown (e.g. an instance the
+    /// cluster re-placed locally — its teardown is cluster-internal).
+    fn send_undeploy(
+        &mut self,
+        ctx: &mut Ctx<'_>,
+        instance: InstanceId,
+        cluster: Option<ClusterId>,
+    ) -> bool {
+        let Some(actor) = cluster.and_then(|c| self.cluster_actors.get(&c).copied()) else {
+            ctx.metrics().inc("root.undeploy_unroutable");
+            return false;
+        };
+        let msg = SimMsg::Oak(OakMsg::UndeployInstance { instance });
+        let bytes = msg.default_wire_bytes() + WS_FRAME_OVERHEAD;
+        ctx.send(actor, msg, bytes, labels::ROOT_TO_CLUSTER);
+        true
+    }
+
+    /// Compute the scale plan for a service: which tasks need more
+    /// instances (with their SLAs) and which surplus instances to tear
+    /// down. Read-only so the caller can act on the plan afterwards.
+    #[allow(clippy::type_complexity)]
+    fn plan_scale(
+        &self,
+        service: ServiceId,
+        task: Option<u16>,
+        replicas: usize,
+    ) -> Result<
+        (
+            Vec<(TaskId, usize, TaskSla)>,
+            Vec<(InstanceId, Option<ClusterId>)>,
+        ),
+        ApiError,
+    > {
+        let rec = self
+            .db
+            .service(service)
+            .ok_or(ApiError::UnknownService(service))?;
+        let targets: Vec<TaskId> = match task {
+            Some(index) => {
+                let tid = TaskId { service, index };
+                if rec.spec.task(tid).is_none() {
+                    return Err(ApiError::UnknownTask(tid));
+                }
+                vec![tid]
+            }
+            None => rec.spec.tasks.iter().map(|t| t.id).collect(),
+        };
+        let mut grow = Vec::new();
+        let mut shrink = Vec::new();
+        for tid in &targets {
+            let mut live: Vec<InstanceId> = rec
+                .instances
+                .iter()
+                .filter(|i| i.task == *tid && !i.state.is_terminal())
+                .map(|i| i.instance)
+                .collect();
+            if live.len() < replicas {
+                let sla = rec.spec.task(*tid).unwrap().sla.clone();
+                grow.push((*tid, replicas - live.len(), sla));
+            } else if live.len() > replicas {
+                // Tear down the newest instances first so the
+                // longest-lived (generation-0) replicas survive.
+                live.sort();
+                for iid in live.split_off(replicas) {
+                    shrink.push((iid, rec.placement.get(&iid).copied()));
+                }
             }
         }
-        self.pending.remove(&instance);
+        Ok((grow, shrink))
+    }
+
+    /// Dispatch one northbound API envelope (paper §3.2.1: the service
+    /// manager's deployment/scaling/migration/teardown front door).
+    fn handle_api(&mut self, ctx: &mut Ctx<'_>, env: ApiEnvelope) {
+        ctx.charge_cpu(costs::SUBMIT_MS);
+        let ApiEnvelope {
+            version,
+            request_id,
+            request,
+            reply_to,
+        } = env;
+        if version != API_VERSION {
+            self.respond(
+                ctx,
+                reply_to,
+                request_id,
+                ApiResponse::Error(ApiError::UnsupportedVersion {
+                    requested: version,
+                    supported: API_VERSION,
+                }),
+            );
+            return;
+        }
+        match request {
+            ApiRequest::SubmitService { sla } => {
+                if let Err(e) = sla.validate() {
+                    ctx.metrics().inc("root.sla_rejected");
+                    self.respond(
+                        ctx,
+                        reply_to,
+                        request_id,
+                        ApiResponse::Error(ApiError::InvalidSla(e)),
+                    );
+                    return;
+                }
+                ctx.add_mem(mem::PER_INSTANCE_MB * sla.constraints.len() as f64);
+                let (service, instances) = self.db.register(sla, ctx.now);
+                self.tracking.insert(
+                    service,
+                    DeployTracking {
+                        reply_to,
+                        submitted_at: ctx.now,
+                        notified: false,
+                    },
+                );
+                self.respond(
+                    ctx,
+                    reply_to,
+                    request_id,
+                    ApiResponse::Submitted {
+                        service,
+                        instances: instances.clone(),
+                    },
+                );
+                // Delegate every task (deploy order = SLA order so that
+                // S2S chain targets usually exist by dependents' turn).
+                let rec = self.db.service(service).unwrap();
+                let work: Vec<(InstanceId, TaskId, TaskSla)> = rec
+                    .instances
+                    .iter()
+                    .zip(rec.spec.tasks.iter())
+                    .map(|(inst, t)| (inst.instance, t.id, t.sla.clone()))
+                    .collect();
+                debug_assert_eq!(work.len(), instances.len());
+                for (iid, tid, sla) in work {
+                    self.placement_watch
+                        .insert(iid, ApiWaiter { request_id, reply_to });
+                    self.delegate(ctx, iid, tid, sla);
+                }
+            }
+
+            ApiRequest::ScaleService {
+                service,
+                task,
+                replicas,
+            } => {
+                if !(1..=MAX_REPLICAS).contains(&replicas) {
+                    self.respond(
+                        ctx,
+                        reply_to,
+                        request_id,
+                        ApiResponse::Error(ApiError::InvalidReplicas {
+                            requested: replicas,
+                            max: MAX_REPLICAS,
+                        }),
+                    );
+                    return;
+                }
+                let (grow, shrink) = match self.plan_scale(service, task, replicas) {
+                    Ok(plan) => plan,
+                    Err(e) => {
+                        self.respond(ctx, reply_to, request_id, ApiResponse::Error(e));
+                        return;
+                    }
+                };
+                let mut added = Vec::new();
+                for (tid, n, sla) in grow {
+                    for _ in 0..n {
+                        if let Some(iid) = self.db.mint_replacement(tid) {
+                            ctx.metrics().inc("root.scale_up");
+                            ctx.add_mem(mem::PER_INSTANCE_MB);
+                            self.placement_watch
+                                .insert(iid, ApiWaiter { request_id, reply_to });
+                            self.delegate(ctx, iid, tid, sla.clone());
+                            added.push(iid);
+                        }
+                    }
+                }
+                let mut removed = Vec::new();
+                for (iid, cluster) in shrink {
+                    // Cancel any in-flight delegation first: otherwise the
+                    // priority-list retry (DelegationResult{None} → next
+                    // cluster) could resurrect an instance reported as
+                    // removed. The undeploy is still sent — the cluster
+                    // may have deployed it already (no-op otherwise).
+                    let was_pending = self.pending.remove(&iid).is_some();
+                    self.placement_watch.remove(&iid);
+                    if was_pending {
+                        self.transition_instance(ctx, iid, service, ServiceState::Failed);
+                    }
+                    if self.send_undeploy(ctx, iid, cluster) {
+                        ctx.metrics().inc("root.scale_down");
+                        removed.push(iid);
+                    }
+                }
+                self.respond(
+                    ctx,
+                    reply_to,
+                    request_id,
+                    ApiResponse::ScaleStarted {
+                        service,
+                        added,
+                        removed,
+                    },
+                );
+            }
+
+            ApiRequest::MigrateInstance { service, instance } => {
+                let Some(rec) = self.db.service(service) else {
+                    self.respond(
+                        ctx,
+                        reply_to,
+                        request_id,
+                        ApiResponse::Error(ApiError::UnknownService(service)),
+                    );
+                    return;
+                };
+                let Some(inst) = rec.instance(instance) else {
+                    self.respond(
+                        ctx,
+                        reply_to,
+                        request_id,
+                        ApiResponse::Error(ApiError::UnknownInstance(instance)),
+                    );
+                    return;
+                };
+                if inst.state != ServiceState::Running {
+                    self.respond(
+                        ctx,
+                        reply_to,
+                        request_id,
+                        ApiResponse::Error(ApiError::NotRunning(instance)),
+                    );
+                    return;
+                }
+                let cluster = rec.placement.get(&instance).copied();
+                let Some(actor) = cluster.and_then(|c| self.cluster_actors.get(&c).copied())
+                else {
+                    self.respond(
+                        ctx,
+                        reply_to,
+                        request_id,
+                        ApiResponse::Error(ApiError::UnknownInstance(instance)),
+                    );
+                    return;
+                };
+                ctx.metrics().inc("root.migrations_requested");
+                let msg = SimMsg::Oak(OakMsg::MigrateInstance { instance });
+                let bytes = msg.default_wire_bytes() + WS_FRAME_OVERHEAD;
+                ctx.send(actor, msg, bytes, labels::ROOT_TO_CLUSTER);
+                self.respond(
+                    ctx,
+                    reply_to,
+                    request_id,
+                    ApiResponse::MigrationStarted { instance },
+                );
+            }
+
+            ApiRequest::UndeployService { service } => {
+                let Some(rec) = self.db.service(service) else {
+                    self.respond(
+                        ctx,
+                        reply_to,
+                        request_id,
+                        ApiResponse::Error(ApiError::UnknownService(service)),
+                    );
+                    return;
+                };
+                let live: Vec<InstanceId> = rec
+                    .instances
+                    .iter()
+                    .filter(|i| !i.state.is_terminal())
+                    .map(|i| i.instance)
+                    .collect();
+                let count = live.len();
+                // Instances still waiting on delegation fail in place.
+                for iid in live {
+                    if self.pending.remove(&iid).is_some() {
+                        self.transition_instance(ctx, iid, service, ServiceState::Failed);
+                        self.placement_watch.remove(&iid);
+                    }
+                }
+                // Broadcast the teardown: clusters also hold replacement
+                // instances they minted during migration/local recovery,
+                // which the root database never tracked individually.
+                let actors: Vec<ActorId> = self.cluster_actors.values().copied().collect();
+                for actor in actors {
+                    let msg = SimMsg::Oak(OakMsg::UndeployService { service });
+                    let bytes = msg.default_wire_bytes() + WS_FRAME_OVERHEAD;
+                    ctx.send(actor, msg, bytes, labels::ROOT_TO_CLUSTER);
+                }
+                // Stop deploy-time tracking. Memory for the remaining
+                // live instances is released as their Terminated acks
+                // arrive (transition_instance is the single release
+                // point, so a racing scale-down cannot double-free).
+                self.tracking.remove(&service);
+                ctx.metrics().inc("root.undeploys");
+                self.respond(
+                    ctx,
+                    reply_to,
+                    request_id,
+                    ApiResponse::UndeployStarted {
+                        service,
+                        instances: count,
+                    },
+                );
+            }
+
+            ApiRequest::ServiceStatus { service } => {
+                let response = match self.db.service(service) {
+                    Some(rec) => ApiResponse::Status(api::status_of(rec)),
+                    None => ApiResponse::Error(ApiError::UnknownService(service)),
+                };
+                self.respond(ctx, reply_to, request_id, response);
+            }
+
+            ApiRequest::ListServices => {
+                let rows = api::summarize(&self.db);
+                self.respond(ctx, reply_to, request_id, ApiResponse::Services(rows));
+            }
+        }
     }
 
     fn maybe_notify_deployed(&mut self, ctx: &mut Ctx<'_>, service: ServiceId) {
@@ -206,35 +600,8 @@ impl Actor for RootOrchestrator {
                     .add("root.instances_reported", running_instances as u64);
             }
 
-            SimMsg::Oak(OakMsg::SubmitService { sla, reply_to }) => {
-                ctx.charge_cpu(costs::SUBMIT_MS);
-                if sla.validate().is_err() {
-                    ctx.metrics().inc("root.sla_rejected");
-                    return;
-                }
-                ctx.add_mem(mem::PER_INSTANCE_MB * sla.constraints.len() as f64);
-                let (service, instances) = self.db.register(sla, ctx.now);
-                self.tracking.insert(
-                    service,
-                    DeployTracking {
-                        reply_to,
-                        submitted_at: ctx.now,
-                        notified: false,
-                    },
-                );
-                // Delegate every task (deploy order = SLA order so that
-                // S2S chain targets usually exist by dependents' turn).
-                let rec = self.db.service(service).unwrap();
-                let work: Vec<(InstanceId, TaskId, TaskSla)> = rec
-                    .instances
-                    .iter()
-                    .zip(rec.spec.tasks.iter())
-                    .map(|(inst, t)| (inst.instance, t.id, t.sla.clone()))
-                    .collect();
-                debug_assert_eq!(work.len(), instances.len());
-                for (iid, tid, sla) in work {
-                    self.delegate(ctx, iid, tid, sla);
-                }
+            SimMsg::Oak(OakMsg::ApiCall(env)) => {
+                self.handle_api(ctx, *env);
             }
 
             SimMsg::Oak(OakMsg::DelegationResult {
@@ -249,6 +616,9 @@ impl Actor for RootOrchestrator {
                 match worker {
                     Some(node) => {
                         self.pending.remove(&instance);
+                        // Placement succeeded: the API waiter has nothing
+                        // more to fear from the delegation chain.
+                        self.placement_watch.remove(&instance);
                         if let Some(rec) = self.db.service_mut(task.service) {
                             if let Some(inst) = rec.instance_mut(instance) {
                                 if inst.state == ServiceState::Requested {
@@ -303,28 +673,12 @@ impl Actor for RootOrchestrator {
                     if let Some(rec) = self.db.service_mut(sid) {
                         if let Some(inst) = rec.instance_mut(instance) {
                             inst.worker = Some(node);
-                            if inst.state != state && inst.state.can_transition(state) {
-                                let _ = inst.transition(state);
-                            }
                         }
                     }
+                    self.transition_instance(ctx, instance, sid, state);
                     if state == ServiceState::Running {
                         self.maybe_notify_deployed(ctx, sid);
                     }
-                }
-            }
-
-            SimMsg::Oak(OakMsg::ReplicateTask { task }) => {
-                // Replication = a fresh scheduling request for the same
-                // task; the original instance keeps running (§6).
-                ctx.charge_cpu(costs::SUBMIT_MS * 0.5);
-                let sla = self
-                    .db
-                    .service(task.service)
-                    .and_then(|rec| rec.spec.task(task).map(|t| t.sla.clone()));
-                if let (Some(sla), Some(new_id)) = (sla, self.db.mint_replacement(task)) {
-                    ctx.metrics().inc("root.replications");
-                    self.delegate(ctx, new_id, task, sla);
                 }
             }
 
@@ -337,6 +691,7 @@ impl Actor for RootOrchestrator {
                 // priority-list scheduling with a fresh instance (§4.2).
                 if let Some(new_id) = self.db.mint_replacement(task) {
                     ctx.metrics().inc("root.reschedules");
+                    ctx.add_mem(mem::PER_INSTANCE_MB);
                     self.delegate(ctx, new_id, task, sla);
                 }
             }

@@ -376,6 +376,16 @@ impl Actor for WorkerEngine {
                 if let Some(h) = self.hosted.remove(&instance) {
                     self.used -= h.request;
                     ctx.add_mem(-(h.request.mem_mb as f64 * 0.05 + 4.0));
+                    // Retire the local mDNS name when the last hosted
+                    // instance of the task leaves this node.
+                    if !self.hosted.values().any(|o| o.task == h.task) {
+                        self.mdns.unregister(&format!(
+                            "task-{}-{}",
+                            h.task.service.0, h.task.index
+                        ));
+                    }
+                    // Per-instance teardown ack (API lifecycle contract:
+                    // every undeploy is confirmed instance-by-instance).
                     let msg = SimMsg::Oak(OakMsg::InstanceStatus {
                         instance,
                         node: self.cfg.spec.node,

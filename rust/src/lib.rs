@@ -10,11 +10,14 @@
 //!
 //! ## Architecture (three layers)
 //!
-//! * **L3 (this crate)** — the coordination plane: [`coordinator`] (root /
-//!   cluster / worker state machines), [`scheduler`] (delegated ROM/LDP),
-//!   [`netmanager`] (ServiceIP semantic addressing + ProxyTUN tunnels),
-//!   [`telemetry`] (push-based λ-adaptive updates), [`hierarchy`] (the
-//!   cluster tree *I = ⟨C,E⟩* with ⟨Σ,μ,σ⟩ aggregation).
+//! * **L3 (this crate)** — the coordination plane: [`api`] (the typed
+//!   northbound service lifecycle API v1 — submit/scale/migrate/undeploy/
+//!   status, the single front door into the hierarchy), [`coordinator`]
+//!   (root / cluster / worker state machines), [`scheduler`] (delegated
+//!   ROM/LDP), [`netmanager`] (ServiceIP semantic addressing + ProxyTUN
+//!   tunnels), [`telemetry`] (push-based λ-adaptive updates),
+//!   [`hierarchy`] (the cluster tree *I = ⟨C,E⟩* with ⟨Σ,μ,σ⟩
+//!   aggregation).
 //! * **L2/L1 (build-time Python, `python/compile`)** — the numeric
 //!   placement pipeline (batched LDP scoring, Vivaldi embedding,
 //!   trilateration) and the video-analytics detector, AOT-lowered to HLO
@@ -22,12 +25,27 @@
 //! * **Runtime bridge** — [`runtime`] loads the artifacts through the PJRT
 //!   CPU client so the Rust hot path executes them without Python.
 //!
+//! ## Service lifecycle (northbound API v1)
+//!
+//! Every lifecycle operation flows through [`api::ApiRequest`] /
+//! [`api::ApiResponse`] envelopes addressed to the root orchestrator:
+//! `SubmitService` (full Schema 1 JSON via
+//! [`sla::ServiceSla::parse_json`]), `ScaleService`, `MigrateInstance`,
+//! `UndeployService`, `ServiceStatus` and `ListServices`, each with
+//! structured [`api::ApiError`] variants (validation failure, unknown
+//! service/instance, no feasible placement). The root validates and
+//! routes; cluster orchestrators execute scale-up through the ROM/LDP
+//! schedulers and scale-down/teardown via `UndeployInstance` with
+//! capacity release and conversion-table cleanup; workers ack per
+//! instance.
+//!
 //! ## Determinism
 //!
 //! Everything in [`sim`] is a deterministic discrete-event simulation:
 //! seeded RNG, virtual clock, reproducible event ordering. Benches and
 //! tests rely on this — the same seed always yields the same trace.
 
+pub mod api;
 pub mod baselines;
 pub mod bench_harness;
 pub mod config;

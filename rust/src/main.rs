@@ -5,17 +5,27 @@
 //!
 //! ```text
 //! oakestra run [--config cfg.json]        run a testbed from a config
+//! oakestra submit --sla app.json          deploy a Schema 1 SLA via the API
+//! oakestra scale --replicas N             scale demo through the API
+//! oakestra undeploy                       teardown demo through the API
+//! oakestra status                         lifecycle status via the API
 //! oakestra bench <fig|all>                regenerate a paper figure table
 //! oakestra ldp --workers N                one PJRT-accelerated LDP solve
 //! oakestra check-artifacts                verify AOT artifacts load + run
 //! oakestra init-config [path]             write an example config
 //! ```
+//!
+//! The lifecycle subcommands drive the typed northbound API v1
+//! ([`oakestra::api`]) against a simulated testbed — the same code path
+//! the integration tests and benches use.
 
 use anyhow::{anyhow, Result};
+use oakestra::api::ApiResponse;
 use oakestra::bench_harness as bh;
 use oakestra::config::Config;
 use oakestra::metrics::Table;
-use oakestra::util::SimTime;
+use oakestra::sla::ServiceSla;
+use oakestra::util::{ServiceId, SimTime};
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -39,6 +49,10 @@ fn flag_value<'a>(args: &'a [String], flag: &str) -> Option<&'a str> {
 fn dispatch(args: &[String]) -> Result<()> {
     match args.first().map(String::as_str) {
         Some("run") => cmd_run(args),
+        Some("submit") => cmd_submit(args),
+        Some("scale") => cmd_scale(args),
+        Some("undeploy") => cmd_undeploy(args),
+        Some("status") => cmd_status(args),
         Some("bench") => cmd_bench(args),
         Some("ldp") => cmd_ldp(args),
         Some("check-artifacts") => cmd_check_artifacts(),
@@ -62,10 +76,16 @@ fn print_help() {
          \n\
          USAGE:\n\
            oakestra run [--config cfg.json]   run a simulated testbed\n\
+           oakestra submit --sla app.json     deploy a Schema 1 SLA via the northbound API\n\
+           oakestra scale [--replicas N]      API scaling demo (up then status)\n\
+           oakestra undeploy                  API teardown demo (submit, then undeploy)\n\
+           oakestra status                    API status/list demo\n\
            oakestra bench <fig|all>           figures: 4a 4bc 5 6 7a 7b 8a 8b 9 10 ablations\n\
            oakestra ldp [--workers N]         PJRT-accelerated LDP placement demo\n\
            oakestra check-artifacts           verify the AOT artifact bundle\n\
-           oakestra init-config [path]        write an example config"
+           oakestra init-config [path]        write an example config\n\
+         \n\
+         Lifecycle subcommands accept --config cfg.json to pick a topology."
     );
 }
 
@@ -109,6 +129,153 @@ fn cmd_run(args: &[String]) -> Result<()> {
         m.msgs(oakestra::messaging::labels::CLUSTER_TO_ROOT),
         m.msgs(oakestra::messaging::labels::ROOT_TO_CLUSTER),
     );
+    Ok(())
+}
+
+/// Build a warmed-up testbed for the lifecycle subcommands.
+fn lifecycle_testbed(args: &[String]) -> Result<(Config, bh::OakTestbed)> {
+    let cfg = match flag_value(args, "--config") {
+        Some(path) => Config::from_file(path)?,
+        None => Config::default(),
+    };
+    let mut tb = bh::build_oakestra(cfg.testbed());
+    tb.warm_up();
+    Ok((cfg, tb))
+}
+
+/// Print every API response recorded for one request id.
+fn print_responses(tb: &bh::OakTestbed, request_id: u64, verb: &str) {
+    for r in tb.api_client().responses_for(request_id) {
+        match r {
+            ApiResponse::Status(s) => print!("{}", oakestra::api::format_status(s)),
+            ApiResponse::Services(rows) => {
+                for s in rows {
+                    println!(
+                        "  {} '{}': {} task(s), {} running, fully_running={}",
+                        s.service, s.name, s.tasks, s.running_instances, s.fully_running
+                    );
+                }
+            }
+            ApiResponse::Error(e) => println!("{verb} error: {e}"),
+            other => println!("{verb}: {other:?}"),
+        }
+    }
+}
+
+/// `oakestra submit --sla app.json`: full Schema 1 intake through the API.
+fn cmd_submit(args: &[String]) -> Result<()> {
+    let path = flag_value(args, "--sla")
+        .ok_or_else(|| anyhow!("submit requires --sla <schema1.json>"))?;
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow!("reading {path}: {e}"))?;
+    let sla = ServiceSla::parse_json(&text)?;
+    println!(
+        "submitting '{}' ({} microservice(s)) through API v{}",
+        sla.name,
+        sla.constraints.len(),
+        oakestra::api::API_VERSION
+    );
+    let (_cfg, mut tb) = lifecycle_testbed(args)?;
+    let req = tb.submit(sla, SimTime::from_secs(13.0));
+    tb.sim.run_until(SimTime::from_secs(45.0));
+    let service = match tb.ack(req) {
+        Some(ApiResponse::Submitted { service, instances }) => {
+            println!("accepted as {service} with {} instance(s)", instances.len());
+            *service
+        }
+        Some(ApiResponse::Error(e)) => return Err(anyhow!("rejected: {e}")),
+        other => return Err(anyhow!("unexpected ack: {other:?}")),
+    };
+    print_responses(&tb, req, "submit"); // surfaces NoFeasiblePlacement events
+    let at = tb.sim.now() + SimTime::from_secs(1.0);
+    let sreq = tb.query_status(service, at);
+    tb.sim.run_until(at + SimTime::from_secs(1.0));
+    print_responses(&tb, sreq, "status");
+    let times = tb.deploy_times_ms();
+    if let Some(t) = times.first() {
+        println!("deploy time: {t:.0} ms (submit → all tasks Running)");
+    }
+    Ok(())
+}
+
+/// `oakestra scale [--replicas N]`: submit one service, scale it, report.
+fn cmd_scale(args: &[String]) -> Result<()> {
+    let replicas: usize = flag_value(args, "--replicas")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(3);
+    let (_cfg, mut tb) = lifecycle_testbed(args)?;
+    let req = tb.submit(
+        oakestra::sla::simple_sla("scaled", 150, 64),
+        SimTime::from_secs(13.0),
+    );
+    tb.sim.run_until(SimTime::from_secs(30.0));
+    let Some(ApiResponse::Submitted { service, .. }) = tb.ack(req) else {
+        return Err(anyhow!("submission failed"));
+    };
+    let service: ServiceId = *service;
+    println!("service {service} running; scaling task 0 to {replicas} replica(s)");
+    let sc = tb.scale(service, Some(0), replicas, SimTime::from_secs(31.0));
+    tb.sim.run_until(SimTime::from_secs(60.0));
+    print_responses(&tb, sc, "scale");
+    let at = tb.sim.now() + SimTime::from_secs(1.0);
+    let sreq = tb.query_status(service, at);
+    tb.sim.run_until(at + SimTime::from_secs(1.0));
+    print_responses(&tb, sreq, "status");
+    Ok(())
+}
+
+/// `oakestra undeploy`: submit one service, then tear it down via the API.
+fn cmd_undeploy(args: &[String]) -> Result<()> {
+    let (_cfg, mut tb) = lifecycle_testbed(args)?;
+    let req = tb.submit(
+        oakestra::sla::simple_sla("ephemeral", 150, 64),
+        SimTime::from_secs(13.0),
+    );
+    tb.sim.run_until(SimTime::from_secs(30.0));
+    let Some(ApiResponse::Submitted { service, .. }) = tb.ack(req) else {
+        return Err(anyhow!("submission failed"));
+    };
+    let service: ServiceId = *service;
+    println!("service {service} running; undeploying through the API");
+    let ud = tb.undeploy(service, SimTime::from_secs(31.0));
+    tb.sim.run_until(SimTime::from_secs(50.0));
+    print_responses(&tb, ud, "undeploy");
+    let at = tb.sim.now() + SimTime::from_secs(1.0);
+    let sreq = tb.query_status(service, at);
+    tb.sim.run_until(at + SimTime::from_secs(1.0));
+    print_responses(&tb, sreq, "status");
+    Ok(())
+}
+
+/// `oakestra status`: submit the configured services, then list + detail.
+fn cmd_status(args: &[String]) -> Result<()> {
+    let (cfg, mut tb) = lifecycle_testbed(args)?;
+    let mut submits = Vec::new();
+    for (i, (name, cpu, mem)) in cfg.services.iter().enumerate() {
+        submits.push(tb.submit(
+            oakestra::sla::simple_sla(name, *cpu, *mem),
+            SimTime::from_secs(13.0 + i as f64),
+        ));
+    }
+    tb.sim.run_until(SimTime::from_secs(40.0));
+    let ls = tb.list_services(SimTime::from_secs(41.0));
+    tb.sim.run_until(SimTime::from_secs(42.0));
+    println!("services:");
+    print_responses(&tb, ls, "list");
+    let services: Vec<ServiceId> = submits
+        .iter()
+        .filter_map(|r| match tb.ack(*r) {
+            Some(ApiResponse::Submitted { service, .. }) => Some(*service),
+            _ => None,
+        })
+        .collect();
+    for s in services {
+        let at = tb.sim.now() + SimTime::from_secs(0.5);
+        let sreq = tb.query_status(s, at);
+        tb.sim.run_until(at + SimTime::from_secs(0.5));
+        print_responses(&tb, sreq, "status");
+    }
     Ok(())
 }
 
@@ -179,6 +346,15 @@ fn cmd_ldp(args: &[String]) -> Result<()> {
     Ok(())
 }
 
+#[cfg(not(feature = "xla-accel"))]
+fn cmd_check_artifacts() -> Result<()> {
+    Err(anyhow!(
+        "check-artifacts needs the PJRT bridge: rebuild with \
+         `cargo run --features xla-accel -- check-artifacts`"
+    ))
+}
+
+#[cfg(feature = "xla-accel")]
 fn cmd_check_artifacts() -> Result<()> {
     let artifacts = oakestra::runtime::Artifacts::discover()?;
     println!("artifact dir: {}", artifacts.dir.display());

@@ -67,7 +67,10 @@ impl std::error::Error for StateError {}
 
 impl ServiceState {
     /// Legal transitions of the paper's lifecycle. Failures are legal from
-    /// every live state (resources can die at any point at the edge).
+    /// every live state (resources can die at any point at the edge), and
+    /// deliberate teardown (`Terminated`) may cancel an instance that is
+    /// still `Scheduled` — an API-driven undeploy can race the container
+    /// start.
     pub fn can_transition(self, to: ServiceState) -> bool {
         use ServiceState::*;
         matches!(
@@ -75,6 +78,7 @@ impl ServiceState {
             (Requested, Scheduled)
                 | (Requested, Failed)
                 | (Scheduled, Running)
+                | (Scheduled, Terminated)
                 | (Scheduled, Failed)
                 | (Running, Terminated)
                 | (Running, Failed)
@@ -166,6 +170,16 @@ mod tests {
         r.transition(Terminated).unwrap();
         assert!(r.transition(Running).is_err()); // terminal is terminal
         assert!(r.transition(Failed).is_err());
+    }
+
+    #[test]
+    fn scheduled_can_be_cancelled() {
+        // API-driven undeploy racing a container start: Scheduled →
+        // Terminated is a deliberate cancellation, not a failure.
+        let mut r = InstanceRecord::new(InstanceId(1), TaskId::default());
+        r.transition(Scheduled).unwrap();
+        r.transition(Terminated).unwrap();
+        assert!(r.state.is_terminal());
     }
 
     #[test]

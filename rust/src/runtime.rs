@@ -105,6 +105,12 @@ impl Artifacts {
 }
 
 /// PJRT engine: CPU client + compile-once executable cache.
+///
+/// Only functional with the `xla-accel` cargo feature (which expects a
+/// local `xla` crate + XLA toolchain). Without the feature every
+/// constructor returns a structured error and callers fall back to the
+/// host implementations — the crate stays fully buildable offline.
+#[cfg(feature = "xla-accel")]
 pub struct PjrtEngine {
     client: xla::PjRtClient,
     artifacts: Artifacts,
@@ -113,7 +119,26 @@ pub struct PjrtEngine {
     pub executions: u64,
 }
 
+/// Stub engine compiled when the `xla-accel` feature is off; uninhabited
+/// in practice because [`PjrtEngine::new`] always errors.
+#[cfg(not(feature = "xla-accel"))]
+pub struct PjrtEngine {
+    artifacts: Artifacts,
+    /// Executions performed (perf accounting).
+    pub executions: u64,
+}
+
+/// The error every accelerated entry point returns without `xla-accel`.
+#[cfg(not(feature = "xla-accel"))]
+fn bridge_disabled() -> anyhow::Error {
+    eyre!(
+        "PJRT bridge disabled: build with `--features xla-accel` \
+         (requires a local xla crate + XLA toolchain)"
+    )
+}
+
 impl PjrtEngine {
+    #[cfg(feature = "xla-accel")]
     pub fn new(artifacts: Artifacts) -> Result<PjrtEngine> {
         let client = xla::PjRtClient::cpu()?;
         Ok(PjrtEngine {
@@ -122,6 +147,12 @@ impl PjrtEngine {
             cache: HashMap::new(),
             executions: 0,
         })
+    }
+
+    #[cfg(not(feature = "xla-accel"))]
+    pub fn new(artifacts: Artifacts) -> Result<PjrtEngine> {
+        let _ = artifacts;
+        Err(bridge_disabled())
     }
 
     pub fn discover() -> Result<PjrtEngine> {
@@ -133,6 +164,7 @@ impl PjrtEngine {
     }
 
     /// Compile (or fetch the cached) executable for an entry.
+    #[cfg(feature = "xla-accel")]
     pub fn executable(&mut self, entry: &str) -> Result<&xla::PjRtLoadedExecutable> {
         if !self.cache.contains_key(entry) {
             let path = self.artifacts.path_of(entry)?;
@@ -147,6 +179,7 @@ impl PjrtEngine {
     }
 
     /// Execute an entry with literal inputs; returns the unpacked tuple.
+    #[cfg(feature = "xla-accel")]
     pub fn run(&mut self, entry: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
         self.executions += 1;
         let exe = self.executable(entry)?;
@@ -203,6 +236,7 @@ pub struct LdpAccel {
 }
 
 #[derive(Default)]
+#[cfg_attr(not(feature = "xla-accel"), allow(dead_code))]
 struct LdpScratch {
     caps: Vec<f32>,
     virt: Vec<i32>,
@@ -231,6 +265,19 @@ impl LdpAccel {
     }
 
     /// Score all workers; returns (scores, feasibility) of `workers.len()`.
+    #[cfg(not(feature = "xla-accel"))]
+    pub fn score(
+        &mut self,
+        _workers: &[LdpWorkerRow],
+        _req: [f32; 3],
+        _req_virt: i32,
+        _constraints: &[LdpConstraintRow],
+    ) -> Result<(Vec<f32>, Vec<bool>)> {
+        Err(bridge_disabled())
+    }
+
+    /// Score all workers; returns (scores, feasibility) of `workers.len()`.
+    #[cfg(feature = "xla-accel")]
     pub fn score(
         &mut self,
         workers: &[LdpWorkerRow],
@@ -329,6 +376,7 @@ impl LdpAccel {
 
 /// Vivaldi embedding via the `vivaldi_embed_256` artifact: embeds an RTT
 /// matrix (≤256 nodes, zero-padded) into coordinates.
+#[cfg_attr(not(feature = "xla-accel"), allow(dead_code))]
 pub struct VivaldiEmbed {
     engine: PjrtEngine,
 }
@@ -338,6 +386,12 @@ impl VivaldiEmbed {
         VivaldiEmbed { engine }
     }
 
+    #[cfg(not(feature = "xla-accel"))]
+    pub fn embed(&mut self, _rtt: &[Vec<f64>]) -> Result<Vec<[f64; 4]>> {
+        Err(bridge_disabled())
+    }
+
+    #[cfg(feature = "xla-accel")]
     pub fn embed(&mut self, rtt: &[Vec<f64>]) -> Result<Vec<[f64; 4]>> {
         const N: usize = 256;
         anyhow::ensure!(rtt.len() <= N, "at most {N} nodes");
@@ -365,6 +419,7 @@ impl VivaldiEmbed {
 
 /// The video-analytics detector (`detector_{1,8}x64` artifacts): a fixed
 /// CNN standing in for YOLOv3 (DESIGN.md substitution ledger).
+#[cfg_attr(not(feature = "xla-accel"), allow(dead_code))]
 pub struct Detector {
     engine: PjrtEngine,
 }
@@ -380,6 +435,14 @@ impl Detector {
 
     /// Run detection over `batch` frames of 64×64×3 f32; returns the
     /// flattened detection grid per frame ([8×8×5] each).
+    #[cfg(not(feature = "xla-accel"))]
+    pub fn detect(&mut self, _frames: &[f32], _batch: usize) -> Result<Vec<Vec<f32>>> {
+        Err(bridge_disabled())
+    }
+
+    /// Run detection over `batch` frames of 64×64×3 f32; returns the
+    /// flattened detection grid per frame ([8×8×5] each).
+    #[cfg(feature = "xla-accel")]
     pub fn detect(&mut self, frames: &[f32], batch: usize) -> Result<Vec<Vec<f32>>> {
         let entry = match batch {
             1 => "detector_1x64",
@@ -401,7 +464,7 @@ mod tests {
     use super::*;
 
     fn artifacts_available() -> bool {
-        Artifacts::discover().is_ok()
+        cfg!(feature = "xla-accel") && Artifacts::discover().is_ok()
     }
 
     fn mk_workers(n: usize) -> Vec<LdpWorkerRow> {

@@ -10,7 +10,7 @@ use crate::hierarchy::AggregateStats;
 use crate::model::{Capacity, ServiceState, WorkerSpec};
 use crate::netmanager::{ServiceIp, TableEntry};
 use crate::sim::ActorId;
-use crate::sla::{ServiceSla, TaskSla};
+use crate::sla::TaskSla;
 use crate::util::{ClusterId, InstanceId, NodeId, ServiceId, SimTime, TaskId};
 use crate::vivaldi::VivaldiState;
 
@@ -83,12 +83,20 @@ pub enum OakMsg {
         peers: Vec<(NodeId, VivaldiState)>,
     },
 
-    // -- deployment (steps ①–⑨) -------------------------------------------
-    /// Developer submits an SLA at the root API.
-    SubmitService {
-        sla: ServiceSla,
-        reply_to: Option<ActorId>,
+    // -- northbound API (v1, paper §3.2.1) ---------------------------------
+    /// Typed northbound call arriving at the root service manager. The
+    /// envelope carries version, correlation id, operation and reply
+    /// address; see [`crate::api`]. This is the only way lifecycle
+    /// operations (submit/scale/migrate/undeploy/status) enter the
+    /// hierarchy.
+    ApiCall(Box<crate::api::ApiEnvelope>),
+    /// Root's answer (or asynchronous event) for one API call.
+    ApiReturn {
+        request_id: u64,
+        response: Box<crate::api::ApiResponse>,
     },
+
+    // -- deployment (steps ①–⑨) -------------------------------------------
     /// Root delegates one task to a cluster orchestrator (step ③/④),
     /// carrying τ and Q_τ. `attempt` counts priority-list retries.
     DelegateTask {
@@ -121,15 +129,22 @@ pub enum OakMsg {
     UndeployInstance {
         instance: InstanceId,
     },
+    /// Root tears a whole service down: every cluster undeploys all local
+    /// instances of the service, including replacements it minted itself
+    /// during migrations/local recovery (which the root never tracked).
+    UndeployService {
+        service: ServiceId,
+    },
     /// Root/driver callback when a whole service reaches Running.
     ServiceDeployed {
         service: ServiceId,
         elapsed: SimTime,
     },
-    /// Developer asks for one more instance of a task (paper §6:
-    /// replication follows the migration procedure minus the teardown).
-    ReplicateTask {
-        task: TaskId,
+    /// Root instructs the owning cluster to migrate one instance away
+    /// from its current worker (API-driven migration; paper §6:
+    /// rescheduling + deferred teardown of the original).
+    MigrateInstance {
+        instance: InstanceId,
     },
 
     // -- overlay networking (steps ⑩–⑪, §5) --------------------------------
@@ -283,7 +298,18 @@ impl SimMsg {
                 OakMsg::ClusterReport { .. } => 256,
                 OakMsg::Ping | OakMsg::Pong => 16,
                 OakMsg::PeerHint { peers } => 16 + 40 * peers.len(),
-                OakMsg::SubmitService { sla, .. } => 512 + 256 * sla.constraints.len(),
+                OakMsg::ApiCall(env) => match &env.request {
+                    // A full Schema 1 JSON document dominates the call.
+                    crate::api::ApiRequest::SubmitService { sla } => {
+                        512 + 256 * sla.constraints.len()
+                    }
+                    _ => 128,
+                },
+                OakMsg::ApiReturn { response, .. } => match response.as_ref() {
+                    crate::api::ApiResponse::Status(s) => 128 + 56 * s.instances.len(),
+                    crate::api::ApiResponse::Services(rows) => 64 + 64 * rows.len(),
+                    _ => 96,
+                },
                 OakMsg::DelegateTask { .. } => 640,
                 OakMsg::DelegationResult { .. } => 96,
                 OakMsg::DeployInstance { service_ips, .. } => {
@@ -291,8 +317,9 @@ impl SimMsg {
                 }
                 OakMsg::InstanceStatus { .. } => 96,
                 OakMsg::UndeployInstance { .. } => 64,
+                OakMsg::UndeployService { .. } => 64,
                 OakMsg::ServiceDeployed { .. } => 64,
-                OakMsg::ReplicateTask { .. } => 96,
+                OakMsg::MigrateInstance { .. } => 64,
                 OakMsg::ResolveIp { .. } | OakMsg::ResolveIpUp { .. } => 96,
                 OakMsg::TableUpdate { entries } => 48 + 48 * entries.len(),
                 OakMsg::WorkerDead { .. } => 64,

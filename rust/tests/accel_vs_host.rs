@@ -10,7 +10,9 @@ use oakestra::runtime::{Artifacts, LdpAccel, LdpConstraintRow, LdpWorkerRow};
 use oakestra::util::Rng;
 
 fn artifacts_available() -> bool {
-    Artifacts::discover().is_ok()
+    // Accelerated paths need both the xla-accel build feature and the
+    // AOT artifact bundle (`make artifacts`).
+    cfg!(feature = "xla-accel") && Artifacts::discover().is_ok()
 }
 
 fn random_workers(rng: &mut Rng, n: usize) -> Vec<LdpWorkerRow> {

@@ -1,8 +1,10 @@
 //! End-to-end integration tests over the full simulated control plane:
 //! registration → scheduling → deployment → failure recovery → overlay
-//! resolution, across multiple clusters.
+//! resolution, across multiple clusters — all driven through the typed
+//! northbound API v1 ([`oakestra::api`]).
 
-use oakestra::bench_harness::{build_oakestra, OakTestbedConfig};
+use oakestra::api::{ApiError, ApiRequest, ApiResponse};
+use oakestra::bench_harness::{build_oakestra, OakTestbed, OakTestbedConfig};
 use oakestra::coordinator::{ClusterOrchestrator, RootOrchestrator, SchedulerKind, WorkerEngine};
 use oakestra::model::ServiceState;
 use oakestra::netmanager::ServiceIp;
@@ -10,6 +12,17 @@ use oakestra::sim::{DataMsg, SimMsg, TimerKind};
 use oakestra::sla::{simple_sla, S2sConstraint};
 use oakestra::util::{ServiceId, SimTime, TaskId};
 use oakestra::workload::HttpClient;
+
+/// Aggregate used CPU across every worker of one cluster orchestrator.
+fn cluster_used_cpu(tb: &OakTestbed, cluster: usize) -> u64 {
+    tb.sim
+        .actor_as::<ClusterOrchestrator>(tb.clusters[cluster].1)
+        .unwrap()
+        .workers
+        .iter()
+        .map(|w| w.used.cpu_millicores as u64)
+        .sum()
+}
 
 #[test]
 fn multi_service_deployment_reaches_running() {
@@ -84,15 +97,27 @@ fn infeasible_everywhere_escalates_and_fails() {
     let mut tb = build_oakestra(OakTestbedConfig::default());
     tb.warm_up();
     // Request far beyond any S VM.
-    tb.submit(simple_sla("huge", 64_000, 64_000), SimTime::from_secs(13.0));
+    let req = tb.submit(simple_sla("huge", 64_000, 64_000), SimTime::from_secs(13.0));
     tb.sim.run_until(SimTime::from_secs(40.0));
     assert!(tb.deploy_times_ms().is_empty());
-    let root = tb.sim.actor_as::<RootOrchestrator>(tb.root).unwrap();
-    let rec = root.db.services().next().unwrap();
-    assert!(rec
-        .instances
-        .iter()
-        .all(|i| i.state == ServiceState::Failed));
+    {
+        let root = tb.sim.actor_as::<RootOrchestrator>(tb.root).unwrap();
+        let rec = root.db.services().next().unwrap();
+        assert!(rec
+            .instances
+            .iter()
+            .all(|i| i.state == ServiceState::Failed));
+    }
+    // The API caller sees the structured async error after the sync ack.
+    let responses = tb.api_client().responses_for(req);
+    assert!(matches!(responses[0], ApiResponse::Submitted { .. }));
+    assert!(
+        responses.iter().any(|r| matches!(
+            r,
+            ApiResponse::Error(ApiError::NoFeasiblePlacement { .. })
+        )),
+        "exhausted priority list must surface as NoFeasiblePlacement: {responses:?}"
+    );
 }
 
 #[test]
@@ -188,30 +213,71 @@ fn s2s_chain_places_dependents_near_targets() {
 fn undeploy_terminates_and_frees_capacity() {
     let mut tb = build_oakestra(OakTestbedConfig::default());
     tb.warm_up();
-    tb.submit(simple_sla("temp", 800, 512), SimTime::from_secs(13.0));
+    let sub = tb.submit(simple_sla("temp", 800, 512), SimTime::from_secs(13.0));
     tb.sim.run_until(SimTime::from_secs(30.0));
-
-    let (instance, orch_actor) = {
-        let root = tb.sim.actor_as::<RootOrchestrator>(tb.root).unwrap();
-        let rec = root.db.services().next().unwrap();
-        (rec.instances[0].instance, tb.clusters[0].1)
+    let service = match tb.ack(sub) {
+        Some(ApiResponse::Submitted { service, .. }) => *service,
+        other => panic!("submission must be accepted: {other:?}"),
     };
-    tb.sim.inject(
-        SimTime::from_secs(31.0),
-        orch_actor,
-        SimMsg::Oak(oakestra::sim::OakMsg::UndeployInstance { instance }),
-    );
-    tb.sim.run_until(SimTime::from_secs(50.0));
 
-    let root = tb.sim.actor_as::<RootOrchestrator>(tb.root).unwrap();
-    let rec = root.db.services().next().unwrap();
-    assert_eq!(rec.instances[0].state, ServiceState::Terminated);
-    // Cluster-side worker table shows the capacity freed.
-    let orch = tb.sim.actor_as::<ClusterOrchestrator>(orch_actor).unwrap();
-    assert!(orch
+    // The hosting worker resolved its own task into its conversion table
+    // via the deploy-time push; capacity is reserved cluster-side.
+    assert!(cluster_used_cpu(&tb, 0) >= 800);
+    let hosting = {
+        let root = tb.sim.actor_as::<RootOrchestrator>(tb.root).unwrap();
+        root.db
+            .services()
+            .next()
+            .unwrap()
+            .instances
+            .iter()
+            .find(|i| i.state == ServiceState::Running)
+            .and_then(|i| i.worker)
+            .expect("instance must be running")
+    };
+    let host_engine = tb
         .workers
         .iter()
-        .all(|w| w.used.cpu_millicores == 0 || w.used.cpu_millicores < 800));
+        .find(|(n, _)| *n == hosting)
+        .map(|(_, a)| *a)
+        .unwrap();
+    let task = TaskId { service, index: 0 };
+    let host_knows_task = tb
+        .sim
+        .actor_as::<WorkerEngine>(host_engine)
+        .unwrap()
+        .table
+        .locations(task)
+        .is_some();
+
+    let ud = tb.undeploy(service, SimTime::from_secs(31.0));
+    tb.sim.run_until(SimTime::from_secs(50.0));
+
+    match tb.ack(ud) {
+        Some(ApiResponse::UndeployStarted { instances, .. }) => assert_eq!(*instances, 1),
+        other => panic!("undeploy must be acked: {other:?}"),
+    }
+    {
+        let root = tb.sim.actor_as::<RootOrchestrator>(tb.root).unwrap();
+        let rec = root.db.services().next().unwrap();
+        assert_eq!(rec.instances[0].state, ServiceState::Terminated);
+    }
+    // Undeploy frees worker capacity…
+    assert_eq!(
+        cluster_used_cpu(&tb, 0),
+        0,
+        "teardown must release every reserved millicore"
+    );
+    let host = tb.sim.actor_as::<WorkerEngine>(host_engine).unwrap();
+    assert_eq!(host.hosted_count(), 0);
+    assert_eq!(host.used.cpu_millicores, 0);
+    // …and removes the conversion-table row that pointed at the instance.
+    if host_knows_task {
+        assert!(
+            host.table.locations(task).is_none(),
+            "authoritative empty update must clear the table row"
+        );
+    }
 }
 
 #[test]
@@ -220,10 +286,19 @@ fn invalid_sla_is_rejected_at_the_root() {
     tb.warm_up();
     let mut sla = simple_sla("bad", 100, 32);
     sla.constraints[0].virtualization = "quantum".into();
-    tb.submit(sla, SimTime::from_secs(13.0));
+    let req = tb.submit(sla, SimTime::from_secs(13.0));
     tb.sim.run_until(SimTime::from_secs(30.0));
     assert!(tb.deploy_times_ms().is_empty());
     assert_eq!(tb.sim.core.metrics.counter("root.sla_rejected"), 1);
+    // The rejection is a typed validation error, not a silent drop.
+    assert!(
+        matches!(
+            tb.ack(req),
+            Some(ApiResponse::Error(ApiError::InvalidSla(_)))
+        ),
+        "got {:?}",
+        tb.ack(req)
+    );
 }
 
 #[test]
@@ -255,7 +330,7 @@ fn deterministic_replay_same_seed_same_outcome() {
 }
 
 #[test]
-fn replication_adds_a_second_running_instance() {
+fn scale_up_adds_a_second_running_instance() {
     let mut tb = build_oakestra(OakTestbedConfig {
         clusters: 1,
         workers_per_cluster: 4,
@@ -265,17 +340,18 @@ fn replication_adds_a_second_running_instance() {
     tb.submit(simple_sla("repl", 150, 64), SimTime::from_secs(13.0));
     tb.sim.run_until(SimTime::from_secs(30.0));
 
-    let task = TaskId {
-        service: ServiceId(0),
-        index: 0,
-    };
-    tb.sim.inject(
-        SimTime::from_secs(31.0),
-        tb.root,
-        SimMsg::Oak(oakestra::sim::OakMsg::ReplicateTask { task }),
-    );
+    // Replication through the API (paper §6: replication = migration
+    // minus teardown): scale task 0 to two replicas.
+    let sc = tb.scale(ServiceId(0), Some(0), 2, SimTime::from_secs(31.0));
     tb.sim.run_until(SimTime::from_secs(60.0));
 
+    match tb.ack(sc) {
+        Some(ApiResponse::ScaleStarted { added, removed, .. }) => {
+            assert_eq!(added.len(), 1);
+            assert!(removed.is_empty());
+        }
+        other => panic!("scale must be acked: {other:?}"),
+    }
     let root = tb.sim.actor_as::<RootOrchestrator>(tb.root).unwrap();
     let rec = root.db.services().next().unwrap();
     let running: Vec<_> = rec
@@ -283,10 +359,291 @@ fn replication_adds_a_second_running_instance() {
         .iter()
         .filter(|i| i.state == ServiceState::Running)
         .collect();
-    assert_eq!(running.len(), 2, "replication must yield two live instances");
-    assert_eq!(tb.sim.core.metrics.counter("root.replications"), 1);
+    assert_eq!(running.len(), 2, "scale-up must yield two live instances");
+    assert_eq!(tb.sim.core.metrics.counter("root.scale_up"), 1);
     // The replica carries a bumped generation.
     assert!(rec.instances.iter().any(|i| i.generation == 1));
+}
+
+#[test]
+fn scale_up_then_down_restores_cluster_aggregate() {
+    let mut tb = build_oakestra(OakTestbedConfig {
+        clusters: 1,
+        workers_per_cluster: 4,
+        ..OakTestbedConfig::default()
+    });
+    tb.warm_up();
+    let sub = tb.submit(simple_sla("elastic", 200, 64), SimTime::from_secs(13.0));
+    tb.sim.run_until(SimTime::from_secs(30.0));
+    let service = match tb.ack(sub) {
+        Some(ApiResponse::Submitted { service, .. }) => *service,
+        other => panic!("submission must be accepted: {other:?}"),
+    };
+    let baseline = cluster_used_cpu(&tb, 0);
+    assert_eq!(baseline, 200, "one 200 mc replica reserved");
+
+    // Scale 1 → 3: two more reservations appear…
+    tb.scale(service, Some(0), 3, SimTime::from_secs(31.0));
+    tb.sim.run_until(SimTime::from_secs(60.0));
+    assert_eq!(cluster_used_cpu(&tb, 0), 3 * 200);
+    {
+        let root = tb.sim.actor_as::<RootOrchestrator>(tb.root).unwrap();
+        let rec = root.db.service(service).unwrap();
+        assert_eq!(
+            rec.instances
+                .iter()
+                .filter(|i| i.state == ServiceState::Running)
+                .count(),
+            3
+        );
+    }
+
+    // …and scale 3 → 1 returns the cluster to its pre-scale aggregate.
+    let down = tb.scale(service, Some(0), 1, SimTime::from_secs(61.0));
+    tb.sim.run_until(SimTime::from_secs(90.0));
+    match tb.ack(down) {
+        Some(ApiResponse::ScaleStarted { added, removed, .. }) => {
+            assert!(added.is_empty());
+            assert_eq!(removed.len(), 2);
+        }
+        other => panic!("scale-down must be acked: {other:?}"),
+    }
+    assert_eq!(
+        cluster_used_cpu(&tb, 0),
+        baseline,
+        "scale-up then scale-down must restore the pre-scale aggregate"
+    );
+    let root = tb.sim.actor_as::<RootOrchestrator>(tb.root).unwrap();
+    let rec = root.db.service(service).unwrap();
+    assert_eq!(
+        rec.instances
+            .iter()
+            .filter(|i| i.state == ServiceState::Running)
+            .count(),
+        1,
+        "exactly the surviving replica keeps running"
+    );
+    assert_eq!(
+        rec.instances
+            .iter()
+            .filter(|i| i.state == ServiceState::Terminated)
+            .count(),
+        2
+    );
+}
+
+/// Acceptance: every lifecycle operation exercised end-to-end through
+/// `ApiRequest`/`ApiResponse` — submit, status, scale up/down, migrate,
+/// undeploy, list — against a two-cluster hierarchy.
+#[test]
+fn api_full_lifecycle_end_to_end() {
+    let mut tb = build_oakestra(OakTestbedConfig {
+        clusters: 2,
+        workers_per_cluster: 3,
+        ..OakTestbedConfig::default()
+    });
+    tb.warm_up();
+
+    // ① Submit (Schema 1 JSON through the real parser).
+    let json = r#"{
+        "name": "lifecycle-app",
+        "constraints": [{
+            "memory_mb": 64, "vcpus_millicores": 150,
+            "virtualization": "container",
+            "rigidness": 0.5, "convergence_time_ms": 5000,
+            "s2s": [], "s2u": []
+        }]
+    }"#;
+    let sla = oakestra::sla::ServiceSla::parse_json(json).unwrap();
+    let sub = tb.submit(sla, SimTime::from_secs(13.0));
+    tb.sim.run_until(SimTime::from_secs(30.0));
+    let service = match tb.ack(sub) {
+        Some(ApiResponse::Submitted { service, instances }) => {
+            assert_eq!(instances.len(), 1);
+            *service
+        }
+        other => panic!("submit ack missing: {other:?}"),
+    };
+    assert_eq!(tb.deploy_times_ms().len(), 1, "deployment callback fired");
+
+    // ② Status: one running instance.
+    let st = tb.query_status(service, SimTime::from_secs(31.0));
+    tb.sim.run_until(SimTime::from_secs(32.0));
+    let (first_instance, first_worker) = match tb.ack(st) {
+        Some(ApiResponse::Status(s)) => {
+            assert!(s.fully_running);
+            assert_eq!(s.count(ServiceState::Running), 1);
+            let i = &s.instances[0];
+            assert!(i.cluster.is_some(), "delegation cluster recorded");
+            (i.instance, i.worker.unwrap())
+        }
+        other => panic!("status ack missing: {other:?}"),
+    };
+
+    // ③ Scale up to 2 replicas.
+    let sc = tb.scale(service, None, 2, SimTime::from_secs(33.0));
+    tb.sim.run_until(SimTime::from_secs(55.0));
+    assert!(matches!(
+        tb.ack(sc),
+        Some(ApiResponse::ScaleStarted { .. })
+    ));
+    let st = tb.query_status(service, SimTime::from_secs(56.0));
+    tb.sim.run_until(SimTime::from_secs(57.0));
+    match tb.ack(st) {
+        Some(ApiResponse::Status(s)) => assert_eq!(s.count(ServiceState::Running), 2),
+        other => panic!("status ack missing: {other:?}"),
+    }
+
+    // ④ Migrate the original instance away from its worker.
+    let mig = tb.migrate(service, first_instance, SimTime::from_secs(58.0));
+    tb.sim.run_until(SimTime::from_secs(90.0));
+    assert!(matches!(
+        tb.ack(mig),
+        Some(ApiResponse::MigrationStarted { .. })
+    ));
+    assert!(
+        tb.sim.core.metrics.counter("cluster.migration_completed") >= 1,
+        "migration must complete (replacement Running, original undeployed)"
+    );
+    {
+        // The original instance was undeployed once its replacement went
+        // Running (§6: rescheduling + deferred teardown). The scale-up
+        // replica may legitimately share first_worker, so assert on the
+        // migrated instance itself.
+        let root = tb.sim.actor_as::<RootOrchestrator>(tb.root).unwrap();
+        let rec = root.db.service(service).unwrap();
+        assert_eq!(
+            rec.instance(first_instance).unwrap().state,
+            ServiceState::Terminated,
+            "original instance (was on {first_worker}) must be torn down"
+        );
+    }
+
+    // ⑤ Scale down to 1, then ⑥ undeploy everything.
+    tb.scale(service, None, 1, SimTime::from_secs(91.0));
+    tb.sim.run_until(SimTime::from_secs(110.0));
+    let ud = tb.undeploy(service, SimTime::from_secs(111.0));
+    tb.sim.run_until(SimTime::from_secs(130.0));
+    match tb.ack(ud) {
+        Some(ApiResponse::UndeployStarted { instances, .. }) => {
+            assert_eq!(*instances, 1, "exactly the surviving replica torn down")
+        }
+        other => panic!("undeploy ack missing: {other:?}"),
+    }
+    let st = tb.query_status(service, SimTime::from_secs(131.0));
+    tb.sim.run_until(SimTime::from_secs(132.0));
+    match tb.ack(st) {
+        Some(ApiResponse::Status(s)) => {
+            assert_eq!(s.live(), 0, "no live instances after undeploy");
+            assert!(!s.fully_running);
+        }
+        other => panic!("status ack missing: {other:?}"),
+    }
+    for c in 0..2 {
+        assert_eq!(cluster_used_cpu(&tb, c), 0, "cluster {c} fully drained");
+    }
+    for (_, engine) in &tb.workers {
+        assert_eq!(
+            tb.sim
+                .actor_as::<WorkerEngine>(*engine)
+                .unwrap()
+                .hosted_count(),
+            0
+        );
+    }
+
+    // ⑦ ListServices still reports the (terminated) service.
+    let ls = tb.list_services(SimTime::from_secs(133.0));
+    tb.sim.run_until(SimTime::from_secs(134.0));
+    match tb.ack(ls) {
+        Some(ApiResponse::Services(rows)) => {
+            assert_eq!(rows.len(), 1);
+            assert_eq!(rows[0].name, "lifecycle-app");
+            assert_eq!(rows[0].running_instances, 0);
+        }
+        other => panic!("list ack missing: {other:?}"),
+    }
+}
+
+#[test]
+fn api_structured_errors() {
+    let mut tb = build_oakestra(OakTestbedConfig::default());
+    tb.warm_up();
+
+    // Unknown service for every targeted operation.
+    let ghost = ServiceId(404);
+    let ops: Vec<u64> = vec![
+        tb.api(
+            ApiRequest::ScaleService {
+                service: ghost,
+                task: None,
+                replicas: 2,
+            },
+            SimTime::from_secs(13.0),
+        ),
+        tb.undeploy(ghost, SimTime::from_secs(13.1)),
+        tb.query_status(ghost, SimTime::from_secs(13.2)),
+    ];
+    // Replica bounds.
+    let sub = tb.submit(simple_sla("svc", 100, 32), SimTime::from_secs(14.0));
+    tb.sim.run_until(SimTime::from_secs(30.0));
+    let service = match tb.ack(sub) {
+        Some(ApiResponse::Submitted { service, .. }) => *service,
+        other => panic!("submit ack missing: {other:?}"),
+    };
+    let bad_replicas = tb.scale(service, None, 0, SimTime::from_secs(31.0));
+    let bad_task = tb.scale(service, Some(9), 2, SimTime::from_secs(31.1));
+    let bad_migrate = tb.api(
+        ApiRequest::MigrateInstance {
+            service,
+            instance: oakestra::util::InstanceId(999_999),
+        },
+        SimTime::from_secs(31.2),
+    );
+    // Unsupported version.
+    let mut env = tb
+        .sim
+        .actor_as_mut::<oakestra::api::ApiClient>(tb.client)
+        .unwrap()
+        .envelope(ApiRequest::ListServices, tb.client);
+    env.version = 99;
+    let vreq = env.request_id;
+    tb.sim.inject(
+        SimTime::from_secs(31.3),
+        tb.root,
+        SimMsg::Oak(oakestra::sim::OakMsg::ApiCall(Box::new(env))),
+    );
+    tb.sim.run_until(SimTime::from_secs(40.0));
+
+    for op in ops {
+        assert!(
+            matches!(
+                tb.ack(op),
+                Some(ApiResponse::Error(ApiError::UnknownService(s))) if *s == ghost
+            ),
+            "op {op}: {:?}",
+            tb.ack(op)
+        );
+    }
+    assert!(matches!(
+        tb.ack(bad_replicas),
+        Some(ApiResponse::Error(ApiError::InvalidReplicas { .. }))
+    ));
+    assert!(matches!(
+        tb.ack(bad_task),
+        Some(ApiResponse::Error(ApiError::UnknownTask(_)))
+    ));
+    assert!(matches!(
+        tb.ack(bad_migrate),
+        Some(ApiResponse::Error(ApiError::UnknownInstance(_)))
+    ));
+    assert!(matches!(
+        tb.ack(vreq),
+        Some(ApiResponse::Error(ApiError::UnsupportedVersion {
+            requested: 99,
+            ..
+        }))
+    ));
 }
 
 #[test]
