@@ -28,7 +28,7 @@
 //! revisions can coexist with v1 clients.
 
 use std::any::Any;
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 
 use crate::coordinator::{ServiceDb, ServiceRecord};
 use crate::model::ServiceState;
@@ -94,6 +94,9 @@ pub enum ApiError {
     /// SLA failed the root service manager's structural validation.
     InvalidSla(SlaError),
     UnknownService(ServiceId),
+    /// The service was undeployed: mutating operations (scale, migrate)
+    /// are refused so a teardown can never race back into growth.
+    ServiceRetired(ServiceId),
     UnknownTask(TaskId),
     UnknownInstance(InstanceId),
     /// Migration requires a Running instance.
@@ -114,6 +117,9 @@ impl std::fmt::Display for ApiError {
             } => write!(f, "unsupported API version {requested} (supported: {supported})"),
             ApiError::InvalidSla(e) => write!(f, "invalid SLA: {e}"),
             ApiError::UnknownService(s) => write!(f, "unknown service {s}"),
+            ApiError::ServiceRetired(s) => {
+                write!(f, "service {s} is undeployed (retired)")
+            }
             ApiError::UnknownTask(t) => write!(f, "unknown task {t}"),
             ApiError::UnknownInstance(i) => write!(f, "unknown instance {i}"),
             ApiError::NotRunning(i) => write!(f, "instance {i} is not running"),
@@ -296,7 +302,9 @@ pub struct ApiClient {
     /// thousands of requests; lookups must not scan the full history).
     by_request: HashMap<u64, Vec<usize>>,
     /// submit→fully-Running latency per service (Fig. 4a metric).
-    pub deployed: HashMap<ServiceId, SimTime>,
+    /// Ordered map: churn reports iterate it into emitted artifacts, and
+    /// that order must be seed-deterministic.
+    pub deployed: BTreeMap<ServiceId, SimTime>,
 }
 
 impl ApiClient {
@@ -315,6 +323,35 @@ impl ApiClient {
             request,
             reply_to: Some(reply_to),
         }
+    }
+
+    /// Batched issue: one envelope per request, ids minted contiguously.
+    /// Churn storms submit whole waves of lifecycle calls at one virtual
+    /// instant; building them in a batch keeps the id block contiguous so
+    /// completion tracking can reason about the wave as a unit.
+    pub fn envelopes(
+        &mut self,
+        requests: Vec<ApiRequest>,
+        reply_to: ActorId,
+    ) -> Vec<ApiEnvelope> {
+        requests
+            .into_iter()
+            .map(|r| self.envelope(r, reply_to))
+            .collect()
+    }
+
+    /// Number of request ids minted so far.
+    pub fn issued(&self) -> u64 {
+        self.next_id
+    }
+
+    /// Minted request ids that have not received any response yet. Empty
+    /// after a settled run: every v1 call is answered with at least a
+    /// synchronous ack, so leftovers indicate lost replies.
+    pub fn outstanding(&self) -> Vec<u64> {
+        (0..self.next_id)
+            .filter(|id| !self.by_request.contains_key(id))
+            .collect()
     }
 
     /// Record one response (the actor's receive path; also usable by
@@ -456,6 +493,34 @@ mod tests {
         assert!(matches!(c.ack(7), Some(ApiResponse::Submitted { .. })));
         assert_eq!(c.errors().len(), 1);
         assert!(c.ack(9).is_none());
+    }
+
+    #[test]
+    fn client_batches_and_tracks_completion() {
+        let mut c = ApiClient::new();
+        let envs = c.envelopes(
+            vec![
+                ApiRequest::ListServices,
+                ApiRequest::UndeployService {
+                    service: ServiceId(1),
+                },
+                ApiRequest::ListServices,
+            ],
+            ActorId(2),
+        );
+        assert_eq!(envs.len(), 3);
+        assert_eq!(
+            envs.iter().map(|e| e.request_id).collect::<Vec<_>>(),
+            vec![0, 1, 2],
+            "batch ids are contiguous"
+        );
+        assert_eq!(c.issued(), 3);
+        assert_eq!(c.outstanding(), vec![0, 1, 2]);
+        c.record(1, ApiResponse::Services(vec![]));
+        assert_eq!(c.outstanding(), vec![0, 2]);
+        c.record(0, ApiResponse::Services(vec![]));
+        c.record(2, ApiResponse::Services(vec![]));
+        assert!(c.outstanding().is_empty());
     }
 
     #[test]

@@ -1,0 +1,1224 @@
+//! Dynamic-workload churn engine: drives the northbound API v1 with the
+//! three storm generators the paper's "absorbs dynamic variations at the
+//! edge" claim needs but no static bench exercises (ROADMAP: API-driven
+//! dynamic workloads):
+//!
+//! 1. **Submit/undeploy churn** — a seeded arrival/departure process over
+//!    a catalog of Schema-1 SLAs (service lifetimes are exponential, like
+//!    the continuously redeployed smart-city services of
+//!    arXiv:2407.17314).
+//! 2. **Closed-loop autoscaler** — an actor that polls `ServiceStatus`,
+//!    tracks a seeded offered-load walk per service and issues
+//!    `ScaleService` against hysteresis thresholds.
+//! 3. **Failover drills** — `MigrateInstance` calls raced against
+//!    injected crash-stop worker failures (mobility-induced migration
+//!    pressure, arXiv:2110.07808).
+//!
+//! The engine measures what the steady-state benches cannot: lifecycle-op
+//! latency under churn (submit→Running, scale→converged, migrate→cutover,
+//! undeploy→drained — [`crate::metrics::lifecycle`]) and the control
+//! plane's per-op message/CPU cost. Everything is seed-deterministic: the
+//! same [`ChurnConfig`] yields an identical op log and an identical final
+//! placement census, which the integration tests assert.
+
+use std::any::Any;
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::api::{ApiClient, ApiError, ApiRequest, ApiResponse};
+use crate::coordinator::{ClusterOrchestrator, RootOrchestrator, SchedulerKind, WorkerEngine};
+use crate::metrics::{fmt_stat, lifecycle, Histogram, Table};
+use crate::model::ServiceState;
+use crate::sim::{Actor, ActorId, Ctx, OakMsg, SimMsg, TimerKind};
+use crate::sla::{simple_sla, ServiceSla};
+use crate::util::{InstanceId, NodeId, Rng, ServiceId, SimTime};
+
+use super::testbed::{build_oakestra, OakTestbed, OakTestbedConfig};
+
+/// Which storm generators run (they compose; `All` is the full mix).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum ChurnScenario {
+    /// Arrival/departure churn only.
+    Submit,
+    /// Fixed fleet + closed-loop autoscaler only.
+    Scale,
+    /// Fixed fleet + failover drills only.
+    Failover,
+    /// All three composed.
+    All,
+}
+
+impl ChurnScenario {
+    pub fn parse(s: &str) -> Option<ChurnScenario> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "submit" | "churn" => ChurnScenario::Submit,
+            "scale" | "autoscale" => ChurnScenario::Scale,
+            "failover" | "migrate" => ChurnScenario::Failover,
+            "all" => ChurnScenario::All,
+            _ => return None,
+        })
+    }
+    fn arrivals(self) -> bool {
+        matches!(self, ChurnScenario::Submit | ChurnScenario::All)
+    }
+    fn autoscale(self) -> bool {
+        matches!(self, ChurnScenario::Scale | ChurnScenario::All)
+    }
+    fn drills(self) -> bool {
+        matches!(self, ChurnScenario::Failover | ChurnScenario::All)
+    }
+}
+
+/// Knobs of the churn engine. Defaults describe a small storm that a
+/// 2×4 S-VM testbed absorbs; scale `duration_s`/`arrival_period_s` up
+/// for the real bench.
+#[derive(Clone, Debug)]
+pub struct ChurnConfig {
+    pub seed: u64,
+    pub scenario: ChurnScenario,
+    pub clusters: usize,
+    pub workers_per_cluster: usize,
+    pub scheduler: SchedulerKind,
+    /// Virtual seconds of active churn (after warm-up).
+    pub duration_s: f64,
+    /// Virtual seconds of settle time after the final undeploy wave.
+    pub settle_s: f64,
+    /// Driver tick period (arrivals/polls/decisions), virtual seconds.
+    pub tick_s: f64,
+    /// Mean service inter-arrival time (exponential), seconds.
+    pub arrival_period_s: f64,
+    /// Mean service lifetime (exponential), seconds.
+    pub mean_lifetime_s: f64,
+    /// Cap on concurrently live churn services.
+    pub max_live: usize,
+    /// Distinct Schema-1 SLA shapes in the catalog.
+    pub catalog: usize,
+    /// Fleet size for the fixed-fleet scenarios (Scale/Failover), and the
+    /// number of arrival-churn services the autoscaler adopts under All.
+    pub autoscaled: usize,
+    /// Autoscaler decision period, in ticks.
+    pub autoscale_every: u64,
+    /// Offered load consumed by one replica (abstract units).
+    pub load_per_replica: f64,
+    /// Per-tick std-dev of the offered-load random walk.
+    pub load_step: f64,
+    /// Hysteresis: scale up when load/replica exceeds `load_hi`…
+    pub load_hi: f64,
+    /// …and down only when it falls below `load_lo`.
+    pub load_lo: f64,
+    pub max_replicas: usize,
+    /// Failover drill period, in ticks.
+    pub drill_every: u64,
+    /// Max drills per run.
+    pub drills: usize,
+    /// Probability that a drill also crash-stops the hosting worker,
+    /// racing the migration against the failure.
+    pub fail_worker_chance: f64,
+    /// Abandon convergence watches after this long (an instance that
+    /// failed placement can legitimately never converge; the watch must
+    /// not pin its service forever).
+    pub watch_timeout_s: f64,
+}
+
+impl Default for ChurnConfig {
+    fn default() -> Self {
+        ChurnConfig {
+            seed: 42,
+            scenario: ChurnScenario::All,
+            clusters: 2,
+            workers_per_cluster: 4,
+            scheduler: SchedulerKind::RomBestFit,
+            duration_s: 180.0,
+            settle_s: 40.0,
+            tick_s: 1.0,
+            arrival_period_s: 4.0,
+            mean_lifetime_s: 45.0,
+            max_live: 20,
+            catalog: 6,
+            autoscaled: 3,
+            autoscale_every: 5,
+            load_per_replica: 1.0,
+            load_step: 0.45,
+            load_hi: 1.2,
+            load_lo: 0.6,
+            max_replicas: 5,
+            drill_every: 20,
+            drills: 3,
+            fail_worker_chance: 0.5,
+            watch_timeout_s: 30.0,
+        }
+    }
+}
+
+impl ChurnConfig {
+    /// A small fast storm for CI smoke runs and the integration tests.
+    pub fn quick(seed: u64) -> Self {
+        ChurnConfig {
+            seed,
+            duration_s: 90.0,
+            settle_s: 35.0,
+            arrival_period_s: 5.0,
+            mean_lifetime_s: 30.0,
+            max_live: 10,
+            drills: 2,
+            drill_every: 15,
+            ..ChurnConfig::default()
+        }
+    }
+}
+
+/// One SLA shape of the churn catalog: small footprints with varied
+/// cpu/mem and an occasional two-task service, all within an S VM.
+pub fn catalog_sla(i: usize) -> ServiceSla {
+    let cpu = 50 + 25 * (i % 4) as u32;
+    let mem = 24 + 16 * (i % 3) as u32;
+    let mut sla = simple_sla(&format!("churn-{i}"), cpu, mem);
+    if i % 3 == 2 {
+        sla.constraints.push(sla.constraints[0].clone());
+    }
+    sla
+}
+
+/// Driver-side view of one live service.
+#[derive(Clone, Debug)]
+struct LiveService {
+    catalog: usize,
+    autoscaled: bool,
+    /// Offered-load walk (autoscaled services only).
+    load: f64,
+}
+
+/// The churn driver actor: issues all northbound calls through an
+/// embedded [`ApiClient`] (batched issue + completion tracking) and keeps
+/// a deterministic op log.
+pub struct ChurnDriver {
+    cfg: ChurnConfig,
+    root: ActorId,
+    rng: Rng,
+    pub client: ApiClient,
+    /// Chronological, seed-deterministic log of every lifecycle decision
+    /// and observed completion.
+    pub ops: Vec<String>,
+    live: BTreeMap<ServiceId, LiveService>,
+    departures: BTreeMap<ServiceId, SimTime>,
+    pending_submit: BTreeMap<u64, (usize, SimTime)>,
+    scale_req: BTreeMap<u64, (ServiceId, usize, SimTime)>,
+    scale_watch: BTreeMap<ServiceId, (usize, SimTime)>,
+    migrate_req: BTreeMap<u64, (ServiceId, InstanceId, SimTime)>,
+    migrate_watch: BTreeMap<InstanceId, (ServiceId, SimTime)>,
+    undeploy_req: BTreeMap<u64, (ServiceId, SimTime)>,
+    undeploy_watch: BTreeMap<ServiceId, SimTime>,
+    /// service → running (instance, worker) pairs from the last status.
+    running_cache: BTreeMap<ServiceId, Vec<(InstanceId, NodeId)>>,
+    /// service → min per-task running count from the last status.
+    replica_cache: BTreeMap<ServiceId, usize>,
+    pub failed_workers: BTreeSet<NodeId>,
+    pub api_errors: BTreeMap<&'static str, u64>,
+    // Counters for the report.
+    pub submits: u64,
+    pub undeploys: u64,
+    pub scale_ups: u64,
+    pub scale_downs: u64,
+    pub migrations: u64,
+    pub drills_done: u64,
+    next_arrival: SimTime,
+    ticks: u64,
+    end: SimTime,
+    settle_end: SimTime,
+    started: bool,
+}
+
+impl ChurnDriver {
+    pub fn new(cfg: ChurnConfig, root: ActorId) -> Self {
+        for i in 0..cfg.catalog {
+            catalog_sla(i)
+                .validate()
+                .expect("churn catalog SLA must validate");
+        }
+        let rng = Rng::seeded(cfg.seed.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ 0xC0FFEE);
+        ChurnDriver {
+            cfg,
+            root,
+            rng,
+            client: ApiClient::new(),
+            ops: Vec::new(),
+            live: BTreeMap::new(),
+            departures: BTreeMap::new(),
+            pending_submit: BTreeMap::new(),
+            scale_req: BTreeMap::new(),
+            scale_watch: BTreeMap::new(),
+            migrate_req: BTreeMap::new(),
+            migrate_watch: BTreeMap::new(),
+            undeploy_req: BTreeMap::new(),
+            undeploy_watch: BTreeMap::new(),
+            running_cache: BTreeMap::new(),
+            replica_cache: BTreeMap::new(),
+            failed_workers: BTreeSet::new(),
+            api_errors: BTreeMap::new(),
+            submits: 0,
+            undeploys: 0,
+            scale_ups: 0,
+            scale_downs: 0,
+            migrations: 0,
+            drills_done: 0,
+            next_arrival: SimTime::ZERO,
+            ticks: 0,
+            end: SimTime::ZERO,
+            settle_end: SimTime::ZERO,
+            started: false,
+        }
+    }
+
+    fn log(&mut self, now: SimTime, line: String) {
+        self.ops.push(format!("t={:>10.3}ms {line}", now.as_millis()));
+    }
+
+    /// Issue one northbound call (same-node delivery to the root; ids and
+    /// responses tracked by the embedded [`ApiClient`]).
+    fn call(&mut self, ctx: &mut Ctx<'_>, request: ApiRequest) -> u64 {
+        let env = self.client.envelope(request, ctx.self_id);
+        let id = env.request_id;
+        ctx.send_local(self.root, SimMsg::Oak(OakMsg::ApiCall(Box::new(env))));
+        id
+    }
+
+    fn submit_from_catalog(&mut self, ctx: &mut Ctx<'_>, idx: usize) {
+        let sla = catalog_sla(idx);
+        let req = self.call(ctx, ApiRequest::SubmitService { sla });
+        self.pending_submit.insert(req, (idx, ctx.now));
+        self.submits += 1;
+        self.log(ctx.now, format!("submit catalog={idx} req={req}"));
+    }
+
+    fn undeploy_service(&mut self, ctx: &mut Ctx<'_>, service: ServiceId) {
+        let req = self.call(ctx, ApiRequest::UndeployService { service });
+        self.undeploy_req.insert(req, (service, ctx.now));
+        self.undeploys += 1;
+        self.live.remove(&service);
+        self.departures.remove(&service);
+        self.scale_watch.remove(&service);
+        // A migration of a doomed service can no longer cut over.
+        self.migrate_watch.retain(|_, (s, _)| *s != service);
+        self.log(ctx.now, format!("undeploy {service} req={req}"));
+    }
+
+    fn arrivals(&mut self, ctx: &mut Ctx<'_>) {
+        while ctx.now >= self.next_arrival {
+            let gap = self.rng.exponential(self.cfg.arrival_period_s);
+            self.next_arrival = self.next_arrival + SimTime::from_secs(gap.max(0.05));
+            if self.live.len() + self.pending_submit.len() >= self.cfg.max_live {
+                ctx.metrics().inc("churn.arrival_capped");
+                continue;
+            }
+            let idx = self.rng.below(self.cfg.catalog);
+            self.submit_from_catalog(ctx, idx);
+        }
+    }
+
+    fn departures_due(&mut self, ctx: &mut Ctx<'_>) {
+        let due: Vec<ServiceId> = self
+            .departures
+            .iter()
+            .filter(|(_, at)| **at <= ctx.now)
+            .map(|(s, _)| *s)
+            .collect();
+        for s in due {
+            self.undeploy_service(ctx, s);
+        }
+    }
+
+    fn autoscale(&mut self, ctx: &mut Ctx<'_>) {
+        let targets: Vec<ServiceId> = self
+            .live
+            .iter()
+            .filter(|(_, l)| l.autoscaled)
+            .map(|(s, _)| *s)
+            .collect();
+        for service in targets {
+            // Advance the offered-load walk for every autoscaled service
+            // (even while a scale is converging — load does not wait).
+            let (load, in_flight) = {
+                let l = self.live.get_mut(&service).unwrap();
+                let step = self.rng.normal(0.0, self.cfg.load_step);
+                let max_load = self.cfg.max_replicas as f64 * self.cfg.load_per_replica;
+                l.load = (l.load + step).clamp(0.3, max_load);
+                (l.load, self.scale_watch.contains_key(&service))
+            };
+            if in_flight || self.undeploy_watch.contains_key(&service) {
+                continue;
+            }
+            let Some(&replicas) = self.replica_cache.get(&service) else {
+                continue; // no status observed yet
+            };
+            if replicas == 0 {
+                continue;
+            }
+            let desired = ((load / self.cfg.load_per_replica).ceil() as usize)
+                .clamp(1, self.cfg.max_replicas);
+            let ratio = load / (replicas as f64 * self.cfg.load_per_replica);
+            let (scale, dir) = if ratio > self.cfg.load_hi && desired > replicas {
+                (true, "up")
+            } else if ratio < self.cfg.load_lo && desired < replicas {
+                (true, "down")
+            } else {
+                (false, "")
+            };
+            if scale {
+                let req = self.call(
+                    ctx,
+                    ApiRequest::ScaleService {
+                        service,
+                        task: None,
+                        replicas: desired,
+                    },
+                );
+                self.scale_req.insert(req, (service, desired, ctx.now));
+                if dir == "up" {
+                    self.scale_ups += 1;
+                } else {
+                    self.scale_downs += 1;
+                }
+                self.log(
+                    ctx.now,
+                    format!(
+                        "scale-{dir} {service} {replicas}->{desired} \
+                         load={load:.2} req={req}"
+                    ),
+                );
+            }
+        }
+    }
+
+    fn drill(&mut self, ctx: &mut Ctx<'_>) {
+        if self.drills_done >= self.cfg.drills as u64 {
+            return;
+        }
+        // Candidates: running instances of live services, excluding
+        // failed workers and anything already migrating. Autoscaled
+        // services are also excluded: a migration replacement is
+        // cluster-local (invisible to the root's replica count), so
+        // migrating an autoscaled service would make the autoscaler
+        // "restore" a replica that never left — over-provisioning the
+        // cluster (see ROADMAP: root-visible replacement tracking).
+        let candidates: Vec<(ServiceId, InstanceId, NodeId)> = self
+            .running_cache
+            .iter()
+            .filter(|(s, _)| self.live.get(s).map_or(false, |l| !l.autoscaled))
+            .flat_map(|(s, insts)| insts.iter().map(move |(i, n)| (*s, *i, *n)))
+            .filter(|(_, i, n)| {
+                !self.migrate_watch.contains_key(i) && !self.failed_workers.contains(n)
+            })
+            .collect();
+        if candidates.is_empty() {
+            return;
+        }
+        let (service, instance, node) = candidates[self.rng.below(candidates.len())];
+        let req = self.call(ctx, ApiRequest::MigrateInstance { service, instance });
+        self.migrate_req.insert(req, (service, instance, ctx.now));
+        self.migrations += 1;
+        self.drills_done += 1;
+        // Race the migration against a crash-stop of the source worker
+        // (never more than half the fleet).
+        let total_workers = self.cfg.clusters * self.cfg.workers_per_cluster;
+        let kill = self.rng.chance(self.cfg.fail_worker_chance)
+            && self.failed_workers.len() < total_workers / 2;
+        if kill {
+            ctx.core.set_failed(node, true);
+            self.failed_workers.insert(node);
+            ctx.metrics().inc("churn.worker_killed");
+        }
+        self.log(
+            ctx.now,
+            format!(
+                "drill migrate {service}/{instance} from {node} \
+                 kill_worker={kill} req={req}"
+            ),
+        );
+    }
+
+    fn poll(&mut self, ctx: &mut Ctx<'_>) {
+        let mut targets: BTreeSet<ServiceId> = BTreeSet::new();
+        targets.extend(self.scale_watch.keys().copied());
+        targets.extend(self.undeploy_watch.keys().copied());
+        targets.extend(self.migrate_watch.values().map(|(s, _)| *s));
+        targets.extend(
+            self.live
+                .iter()
+                .filter(|(_, l)| l.autoscaled)
+                .map(|(s, _)| *s),
+        );
+        if self.cfg.scenario.drills() && self.drills_done < self.cfg.drills as u64 {
+            // Drills pick victims from the status cache: keep it fresh
+            // for every live service — but only while drills remain, or
+            // the polling itself would inflate the control-plane cost
+            // this bench reports.
+            targets.extend(self.live.keys().copied());
+        }
+        for service in targets {
+            self.call(ctx, ApiRequest::ServiceStatus { service });
+        }
+    }
+
+    /// Abandon watches that outlived their timeout: an instance that
+    /// failed placement (or a drill racing an undeploy) may legitimately
+    /// never converge, and a stuck watch would pin its service out of the
+    /// autoscaler forever.
+    fn expire_watches(&mut self, ctx: &mut Ctx<'_>) {
+        let cutoff = SimTime::from_secs(self.cfg.watch_timeout_s);
+        let now = ctx.now;
+        let mut expired: Vec<String> = Vec::new();
+        self.scale_watch.retain(|s, (_, t0)| {
+            let keep = now.saturating_sub(*t0) < cutoff;
+            if !keep {
+                expired.push(format!("scale-watch-expired {s}"));
+            }
+            keep
+        });
+        self.migrate_watch.retain(|i, (s, t0)| {
+            let keep = now.saturating_sub(*t0) < cutoff;
+            if !keep {
+                expired.push(format!("migrate-watch-expired {s}/{i}"));
+            }
+            keep
+        });
+        self.undeploy_watch.retain(|s, t0| {
+            let keep = now.saturating_sub(*t0) < cutoff;
+            if !keep {
+                expired.push(format!("undeploy-watch-expired {s}"));
+            }
+            keep
+        });
+        for line in expired {
+            ctx.metrics().inc("churn.watch_expired");
+            self.log(now, line);
+        }
+    }
+
+    fn on_status(&mut self, ctx: &mut Ctx<'_>, s: &crate::api::ServiceStatusInfo) {
+        let service = s.service;
+        // Per-task running / live counts.
+        let mut running: BTreeMap<u16, usize> = BTreeMap::new();
+        let mut alive: BTreeMap<u16, usize> = BTreeMap::new();
+        for t in 0..s.tasks as u16 {
+            running.insert(t, 0);
+            alive.insert(t, 0);
+        }
+        let mut running_insts = Vec::new();
+        for i in &s.instances {
+            if i.state == ServiceState::Running {
+                *running.entry(i.task.index).or_insert(0) += 1;
+                if let Some(w) = i.worker {
+                    running_insts.push((i.instance, w));
+                }
+            }
+            if !i.state.is_terminal() {
+                *alive.entry(i.task.index).or_insert(0) += 1;
+            }
+        }
+        self.replica_cache
+            .insert(service, running.values().copied().min().unwrap_or(0));
+        self.running_cache.insert(service, running_insts);
+
+        // Scale convergence: every task at the target, all running.
+        if let Some(&(target, t0)) = self.scale_watch.get(&service) {
+            let converged = running.values().all(|&r| r == target)
+                && alive.values().all(|&a| a == target);
+            if converged {
+                self.scale_watch.remove(&service);
+                let ms = ctx.now.saturating_sub(t0).as_millis();
+                ctx.metrics().observe(lifecycle::SCALE_TO_CONVERGED_MS, ms);
+                self.log(
+                    ctx.now,
+                    format!("scale-converged {service} replicas={target}"),
+                );
+            }
+        }
+
+        // Migration cutover: the original instance reached a terminal
+        // state (replacement operational, old container gone).
+        let watched: Vec<InstanceId> = self
+            .migrate_watch
+            .iter()
+            .filter(|(_, (svc, _))| *svc == service)
+            .map(|(i, _)| *i)
+            .collect();
+        for iid in watched {
+            let Some(inst) = s.instances.iter().find(|i| i.instance == iid) else {
+                continue;
+            };
+            if inst.state.is_terminal() {
+                if let Some((_, t0)) = self.migrate_watch.remove(&iid) {
+                    let ms = ctx.now.saturating_sub(t0).as_millis();
+                    ctx.metrics().observe(lifecycle::MIGRATE_TO_CUTOVER_MS, ms);
+                    self.log(ctx.now, format!("migrate-cutover {service}/{iid}"));
+                }
+            }
+        }
+
+        // Undeploy drain: no live instances remain.
+        if let Some(&t0) = self.undeploy_watch.get(&service) {
+            if s.live() == 0 {
+                self.undeploy_watch.remove(&service);
+                let ms = ctx.now.saturating_sub(t0).as_millis();
+                ctx.metrics().observe(lifecycle::UNDEPLOY_TO_DRAINED_MS, ms);
+                self.log(ctx.now, format!("undeploy-drained {service}"));
+            }
+        }
+    }
+
+    fn error_kind(e: &ApiError) -> &'static str {
+        match e {
+            ApiError::UnsupportedVersion { .. } => "unsupported_version",
+            ApiError::InvalidSla(_) => "invalid_sla",
+            ApiError::UnknownService(_) => "unknown_service",
+            ApiError::ServiceRetired(_) => "service_retired",
+            ApiError::UnknownTask(_) => "unknown_task",
+            ApiError::UnknownInstance(_) => "unknown_instance",
+            ApiError::NotRunning(_) => "not_running",
+            ApiError::InvalidReplicas { .. } => "invalid_replicas",
+            ApiError::NoFeasiblePlacement { .. } => "no_feasible_placement",
+        }
+    }
+
+    fn on_return(&mut self, ctx: &mut Ctx<'_>, request_id: u64, response: ApiResponse) {
+        match &response {
+            ApiResponse::Status(s) => {
+                self.on_status(ctx, s);
+            }
+            ApiResponse::Submitted { service, .. } => {
+                if let Some((catalog, _t0)) = self.pending_submit.remove(&request_id) {
+                    let autoscaled = self.cfg.scenario.autoscale()
+                        && self
+                            .live
+                            .values()
+                            .filter(|l| l.autoscaled)
+                            .count()
+                            < self.cfg.autoscaled;
+                    self.live.insert(
+                        *service,
+                        LiveService {
+                            catalog,
+                            autoscaled,
+                            load: 1.0,
+                        },
+                    );
+                    if self.cfg.scenario.arrivals() && !self.is_fixed_fleet() {
+                        let life = self.rng.exponential(self.cfg.mean_lifetime_s);
+                        self.departures.insert(
+                            *service,
+                            ctx.now + SimTime::from_secs(life.max(2.0)),
+                        );
+                    }
+                    self.log(
+                        ctx.now,
+                        format!(
+                            "submitted {service} catalog={catalog} \
+                             autoscaled={autoscaled} req={request_id}"
+                        ),
+                    );
+                    if ctx.now >= self.end {
+                        // Acked after the final wave: tear it down too.
+                        self.undeploy_service(ctx, *service);
+                    }
+                }
+            }
+            ApiResponse::ScaleStarted {
+                service,
+                added,
+                removed,
+            } => {
+                if let Some((svc, target, t0)) = self.scale_req.remove(&request_id) {
+                    debug_assert_eq!(svc, *service);
+                    self.scale_watch.insert(svc, (target, t0));
+                    self.log(
+                        ctx.now,
+                        format!(
+                            "scale-started {service} +{} -{} req={request_id}",
+                            added.len(),
+                            removed.len()
+                        ),
+                    );
+                }
+            }
+            ApiResponse::MigrationStarted { instance } => {
+                if let Some((svc, iid, t0)) = self.migrate_req.remove(&request_id) {
+                    debug_assert_eq!(iid, *instance);
+                    self.migrate_watch.insert(iid, (svc, t0));
+                    self.log(
+                        ctx.now,
+                        format!("migration-started {svc}/{iid} req={request_id}"),
+                    );
+                }
+            }
+            ApiResponse::UndeployStarted { service, instances } => {
+                if let Some((svc, t0)) = self.undeploy_req.remove(&request_id) {
+                    debug_assert_eq!(svc, *service);
+                    self.undeploy_watch.insert(svc, t0);
+                    self.log(
+                        ctx.now,
+                        format!(
+                            "undeploy-started {service} live={instances} \
+                             req={request_id}"
+                        ),
+                    );
+                }
+            }
+            ApiResponse::Error(e) => {
+                let kind = Self::error_kind(e);
+                *self.api_errors.entry(kind).or_insert(0) += 1;
+                // Clear any op bookkeeping tied to the failed request so
+                // watches are only ever created from success acks.
+                self.pending_submit.remove(&request_id);
+                self.scale_req.remove(&request_id);
+                self.migrate_req.remove(&request_id);
+                self.undeploy_req.remove(&request_id);
+                self.log(ctx.now, format!("api-error {kind} req={request_id}"));
+            }
+            _ => {}
+        }
+        self.client.record(request_id, response);
+    }
+
+    fn is_fixed_fleet(&self) -> bool {
+        matches!(
+            self.cfg.scenario,
+            ChurnScenario::Scale | ChurnScenario::Failover
+        )
+    }
+
+    fn tick(&mut self, ctx: &mut Ctx<'_>) {
+        self.ticks += 1;
+        let churning = ctx.now < self.end;
+        if churning {
+            if self.cfg.scenario.arrivals() {
+                self.arrivals(ctx);
+                self.departures_due(ctx);
+            }
+            if self.cfg.scenario.autoscale() && self.ticks % self.cfg.autoscale_every == 0
+            {
+                self.autoscale(ctx);
+            }
+            if self.cfg.scenario.drills() && self.ticks % self.cfg.drill_every == 0 {
+                self.drill(ctx);
+            }
+        } else if !self.live.is_empty() {
+            // Final wave: drain everything that is still live.
+            let remaining: Vec<ServiceId> = self.live.keys().copied().collect();
+            self.log(ctx.now, format!("final-drain services={}", remaining.len()));
+            for s in remaining {
+                self.undeploy_service(ctx, s);
+            }
+        }
+        self.expire_watches(ctx);
+        self.poll(ctx);
+        if ctx.now < self.settle_end {
+            ctx.schedule(
+                SimTime::from_secs(self.cfg.tick_s),
+                SimMsg::Timer(TimerKind::Custom(1)),
+            );
+        }
+    }
+}
+
+impl Actor for ChurnDriver {
+    fn handle(&mut self, ctx: &mut Ctx<'_>, msg: SimMsg) {
+        match msg {
+            SimMsg::Timer(TimerKind::Custom(0)) => {
+                if self.started {
+                    return;
+                }
+                self.started = true;
+                self.end = ctx.now + SimTime::from_secs(self.cfg.duration_s);
+                self.settle_end = self.end + SimTime::from_secs(self.cfg.settle_s);
+                self.next_arrival = ctx.now;
+                self.log(
+                    ctx.now,
+                    format!(
+                        "churn-start scenario={:?} seed={}",
+                        self.cfg.scenario, self.cfg.seed
+                    ),
+                );
+                if self.is_fixed_fleet() {
+                    for i in 0..self.cfg.autoscaled {
+                        let idx = i % self.cfg.catalog;
+                        self.submit_from_catalog(ctx, idx);
+                    }
+                }
+                self.tick(ctx);
+            }
+            SimMsg::Timer(TimerKind::Custom(1)) => {
+                self.tick(ctx);
+            }
+            SimMsg::Oak(OakMsg::ApiReturn {
+                request_id,
+                response,
+            }) => {
+                self.on_return(ctx, request_id, *response);
+            }
+            SimMsg::Oak(OakMsg::ServiceDeployed { service, elapsed }) => {
+                ctx.metrics()
+                    .observe(lifecycle::SUBMIT_TO_RUNNING_MS, elapsed.as_millis());
+                self.client.deployed.insert(service, elapsed);
+                self.log(
+                    ctx.now,
+                    format!("deployed {service} after {:.1}ms", elapsed.as_millis()),
+                );
+            }
+            _ => {}
+        }
+    }
+    fn as_any(&self) -> &dyn Any {
+        self
+    }
+    fn as_any_mut(&mut self) -> &mut dyn Any {
+        self
+    }
+}
+
+/// Latency summary of one lifecycle-op histogram.
+#[derive(Clone, Debug, Default)]
+pub struct OpStats {
+    pub count: usize,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+}
+
+impl OpStats {
+    fn from(h: Option<&Histogram>) -> OpStats {
+        match h {
+            Some(h) => OpStats {
+                count: h.count(),
+                p50_ms: h.p50(),
+                p95_ms: h.p95(),
+            },
+            None => OpStats::default(),
+        }
+    }
+}
+
+/// Everything `oakestra churn` emits: latency + cost under churn, the
+/// deterministic op log and the final placement census (the determinism
+/// and leak assertions of the integration suite run on these).
+#[derive(Clone, Debug)]
+pub struct ChurnReport {
+    pub seed: u64,
+    pub scenario: String,
+    pub duration_s: f64,
+    pub ops_issued: u64,
+    pub unanswered_requests: usize,
+    pub submits: u64,
+    pub undeploys: u64,
+    pub scale_ups: u64,
+    pub scale_downs: u64,
+    pub migrations: u64,
+    pub workers_killed: usize,
+    pub submit: OpStats,
+    pub scale: OpStats,
+    pub migrate: OpStats,
+    pub undeploy: OpStats,
+    pub api_errors: BTreeMap<String, u64>,
+    /// Oakestra control-plane messages/bytes during the churn window.
+    pub ctrl_msgs: u64,
+    pub ctrl_bytes: u64,
+    /// Messages per lifecycle mutation (submit+scale+migrate+undeploy).
+    pub msgs_per_op: f64,
+    /// Root-node control-plane CPU over the window, ms, and per mutation.
+    pub root_cpu_ms: f64,
+    pub root_cpu_ms_per_op: f64,
+    /// Mean cluster-orchestrator-node CPU over the window, ms.
+    pub cluster_cpu_ms_mean: f64,
+    /// Cluster scheduler invocations and their mean cost.
+    pub sched_runs: usize,
+    pub sched_ms_mean: f64,
+    pub leaked_instances: usize,
+    pub leaked_capacity_mc: u64,
+    pub op_log: Vec<String>,
+    pub census: Vec<String>,
+}
+
+/// Sorted snapshot of every instance the control plane still knows about,
+/// across all three tiers. Two same-seed runs must produce identical
+/// censuses; after a full drain it must contain no live rows.
+pub fn placement_census(tb: &OakTestbed) -> Vec<String> {
+    let mut out = Vec::new();
+    let root = tb
+        .sim
+        .actor_as::<RootOrchestrator>(tb.root)
+        .expect("root actor");
+    for rec in root.db.services() {
+        for i in &rec.instances {
+            out.push(format!(
+                "root {} {} task{} {:?} worker={} gen={}",
+                rec.spec.id,
+                i.instance,
+                i.task.index,
+                i.state,
+                i.worker.map(|w| w.to_string()).unwrap_or_else(|| "-".into()),
+                i.generation
+            ));
+        }
+    }
+    for (cnode, orch) in &tb.clusters {
+        let c = tb
+            .sim
+            .actor_as::<ClusterOrchestrator>(*orch)
+            .expect("cluster actor");
+        for (iid, task, node, state) in c.live_instances() {
+            out.push(format!(
+                "cluster@{cnode} {} {} on {} {:?}",
+                task.service, iid, node, state
+            ));
+        }
+        let r = c.reserved();
+        out.push(format!(
+            "cluster@{cnode} reserved cpu={} mem={}",
+            r.cpu_millicores, r.mem_mb
+        ));
+    }
+    for (wnode, engine) in &tb.workers {
+        let w = tb
+            .sim
+            .actor_as::<WorkerEngine>(*engine)
+            .expect("worker actor");
+        let ids: Vec<String> = w.hosted_ids().iter().map(|i| i.to_string()).collect();
+        out.push(format!(
+            "worker {wnode} hosted=[{}] used_cpu={}",
+            ids.join(","),
+            w.used.cpu_millicores
+        ));
+    }
+    out
+}
+
+/// Count leaked instances / reserved capacity after a full drain: live
+/// root records, cluster records, cluster reservations and containers
+/// hosted by live (non-failed) workers all must be gone.
+pub fn count_leaks(tb: &OakTestbed, failed: &BTreeSet<NodeId>) -> (usize, u64) {
+    let mut instances = 0usize;
+    let mut capacity_mc = 0u64;
+    let root = tb
+        .sim
+        .actor_as::<RootOrchestrator>(tb.root)
+        .expect("root actor");
+    for rec in root.db.services() {
+        instances += rec
+            .instances
+            .iter()
+            .filter(|i| !i.state.is_terminal())
+            .count();
+    }
+    for (_, orch) in &tb.clusters {
+        let c = tb
+            .sim
+            .actor_as::<ClusterOrchestrator>(*orch)
+            .expect("cluster actor");
+        instances += c.live_instances().len();
+        capacity_mc += c.reserved().cpu_millicores as u64;
+    }
+    for (wnode, engine) in &tb.workers {
+        if failed.contains(wnode) {
+            continue; // crashed hardware: its containers died with it
+        }
+        let w = tb
+            .sim
+            .actor_as::<WorkerEngine>(*engine)
+            .expect("worker actor");
+        instances += w.hosted_count();
+        capacity_mc += w.used.cpu_millicores as u64;
+    }
+    (instances, capacity_mc)
+}
+
+/// Build the testbed, run the configured churn storm to completion and
+/// collect the report. Fully deterministic in `cfg.seed`.
+pub fn run_churn(cfg: &ChurnConfig) -> ChurnReport {
+    let mut tb = build_oakestra(OakTestbedConfig {
+        seed: cfg.seed,
+        clusters: cfg.clusters,
+        workers_per_cluster: cfg.workers_per_cluster,
+        scheduler: cfg.scheduler,
+        ..OakTestbedConfig::default()
+    });
+    tb.warm_up();
+
+    let oak_labels = [
+        crate::messaging::labels::WORKER_TO_CLUSTER,
+        crate::messaging::labels::CLUSTER_TO_WORKER,
+        crate::messaging::labels::CLUSTER_TO_ROOT,
+        crate::messaging::labels::ROOT_TO_CLUSTER,
+    ];
+    let msgs0: u64 = oak_labels.iter().map(|l| tb.sim.core.metrics.msgs(l)).sum();
+    let bytes0: u64 = oak_labels
+        .iter()
+        .map(|l| tb.sim.core.metrics.bytes(l))
+        .sum();
+
+    let start = tb.sim.now() + SimTime::from_secs(1.0);
+    let driver_id = tb
+        .sim
+        .add_actor(tb.root_node, Box::new(ChurnDriver::new(cfg.clone(), tb.root)));
+    tb.sim
+        .inject(start, driver_id, SimMsg::Timer(TimerKind::Custom(0)));
+    let horizon = start + SimTime::from_secs(cfg.duration_s + cfg.settle_s + 5.0);
+    tb.sim.run_until(horizon);
+
+    let msgs1: u64 = oak_labels.iter().map(|l| tb.sim.core.metrics.msgs(l)).sum();
+    let bytes1: u64 = oak_labels
+        .iter()
+        .map(|l| tb.sim.core.metrics.bytes(l))
+        .sum();
+
+    let m = &tb.sim.core.metrics;
+    let elapsed_ms = horizon.saturating_sub(start).as_millis();
+    let root_cpu_ms = m
+        .usage(tb.root_node)
+        .map(|u| u.cpu_util(start, horizon) * elapsed_ms)
+        .unwrap_or(0.0);
+    let cluster_cpu: Vec<f64> = tb
+        .clusters
+        .iter()
+        .map(|(n, _)| {
+            m.usage(*n)
+                .map(|u| u.cpu_util(start, horizon) * elapsed_ms)
+                .unwrap_or(0.0)
+        })
+        .collect();
+
+    let submit = OpStats::from(m.histogram(lifecycle::SUBMIT_TO_RUNNING_MS));
+    let scale = OpStats::from(m.histogram(lifecycle::SCALE_TO_CONVERGED_MS));
+    let migrate = OpStats::from(m.histogram(lifecycle::MIGRATE_TO_CUTOVER_MS));
+    let undeploy = OpStats::from(m.histogram(lifecycle::UNDEPLOY_TO_DRAINED_MS));
+    let sched = m.histogram("cluster.sched_ms");
+    let (sched_runs, sched_ms_mean) = sched
+        .map(|h| (h.count(), h.mean()))
+        .unwrap_or((0, 0.0));
+
+    let d = tb
+        .sim
+        .actor_as::<ChurnDriver>(driver_id)
+        .expect("churn driver actor");
+    let mutations =
+        (d.submits + d.scale_ups + d.scale_downs + d.migrations + d.undeploys).max(1);
+    let (leaked_instances, leaked_capacity_mc) = count_leaks(&tb, &d.failed_workers);
+
+    ChurnReport {
+        seed: cfg.seed,
+        scenario: format!("{:?}", cfg.scenario).to_ascii_lowercase(),
+        duration_s: cfg.duration_s,
+        ops_issued: d.client.issued(),
+        unanswered_requests: d.client.outstanding().len(),
+        submits: d.submits,
+        undeploys: d.undeploys,
+        scale_ups: d.scale_ups,
+        scale_downs: d.scale_downs,
+        migrations: d.migrations,
+        workers_killed: d.failed_workers.len(),
+        submit,
+        scale,
+        migrate,
+        undeploy,
+        api_errors: d
+            .api_errors
+            .iter()
+            .map(|(k, v)| (k.to_string(), *v))
+            .collect(),
+        ctrl_msgs: msgs1 - msgs0,
+        ctrl_bytes: bytes1 - bytes0,
+        msgs_per_op: (msgs1 - msgs0) as f64 / mutations as f64,
+        root_cpu_ms,
+        root_cpu_ms_per_op: root_cpu_ms / mutations as f64,
+        cluster_cpu_ms_mean: crate::util::mean(&cluster_cpu),
+        sched_runs,
+        sched_ms_mean,
+        leaked_instances,
+        leaked_capacity_mc,
+        op_log: d.ops.clone(),
+        census: placement_census(&tb),
+    }
+}
+
+fn json_escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+impl ChurnReport {
+    /// Render as the `BENCH_churn.json` artifact (hand-rolled — the
+    /// offline crate set has no serde).
+    pub fn to_json(&self) -> String {
+        let stats = |s: &OpStats| {
+            format!(
+                "{{\"count\": {}, \"p50_ms\": {:.3}, \"p95_ms\": {:.3}}}",
+                s.count, s.p50_ms, s.p95_ms
+            )
+        };
+        let errors: Vec<String> = self
+            .api_errors
+            .iter()
+            .map(|(k, v)| format!("\"{}\": {v}", json_escape(k)))
+            .collect();
+        let strings = |xs: &[String]| {
+            let rows: Vec<String> = xs
+                .iter()
+                .map(|l| format!("    \"{}\"", json_escape(l)))
+                .collect();
+            if rows.is_empty() {
+                "[]".to_string()
+            } else {
+                format!("[\n{}\n  ]", rows.join(",\n"))
+            }
+        };
+        format!(
+            "{{\n  \"bench\": \"churn\",\n  \"seed\": {},\n  \"scenario\": \"{}\",\n  \
+             \"duration_s\": {},\n  \"ops_issued\": {},\n  \"unanswered_requests\": {},\n  \
+             \"counts\": {{\"submit\": {}, \"undeploy\": {}, \"scale_up\": {}, \
+             \"scale_down\": {}, \"migrate\": {}, \"workers_killed\": {}}},\n  \
+             \"latency_ms\": {{\n    \"submit_to_running\": {},\n    \
+             \"scale_to_converged\": {},\n    \"migrate_to_cutover\": {},\n    \
+             \"undeploy_to_drained\": {}\n  }},\n  \
+             \"control_plane\": {{\"msgs\": {}, \"bytes\": {}, \"msgs_per_op\": {:.2}, \
+             \"root_cpu_ms\": {:.1}, \"root_cpu_ms_per_op\": {:.3}, \
+             \"cluster_cpu_ms_mean\": {:.1}, \"sched_runs\": {}, \
+             \"sched_ms_mean\": {:.3}}},\n  \
+             \"api_errors\": {{{}}},\n  \
+             \"leaks\": {{\"instances\": {}, \"capacity_mc\": {}}},\n  \
+             \"op_log\": {},\n  \"census\": {}\n}}\n",
+            self.seed,
+            self.scenario,
+            self.duration_s,
+            self.ops_issued,
+            self.unanswered_requests,
+            self.submits,
+            self.undeploys,
+            self.scale_ups,
+            self.scale_downs,
+            self.migrations,
+            self.workers_killed,
+            stats(&self.submit),
+            stats(&self.scale),
+            stats(&self.migrate),
+            stats(&self.undeploy),
+            self.ctrl_msgs,
+            self.ctrl_bytes,
+            self.msgs_per_op,
+            self.root_cpu_ms,
+            self.root_cpu_ms_per_op,
+            self.cluster_cpu_ms_mean,
+            self.sched_runs,
+            self.sched_ms_mean,
+            errors.join(", "),
+            self.leaked_instances,
+            self.leaked_capacity_mc,
+            strings(&self.op_log),
+            strings(&self.census),
+        )
+    }
+
+    /// Human-readable tables for the CLI. Empty histograms render as
+    /// `n/a`, never as NaN or a misleading 0.0.
+    pub fn tables(&self) -> Vec<Table> {
+        let mut lat = Table::new(
+            "Churn — lifecycle-op latency (ms)",
+            &["op", "count", "p50", "p95"],
+        );
+        for (name, s) in [
+            ("submit->running", &self.submit),
+            ("scale->converged", &self.scale),
+            ("migrate->cutover", &self.migrate),
+            ("undeploy->drained", &self.undeploy),
+        ] {
+            lat.row(vec![
+                name.to_string(),
+                s.count.to_string(),
+                fmt_stat(s.count, s.p50_ms),
+                fmt_stat(s.count, s.p95_ms),
+            ]);
+        }
+        let mut cost = Table::new(
+            "Churn — control-plane cost",
+            &["metric", "value"],
+        );
+        cost.row(vec!["ops_issued".into(), self.ops_issued.to_string()]);
+        cost.row(vec![
+            "mutations".into(),
+            (self.submits + self.scale_ups + self.scale_downs + self.migrations
+                + self.undeploys)
+                .to_string(),
+        ]);
+        cost.row(vec!["ctrl_msgs".into(), self.ctrl_msgs.to_string()]);
+        cost.row(vec!["msgs_per_op".into(), format!("{:.2}", self.msgs_per_op)]);
+        cost.row(vec![
+            "root_cpu_ms_per_op".into(),
+            format!("{:.3}", self.root_cpu_ms_per_op),
+        ]);
+        cost.row(vec![
+            "cluster_cpu_ms_mean".into(),
+            format!("{:.1}", self.cluster_cpu_ms_mean),
+        ]);
+        cost.row(vec![
+            "sched_runs".into(),
+            self.sched_runs.to_string(),
+        ]);
+        cost.row(vec![
+            "workers_killed".into(),
+            self.workers_killed.to_string(),
+        ]);
+        cost.row(vec![
+            "leaked_instances".into(),
+            self.leaked_instances.to_string(),
+        ]);
+        cost.row(vec![
+            "leaked_capacity_mc".into(),
+            self.leaked_capacity_mc.to_string(),
+        ]);
+        vec![lat, cost]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn catalog_slas_validate() {
+        for i in 0..12 {
+            let sla = catalog_sla(i);
+            sla.validate().unwrap();
+            assert!(sla.constraints[0].vcpus_millicores <= 150);
+        }
+        // Every third shape is a two-task service.
+        assert_eq!(catalog_sla(2).constraints.len(), 2);
+        assert_eq!(catalog_sla(0).constraints.len(), 1);
+    }
+
+    #[test]
+    fn scenario_parsing_and_composition() {
+        assert_eq!(ChurnScenario::parse("all"), Some(ChurnScenario::All));
+        assert_eq!(ChurnScenario::parse("SCALE"), Some(ChurnScenario::Scale));
+        assert_eq!(ChurnScenario::parse("bogus"), None);
+        assert!(ChurnScenario::All.arrivals());
+        assert!(ChurnScenario::All.autoscale());
+        assert!(ChurnScenario::All.drills());
+        assert!(!ChurnScenario::Submit.drills());
+        assert!(!ChurnScenario::Failover.autoscale());
+    }
+
+    #[test]
+    fn report_json_is_parseable() {
+        let cfg = ChurnConfig {
+            duration_s: 30.0,
+            settle_s: 25.0,
+            scenario: ChurnScenario::Submit,
+            arrival_period_s: 4.0,
+            mean_lifetime_s: 15.0,
+            clusters: 1,
+            workers_per_cluster: 4,
+            ..ChurnConfig::default()
+        };
+        let report = run_churn(&cfg);
+        assert!(report.submits > 0, "arrival process must submit services");
+        let v = crate::json::parse(&report.to_json()).expect("emitted JSON parses");
+        assert_eq!(v.get("bench").as_str(), Some("churn"));
+        assert_eq!(v.get("seed").as_u64(), Some(cfg.seed));
+        assert!(v.get("latency_ms").get("submit_to_running").get("count").as_u64()
+            .is_some());
+    }
+}

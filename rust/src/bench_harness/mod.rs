@@ -4,6 +4,7 @@
 //! whose rows mirror the series the paper plots; EXPERIMENTS.md records
 //! paper-vs-measured per figure.
 
+pub mod churn;
 mod deploy;
 mod net;
 mod overhead;
@@ -11,6 +12,9 @@ mod sched;
 mod testbed;
 mod video;
 
+pub use churn::{
+    run_churn, ChurnConfig, ChurnDriver, ChurnReport, ChurnScenario,
+};
 pub use deploy::{fig4a_deploy_time, fig5_network_degradation};
 pub use net::{fig9_left_closest_rtt, fig9_right_tunnel_transfer};
 pub use overhead::{fig4bc_idle_overhead, fig7a_control_messages, fig7b_stress};

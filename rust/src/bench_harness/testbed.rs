@@ -221,6 +221,29 @@ impl OakTestbed {
         id
     }
 
+    /// Batched issue: inject a whole wave of API calls at one virtual
+    /// instant (churn storms). Returns the request ids in issue order.
+    pub fn api_batch(&mut self, requests: Vec<ApiRequest>, at: SimTime) -> Vec<u64> {
+        let client = self.client;
+        let envs = self
+            .sim
+            .actor_as_mut::<ApiClient>(client)
+            .expect("testbed client is an ApiClient")
+            .envelopes(requests, client);
+        let ids: Vec<u64> = envs.iter().map(|e| e.request_id).collect();
+        for env in envs {
+            self.sim
+                .inject(at, self.root, SimMsg::Oak(OakMsg::ApiCall(Box::new(env))));
+        }
+        ids
+    }
+
+    /// Fault injection: crash-stop one worker node (messages to/from it
+    /// are dropped until the cluster's health sweep deregisters it).
+    pub fn fail_worker(&mut self, node: NodeId) {
+        self.sim.set_node_failed(node, true);
+    }
+
     /// Submit an SLA through the northbound API; deployment completion
     /// lands on the client ([`ApiClient::deployed`]).
     pub fn submit(&mut self, sla: crate::sla::ServiceSla, at: SimTime) -> u64 {

@@ -18,7 +18,7 @@ use crate::scheduler::{
 };
 use crate::sim::{Actor, ActorId, Ctx, OakMsg, SimMsg, TimerKind};
 use crate::sla::TaskSla;
-use crate::util::{ClusterId, InstanceId, NodeId, SimTime, TaskId};
+use crate::util::{ClusterId, InstanceId, NodeId, ServiceId, SimTime, TaskId};
 use crate::vivaldi::Coord;
 
 use super::{costs, intervals, mem};
@@ -91,6 +91,18 @@ pub struct ClusterOrchestrator {
     /// paper §6: "the previous instance is undeployed" after the migrated
     /// one becomes operational).
     migrations: BTreeMap<InstanceId, InstanceId>,
+    /// Monotonic mint for locally-created replacement instances
+    /// (migration and recovery). A counter — not `original | tag` — so a
+    /// replacement that itself fails or migrates again gets a *fresh* id
+    /// instead of colliding with a live record.
+    next_local: u64,
+    /// Instance ids undeployed before any record existed: the root's
+    /// undeploy raced the in-flight `DelegateTask`, which must be dropped
+    /// on arrival instead of deploying an instance nobody tracks.
+    undeploy_tombstones: BTreeSet<InstanceId>,
+    /// Services the root has torn down (`UndeployService` seen). Late
+    /// delegations, recoveries and migrations for them are refused.
+    dead_services: BTreeSet<ServiceId>,
     /// Last scheduler wall time (reported to root for Fig. 6/8).
     pub last_calc: SimTime,
     pub sched_ops: u64,
@@ -98,6 +110,15 @@ pub struct ClusterOrchestrator {
     registered: bool,
     started: bool,
 }
+
+/// Locally-minted replacement ids: bit 63 tags failure recoveries, bit 62
+/// migration replacements; the cluster id sits at bits 48..56 and the
+/// low bits hold `LOCAL_MINT_BASE + counter`. The base keeps the low
+/// 32 bits (used by the worker's deploy-ack timer codes) disjoint from
+/// root-minted ids, which count up from zero.
+const RECOVERY_TAG: u64 = 1 << 63;
+const MIGRATION_TAG: u64 = 1 << 62;
+const LOCAL_MINT_BASE: u64 = 1 << 30;
 
 impl ClusterOrchestrator {
     pub fn new(cfg: ClusterConfig, root: ActorId) -> Self {
@@ -113,6 +134,9 @@ impl ClusterOrchestrator {
             ldp_ctx: LdpContext::default(),
             interest: BTreeMap::new(),
             migrations: BTreeMap::new(),
+            next_local: 0,
+            undeploy_tombstones: BTreeSet::new(),
+            dead_services: BTreeSet::new(),
             last_calc: SimTime::ZERO,
             sched_ops: 0,
             aggregate_ticks: 0,
@@ -155,6 +179,70 @@ impl ClusterOrchestrator {
     }
     fn profile(&self, node: NodeId) -> Option<&NodeProfile> {
         self.workers.iter().find(|w| w.spec.node == node)
+    }
+
+    /// Live (non-terminal) instance records this cluster tracks, sorted by
+    /// id — the census/leak-check view used by the churn harness. After a
+    /// full drain this must be empty.
+    pub fn live_instances(&self) -> Vec<(InstanceId, TaskId, NodeId, ServiceState)> {
+        self.instances
+            .iter()
+            .filter(|(_, li)| !li.state.is_terminal())
+            .map(|(iid, li)| (*iid, li.task, li.node, li.state))
+            .collect()
+    }
+
+    /// Total capacity currently reserved across this cluster's worker
+    /// profiles. After a full drain this must be zero.
+    pub fn reserved(&self) -> Capacity {
+        self.workers
+            .iter()
+            .fold(Capacity::ZERO, |acc, w| acc + w.used)
+    }
+
+    /// Mint a fresh locally-unique instance id (see the tag constants).
+    fn mint_local(&mut self, tag: u64) -> InstanceId {
+        self.next_local += 1;
+        InstanceId(
+            tag | ((self.cfg.id.0 as u64 & 0xFF) << 48)
+                | (LOCAL_MINT_BASE + self.next_local),
+        )
+    }
+
+    /// Locally finalize one instance into a terminal state: push the
+    /// authoritative (empty) table rows, notify the root, drop the record
+    /// and release the reserved capacity — exactly once. Used when the
+    /// hosting worker can no longer ack the teardown (dead or
+    /// deregistered): the control plane must not wait forever for a
+    /// confirmation that cannot arrive, or the record and its reserved
+    /// capacity leak.
+    fn finalize_instance(
+        &mut self,
+        ctx: &mut Ctx<'_>,
+        instance: InstanceId,
+        state: ServiceState,
+    ) {
+        let Some(li) = self.instances.get_mut(&instance) else {
+            return;
+        };
+        li.state = state;
+        let (task, node) = (li.task, li.node);
+        self.refresh_ldp_target(task);
+        self.push_table_update(ctx, task);
+        let msg = SimMsg::Oak(OakMsg::InstanceStatus {
+            instance,
+            node,
+            state,
+        });
+        let bytes = msg.default_wire_bytes() + WS_FRAME_OVERHEAD;
+        ctx.send(self.root, msg, bytes, labels::CLUSTER_TO_ROOT);
+        if let Some(li) = self.instances.remove(&instance) {
+            if let Some(p) = self.profile_mut(li.node) {
+                p.used -= li.request;
+                p.instances = p.instances.saturating_sub(1);
+            }
+            ctx.add_mem(-mem::PER_INSTANCE_MB);
+        }
     }
 
     /// Run the configured placement plugin over the live worker table.
@@ -213,6 +301,8 @@ impl ClusterOrchestrator {
             }
         };
         ctx.charge_cpu(cost_ms);
+        // Per-op scheduler cost, attributable by churn benches.
+        ctx.metrics().observe("cluster.sched_ms", cost_ms);
         self.last_calc = SimTime::from_millis(cost_ms);
         placement
     }
@@ -286,8 +376,10 @@ impl ClusterOrchestrator {
         }
     }
 
-    /// Handle a dead worker: fail its instances, try local re-placement,
-    /// escalate to root when the cluster cannot host them (paper §4.2).
+    /// Handle a dead worker: finalize its instances as Failed (record
+    /// dropped, bookkeeping released — the reserved capacity died with
+    /// the worker's profile), then try local re-placement and escalate to
+    /// the root when the cluster cannot host them (paper §4.2).
     fn handle_worker_dead(&mut self, ctx: &mut Ctx<'_>, node: NodeId) {
         ctx.metrics().inc("cluster.worker_dead");
         self.workers.retain(|w| w.spec.node != node);
@@ -302,27 +394,32 @@ impl ClusterOrchestrator {
             .map(|(iid, li)| (*iid, li.task, li.sla.clone()))
             .collect();
         for (iid, task, sla) in affected {
-            if let Some(li) = self.instances.get_mut(&iid) {
-                li.state = ServiceState::Failed;
-            }
-            self.refresh_ldp_target(task);
-            self.push_table_update(ctx, task);
-            // Report failure upward, then attempt local recovery.
-            let msg = SimMsg::Oak(OakMsg::InstanceStatus {
-                instance: iid,
-                node,
-                state: ServiceState::Failed,
-            });
-            let bytes = msg.default_wire_bytes() + WS_FRAME_OVERHEAD;
-            ctx.send(self.root, msg, bytes, labels::CLUSTER_TO_ROOT);
+            // An in-flight migration replacement died with its worker:
+            // cancel the migration and keep the original running (the SLA
+            // watchdog will retry if the violation persists).
+            let was_replacement = self.migrations.remove(&iid).is_some();
+            // The reverse: the dead instance was already being migrated
+            // away — its replacement *is* the recovery, don't mint a
+            // second one.
+            let has_replacement = self.migrations.values().any(|o| *o == iid);
 
+            self.finalize_instance(ctx, iid, ServiceState::Failed);
+
+            if was_replacement {
+                ctx.metrics().inc("cluster.migration_failed");
+                continue;
+            }
+            if has_replacement || self.dead_services.contains(&task.service) {
+                continue;
+            }
             match self.run_scheduler(ctx, task, &sla) {
                 Placement::Placed { worker, .. } => {
-                    // Local recovery: deploy a replacement instance with a
-                    // locally minted id offset (root will reconcile ids on
-                    // its next report; for sim purposes the generation
-                    // bump happens at the root on escalation only).
-                    let new_id = InstanceId(iid.0 | (1 << 63));
+                    // Local recovery under a fresh locally-minted id.
+                    // NOTE: the root drops status for ids it never
+                    // minted, so the replacement is invisible to the
+                    // root's replica count until root-visible replacement
+                    // tracking lands (ROADMAP open item).
+                    let new_id = self.mint_local(RECOVERY_TAG);
                     self.deploy_to(ctx, new_id, task, sla, worker);
                     ctx.metrics().inc("cluster.local_recovery");
                 }
@@ -364,6 +461,11 @@ impl ClusterOrchestrator {
         if li.state != ServiceState::Running {
             return false;
         }
+        if self.dead_services.contains(&li.task.service) {
+            // Teardown racing a migration: the replacement would outlive
+            // the service.
+            return false;
+        }
         let (task, sla, current_node) = (li.task, li.sla.clone(), li.node);
         // Exclude the violating worker from candidates.
         let mut others: Vec<NodeProfile> = self
@@ -383,7 +485,7 @@ impl ClusterOrchestrator {
         match placement {
             Placement::Placed { worker, .. } => {
                 ctx.metrics().inc("cluster.migration_started");
-                let replacement = InstanceId(original.0 | (1 << 62));
+                let replacement = self.mint_local(MIGRATION_TAG);
                 self.migrations.insert(replacement, original);
                 self.deploy_to(ctx, replacement, task, sla, worker);
                 true
@@ -485,6 +587,14 @@ impl Actor for ClusterOrchestrator {
                 instances,
             }) => {
                 ctx.charge_cpu(costs::WORKER_REPORT_MS);
+                if self.profile(node).is_none() {
+                    // A deregistered (previously dead) worker talking
+                    // again: ignoring it keeps it out of `last_report`,
+                    // where it would otherwise look alive to the health
+                    // sweep without ever being schedulable.
+                    ctx.metrics().inc("cluster.report_unknown_worker");
+                    return;
+                }
                 self.last_report.insert(node, ctx.now);
                 if let Some(p) = self.profile_mut(node) {
                     p.used = used;
@@ -594,6 +704,15 @@ impl Actor for ClusterOrchestrator {
                 sla,
                 attempt: _,
             }) => {
+                // An undeploy that raced this delegation already arrived:
+                // the instance (or its whole service) is cancelled, and
+                // deploying it would leak a container nobody tracks.
+                if self.undeploy_tombstones.remove(&instance)
+                    || self.dead_services.contains(&task.service)
+                {
+                    ctx.metrics().inc("cluster.delegation_tombstoned");
+                    return;
+                }
                 let placement = self.run_scheduler(ctx, task, &sla);
                 let calc_time = self.last_calc;
                 match placement {
@@ -624,12 +743,66 @@ impl Actor for ClusterOrchestrator {
 
             SimMsg::Oak(OakMsg::UndeployInstance { instance }) => {
                 ctx.charge_cpu(costs::TABLE_OP_MS);
-                if let Some(li) = self.instances.get(&instance) {
-                    let actor = self.worker_actors.get(&li.node).copied();
-                    if let Some(a) = actor {
-                        let msg = SimMsg::Oak(OakMsg::UndeployInstance { instance });
-                        let bytes = msg.default_wire_bytes() + MQTT_FRAME_OVERHEAD;
-                        ctx.send(a, msg, bytes, labels::CLUSTER_TO_WORKER);
+                // Cancel any in-flight migration *of this instance*: the
+                // original is being torn down deliberately (scale-down or
+                // a targeted undeploy), so its replacement must go too —
+                // otherwise it survives as an extra replica the root
+                // never tracked.
+                let replacements: Vec<InstanceId> = self
+                    .migrations
+                    .iter()
+                    .filter(|(_, o)| **o == instance)
+                    .map(|(r, _)| *r)
+                    .collect();
+                for r in replacements {
+                    self.migrations.remove(&r);
+                    ctx.metrics().inc("cluster.migration_cancelled");
+                    ctx.send_local(
+                        ctx.self_id,
+                        SimMsg::Oak(OakMsg::UndeployInstance { instance: r }),
+                    );
+                }
+                match self.instances.get(&instance) {
+                    Some(li) => {
+                        let node = li.node;
+                        let reachable = self
+                            .worker_actors
+                            .get(&node)
+                            .copied()
+                            .filter(|_| !ctx.core.is_failed(node));
+                        match reachable {
+                            Some(a) => {
+                                let msg =
+                                    SimMsg::Oak(OakMsg::UndeployInstance { instance });
+                                let bytes =
+                                    msg.default_wire_bytes() + MQTT_FRAME_OVERHEAD;
+                                ctx.send(a, msg, bytes, labels::CLUSTER_TO_WORKER);
+                            }
+                            None => {
+                                // The hosting worker is dead/deregistered
+                                // and can never ack: finalize from the
+                                // control plane instead of leaking the
+                                // record and its reserved capacity.
+                                self.finalize_instance(
+                                    ctx,
+                                    instance,
+                                    ServiceState::Terminated,
+                                );
+                            }
+                        }
+                    }
+                    None => {
+                        // Undeploy for an instance this cluster never
+                        // deployed: the matching DelegateTask is still in
+                        // flight — tombstone the id so it dies on arrival.
+                        // Duplicate undeploys leave unconsumable junk
+                        // here (ids are never reused), bounded by the
+                        // cap; anything old enough to be evicted has a
+                        // delegation that would have arrived long ago.
+                        self.undeploy_tombstones.insert(instance);
+                        while self.undeploy_tombstones.len() > 4096 {
+                            self.undeploy_tombstones.pop_first();
+                        }
                     }
                 }
             }
@@ -650,6 +823,11 @@ impl Actor for ClusterOrchestrator {
             // (migration/local recovery), which the root never tracked.
             SimMsg::Oak(OakMsg::UndeployService { service }) => {
                 ctx.charge_cpu(costs::SUBMIT_MS * 0.5);
+                ctx.metrics().inc("cluster.undeploy_service");
+                // Remember the teardown: late delegations, recoveries and
+                // migrations of this service are refused from here on
+                // (service ids are never reused).
+                self.dead_services.insert(service);
                 let local: Vec<(InstanceId, NodeId)> = self
                     .instances
                     .iter()
@@ -662,10 +840,23 @@ impl Actor for ClusterOrchestrator {
                 self.migrations
                     .retain(|r, o| !(doomed.contains(r) || doomed.contains(o)));
                 for (iid, node) in local {
-                    if let Some(a) = self.worker_actors.get(&node).copied() {
-                        let msg = SimMsg::Oak(OakMsg::UndeployInstance { instance: iid });
-                        let bytes = msg.default_wire_bytes() + MQTT_FRAME_OVERHEAD;
-                        ctx.send(a, msg, bytes, labels::CLUSTER_TO_WORKER);
+                    let reachable = self
+                        .worker_actors
+                        .get(&node)
+                        .copied()
+                        .filter(|_| !ctx.core.is_failed(node));
+                    match reachable {
+                        Some(a) => {
+                            let msg =
+                                SimMsg::Oak(OakMsg::UndeployInstance { instance: iid });
+                            let bytes = msg.default_wire_bytes() + MQTT_FRAME_OVERHEAD;
+                            ctx.send(a, msg, bytes, labels::CLUSTER_TO_WORKER);
+                        }
+                        // Dead worker: the ack will never come — finalize
+                        // the record now.
+                        None => {
+                            self.finalize_instance(ctx, iid, ServiceState::Terminated)
+                        }
                     }
                 }
             }

@@ -1,7 +1,12 @@
 //! The root database (paper §3.2.1): current state of all submitted
 //! services and reported operational information from clusters.
+//!
+//! All maps are `BTreeMap`s: under churn workloads the database is
+//! iterated on hot paths (status scans, summaries, censuses) and any
+//! `HashMap` iteration order would leak the per-process hasher seed into
+//! event ordering, breaking seed-determinism of the whole simulation.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use crate::model::{InstanceRecord, ServiceSpec, ServiceState, TaskSpec};
 use crate::sla::ServiceSla;
@@ -16,7 +21,12 @@ pub struct ServiceRecord {
     /// All instances ever created for this service (incl. migrations).
     pub instances: Vec<InstanceRecord>,
     /// Which cluster each live instance was delegated to.
-    pub placement: HashMap<InstanceId, ClusterId>,
+    pub placement: BTreeMap<InstanceId, ClusterId>,
+    /// Set once `UndeployService` is accepted: the service may never grow
+    /// again (no scale-up, no migration replacements, no reschedules) —
+    /// otherwise a teardown racing an in-flight recovery resurrects
+    /// instances the broadcast already missed.
+    pub retired: bool,
 }
 
 impl ServiceRecord {
@@ -42,7 +52,7 @@ impl ServiceRecord {
 /// In-memory service database with id minting.
 #[derive(Clone, Debug, Default)]
 pub struct ServiceDb {
-    services: HashMap<ServiceId, ServiceRecord>,
+    services: BTreeMap<ServiceId, ServiceRecord>,
     next_service: u32,
     next_instance: u64,
 }
@@ -93,16 +103,21 @@ impl ServiceDb {
                 sla,
                 submitted_at: now,
                 instances,
-                placement: HashMap::new(),
+                placement: BTreeMap::new(),
+                retired: false,
             },
         );
         (id, ids)
     }
 
     /// Mint a replacement instance for a task (rescheduling/migration/
-    /// replication — paper §4.2/§6).
+    /// replication — paper §4.2/§6). Refused for retired services: a
+    /// teardown must never race a recovery into a resurrected instance.
     pub fn mint_replacement(&mut self, task: TaskId) -> Option<InstanceId> {
         let rec = self.services.get_mut(&task.service)?;
+        if rec.retired {
+            return None;
+        }
         let iid = InstanceId(self.next_instance);
         self.next_instance += 1;
         let mut inst = InstanceRecord::new(iid, task);
@@ -195,6 +210,22 @@ mod tests {
             })
             .len(),
             1
+        );
+    }
+
+    #[test]
+    fn retired_services_refuse_replacements() {
+        let mut db = ServiceDb::default();
+        let (id, _) = db.register(simple_sla("app", 1000, 100), SimTime::ZERO);
+        let task = TaskId {
+            service: id,
+            index: 0,
+        };
+        assert!(db.mint_replacement(task).is_some());
+        db.service_mut(id).unwrap().retired = true;
+        assert!(
+            db.mint_replacement(task).is_none(),
+            "an undeployed service must never grow again"
         );
     }
 

@@ -54,6 +54,14 @@ pub mod costs {
     pub const CLUSTER_REPORT_MS: f64 = 0.12;
     /// SLA validation + service registration at the root.
     pub const SUBMIT_MS: f64 = 0.8;
+    /// Root-side handling of a ScaleService call (plan + mint/cancel).
+    pub const SCALE_MS: f64 = 0.4;
+    /// Root-side handling of a MigrateInstance call (lookup + forward).
+    pub const MIGRATE_MS: f64 = 0.2;
+    /// Root-side handling of an UndeployService call (fan-out broadcast).
+    pub const UNDEPLOY_MS: f64 = 0.3;
+    /// Root-side status/list read (database view construction).
+    pub const STATUS_MS: f64 = 0.05;
     /// Root scheduling: per candidate cluster scored.
     pub const ROOT_SCHED_PER_CLUSTER_MS: f64 = 0.02;
     /// Cluster scheduling: per worker scored (ROM).

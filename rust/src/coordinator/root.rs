@@ -255,6 +255,9 @@ impl RootOrchestrator {
             .db
             .service(service)
             .ok_or(ApiError::UnknownService(service))?;
+        if rec.retired {
+            return Err(ApiError::ServiceRetired(service));
+        }
         let targets: Vec<TaskId> = match task {
             Some(index) => {
                 let tid = TaskId { service, index };
@@ -291,14 +294,29 @@ impl RootOrchestrator {
 
     /// Dispatch one northbound API envelope (paper §3.2.1: the service
     /// manager's deployment/scaling/migration/teardown front door).
+    /// Control-plane cost is charged *per operation kind* and mirrored
+    /// into metrics, so churn benches can attribute root CPU to lifecycle
+    /// ops instead of one flat submit tax.
     fn handle_api(&mut self, ctx: &mut Ctx<'_>, env: ApiEnvelope) {
-        ctx.charge_cpu(costs::SUBMIT_MS);
         let ApiEnvelope {
             version,
             request_id,
             request,
             reply_to,
         } = env;
+        let (cost_ms, op) = match &request {
+            ApiRequest::SubmitService { .. } => (costs::SUBMIT_MS, "root.op.submit"),
+            ApiRequest::ScaleService { .. } => (costs::SCALE_MS, "root.op.scale"),
+            ApiRequest::MigrateInstance { .. } => (costs::MIGRATE_MS, "root.op.migrate"),
+            ApiRequest::UndeployService { .. } => {
+                (costs::UNDEPLOY_MS, "root.op.undeploy")
+            }
+            ApiRequest::ServiceStatus { .. } => (costs::STATUS_MS, "root.op.status"),
+            ApiRequest::ListServices => (costs::STATUS_MS, "root.op.list"),
+        };
+        ctx.charge_cpu(cost_ms);
+        ctx.metrics().inc(op);
+        ctx.metrics().observe("root.api_op_ms", cost_ms);
         if version != API_VERSION {
             self.respond(
                 ctx,
@@ -435,6 +453,15 @@ impl RootOrchestrator {
                     );
                     return;
                 };
+                if rec.retired {
+                    self.respond(
+                        ctx,
+                        reply_to,
+                        request_id,
+                        ApiResponse::Error(ApiError::ServiceRetired(service)),
+                    );
+                    return;
+                }
                 let Some(inst) = rec.instance(instance) else {
                     self.respond(
                         ctx,
@@ -477,7 +504,7 @@ impl RootOrchestrator {
             }
 
             ApiRequest::UndeployService { service } => {
-                let Some(rec) = self.db.service(service) else {
+                let Some(rec) = self.db.service_mut(service) else {
                     self.respond(
                         ctx,
                         reply_to,
@@ -486,6 +513,10 @@ impl RootOrchestrator {
                     );
                     return;
                 };
+                // Retire the service before anything else: scale-ups,
+                // migrations and reschedules racing this teardown must
+                // find the door already closed.
+                rec.retired = true;
                 let live: Vec<InstanceId> = rec
                     .instances
                     .iter()
@@ -624,7 +655,13 @@ impl Actor for RootOrchestrator {
                                 if inst.state == ServiceState::Requested {
                                     let _ = inst.transition(ServiceState::Scheduled);
                                 }
-                                inst.worker = Some(node);
+                                // A late result for an instance already
+                                // cancelled (scale-down/undeploy raced the
+                                // delegation) must not dress a terminal
+                                // record up as placed.
+                                if !inst.state.is_terminal() {
+                                    inst.worker = Some(node);
+                                }
                             }
                         }
                     }
@@ -689,6 +726,9 @@ impl Actor for RootOrchestrator {
             }) => {
                 // Cluster could not recover locally: root re-runs the
                 // priority-list scheduling with a fresh instance (§4.2).
+                // `mint_replacement` refuses retired services, so an
+                // escalation racing an undeploy cannot resurrect the
+                // service here.
                 if let Some(new_id) = self.db.mint_replacement(task) {
                     ctx.metrics().inc("root.reschedules");
                     ctx.add_mem(mem::PER_INSTANCE_MB);

@@ -6,7 +6,7 @@
 //! table → balancing policy → ProxyTUN tunnel).
 
 use std::any::Any;
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 
 use crate::messaging::{labels, MQTT_FRAME_OVERHEAD};
 use crate::model::{Capacity, ServiceState, WorkerSpec};
@@ -73,6 +73,10 @@ pub struct WorkerEngine {
     /// Worker actors by node for tunnel forwarding (learned from table
     /// updates; the data plane needs actor handles to deliver).
     node_actors: BTreeMap<NodeId, ActorId>,
+    /// Undeploys that arrived before their `DeployInstance` (jittered
+    /// MQTT delivery can reorder the pair): the deploy must be refused on
+    /// arrival or the container runs untracked forever.
+    undeploy_tombstones: BTreeSet<InstanceId>,
     registered: bool,
 }
 
@@ -93,6 +97,7 @@ impl WorkerEngine {
             subnet: None,
             parked: Vec::new(),
             node_actors: BTreeMap::new(),
+            undeploy_tombstones: BTreeSet::new(),
             registered: false,
         }
     }
@@ -115,6 +120,11 @@ impl WorkerEngine {
     /// Number of instances currently hosted (running or starting).
     pub fn hosted_count(&self) -> usize {
         self.hosted.len()
+    }
+
+    /// Ids of the hosted instances, sorted (census view).
+    pub fn hosted_ids(&self) -> Vec<InstanceId> {
+        self.hosted.keys().copied().collect()
     }
 
     /// Kick off registration (call once via an injected Custom timer, or
@@ -298,6 +308,20 @@ impl Actor for WorkerEngine {
                 service_ips: _,
             }) => {
                 ctx.charge_cpu(costs::DEPLOY_MS);
+                if self.undeploy_tombstones.remove(&instance) {
+                    // The teardown overtook this deploy in flight: refuse
+                    // it and ack Terminated so the orchestrator releases
+                    // its reservation.
+                    ctx.metrics().inc("worker.deploy_tombstoned");
+                    let msg = SimMsg::Oak(OakMsg::InstanceStatus {
+                        instance,
+                        node: self.cfg.spec.node,
+                        state: ServiceState::Terminated,
+                    });
+                    let b = msg.default_wire_bytes() + MQTT_FRAME_OVERHEAD;
+                    ctx.send(self.orchestrator, msg, b, labels::WORKER_TO_CLUSTER);
+                    return;
+                }
                 let cap = self.cfg.spec.capacity();
                 let after = self.used + request;
                 if !cap.fits(&after) {
@@ -373,26 +397,43 @@ impl Actor for WorkerEngine {
 
             SimMsg::Oak(OakMsg::UndeployInstance { instance }) => {
                 ctx.charge_cpu(costs::DEPLOY_MS * 0.3);
-                if let Some(h) = self.hosted.remove(&instance) {
-                    self.used -= h.request;
-                    ctx.add_mem(-(h.request.mem_mb as f64 * 0.05 + 4.0));
-                    // Retire the local mDNS name when the last hosted
-                    // instance of the task leaves this node.
-                    if !self.hosted.values().any(|o| o.task == h.task) {
-                        self.mdns.unregister(&format!(
-                            "task-{}-{}",
-                            h.task.service.0, h.task.index
-                        ));
+                match self.hosted.remove(&instance) {
+                    None => {
+                        // Not hosted (yet): remember the teardown in case
+                        // the matching DeployInstance is still in flight.
+                        // Duplicate undeploys (service-wide broadcast
+                        // racing a targeted one) leave unconsumable junk
+                        // here, bounded by the cap. Deploys arrive within
+                        // milliseconds of their undeploy, so any entry
+                        // old enough to be evicted (4096 teardowns later)
+                        // has long since stopped mattering.
+                        self.undeploy_tombstones.insert(instance);
+                        while self.undeploy_tombstones.len() > 4096 {
+                            self.undeploy_tombstones.pop_first();
+                        }
                     }
-                    // Per-instance teardown ack (API lifecycle contract:
-                    // every undeploy is confirmed instance-by-instance).
-                    let msg = SimMsg::Oak(OakMsg::InstanceStatus {
-                        instance,
-                        node: self.cfg.spec.node,
-                        state: ServiceState::Terminated,
-                    });
-                    let b = msg.default_wire_bytes() + MQTT_FRAME_OVERHEAD;
-                    ctx.send(self.orchestrator, msg, b, labels::WORKER_TO_CLUSTER);
+                    Some(h) => {
+                        self.used -= h.request;
+                        ctx.add_mem(-(h.request.mem_mb as f64 * 0.05 + 4.0));
+                        // Retire the local mDNS name when the last hosted
+                        // instance of the task leaves this node.
+                        if !self.hosted.values().any(|o| o.task == h.task) {
+                            self.mdns.unregister(&format!(
+                                "task-{}-{}",
+                                h.task.service.0, h.task.index
+                            ));
+                        }
+                        // Per-instance teardown ack (API lifecycle
+                        // contract: every undeploy is confirmed
+                        // instance-by-instance).
+                        let msg = SimMsg::Oak(OakMsg::InstanceStatus {
+                            instance,
+                            node: self.cfg.spec.node,
+                            state: ServiceState::Terminated,
+                        });
+                        let b = msg.default_wire_bytes() + MQTT_FRAME_OVERHEAD;
+                        ctx.send(self.orchestrator, msg, b, labels::WORKER_TO_CLUSTER);
+                    }
                 }
             }
 

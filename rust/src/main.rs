@@ -10,6 +10,7 @@
 //! oakestra undeploy                       teardown demo through the API
 //! oakestra status                         lifecycle status via the API
 //! oakestra bench <fig|all>                regenerate a paper figure table
+//! oakestra churn [--scenario all]         churn storm → BENCH_churn.json
 //! oakestra ldp --workers N                one PJRT-accelerated LDP solve
 //! oakestra check-artifacts                verify AOT artifacts load + run
 //! oakestra init-config [path]             write an example config
@@ -54,6 +55,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         Some("undeploy") => cmd_undeploy(args),
         Some("status") => cmd_status(args),
         Some("bench") => cmd_bench(args),
+        Some("churn") => cmd_churn(args),
         Some("ldp") => cmd_ldp(args),
         Some("check-artifacts") => cmd_check_artifacts(),
         Some("init-config") => {
@@ -81,6 +83,12 @@ fn print_help() {
            oakestra undeploy                  API teardown demo (submit, then undeploy)\n\
            oakestra status                    API status/list demo\n\
            oakestra bench <fig|all>           figures: 4a 4bc 5 6 7a 7b 8a 8b 9 10 ablations\n\
+           oakestra churn [opts]              dynamic-workload churn bench (submit/scale/\n\
+                                              migrate storms) → BENCH_churn.json\n\
+             --scenario submit|scale|failover|all   storm generators to run (default all)\n\
+             --seed N --duration S --clusters N --workers N --scheduler rom|ldp\n\
+             --quick                          small CI-sized storm\n\
+             --out PATH                       artifact path (default BENCH_churn.json)\n\
            oakestra ldp [--workers N]         PJRT-accelerated LDP placement demo\n\
            oakestra check-artifacts           verify the AOT artifact bundle\n\
            oakestra init-config [path]        write an example config\n\
@@ -333,6 +341,64 @@ fn cmd_bench(args: &[String]) -> Result<()> {
     } else {
         print_tables(&run(which)?);
     }
+    Ok(())
+}
+
+/// `oakestra churn`: run the dynamic-workload churn bench (submit/scale/
+/// migrate storms against the northbound API) and emit `BENCH_churn.json`
+/// with per-lifecycle-op latency and control-plane msg/CPU cost.
+fn cmd_churn(args: &[String]) -> Result<()> {
+    let mut cfg = if args.iter().any(|a| a == "--quick") {
+        bh::ChurnConfig::quick(42)
+    } else {
+        bh::ChurnConfig::default()
+    };
+    if let Some(s) = flag_value(args, "--seed") {
+        cfg.seed = s.parse()?;
+    }
+    if let Some(s) = flag_value(args, "--scenario") {
+        cfg.scenario = bh::ChurnScenario::parse(s)
+            .ok_or_else(|| anyhow!("unknown scenario '{s}' (submit|scale|failover|all)"))?;
+    }
+    if let Some(s) = flag_value(args, "--duration") {
+        cfg.duration_s = s.parse()?;
+    }
+    if let Some(s) = flag_value(args, "--clusters") {
+        cfg.clusters = s.parse()?;
+    }
+    if let Some(s) = flag_value(args, "--workers") {
+        cfg.workers_per_cluster = s.parse()?;
+    }
+    if let Some(s) = flag_value(args, "--scheduler") {
+        cfg.scheduler = oakestra::config::parse_scheduler(s)?;
+    }
+    let out = flag_value(args, "--out").unwrap_or("BENCH_churn.json");
+    println!(
+        "churn: scenario={:?} seed={} topology {}x{} scheduler {:?}, {}s virtual churn",
+        cfg.scenario,
+        cfg.seed,
+        cfg.clusters,
+        cfg.workers_per_cluster,
+        cfg.scheduler,
+        cfg.duration_s
+    );
+    let report = bh::run_churn(&cfg);
+    print_tables(&report.tables());
+    if report.unanswered_requests > 0 {
+        eprintln!(
+            "warning: {} API requests never received a response",
+            report.unanswered_requests
+        );
+    }
+    if report.leaked_instances > 0 || report.leaked_capacity_mc > 0 {
+        eprintln!(
+            "warning: leak after drain — {} instance(s), {} mc reserved",
+            report.leaked_instances, report.leaked_capacity_mc
+        );
+    }
+    std::fs::write(out, report.to_json())
+        .map_err(|e| anyhow!("writing {out}: {e}"))?;
+    println!("wrote {out}");
     Ok(())
 }
 

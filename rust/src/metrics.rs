@@ -19,6 +19,9 @@ impl Histogram {
     pub fn count(&self) -> usize {
         self.samples.len()
     }
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
     pub fn mean(&self) -> f64 {
         crate::util::mean(&self.samples)
     }
@@ -31,12 +34,46 @@ impl Histogram {
     pub fn p99(&self) -> f64 {
         percentile(&self.samples, 99.0)
     }
+    /// Largest recorded sample. An empty histogram reports 0.0, matching
+    /// the other statistics — use [`fmt_stat`] when a result table must
+    /// distinguish "no samples" from a genuine zero.
     pub fn max(&self) -> f64 {
-        self.samples.iter().cloned().fold(f64::NAN, f64::max)
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
     }
     pub fn samples(&self) -> &[f64] {
         &self.samples
     }
+}
+
+/// Render one statistic as a table cell: `n/a` when it came from zero
+/// samples or is non-finite (no `NaN` — or misleading 0.0 — may ever
+/// reach a results table). Table emitters that summarize histograms pass
+/// `h.count()` alongside the computed statistic.
+pub fn fmt_stat(count: usize, v: f64) -> String {
+    if count == 0 || !v.is_finite() {
+        "n/a".to_string()
+    } else {
+        format!("{v:.1}")
+    }
+}
+
+/// Histogram keys for the lifecycle-operation latencies measured under
+/// churn (see [`crate::bench_harness::churn`]): each key tracks the time
+/// from the northbound API call to the observable completion of the
+/// operation across the hierarchy.
+pub mod lifecycle {
+    /// SubmitService → every task Running (the Fig. 4a metric, under load).
+    pub const SUBMIT_TO_RUNNING_MS: &str = "lifecycle.submit_to_running_ms";
+    /// ScaleService → every task converged at the target replica count.
+    pub const SCALE_TO_CONVERGED_MS: &str = "lifecycle.scale_to_converged_ms";
+    /// MigrateInstance → original instance reached a terminal state
+    /// (replacement operational, old container torn down).
+    pub const MIGRATE_TO_CUTOVER_MS: &str = "lifecycle.migrate_to_cutover_ms";
+    /// UndeployService → zero live instances reported for the service.
+    pub const UNDEPLOY_TO_DRAINED_MS: &str = "lifecycle.undeploy_to_drained_ms";
 }
 
 /// CPU/memory accounting for one node, in windows of fixed width.
@@ -83,11 +120,17 @@ impl NodeUsage {
     }
 
     /// Mean CPU utilization (fraction of one core) across the window range
-    /// `[from, to)`. Empty windows count as idle.
+    /// `[from, to)`. Empty windows count as idle; an empty or inverted
+    /// range (`to <= from`, which spans zero windows) is 0.0 rather than
+    /// an index underflow.
     pub fn cpu_util(&self, from: SimTime, to: SimTime) -> f64 {
+        if to <= from {
+            return 0.0;
+        }
         let w_ms = self.window.as_millis();
-        let first = from.as_micros() / self.window.as_micros().max(1);
-        let last = (to.as_micros().saturating_sub(1)) / self.window.as_micros().max(1);
+        let w_us = self.window.as_micros().max(1);
+        let first = from.as_micros() / w_us;
+        let last = (to.as_micros() - 1) / w_us;
         let n = (last - first + 1) as f64;
         let busy: f64 = (first..=last)
             .map(|i| self.cpu_busy_ms.get(&i).copied().unwrap_or(0.0))
@@ -243,6 +286,36 @@ mod tests {
         assert!((h.p50() - 50.0).abs() <= 1.0);
         assert!((h.p95() - 95.0).abs() <= 1.0);
         assert_eq!(h.max(), 100.0);
+    }
+
+    #[test]
+    fn empty_histogram_has_explicit_stats_and_renders_na() {
+        let h = Histogram::default();
+        assert!(h.is_empty());
+        // Every statistic of an empty histogram is a well-defined number —
+        // no NaN may ever reach a results table.
+        assert_eq!(h.max(), 0.0);
+        assert_eq!(h.p50(), 0.0);
+        assert_eq!(h.p95(), 0.0);
+        assert_eq!(h.mean(), 0.0);
+        // Table emitters render empty-histogram statistics as n/a.
+        assert_eq!(fmt_stat(h.count(), h.max()), "n/a");
+        assert_eq!(fmt_stat(0, 5.0), "n/a");
+        assert_eq!(fmt_stat(3, f64::NAN), "n/a");
+        let mut full = Histogram::default();
+        full.record(12.34);
+        assert_eq!(fmt_stat(full.count(), full.p95()), "12.3");
+    }
+
+    #[test]
+    fn cpu_util_zero_window_ranges_are_idle() {
+        let mut u = NodeUsage::new(SimTime::from_secs(1.0));
+        u.charge_cpu(SimTime::from_millis(10.0), 100.0);
+        // to == from and to < from both span zero windows: 0.0, no panic.
+        let t = SimTime::from_secs(5.0);
+        assert_eq!(u.cpu_util(t, t), 0.0);
+        assert_eq!(u.cpu_util(t, SimTime::from_secs(1.0)), 0.0);
+        assert_eq!(u.cpu_util(SimTime::ZERO, SimTime::ZERO), 0.0);
     }
 
     #[test]

@@ -29,9 +29,13 @@ pub fn pick_instance(
             locs.get(i).copied()
         }
         ServiceIp::Closest(_) => {
+            // `total_cmp` keeps the pick total when an RTT estimate is NaN
+            // (stale Vivaldi coordinate): NaN sorts last, so any location
+            // with a real estimate wins and the connection path never
+            // panics.
             let locs = table.lookup(ip)?;
             locs.iter()
-                .min_by(|a, b| a.rtt_ms.partial_cmp(&b.rtt_ms).unwrap())
+                .min_by(|a, b| a.rtt_ms.total_cmp(&b.rtt_ms))
                 .copied()
         }
     }
@@ -104,6 +108,54 @@ mod tests {
         let mut t = table();
         let got = pick_instance(&mut t, &ServiceIp::Instance(InstanceId(3))).unwrap();
         assert_eq!(got.node, NodeId(12));
+    }
+
+    #[test]
+    fn closest_tolerates_nan_rtt_estimates() {
+        // A location with a NaN RTT (stale Vivaldi estimate) must neither
+        // panic the pick nor win it while finite estimates exist.
+        let mut t = ConversionTable::default();
+        t.apply(TableEntry {
+            task: tid(),
+            locations: vec![
+                InstanceLocation {
+                    instance: InstanceId(1),
+                    task: tid(),
+                    node: NodeId(10),
+                    rtt_ms: f64::NAN,
+                },
+                InstanceLocation {
+                    instance: InstanceId(2),
+                    task: tid(),
+                    node: NodeId(11),
+                    rtt_ms: 30.0,
+                },
+            ],
+        });
+        let got = pick_instance(&mut t, &ServiceIp::Closest(tid())).unwrap();
+        assert_eq!(got.instance, InstanceId(2));
+
+        // All-NaN degenerates to a deterministic pick (first entry).
+        let mut t = ConversionTable::default();
+        t.apply(TableEntry {
+            task: tid(),
+            locations: vec![
+                InstanceLocation {
+                    instance: InstanceId(7),
+                    task: tid(),
+                    node: NodeId(12),
+                    rtt_ms: f64::NAN,
+                },
+                InstanceLocation {
+                    instance: InstanceId(8),
+                    task: tid(),
+                    node: NodeId(13),
+                    rtt_ms: f64::NAN,
+                },
+            ],
+        });
+        let got = pick_instance(&mut t, &ServiceIp::Closest(tid())).unwrap();
+        assert_eq!(got.instance, InstanceId(7));
     }
 
     #[test]

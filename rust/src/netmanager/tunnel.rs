@@ -134,7 +134,19 @@ impl ProxyTun {
             .count()
     }
 
+    /// Tunnels currently in the `Configured` state (endpoint known, no
+    /// recent traffic). This used to return *all* known tunnels — use
+    /// [`ProxyTun::known_count`] for that total.
     pub fn configured_count(&self) -> usize {
+        self.tunnels
+            .values()
+            .filter(|t| t.state == TunnelState::Configured)
+            .count()
+    }
+
+    /// All tunnels with a known endpoint, whatever their state
+    /// (`Configured` + `Active`).
+    pub fn known_count(&self) -> usize {
         self.tunnels.len()
     }
 
@@ -176,6 +188,23 @@ mod tests {
         // Re-activating an active tunnel is free.
         assert_eq!(p.activate(NodeId(1), t0), SimTime::ZERO);
         assert_eq!(p.handshakes, 1);
+    }
+
+    #[test]
+    fn counts_distinguish_configured_from_known() {
+        let mut p = ProxyTun::default();
+        p.idle_timeout = SimTime::from_secs(10.0);
+        p.activate(NodeId(1), SimTime::ZERO);
+        p.activate(NodeId(2), SimTime::from_secs(9.0));
+        // Both active, none configured; both known.
+        assert_eq!(p.active_count(), 2);
+        assert_eq!(p.configured_count(), 0);
+        assert_eq!(p.known_count(), 2);
+        p.gc(SimTime::from_secs(12.0));
+        // Tunnel 1 demoted: counted as configured, still known.
+        assert_eq!(p.active_count(), 1);
+        assert_eq!(p.configured_count(), 1);
+        assert_eq!(p.known_count(), 2);
     }
 
     #[test]

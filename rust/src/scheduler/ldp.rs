@@ -135,12 +135,13 @@ impl<'a> TaskScheduler for LdpScheduler<'a> {
         if w.is_empty() {
             return Placement::Infeasible;
         }
-        // Rank survivors by ROM's spare-capacity score.
+        // Rank survivors by ROM's spare-capacity score. `total_cmp` keeps
+        // the ordering total even for NaN scores (degenerate capacities
+        // must not panic the scheduler hot path mid-delegation).
         w.sort_by(|&a, &b| {
             let sa = input.workers[a].available().spare_score(&req);
             let sb = input.workers[b].available().spare_score(&req);
-            sb.partial_cmp(&sa)
-                .unwrap()
+            sb.total_cmp(&sa)
                 .then(input.workers[a].spec.node.cmp(&input.workers[b].spec.node))
         });
         Placement::Placed {
@@ -265,6 +266,56 @@ mod tests {
             service_hint: ServiceId(0),
         }) {
             Placement::Placed { worker, .. } => assert_eq!(worker, NodeId(1)),
+            p => panic!("{p:?}"),
+        }
+    }
+
+    #[test]
+    fn nan_probe_rtts_never_panic_the_ranking() {
+        // A dead probe target yields NaN RTTs: trilateration discards the
+        // invalid samples (estimating the user at the origin) and the
+        // ranking must stay a total order — a deterministic placement
+        // instead of a `partial_cmp(..).unwrap()` panic.
+        let mut sla = simple_sla("t", 1000, 512);
+        sla.constraints[0].s2u.push(S2uConstraint {
+            user_location: munich(),
+            geo_threshold_km: 10_000.0,
+            latency_threshold_ms: 20.0,
+            probe_count: 3,
+        });
+        let ws = input_workers();
+        let ctx0 = LdpContext::default();
+        let mut s = LdpScheduler::new(&ctx0, Box::new(|_, _| f64::NAN), 3);
+        match s.place(&PlacementInput {
+            sla: &sla.constraints[0],
+            workers: &ws,
+            service_hint: ServiceId(0),
+        }) {
+            // Worker 1 is the only candidate both feasible and within
+            // 20 ms of the origin estimate.
+            Placement::Placed { worker, .. } => assert_eq!(worker, NodeId(1)),
+            p => panic!("{p:?}"),
+        }
+    }
+
+    #[test]
+    fn tied_spare_scores_rank_by_node_id() {
+        // Degenerate input: identical workers tie on spare score; the
+        // comparator must fall through to the node id deterministically.
+        let g = munich();
+        let ws = vec![
+            worker(9, NodeClass::L, 2000, 2048, g, [1.0, 0.0, 0.0, 0.0]),
+            worker(4, NodeClass::L, 2000, 2048, g, [1.0, 0.0, 0.0, 0.0]),
+        ];
+        let sla = simple_sla("t", 500, 256);
+        let ctx0 = LdpContext::default();
+        let mut s = LdpScheduler::new(&ctx0, Box::new(|_, _| 1.0), 5);
+        match s.place(&PlacementInput {
+            sla: &sla.constraints[0],
+            workers: &ws,
+            service_hint: ServiceId(0),
+        }) {
+            Placement::Placed { worker, .. } => assert_eq!(worker, NodeId(4)),
             p => panic!("{p:?}"),
         }
     }

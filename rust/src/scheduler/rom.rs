@@ -61,7 +61,7 @@ impl TaskScheduler for RomScheduler {
                 if scored.is_empty() {
                     return Placement::Infeasible;
                 }
-                scored.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1)));
+                scored.sort_by(|a, b| b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)));
                 Placement::Placed {
                     worker: scored[0].1,
                     alternatives: scored[1..].iter().take(3).map(|s| s.1).collect(),

@@ -61,12 +61,7 @@ pub fn rank_clusters(
         })
         .collect();
 
-    out.sort_by(|a, b| {
-        b.score
-            .partial_cmp(&a.score)
-            .unwrap()
-            .then(a.cluster.cmp(&b.cluster))
-    });
+    out.sort_by(|a, b| b.score.total_cmp(&a.score).then(a.cluster.cmp(&b.cluster)));
     out
 }
 

@@ -1,0 +1,206 @@
+//! Integration tests for the dynamic-workload churn harness: seed
+//! determinism (identical op log + final placement census across runs)
+//! and storm convergence (scale storm + failover drills end with no
+//! leaked instances or reserved capacity anywhere in the hierarchy).
+
+use oakestra::api::{ApiRequest, ApiResponse};
+use oakestra::bench_harness::{
+    build_oakestra, run_churn, ChurnConfig, ChurnScenario, OakTestbedConfig,
+};
+use oakestra::coordinator::{ClusterOrchestrator, RootOrchestrator, WorkerEngine};
+use oakestra::model::ServiceState;
+use oakestra::sla::simple_sla;
+use oakestra::util::{ServiceId, SimTime};
+
+/// Small all-scenario storm kept fast enough for CI.
+fn storm_cfg(seed: u64) -> ChurnConfig {
+    ChurnConfig {
+        scenario: ChurnScenario::All,
+        ..ChurnConfig::quick(seed)
+    }
+}
+
+#[test]
+fn same_seed_means_identical_op_sequence_and_census() {
+    let cfg = storm_cfg(7);
+    let a = run_churn(&cfg);
+    let b = run_churn(&cfg);
+    assert!(
+        a.op_log.len() > 10,
+        "storm must actually do things: {:?}",
+        a.op_log
+    );
+    // Identical lifecycle-op sequence… (catches hidden HashMap iteration
+    // order anywhere on the control-plane hot path)
+    assert_eq!(a.op_log, b.op_log, "op log must be seed-deterministic");
+    // …identical final placement census across all three tiers…
+    assert_eq!(a.census, b.census, "census must be seed-deterministic");
+    // …and identical control-plane accounting.
+    assert_eq!(a.ctrl_msgs, b.ctrl_msgs);
+    assert_eq!(a.ctrl_bytes, b.ctrl_bytes);
+    assert_eq!(a.ops_issued, b.ops_issued);
+
+    // A different seed drives a different storm.
+    let c = run_churn(&storm_cfg(8));
+    assert_ne!(a.op_log, c.op_log, "different seeds must differ");
+}
+
+#[test]
+fn scale_storm_and_failover_drills_converge_with_no_leaks() {
+    let r = run_churn(&storm_cfg(21));
+
+    // All three generators fired.
+    assert!(r.submits >= 3, "arrival churn must submit: {}", r.submits);
+    assert!(r.undeploys >= 3, "departures must undeploy: {}", r.undeploys);
+    assert!(
+        r.scale_ups + r.scale_downs >= 1,
+        "autoscaler must issue at least one ScaleService"
+    );
+    assert!(r.migrations >= 1, "failover drills must migrate");
+
+    // Latency histograms carry samples for the measured ops.
+    assert!(r.submit.count > 0, "submit→Running latencies recorded");
+    assert!(r.undeploy.count > 0, "undeploy→drained latencies recorded");
+    assert!(r.submit.p50_ms > 0.0 && r.submit.p95_ms >= r.submit.p50_ms);
+
+    // Every API call got at least its synchronous ack.
+    assert_eq!(
+        r.unanswered_requests, 0,
+        "no request may be dropped by the control plane"
+    );
+
+    // Convergence: after the final drain + settle, nothing is leaked —
+    // no live instance records at root or clusters, no containers on
+    // live workers, no reserved capacity.
+    assert_eq!(
+        r.leaked_instances,
+        0,
+        "leaked instances after drain; op log:\n{}\ncensus:\n{}",
+        r.op_log.join("\n"),
+        r.census.join("\n")
+    );
+    assert_eq!(
+        r.leaked_capacity_mc, 0,
+        "reserved capacity must be fully released"
+    );
+
+    // Control-plane cost accounting is live.
+    assert!(r.ctrl_msgs > 0 && r.root_cpu_ms > 0.0);
+    assert!(r.sched_runs > 0, "cluster scheduler must have run");
+}
+
+#[test]
+fn batched_submit_wave_survives_worker_kill_and_drains() {
+    // Drive a storm through the *testbed* surface: one batched submit
+    // wave issued at a single virtual instant, a mid-run worker kill,
+    // then a batched undeploy wave — and assert a clean drain.
+    let mut tb = build_oakestra(OakTestbedConfig {
+        clusters: 2,
+        workers_per_cluster: 4,
+        ..OakTestbedConfig::default()
+    });
+    tb.warm_up();
+
+    let wave: Vec<ApiRequest> = (0..6)
+        .map(|i| ApiRequest::SubmitService {
+            sla: simple_sla(&format!("wave-{i}"), 100, 32),
+        })
+        .collect();
+    let reqs = tb.api_batch(wave, SimTime::from_secs(13.0));
+    assert_eq!(reqs.len(), 6, "batched issue mints one id per request");
+    tb.sim.run_until(SimTime::from_secs(30.0));
+
+    let services: Vec<ServiceId> = reqs
+        .iter()
+        .filter_map(|r| match tb.ack(*r) {
+            Some(ApiResponse::Submitted { service, .. }) => Some(*service),
+            other => panic!("wave submit must be acked: {other:?}"),
+        })
+        .collect();
+    assert_eq!(tb.deploy_times_ms().len(), 6, "whole wave reaches Running");
+
+    // Kill one hosting worker; the cluster must recover the lost
+    // instances without operator involvement.
+    let victim = {
+        let root = tb.sim.actor_as::<RootOrchestrator>(tb.root).unwrap();
+        root.db
+            .services()
+            .flat_map(|rec| rec.instances.iter())
+            .find(|i| i.state == ServiceState::Running)
+            .and_then(|i| i.worker)
+            .expect("a running instance has a worker")
+    };
+    tb.fail_worker(victim);
+    tb.sim.run_until(SimTime::from_secs(60.0));
+    assert!(
+        tb.sim.core.metrics.counter("cluster.worker_dead") >= 1,
+        "kill must be detected"
+    );
+
+    // Batched teardown of the whole wave.
+    let down: Vec<ApiRequest> = services
+        .iter()
+        .map(|s| ApiRequest::UndeployService { service: *s })
+        .collect();
+    tb.api_batch(down, SimTime::from_secs(61.0));
+    tb.sim.run_until(SimTime::from_secs(100.0));
+
+    // Clean drain everywhere except the crashed node.
+    for (_, orch) in &tb.clusters {
+        let c = tb.sim.actor_as::<ClusterOrchestrator>(*orch).unwrap();
+        assert!(
+            c.live_instances().is_empty(),
+            "cluster records drained: {:?}",
+            c.live_instances()
+        );
+        assert_eq!(c.reserved().cpu_millicores, 0, "no reserved capacity");
+    }
+    for (node, engine) in &tb.workers {
+        if *node == victim {
+            continue;
+        }
+        let w = tb.sim.actor_as::<WorkerEngine>(*engine).unwrap();
+        assert_eq!(w.hosted_count(), 0, "worker {node} drained");
+    }
+    assert!(
+        tb.api_client().outstanding().is_empty(),
+        "every batched request must be answered"
+    );
+}
+
+#[test]
+fn each_scenario_generator_runs_alone() {
+    // Submit-only churn.
+    let submit = run_churn(&ChurnConfig {
+        scenario: ChurnScenario::Submit,
+        duration_s: 60.0,
+        ..ChurnConfig::quick(3)
+    });
+    assert!(submit.submits > 0);
+    assert_eq!(submit.migrations, 0);
+    assert_eq!(submit.scale_ups + submit.scale_downs, 0);
+    assert_eq!(submit.leaked_instances, 0);
+
+    // Autoscaler over a fixed fleet.
+    let scale = run_churn(&ChurnConfig {
+        scenario: ChurnScenario::Scale,
+        duration_s: 90.0,
+        ..ChurnConfig::quick(4)
+    });
+    assert_eq!(scale.migrations, 0);
+    assert!(
+        scale.scale_ups + scale.scale_downs >= 1,
+        "autoscaler must act on the offered-load walk"
+    );
+    assert_eq!(scale.leaked_instances, 0);
+
+    // Failover drills over a fixed fleet.
+    let failover = run_churn(&ChurnConfig {
+        scenario: ChurnScenario::Failover,
+        duration_s: 60.0,
+        ..ChurnConfig::quick(5)
+    });
+    assert!(failover.migrations >= 1, "drills must fire");
+    assert_eq!(failover.scale_ups + failover.scale_downs, 0);
+    assert_eq!(failover.leaked_instances, 0);
+}
