@@ -101,6 +101,13 @@ pub enum ApiError {
     UnknownInstance(InstanceId),
     /// Migration requires a Running instance.
     NotRunning(InstanceId),
+    /// The instance was already superseded by a registered replacement
+    /// (migration or local recovery): the error names the successor so
+    /// the caller can retarget its operation at the live lineage head.
+    AlreadyReplaced {
+        instance: InstanceId,
+        successor: InstanceId,
+    },
     /// Replica count out of the accepted (1..=[`MAX_REPLICAS`]) range.
     InvalidReplicas { requested: usize, max: usize },
     /// Asynchronous event: the delegation chain exhausted the cluster
@@ -123,6 +130,12 @@ impl std::fmt::Display for ApiError {
             ApiError::UnknownTask(t) => write!(f, "unknown task {t}"),
             ApiError::UnknownInstance(i) => write!(f, "unknown instance {i}"),
             ApiError::NotRunning(i) => write!(f, "instance {i} is not running"),
+            ApiError::AlreadyReplaced {
+                instance,
+                successor,
+            } => {
+                write!(f, "instance {instance} was replaced by {successor}")
+            }
             ApiError::InvalidReplicas { requested, max } => {
                 write!(f, "replica count {requested} outside 1..={max}")
             }
@@ -141,10 +154,14 @@ pub struct InstanceStatusInfo {
     pub task: TaskId,
     pub state: ServiceState,
     pub worker: Option<NodeId>,
-    /// Cluster the instance was delegated to (None for instances the
-    /// cluster re-placed locally without root involvement).
+    /// Cluster the instance runs in (delegation target, or inherited
+    /// from the lineage for adopted successors).
     pub cluster: Option<ClusterId>,
     pub generation: u32,
+    /// Successor lineage: the instance this one replaced, if any.
+    pub predecessor: Option<InstanceId>,
+    /// The registered replacement that superseded this instance, if any.
+    pub successor: Option<InstanceId>,
 }
 
 /// Full status of one service (paper's database view, §3.2.1).
@@ -238,6 +255,8 @@ pub fn status_of(rec: &ServiceRecord) -> ServiceStatusInfo {
                 worker: i.worker,
                 cluster: rec.placement.get(&i.instance).copied(),
                 generation: i.generation,
+                predecessor: i.predecessor,
+                successor: i.successor,
             })
             .collect(),
     }
@@ -274,8 +293,15 @@ pub fn format_status(s: &ServiceStatusInfo) -> String {
         s.fully_running
     );
     for i in &s.instances {
+        let mut lineage = String::new();
+        if let Some(p) = i.predecessor {
+            lineage.push_str(&format!(" replaces {p}"));
+        }
+        if let Some(n) = i.successor {
+            lineage.push_str(&format!(" superseded-by {n}"));
+        }
         out.push_str(&format!(
-            "  {} task {} gen {}: {:?} on {} (cluster {})\n",
+            "  {} task {} gen {}: {:?} on {} (cluster {}){lineage}\n",
             i.instance,
             i.task,
             i.generation,
@@ -435,6 +461,7 @@ mod tests {
             inst.transition(ServiceState::Scheduled).unwrap();
             inst.worker = Some(NodeId(3));
             inst.transition(ServiceState::Running).unwrap();
+            inst.successor = Some(InstanceId(42));
             rec.placement.insert(ids[0], ClusterId(1));
         }
         let s = status_of(db.service(id).unwrap());
@@ -446,7 +473,11 @@ mod tests {
         assert!(!s.fully_running);
         assert_eq!(s.instances[0].cluster, Some(ClusterId(1)));
         assert_eq!(s.instances[0].worker, Some(NodeId(3)));
-        assert!(format_status(&s).contains("Running"));
+        assert_eq!(s.instances[0].successor, Some(InstanceId(42)));
+        assert_eq!(s.instances[0].predecessor, None);
+        let rendered = format_status(&s);
+        assert!(rendered.contains("Running"));
+        assert!(rendered.contains("superseded-by i42"));
     }
 
     #[test]
@@ -539,5 +570,11 @@ mod tests {
         }
         .to_string()
         .contains("900"));
+        let replaced = ApiError::AlreadyReplaced {
+            instance: InstanceId(3),
+            successor: InstanceId(9),
+        };
+        assert!(replaced.to_string().contains("i3"));
+        assert!(replaced.to_string().contains("i9"));
     }
 }

@@ -113,6 +113,17 @@ pub struct ChurnConfig {
     /// Probability that a drill also crash-stops the hosting worker,
     /// racing the migration against the failure.
     pub fail_worker_chance: f64,
+    /// Probability that a drill-killed worker later *rejoins*: the
+    /// hardware comes back as a fresh node id with an empty instance set
+    /// and re-registers with its cluster (ROADMAP: worker recovery).
+    pub rejoin_chance: f64,
+    /// Seconds between a kill and its scheduled rejoin.
+    pub rejoin_delay_s: f64,
+    /// Quiet window between the end of the storms and the final drain.
+    /// With no new ops in flight the control plane converges, and the
+    /// harness snapshots the root-vs-census consistency check here —
+    /// while replacements are still alive, so invisible ones would show.
+    pub pre_drain_hold_s: f64,
     /// Abandon convergence watches after this long (an instance that
     /// failed placement can legitimately never converge; the watch must
     /// not pin its service forever).
@@ -144,6 +155,9 @@ impl Default for ChurnConfig {
             drill_every: 20,
             drills: 3,
             fail_worker_chance: 0.5,
+            rejoin_chance: 0.25,
+            rejoin_delay_s: 15.0,
+            pre_drain_hold_s: 8.0,
             watch_timeout_s: 30.0,
         }
     }
@@ -213,6 +227,10 @@ pub struct ChurnDriver {
     replica_cache: BTreeMap<ServiceId, usize>,
     pub failed_workers: BTreeSet<NodeId>,
     pub api_errors: BTreeMap<&'static str, u64>,
+    /// Kills whose hardware is scheduled to rejoin: (dead node, when).
+    /// The driver cannot spawn sim nodes itself; [`run_churn`] applies
+    /// due entries between slices via [`OakTestbed::revive_worker`].
+    pending_rejoin: Vec<(NodeId, SimTime)>,
     // Counters for the report.
     pub submits: u64,
     pub undeploys: u64,
@@ -220,9 +238,11 @@ pub struct ChurnDriver {
     pub scale_downs: u64,
     pub migrations: u64,
     pub drills_done: u64,
+    pub rejoins: u64,
     next_arrival: SimTime,
     ticks: u64,
     end: SimTime,
+    drain_at: SimTime,
     settle_end: SimTime,
     started: bool,
 }
@@ -254,18 +274,36 @@ impl ChurnDriver {
             replica_cache: BTreeMap::new(),
             failed_workers: BTreeSet::new(),
             api_errors: BTreeMap::new(),
+            pending_rejoin: Vec::new(),
             submits: 0,
             undeploys: 0,
             scale_ups: 0,
             scale_downs: 0,
             migrations: 0,
             drills_done: 0,
+            rejoins: 0,
             next_arrival: SimTime::ZERO,
             ticks: 0,
             end: SimTime::ZERO,
+            drain_at: SimTime::ZERO,
             settle_end: SimTime::ZERO,
             started: false,
         }
+    }
+
+    /// Rejoins that have come due by `now`, removed from the pending
+    /// list (called by [`run_churn`] between simulation slices).
+    pub fn take_due_rejoins(&mut self, now: SimTime) -> Vec<NodeId> {
+        let (due, later): (Vec<_>, Vec<_>) =
+            self.pending_rejoin.drain(..).partition(|(_, at)| *at <= now);
+        self.pending_rejoin = later;
+        due.into_iter().map(|(node, _)| node).collect()
+    }
+
+    /// Record a completed rejoin (the testbed revived `old` as `fresh`).
+    pub fn note_rejoined(&mut self, at: SimTime, old: NodeId, fresh: NodeId) {
+        self.rejoins += 1;
+        self.log(at, format!("worker-rejoined {old} as {fresh}"));
     }
 
     fn log(&mut self, now: SimTime, line: String) {
@@ -343,7 +381,13 @@ impl ChurnDriver {
                 l.load = (l.load + step).clamp(0.3, max_load);
                 (l.load, self.scale_watch.contains_key(&service))
             };
-            if in_flight || self.undeploy_watch.contains_key(&service) {
+            if in_flight
+                || self.undeploy_watch.contains_key(&service)
+                || self.migrate_watch.values().any(|(s, _)| *s == service)
+            {
+                // A mid-cutover migration transiently double-counts the
+                // task (original + adopted replacement both live); let it
+                // settle before acting on the replica count.
                 continue;
             }
             let Some(&replicas) = self.replica_cache.get(&service) else {
@@ -394,15 +438,13 @@ impl ChurnDriver {
         }
         // Candidates: running instances of live services, excluding
         // failed workers and anything already migrating. Autoscaled
-        // services are also excluded: a migration replacement is
-        // cluster-local (invisible to the root's replica count), so
-        // migrating an autoscaled service would make the autoscaler
-        // "restore" a replica that never left — over-provisioning the
-        // cluster (see ROADMAP: root-visible replacement tracking).
+        // services are fair game since root-visible replacement tracking
+        // landed: migration successors are registered with the root, so
+        // its replica count stays authoritative through a drill.
         let candidates: Vec<(ServiceId, InstanceId, NodeId)> = self
             .running_cache
             .iter()
-            .filter(|(s, _)| self.live.get(s).map_or(false, |l| !l.autoscaled))
+            .filter(|(s, _)| self.live.contains_key(s))
             .flat_map(|(s, insts)| insts.iter().map(move |(i, n)| (*s, *i, *n)))
             .filter(|(_, i, n)| {
                 !self.migrate_watch.contains_key(i) && !self.failed_workers.contains(n)
@@ -425,6 +467,13 @@ impl ChurnDriver {
             ctx.core.set_failed(node, true);
             self.failed_workers.insert(node);
             ctx.metrics().inc("churn.worker_killed");
+            // The hardware may come back: schedule a rejoin under a
+            // fresh node id (applied by run_churn between slices).
+            if self.rng.chance(self.cfg.rejoin_chance) {
+                let at = ctx.now + SimTime::from_secs(self.cfg.rejoin_delay_s);
+                self.pending_rejoin.push((node, at));
+                self.log(ctx.now, format!("rejoin-scheduled {node}"));
+            }
         }
         self.log(
             ctx.now,
@@ -574,6 +623,7 @@ impl ChurnDriver {
             ApiError::UnknownTask(_) => "unknown_task",
             ApiError::UnknownInstance(_) => "unknown_instance",
             ApiError::NotRunning(_) => "not_running",
+            ApiError::AlreadyReplaced { .. } => "already_replaced",
             ApiError::InvalidReplicas { .. } => "invalid_replicas",
             ApiError::NoFeasiblePlacement { .. } => "no_feasible_placement",
         }
@@ -700,8 +750,10 @@ impl ChurnDriver {
             if self.cfg.scenario.drills() && self.ticks % self.cfg.drill_every == 0 {
                 self.drill(ctx);
             }
-        } else if !self.live.is_empty() {
-            // Final wave: drain everything that is still live.
+        } else if ctx.now >= self.drain_at && !self.live.is_empty() {
+            // Final wave (after the pre-drain hold, which gives the
+            // consistency snapshot a quiet converged control plane):
+            // drain everything that is still live.
             let remaining: Vec<ServiceId> = self.live.keys().copied().collect();
             self.log(ctx.now, format!("final-drain services={}", remaining.len()));
             for s in remaining {
@@ -728,7 +780,9 @@ impl Actor for ChurnDriver {
                 }
                 self.started = true;
                 self.end = ctx.now + SimTime::from_secs(self.cfg.duration_s);
-                self.settle_end = self.end + SimTime::from_secs(self.cfg.settle_s);
+                self.drain_at =
+                    self.end + SimTime::from_secs(self.cfg.pre_drain_hold_s);
+                self.settle_end = self.drain_at + SimTime::from_secs(self.cfg.settle_s);
                 self.next_arrival = ctx.now;
                 self.log(
                     ctx.now,
@@ -811,6 +865,7 @@ pub struct ChurnReport {
     pub scale_downs: u64,
     pub migrations: u64,
     pub workers_killed: usize,
+    pub rejoins: u64,
     pub submit: OpStats,
     pub scale: OpStats,
     pub migrate: OpStats,
@@ -831,8 +886,56 @@ pub struct ChurnReport {
     pub sched_ms_mean: f64,
     pub leaked_instances: usize,
     pub leaked_capacity_mc: u64,
+    /// Root-vs-placement consistency snapshot, taken during the quiet
+    /// pre-drain hold (storms over, replacements still alive): every
+    /// live instance id the root and the clusters disagree about. Must
+    /// be empty — a non-empty diff means cluster-minted successors are
+    /// invisible (or phantom records survive) at the root.
+    pub census_mismatch: usize,
+    pub census_diff: Vec<String>,
+    /// Virtual ms (since sim start) at which the snapshot was taken.
+    pub census_checked_at_ms: f64,
     pub op_log: Vec<String>,
     pub census: Vec<String>,
+}
+
+/// Live-instance disagreements between the root database and the actual
+/// cluster placement: the symmetric difference of the two live-id sets.
+/// `root-only` rows are phantom records (the root believes in an
+/// instance no cluster holds); `cluster-only` rows are invisible
+/// replacements (placed capacity the root cannot see — the bug class
+/// root-visible replacement tracking closes).
+pub fn census_diff(tb: &OakTestbed) -> Vec<String> {
+    let root = tb
+        .sim
+        .actor_as::<RootOrchestrator>(tb.root)
+        .expect("root actor");
+    let mut root_live: BTreeSet<InstanceId> = BTreeSet::new();
+    for rec in root.db.services() {
+        for i in &rec.instances {
+            if !i.state.is_terminal() {
+                root_live.insert(i.instance);
+            }
+        }
+    }
+    let mut cluster_live: BTreeSet<InstanceId> = BTreeSet::new();
+    for (_, orch) in &tb.clusters {
+        let c = tb
+            .sim
+            .actor_as::<ClusterOrchestrator>(*orch)
+            .expect("cluster actor");
+        for (iid, _, _, _) in c.live_instances() {
+            cluster_live.insert(iid);
+        }
+    }
+    let mut out = Vec::new();
+    for i in root_live.difference(&cluster_live) {
+        out.push(format!("root-only {i}"));
+    }
+    for i in cluster_live.difference(&root_live) {
+        out.push(format!("cluster-only {i}"));
+    }
+    out
 }
 
 /// Sorted snapshot of every instance the control plane still knows about,
@@ -958,8 +1061,46 @@ pub fn run_churn(cfg: &ChurnConfig) -> ChurnReport {
         .add_actor(tb.root_node, Box::new(ChurnDriver::new(cfg.clone(), tb.root)));
     tb.sim
         .inject(start, driver_id, SimMsg::Timer(TimerKind::Custom(0)));
-    let horizon = start + SimTime::from_secs(cfg.duration_s + cfg.settle_s + 5.0);
-    tb.sim.run_until(horizon);
+    let horizon = start
+        + SimTime::from_secs(
+            cfg.duration_s + cfg.pre_drain_hold_s + cfg.settle_s + 5.0,
+        );
+    // Consistency snapshot late in the quiet hold: storms are over and
+    // in-flight lifecycle ops have converged, but nothing has been
+    // drained yet — invisible replacements (or phantom root records)
+    // would show here.
+    let census_at =
+        start + SimTime::from_secs(cfg.duration_s + cfg.pre_drain_hold_s * 0.75);
+    // Run in one-virtual-second slices: worker *rejoins* need new sim
+    // nodes/actors, which only the testbed (not an in-sim actor) can
+    // create, so due rejoins are applied between slices. Slice
+    // boundaries are fixed virtual times — fully seed-deterministic.
+    let slice = SimTime::from_secs(1.0);
+    let mut census_diff_rows: Option<(SimTime, Vec<String>)> = None;
+    let mut next = start;
+    while next < horizon {
+        next = std::cmp::min(next + slice, horizon);
+        tb.sim.run_until(next);
+        let due = tb
+            .sim
+            .actor_as_mut::<ChurnDriver>(driver_id)
+            .map(|d| d.take_due_rejoins(next))
+            .unwrap_or_default();
+        for old in due {
+            let fresh = tb.revive_worker(old);
+            if let Some(d) = tb.sim.actor_as_mut::<ChurnDriver>(driver_id) {
+                // Stamped with the slice boundary — the moment the
+                // revival is actually applied — so the op log stays
+                // chronological.
+                d.note_rejoined(next, old, fresh);
+            }
+        }
+        if census_diff_rows.is_none() && next >= census_at {
+            census_diff_rows = Some((next, census_diff(&tb)));
+        }
+    }
+    let (census_checked_at, census_gap) =
+        census_diff_rows.unwrap_or((horizon, Vec::new()));
 
     let msgs1: u64 = oak_labels.iter().map(|l| tb.sim.core.metrics.msgs(l)).sum();
     let bytes1: u64 = oak_labels
@@ -1012,6 +1153,7 @@ pub fn run_churn(cfg: &ChurnConfig) -> ChurnReport {
         scale_downs: d.scale_downs,
         migrations: d.migrations,
         workers_killed: d.failed_workers.len(),
+        rejoins: d.rejoins,
         submit,
         scale,
         migrate,
@@ -1031,6 +1173,9 @@ pub fn run_churn(cfg: &ChurnConfig) -> ChurnReport {
         sched_ms_mean,
         leaked_instances,
         leaked_capacity_mc,
+        census_mismatch: census_gap.len(),
+        census_diff: census_gap,
+        census_checked_at_ms: census_checked_at.as_millis(),
         op_log: d.ops.clone(),
         census: placement_census(&tb),
     }
@@ -1070,7 +1215,8 @@ impl ChurnReport {
             "{{\n  \"bench\": \"churn\",\n  \"seed\": {},\n  \"scenario\": \"{}\",\n  \
              \"duration_s\": {},\n  \"ops_issued\": {},\n  \"unanswered_requests\": {},\n  \
              \"counts\": {{\"submit\": {}, \"undeploy\": {}, \"scale_up\": {}, \
-             \"scale_down\": {}, \"migrate\": {}, \"workers_killed\": {}}},\n  \
+             \"scale_down\": {}, \"migrate\": {}, \"workers_killed\": {}, \
+             \"rejoins\": {}}},\n  \
              \"latency_ms\": {{\n    \"submit_to_running\": {},\n    \
              \"scale_to_converged\": {},\n    \"migrate_to_cutover\": {},\n    \
              \"undeploy_to_drained\": {}\n  }},\n  \
@@ -1080,6 +1226,8 @@ impl ChurnReport {
              \"sched_ms_mean\": {:.3}}},\n  \
              \"api_errors\": {{{}}},\n  \
              \"leaks\": {{\"instances\": {}, \"capacity_mc\": {}}},\n  \
+             \"census_consistency\": {{\"checked_at_ms\": {:.1}, \
+             \"mismatch\": {}, \"diff\": {}}},\n  \
              \"op_log\": {},\n  \"census\": {}\n}}\n",
             self.seed,
             self.scenario,
@@ -1092,6 +1240,7 @@ impl ChurnReport {
             self.scale_downs,
             self.migrations,
             self.workers_killed,
+            self.rejoins,
             stats(&self.submit),
             stats(&self.scale),
             stats(&self.migrate),
@@ -1107,6 +1256,9 @@ impl ChurnReport {
             errors.join(", "),
             self.leaked_instances,
             self.leaked_capacity_mc,
+            self.census_checked_at_ms,
+            self.census_mismatch,
+            strings(&self.census_diff),
             strings(&self.op_log),
             strings(&self.census),
         )
@@ -1160,6 +1312,11 @@ impl ChurnReport {
         cost.row(vec![
             "workers_killed".into(),
             self.workers_killed.to_string(),
+        ]);
+        cost.row(vec!["rejoins".into(), self.rejoins.to_string()]);
+        cost.row(vec![
+            "census_mismatch".into(),
+            self.census_mismatch.to_string(),
         ]);
         cost.row(vec![
             "leaked_instances".into(),
@@ -1220,5 +1377,11 @@ mod tests {
         assert_eq!(v.get("seed").as_u64(), Some(cfg.seed));
         assert!(v.get("latency_ms").get("submit_to_running").get("count").as_u64()
             .is_some());
+        assert!(v
+            .get("census_consistency")
+            .get("mismatch")
+            .as_u64()
+            .is_some());
+        assert!(v.get("counts").get("rejoins").as_u64().is_some());
     }
 }

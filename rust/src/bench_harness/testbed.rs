@@ -88,6 +88,11 @@ pub struct OakTestbed {
     pub clusters: Vec<(NodeId, ActorId)>,
     /// All worker (node, engine) pairs across clusters.
     pub workers: Vec<(NodeId, ActorId)>,
+    /// Worker node → index into `clusters` (owning orchestrator), kept
+    /// current across [`OakTestbed::revive_worker`] rebirths.
+    pub worker_cluster: std::collections::BTreeMap<NodeId, usize>,
+    /// Next unused simulated-node id (revivals mint fresh identities).
+    next_node: u32,
     /// The northbound [`ApiClient`] actor (the "developer").
     pub client: ActorId,
     pub cfg: OakTestbedConfig,
@@ -128,6 +133,7 @@ pub fn build_oakestra(cfg: OakTestbedConfig) -> OakTestbed {
     // Cluster orchestrators on L VMs, workers on S VMs (HPC) or HET mix.
     let mut clusters = Vec::new();
     let mut workers = Vec::new();
+    let mut worker_cluster = std::collections::BTreeMap::new();
     let mut next_node = 1u32;
     for c in 0..cfg.clusters {
         let cnode = NodeId(next_node);
@@ -169,6 +175,7 @@ pub fn build_oakestra(cfg: OakTestbedConfig) -> OakTestbed {
                 Box::new(WorkerEngine::new(WorkerConfig::new(spec), orch)),
             );
             workers.push((wnode, engine));
+            worker_cluster.insert(wnode, c);
             // Register workers shortly after their cluster.
             sim.inject(
                 SimTime::from_millis(20.0 + w as f64),
@@ -195,6 +202,8 @@ pub fn build_oakestra(cfg: OakTestbedConfig) -> OakTestbed {
         root_node,
         clusters,
         workers,
+        worker_cluster,
+        next_node,
         client,
         cfg,
     }
@@ -242,6 +251,61 @@ impl OakTestbed {
     /// are dropped until the cluster's health sweep deregisters it).
     pub fn fail_worker(&mut self, node: NodeId) {
         self.sim.set_node_failed(node, true);
+    }
+
+    /// Worker rejoin (ROADMAP: recovery, not just crash-stop): the
+    /// hardware behind a crashed worker comes back as a **fresh node id**
+    /// with an empty instance set and re-registers with the same cluster
+    /// orchestrator through the normal `RegisterWorker` handshake. The
+    /// old identity stays dead (its containers died with it); capacity
+    /// returns under the new identity. Returns the new node id.
+    pub fn revive_worker(&mut self, dead: NodeId) -> NodeId {
+        let cluster_idx = *self
+            .worker_cluster
+            .get(&dead)
+            .expect("revive_worker: node was never a worker of this testbed");
+        let orch = self.clusters[cluster_idx].1;
+        // The *same hardware* returns: reuse the dead worker's class and
+        // location under the fresh identity, so rebirths never drift the
+        // fleet's capacity mix (important for heterogeneous topologies).
+        let dead_engine = self
+            .workers
+            .iter()
+            .find(|(n, _)| *n == dead)
+            .map(|(_, a)| *a)
+            .expect("revive_worker: dead worker engine");
+        let mut spec = self
+            .sim
+            .actor_as::<WorkerEngine>(dead_engine)
+            .expect("worker actor")
+            .cfg
+            .spec
+            .clone();
+        let node = NodeId(self.next_node);
+        self.next_node += 1;
+        spec.node = node;
+        self.sim.add_node(node, spec.class);
+        let engine = self.sim.add_actor(
+            node,
+            Box::new(WorkerEngine::new(WorkerConfig::new(spec), orch)),
+        );
+        // Data-plane peer wiring, both directions (mirrors build-time
+        // setup; dead peers are harmless — sends to them are dropped).
+        let peers: Vec<(NodeId, ActorId)> = self.workers.clone();
+        for (n, a) in &peers {
+            if let Some(w) = self.sim.actor_as_mut::<WorkerEngine>(*a) {
+                w.learn_node_actor(node, engine);
+            }
+            if let Some(w) = self.sim.actor_as_mut::<WorkerEngine>(engine) {
+                w.learn_node_actor(*n, *a);
+            }
+        }
+        self.workers.push((node, engine));
+        self.worker_cluster.insert(node, cluster_idx);
+        let at = self.sim.now();
+        self.sim
+            .inject(at, engine, SimMsg::Timer(TimerKind::Custom(0)));
+        node
     }
 
     /// Submit an SLA through the northbound API; deployment completion

@@ -16,7 +16,7 @@ use crate::scheduler::{
     LdpContext, LdpScheduler, Placement, PlacementInput, RomScheduler, RomStrategy,
     TaskScheduler,
 };
-use crate::sim::{Actor, ActorId, Ctx, OakMsg, SimMsg, TimerKind};
+use crate::sim::{Actor, ActorId, Ctx, OakMsg, ReplacementReason, SimMsg, TimerKind};
 use crate::sla::TaskSla;
 use crate::util::{ClusterId, InstanceId, NodeId, ServiceId, SimTime, TaskId};
 use crate::vivaldi::Coord;
@@ -103,6 +103,12 @@ pub struct ClusterOrchestrator {
     /// Services the root has torn down (`UndeployService` seen). Late
     /// delegations, recoveries and migrations for them are refused.
     dead_services: BTreeSet<ServiceId>,
+    /// Replacements announced to the root whose adoption verdict is
+    /// still pending: replacement → (original, reason, target worker).
+    /// Consulted when the `InstanceReplacedAck` arrives (refused ⇒ tear
+    /// the replacement down; a recovery refusal escalates instead so the
+    /// replica is not silently lost).
+    pending_adoptions: BTreeMap<InstanceId, (InstanceId, ReplacementReason, NodeId)>,
     /// Last scheduler wall time (reported to root for Fig. 6/8).
     pub last_calc: SimTime,
     pub sched_ops: u64,
@@ -134,6 +140,7 @@ impl ClusterOrchestrator {
             ldp_ctx: LdpContext::default(),
             interest: BTreeMap::new(),
             migrations: BTreeMap::new(),
+            pending_adoptions: BTreeMap::new(),
             next_local: 0,
             undeploy_tombstones: BTreeSet::new(),
             dead_services: BTreeSet::new(),
@@ -207,6 +214,35 @@ impl ClusterOrchestrator {
             tag | ((self.cfg.id.0 as u64 & 0xFF) << 48)
                 | (LOCAL_MINT_BASE + self.next_local),
         )
+    }
+
+    /// Register a locally-minted successor with the root (the cluster
+    /// half of the replacement-tracking protocol). Sent at mint time so
+    /// the root's placement view stays authoritative; the verdict comes
+    /// back as `InstanceReplacedAck` (refused ⇒ teardown).
+    fn announce_replacement(
+        &mut self,
+        ctx: &mut Ctx<'_>,
+        original: InstanceId,
+        replacement: InstanceId,
+        reason: ReplacementReason,
+    ) {
+        let Some(li) = self.instances.get(&replacement) else {
+            return;
+        };
+        let (task, node) = (li.task, li.node);
+        self.pending_adoptions
+            .insert(replacement, (original, reason, node));
+        let msg = SimMsg::Oak(OakMsg::InstanceReplaced {
+            cluster: self.cfg.id,
+            service: task.service,
+            task,
+            original,
+            replacement,
+            reason,
+        });
+        let bytes = msg.default_wire_bytes() + WS_FRAME_OVERHEAD;
+        ctx.send(self.root, msg, bytes, labels::CLUSTER_TO_ROOT);
     }
 
     /// Locally finalize one instance into a terminal state: push the
@@ -382,6 +418,12 @@ impl ClusterOrchestrator {
     /// the root when the cluster cannot host them (paper §4.2).
     fn handle_worker_dead(&mut self, ctx: &mut Ctx<'_>, node: NodeId) {
         ctx.metrics().inc("cluster.worker_dead");
+        // Release the per-worker bookkeeping charged at registration —
+        // deregistration must mirror it or long churn runs drift the
+        // cluster's reported footprint.
+        if self.profile(node).is_some() {
+            ctx.add_mem(-mem::PER_WORKER_MB);
+        }
         self.workers.retain(|w| w.spec.node != node);
         self.worker_actors.remove(&node);
         self.last_report.remove(&node);
@@ -414,13 +456,18 @@ impl ClusterOrchestrator {
             }
             match self.run_scheduler(ctx, task, &sla) {
                 Placement::Placed { worker, .. } => {
-                    // Local recovery under a fresh locally-minted id.
-                    // NOTE: the root drops status for ids it never
-                    // minted, so the replacement is invisible to the
-                    // root's replica count until root-visible replacement
-                    // tracking lands (ROADMAP open item).
+                    // Local recovery under a fresh locally-minted id,
+                    // registered with the root as the successor of the
+                    // dead instance so the global replica count stays
+                    // authoritative.
                     let new_id = self.mint_local(RECOVERY_TAG);
                     self.deploy_to(ctx, new_id, task, sla, worker);
+                    self.announce_replacement(
+                        ctx,
+                        iid,
+                        new_id,
+                        ReplacementReason::LocalRecovery,
+                    );
                     ctx.metrics().inc("cluster.local_recovery");
                 }
                 Placement::Infeasible => {
@@ -488,6 +535,12 @@ impl ClusterOrchestrator {
                 let replacement = self.mint_local(MIGRATION_TAG);
                 self.migrations.insert(replacement, original);
                 self.deploy_to(ctx, replacement, task, sla, worker);
+                self.announce_replacement(
+                    ctx,
+                    original,
+                    replacement,
+                    ReplacementReason::Migration,
+                );
                 true
             }
             Placement::Infeasible => {
@@ -565,8 +618,19 @@ impl Actor for ClusterOrchestrator {
 
             SimMsg::Oak(OakMsg::RegisterWorker { spec, engine }) => {
                 ctx.charge_cpu(costs::SUBMIT_MS * 0.5);
-                ctx.add_mem(mem::PER_WORKER_MB);
                 let node = spec.node;
+                if self.profile(node).is_some() {
+                    // Re-register handshake: a worker process restarted
+                    // under an id this cluster still tracks. The
+                    // returning engine has an empty instance set, so
+                    // everything attributed to the old process died with
+                    // it — run the dead-worker path (finalize + local
+                    // recovery/escalation) before accepting the fresh
+                    // registration below.
+                    ctx.metrics().inc("cluster.worker_reregistered");
+                    self.handle_worker_dead(ctx, node);
+                }
+                ctx.add_mem(mem::PER_WORKER_MB);
                 let subnet = self.subnets.subnet_for(node);
                 self.broker.subscribe(
                     &format!("cluster/{}/worker/{}/cmd", self.cfg.id.0, node.0),
@@ -741,8 +805,84 @@ impl Actor for ClusterOrchestrator {
                 }
             }
 
+            SimMsg::Oak(OakMsg::InstanceReplacedAck {
+                original: _,
+                replacement,
+                adopted,
+            }) => {
+                ctx.charge_cpu(costs::PING_MS);
+                let pending = self.pending_adoptions.remove(&replacement);
+                if adopted {
+                    ctx.metrics().inc("cluster.replacement_adopted");
+                    // Close the adoption/status reorder window: re-push
+                    // the replacement's current state so a Running (or
+                    // terminal) report that raced ahead of the adoption
+                    // is not lost to the root forever.
+                    let status = match self.instances.get(&replacement) {
+                        Some(li) => Some((li.node, li.state)),
+                        // The replacement died before the verdict came
+                        // back (second failure): the root adopted a
+                        // record whose Failed report it may have dropped
+                        // pre-adoption — settle it now.
+                        None => pending.map(|(_, _, node)| (node, ServiceState::Failed)),
+                    };
+                    if let Some((node, state)) = status {
+                        let msg = SimMsg::Oak(OakMsg::InstanceStatus {
+                            instance: replacement,
+                            node,
+                            state,
+                        });
+                        let bytes = msg.default_wire_bytes() + WS_FRAME_OVERHEAD;
+                        ctx.send(self.root, msg, bytes, labels::CLUSTER_TO_ROOT);
+                    }
+                } else {
+                    // Root refused custody (retired service or broken
+                    // lineage): the replacement must not outlive the
+                    // refusal — same discipline as ServiceRetired.
+                    ctx.metrics().inc("cluster.replacement_refused");
+                    let escalate = match (pending, self.instances.get(&replacement)) {
+                        (Some((_, ReplacementReason::LocalRecovery, _)), Some(li))
+                            if !self.dead_services.contains(&li.task.service) =>
+                        {
+                            // A refused *recovery* would silently lose a
+                            // replica; hand the reschedule back to the
+                            // root (which refuses retired services
+                            // itself, so this cannot resurrect one).
+                            Some((li.task, li.sla.clone()))
+                        }
+                        _ => None,
+                    };
+                    if self.migrations.remove(&replacement).is_some() {
+                        ctx.metrics().inc("cluster.migration_cancelled");
+                    }
+                    ctx.send_local(
+                        ctx.self_id,
+                        SimMsg::Oak(OakMsg::UndeployInstance {
+                            instance: replacement,
+                        }),
+                    );
+                    if let Some((task, sla)) = escalate {
+                        let msg = SimMsg::Oak(OakMsg::EscalateReschedule {
+                            task,
+                            instance: replacement,
+                            sla,
+                        });
+                        let bytes = msg.default_wire_bytes() + WS_FRAME_OVERHEAD;
+                        ctx.send(self.root, msg, bytes, labels::CLUSTER_TO_ROOT);
+                    }
+                }
+            }
+
             SimMsg::Oak(OakMsg::UndeployInstance { instance }) => {
                 ctx.charge_cpu(costs::TABLE_OP_MS);
+                // A targeted teardown of a migration *replacement*
+                // (root-side scale-shrink now sees adopted successors):
+                // cancel the in-flight migration so the original keeps
+                // running and the bookkeeping entry cannot pin it as
+                // "already migrating" forever.
+                if self.migrations.remove(&instance).is_some() {
+                    ctx.metrics().inc("cluster.migration_cancelled");
+                }
                 // Cancel any in-flight migration *of this instance*: the
                 // original is being torn down deliberately (scale-down or
                 // a targeted undeploy), so its replacement must go too —

@@ -12,6 +12,26 @@ use crate::model::{InstanceRecord, ServiceSpec, ServiceState, TaskSpec};
 use crate::sla::ServiceSla;
 use crate::util::{ClusterId, InstanceId, NodeId, ServiceId, SimTime, TaskId};
 
+/// Why the root refused to adopt a cluster-minted successor. Every
+/// refusal obliges the announcing cluster to tear the replacement down.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum AdoptError {
+    /// No record of the service at all.
+    UnknownService,
+    /// The service was undeployed: it may never grow again (mirrors
+    /// [`ServiceRecord::retired`] / `mint_replacement`'s refusal).
+    Retired,
+    /// The claimed original was never registered with (or adopted by)
+    /// the root — the lineage chain is broken.
+    UnknownOriginal,
+    /// Task does not belong to the service, or contradicts the
+    /// original's task.
+    TaskMismatch,
+    /// The original already has a *different* successor, or the
+    /// replacement id is already taken by an unrelated record.
+    LineageConflict,
+}
+
 /// Root-side record of one submitted service.
 #[derive(Clone, Debug)]
 pub struct ServiceRecord {
@@ -53,6 +73,13 @@ impl ServiceRecord {
 #[derive(Clone, Debug, Default)]
 pub struct ServiceDb {
     services: BTreeMap<ServiceId, ServiceRecord>,
+    /// Instance → owning service. Status/undeploy/migrate paths resolve
+    /// instance ids on every report; without this the root pays an
+    /// O(services × instances) scan per `InstanceStatus` under churn.
+    /// Maintained at every record-creation point (register, mint,
+    /// adopt); entries live as long as their records (which are kept for
+    /// lineage and post-mortem status).
+    index: BTreeMap<InstanceId, ServiceId>,
     next_service: u32,
     next_instance: u64,
 }
@@ -89,6 +116,7 @@ impl ServiceDb {
             let iid = InstanceId(self.next_instance);
             self.next_instance += 1;
             instances.push(InstanceRecord::new(iid, t.id));
+            self.index.insert(iid, id);
             ids.push(iid);
         }
 
@@ -129,7 +157,70 @@ impl ServiceDb {
             .max()
             .unwrap_or(0);
         rec.instances.push(inst);
+        self.index.insert(iid, task.service);
         Some(iid)
+    }
+
+    /// Successor registration (the root half of the cluster→root
+    /// replacement-tracking protocol): atomically adopt a cluster-minted
+    /// `replacement` as the successor of `original`. The original record
+    /// is retired from further migration by the lineage link; its
+    /// lifecycle state still converges through the normal status path (a
+    /// migration original keeps running until cutover). Duplicate
+    /// announcements of the same lineage are idempotent (`Ok(false)`).
+    /// Returns `Ok(true)` when a new record was created.
+    pub fn adopt_successor(
+        &mut self,
+        service: ServiceId,
+        task: TaskId,
+        original: InstanceId,
+        replacement: InstanceId,
+    ) -> Result<bool, AdoptError> {
+        let rec = self
+            .services
+            .get_mut(&service)
+            .ok_or(AdoptError::UnknownService)?;
+        if rec.retired {
+            return Err(AdoptError::Retired);
+        }
+        if task.service != service || rec.spec.task(task).is_none() {
+            return Err(AdoptError::TaskMismatch);
+        }
+        if let Some(existing) = rec.instance(replacement) {
+            // Re-announcement (lost/duplicated ack): already adopted.
+            return if existing.predecessor == Some(original) {
+                Ok(false)
+            } else {
+                Err(AdoptError::LineageConflict)
+            };
+        }
+        let Some(orig) = rec.instance(original) else {
+            return Err(AdoptError::UnknownOriginal);
+        };
+        if orig.task != task {
+            return Err(AdoptError::TaskMismatch);
+        }
+        if orig.successor.is_some() {
+            // A different replacement already superseded the original.
+            return Err(AdoptError::LineageConflict);
+        }
+        let mut inst = InstanceRecord::new(replacement, task);
+        inst.generation = orig.generation + 1;
+        inst.predecessor = Some(original);
+        // The cluster deploys the replacement at mint time, so by the
+        // time this registration arrives it is already past Requested.
+        let _ = inst.transition(ServiceState::Scheduled);
+        rec.instance_mut(original).unwrap().successor = Some(replacement);
+        rec.instances.push(inst);
+        self.index.insert(replacement, service);
+        Ok(true)
+    }
+
+    /// Resolve the owning service of any instance the root has ever
+    /// tracked — O(log n) via the instance index instead of a full
+    /// database scan.
+    pub fn service_of_instance(&self, instance: InstanceId) -> Option<ServiceId> {
+        self.index.get(&instance).copied()
     }
 
     pub fn service(&self, id: ServiceId) -> Option<&ServiceRecord> {
@@ -227,6 +318,71 @@ mod tests {
             db.mint_replacement(task).is_none(),
             "an undeployed service must never grow again"
         );
+    }
+
+    #[test]
+    fn adopt_successor_links_lineage_and_indexes() {
+        let mut db = ServiceDb::default();
+        let (id, ids) = db.register(simple_sla("app", 1000, 100), SimTime::ZERO);
+        let task = TaskId {
+            service: id,
+            index: 0,
+        };
+        let repl = InstanceId(1 << 62 | 77);
+        assert_eq!(db.adopt_successor(id, task, ids[0], repl), Ok(true));
+        let rec = db.service(id).unwrap();
+        assert_eq!(rec.instance(ids[0]).unwrap().successor, Some(repl));
+        let r = rec.instance(repl).unwrap();
+        assert_eq!(r.predecessor, Some(ids[0]));
+        assert_eq!(r.generation, 1);
+        assert_eq!(r.state, ServiceState::Scheduled, "adopted as deployed");
+        assert_eq!(db.service_of_instance(repl), Some(id));
+        assert_eq!(db.service_of_instance(ids[0]), Some(id));
+        // Duplicate announcement of the same lineage is idempotent.
+        assert_eq!(db.adopt_successor(id, task, ids[0], repl), Ok(false));
+        // A *different* replacement for the same original is refused.
+        assert_eq!(
+            db.adopt_successor(id, task, ids[0], InstanceId(1 << 62 | 78)),
+            Err(AdoptError::LineageConflict)
+        );
+        // Chained adoption: the replacement itself can be superseded.
+        let repl2 = InstanceId(1 << 63 | 5);
+        assert_eq!(db.adopt_successor(id, task, repl, repl2), Ok(true));
+        assert_eq!(db.service(id).unwrap().instance(repl2).unwrap().generation, 2);
+    }
+
+    #[test]
+    fn adopt_successor_refusals() {
+        let mut db = ServiceDb::default();
+        let (id, ids) = db.register(simple_sla("app", 1000, 100), SimTime::ZERO);
+        let task = TaskId {
+            service: id,
+            index: 0,
+        };
+        let repl = InstanceId(1 << 62 | 1);
+        // Unknown service.
+        assert_eq!(
+            db.adopt_successor(ServiceId(99), TaskId { service: ServiceId(99), index: 0 }, ids[0], repl),
+            Err(AdoptError::UnknownService)
+        );
+        // Unknown original (lineage never registered).
+        assert_eq!(
+            db.adopt_successor(id, task, InstanceId(555), repl),
+            Err(AdoptError::UnknownOriginal)
+        );
+        // Task not part of the service.
+        assert_eq!(
+            db.adopt_successor(id, TaskId { service: id, index: 7 }, ids[0], repl),
+            Err(AdoptError::TaskMismatch)
+        );
+        // Retired service refuses adoption — an undeploy racing a
+        // replacement registration must not resurrect the service.
+        db.service_mut(id).unwrap().retired = true;
+        assert_eq!(
+            db.adopt_successor(id, task, ids[0], repl),
+            Err(AdoptError::Retired)
+        );
+        assert!(db.service(id).unwrap().instance(repl).is_none());
     }
 
     #[test]

@@ -26,7 +26,7 @@ mod root;
 mod worker;
 
 pub use cluster::{ClusterConfig, ClusterOrchestrator, SchedulerKind};
-pub use db::{ServiceDb, ServiceRecord};
+pub use db::{AdoptError, ServiceDb, ServiceRecord};
 pub use root::{RootConfig, RootOrchestrator};
 pub use worker::{WorkerConfig, WorkerEngine};
 
@@ -62,6 +62,9 @@ pub mod costs {
     pub const UNDEPLOY_MS: f64 = 0.3;
     /// Root-side status/list read (database view construction).
     pub const STATUS_MS: f64 = 0.05;
+    /// Root-side successor adoption (lineage validation + record mint +
+    /// ack) for one cluster-announced replacement.
+    pub const ADOPT_MS: f64 = 0.15;
     /// Root scheduling: per candidate cluster scored.
     pub const ROOT_SCHED_PER_CLUSTER_MS: f64 = 0.02;
     /// Cluster scheduling: per worker scored (ROM).

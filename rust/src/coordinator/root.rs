@@ -12,7 +12,7 @@ use crate::hierarchy::{ClusterTree, ROOT};
 use crate::messaging::{labels, WsLink, WS_FRAME_OVERHEAD};
 use crate::model::ServiceState;
 use crate::scheduler::rank_clusters;
-use crate::sim::{Actor, ActorId, Ctx, OakMsg, SimMsg, TimerKind};
+use crate::sim::{Actor, ActorId, Ctx, OakMsg, ReplacementReason, SimMsg, TimerKind};
 use crate::sla::TaskSla;
 use crate::util::{ClusterId, InstanceId, ServiceId, SimTime, TaskId};
 
@@ -170,8 +170,23 @@ impl RootOrchestrator {
         };
         if inst.state != to && inst.state.can_transition(to) {
             let _ = inst.transition(to);
+            let pred = inst.predecessor;
             if to.is_terminal() {
                 ctx.add_mem(-mem::PER_INSTANCE_MB);
+                // A successor dying *before* its original (migration
+                // cancelled by a scale-shrink or targeted undeploy, or
+                // the replacement's worker failing mid-cutover) releases
+                // the lineage link: the original is still the live head
+                // of the chain and must stay migratable.
+                if let Some(p) = pred {
+                    let pred_live = rec
+                        .instance(p)
+                        .map(|i| !i.state.is_terminal())
+                        .unwrap_or(false);
+                    if pred_live {
+                        rec.instance_mut(p).unwrap().successor = None;
+                    }
+                }
             }
             true
         } else {
@@ -271,20 +286,37 @@ impl RootOrchestrator {
         let mut grow = Vec::new();
         let mut shrink = Vec::new();
         for tid in &targets {
-            let mut live: Vec<InstanceId> = rec
+            // Count *logical* replicas: an in-flight lineage pair — a
+            // live original plus its live adopted successor (migration
+            // mid-cutover) — is ONE replica, not two; the successor is
+            // the original's future, not an extra copy. Counting raw
+            // records would make a mid-migration scale-up under-grow
+            // and a scale-to-current-count tear the pair apart. Each
+            // pair is represented by its original (live head): tearing
+            // the original down cascades the successor's teardown at
+            // the cluster, removing the whole logical replica at once.
+            let mut live: Vec<(u32, InstanceId)> = rec
                 .instances
                 .iter()
                 .filter(|i| i.task == *tid && !i.state.is_terminal())
-                .map(|i| i.instance)
+                .filter(|i| {
+                    i.predecessor
+                        .and_then(|p| rec.instance(p))
+                        .map(|p| p.state.is_terminal())
+                        .unwrap_or(true)
+                })
+                .map(|i| (i.generation, i.instance))
                 .collect();
             if live.len() < replicas {
                 let sla = rec.spec.task(*tid).unwrap().sla.clone();
                 grow.push((*tid, replicas - live.len(), sla));
             } else if live.len() > replicas {
-                // Tear down the newest instances first so the
-                // longest-lived (generation-0) replicas survive.
+                // Tear down the newest *generations* first so the
+                // longest-lived replicas survive (ordered by
+                // generation, not raw id: locally-minted ids carry tag
+                // bits that do not reflect age).
                 live.sort();
-                for iid in live.split_off(replicas) {
+                for (_, iid) in live.split_off(replicas) {
                     shrink.push((iid, rec.placement.get(&iid).copied()));
                 }
             }
@@ -341,8 +373,13 @@ impl RootOrchestrator {
                     );
                     return;
                 }
-                ctx.add_mem(mem::PER_INSTANCE_MB * sla.constraints.len() as f64);
                 let (service, instances) = self.db.register(sla, ctx.now);
+                // Charge bookkeeping per *registered record*, not per SLA
+                // row: the release side (transition_instance) frees one
+                // PER_INSTANCE_MB per record that reaches a terminal
+                // state, so tying the charge to the same unit keeps the
+                // gauge drift-free over long churn runs.
+                ctx.add_mem(mem::PER_INSTANCE_MB * instances.len() as f64);
                 self.tracking.insert(
                     service,
                     DeployTracking {
@@ -471,6 +508,21 @@ impl RootOrchestrator {
                     );
                     return;
                 };
+                if let Some(successor) = inst.successor {
+                    // The lineage already moved on (a migration or
+                    // recovery superseded this id): name the successor so
+                    // the caller can retarget.
+                    self.respond(
+                        ctx,
+                        reply_to,
+                        request_id,
+                        ApiResponse::Error(ApiError::AlreadyReplaced {
+                            instance,
+                            successor,
+                        }),
+                    );
+                    return;
+                }
                 if inst.state != ServiceState::Running {
                     self.respond(
                         ctx,
@@ -531,9 +583,11 @@ impl RootOrchestrator {
                         self.placement_watch.remove(&iid);
                     }
                 }
-                // Broadcast the teardown: clusters also hold replacement
-                // instances they minted during migration/local recovery,
-                // which the root database never tracked individually.
+                // Broadcast the teardown: adopted replacements are
+                // root-visible now, but clusters may still hold
+                // replacements whose registration is in flight (or was
+                // refused) — the service-wide broadcast catches those
+                // strays and seeds the clusters' dead-service tombstones.
                 let actors: Vec<ActorId> = self.cluster_actors.values().copied().collect();
                 for actor in actors {
                     let msg = SimMsg::Oak(OakMsg::UndeployService { service });
@@ -700,28 +754,108 @@ impl Actor for RootOrchestrator {
                 state,
             }) => {
                 ctx.charge_cpu(costs::CLUSTER_REPORT_MS);
-                // Find owning service (instance ids are globally unique).
-                let service = self
-                    .db
-                    .services()
-                    .find(|r| r.instance(instance).is_some())
-                    .map(|r| r.spec.id);
-                if let Some(sid) = service {
-                    if let Some(rec) = self.db.service_mut(sid) {
-                        if let Some(inst) = rec.instance_mut(instance) {
-                            inst.worker = Some(node);
+                // Resolve the owning service through the instance index
+                // (instance ids are globally unique) — O(log n) instead
+                // of a full database scan per report. Adopted successor
+                // ids resolve here too, so cluster-minted replacements
+                // are no longer dropped.
+                match self.db.service_of_instance(instance) {
+                    Some(sid) => {
+                        if let Some(rec) = self.db.service_mut(sid) {
+                            if let Some(inst) = rec.instance_mut(instance) {
+                                inst.worker = Some(node);
+                            }
+                        }
+                        self.transition_instance(ctx, instance, sid, state);
+                        if state == ServiceState::Running {
+                            self.maybe_notify_deployed(ctx, sid);
                         }
                     }
-                    self.transition_instance(ctx, instance, sid, state);
-                    if state == ServiceState::Running {
-                        self.maybe_notify_deployed(ctx, sid);
+                    None => {
+                        // Status for an id the root never minted nor
+                        // adopted: either the InstanceReplaced that
+                        // introduces it is still in flight (the ack echo
+                        // re-delivers the state once adoption lands) or
+                        // its registration was refused (the cluster is
+                        // tearing it down).
+                        ctx.metrics().inc("root.status_unknown_instance");
                     }
+                }
+            }
+
+            SimMsg::Oak(OakMsg::InstanceReplaced {
+                cluster,
+                service,
+                task,
+                original,
+                replacement,
+                reason,
+            }) => {
+                ctx.charge_cpu(costs::ADOPT_MS);
+                let adopted = match self.db.adopt_successor(service, task, original, replacement)
+                {
+                    Ok(newly) => {
+                        if newly {
+                            ctx.metrics().inc(match reason {
+                                ReplacementReason::Migration => "root.adopted_migration",
+                                ReplacementReason::LocalRecovery => {
+                                    "root.adopted_recovery"
+                                }
+                            });
+                            // The adopted record is live bookkeeping,
+                            // charged exactly like a root-minted one and
+                            // released on its terminal transition.
+                            ctx.add_mem(mem::PER_INSTANCE_MB);
+                            if let Some(rec) = self.db.service_mut(service) {
+                                // The successor runs where its lineage
+                                // ran: inherit the original's delegation
+                                // target so shrink/undeploy/migrate can
+                                // route to it.
+                                rec.placement.insert(replacement, cluster);
+                            }
+                            // Inherit any placement-watch waiter: the
+                            // caller asked about the lineage, not one id.
+                            if let Some(w) = self.placement_watch.remove(&original) {
+                                self.placement_watch.insert(replacement, w);
+                            }
+                            if reason == ReplacementReason::LocalRecovery {
+                                // The original died with its worker; its
+                                // Failed status may be in flight or lost,
+                                // so settle the record (and release its
+                                // bookkeeping) here. A later duplicate
+                                // terminal report is a no-op.
+                                self.transition_instance(
+                                    ctx,
+                                    original,
+                                    service,
+                                    ServiceState::Failed,
+                                );
+                            }
+                        }
+                        true
+                    }
+                    Err(e) => {
+                        ctx.metrics().inc(match e {
+                            super::db::AdoptError::Retired => "root.adopt_refused_retired",
+                            _ => "root.adopt_refused",
+                        });
+                        false
+                    }
+                };
+                if let Some(actor) = self.cluster_actors.get(&cluster).copied() {
+                    let msg = SimMsg::Oak(OakMsg::InstanceReplacedAck {
+                        original,
+                        replacement,
+                        adopted,
+                    });
+                    let bytes = msg.default_wire_bytes() + WS_FRAME_OVERHEAD;
+                    ctx.send(actor, msg, bytes, labels::ROOT_TO_CLUSTER);
                 }
             }
 
             SimMsg::Oak(OakMsg::EscalateReschedule {
                 task,
-                instance: _,
+                instance,
                 sla,
             }) => {
                 // Cluster could not recover locally: root re-runs the
@@ -732,6 +866,22 @@ impl Actor for RootOrchestrator {
                 if let Some(new_id) = self.db.mint_replacement(task) {
                     ctx.metrics().inc("root.reschedules");
                     ctx.add_mem(mem::PER_INSTANCE_MB);
+                    // Record successor lineage when the escalated
+                    // instance is a known dead record (worker-death
+                    // escalation). An SLA-violation escalation leaves a
+                    // still-running original — that one is replication,
+                    // not succession, and stays migratable.
+                    if let Some(rec) = self.db.service_mut(task.service) {
+                        let orig_dead = rec
+                            .instance(instance)
+                            .map(|i| i.state.is_terminal() && i.successor.is_none())
+                            .unwrap_or(false);
+                        if orig_dead {
+                            rec.instance_mut(instance).unwrap().successor = Some(new_id);
+                            rec.instance_mut(new_id).unwrap().predecessor =
+                                Some(instance);
+                        }
+                    }
                     self.delegate(ctx, new_id, task, sla);
                 }
             }

@@ -88,6 +88,9 @@ fn print_help() {
              --scenario submit|scale|failover|all   storm generators to run (default all)\n\
              --seed N --duration S --clusters N --workers N --scheduler rom|ldp\n\
              --quick                          small CI-sized storm\n\
+             --rejoin-chance P                killed workers rejoin as fresh nodes (0..1)\n\
+             --strict                         exit non-zero on leaks, unanswered requests\n\
+                                              or a root-vs-census mismatch\n\
              --out PATH                       artifact path (default BENCH_churn.json)\n\
            oakestra ldp [--workers N]         PJRT-accelerated LDP placement demo\n\
            oakestra check-artifacts           verify the AOT artifact bundle\n\
@@ -372,6 +375,10 @@ fn cmd_churn(args: &[String]) -> Result<()> {
     if let Some(s) = flag_value(args, "--scheduler") {
         cfg.scheduler = oakestra::config::parse_scheduler(s)?;
     }
+    if let Some(s) = flag_value(args, "--rejoin-chance") {
+        cfg.rejoin_chance = s.parse()?;
+    }
+    let strict = args.iter().any(|a| a == "--strict");
     let out = flag_value(args, "--out").unwrap_or("BENCH_churn.json");
     println!(
         "churn: scenario={:?} seed={} topology {}x{} scheduler {:?}, {}s virtual churn",
@@ -396,9 +403,34 @@ fn cmd_churn(args: &[String]) -> Result<()> {
             report.leaked_instances, report.leaked_capacity_mc
         );
     }
+    if report.census_mismatch > 0 {
+        eprintln!(
+            "warning: root view and placement census disagree on {} live \
+             instance(s) at t={:.0}ms:",
+            report.census_mismatch, report.census_checked_at_ms
+        );
+        for row in &report.census_diff {
+            eprintln!("  {row}");
+        }
+    }
     std::fs::write(out, report.to_json())
         .map_err(|e| anyhow!("writing {out}: {e}"))?;
     println!("wrote {out}");
+    if strict
+        && (report.leaked_instances > 0
+            || report.leaked_capacity_mc > 0
+            || report.unanswered_requests > 0
+            || report.census_mismatch > 0)
+    {
+        return Err(anyhow!(
+            "strict churn check failed: leaks={}/{}mc unanswered={} \
+             census_mismatch={}",
+            report.leaked_instances,
+            report.leaked_capacity_mc,
+            report.unanswered_requests,
+            report.census_mismatch
+        ));
+    }
     Ok(())
 }
 

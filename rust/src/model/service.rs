@@ -101,6 +101,13 @@ pub struct InstanceRecord {
     pub worker: Option<NodeId>,
     /// Generation counter: bumped on every migration/replication.
     pub generation: u32,
+    /// Successor lineage: the instance this one replaced (set when the
+    /// record was minted/adopted as a replacement).
+    pub predecessor: Option<InstanceId>,
+    /// The replacement that superseded this instance, once registered.
+    /// A set successor retires the record from further migration — the
+    /// lineage already moved on.
+    pub successor: Option<InstanceId>,
 }
 
 impl InstanceRecord {
@@ -111,6 +118,8 @@ impl InstanceRecord {
             state: ServiceState::Requested,
             worker: None,
             generation: 0,
+            predecessor: None,
+            successor: None,
         }
     }
 

@@ -15,7 +15,7 @@ mod msg;
 mod network;
 
 pub use container::ContainerRuntime;
-pub use msg::{DataMsg, KubeMsg, OakMsg, SimMsg, TimerKind};
+pub use msg::{DataMsg, KubeMsg, OakMsg, ReplacementReason, SimMsg, TimerKind};
 pub use network::{LinkProfile, Network, Transport};
 
 use std::any::Any;

@@ -36,6 +36,20 @@ pub enum TimerKind {
     Custom(u32),
 }
 
+/// Why a cluster minted a replacement instance without root involvement
+/// (paper §4.2 delegated autonomy): the successor-registration protocol
+/// carries the reason so the root can apply the right retirement
+/// semantics to the original (a migration original keeps running until
+/// cutover; a recovery original is already dead).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum ReplacementReason {
+    /// SLA-violation or API-driven migration: the original is torn down
+    /// once the replacement reports Running.
+    Migration,
+    /// Local recovery after a worker death: the original is gone.
+    LocalRecovery,
+}
+
 /// Oakestra control-plane protocol (paper Fig. 1 steps ①–⑪).
 #[derive(Clone, Debug)]
 pub enum OakMsg {
@@ -145,6 +159,28 @@ pub enum OakMsg {
     /// rescheduling + deferred teardown of the original).
     MigrateInstance {
         instance: InstanceId,
+    },
+    /// Successor registration (cluster → root, sent at mint time): the
+    /// cluster autonomously created `replacement` to supersede
+    /// `original` (§4.2 delegated scheduling) and the root must adopt it
+    /// into the service database so the global placement view (§3.2.1)
+    /// stays authoritative. Answered by [`OakMsg::InstanceReplacedAck`].
+    InstanceReplaced {
+        cluster: ClusterId,
+        service: ServiceId,
+        task: TaskId,
+        original: InstanceId,
+        replacement: InstanceId,
+        reason: ReplacementReason,
+    },
+    /// Root's verdict on a successor registration. `adopted == false`
+    /// (service retired/unknown or broken lineage) obliges the cluster
+    /// to tear the replacement down — mirroring the `ServiceRetired`
+    /// discipline: a refused instance must never outlive the refusal.
+    InstanceReplacedAck {
+        original: InstanceId,
+        replacement: InstanceId,
+        adopted: bool,
     },
 
     // -- overlay networking (steps ⑩–⑪, §5) --------------------------------
@@ -320,6 +356,8 @@ impl SimMsg {
                 OakMsg::UndeployService { .. } => 64,
                 OakMsg::ServiceDeployed { .. } => 64,
                 OakMsg::MigrateInstance { .. } => 64,
+                OakMsg::InstanceReplaced { .. } => 128,
+                OakMsg::InstanceReplacedAck { .. } => 64,
                 OakMsg::ResolveIp { .. } | OakMsg::ResolveIpUp { .. } => 96,
                 OakMsg::TableUpdate { entries } => 48 + 48 * entries.len(),
                 OakMsg::WorkerDead { .. } => 64,

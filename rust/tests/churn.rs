@@ -69,6 +69,19 @@ fn scale_storm_and_failover_drills_converge_with_no_leaks() {
         "no request may be dropped by the control plane"
     );
 
+    // Root-visible replacement tracking: at the pre-drain consistency
+    // snapshot (storms over, replacements still alive) the root's live
+    // view and the actual cluster placement must agree exactly — drills
+    // now target autoscaled services too, so any invisible migration
+    // successor would show up here.
+    assert_eq!(
+        r.census_mismatch,
+        0,
+        "root view and placement census disagree:\n{}\nop log:\n{}",
+        r.census_diff.join("\n"),
+        r.op_log.join("\n")
+    );
+
     // Convergence: after the final drain + settle, nothing is leaked —
     // no live instance records at root or clusters, no containers on
     // live workers, no reserved capacity.
@@ -203,4 +216,32 @@ fn each_scenario_generator_runs_alone() {
     assert!(failover.migrations >= 1, "drills must fire");
     assert_eq!(failover.scale_ups + failover.scale_downs, 0);
     assert_eq!(failover.leaked_instances, 0);
+    assert_eq!(failover.census_mismatch, 0, "{:?}", failover.census_diff);
+}
+
+#[test]
+fn killed_workers_rejoin_as_fresh_nodes() {
+    // Every drill kills its source worker and every kill schedules a
+    // rejoin: the storm must see fresh identities come back, stay
+    // consistent (root view == census) and still drain clean.
+    let r = run_churn(&ChurnConfig {
+        scenario: ChurnScenario::Failover,
+        duration_s: 60.0,
+        drills: 2,
+        drill_every: 10,
+        fail_worker_chance: 1.0,
+        rejoin_chance: 1.0,
+        ..ChurnConfig::quick(11)
+    });
+    assert!(r.migrations >= 1, "drills must fire");
+    assert!(r.workers_killed >= 1, "kills must fire");
+    assert!(
+        r.rejoins >= 1,
+        "killed workers must rejoin; op log:\n{}",
+        r.op_log.join("\n")
+    );
+    assert!(r.op_log.iter().any(|l| l.contains("worker-rejoined")));
+    assert_eq!(r.census_mismatch, 0, "{:?}", r.census_diff);
+    assert_eq!(r.leaked_instances, 0);
+    assert_eq!(r.leaked_capacity_mc, 0);
 }

@@ -1,0 +1,392 @@
+//! Tentpole coverage for root-visible replacement tracking: cluster-
+//! minted successors (migration + local recovery) are registered with
+//! the root at mint time, so the root's database view (§3.2.1) stays the
+//! authoritative placement census through delegated task scheduling
+//! (§4.2). Covers the lineage chain (migrate → fail → re-migrate), the
+//! protocol races (registration vs `UndeployService`, vs scale-shrink),
+//! the structured `AlreadyReplaced` error, the worker rejoin handshake
+//! and root memory-gauge symmetry.
+
+use oakestra::api::{ApiError, ApiResponse};
+use oakestra::bench_harness::{census_diff, build_oakestra, OakTestbed, OakTestbedConfig};
+use oakestra::coordinator::{mem, ClusterOrchestrator, RootOrchestrator, WorkerEngine};
+use oakestra::model::ServiceState;
+use oakestra::sim::{OakMsg, ReplacementReason, SimMsg};
+use oakestra::sla::simple_sla;
+use oakestra::util::{ClusterId, InstanceId, NodeId, ServiceId, SimTime, TaskId};
+
+fn small_testbed() -> OakTestbed {
+    build_oakestra(OakTestbedConfig {
+        clusters: 1,
+        workers_per_cluster: 4,
+        ..OakTestbedConfig::default()
+    })
+}
+
+fn submit_one(tb: &mut OakTestbed, name: &str) -> ServiceId {
+    let req = tb.submit(simple_sla(name, 150, 64), SimTime::from_secs(13.0));
+    tb.sim.run_until(SimTime::from_secs(30.0));
+    match tb.ack(req) {
+        Some(ApiResponse::Submitted { service, .. }) => *service,
+        other => panic!("submit must be acked: {other:?}"),
+    }
+}
+
+fn running_instance(tb: &OakTestbed, service: ServiceId) -> (InstanceId, NodeId) {
+    let root = tb.sim.actor_as::<RootOrchestrator>(tb.root).unwrap();
+    let rec = root.db.service(service).unwrap();
+    rec.instances
+        .iter()
+        .find(|i| i.state == ServiceState::Running)
+        .map(|i| (i.instance, i.worker.unwrap()))
+        .expect("service must have a running instance")
+}
+
+fn root_mem_mb(tb: &OakTestbed) -> f64 {
+    tb.sim
+        .core
+        .metrics
+        .usage(tb.root_node)
+        .expect("root node usage tracked")
+        .mem_mb
+}
+
+/// The acceptance chain: an API migration, then a failure of the
+/// migrated replacement, then a re-migration of the recovered instance —
+/// after every step the root's replica view must equal the actual
+/// placement census (zero unmatched instances), with full lineage.
+#[test]
+fn migrate_fail_remigrate_keeps_root_view_authoritative() {
+    let mut tb = small_testbed();
+    tb.warm_up();
+    let service = submit_one(&mut tb, "lineage");
+    let (orig, _w0) = running_instance(&tb, service);
+
+    // ① API migration: the cluster mints a successor and registers it.
+    tb.migrate(service, orig, SimTime::from_secs(31.0));
+    tb.sim.run_until(SimTime::from_secs(60.0));
+    let (r1, w1) = {
+        let root = tb.sim.actor_as::<RootOrchestrator>(tb.root).unwrap();
+        let rec = root.db.service(service).unwrap();
+        let o = rec.instance(orig).unwrap();
+        assert_eq!(o.state, ServiceState::Terminated, "original cut over");
+        let r1 = o.successor.expect("migration successor registered at the root");
+        let r = rec.instance(r1).unwrap();
+        assert_eq!(r.predecessor, Some(orig));
+        assert_eq!(r.state, ServiceState::Running);
+        assert_eq!(r.generation, 1);
+        (r1, r.worker.unwrap())
+    };
+    assert!(
+        tb.sim.core.metrics.counter("root.adopted_migration") >= 1,
+        "root must adopt the migration successor"
+    );
+    assert!(
+        census_diff(&tb).is_empty(),
+        "after the drill the root view must equal the census: {:?}",
+        census_diff(&tb)
+    );
+
+    // ② the replacement's worker dies → local recovery mints r2, which
+    // is adopted as r1's successor.
+    tb.fail_worker(w1);
+    tb.sim.run_until(SimTime::from_secs(100.0));
+    let r2 = {
+        let root = tb.sim.actor_as::<RootOrchestrator>(tb.root).unwrap();
+        let rec = root.db.service(service).unwrap();
+        let dead = rec.instance(r1).unwrap();
+        assert_eq!(dead.state, ServiceState::Failed, "r1 died with its worker");
+        let r2 = dead.successor.expect("recovery successor registered");
+        let rr = rec.instance(r2).unwrap();
+        assert_eq!(rr.predecessor, Some(r1));
+        assert_eq!(rr.state, ServiceState::Running);
+        assert_eq!(rr.generation, 2);
+        r2
+    };
+    assert!(
+        tb.sim.core.metrics.counter("root.adopted_recovery") >= 1,
+        "root must adopt the recovery successor"
+    );
+    assert!(census_diff(&tb).is_empty(), "{:?}", census_diff(&tb));
+
+    // ③ re-migrate the recovered instance: the chain keeps extending.
+    tb.migrate(service, r2, SimTime::from_secs(101.0));
+    tb.sim.run_until(SimTime::from_secs(130.0));
+    {
+        let root = tb.sim.actor_as::<RootOrchestrator>(tb.root).unwrap();
+        let rec = root.db.service(service).unwrap();
+        let moved = rec.instance(r2).unwrap();
+        assert_eq!(moved.state, ServiceState::Terminated);
+        let r3 = moved.successor.expect("second migration successor");
+        assert_eq!(rec.instance(r3).unwrap().state, ServiceState::Running);
+        assert_eq!(rec.instance(r3).unwrap().generation, 3);
+        let live = rec
+            .instances
+            .iter()
+            .filter(|i| !i.state.is_terminal())
+            .count();
+        assert_eq!(live, 1, "exactly one live replica through the whole chain");
+    }
+    assert!(census_diff(&tb).is_empty(), "{:?}", census_diff(&tb));
+
+    // ④ mutating a replaced id is a structured error naming the
+    // successor so the caller can retarget at the lineage head.
+    let bad = tb.migrate(service, orig, SimTime::from_secs(131.0));
+    tb.sim.run_until(SimTime::from_secs(135.0));
+    match tb.ack(bad) {
+        Some(ApiResponse::Error(ApiError::AlreadyReplaced {
+            instance,
+            successor,
+        })) => {
+            assert_eq!(*instance, orig);
+            assert_eq!(*successor, r1);
+        }
+        other => panic!("migrating a replaced id must name the successor: {other:?}"),
+    }
+
+    // ⑤ memory symmetry: base footprint + exactly one live record (four
+    // charges — submit, three adoptions — and three terminal releases).
+    let expect = mem::ROOT_BASE_MB + mem::PER_INSTANCE_MB;
+    let got = root_mem_mb(&tb);
+    assert!(
+        (got - expect).abs() < 1e-6,
+        "root mem gauge {got} != {expect}"
+    );
+}
+
+/// Scaling while a migration is in flight must treat the lineage pair
+/// (live original + live adopted successor) as ONE logical replica:
+/// a scale to the current count is a no-op (the shrink must not tear
+/// the pair apart), and a scale-up grows by the full logical deficit
+/// rather than under-growing because the pair counted twice. A slow
+/// registry stretches the image pull so the mid-flight window is
+/// deterministic and wide.
+#[test]
+fn scale_mid_migration_counts_lineage_pair_once() {
+    let mut tb = build_oakestra(OakTestbedConfig {
+        clusters: 1,
+        workers_per_cluster: 4,
+        registry_mbps: 25.0, // ~19 s image pull keeps the migration in flight
+        ..OakTestbedConfig::default()
+    });
+    tb.warm_up();
+    let req = tb.submit(simple_sla("mid", 150, 64), SimTime::from_secs(13.0));
+    tb.sim.run_until(SimTime::from_secs(45.0));
+    let service = match tb.ack(req) {
+        Some(ApiResponse::Submitted { service, .. }) => *service,
+        other => panic!("submit must be acked: {other:?}"),
+    };
+    let (orig, _w) = running_instance(&tb, service);
+
+    tb.migrate(service, orig, SimTime::from_secs(46.0));
+    tb.sim.run_until(SimTime::from_secs(50.0));
+    let r1 = {
+        let root = tb.sim.actor_as::<RootOrchestrator>(tb.root).unwrap();
+        let rec = root.db.service(service).unwrap();
+        let o = rec.instance(orig).unwrap();
+        assert_eq!(
+            o.state,
+            ServiceState::Running,
+            "original still running mid-migration"
+        );
+        let r1 = o.successor.expect("successor adopted while still deploying");
+        assert!(!rec.instance(r1).unwrap().state.is_terminal());
+        r1
+    };
+
+    // ① Scale to the current logical count: a no-op — the pair must
+    // not be torn apart (that would cancel the migration) nor counted
+    // as surplus.
+    let same = tb.scale(service, None, 1, SimTime::from_secs(51.0));
+    tb.sim.run_until(SimTime::from_secs(52.0));
+    match tb.ack(same) {
+        Some(ApiResponse::ScaleStarted { added, removed, .. }) => {
+            assert!(added.is_empty(), "pair must not count as a deficit");
+            assert!(removed.is_empty(), "pair must not count as surplus");
+        }
+        other => panic!("scale must be acked: {other:?}"),
+    }
+
+    // ② Scale-up mid-flight grows by the full logical deficit (the
+    // pair is one replica, so target 2 mints exactly one more).
+    let up = tb.scale(service, None, 2, SimTime::from_secs(53.0));
+    tb.sim.run_until(SimTime::from_secs(90.0));
+    match tb.ack(up) {
+        Some(ApiResponse::ScaleStarted { added, removed, .. }) => {
+            assert_eq!(added.len(), 1, "grow by the logical deficit");
+            assert!(removed.is_empty());
+        }
+        other => panic!("scale must be acked: {other:?}"),
+    }
+
+    // The migration completed undisturbed and the service converged at
+    // the requested two replicas.
+    assert!(
+        tb.sim.core.metrics.counter("cluster.migration_completed") >= 1,
+        "the in-flight migration must cut over normally"
+    );
+    let root = tb.sim.actor_as::<RootOrchestrator>(tb.root).unwrap();
+    let rec = root.db.service(service).unwrap();
+    assert_eq!(rec.instance(orig).unwrap().state, ServiceState::Terminated);
+    assert_eq!(rec.instance(r1).unwrap().state, ServiceState::Running);
+    let live = rec
+        .instances
+        .iter()
+        .filter(|i| !i.state.is_terminal())
+        .count();
+    assert_eq!(live, 2, "successor + scale-up replica");
+    assert!(census_diff(&tb).is_empty(), "{:?}", census_diff(&tb));
+}
+
+/// A successor registration arriving after `UndeployService` retired the
+/// service is refused (no resurrection), and the refusal obliges the
+/// cluster to tear the replacement down.
+#[test]
+fn late_replacement_registration_after_undeploy_is_refused() {
+    let mut tb = small_testbed();
+    tb.warm_up();
+    let service = submit_one(&mut tb, "gone");
+    let (orig, _) = running_instance(&tb, service);
+    let task = TaskId { service, index: 0 };
+
+    tb.undeploy(service, SimTime::from_secs(31.0));
+    tb.sim.run_until(SimTime::from_secs(40.0));
+
+    // A registration the cluster sent before it saw the teardown.
+    let ghost = InstanceId((1u64 << 62) | (1u64 << 48) | (1u64 << 30) | 0xBEEF);
+    tb.sim.inject(
+        SimTime::from_secs(41.0),
+        tb.root,
+        SimMsg::Oak(OakMsg::InstanceReplaced {
+            cluster: ClusterId(1),
+            service,
+            task,
+            original: orig,
+            replacement: ghost,
+            reason: ReplacementReason::Migration,
+        }),
+    );
+    tb.sim.run_until(SimTime::from_secs(50.0));
+
+    let m = &tb.sim.core.metrics;
+    assert_eq!(
+        m.counter("root.adopt_refused_retired"),
+        1,
+        "a retired service must refuse successor adoption"
+    );
+    assert_eq!(
+        m.counter("cluster.replacement_refused"),
+        1,
+        "the refusal verdict must reach the cluster (teardown path)"
+    );
+    let root = tb.sim.actor_as::<RootOrchestrator>(tb.root).unwrap();
+    let rec = root.db.service(service).unwrap();
+    assert!(
+        rec.instance(ghost).is_none(),
+        "no record may be adopted for a retired service"
+    );
+    assert!(rec.instances.iter().all(|i| i.state.is_terminal()));
+
+    // Charge/release symmetry held across the whole lifecycle.
+    let got = root_mem_mb(&tb);
+    assert!(
+        (got - mem::ROOT_BASE_MB).abs() < 1e-6,
+        "root mem gauge {got} != {}",
+        mem::ROOT_BASE_MB
+    );
+}
+
+/// Worker rejoin, fresh-identity path: the hardware behind a crashed
+/// worker comes back as a new node id with an empty instance set and
+/// registers through the normal handshake.
+#[test]
+fn revived_worker_rejoins_under_fresh_identity() {
+    let mut tb = small_testbed();
+    tb.warm_up();
+    let service = submit_one(&mut tb, "ha");
+    let (_, hosting) = running_instance(&tb, service);
+
+    tb.fail_worker(hosting);
+    tb.sim.run_until(SimTime::from_secs(60.0));
+    assert!(tb.sim.core.metrics.counter("cluster.worker_dead") >= 1);
+    {
+        let c = tb
+            .sim
+            .actor_as::<ClusterOrchestrator>(tb.clusters[0].1)
+            .unwrap();
+        assert_eq!(c.workers.len(), 3, "dead worker deregistered");
+    }
+
+    let fresh = tb.revive_worker(hosting);
+    assert_ne!(fresh, hosting, "rejoin mints a fresh identity");
+    tb.sim.run_until(SimTime::from_secs(80.0));
+
+    let c = tb
+        .sim
+        .actor_as::<ClusterOrchestrator>(tb.clusters[0].1)
+        .unwrap();
+    assert_eq!(c.workers.len(), 4, "fleet back to full strength");
+    assert!(c.workers.iter().any(|p| p.spec.node == fresh));
+    assert!(
+        c.workers.iter().all(|p| p.spec.node != hosting),
+        "the crashed identity stays gone"
+    );
+    let w = tb
+        .sim
+        .actor_as::<WorkerEngine>(tb.workers.last().unwrap().1)
+        .unwrap();
+    assert!(w.subnet.is_some(), "handshake completed (subnet assigned)");
+    assert_eq!(w.hosted_count(), 0, "rejoined worker starts empty");
+    assert!(census_diff(&tb).is_empty(), "{:?}", census_diff(&tb));
+}
+
+/// Worker rejoin, same-identity path: a re-registration for a node id
+/// the cluster still tracks resets its state — stale instances are
+/// finalized (and recovered elsewhere), no duplicate profile appears.
+#[test]
+fn same_id_reregistration_resets_worker_state() {
+    let mut tb = small_testbed();
+    tb.warm_up();
+    let service = submit_one(&mut tb, "restart");
+    let (_, hosting) = running_instance(&tb, service);
+    let engine = tb
+        .workers
+        .iter()
+        .find(|(n, _)| *n == hosting)
+        .map(|(_, a)| *a)
+        .unwrap();
+    let spec = tb
+        .sim
+        .actor_as::<WorkerEngine>(engine)
+        .unwrap()
+        .cfg
+        .spec
+        .clone();
+
+    // The worker process restarts with an empty instance set and
+    // re-registers under the same node id.
+    tb.sim.inject(
+        SimTime::from_secs(31.0),
+        tb.clusters[0].1,
+        SimMsg::Oak(OakMsg::RegisterWorker { spec, engine }),
+    );
+    tb.sim.run_until(SimTime::from_secs(60.0));
+
+    let m = &tb.sim.core.metrics;
+    assert_eq!(m.counter("cluster.worker_reregistered"), 1);
+    assert!(
+        m.counter("cluster.local_recovery") >= 1,
+        "instances attributed to the old process must be recovered"
+    );
+    let c = tb
+        .sim
+        .actor_as::<ClusterOrchestrator>(tb.clusters[0].1)
+        .unwrap();
+    assert_eq!(c.workers.len(), 4, "no duplicate profile");
+    assert_eq!(
+        c.workers.iter().filter(|p| p.spec.node == hosting).count(),
+        1
+    );
+    // The recovered replacement is root-visible: views agree.
+    assert!(census_diff(&tb).is_empty(), "{:?}", census_diff(&tb));
+}
