@@ -90,6 +90,7 @@ pub fn ablate_delegation(total_workers: usize, clusters: usize, reps: usize) -> 
             sla: &sla.constraints[0],
             workers: &fabric.workers,
             service_hint: ServiceId(0),
+            exclude: None,
         };
         let t0 = std::time::Instant::now();
         let mut s = RomScheduler {
@@ -129,6 +130,7 @@ pub fn ablate_delegation(total_workers: usize, clusters: usize, reps: usize) -> 
                 sla: &sla.constraints[0],
                 workers: &f.workers,
                 service_hint: ServiceId(0),
+            exclude: None,
             };
             let mut s = RomScheduler {
                 strategy: RomStrategy::BestFit,

@@ -879,11 +879,25 @@ pub struct ChurnReport {
     /// Root-node control-plane CPU over the window, ms, and per mutation.
     pub root_cpu_ms: f64,
     pub root_cpu_ms_per_op: f64,
+    /// Root API handler invocations per operation kind (`root.op.*`),
+    /// the per-op cost attribution the perf trajectory tracks.
+    pub root_ops: BTreeMap<String, u64>,
     /// Mean cluster-orchestrator-node CPU over the window, ms.
     pub cluster_cpu_ms_mean: f64,
-    /// Cluster scheduler invocations and their mean cost.
+    /// Cluster scheduler invocations and their cost distribution.
     pub sched_runs: usize,
     pub sched_ms_mean: f64,
+    pub sched_ms_p95: f64,
+    /// Host wall-clock seconds the whole run took (build + storm +
+    /// drain) — the raw speed axis of the per-PR perf trajectory.
+    /// Varies machine to machine; excluded from determinism checks.
+    pub wall_clock_s: f64,
+    /// Sim-queue state after the post-storm quiescence drain: total
+    /// queued events (timers included) and in-flight messages. The
+    /// latter must be 0 — a non-timer leftover means a message chain
+    /// never converged.
+    pub pending_events: usize,
+    pub pending_non_timer: usize,
     pub leaked_instances: usize,
     pub leaked_capacity_mc: u64,
     /// Root-vs-placement consistency snapshot, taken during the quiet
@@ -1032,8 +1046,10 @@ pub fn count_leaks(tb: &OakTestbed, failed: &BTreeSet<NodeId>) -> (usize, u64) {
 }
 
 /// Build the testbed, run the configured churn storm to completion and
-/// collect the report. Fully deterministic in `cfg.seed`.
+/// collect the report. Fully deterministic in `cfg.seed` (wall-clock
+/// aside, which measures the host, not the simulation).
 pub fn run_churn(cfg: &ChurnConfig) -> ChurnReport {
+    let wall_start = std::time::Instant::now();
     let mut tb = build_oakestra(OakTestbedConfig {
         seed: cfg.seed,
         clusters: cfg.clusters,
@@ -1102,6 +1118,13 @@ pub fn run_churn(cfg: &ChurnConfig) -> ChurnReport {
     let (census_checked_at, census_gap) =
         census_diff_rows.unwrap_or((horizon, Vec::new()));
 
+    // Drain every in-flight message (timers keep ticking, but a message
+    // still queued after the settle window is a convergence failure the
+    // leak audit must see as state, not as something about to happen).
+    tb.sim.run_to_quiescence(horizon + SimTime::from_secs(5.0));
+    let pending_events = tb.sim.pending_events();
+    let pending_non_timer = tb.sim.pending_non_timer_events();
+
     let msgs1: u64 = oak_labels.iter().map(|l| tb.sim.core.metrics.msgs(l)).sum();
     let bytes1: u64 = oak_labels
         .iter()
@@ -1129,9 +1152,14 @@ pub fn run_churn(cfg: &ChurnConfig) -> ChurnReport {
     let migrate = OpStats::from(m.histogram(lifecycle::MIGRATE_TO_CUTOVER_MS));
     let undeploy = OpStats::from(m.histogram(lifecycle::UNDEPLOY_TO_DRAINED_MS));
     let sched = m.histogram("cluster.sched_ms");
-    let (sched_runs, sched_ms_mean) = sched
-        .map(|h| (h.count(), h.mean()))
-        .unwrap_or((0, 0.0));
+    let (sched_runs, sched_ms_mean, sched_ms_p95) = sched
+        .map(|h| (h.count(), h.mean(), h.p95()))
+        .unwrap_or((0, 0.0, 0.0));
+    let root_ops: BTreeMap<String, u64> = m
+        .counters_with_prefix("root.op.")
+        .into_iter()
+        .map(|(k, v)| (k.trim_start_matches("root.op.").to_string(), v))
+        .collect();
 
     let d = tb
         .sim
@@ -1168,9 +1196,14 @@ pub fn run_churn(cfg: &ChurnConfig) -> ChurnReport {
         msgs_per_op: (msgs1 - msgs0) as f64 / mutations as f64,
         root_cpu_ms,
         root_cpu_ms_per_op: root_cpu_ms / mutations as f64,
+        root_ops,
         cluster_cpu_ms_mean: crate::util::mean(&cluster_cpu),
         sched_runs,
         sched_ms_mean,
+        sched_ms_p95,
+        wall_clock_s: wall_start.elapsed().as_secs_f64(),
+        pending_events,
+        pending_non_timer,
         leaked_instances,
         leaked_capacity_mc,
         census_mismatch: census_gap.len(),
@@ -1200,6 +1233,11 @@ impl ChurnReport {
             .iter()
             .map(|(k, v)| format!("\"{}\": {v}", json_escape(k)))
             .collect();
+        let root_ops: Vec<String> = self
+            .root_ops
+            .iter()
+            .map(|(k, v)| format!("\"{}\": {v}", json_escape(k)))
+            .collect();
         let strings = |xs: &[String]| {
             let rows: Vec<String> = xs
                 .iter()
@@ -1213,7 +1251,8 @@ impl ChurnReport {
         };
         format!(
             "{{\n  \"bench\": \"churn\",\n  \"seed\": {},\n  \"scenario\": \"{}\",\n  \
-             \"duration_s\": {},\n  \"ops_issued\": {},\n  \"unanswered_requests\": {},\n  \
+             \"duration_s\": {},\n  \"wall_clock_s\": {:.3},\n  \
+             \"ops_issued\": {},\n  \"unanswered_requests\": {},\n  \
              \"counts\": {{\"submit\": {}, \"undeploy\": {}, \"scale_up\": {}, \
              \"scale_down\": {}, \"migrate\": {}, \"workers_killed\": {}, \
              \"rejoins\": {}}},\n  \
@@ -1223,7 +1262,9 @@ impl ChurnReport {
              \"control_plane\": {{\"msgs\": {}, \"bytes\": {}, \"msgs_per_op\": {:.2}, \
              \"root_cpu_ms\": {:.1}, \"root_cpu_ms_per_op\": {:.3}, \
              \"cluster_cpu_ms_mean\": {:.1}, \"sched_runs\": {}, \
-             \"sched_ms_mean\": {:.3}}},\n  \
+             \"sched_ms_mean\": {:.3}, \"sched_ms_p95\": {:.3}}},\n  \
+             \"root_ops\": {{{}}},\n  \
+             \"quiescence\": {{\"pending_events\": {}, \"pending_non_timer\": {}}},\n  \
              \"api_errors\": {{{}}},\n  \
              \"leaks\": {{\"instances\": {}, \"capacity_mc\": {}}},\n  \
              \"census_consistency\": {{\"checked_at_ms\": {:.1}, \
@@ -1232,6 +1273,7 @@ impl ChurnReport {
             self.seed,
             self.scenario,
             self.duration_s,
+            self.wall_clock_s,
             self.ops_issued,
             self.unanswered_requests,
             self.submits,
@@ -1253,6 +1295,10 @@ impl ChurnReport {
             self.cluster_cpu_ms_mean,
             self.sched_runs,
             self.sched_ms_mean,
+            self.sched_ms_p95,
+            root_ops.join(", "),
+            self.pending_events,
+            self.pending_non_timer,
             errors.join(", "),
             self.leaked_instances,
             self.leaked_capacity_mc,
@@ -1308,6 +1354,18 @@ impl ChurnReport {
         cost.row(vec![
             "sched_runs".into(),
             self.sched_runs.to_string(),
+        ]);
+        cost.row(vec![
+            "sched_ms_mean".into(),
+            fmt_stat(self.sched_runs, self.sched_ms_mean),
+        ]);
+        cost.row(vec![
+            "wall_clock_s".into(),
+            format!("{:.2}", self.wall_clock_s),
+        ]);
+        cost.row(vec![
+            "pending_non_timer".into(),
+            self.pending_non_timer.to_string(),
         ]);
         cost.row(vec![
             "workers_killed".into(),
@@ -1383,5 +1441,15 @@ mod tests {
             .as_u64()
             .is_some());
         assert!(v.get("counts").get("rejoins").as_u64().is_some());
+        // Perf-trajectory fields: wall clock, per-op root costs and the
+        // post-drain quiescence audit.
+        assert!(v.get("wall_clock_s").as_f64().unwrap_or(-1.0) >= 0.0);
+        assert!(v.get("root_ops").get("submit").as_u64().unwrap_or(0) > 0);
+        assert_eq!(
+            v.get("quiescence").get("pending_non_timer").as_u64(),
+            Some(0),
+            "post-drain quiescence must leave no message in flight"
+        );
+        assert!(v.get("control_plane").get("sched_ms_p95").as_f64().is_some());
     }
 }

@@ -98,6 +98,7 @@ pub fn run_host(
         sla,
         workers: &fabric.workers,
         service_hint: ServiceId(0),
+            exclude: None,
     };
     let t0 = Instant::now();
     let placement = if ldp {

@@ -21,6 +21,7 @@ use crate::sla::TaskSla;
 use crate::util::{ClusterId, InstanceId, NodeId, ServiceId, SimTime, TaskId};
 use crate::vivaldi::Coord;
 
+use super::state::{InstanceTable, LocalInstance, WorkerTable};
 use super::{costs, intervals, mem};
 
 /// Which placement plugin this cluster runs (paper §6: pluggable; each
@@ -59,26 +60,29 @@ impl ClusterConfig {
     }
 }
 
-/// Cluster-side record of one instance it manages.
-#[derive(Clone, Debug)]
-struct LocalInstance {
-    task: TaskId,
-    node: NodeId,
-    state: ServiceState,
-    request: Capacity,
-    sla: TaskSla,
-}
-
 pub struct ClusterOrchestrator {
     pub cfg: ClusterConfig,
     root: ActorId,
-    /// Worker table: node → profile (A_n view).
-    pub workers: Vec<NodeProfile>,
+    /// Worker table: node → profile (A_n view), slot-mapped — lookups are
+    /// O(log n) instead of the old linear `Vec` scan per status change.
+    pub workers: WorkerTable,
     worker_actors: BTreeMap<NodeId, ActorId>,
     last_report: BTreeMap<NodeId, SimTime>,
     pub broker: MqttBroker,
     subnets: SubnetAllocator,
-    instances: BTreeMap<InstanceId, LocalInstance>,
+    /// Instance records with task→instances and node→instances indices:
+    /// table pushes, LDP refreshes and undeploy sweeps touch only the
+    /// affected task/node instead of every instance in the cluster.
+    instances: InstanceTable,
+    /// Coalesced dissemination buffer: per destination worker, the set of
+    /// tasks whose conversion-table row changed since the last flush.
+    /// Destinations are captured at change time (so a teardown's
+    /// authoritative empty row still reaches the former host); location
+    /// snapshots are computed at flush time (intermediate flaps collapse).
+    table_dirty: BTreeMap<NodeId, BTreeSet<TaskId>>,
+    /// Whether a `TableFlush` tick is armed (lazy — idle clusters tick
+    /// nothing).
+    flush_scheduled: bool,
     /// Task → running locations within this cluster (LDP context + table
     /// resolution source).
     ldp_ctx: LdpContext,
@@ -131,12 +135,14 @@ impl ClusterOrchestrator {
         ClusterOrchestrator {
             cfg,
             root,
-            workers: Vec::new(),
+            workers: WorkerTable::default(),
             worker_actors: BTreeMap::new(),
             last_report: BTreeMap::new(),
             broker: MqttBroker::default(),
             subnets: SubnetAllocator::default(),
-            instances: BTreeMap::new(),
+            instances: InstanceTable::default(),
+            table_dirty: BTreeMap::new(),
+            flush_scheduled: false,
             ldp_ctx: LdpContext::default(),
             interest: BTreeMap::new(),
             migrations: BTreeMap::new(),
@@ -182,10 +188,10 @@ impl ClusterOrchestrator {
     }
 
     fn profile_mut(&mut self, node: NodeId) -> Option<&mut NodeProfile> {
-        self.workers.iter_mut().find(|w| w.spec.node == node)
+        self.workers.get_mut(node)
     }
     fn profile(&self, node: NodeId) -> Option<&NodeProfile> {
-        self.workers.iter().find(|w| w.spec.node == node)
+        self.workers.get(node)
     }
 
     /// Live (non-terminal) instance records this cluster tracks, sorted by
@@ -195,7 +201,7 @@ impl ClusterOrchestrator {
         self.instances
             .iter()
             .filter(|(_, li)| !li.state.is_terminal())
-            .map(|(iid, li)| (*iid, li.task, li.node, li.state))
+            .map(|(iid, li)| (iid, li.task, li.node, li.state))
             .collect()
     }
 
@@ -227,7 +233,7 @@ impl ClusterOrchestrator {
         replacement: InstanceId,
         reason: ReplacementReason,
     ) {
-        let Some(li) = self.instances.get(&replacement) else {
+        let Some(li) = self.instances.get(replacement) else {
             return;
         };
         let (task, node) = (li.task, li.node);
@@ -258,13 +264,16 @@ impl ClusterOrchestrator {
         instance: InstanceId,
         state: ServiceState,
     ) {
-        let Some(li) = self.instances.get_mut(&instance) else {
+        let Some(li) = self.instances.get_mut(instance) else {
             return;
         };
         li.state = state;
         let (task, node) = (li.task, li.node);
         self.refresh_ldp_target(task);
-        self.push_table_update(ctx, task);
+        // Buffer while the record is still present so the (former) host
+        // is captured as a destination — the flush then sends it the
+        // authoritative (empty) row.
+        self.mark_table_dirty(ctx, task);
         let msg = SimMsg::Oak(OakMsg::InstanceStatus {
             instance,
             node,
@@ -272,7 +281,7 @@ impl ClusterOrchestrator {
         });
         let bytes = msg.default_wire_bytes() + WS_FRAME_OVERHEAD;
         ctx.send(self.root, msg, bytes, labels::CLUSTER_TO_ROOT);
-        if let Some(li) = self.instances.remove(&instance) {
+        if let Some(li) = self.instances.remove(instance) {
             if let Some(p) = self.profile_mut(li.node) {
                 p.used -= li.request;
                 p.instances = p.instances.saturating_sub(1);
@@ -281,19 +290,25 @@ impl ClusterOrchestrator {
         }
     }
 
-    /// Run the configured placement plugin over the live worker table.
+    /// Run the configured placement plugin over the live worker table
+    /// (minus `exclude`, for migrations away from a violating worker).
     fn run_scheduler(
         &mut self,
         ctx: &mut Ctx<'_>,
         task: TaskId,
         sla: &TaskSla,
+        exclude: Option<NodeId>,
     ) -> Placement {
         self.sched_ops += 1;
-        let n = self.workers.len().max(1) as f64;
+        let workers = self.workers.as_slice();
+        // Cost scales with the candidate set actually scanned.
+        let excluded = exclude.map_or(0, |x| usize::from(self.workers.contains(x)));
+        let n = (workers.len() - excluded).max(1) as f64;
         let input = PlacementInput {
             sla,
-            workers: &self.workers,
+            workers,
             service_hint: task.service,
+            exclude,
         };
         let (placement, cost_ms) = match self.cfg.scheduler {
             SchedulerKind::RomBestFit => (
@@ -313,25 +328,34 @@ impl ClusterOrchestrator {
             SchedulerKind::Ldp => {
                 let seed = ctx.rng().next_u64();
                 let orch_node = ctx.my_node();
+                let probes = sla.s2u.len() as u32;
                 // Probe pings are ground-truth network RTTs measured from
                 // candidate workers towards the user's uplink (the
                 // orchestrator node stands in for the user's attachment
-                // point, Alg. 2 line 11). Pre-measure every worker so the
-                // scheduler's ping closure stays pure.
-                let rtts: std::collections::BTreeMap<NodeId, f64> = self
-                    .workers
-                    .iter()
-                    .map(|w| (w.spec.node, ctx.rtt_ms(w.spec.node, orch_node)))
-                    .collect();
-                let probes = sla.s2u.len() as u32;
-                let ping = move |node: NodeId, _c: &crate::sla::S2uConstraint| {
-                    rtts.get(&node).copied().unwrap_or(0.0)
+                // point, Alg. 2 line 11). Measured **lazily**: only the
+                // ≤probe_count sampled candidates are ever pinged —
+                // O(probes), not an O(workers) fleet-wide pre-measure per
+                // placement. Memoized so a node probed by several S2U
+                // constraints is measured once.
+                let pings = std::cell::Cell::new(0u32);
+                let placement = {
+                    let pings = &pings;
+                    let mut rtt_memo: BTreeMap<NodeId, f64> = BTreeMap::new();
+                    let ctx_ref = &mut *ctx;
+                    let ping = move |node: NodeId, _c: &crate::sla::S2uConstraint| {
+                        *rtt_memo.entry(node).or_insert_with(|| {
+                            pings.set(pings.get() + 1);
+                            ctx_ref.rtt_ms(node, orch_node)
+                        })
+                    };
+                    let mut ldp =
+                        LdpScheduler::new(&self.ldp_ctx, Box::new(ping), seed);
+                    ldp.place(&input)
                 };
-                let mut ldp =
-                    LdpScheduler::new(&self.ldp_ctx, Box::new(ping), seed);
                 (
-                    ldp.place(&input),
+                    placement,
                     costs::LDP_PER_WORKER_MS * n
+                        + costs::LDP_PING_MS * pings.get() as f64
                         + costs::LDP_TRILATERATION_MS * probes as f64,
                 )
             }
@@ -343,49 +367,92 @@ impl ClusterOrchestrator {
         placement
     }
 
-    /// Push the current locations of a task to the workers that either
-    /// host an instance of it or have requested its ServiceIP (paper §5's
-    /// subscription semantics — no cluster-wide broadcast).
-    fn push_table_update(&mut self, ctx: &mut Ctx<'_>, task: TaskId) {
-        let locations = self.locations_of(task);
-        let entry = TableEntry {
-            task,
-            locations,
-        };
-        let mut targets: BTreeSet<NodeId> = self
-            .interest
-            .get(&task)
-            .cloned()
-            .unwrap_or_default();
-        for li in self.instances.values() {
-            if li.task == task {
-                targets.insert(li.node);
-            }
+    /// Mark a task's conversion-table row dirty for the workers that
+    /// either host an instance of it or have requested its ServiceIP
+    /// (paper §5's subscription semantics — no cluster-wide broadcast).
+    /// Deltas coalesce in `table_dirty` until the next dissemination tick
+    /// or an explicit [`Self::flush_tables`] barrier: one batched
+    /// `TableUpdate` per destination instead of one message per change
+    /// per target.
+    fn mark_table_dirty(&mut self, ctx: &mut Ctx<'_>, task: TaskId) {
+        let mut targets = self.instances.nodes_of_task(task);
+        if let Some(interested) = self.interest.get(&task) {
+            targets.extend(interested.iter().copied());
         }
-        let actors: Vec<ActorId> = targets
-            .iter()
-            .filter_map(|n| self.worker_actors.get(n).copied())
-            .collect();
-        for a in actors {
-            let msg = SimMsg::Oak(OakMsg::TableUpdate {
-                entries: vec![entry.clone()],
-            });
+        for node in targets {
+            self.table_dirty.entry(node).or_default().insert(task);
+        }
+        if !self.flush_scheduled && !self.table_dirty.is_empty() {
+            self.flush_scheduled = true;
+            ctx.schedule(
+                intervals::table_dissemination(),
+                SimMsg::Timer(TimerKind::TableFlush),
+            );
+        }
+    }
+
+    /// Flush the coalesced dissemination buffer: one batched
+    /// `TableUpdate` per destination worker carrying an authoritative
+    /// snapshot (computed now, so intermediate flaps have collapsed) of
+    /// every dirty task row. Dead/deregistered destinations are skipped —
+    /// the authoritative update they miss is irrelevant to a corpse.
+    fn flush_tables(&mut self, ctx: &mut Ctx<'_>) {
+        if self.table_dirty.is_empty() {
+            return;
+        }
+        let dirty = std::mem::take(&mut self.table_dirty);
+        let mut snapshots: BTreeMap<TaskId, TableEntry> = BTreeMap::new();
+        let mut sent = 0u64;
+        for (node, tasks) in dirty {
+            // Snapshot every dirty task — even rows whose only captured
+            // destination is gone — so the interest GC below still sees
+            // them (a subscriber dying before the flush must not pin a
+            // dead service's interest row forever).
+            let actor = self.worker_actors.get(&node).copied();
+            let mut entries = Vec::with_capacity(tasks.len());
+            for task in tasks {
+                let e = snapshots.entry(task).or_insert_with(|| TableEntry {
+                    task,
+                    locations: self.locations_of(task),
+                });
+                if actor.is_some() {
+                    entries.push(e.clone());
+                }
+            }
+            let Some(actor) = actor else {
+                continue;
+            };
+            let msg = SimMsg::Oak(OakMsg::TableUpdate { entries });
             let bytes = msg.default_wire_bytes() + MQTT_FRAME_OVERHEAD;
-            ctx.send(a, msg, bytes, labels::CLUSTER_TO_WORKER);
+            ctx.send(actor, msg, bytes, labels::CLUSTER_TO_WORKER);
+            sent += 1;
+        }
+        ctx.charge_cpu(costs::TABLE_OP_MS * snapshots.len().max(1) as f64);
+        ctx.metrics().inc("cluster.table_flush");
+        ctx.metrics().add("cluster.table_flush_msgs", sent);
+        // Interest GC: once a dead service's task flushed its
+        // authoritative empty row to every captured subscriber, the
+        // subscription can never fire again — drop it. (Not earlier:
+        // removing interest before this flush would strand subscribers
+        // with stale rows.)
+        for (task, entry) in &snapshots {
+            if entry.locations.is_empty() && self.dead_services.contains(&task.service) {
+                self.interest.remove(task);
+            }
         }
     }
 
     fn locations_of(&self, task: TaskId) -> Vec<InstanceLocation> {
         self.instances
-            .iter()
-            .filter(|(_, li)| li.task == task && li.state == ServiceState::Running)
+            .of_task(task)
+            .filter(|(_, li)| li.state == ServiceState::Running)
             .map(|(iid, li)| {
                 let rtt = self
                     .profile(li.node)
                     .map(|p| p.vivaldi.coord.distance(&Coord([0.0; 4])))
                     .unwrap_or(0.0);
                 InstanceLocation {
-                    instance: *iid,
+                    instance: iid,
                     task,
                     node: li.node,
                     rtt_ms: rtt,
@@ -398,9 +465,9 @@ impl ClusterOrchestrator {
     fn refresh_ldp_target(&mut self, task: TaskId) {
         let locs: Vec<(crate::geo::GeoPoint, Coord)> = self
             .instances
-            .values()
-            .filter(|li| li.task == task && li.state == ServiceState::Running)
-            .filter_map(|li| {
+            .of_task(task)
+            .filter(|(_, li)| li.state == ServiceState::Running)
+            .filter_map(|(_, li)| {
                 self.profile(li.node)
                     .map(|p| (p.spec.location, p.vivaldi.coord))
             })
@@ -421,19 +488,20 @@ impl ClusterOrchestrator {
         // Release the per-worker bookkeeping charged at registration —
         // deregistration must mirror it or long churn runs drift the
         // cluster's reported footprint.
-        if self.profile(node).is_some() {
+        if self.workers.remove(node).is_some() {
             ctx.add_mem(-mem::PER_WORKER_MB);
         }
-        self.workers.retain(|w| w.spec.node != node);
         self.worker_actors.remove(&node);
         self.last_report.remove(&node);
         self.subnets.release(node);
 
+        // The node index hands back exactly the dead worker's instances —
+        // no full-table filter per death.
         let affected: Vec<(InstanceId, TaskId, TaskSla)> = self
             .instances
-            .iter()
-            .filter(|(_, li)| li.node == node && !li.state.is_terminal())
-            .map(|(iid, li)| (*iid, li.task, li.sla.clone()))
+            .of_node(node)
+            .filter(|(_, li)| !li.state.is_terminal())
+            .map(|(iid, li)| (iid, li.task, li.sla.clone()))
             .collect();
         for (iid, task, sla) in affected {
             // An in-flight migration replacement died with its worker:
@@ -454,7 +522,7 @@ impl ClusterOrchestrator {
             if has_replacement || self.dead_services.contains(&task.service) {
                 continue;
             }
-            match self.run_scheduler(ctx, task, &sla) {
+            match self.run_scheduler(ctx, task, &sla, None) {
                 Placement::Placed { worker, .. } => {
                     // Local recovery under a fresh locally-minted id,
                     // registered with the root as the successor of the
@@ -502,7 +570,7 @@ impl ClusterOrchestrator {
         if self.migrations.values().any(|o| *o == original) {
             return false; // already migrating
         }
-        let Some(li) = self.instances.get(&original) else {
+        let Some(li) = self.instances.get(original) else {
             return false;
         };
         if li.state != ServiceState::Running {
@@ -514,21 +582,14 @@ impl ClusterOrchestrator {
             return false;
         }
         let (task, sla, current_node) = (li.task, li.sla.clone(), li.node);
-        // Exclude the violating worker from candidates.
-        let mut others: Vec<NodeProfile> = self
-            .workers
-            .iter()
-            .filter(|w| w.spec.node != current_node)
-            .cloned()
-            .collect();
-        if others.is_empty() {
+        // Exclude the violating worker from candidates; with nobody else
+        // to move to there is no migration to start.
+        let others = self.workers.len() - usize::from(self.workers.contains(current_node));
+        if others == 0 {
             return false;
         }
         // Run the placement over the reduced table (same plugin).
-        let saved = std::mem::take(&mut self.workers);
-        self.workers = std::mem::take(&mut others);
-        let placement = self.run_scheduler(ctx, task, &sla);
-        self.workers = saved;
+        let placement = self.run_scheduler(ctx, task, &sla, Some(current_node));
         match placement {
             Placement::Placed { worker, .. } => {
                 ctx.metrics().inc("cluster.migration_started");
@@ -619,7 +680,7 @@ impl Actor for ClusterOrchestrator {
             SimMsg::Oak(OakMsg::RegisterWorker { spec, engine }) => {
                 ctx.charge_cpu(costs::SUBMIT_MS * 0.5);
                 let node = spec.node;
-                if self.profile(node).is_some() {
+                if self.workers.contains(node) {
                     // Re-register handshake: a worker process restarted
                     // under an id this cluster still tracks. The
                     // returning engine has an empty instance set, so
@@ -638,7 +699,7 @@ impl Actor for ClusterOrchestrator {
                 );
                 self.worker_actors.insert(node, engine);
                 self.last_report.insert(node, ctx.now);
-                self.workers.push(NodeProfile::new(spec));
+                self.workers.insert(NodeProfile::new(spec));
                 let msg = SimMsg::Oak(OakMsg::RegisterWorkerAck { subnet });
                 let bytes = msg.default_wire_bytes() + MQTT_FRAME_OVERHEAD;
                 ctx.send(engine, msg, bytes, labels::CLUSTER_TO_WORKER);
@@ -651,7 +712,7 @@ impl Actor for ClusterOrchestrator {
                 instances,
             }) => {
                 ctx.charge_cpu(costs::WORKER_REPORT_MS);
-                if self.profile(node).is_none() {
+                if !self.workers.contains(node) {
                     // A deregistered (previously dead) worker talking
                     // again: ignoring it keeps it out of `last_report`,
                     // where it would otherwise look alive to the health
@@ -665,11 +726,11 @@ impl Actor for ClusterOrchestrator {
                     p.vivaldi = vivaldi;
                 }
                 // Reconcile instance states reported by the NodeEngine.
-                let mut changed_tasks = Vec::new();
+                let mut changed_tasks: BTreeSet<TaskId> = BTreeSet::new();
                 let mut violations: Vec<InstanceId> = Vec::new();
                 for (iid, state, qos_ms) in instances {
                     let mut forward = None;
-                    if let Some(li) = self.instances.get_mut(&iid) {
+                    if let Some(li) = self.instances.get_mut(iid) {
                         if li.state != state {
                             li.state = state;
                             forward = Some((li.task, li.node));
@@ -689,7 +750,7 @@ impl Actor for ClusterOrchestrator {
                         }
                     }
                     if let Some((task, lnode)) = forward {
-                        changed_tasks.push(task);
+                        changed_tasks.insert(task);
                         let msg = SimMsg::Oak(OakMsg::InstanceStatus {
                             instance: iid,
                             node: lnode,
@@ -699,9 +760,12 @@ impl Actor for ClusterOrchestrator {
                         ctx.send(self.root, msg, bytes, labels::CLUSTER_TO_ROOT);
                     }
                 }
+                // Telemetry-driven flips ride the dissemination tick: a
+                // report flipping k instances of one task buffers one
+                // dirty row, not k × targets messages.
                 for task in changed_tasks {
                     self.refresh_ldp_target(task);
-                    self.push_table_update(ctx, task);
+                    self.mark_table_dirty(ctx, task);
                 }
                 for iid in violations {
                     self.start_migration(ctx, iid, true);
@@ -727,18 +791,18 @@ impl Actor for ClusterOrchestrator {
                     }
                 }
                 let mut task_changed = None;
-                if let Some(li) = self.instances.get_mut(&instance) {
+                if let Some(li) = self.instances.get_mut(instance) {
                     if li.state != state {
                         li.state = state;
                         task_changed = Some(li.task);
                     }
                 }
                 if let Some(task) = task_changed {
-                    // Push while the record is still present so the
-                    // (former) host receives the authoritative update —
-                    // on teardown that update clears its table row.
+                    // Buffer while the record is still present so the
+                    // (former) host is captured as a destination — on
+                    // teardown the flushed snapshot clears its table row.
                     self.refresh_ldp_target(task);
-                    self.push_table_update(ctx, task);
+                    self.mark_table_dirty(ctx, task);
                     let msg = SimMsg::Oak(OakMsg::InstanceStatus {
                         instance,
                         node,
@@ -747,18 +811,31 @@ impl Actor for ClusterOrchestrator {
                     let bytes = msg.default_wire_bytes() + WS_FRAME_OVERHEAD;
                     ctx.send(self.root, msg, bytes, labels::CLUSTER_TO_ROOT);
                 }
+                let mut removed = false;
                 if state.is_terminal() {
                     // Drop the record and release the reserved capacity:
                     // doing both on removal means a late duplicate
                     // terminal report cannot double-free (API lifecycle:
                     // undeploy → capacity release happens exactly once).
-                    if let Some(li) = self.instances.remove(&instance) {
+                    if let Some(li) = self.instances.remove(instance) {
                         if let Some(p) = self.profile_mut(li.node) {
                             p.used -= li.request;
                             p.instances = p.instances.saturating_sub(1);
                         }
                         ctx.add_mem(-mem::PER_INSTANCE_MB);
+                        removed = true;
                     }
+                }
+                // Deploy/teardown-ack barrier: only when this ack
+                // genuinely changed a row's meaning (an instance became
+                // routable or stopped being so) flush the coalesced
+                // buffer now instead of waiting out the dissemination
+                // tick. A duplicate/no-op ack (including a re-delivered
+                // terminal report for an already-dropped record) must not
+                // flush unrelated buffered rows — that would defeat the
+                // coalescing.
+                if task_changed.is_some() || removed {
+                    self.flush_tables(ctx);
                 }
             }
 
@@ -777,7 +854,7 @@ impl Actor for ClusterOrchestrator {
                     ctx.metrics().inc("cluster.delegation_tombstoned");
                     return;
                 }
-                let placement = self.run_scheduler(ctx, task, &sla);
+                let placement = self.run_scheduler(ctx, task, &sla, None);
                 let calc_time = self.last_calc;
                 match placement {
                     Placement::Placed { worker, .. } => {
@@ -818,7 +895,7 @@ impl Actor for ClusterOrchestrator {
                     // the replacement's current state so a Running (or
                     // terminal) report that raced ahead of the adoption
                     // is not lost to the root forever.
-                    let status = match self.instances.get(&replacement) {
+                    let status = match self.instances.get(replacement) {
                         Some(li) => Some((li.node, li.state)),
                         // The replacement died before the verdict came
                         // back (second failure): the root adopted a
@@ -840,7 +917,7 @@ impl Actor for ClusterOrchestrator {
                     // lineage): the replacement must not outlive the
                     // refusal — same discipline as ServiceRetired.
                     ctx.metrics().inc("cluster.replacement_refused");
-                    let escalate = match (pending, self.instances.get(&replacement)) {
+                    let escalate = match (pending, self.instances.get(replacement)) {
                         (Some((_, ReplacementReason::LocalRecovery, _)), Some(li))
                             if !self.dead_services.contains(&li.task.service) =>
                         {
@@ -902,7 +979,7 @@ impl Actor for ClusterOrchestrator {
                         SimMsg::Oak(OakMsg::UndeployInstance { instance: r }),
                     );
                 }
-                match self.instances.get(&instance) {
+                match self.instances.get(instance) {
                     Some(li) => {
                         let node = li.node;
                         let reachable = self
@@ -968,12 +1045,33 @@ impl Actor for ClusterOrchestrator {
                 // migrations of this service are refused from here on
                 // (service ids are never reused).
                 self.dead_services.insert(service);
+                // Range-scan the task index: the sweep touches only this
+                // service's instances, not every record in the cluster.
                 let local: Vec<(InstanceId, NodeId)> = self
                     .instances
-                    .iter()
-                    .filter(|(_, li)| li.task.service == service && !li.state.is_terminal())
-                    .map(|(iid, li)| (*iid, li.node))
+                    .of_service(service)
+                    .filter(|(_, li)| !li.state.is_terminal())
+                    .map(|(iid, li)| (iid, li.node))
                     .collect();
+                // Mark every subscribed task of the service dirty NOW:
+                // subscribers must eventually receive the authoritative
+                // empty row. The interest rows themselves are garbage-
+                // collected by `flush_tables` once that empty row has
+                // actually been flushed (removing them here would strand
+                // subscribers with stale conversion-table entries).
+                let subscribed: Vec<TaskId> = self
+                    .interest
+                    .range(
+                        TaskId { service, index: 0 }..=TaskId {
+                            service,
+                            index: u16::MAX,
+                        },
+                    )
+                    .map(|(t, _)| *t)
+                    .collect();
+                for task in subscribed {
+                    self.mark_table_dirty(ctx, task);
+                }
                 // Abandon in-flight migrations of this service.
                 let doomed: BTreeSet<InstanceId> =
                     local.iter().map(|(iid, _)| *iid).collect();
@@ -1004,6 +1102,24 @@ impl Actor for ClusterOrchestrator {
             SimMsg::Oak(OakMsg::ResolveIp { from, query }) => {
                 ctx.charge_cpu(costs::TABLE_OP_MS);
                 if let Some(task) = query.task() {
+                    if self.dead_services.contains(&task.service) {
+                        // Retired service: answer with the authoritative
+                        // empty row and do NOT register interest — a
+                        // re-created interest row for a dead service can
+                        // never be marked dirty again, so the flush-time
+                        // GC could never collect it.
+                        if let Some(actor) = self.worker_actors.get(&from) {
+                            let msg = SimMsg::Oak(OakMsg::TableUpdate {
+                                entries: vec![TableEntry {
+                                    task,
+                                    locations: Vec::new(),
+                                }],
+                            });
+                            let bytes = msg.default_wire_bytes() + MQTT_FRAME_OVERHEAD;
+                            ctx.send(*actor, msg, bytes, labels::CLUSTER_TO_WORKER);
+                        }
+                        return;
+                    }
                     self.interest.entry(task).or_default().insert(from);
                     let locations = self.locations_of(task);
                     if locations.is_empty() {
@@ -1072,8 +1188,8 @@ impl Actor for ClusterOrchestrator {
                 );
                 let running = self
                     .instances
-                    .values()
-                    .filter(|li| li.state == ServiceState::Running)
+                    .iter()
+                    .filter(|(_, li)| li.state == ServiceState::Running)
                     .count();
                 let msg = SimMsg::Oak(OakMsg::ClusterReport {
                     cluster: self.cfg.id,
@@ -1097,7 +1213,7 @@ impl Actor for ClusterOrchestrator {
                         let mut peers = Vec::new();
                         for _ in 0..self.cfg.peer_hint_size {
                             let i = ctx.rng().below(n);
-                            let p = &self.workers[i];
+                            let p = &self.workers.as_slice()[i];
                             if p.spec.node != node {
                                 peers.push((p.spec.node, p.vivaldi));
                             }
@@ -1113,6 +1229,14 @@ impl Actor for ClusterOrchestrator {
                     self.cfg.aggregate_interval,
                     SimMsg::Timer(TimerKind::ClusterAggregate),
                 );
+            }
+
+            SimMsg::Timer(TimerKind::TableFlush) => {
+                // Dissemination tick: flush the coalesced buffer. The
+                // timer re-arms lazily — the next dirty row schedules the
+                // next tick, so an idle cluster stops ticking.
+                self.flush_scheduled = false;
+                self.flush_tables(ctx);
             }
 
             SimMsg::Timer(TimerKind::HealthSweep) => {

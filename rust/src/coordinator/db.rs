@@ -39,7 +39,15 @@ pub struct ServiceRecord {
     pub sla: ServiceSla,
     pub submitted_at: SimTime,
     /// All instances ever created for this service (incl. migrations).
+    /// Append-only — records are kept for lineage and post-mortem
+    /// status, which is what keeps `slot` trivially correct. NEVER push
+    /// to (or reorder) this directly: go through `push_instance`, or
+    /// `instance()/instance_mut()` silently resolve to wrong records.
     pub instances: Vec<InstanceRecord>,
+    /// Instance id → position in `instances`. The root resolves a record
+    /// on every `InstanceStatus` under churn; this replaces the linear
+    /// scan per report. Maintained by [`ServiceRecord::push_instance`].
+    slot: BTreeMap<InstanceId, usize>,
     /// Which cluster each live instance was delegated to.
     pub placement: BTreeMap<InstanceId, ClusterId>,
     /// Set once `UndeployService` is accepted: the service may never grow
@@ -60,12 +68,19 @@ impl ServiceRecord {
         })
     }
 
+    /// Append an instance record, keeping the id→position index current.
+    fn push_instance(&mut self, inst: InstanceRecord) {
+        self.slot.insert(inst.instance, self.instances.len());
+        self.instances.push(inst);
+    }
+
     pub fn instance_mut(&mut self, id: InstanceId) -> Option<&mut InstanceRecord> {
-        self.instances.iter_mut().find(|i| i.instance == id)
+        let i = *self.slot.get(&id)?;
+        self.instances.get_mut(i)
     }
 
     pub fn instance(&self, id: InstanceId) -> Option<&InstanceRecord> {
-        self.instances.iter().find(|i| i.instance == id)
+        self.slot.get(&id).and_then(|&i| self.instances.get(i))
     }
 }
 
@@ -110,31 +125,30 @@ impl ServiceDb {
             })
             .collect();
 
-        let mut instances = Vec::new();
+        let mut rec = ServiceRecord {
+            spec: ServiceSpec {
+                id,
+                name: sla.name.clone(),
+                tasks: Vec::new(),
+            },
+            sla,
+            submitted_at: now,
+            instances: Vec::new(),
+            slot: BTreeMap::new(),
+            placement: BTreeMap::new(),
+            retired: false,
+        };
         let mut ids = Vec::new();
         for t in &tasks {
             let iid = InstanceId(self.next_instance);
             self.next_instance += 1;
-            instances.push(InstanceRecord::new(iid, t.id));
+            rec.push_instance(InstanceRecord::new(iid, t.id));
             self.index.insert(iid, id);
             ids.push(iid);
         }
+        rec.spec.tasks = tasks;
 
-        self.services.insert(
-            id,
-            ServiceRecord {
-                spec: ServiceSpec {
-                    id,
-                    name: sla.name.clone(),
-                    tasks,
-                },
-                sla,
-                submitted_at: now,
-                instances,
-                placement: BTreeMap::new(),
-                retired: false,
-            },
-        );
+        self.services.insert(id, rec);
         (id, ids)
     }
 
@@ -156,7 +170,7 @@ impl ServiceDb {
             .map(|i| i.generation + 1)
             .max()
             .unwrap_or(0);
-        rec.instances.push(inst);
+        rec.push_instance(inst);
         self.index.insert(iid, task.service);
         Some(iid)
     }
@@ -211,7 +225,7 @@ impl ServiceDb {
         // time this registration arrives it is already past Requested.
         let _ = inst.transition(ServiceState::Scheduled);
         rec.instance_mut(original).unwrap().successor = Some(replacement);
-        rec.instances.push(inst);
+        rec.push_instance(inst);
         self.index.insert(replacement, service);
         Ok(true)
     }

@@ -23,11 +23,13 @@
 mod cluster;
 mod db;
 mod root;
+mod state;
 mod worker;
 
 pub use cluster::{ClusterConfig, ClusterOrchestrator, SchedulerKind};
 pub use db::{AdoptError, ServiceDb, ServiceRecord};
 pub use root::{RootConfig, RootOrchestrator};
+pub use state::{InstanceTable, LocalInstance, WorkerTable};
 pub use worker::{WorkerConfig, WorkerEngine};
 
 use crate::util::SimTime;
@@ -69,8 +71,16 @@ pub mod costs {
     pub const ROOT_SCHED_PER_CLUSTER_MS: f64 = 0.02;
     /// Cluster scheduling: per worker scored (ROM).
     pub const ROM_PER_WORKER_MS: f64 = 0.012;
-    /// Cluster scheduling: per worker scored (LDP, distance math).
-    pub const LDP_PER_WORKER_MS: f64 = 0.055;
+    /// Cluster scheduling: per worker feasibility + constraint math
+    /// (LDP). Used to be 0.055 ms: the old implementation pre-measured an
+    /// RTT towards *every* worker per placement, and that fleet-wide ping
+    /// sweep was folded in here. Pings are now lazy (only the sampled
+    /// probe candidates are measured — see `LDP_PING_MS`), so the
+    /// per-worker term models just the filter/ranking math.
+    pub const LDP_PER_WORKER_MS: f64 = 0.02;
+    /// One lazy RTT probe issued towards a sampled candidate worker
+    /// (Alg. 2 line 11), charged per ping actually performed.
+    pub const LDP_PING_MS: f64 = 0.35;
     /// LDP per S2U trilateration (fixed GD solve).
     pub const LDP_TRILATERATION_MS: f64 = 0.9;
     /// Worker-side deploy bookkeeping (excl. container runtime itself).
@@ -116,6 +126,13 @@ pub mod intervals {
     }
     pub fn tunnel_gc() -> SimTime {
         SimTime::from_secs(30.0)
+    }
+    /// Conversion-table dissemination tick: buffered `TableEntry` deltas
+    /// are flushed as one batched `TableUpdate` per destination worker at
+    /// most this often (deploy/teardown acks flush immediately). The
+    /// timer is armed lazily — an idle cluster schedules nothing.
+    pub fn table_dissemination() -> SimTime {
+        SimTime::from_millis(250.0)
     }
     /// Worker considered dead after this much report silence.
     pub fn worker_dead_after() -> SimTime {

@@ -1,0 +1,355 @@
+//! Indexed cluster state — the data structures behind the cluster
+//! orchestrator's hot paths.
+//!
+//! The orchestrator used to keep its worker table as a bare
+//! `Vec<NodeProfile>` (every `profile()` lookup a linear scan) and its
+//! instance records as one flat map (every `locations_of`/table push/LDP
+//! refresh/undeploy sweep an O(instances) filter — O(instances²) per
+//! churn round of status flips). These types replace that with:
+//!
+//! * [`WorkerTable`] — dense, registration-ordered profile storage plus a
+//!   `NodeId → slot` map. Dense storage matters: the scheduler plugins
+//!   take `&[NodeProfile]` and iterate it, and **iteration order feeds
+//!   both the RNG (Vivaldi gossip sampling) and first-fit placement**, so
+//!   removal compacts in order instead of swap-removing.
+//! * [`InstanceTable`] — the `InstanceId → LocalInstance` records plus
+//!   two secondary indices maintained in lockstep: `task → instance set`
+//!   (table dissemination, LDP targets, per-task location queries;
+//!   services range-scan it since [`crate::util::TaskId`] orders by
+//!   `(service, index)`) and `node → instance set` (worker-death sweeps).
+//!
+//! Index invariants (checked by [`WorkerTable::check_consistent`] /
+//! [`InstanceTable::check_consistent`] and the `indices` property suite):
+//! every index entry points at a live record that agrees on the key, and
+//! every record is reachable through each index — i.e. the indices are
+//! always exactly what a brute-force linear scan would compute.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::model::{Capacity, NodeProfile, ServiceState};
+use crate::sla::TaskSla;
+use crate::util::{InstanceId, NodeId, ServiceId, TaskId};
+
+/// Dense slot-map of worker profiles keyed by [`NodeId`].
+#[derive(Clone, Debug, Default)]
+pub struct WorkerTable {
+    profiles: Vec<NodeProfile>,
+    slot: BTreeMap<NodeId, usize>,
+}
+
+impl WorkerTable {
+    pub fn len(&self) -> usize {
+        self.profiles.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.profiles.is_empty()
+    }
+    pub fn contains(&self, node: NodeId) -> bool {
+        self.slot.contains_key(&node)
+    }
+
+    pub fn get(&self, node: NodeId) -> Option<&NodeProfile> {
+        self.slot.get(&node).map(|&i| &self.profiles[i])
+    }
+    pub fn get_mut(&mut self, node: NodeId) -> Option<&mut NodeProfile> {
+        let i = *self.slot.get(&node)?;
+        Some(&mut self.profiles[i])
+    }
+
+    /// Register a profile. Returns false (and keeps the existing entry)
+    /// if the node is already present.
+    pub fn insert(&mut self, profile: NodeProfile) -> bool {
+        let node = profile.spec.node;
+        if self.slot.contains_key(&node) {
+            return false;
+        }
+        self.slot.insert(node, self.profiles.len());
+        self.profiles.push(profile);
+        true
+    }
+
+    /// Deregister a node, compacting the dense storage **in order** (an
+    /// O(n) shift + slot fix-up — deaths are rare; lookups are not).
+    pub fn remove(&mut self, node: NodeId) -> Option<NodeProfile> {
+        let i = self.slot.remove(&node)?;
+        let p = self.profiles.remove(i);
+        for s in self.slot.values_mut() {
+            if *s > i {
+                *s -= 1;
+            }
+        }
+        Some(p)
+    }
+
+    /// Profiles in registration order (the order placement plugins and
+    /// gossip sampling see).
+    pub fn iter(&self) -> std::slice::Iter<'_, NodeProfile> {
+        self.profiles.iter()
+    }
+    pub fn as_slice(&self) -> &[NodeProfile] {
+        &self.profiles
+    }
+
+    /// Validate the slot index against a brute-force scan.
+    pub fn check_consistent(&self) -> Result<(), String> {
+        if self.slot.len() != self.profiles.len() {
+            return Err(format!(
+                "slot count {} != profile count {}",
+                self.slot.len(),
+                self.profiles.len()
+            ));
+        }
+        for (node, &i) in &self.slot {
+            let Some(p) = self.profiles.get(i) else {
+                return Err(format!("{node} slot {i} out of bounds"));
+            };
+            if p.spec.node != *node {
+                return Err(format!("{node} slot {i} holds {}", p.spec.node));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Cluster-side record of one instance it manages.
+#[derive(Clone, Debug)]
+pub struct LocalInstance {
+    /// Immutable after insertion — mutating it through `get_mut` would
+    /// desynchronize the task index.
+    pub task: TaskId,
+    /// Immutable after insertion (the node index mirrors it).
+    pub node: NodeId,
+    pub state: ServiceState,
+    pub request: Capacity,
+    pub sla: TaskSla,
+}
+
+/// Instance records plus task→instances and node→instances indices.
+#[derive(Clone, Debug, Default)]
+pub struct InstanceTable {
+    records: BTreeMap<InstanceId, LocalInstance>,
+    by_task: BTreeMap<TaskId, BTreeSet<InstanceId>>,
+    by_node: BTreeMap<NodeId, BTreeSet<InstanceId>>,
+}
+
+impl InstanceTable {
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    pub fn get(&self, id: InstanceId) -> Option<&LocalInstance> {
+        self.records.get(&id)
+    }
+    /// Mutable record access for state transitions. `task`/`node` must
+    /// not be changed through this (see [`LocalInstance`]).
+    pub fn get_mut(&mut self, id: InstanceId) -> Option<&mut LocalInstance> {
+        self.records.get_mut(&id)
+    }
+
+    pub fn insert(&mut self, id: InstanceId, li: LocalInstance) {
+        let (task, node) = (li.task, li.node);
+        if let Some(old) = self.records.insert(id, li) {
+            // Ids are never reused; a same-id overwrite would orphan the
+            // old index rows. Repair rather than corrupt.
+            self.unindex(id, old.task, old.node);
+        }
+        self.by_task.entry(task).or_default().insert(id);
+        self.by_node.entry(node).or_default().insert(id);
+    }
+
+    pub fn remove(&mut self, id: InstanceId) -> Option<LocalInstance> {
+        let li = self.records.remove(&id)?;
+        self.unindex(id, li.task, li.node);
+        Some(li)
+    }
+
+    fn unindex(&mut self, id: InstanceId, task: TaskId, node: NodeId) {
+        if let Some(set) = self.by_task.get_mut(&task) {
+            set.remove(&id);
+            if set.is_empty() {
+                self.by_task.remove(&task);
+            }
+        }
+        if let Some(set) = self.by_node.get_mut(&node) {
+            set.remove(&id);
+            if set.is_empty() {
+                self.by_node.remove(&node);
+            }
+        }
+    }
+
+    /// All records in ascending instance-id order.
+    pub fn iter(&self) -> impl Iterator<Item = (InstanceId, &LocalInstance)> + '_ {
+        self.records.iter().map(|(id, li)| (*id, li))
+    }
+
+    /// Records of one task, ascending id (same order a full scan yields).
+    pub fn of_task(&self, task: TaskId) -> impl Iterator<Item = (InstanceId, &LocalInstance)> + '_ {
+        self.by_task
+            .get(&task)
+            .into_iter()
+            .flat_map(move |ids| ids.iter().map(move |id| (*id, &self.records[id])))
+    }
+
+    /// Records hosted on one node, ascending id.
+    pub fn of_node(&self, node: NodeId) -> impl Iterator<Item = (InstanceId, &LocalInstance)> + '_ {
+        self.by_node
+            .get(&node)
+            .into_iter()
+            .flat_map(move |ids| ids.iter().map(move |id| (*id, &self.records[id])))
+    }
+
+    /// Records of every task of one service: a range scan over the task
+    /// index ([`TaskId`] orders by `(service, index)`), so an undeploy
+    /// sweep touches only the service's own instances.
+    pub fn of_service(
+        &self,
+        service: ServiceId,
+    ) -> impl Iterator<Item = (InstanceId, &LocalInstance)> + '_ {
+        let lo = TaskId { service, index: 0 };
+        let hi = TaskId {
+            service,
+            index: u16::MAX,
+        };
+        self.by_task
+            .range(lo..=hi)
+            .flat_map(move |(_, ids)| ids.iter().map(move |id| (*id, &self.records[id])))
+    }
+
+    /// Distinct nodes hosting at least one instance of `task`.
+    pub fn nodes_of_task(&self, task: TaskId) -> BTreeSet<NodeId> {
+        self.of_task(task).map(|(_, li)| li.node).collect()
+    }
+
+    /// Validate both indices against brute-force scans of the records.
+    pub fn check_consistent(&self) -> Result<(), String> {
+        let mut indexed = 0usize;
+        for (task, ids) in &self.by_task {
+            if ids.is_empty() {
+                return Err(format!("empty task index row {task}"));
+            }
+            for id in ids {
+                indexed += 1;
+                match self.records.get(id) {
+                    Some(li) if li.task == *task => {}
+                    Some(li) => {
+                        return Err(format!("{id} indexed under {task}, records {}", li.task))
+                    }
+                    None => return Err(format!("{id} in task index but not in records")),
+                }
+            }
+        }
+        if indexed != self.records.len() {
+            return Err(format!(
+                "task index covers {indexed} of {} records",
+                self.records.len()
+            ));
+        }
+        let mut indexed = 0usize;
+        for (node, ids) in &self.by_node {
+            if ids.is_empty() {
+                return Err(format!("empty node index row {node}"));
+            }
+            for id in ids {
+                indexed += 1;
+                match self.records.get(id) {
+                    Some(li) if li.node == *node => {}
+                    Some(li) => {
+                        return Err(format!("{id} indexed under {node}, records {}", li.node))
+                    }
+                    None => return Err(format!("{id} in node index but not in records")),
+                }
+            }
+        }
+        if indexed != self.records.len() {
+            return Err(format!(
+                "node index covers {indexed} of {} records",
+                self.records.len()
+            ));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geo::GeoPoint;
+    use crate::model::{NodeClass, WorkerSpec};
+    use crate::sla::simple_sla;
+
+    fn profile(node: u32) -> NodeProfile {
+        NodeProfile::new(WorkerSpec {
+            node: NodeId(node),
+            class: NodeClass::S,
+            location: GeoPoint::default(),
+        })
+    }
+
+    fn inst(service: u32, index: u16, node: u32) -> LocalInstance {
+        LocalInstance {
+            task: TaskId {
+                service: ServiceId(service),
+                index,
+            },
+            node: NodeId(node),
+            state: ServiceState::Running,
+            request: Capacity::new(100, 32, 0),
+            sla: simple_sla("t", 100, 32).constraints[0].clone(),
+        }
+    }
+
+    #[test]
+    fn worker_table_preserves_registration_order_across_removal() {
+        let mut wt = WorkerTable::default();
+        for n in [5u32, 2, 9, 7] {
+            assert!(wt.insert(profile(n)));
+        }
+        assert!(!wt.insert(profile(2)), "duplicate registration refused");
+        assert_eq!(wt.len(), 4);
+        assert!(wt.get(NodeId(9)).is_some());
+        wt.check_consistent().unwrap();
+
+        wt.remove(NodeId(2)).unwrap();
+        // Registration order survives the compaction (placement +
+        // gossip iteration order must not shuffle on a death).
+        let order: Vec<u32> = wt.iter().map(|p| p.spec.node.0).collect();
+        assert_eq!(order, vec![5, 9, 7]);
+        assert!(wt.get(NodeId(2)).is_none());
+        assert!(wt.get_mut(NodeId(7)).is_some());
+        wt.check_consistent().unwrap();
+    }
+
+    #[test]
+    fn instance_table_indices_track_inserts_and_removals() {
+        let mut it = InstanceTable::default();
+        it.insert(InstanceId(1), inst(0, 0, 10));
+        it.insert(InstanceId(2), inst(0, 0, 11));
+        it.insert(InstanceId(3), inst(0, 1, 10));
+        it.insert(InstanceId(4), inst(1, 0, 10));
+        it.check_consistent().unwrap();
+
+        let t00 = TaskId {
+            service: ServiceId(0),
+            index: 0,
+        };
+        let ids: Vec<u64> = it.of_task(t00).map(|(id, _)| id.0).collect();
+        assert_eq!(ids, vec![1, 2]);
+        assert_eq!(it.nodes_of_task(t00), [NodeId(10), NodeId(11)].into());
+        let on10: Vec<u64> = it.of_node(NodeId(10)).map(|(id, _)| id.0).collect();
+        assert_eq!(on10, vec![1, 3, 4]);
+        let svc0: Vec<u64> = it.of_service(ServiceId(0)).map(|(id, _)| id.0).collect();
+        assert_eq!(svc0, vec![1, 2, 3], "service range scan spans its tasks only");
+
+        it.remove(InstanceId(2)).unwrap();
+        it.remove(InstanceId(4)).unwrap();
+        assert!(it.remove(InstanceId(4)).is_none());
+        it.check_consistent().unwrap();
+        assert_eq!(it.of_task(t00).count(), 1);
+        assert_eq!(it.of_service(ServiceId(1)).count(), 0);
+        assert_eq!(it.of_node(NodeId(10)).count(), 2);
+    }
+}

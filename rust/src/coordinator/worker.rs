@@ -438,10 +438,10 @@ impl Actor for WorkerEngine {
             }
 
             SimMsg::Oak(OakMsg::TableUpdate { entries }) => {
-                ctx.charge_cpu(costs::TABLE_OP_MS);
-                for e in entries {
-                    self.table.apply(e);
-                }
+                // Per ROW, not per message: a coalesced flush replaces k
+                // rows and must cost what k single-row pushes did.
+                ctx.charge_cpu(costs::TABLE_OP_MS * entries.len().max(1) as f64);
+                self.table.apply_all(entries);
                 // Retry parked requests whose task is now resolvable.
                 let parked = std::mem::take(&mut self.parked);
                 for (ip, req) in parked {

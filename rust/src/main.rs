@@ -87,10 +87,11 @@ fn print_help() {
                                               migrate storms) → BENCH_churn.json\n\
              --scenario submit|scale|failover|all   storm generators to run (default all)\n\
              --seed N --duration S --clusters N --workers N --scheduler rom|ldp\n\
+             --services N                     cap on concurrently live churn services\n\
              --quick                          small CI-sized storm\n\
              --rejoin-chance P                killed workers rejoin as fresh nodes (0..1)\n\
-             --strict                         exit non-zero on leaks, unanswered requests\n\
-                                              or a root-vs-census mismatch\n\
+             --strict                         exit non-zero on leaks, unanswered requests,\n\
+                                              undrained messages or a census mismatch\n\
              --out PATH                       artifact path (default BENCH_churn.json)\n\
            oakestra ldp [--workers N]         PJRT-accelerated LDP placement demo\n\
            oakestra check-artifacts           verify the AOT artifact bundle\n\
@@ -372,6 +373,9 @@ fn cmd_churn(args: &[String]) -> Result<()> {
     if let Some(s) = flag_value(args, "--workers") {
         cfg.workers_per_cluster = s.parse()?;
     }
+    if let Some(s) = flag_value(args, "--services") {
+        cfg.max_live = s.parse()?;
+    }
     if let Some(s) = flag_value(args, "--scheduler") {
         cfg.scheduler = oakestra::config::parse_scheduler(s)?;
     }
@@ -413,6 +417,13 @@ fn cmd_churn(args: &[String]) -> Result<()> {
             eprintln!("  {row}");
         }
     }
+    if report.pending_non_timer > 0 {
+        eprintln!(
+            "warning: {} message(s) still in flight after the quiescence \
+             drain — the control plane never converged",
+            report.pending_non_timer
+        );
+    }
     std::fs::write(out, report.to_json())
         .map_err(|e| anyhow!("writing {out}: {e}"))?;
     println!("wrote {out}");
@@ -420,15 +431,17 @@ fn cmd_churn(args: &[String]) -> Result<()> {
         && (report.leaked_instances > 0
             || report.leaked_capacity_mc > 0
             || report.unanswered_requests > 0
-            || report.census_mismatch > 0)
+            || report.census_mismatch > 0
+            || report.pending_non_timer > 0)
     {
         return Err(anyhow!(
             "strict churn check failed: leaks={}/{}mc unanswered={} \
-             census_mismatch={}",
+             census_mismatch={} pending_non_timer={}",
             report.leaked_instances,
             report.leaked_capacity_mc,
             report.unanswered_requests,
-            report.census_mismatch
+            report.census_mismatch,
+            report.pending_non_timer
         ));
     }
     Ok(())

@@ -1,8 +1,14 @@
 //! Experiment metrics: counters, byte accounting, latency histograms and
 //! per-node windowed CPU/memory utilization — the raw material for every
 //! figure in the paper's evaluation (§7) and for `EXPERIMENTS.md`.
-
-use std::collections::HashMap;
+//!
+//! The stores are **string-interned**: every `inc`/`observe`/`record_msg`
+//! on the simulator hot path (one `record_msg` per [`crate::sim::Ctx`]
+//! send) resolves its `&'static str` key by pointer identity against a
+//! small memo table instead of SipHash-ing the label bytes into a
+//! `HashMap` probe. Values live in dense insertion-ordered vectors, so
+//! iteration order is deterministic (no per-process hasher seed can leak
+//! into report output).
 
 use crate::util::{percentile, NodeId, SimTime};
 
@@ -76,17 +82,65 @@ pub mod lifecycle {
     pub const UNDEPLOY_TO_DRAINED_MS: &str = "lifecycle.undeploy_to_drained_ms";
 }
 
+/// Interned `&'static str` key set shared by the counter/histogram/
+/// message stores. Keys resolve by **pointer identity** first (every
+/// call site passes the same string literal, whose address is stable for
+/// the process lifetime), falling back to a content scan only the first
+/// time a new call-site address appears. With a few dozen distinct
+/// labels this is a handful of integer compares per event — far cheaper
+/// than hashing the label bytes on every send.
+#[derive(Clone, Debug, Default)]
+struct KeySet {
+    names: Vec<&'static str>,
+    /// (string data address, interned index): one entry per distinct
+    /// call-site literal ever seen, including aliases of the same text.
+    memo: Vec<(usize, usize)>,
+}
+
+impl KeySet {
+    #[inline]
+    fn resolve(&mut self, key: &'static str) -> usize {
+        let addr = key.as_ptr() as usize;
+        for &(a, i) in &self.memo {
+            if a == addr {
+                return i;
+            }
+        }
+        self.resolve_slow(key, addr)
+    }
+
+    /// First sighting of this call-site address: find (or intern) the
+    /// label by content, then memoize the address.
+    fn resolve_slow(&mut self, key: &'static str, addr: usize) -> usize {
+        let idx = match self.names.iter().position(|n| *n == key) {
+            Some(i) => i,
+            None => {
+                self.names.push(key);
+                self.names.len() - 1
+            }
+        };
+        self.memo.push((addr, idx));
+        idx
+    }
+
+    fn find(&self, key: &str) -> Option<usize> {
+        self.names.iter().position(|n| *n == key)
+    }
+}
+
 /// CPU/memory accounting for one node, in windows of fixed width.
 ///
 /// Control-plane work is charged as `cpu_ms` against the window in which
 /// it executes; utilization% = busy-ms / window-ms (capped at the node's
 /// core count by callers charging against multiple cores). Memory is a
-/// gauge sampled at charge points.
+/// gauge sampled at charge points. Windows are a dense vector indexed by
+/// window number (virtual time is bounded and windows are coarse), so a
+/// charge is one bounds check + add instead of a hash probe.
 #[derive(Clone, Debug)]
 pub struct NodeUsage {
     window: SimTime,
-    /// (window index → busy cpu-ms)
-    cpu_busy_ms: HashMap<u64, f64>,
+    /// busy cpu-ms per window index (dense; empty windows are 0.0)
+    cpu_busy_ms: Vec<f64>,
     /// resident memory gauge in MB
     pub mem_mb: f64,
     /// peak memory over the run
@@ -97,15 +151,18 @@ impl NodeUsage {
     pub fn new(window: SimTime) -> Self {
         NodeUsage {
             window,
-            cpu_busy_ms: HashMap::new(),
+            cpu_busy_ms: Vec::new(),
             mem_mb: 0.0,
             peak_mem_mb: 0.0,
         }
     }
 
     pub fn charge_cpu(&mut self, at: SimTime, cpu_ms: f64) {
-        let idx = at.as_micros() / self.window.as_micros().max(1);
-        *self.cpu_busy_ms.entry(idx).or_insert(0.0) += cpu_ms;
+        let idx = (at.as_micros() / self.window.as_micros().max(1)) as usize;
+        if idx >= self.cpu_busy_ms.len() {
+            self.cpu_busy_ms.resize(idx + 1, 0.0);
+        }
+        self.cpu_busy_ms[idx] += cpu_ms;
     }
 
     pub fn set_mem(&mut self, mem_mb: f64) {
@@ -129,26 +186,30 @@ impl NodeUsage {
         }
         let w_ms = self.window.as_millis();
         let w_us = self.window.as_micros().max(1);
-        let first = from.as_micros() / w_us;
-        let last = (to.as_micros() - 1) / w_us;
+        let first = (from.as_micros() / w_us) as usize;
+        let last = ((to.as_micros() - 1) / w_us) as usize;
         let n = (last - first + 1) as f64;
         let busy: f64 = (first..=last)
-            .map(|i| self.cpu_busy_ms.get(&i).copied().unwrap_or(0.0))
+            .map(|i| self.cpu_busy_ms.get(i).copied().unwrap_or(0.0))
             .sum();
         (busy / (n * w_ms)).max(0.0)
     }
 }
 
-/// Metrics hub threaded through the simulator.
+/// Metrics hub threaded through the simulator. Counter/histogram/message
+/// stores are keyed through the [`KeySet`] interner; per-node usage is a
+/// dense vector indexed by [`NodeId`] (testbeds mint dense node ids).
 #[derive(Clone, Debug)]
 pub struct Metrics {
     window: SimTime,
-    pub counters: HashMap<&'static str, u64>,
-    pub histograms: HashMap<&'static str, Histogram>,
-    pub node_usage: HashMap<NodeId, NodeUsage>,
-    /// Control-plane messages (count, bytes) per direction label.
-    pub msg_count: HashMap<&'static str, u64>,
-    pub msg_bytes: HashMap<&'static str, u64>,
+    counter_keys: KeySet,
+    counter_vals: Vec<u64>,
+    hist_keys: KeySet,
+    hists: Vec<Histogram>,
+    msg_keys: KeySet,
+    msg_counts: Vec<u64>,
+    msg_bytes: Vec<u64>,
+    node_usage: Vec<Option<NodeUsage>>,
 }
 
 impl Default for Metrics {
@@ -161,11 +222,14 @@ impl Metrics {
     pub fn new(window: SimTime) -> Self {
         Metrics {
             window,
-            counters: HashMap::new(),
-            histograms: HashMap::new(),
-            node_usage: HashMap::new(),
-            msg_count: HashMap::new(),
-            msg_bytes: HashMap::new(),
+            counter_keys: KeySet::default(),
+            counter_vals: Vec::new(),
+            hist_keys: KeySet::default(),
+            hists: Vec::new(),
+            msg_keys: KeySet::default(),
+            msg_counts: Vec::new(),
+            msg_bytes: Vec::new(),
+            node_usage: Vec::new(),
         }
     }
 
@@ -173,44 +237,84 @@ impl Metrics {
         self.add(key, 1);
     }
     pub fn add(&mut self, key: &'static str, n: u64) {
-        *self.counters.entry(key).or_insert(0) += n;
+        let i = self.counter_keys.resolve(key);
+        if i >= self.counter_vals.len() {
+            self.counter_vals.resize(i + 1, 0);
+        }
+        self.counter_vals[i] += n;
     }
-    pub fn counter(&self, key: &'static str) -> u64 {
-        self.counters.get(key).copied().unwrap_or(0)
+    pub fn counter(&self, key: &str) -> u64 {
+        self.counter_keys
+            .find(key)
+            .and_then(|i| self.counter_vals.get(i).copied())
+            .unwrap_or(0)
+    }
+    /// All counters whose key starts with `prefix`, sorted by key (stable
+    /// report output regardless of first-touch order).
+    pub fn counters_with_prefix(&self, prefix: &str) -> Vec<(&'static str, u64)> {
+        let mut out: Vec<(&'static str, u64)> = self
+            .counter_keys
+            .names
+            .iter()
+            .enumerate()
+            .filter(|(_, n)| n.starts_with(prefix))
+            .map(|(i, n)| (*n, self.counter_vals.get(i).copied().unwrap_or(0)))
+            .collect();
+        out.sort_unstable();
+        out
     }
 
     pub fn observe(&mut self, key: &'static str, v: f64) {
-        self.histograms.entry(key).or_default().record(v);
+        let i = self.hist_keys.resolve(key);
+        if i >= self.hists.len() {
+            self.hists.resize_with(i + 1, Histogram::default);
+        }
+        self.hists[i].record(v);
     }
-    pub fn histogram(&self, key: &'static str) -> Option<&Histogram> {
-        self.histograms.get(key)
+    pub fn histogram(&self, key: &str) -> Option<&Histogram> {
+        self.hist_keys.find(key).and_then(|i| self.hists.get(i))
     }
 
     pub fn record_msg(&mut self, label: &'static str, bytes: usize) {
-        *self.msg_count.entry(label).or_insert(0) += 1;
-        *self.msg_bytes.entry(label).or_insert(0) += bytes as u64;
+        let i = self.msg_keys.resolve(label);
+        if i >= self.msg_counts.len() {
+            self.msg_counts.resize(i + 1, 0);
+            self.msg_bytes.resize(i + 1, 0);
+        }
+        self.msg_counts[i] += 1;
+        self.msg_bytes[i] += bytes as u64;
     }
-    pub fn msgs(&self, label: &'static str) -> u64 {
-        self.msg_count.get(label).copied().unwrap_or(0)
+    pub fn msgs(&self, label: &str) -> u64 {
+        self.msg_keys
+            .find(label)
+            .and_then(|i| self.msg_counts.get(i).copied())
+            .unwrap_or(0)
     }
-    pub fn bytes(&self, label: &'static str) -> u64 {
-        self.msg_bytes.get(label).copied().unwrap_or(0)
+    pub fn bytes(&self, label: &str) -> u64 {
+        self.msg_keys
+            .find(label)
+            .and_then(|i| self.msg_bytes.get(i).copied())
+            .unwrap_or(0)
     }
     pub fn total_msgs(&self) -> u64 {
-        self.msg_count.values().sum()
+        self.msg_counts.iter().sum()
     }
     pub fn total_bytes(&self) -> u64 {
-        self.msg_bytes.values().sum()
+        self.msg_bytes.iter().sum()
     }
 
     pub fn usage_mut(&mut self, node: NodeId) -> &mut NodeUsage {
         let w = self.window;
-        self.node_usage
-            .entry(node)
-            .or_insert_with(|| NodeUsage::new(w))
+        let i = node.0 as usize;
+        if i >= self.node_usage.len() {
+            self.node_usage.resize(i + 1, None);
+        }
+        self.node_usage[i].get_or_insert_with(|| NodeUsage::new(w))
     }
     pub fn usage(&self, node: NodeId) -> Option<&NodeUsage> {
-        self.node_usage.get(&node)
+        self.node_usage
+            .get(node.0 as usize)
+            .and_then(|u| u.as_ref())
     }
 }
 
@@ -351,6 +455,28 @@ mod tests {
         assert_eq!(m.bytes("worker->cluster"), 256);
         assert_eq!(m.total_msgs(), 3);
         assert_eq!(m.total_bytes(), 768);
+    }
+
+    #[test]
+    fn interned_counters_and_prefix_iteration() {
+        let mut m = Metrics::default();
+        m.inc("root.op.submit");
+        m.inc("root.op.submit");
+        m.inc("root.op.scale");
+        m.inc("cluster.worker_dead");
+        assert_eq!(m.counter("root.op.submit"), 2);
+        assert_eq!(m.counter("root.op.scale"), 1);
+        assert_eq!(m.counter("never.touched"), 0);
+        // Prefix export is sorted by key, independent of touch order.
+        assert_eq!(
+            m.counters_with_prefix("root.op."),
+            vec![("root.op.scale", 1), ("root.op.submit", 2)]
+        );
+        // Histograms share the interner mechanics.
+        m.observe("cluster.sched_ms", 1.5);
+        m.observe("cluster.sched_ms", 2.5);
+        assert_eq!(m.histogram("cluster.sched_ms").unwrap().count(), 2);
+        assert!(m.histogram("missing").is_none());
     }
 
     #[test]

@@ -25,8 +25,12 @@ pub struct ConversionTable {
     rr_cursor: HashMap<TaskId, usize>,
     /// Resolution misses observed (each triggers a ResolveIp round-trip).
     pub misses: u64,
-    /// Push updates applied.
+    /// Push updates applied (one per table row replaced).
     pub updates: u64,
+    /// Batched pushes received (one per `TableUpdate` message — the
+    /// orchestrator coalesces row deltas per destination, so
+    /// `updates / batches` is the achieved coalescing factor).
+    pub batches: u64,
 }
 
 impl ConversionTable {
@@ -70,6 +74,14 @@ impl ConversionTable {
             self.entries.remove(&entry.task);
         } else {
             self.entries.insert(entry.task, entry.locations);
+        }
+    }
+
+    /// Apply one coalesced `TableUpdate` batch.
+    pub fn apply_all(&mut self, entries: Vec<TableEntry>) {
+        self.batches += 1;
+        for e in entries {
+            self.apply(e);
         }
     }
 
@@ -167,6 +179,29 @@ mod tests {
         assert_eq!(got[0].node, NodeId(11));
         t.invalidate_node(NodeId(11));
         assert!(t.locations(tid(0)).is_none());
+    }
+
+    #[test]
+    fn batched_apply_counts_batches_and_rows() {
+        let mut t = ConversionTable::default();
+        t.apply_all(vec![
+            TableEntry {
+                task: tid(0),
+                locations: vec![loc(1, 10, 5.0)],
+            },
+            TableEntry {
+                task: tid(1),
+                locations: vec![loc(2, 11, 9.0)],
+            },
+        ]);
+        t.apply_all(vec![TableEntry {
+            task: tid(0),
+            locations: vec![],
+        }]);
+        assert_eq!(t.batches, 2);
+        assert_eq!(t.updates, 3);
+        assert!(t.locations(tid(0)).is_none());
+        assert!(t.locations(tid(1)).is_some());
     }
 
     #[test]

@@ -72,13 +72,16 @@ impl<'a> TaskScheduler for LdpScheduler<'a> {
             .virtualization_mask()
             .unwrap_or(Virtualization::CONTAINER);
 
-        // Line 1: resource + virtualization feasibility.
+        // Line 1: resource + virtualization feasibility (minus the
+        // caller's excluded host, if any).
         let mut w: Vec<usize> = input
             .workers
             .iter()
             .enumerate()
             .filter(|(_, p)| {
-                p.available().fits(&req) && p.spec.virtualization().supports(req_virt)
+                input.exclude != Some(p.spec.node)
+                    && p.available().fits(&req)
+                    && p.spec.virtualization().supports(req_virt)
             })
             .map(|(i, _)| i)
             .collect();
@@ -137,12 +140,14 @@ impl<'a> TaskScheduler for LdpScheduler<'a> {
         }
         // Rank survivors by ROM's spare-capacity score. `total_cmp` keeps
         // the ordering total even for NaN scores (degenerate capacities
-        // must not panic the scheduler hot path mid-delegation).
-        w.sort_by(|&a, &b| {
-            let sa = input.workers[a].available().spare_score(&req);
-            let sb = input.workers[b].available().spare_score(&req);
+        // must not panic the scheduler hot path mid-delegation); the
+        // node-id tie-break makes it a total order, so the top-4 partial
+        // selection matches a full sort exactly.
+        super::keep_top_k(&mut w, 4, |a: &usize, b: &usize| {
+            let sa = input.workers[*a].available().spare_score(&req);
+            let sb = input.workers[*b].available().spare_score(&req);
             sb.total_cmp(&sa)
-                .then(input.workers[a].spec.node.cmp(&input.workers[b].spec.node))
+                .then(input.workers[*a].spec.node.cmp(&input.workers[*b].spec.node))
         });
         Placement::Placed {
             worker: input.workers[w[0]].spec.node,
@@ -208,6 +213,7 @@ mod tests {
             sla: &sla.constraints[0],
             workers: &ws,
             service_hint: ServiceId(0),
+            exclude: None,
         }) {
             Placement::Placed { worker, .. } => assert_eq!(worker, NodeId(1)),
             p => panic!("{p:?}"),
@@ -232,6 +238,7 @@ mod tests {
             sla: &sla.constraints[0],
             workers: &ws,
             service_hint: ServiceId(0),
+            exclude: None,
         }) {
             Placement::Placed { worker, .. } => assert_eq!(worker, NodeId(2)),
             p => panic!("{p:?}"),
@@ -264,6 +271,7 @@ mod tests {
             sla: &sla.constraints[0],
             workers: &ws,
             service_hint: ServiceId(0),
+            exclude: None,
         }) {
             Placement::Placed { worker, .. } => assert_eq!(worker, NodeId(1)),
             p => panic!("{p:?}"),
@@ -290,6 +298,7 @@ mod tests {
             sla: &sla.constraints[0],
             workers: &ws,
             service_hint: ServiceId(0),
+            exclude: None,
         }) {
             // Worker 1 is the only candidate both feasible and within
             // 20 ms of the origin estimate.
@@ -314,6 +323,7 @@ mod tests {
             sla: &sla.constraints[0],
             workers: &ws,
             service_hint: ServiceId(0),
+            exclude: None,
         }) {
             Placement::Placed { worker, .. } => assert_eq!(worker, NodeId(4)),
             p => panic!("{p:?}"),
@@ -337,6 +347,7 @@ mod tests {
                 sla: &sla.constraints[0],
                 workers: &ws,
                 service_hint: ServiceId(0),
+            exclude: None,
             }),
             Placement::Infeasible
         );

@@ -23,6 +23,10 @@ pub struct PlacementInput<'a> {
     pub workers: &'a [NodeProfile],
     /// Service the task belongs to — S2S targets are siblings inside it.
     pub service_hint: crate::util::ServiceId,
+    /// Worker barred from candidacy (migration away from a violating
+    /// host). Filtered inside the plugins' feasibility scans, so callers
+    /// pass the live table by reference instead of cloning it minus one.
+    pub exclude: Option<NodeId>,
 }
 
 /// Result of one placement attempt within a cluster.
@@ -43,6 +47,24 @@ pub enum Placement {
 pub trait TaskScheduler {
     fn name(&self) -> &'static str;
     fn place(&mut self, input: &PlacementInput<'_>) -> Placement;
+}
+
+/// Keep only the best `k` elements of `v`, ordered by `cmp`: an O(n)
+/// partial selection plus an O(k log k) sort of the survivors. When
+/// `cmp` is a **total order** (score + unique tie-break, as both
+/// shipped schedulers use) the surviving prefix is bit-identical to a
+/// full `sort_by(cmp)` followed by `truncate(k)` — which is all a
+/// placement needs: one winner plus the alternatives list.
+pub(crate) fn keep_top_k<T>(
+    v: &mut Vec<T>,
+    k: usize,
+    mut cmp: impl FnMut(&T, &T) -> std::cmp::Ordering,
+) {
+    if v.len() > k {
+        v.select_nth_unstable_by(k - 1, &mut cmp);
+        v.truncate(k);
+    }
+    v.sort_by(cmp);
 }
 
 #[cfg(test)]

@@ -42,7 +42,9 @@ impl TaskScheduler for RomScheduler {
             .unwrap_or(Virtualization::CONTAINER);
 
         let feasible = input.workers.iter().filter(|w| {
-            w.available().fits(&req) && w.spec.virtualization().supports(req_virt)
+            input.exclude != Some(w.spec.node)
+                && w.available().fits(&req)
+                && w.spec.virtualization().supports(req_virt)
         });
 
         match self.strategy {
@@ -61,7 +63,12 @@ impl TaskScheduler for RomScheduler {
                 if scored.is_empty() {
                     return Placement::Infeasible;
                 }
-                scored.sort_by(|a, b| b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)));
+                // Winner + 3 alternatives is all a placement reports;
+                // the (score, node-id) comparator is a total order, so
+                // the top-4 partial selection matches a full sort.
+                super::keep_top_k(&mut scored, 4, |a, b| {
+                    b.0.total_cmp(&a.0).then(a.1.cmp(&b.1))
+                });
                 Placement::Placed {
                     worker: scored[0].1,
                     alternatives: scored[1..].iter().take(3).map(|s| s.1).collect(),
@@ -98,6 +105,7 @@ mod tests {
             sla: &sla.constraints[0],
             workers: &ws,
             service_hint: crate::util::ServiceId(0),
+            exclude: None,
         }) {
             Placement::Placed {
                 worker,
@@ -121,10 +129,45 @@ mod tests {
             sla: &sla.constraints[0],
             workers: &ws,
             service_hint: crate::util::ServiceId(0),
+            exclude: None,
         }) {
             Placement::Placed { worker, .. } => assert_eq!(worker, NodeId(2)),
             p => panic!("{p:?}"),
         }
+    }
+
+    #[test]
+    fn excluded_worker_is_never_chosen() {
+        // Migration path: the violating host is barred even when it has
+        // the most headroom; with nobody else feasible → Infeasible.
+        let sla = simple_sla("t", 1000, 512);
+        let ws = workers();
+        let mut s = RomScheduler::default();
+        match s.place(&PlacementInput {
+            sla: &sla.constraints[0],
+            workers: &ws,
+            service_hint: crate::util::ServiceId(0),
+            exclude: Some(NodeId(2)),
+        }) {
+            Placement::Placed {
+                worker,
+                alternatives,
+            } => {
+                assert_eq!(worker, NodeId(3));
+                assert!(alternatives.is_empty());
+            }
+            p => panic!("{p:?}"),
+        }
+        let only = vec![worker(2, NodeClass::L, 3500, 3000, GeoPoint::default(), [0.0; 4])];
+        assert_eq!(
+            s.place(&PlacementInput {
+                sla: &sla.constraints[0],
+                workers: &only,
+                service_hint: crate::util::ServiceId(0),
+                exclude: Some(NodeId(2)),
+            }),
+            Placement::Infeasible
+        );
     }
 
     #[test]
@@ -137,6 +180,7 @@ mod tests {
                 sla: &sla.constraints[0],
                 workers: &ws,
                 service_hint: crate::util::ServiceId(0),
+            exclude: None,
             }),
             Placement::Infeasible
         );
@@ -157,6 +201,7 @@ mod tests {
             sla: &sla.constraints[0],
             workers: &ws,
             service_hint: crate::util::ServiceId(0),
+            exclude: None,
         }) {
             Placement::Placed { worker, .. } => assert_eq!(worker, NodeId(2)),
             p => panic!("{p:?}"),

@@ -20,7 +20,7 @@ pub use network::{LinkProfile, Network, Transport};
 
 use std::any::Any;
 use std::cmp::Reverse;
-use std::collections::{BinaryHeap, HashMap};
+use std::collections::{BinaryHeap, HashMap, HashSet};
 
 use crate::metrics::Metrics;
 use crate::model::NodeClass;
@@ -76,18 +76,27 @@ pub struct SimCore {
     pub clock: SimTime,
     queue: BinaryHeap<Reverse<Event>>,
     seq: u64,
+    /// Queued events that are NOT timers (messages in flight). Timers are
+    /// self-rescheduling background noise; this counter is what
+    /// quiescence (and churn's leak audits) actually care about.
+    non_timer_pending: usize,
     pub net: Network,
     pub rng: Rng,
     pub metrics: Metrics,
     nodes: HashMap<NodeId, SimNode>,
     actor_node: Vec<NodeId>,
-    /// Nodes currently failed (messages to/from them are dropped).
-    failed: HashMap<NodeId, bool>,
+    /// Nodes currently failed (messages to/from them are dropped). A set,
+    /// not a `NodeId → bool` map: membership is the only question asked,
+    /// and `send` asks it twice per message.
+    failed: HashSet<NodeId>,
     pub containers: ContainerRuntime,
 }
 
 impl SimCore {
     fn push(&mut self, at: SimTime, target: ActorId, msg: SimMsg) {
+        if !matches!(msg, SimMsg::Timer(_)) {
+            self.non_timer_pending += 1;
+        }
         let seq = self.seq;
         self.seq += 1;
         self.queue.push(Reverse(Event {
@@ -107,11 +116,15 @@ impl SimCore {
     }
 
     pub fn is_failed(&self, node: NodeId) -> bool {
-        self.failed.get(&node).copied().unwrap_or(false)
+        self.failed.contains(&node)
     }
 
     pub fn set_failed(&mut self, node: NodeId, failed: bool) {
-        self.failed.insert(node, failed);
+        if failed {
+            self.failed.insert(node);
+        } else {
+            self.failed.remove(&node);
+        }
     }
 }
 
@@ -119,16 +132,25 @@ impl SimCore {
 pub struct Ctx<'a> {
     pub now: SimTime,
     pub self_id: ActorId,
+    /// Node hosting `self_id`, resolved once per dispatch instead of once
+    /// per `send`/`charge_cpu` call (the sim's hottest lookups).
+    pub self_node: NodeId,
     pub core: &'a mut SimCore,
 }
 
 impl<'a> Ctx<'a> {
-    /// Send over the network; delivery is delayed by the link model and
-    /// message accounting is recorded under `label` (figure 7a counts
-    /// these). Messages involving failed nodes are silently dropped —
-    /// exactly what a dead edge node looks like from the outside.
-    pub fn send(&mut self, to: ActorId, msg: SimMsg, bytes: usize, label: &'static str) {
-        let src = self.core.node_of(self.self_id);
+    /// Shared transmit path of [`Ctx::send`] and
+    /// [`Ctx::send_unreliable`]: one failed-endpoint check, one message
+    /// accounting record, one delivery-delay draw.
+    fn transmit(
+        &mut self,
+        to: ActorId,
+        msg: SimMsg,
+        bytes: usize,
+        label: &'static str,
+        transport: Transport,
+    ) {
+        let src = self.self_node;
         let dst = self.core.node_of(to);
         if self.core.is_failed(src) || self.core.is_failed(dst) {
             self.core.metrics.inc("net.dropped_failed_node");
@@ -138,7 +160,7 @@ impl<'a> Ctx<'a> {
         match self
             .core
             .net
-            .delivery_delay(src, dst, bytes, Transport::Reliable, &mut self.core.rng)
+            .delivery_delay(src, dst, bytes, transport, &mut self.core.rng)
         {
             Some(delay) => {
                 let at = self.now + delay;
@@ -146,6 +168,14 @@ impl<'a> Ctx<'a> {
             }
             None => self.core.metrics.inc("net.lost"),
         }
+    }
+
+    /// Send over the network; delivery is delayed by the link model and
+    /// message accounting is recorded under `label` (figure 7a counts
+    /// these). Messages involving failed nodes are silently dropped —
+    /// exactly what a dead edge node looks like from the outside.
+    pub fn send(&mut self, to: ActorId, msg: SimMsg, bytes: usize, label: &'static str) {
+        self.transmit(to, msg, bytes, label, Transport::Reliable);
     }
 
     /// Send via an unreliable (UDP-like) transport: lost messages vanish.
@@ -156,24 +186,7 @@ impl<'a> Ctx<'a> {
         bytes: usize,
         label: &'static str,
     ) {
-        let src = self.core.node_of(self.self_id);
-        let dst = self.core.node_of(to);
-        if self.core.is_failed(src) || self.core.is_failed(dst) {
-            self.core.metrics.inc("net.dropped_failed_node");
-            return;
-        }
-        self.core.metrics.record_msg(label, bytes);
-        match self
-            .core
-            .net
-            .delivery_delay(src, dst, bytes, Transport::Unreliable, &mut self.core.rng)
-        {
-            Some(delay) => {
-                let at = self.now + delay;
-                self.core.push(at, to, msg);
-            }
-            None => self.core.metrics.inc("net.lost"),
-        }
+        self.transmit(to, msg, bytes, label, Transport::Unreliable);
     }
 
     /// Deliver without touching the network (same-process components, e.g.
@@ -199,7 +212,7 @@ impl<'a> Ctx<'a> {
     /// Charge control-plane CPU time to this actor's node, scaled by the
     /// node's speed factor (a Pi burns more wall-clock per unit work).
     pub fn charge_cpu(&mut self, cpu_ms: f64) {
-        let node = self.core.node_of(self.self_id);
+        let node = self.self_node;
         let scaled = cpu_ms / self.core.node_class(node).speed_factor();
         let now = self.now;
         self.core.metrics.usage_mut(node).charge_cpu(now, scaled);
@@ -207,7 +220,7 @@ impl<'a> Ctx<'a> {
 
     /// Adjust this node's resident-memory gauge.
     pub fn add_mem(&mut self, delta_mb: f64) {
-        let node = self.core.node_of(self.self_id);
+        let node = self.self_node;
         self.core.metrics.usage_mut(node).add_mem(delta_mb);
     }
 
@@ -220,7 +233,7 @@ impl<'a> Ctx<'a> {
     }
 
     pub fn my_node(&self) -> NodeId {
-        self.core.node_of(self.self_id)
+        self.self_node
     }
 
     /// Ground-truth RTT between two nodes (for ping emulation: Vivaldi
@@ -244,12 +257,13 @@ impl Sim {
                 clock: SimTime::ZERO,
                 queue: BinaryHeap::new(),
                 seq: 0,
+                non_timer_pending: 0,
                 net: Network::default(),
                 rng: Rng::seeded(seed),
                 metrics: Metrics::default(),
                 nodes: HashMap::new(),
                 actor_node: Vec::new(),
-                failed: HashMap::new(),
+                failed: HashSet::new(),
                 containers: ContainerRuntime::default(),
             },
         }
@@ -276,36 +290,79 @@ impl Sim {
         self.core.push(at, target, msg);
     }
 
+    /// Pop and dispatch the single next event. Returns false when the
+    /// queue is empty. The shared step of [`Sim::run_until`] and
+    /// [`Sim::run_to_quiescence`] — the non-timer backlog counter is
+    /// maintained exactly here and in [`SimCore::push`].
+    fn dispatch_one(&mut self) -> bool {
+        let Some(Reverse(ev)) = self.core.queue.pop() else {
+            return false;
+        };
+        if !matches!(ev.msg, SimMsg::Timer(_)) {
+            self.core.non_timer_pending -= 1;
+        }
+        self.core.clock = ev.at;
+        let idx = ev.target.0 as usize;
+        // Detach the actor so it can borrow the core mutably.
+        let Some(mut actor) = self.actors[idx].take() else {
+            return true; // actor removed mid-flight
+        };
+        let node = self.core.node_of(ev.target);
+        {
+            let mut ctx = Ctx {
+                now: ev.at,
+                self_id: ev.target,
+                self_node: node,
+                core: &mut self.core,
+            };
+            actor.handle(&mut ctx, ev.msg);
+        }
+        self.actors[idx] = Some(actor);
+        true
+    }
+
     /// Run until the queue drains or the next event lies beyond `until`.
     /// The clock is left at the last *executed* event.
     pub fn run_until(&mut self, until: SimTime) {
-        while let Some(Reverse(ev)) = self.core.queue.peek().map(|e| Reverse(&e.0)) {
-            if ev.at > until {
-                break;
-            }
-            let Reverse(ev) = self.core.queue.pop().unwrap();
-            self.core.clock = ev.at;
-            let idx = ev.target.0 as usize;
-            // Detach the actor so it can borrow the core mutably.
-            let mut actor = match self.actors[idx].take() {
-                Some(a) => a,
-                None => continue, // actor removed mid-flight
-            };
-            {
-                let mut ctx = Ctx {
-                    now: ev.at,
-                    self_id: ev.target,
-                    core: &mut self.core,
-                };
-                actor.handle(&mut ctx, ev.msg);
-            }
-            self.actors[idx] = Some(actor);
+        while self
+            .core
+            .queue
+            .peek()
+            .map_or(false, |Reverse(e)| e.at <= until)
+        {
+            self.dispatch_one();
         }
     }
 
-    /// Drain every queued event (careful with self-rescheduling timers).
-    pub fn run_to_quiescence(&mut self, hard_limit: SimTime) {
-        self.run_until(hard_limit);
+    /// Drain every in-flight **message** (non-timer event), processing
+    /// timers along the way as the clock passes them, and stop the moment
+    /// the queue holds nothing but timers — i.e. the control plane is
+    /// momentarily quiescent. Periodic timers re-arm forever, so "drain
+    /// everything" is undefined; "no message in flight" is the meaningful
+    /// convergence point (churn's leak audits snapshot state here).
+    /// Returns the non-timer backlog still pending (0 unless
+    /// `hard_limit` was hit first).
+    pub fn run_to_quiescence(&mut self, hard_limit: SimTime) -> usize {
+        while self.core.non_timer_pending > 0
+            && self
+                .core
+                .queue
+                .peek()
+                .map_or(false, |Reverse(e)| e.at <= hard_limit)
+        {
+            self.dispatch_one();
+        }
+        self.core.non_timer_pending
+    }
+
+    /// Total queued events (timers included).
+    pub fn pending_events(&self) -> usize {
+        self.core.queue.len()
+    }
+
+    /// Queued events that are in-flight messages rather than timers.
+    pub fn pending_non_timer_events(&self) -> usize {
+        self.core.non_timer_pending
     }
 
     pub fn now(&self) -> SimTime {
@@ -438,6 +495,45 @@ mod tests {
         );
         let pa = sim.actor_as::<Pinger>(a).unwrap();
         assert_eq!(pa.got, 0);
+    }
+
+    #[test]
+    fn quiescence_drains_messages_but_not_timer_chains() {
+        let (mut sim, a, _) = build();
+        sim.inject(SimTime::ZERO, a, SimMsg::Timer(TimerKind::Custom(0)));
+        // A periodic timer chain that never sends messages.
+        struct Ticker;
+        impl Actor for Ticker {
+            fn handle(&mut self, ctx: &mut Ctx<'_>, _: SimMsg) {
+                ctx.schedule(SimTime::from_secs(1.0), SimMsg::Timer(TimerKind::Workload));
+            }
+            fn as_any(&self) -> &dyn Any {
+                self
+            }
+            fn as_any_mut(&mut self) -> &mut dyn Any {
+                self
+            }
+        }
+        let t = sim.add_actor(NodeId(0), Box::new(Ticker));
+        sim.inject(SimTime::ZERO, t, SimMsg::Timer(TimerKind::Workload));
+
+        // Fire the bootstrap timers so the first ping is in flight, then
+        // drain: quiescence stops at "no message in flight", not "queue
+        // empty" (the ticker chain re-arms forever).
+        sim.run_until(SimTime::ZERO);
+        assert_eq!(sim.pending_non_timer_events(), 1, "first ping in flight");
+        let leftover = sim.run_to_quiescence(SimTime::from_secs(60.0));
+        assert_eq!(leftover, 0, "every in-flight message must drain");
+        assert_eq!(sim.pending_non_timer_events(), 0);
+        // The ping-pong exchange completed in full…
+        let pa = sim.actor_as::<Pinger>(a).unwrap();
+        assert_eq!(pa.got, 5);
+        // …while the timer chain is still armed (not drained forever).
+        assert!(sim.pending_events() >= 1, "ticker must stay scheduled");
+        assert!(
+            sim.now() < SimTime::from_secs(60.0),
+            "quiescence must stop well before the hard limit"
+        );
     }
 
     #[test]

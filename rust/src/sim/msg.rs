@@ -33,6 +33,10 @@ pub enum TimerKind {
     Workload,
     /// Tunnel garbage collection sweep (§5 configured/active links).
     TunnelGc,
+    /// Cluster conversion-table dissemination tick: flush the coalesced
+    /// per-worker `TableEntry` delta buffers (§5 subscription pushes are
+    /// batched per destination instead of one message per change).
+    TableFlush,
     Custom(u32),
 }
 

@@ -7,7 +7,9 @@ use oakestra::api::{ApiRequest, ApiResponse};
 use oakestra::bench_harness::{
     build_oakestra, run_churn, ChurnConfig, ChurnScenario, OakTestbedConfig,
 };
-use oakestra::coordinator::{ClusterOrchestrator, RootOrchestrator, WorkerEngine};
+use oakestra::coordinator::{
+    ClusterOrchestrator, RootOrchestrator, SchedulerKind, WorkerEngine,
+};
 use oakestra::model::ServiceState;
 use oakestra::sla::simple_sla;
 use oakestra::util::{ServiceId, SimTime};
@@ -43,6 +45,37 @@ fn same_seed_means_identical_op_sequence_and_census() {
     // A different seed drives a different storm.
     let c = run_churn(&storm_cfg(8));
     assert_ne!(a.op_log, c.op_log, "different seeds must differ");
+}
+
+#[test]
+fn indexed_hot_paths_stay_deterministic_at_scale_and_quiesce() {
+    // Same-seed determinism regression for the hot-path overhaul
+    // (indexed cluster state, coalesced table dissemination, lazy LDP
+    // probing): a larger multi-cluster LDP storm must produce a
+    // byte-identical op log + census across runs, drain every in-flight
+    // message, and keep root-vs-placement agreement.
+    let cfg = ChurnConfig {
+        scenario: ChurnScenario::All,
+        clusters: 3,
+        workers_per_cluster: 8,
+        scheduler: SchedulerKind::Ldp,
+        duration_s: 60.0,
+        ..ChurnConfig::quick(13)
+    };
+    let a = run_churn(&cfg);
+    let b = run_churn(&cfg);
+    assert!(a.op_log.len() > 10, "storm must actually do things");
+    assert_eq!(a.op_log, b.op_log, "indexed refactor must not cost determinism");
+    assert_eq!(a.census, b.census);
+    assert_eq!(a.ctrl_msgs, b.ctrl_msgs);
+    assert_eq!(
+        a.pending_non_timer, 0,
+        "quiescence drain must leave no message in flight"
+    );
+    assert_eq!(a.census_mismatch, 0, "{:?}", a.census_diff);
+    assert_eq!(a.leaked_instances, 0);
+    assert_eq!(a.leaked_capacity_mc, 0);
+    assert!(a.sched_runs > 0, "LDP plugin must have run");
 }
 
 #[test]

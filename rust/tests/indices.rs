@@ -1,0 +1,210 @@
+//! Property tests for the cluster's indexed state
+//! (`oakestra::coordinator::{WorkerTable, InstanceTable}`): after an
+//! arbitrary sequence of register / deploy / migrate / undeploy /
+//! worker-death operations, the node→profile slot map and the
+//! task→instances / node→instances secondary indices must agree exactly
+//! with a brute-force linear scan over a mirrored flat model.
+
+use std::collections::BTreeSet;
+
+use oakestra::coordinator::{InstanceTable, LocalInstance, WorkerTable};
+use oakestra::geo::GeoPoint;
+use oakestra::model::{Capacity, NodeClass, NodeProfile, ServiceState, WorkerSpec};
+use oakestra::prop_assert;
+use oakestra::propcheck::check;
+use oakestra::util::{InstanceId, NodeId, Rng, ServiceId, TaskId};
+
+fn profile(node: u32) -> NodeProfile {
+    NodeProfile::new(WorkerSpec {
+        node: NodeId(node),
+        class: NodeClass::S,
+        location: GeoPoint::default(),
+    })
+}
+
+fn instance(task: TaskId, node: NodeId) -> LocalInstance {
+    LocalInstance {
+        task,
+        node,
+        state: ServiceState::Running,
+        request: Capacity::new(50, 16, 0),
+        sla: oakestra::sla::simple_sla("p", 50, 16).constraints[0].clone(),
+    }
+}
+
+fn rand_task(rng: &mut Rng) -> TaskId {
+    TaskId {
+        service: ServiceId(rng.below(6) as u32),
+        index: rng.below(3) as u16,
+    }
+}
+
+/// Flat mirror of the indexed state: plain vectors, answers every query
+/// by linear scan.
+#[derive(Default)]
+struct Mirror {
+    workers: Vec<u32>,
+    /// (instance, task, node)
+    instances: Vec<(InstanceId, TaskId, NodeId)>,
+}
+
+#[test]
+fn prop_indices_agree_with_brute_force_scans() {
+    check("cluster indices vs brute force", 150, |rng| {
+        let mut wt = WorkerTable::default();
+        let mut it = InstanceTable::default();
+        let mut mirror = Mirror::default();
+        let mut next_instance = 0u64;
+
+        for _ in 0..120 {
+            match rng.below(10) {
+                // Register a worker (duplicates must be refused).
+                0 | 1 => {
+                    let node = rng.below(12) as u32;
+                    let inserted = wt.insert(profile(node));
+                    prop_assert!(
+                        inserted != mirror.workers.contains(&node),
+                        "duplicate-registration verdict for n{node} diverged"
+                    );
+                    if inserted {
+                        mirror.workers.push(node);
+                    }
+                }
+                // Worker death: deregister + drop its instances (the
+                // cluster finalizes them via the node index).
+                2 => {
+                    if mirror.workers.is_empty() {
+                        continue;
+                    }
+                    let node = mirror.workers[rng.below(mirror.workers.len())];
+                    wt.remove(NodeId(node)).ok_or("death lost the profile")?;
+                    mirror.workers.retain(|w| *w != node);
+                    let doomed: Vec<InstanceId> = it
+                        .of_node(NodeId(node))
+                        .map(|(id, _)| id)
+                        .collect();
+                    let brute: Vec<InstanceId> = mirror
+                        .instances
+                        .iter()
+                        .filter(|(_, _, n)| *n == NodeId(node))
+                        .map(|(id, _, _)| *id)
+                        .collect();
+                    prop_assert!(
+                        doomed == brute,
+                        "node sweep {doomed:?} != brute {brute:?}"
+                    );
+                    for id in doomed {
+                        it.remove(id).ok_or("sweep lost a record")?;
+                    }
+                    mirror.instances.retain(|(_, _, n)| *n != NodeId(node));
+                }
+                // Deploy onto a random registered worker.
+                3 | 4 | 5 => {
+                    if mirror.workers.is_empty() {
+                        continue;
+                    }
+                    let node = NodeId(mirror.workers[rng.below(mirror.workers.len())]);
+                    let task = rand_task(rng);
+                    next_instance += 1;
+                    let id = InstanceId(next_instance);
+                    it.insert(id, instance(task, node));
+                    mirror.instances.push((id, task, node));
+                }
+                // Migrate: undeploy one instance, redeploy it (fresh id)
+                // on another worker.
+                6 | 7 => {
+                    if mirror.instances.is_empty() || mirror.workers.is_empty() {
+                        continue;
+                    }
+                    let k = rng.below(mirror.instances.len());
+                    let (old, task, _) = mirror.instances[k];
+                    it.remove(old).ok_or("migration lost the original")?;
+                    mirror.instances.remove(k);
+                    let node = NodeId(mirror.workers[rng.below(mirror.workers.len())]);
+                    next_instance += 1;
+                    let id = InstanceId(next_instance);
+                    it.insert(id, instance(task, node));
+                    mirror.instances.push((id, task, node));
+                }
+                // Undeploy one instance.
+                _ => {
+                    if mirror.instances.is_empty() {
+                        continue;
+                    }
+                    let k = rng.below(mirror.instances.len());
+                    let (id, _, _) = mirror.instances[k];
+                    it.remove(id).ok_or("undeploy lost the record")?;
+                    mirror.instances.remove(k);
+                }
+            }
+
+            // Structural invariants hold after every single operation.
+            wt.check_consistent()?;
+            it.check_consistent()?;
+        }
+
+        // Final deep comparison of every query against brute force.
+        prop_assert!(wt.len() == mirror.workers.len());
+        for node in 0..12u32 {
+            let id = NodeId(node);
+            let indexed = wt.get(id).map(|p| p.spec.node);
+            let brute = wt
+                .iter()
+                .find(|p| p.spec.node == id)
+                .map(|p| p.spec.node);
+            prop_assert!(
+                indexed == brute,
+                "slot lookup for n{node}: {indexed:?} != scan {brute:?}"
+            );
+
+            let by_node: Vec<InstanceId> = it.of_node(id).map(|(i, _)| i).collect();
+            let mut brute: Vec<InstanceId> = mirror
+                .instances
+                .iter()
+                .filter(|(_, _, n)| *n == id)
+                .map(|(i, _, _)| *i)
+                .collect();
+            brute.sort();
+            prop_assert!(by_node == brute, "of_node(n{node}) diverged");
+        }
+        for s in 0..6u32 {
+            for t in 0..3u16 {
+                let task = TaskId {
+                    service: ServiceId(s),
+                    index: t,
+                };
+                let by_task: Vec<InstanceId> = it.of_task(task).map(|(i, _)| i).collect();
+                let mut brute: Vec<InstanceId> = mirror
+                    .instances
+                    .iter()
+                    .filter(|(_, tt, _)| *tt == task)
+                    .map(|(i, _, _)| *i)
+                    .collect();
+                brute.sort();
+                prop_assert!(by_task == brute, "of_task({task}) diverged");
+
+                let nodes = it.nodes_of_task(task);
+                let brute_nodes: BTreeSet<NodeId> = mirror
+                    .instances
+                    .iter()
+                    .filter(|(_, tt, _)| *tt == task)
+                    .map(|(_, _, n)| *n)
+                    .collect();
+                prop_assert!(nodes == brute_nodes, "nodes_of_task({task}) diverged");
+            }
+            let by_svc: Vec<InstanceId> =
+                it.of_service(ServiceId(s)).map(|(i, _)| i).collect();
+            let mut brute: Vec<InstanceId> = mirror
+                .instances
+                .iter()
+                .filter(|(_, tt, _)| tt.service == ServiceId(s))
+                .map(|(i, _, _)| *i)
+                .collect();
+            brute.sort();
+            let mut by_svc_sorted = by_svc.clone();
+            by_svc_sorted.sort();
+            prop_assert!(by_svc_sorted == brute, "of_service(s{s}) diverged");
+        }
+        Ok(())
+    });
+}

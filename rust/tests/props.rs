@@ -190,6 +190,7 @@ fn prop_rom_never_places_on_infeasible_worker() {
             sla: &sla.constraints[0],
             workers: &workers,
             service_hint: ServiceId(0),
+            exclude: None,
         };
         for strategy in [RomStrategy::BestFit, RomStrategy::FirstFit] {
             let mut s = RomScheduler { strategy };
