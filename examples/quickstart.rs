@@ -31,8 +31,10 @@ fn main() {
             "after warm-up: {} clusters registered at the root",
             root.tree.len()
         );
-        for c in root.tree.clusters() {
-            if let Some(stats) = root.tree.stats(c) {
+        // Aggregates live in the root's indexed federation table (the
+        // tree keeps only the topology).
+        for c in root.fed.clusters() {
+            if let Some(stats) = root.fed.stats(c) {
                 println!(
                     "  {c}: {} workers, Σcpu={} mc, μcpu={:.0} mc, σcpu={:.0} mc",
                     stats.worker_count,

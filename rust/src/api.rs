@@ -172,6 +172,11 @@ pub struct ServiceStatusInfo {
     pub submitted_at: SimTime,
     pub fully_running: bool,
     pub tasks: usize,
+    /// Aggregated observed CPU draw (mc) across the service's Running
+    /// instances, from worker telemetry rolled up through the clusters'
+    /// (delta-coalesced) aggregate reports — real QoS telemetry an
+    /// autoscaler can key off, not the reservation.
+    pub observed_cpu_mc: u64,
     pub instances: Vec<InstanceStatusInfo>,
 }
 
@@ -245,6 +250,7 @@ pub fn status_of(rec: &ServiceRecord) -> ServiceStatusInfo {
         submitted_at: rec.submitted_at,
         fully_running: rec.fully_running(),
         tasks: rec.spec.tasks.len(),
+        observed_cpu_mc: rec.observed_cpu_mc(),
         instances: rec
             .instances
             .iter()
@@ -285,12 +291,14 @@ pub fn summarize(db: &ServiceDb) -> Vec<ServiceSummary> {
 /// Render a status view as a human-readable block (CLI `status` output).
 pub fn format_status(s: &ServiceStatusInfo) -> String {
     let mut out = format!(
-        "service {} '{}': {} task(s), {} instance record(s), fully_running={}\n",
+        "service {} '{}': {} task(s), {} instance record(s), fully_running={}, \
+         observed_cpu={}mc\n",
         s.service,
         s.name,
         s.tasks,
         s.instances.len(),
-        s.fully_running
+        s.fully_running,
+        s.observed_cpu_mc
     );
     for i in &s.instances {
         let mut lineage = String::new();
@@ -463,8 +471,10 @@ mod tests {
             inst.transition(ServiceState::Running).unwrap();
             inst.successor = Some(InstanceId(42));
             rec.placement.insert(ids[0], ClusterId(1));
+            rec.observed_cpu.insert(ClusterId(1), 123);
         }
         let s = status_of(db.service(id).unwrap());
+        assert_eq!(s.observed_cpu_mc, 123);
         assert_eq!(s.tasks, 2);
         assert_eq!(s.instances.len(), 2);
         assert_eq!(s.count(ServiceState::Running), 1);
@@ -478,6 +488,7 @@ mod tests {
         let rendered = format_status(&s);
         assert!(rendered.contains("Running"));
         assert!(rendered.contains("superseded-by i42"));
+        assert!(rendered.contains("observed_cpu=123mc"));
     }
 
     #[test]

@@ -43,7 +43,14 @@ pub enum ChurnScenario {
     Scale,
     /// Fixed fleet + failover drills only.
     Failover,
-    /// All three composed.
+    /// Arrival/departure churn over the *heavy* catalog
+    /// ([`spill_catalog_sla`]): footprints sized so undersized clusters
+    /// saturate between aggregate reports and the root's priority-list
+    /// spill (`DelegationResult{None}` → next cluster) fires under
+    /// sustained load. Pair with a many-small-clusters `--shape`
+    /// (e.g. 16x6).
+    Spill,
+    /// Submit + autoscale + failover composed.
     All,
 }
 
@@ -53,18 +60,26 @@ impl ChurnScenario {
             "submit" | "churn" => ChurnScenario::Submit,
             "scale" | "autoscale" => ChurnScenario::Scale,
             "failover" | "migrate" => ChurnScenario::Failover,
+            "spill" => ChurnScenario::Spill,
             "all" => ChurnScenario::All,
             _ => return None,
         })
     }
     fn arrivals(self) -> bool {
-        matches!(self, ChurnScenario::Submit | ChurnScenario::All)
+        matches!(
+            self,
+            ChurnScenario::Submit | ChurnScenario::Spill | ChurnScenario::All
+        )
     }
     fn autoscale(self) -> bool {
         matches!(self, ChurnScenario::Scale | ChurnScenario::All)
     }
     fn drills(self) -> bool {
         matches!(self, ChurnScenario::Failover | ChurnScenario::All)
+    }
+    /// Spill storms draw from the deliberately heavy SLA catalog.
+    fn heavy_catalog(self) -> bool {
+        matches!(self, ChurnScenario::Spill)
     }
 }
 
@@ -119,6 +134,16 @@ pub struct ChurnConfig {
     pub rejoin_chance: f64,
     /// Seconds between a kill and its scheduled rejoin.
     pub rejoin_delay_s: f64,
+    /// Autoscaler signal source: when true, decisions key off the *real*
+    /// per-service observed CPU exposed by `ServiceStatus`
+    /// (`observed_cpu_mc`, fed by worker telemetry through the clusters'
+    /// coalesced aggregate reports) instead of the synthetic offered-load
+    /// walk. The walk still advances either way, so flipping the knob
+    /// never shifts the RNG stream.
+    pub cpu_autoscale: bool,
+    /// Observed-CPU budget one replica is expected to absorb (mc), the
+    /// `load_per_replica` analogue of the CPU-keyed autoscaler.
+    pub cpu_per_replica_mc: f64,
     /// Quiet window between the end of the storms and the final drain.
     /// With no new ops in flight the control plane converges, and the
     /// harness snapshots the root-vs-census consistency check here —
@@ -157,6 +182,8 @@ impl Default for ChurnConfig {
             fail_worker_chance: 0.5,
             rejoin_chance: 0.25,
             rejoin_delay_s: 15.0,
+            cpu_autoscale: false,
+            cpu_per_replica_mc: 70.0,
             pre_drain_hold_s: 8.0,
             watch_timeout_s: 30.0,
         }
@@ -178,6 +205,36 @@ impl ChurnConfig {
             ..ChurnConfig::default()
         }
     }
+
+    /// The many-cluster spill storm (ROADMAP: multi-cluster spill under
+    /// churn): 16 deliberately undersized clusters of 6 S workers and the
+    /// heavy catalog, with arrivals fast enough that the root's (stale,
+    /// delta-coalesced) aggregates keep over-targeting the current best
+    /// cluster — forcing `DelegationResult{None}` spill down the
+    /// priority list, and occasional full exhaustion.
+    pub fn spill_storm(seed: u64) -> Self {
+        ChurnConfig {
+            seed,
+            scenario: ChurnScenario::Spill,
+            clusters: 16,
+            workers_per_cluster: 6,
+            duration_s: 90.0,
+            settle_s: 40.0,
+            arrival_period_s: 0.6,
+            mean_lifetime_s: 25.0,
+            max_live: 64,
+            catalog: 8,
+            ..ChurnConfig::default()
+        }
+    }
+}
+
+/// Parse a `CxW` topology shape (e.g. `16x6` = 16 clusters × 6 workers).
+pub fn parse_shape(s: &str) -> Option<(usize, usize)> {
+    let (c, w) = s.split_once(|ch| ch == 'x' || ch == 'X')?;
+    let c: usize = c.trim().parse().ok()?;
+    let w: usize = w.trim().parse().ok()?;
+    (c > 0 && w > 0).then_some((c, w))
 }
 
 /// One SLA shape of the churn catalog: small footprints with varied
@@ -190,6 +247,16 @@ pub fn catalog_sla(i: usize) -> ServiceSla {
         sla.constraints.push(sla.constraints[0].clone());
     }
     sla
+}
+
+/// One SLA shape of the *spill* catalog: heavy single-task footprints
+/// (400–850 mc) sized so an S worker (1000 mc) hosts one — at most two —
+/// instances. Sustained arrivals then overrun whole clusters between
+/// aggregate reports, forcing the root's priority-list spill.
+pub fn spill_catalog_sla(i: usize) -> ServiceSla {
+    let cpu = 400 + 150 * (i % 4) as u32;
+    let mem = 96 + 64 * (i % 3) as u32;
+    simple_sla(&format!("spill-{i}"), cpu, mem)
 }
 
 /// Driver-side view of one live service.
@@ -225,6 +292,9 @@ pub struct ChurnDriver {
     running_cache: BTreeMap<ServiceId, Vec<(InstanceId, NodeId)>>,
     /// service → min per-task running count from the last status.
     replica_cache: BTreeMap<ServiceId, usize>,
+    /// service → aggregated observed CPU (mc) from the last status — the
+    /// real-telemetry signal of the CPU-keyed autoscaler.
+    cpu_cache: BTreeMap<ServiceId, u64>,
     pub failed_workers: BTreeSet<NodeId>,
     pub api_errors: BTreeMap<&'static str, u64>,
     /// Kills whose hardware is scheduled to rejoin: (dead node, when).
@@ -248,9 +318,19 @@ pub struct ChurnDriver {
 }
 
 impl ChurnDriver {
+    /// The SLA shape arrivals draw from: spill storms use the heavy
+    /// catalog, everything else the small one.
+    fn sla_for(cfg: &ChurnConfig, i: usize) -> crate::sla::ServiceSla {
+        if cfg.scenario.heavy_catalog() {
+            spill_catalog_sla(i)
+        } else {
+            catalog_sla(i)
+        }
+    }
+
     pub fn new(cfg: ChurnConfig, root: ActorId) -> Self {
         for i in 0..cfg.catalog {
-            catalog_sla(i)
+            Self::sla_for(&cfg, i)
                 .validate()
                 .expect("churn catalog SLA must validate");
         }
@@ -272,6 +352,7 @@ impl ChurnDriver {
             undeploy_watch: BTreeMap::new(),
             running_cache: BTreeMap::new(),
             replica_cache: BTreeMap::new(),
+            cpu_cache: BTreeMap::new(),
             failed_workers: BTreeSet::new(),
             api_errors: BTreeMap::new(),
             pending_rejoin: Vec::new(),
@@ -320,7 +401,7 @@ impl ChurnDriver {
     }
 
     fn submit_from_catalog(&mut self, ctx: &mut Ctx<'_>, idx: usize) {
-        let sla = catalog_sla(idx);
+        let sla = Self::sla_for(&self.cfg, idx);
         let req = self.call(ctx, ApiRequest::SubmitService { sla });
         self.pending_submit.insert(req, (idx, ctx.now));
         self.submits += 1;
@@ -396,9 +477,31 @@ impl ChurnDriver {
             if replicas == 0 {
                 continue;
             }
-            let desired = ((load / self.cfg.load_per_replica).ceil() as usize)
-                .clamp(1, self.cfg.max_replicas);
-            let ratio = load / (replicas as f64 * self.cfg.load_per_replica);
+            // Signal source: the synthetic offered-load walk, or — when
+            // `cpu_autoscale` is on — the real per-service observed CPU
+            // that `ServiceStatus` now aggregates from worker telemetry
+            // (first step on the QoS-telemetry roadmap item).
+            let (desired, ratio) = if self.cfg.cpu_autoscale {
+                let observed = self.cpu_cache.get(&service).copied().unwrap_or(0) as f64;
+                // Observed CPU grows with the replica count (each replica
+                // draws run_util × its reservation), so a proportional
+                // target `ceil(observed / per_replica)` has positive
+                // feedback. Step at most ±1 replica per decision: the
+                // controller stays bounded per poll even on a signal
+                // proportional to its own actuation.
+                (
+                    ((observed / self.cfg.cpu_per_replica_mc).ceil() as usize)
+                        .clamp(replicas.saturating_sub(1), replicas + 1)
+                        .clamp(1, self.cfg.max_replicas),
+                    observed / (replicas as f64 * self.cfg.cpu_per_replica_mc),
+                )
+            } else {
+                (
+                    ((load / self.cfg.load_per_replica).ceil() as usize)
+                        .clamp(1, self.cfg.max_replicas),
+                    load / (replicas as f64 * self.cfg.load_per_replica),
+                )
+            };
             let (scale, dir) = if ratio > self.cfg.load_hi && desired > replicas {
                 (true, "up")
             } else if ratio < self.cfg.load_lo && desired < replicas {
@@ -566,6 +669,7 @@ impl ChurnDriver {
         self.replica_cache
             .insert(service, running.values().copied().min().unwrap_or(0));
         self.running_cache.insert(service, running_insts);
+        self.cpu_cache.insert(service, s.observed_cpu_mc);
 
         // Scale convergence: every task at the target, all running.
         if let Some(&(target, t0)) = self.scale_watch.get(&service) {
@@ -856,6 +960,10 @@ impl OpStats {
 pub struct ChurnReport {
     pub seed: u64,
     pub scenario: String,
+    /// Topology shape the storm ran against (`CxW`), so trajectory points
+    /// from different shapes are never compared apples-to-oranges.
+    pub clusters: usize,
+    pub workers_per_cluster: usize,
     pub duration_s: f64,
     pub ops_issued: u64,
     pub unanswered_requests: usize,
@@ -888,6 +996,29 @@ pub struct ChurnReport {
     pub sched_runs: usize,
     pub sched_ms_mean: f64,
     pub sched_ms_p95: f64,
+    /// Root federation hot-path accounting: every `DelegateTask` sent,
+    /// how many were priority-list spill continuations (attempt > 0),
+    /// and how many top-K selections the root actually ran — under a
+    /// spill storm `rank_ops` must stay ≈ delegations (one rank per
+    /// instance, O(1) per spill step), NOT ≈ sends.
+    pub delegation_sends: u64,
+    pub spill_sends: u64,
+    /// O(1) spill continuations (popped the precomputed priority list —
+    /// no rank ran). The structural invariant `rank_ops ≤
+    /// delegation_sends + placement_failed` holds because every top-K
+    /// selection either produces a send or ends its delegation in
+    /// failure; spill steps produce sends without ranking.
+    pub spill_steps: u64,
+    pub rank_ops: u64,
+    pub placement_failed: u64,
+    /// spill_sends / delegation_sends.
+    pub spill_rate: f64,
+    /// p95 of DelegateTask sends per delegation (1.0 = no spill).
+    pub delegation_attempts_p95: f64,
+    /// Cluster→root aggregate delta-coalescing: reports pushed vs ticks
+    /// suppressed below the threshold.
+    pub aggregate_sent: u64,
+    pub aggregate_suppressed: u64,
     /// Host wall-clock seconds the whole run took (build + storm +
     /// drain) — the raw speed axis of the per-PR perf trajectory.
     /// Varies machine to machine; excluded from determinism checks.
@@ -1160,6 +1291,17 @@ pub fn run_churn(cfg: &ChurnConfig) -> ChurnReport {
         .into_iter()
         .map(|(k, v)| (k.trim_start_matches("root.op.").to_string(), v))
         .collect();
+    let delegation_sends = m.counter("root.op.delegate_send");
+    let spill_sends = m.counter("root.op.spill_send");
+    let spill_steps = m.counter("root.op.spill_step");
+    let rank_ops = m.counter("root.op.rank");
+    let placement_failed = m.counter("root.placement_failed");
+    let delegation_attempts_p95 = m
+        .histogram("root.delegation_attempts")
+        .map(|h| h.p95())
+        .unwrap_or(0.0);
+    let aggregate_sent = m.counter("cluster.report_sent");
+    let aggregate_suppressed = m.counter("cluster.report_suppressed");
 
     let d = tb
         .sim
@@ -1172,6 +1314,8 @@ pub fn run_churn(cfg: &ChurnConfig) -> ChurnReport {
     ChurnReport {
         seed: cfg.seed,
         scenario: format!("{:?}", cfg.scenario).to_ascii_lowercase(),
+        clusters: cfg.clusters,
+        workers_per_cluster: cfg.workers_per_cluster,
         duration_s: cfg.duration_s,
         ops_issued: d.client.issued(),
         unanswered_requests: d.client.outstanding().len(),
@@ -1201,6 +1345,15 @@ pub fn run_churn(cfg: &ChurnConfig) -> ChurnReport {
         sched_runs,
         sched_ms_mean,
         sched_ms_p95,
+        delegation_sends,
+        spill_sends,
+        spill_steps,
+        rank_ops,
+        placement_failed,
+        spill_rate: spill_sends as f64 / delegation_sends.max(1) as f64,
+        delegation_attempts_p95,
+        aggregate_sent,
+        aggregate_suppressed,
         wall_clock_s: wall_start.elapsed().as_secs_f64(),
         pending_events,
         pending_non_timer,
@@ -1251,6 +1404,8 @@ impl ChurnReport {
         };
         format!(
             "{{\n  \"bench\": \"churn\",\n  \"seed\": {},\n  \"scenario\": \"{}\",\n  \
+             \"topology\": {{\"clusters\": {}, \"workers_per_cluster\": {}, \
+             \"shape\": \"{}x{}\"}},\n  \
              \"duration_s\": {},\n  \"wall_clock_s\": {:.3},\n  \
              \"ops_issued\": {},\n  \"unanswered_requests\": {},\n  \
              \"counts\": {{\"submit\": {}, \"undeploy\": {}, \"scale_up\": {}, \
@@ -1263,6 +1418,11 @@ impl ChurnReport {
              \"root_cpu_ms\": {:.1}, \"root_cpu_ms_per_op\": {:.3}, \
              \"cluster_cpu_ms_mean\": {:.1}, \"sched_runs\": {}, \
              \"sched_ms_mean\": {:.3}, \"sched_ms_p95\": {:.3}}},\n  \
+             \"federation\": {{\"delegation_sends\": {}, \"spill_sends\": {}, \
+             \"spill_steps\": {}, \"spill_rate\": {:.4}, \"rank_ops\": {}, \
+             \"placement_failed\": {}, \
+             \"delegation_attempts_p95\": {:.3}, \"aggregate_sent\": {}, \
+             \"aggregate_suppressed\": {}}},\n  \
              \"root_ops\": {{{}}},\n  \
              \"quiescence\": {{\"pending_events\": {}, \"pending_non_timer\": {}}},\n  \
              \"api_errors\": {{{}}},\n  \
@@ -1272,6 +1432,10 @@ impl ChurnReport {
              \"op_log\": {},\n  \"census\": {}\n}}\n",
             self.seed,
             self.scenario,
+            self.clusters,
+            self.workers_per_cluster,
+            self.clusters,
+            self.workers_per_cluster,
             self.duration_s,
             self.wall_clock_s,
             self.ops_issued,
@@ -1296,6 +1460,15 @@ impl ChurnReport {
             self.sched_runs,
             self.sched_ms_mean,
             self.sched_ms_p95,
+            self.delegation_sends,
+            self.spill_sends,
+            self.spill_steps,
+            self.spill_rate,
+            self.rank_ops,
+            self.placement_failed,
+            self.delegation_attempts_p95,
+            self.aggregate_sent,
+            self.aggregate_suppressed,
             root_ops.join(", "),
             self.pending_events,
             self.pending_non_timer,
@@ -1360,6 +1533,26 @@ impl ChurnReport {
             fmt_stat(self.sched_runs, self.sched_ms_mean),
         ]);
         cost.row(vec![
+            "delegation_sends".into(),
+            self.delegation_sends.to_string(),
+        ]);
+        cost.row(vec![
+            "spill_rate".into(),
+            format!("{:.3}", self.spill_rate),
+        ]);
+        cost.row(vec!["rank_ops".into(), self.rank_ops.to_string()]);
+        cost.row(vec![
+            "delegation_attempts_p95".into(),
+            format!("{:.2}", self.delegation_attempts_p95),
+        ]);
+        cost.row(vec![
+            "aggregate_coalescing".into(),
+            format!(
+                "{} sent / {} suppressed",
+                self.aggregate_sent, self.aggregate_suppressed
+            ),
+        ]);
+        cost.row(vec![
             "wall_clock_s".into(),
             format!("{:.2}", self.wall_clock_s),
         ]);
@@ -1408,12 +1601,43 @@ mod tests {
     fn scenario_parsing_and_composition() {
         assert_eq!(ChurnScenario::parse("all"), Some(ChurnScenario::All));
         assert_eq!(ChurnScenario::parse("SCALE"), Some(ChurnScenario::Scale));
+        assert_eq!(ChurnScenario::parse("spill"), Some(ChurnScenario::Spill));
         assert_eq!(ChurnScenario::parse("bogus"), None);
         assert!(ChurnScenario::All.arrivals());
         assert!(ChurnScenario::All.autoscale());
         assert!(ChurnScenario::All.drills());
         assert!(!ChurnScenario::Submit.drills());
         assert!(!ChurnScenario::Failover.autoscale());
+        // Spill is arrival churn over the heavy catalog — no autoscaler
+        // or drills muddying the delegation signal.
+        assert!(ChurnScenario::Spill.arrivals());
+        assert!(!ChurnScenario::Spill.autoscale());
+        assert!(!ChurnScenario::Spill.drills());
+        assert!(ChurnScenario::Spill.heavy_catalog());
+        assert!(!ChurnScenario::All.heavy_catalog());
+    }
+
+    #[test]
+    fn shape_parses_and_rejects_junk() {
+        assert_eq!(parse_shape("16x6"), Some((16, 6)));
+        assert_eq!(parse_shape("4X50"), Some((4, 50)));
+        assert_eq!(parse_shape(" 2 x 3 "), Some((2, 3)));
+        assert_eq!(parse_shape("0x5"), None);
+        assert_eq!(parse_shape("5"), None);
+        assert_eq!(parse_shape("axb"), None);
+    }
+
+    #[test]
+    fn spill_catalog_is_heavy_but_hostable() {
+        for i in 0..12 {
+            let sla = spill_catalog_sla(i);
+            sla.validate().unwrap();
+            let cpu = sla.constraints[0].vcpus_millicores;
+            // Heavy enough that an S worker (1000 mc) hosts at most two,
+            // small enough that every shape always fits somewhere.
+            assert!((400..=850).contains(&cpu), "cpu={cpu}");
+            assert_eq!(sla.constraints.len(), 1);
+        }
     }
 
     #[test]
@@ -1445,6 +1669,21 @@ mod tests {
         // post-drain quiescence audit.
         assert!(v.get("wall_clock_s").as_f64().unwrap_or(-1.0) >= 0.0);
         assert!(v.get("root_ops").get("submit").as_u64().unwrap_or(0) > 0);
+        // Federation hot-path fields: topology shape, delegation/spill
+        // accounting and the aggregate delta-coalescing counters.
+        assert_eq!(v.get("topology").get("clusters").as_u64(), Some(1));
+        assert_eq!(
+            v.get("topology").get("shape").as_str(),
+            Some("1x4"),
+            "shape must mirror the storm topology"
+        );
+        assert!(
+            v.get("federation").get("delegation_sends").as_u64().unwrap_or(0) > 0,
+            "submit churn must delegate"
+        );
+        assert!(v.get("federation").get("rank_ops").as_u64().unwrap_or(0) > 0);
+        assert!(v.get("federation").get("spill_rate").as_f64().is_some());
+        assert!(v.get("federation").get("aggregate_sent").as_u64().unwrap_or(0) > 0);
         assert_eq!(
             v.get("quiescence").get("pending_non_timer").as_u64(),
             Some(0),

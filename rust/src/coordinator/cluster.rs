@@ -38,6 +38,17 @@ pub struct ClusterConfig {
     pub id: ClusterId,
     pub scheduler: SchedulerKind,
     pub aggregate_interval: SimTime,
+    /// Delta-coalescing threshold for cluster→root aggregate reports: an
+    /// aggregate tick only sends when a mean/total moved by more than
+    /// this fraction since the last report (feasibility-relevant fields —
+    /// worker count, best single worker, virtualization, area — always
+    /// force a send). The worker-tier telemetry governor (§4.1) applied
+    /// one tier up.
+    pub aggregate_delta: f64,
+    /// Staleness bound on the coalescing: resend unconditionally once the
+    /// last report is this old, so the root's view is never more stale
+    /// than this even under a perfectly steady fleet.
+    pub aggregate_max_age: SimTime,
     pub health_interval: SimTime,
     pub worker_dead_after: SimTime,
     /// Advertised operation zone.
@@ -52,6 +63,8 @@ impl ClusterConfig {
             id,
             scheduler,
             aggregate_interval: intervals::cluster_aggregate(),
+            aggregate_delta: 0.05,
+            aggregate_max_age: intervals::aggregate_max_age(),
             health_interval: intervals::health_sweep(),
             worker_dead_after: intervals::worker_dead_after(),
             area: None,
@@ -117,6 +130,17 @@ pub struct ClusterOrchestrator {
     pub last_calc: SimTime,
     pub sched_ops: u64,
     aggregate_ticks: u64,
+    /// Delta-coalescing state: when the last `ClusterReport` went out and
+    /// what it carried. Ticks whose aggregate moved less than
+    /// `cfg.aggregate_delta` since then are suppressed (until
+    /// `cfg.aggregate_max_age` forces a resend).
+    last_aggregate: Option<(SimTime, AggregateStats)>,
+    /// The `service_cpu` rows the last sent report carried: a changed
+    /// row forces a send even when the capacity aggregate stayed inside
+    /// the threshold, so the root's QoS-telemetry view (and a CPU-keyed
+    /// autoscaler) is never staler than one aggregate tick after a
+    /// change.
+    last_service_cpu: Vec<(ServiceId, u64)>,
     registered: bool,
     started: bool,
 }
@@ -153,6 +177,8 @@ impl ClusterOrchestrator {
             last_calc: SimTime::ZERO,
             sched_ops: 0,
             aggregate_ticks: 0,
+            last_aggregate: None,
+            last_service_cpu: Vec::new(),
             registered: false,
             started: false,
         }
@@ -211,6 +237,19 @@ impl ClusterOrchestrator {
         self.workers
             .iter()
             .fold(Capacity::ZERO, |acc, w| acc + w.used)
+    }
+
+    /// Per-service observed CPU (mc) across this cluster's Running
+    /// instances, from the latest worker telemetry — the rows shipped to
+    /// the root on each (coalesced) aggregate report.
+    fn service_cpu(&self) -> Vec<(ServiceId, u64)> {
+        let mut per: BTreeMap<ServiceId, u64> = BTreeMap::new();
+        for (_, li) in self.instances.iter() {
+            if li.state == ServiceState::Running && li.observed_cpu_mc > 0 {
+                *per.entry(li.task.service).or_insert(0) += li.observed_cpu_mc as u64;
+            }
+        }
+        per.into_iter().collect()
     }
 
     /// Mint a fresh locally-unique instance id (see the tag constants).
@@ -641,6 +680,7 @@ impl ClusterOrchestrator {
                 node: worker,
                 state: ServiceState::Scheduled,
                 request,
+                observed_cpu_mc: 0,
                 sla,
             },
         );
@@ -728,9 +768,10 @@ impl Actor for ClusterOrchestrator {
                 // Reconcile instance states reported by the NodeEngine.
                 let mut changed_tasks: BTreeSet<TaskId> = BTreeSet::new();
                 let mut violations: Vec<InstanceId> = Vec::new();
-                for (iid, state, qos_ms) in instances {
+                for (iid, state, qos_ms, cpu_mc) in instances {
                     let mut forward = None;
                     if let Some(li) = self.instances.get_mut(iid) {
+                        li.observed_cpu_mc = cpu_mc;
                         if li.state != state {
                             li.state = state;
                             forward = Some((li.task, li.node));
@@ -1169,7 +1210,9 @@ impl Actor for ClusterOrchestrator {
 
             SimMsg::Oak(OakMsg::Ping) => {
                 ctx.charge_cpu(costs::PING_MS);
-                let msg = SimMsg::Oak(OakMsg::Pong);
+                let msg = SimMsg::Oak(OakMsg::Pong {
+                    cluster: self.cfg.id,
+                });
                 let bytes = msg.default_wire_bytes() + WS_FRAME_OVERHEAD;
                 ctx.send(self.root, msg, bytes, labels::CLUSTER_TO_ROOT);
             }
@@ -1186,18 +1229,42 @@ impl Actor for ClusterOrchestrator {
                     avail.iter().map(|(c, v)| (c, *v)),
                     self.cfg.area,
                 );
-                let running = self
-                    .instances
-                    .iter()
-                    .filter(|(_, li)| li.state == ServiceState::Running)
-                    .count();
-                let msg = SimMsg::Oak(OakMsg::ClusterReport {
-                    cluster: self.cfg.id,
-                    stats,
-                    running_instances: running,
-                });
-                let bytes = msg.default_wire_bytes() + WS_FRAME_OVERHEAD;
-                ctx.send(self.root, msg, bytes, labels::CLUSTER_TO_ROOT);
+                // Delta-coalescing (the §4.1 worker governor one tier
+                // up): only push upward when the aggregate moved past the
+                // threshold, the piggybacked per-service CPU rows changed
+                // (the root's QoS-telemetry view must not silently stale
+                // behind an under-threshold capacity move), or the last
+                // report aged out — so the root's view has bounded
+                // staleness even for a steady cluster.
+                let service_cpu = self.service_cpu();
+                let due = match &self.last_aggregate {
+                    None => true,
+                    Some((at, last)) => {
+                        ctx.now.saturating_sub(*at) >= self.cfg.aggregate_max_age
+                            || stats.delta_exceeds(last, self.cfg.aggregate_delta)
+                            || service_cpu != self.last_service_cpu
+                    }
+                };
+                if due {
+                    let running = self
+                        .instances
+                        .iter()
+                        .filter(|(_, li)| li.state == ServiceState::Running)
+                        .count();
+                    self.last_aggregate = Some((ctx.now, stats.clone()));
+                    self.last_service_cpu = service_cpu.clone();
+                    ctx.metrics().inc("cluster.report_sent");
+                    let msg = SimMsg::Oak(OakMsg::ClusterReport {
+                        cluster: self.cfg.id,
+                        stats,
+                        running_instances: running,
+                        service_cpu,
+                    });
+                    let bytes = msg.default_wire_bytes() + WS_FRAME_OVERHEAD;
+                    ctx.send(self.root, msg, bytes, labels::CLUSTER_TO_ROOT);
+                } else {
+                    ctx.metrics().inc("cluster.report_suppressed");
+                }
 
                 // Vivaldi gossip: send each worker a small peer sample
                 // (every 4th tick — membership changes slowly).

@@ -6,7 +6,7 @@
 //! `HashMap` iteration order would leak the per-process hasher seed into
 //! event ordering, breaking seed-determinism of the whole simulation.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 
 use crate::model::{InstanceRecord, ServiceSpec, ServiceState, TaskSpec};
 use crate::sla::ServiceSla;
@@ -50,6 +50,10 @@ pub struct ServiceRecord {
     slot: BTreeMap<InstanceId, usize>,
     /// Which cluster each live instance was delegated to.
     pub placement: BTreeMap<InstanceId, ClusterId>,
+    /// Latest observed CPU draw per cluster (mc, Running instances only),
+    /// refreshed from the `service_cpu` rows piggybacked on (coalesced)
+    /// `ClusterReport`s — the root's QoS-telemetry view of the service.
+    pub observed_cpu: BTreeMap<ClusterId, u64>,
     /// Set once `UndeployService` is accepted: the service may never grow
     /// again (no scale-up, no migration replacements, no reschedules) —
     /// otherwise a teardown racing an in-flight recovery resurrects
@@ -82,6 +86,12 @@ impl ServiceRecord {
     pub fn instance(&self, id: InstanceId) -> Option<&InstanceRecord> {
         self.slot.get(&id).and_then(|&i| self.instances.get(i))
     }
+
+    /// Total observed CPU draw across clusters (mc) — the aggregated
+    /// telemetry `ServiceStatus` exposes.
+    pub fn observed_cpu_mc(&self) -> u64 {
+        self.observed_cpu.values().sum()
+    }
 }
 
 /// In-memory service database with id minting.
@@ -95,6 +105,11 @@ pub struct ServiceDb {
     /// adopt); entries live as long as their records (which are kept for
     /// lineage and post-mortem status).
     index: BTreeMap<InstanceId, ServiceId>,
+    /// Which services each cluster named in its last `service_cpu` rows —
+    /// the reverse index that keeps [`ServiceDb::apply_cluster_cpu`]
+    /// proportional to the reporting cluster's own rows instead of a
+    /// full-database sweep per report.
+    cpu_reported: BTreeMap<ClusterId, BTreeSet<ServiceId>>,
     next_service: u32,
     next_instance: u64,
 }
@@ -136,6 +151,7 @@ impl ServiceDb {
             instances: Vec::new(),
             slot: BTreeMap::new(),
             placement: BTreeMap::new(),
+            observed_cpu: BTreeMap::new(),
             retired: false,
         };
         let mut ids = Vec::new();
@@ -228,6 +244,33 @@ impl ServiceDb {
         rec.push_instance(inst);
         self.index.insert(replacement, service);
         Ok(true)
+    }
+
+    /// Ingest one cluster's per-service observed-CPU rows (piggybacked on
+    /// its aggregate report): refresh the cluster's column on every named
+    /// service and clear it on services the cluster named last time but
+    /// no longer reports (all their instances there stopped Running or
+    /// left). The `cpu_reported` reverse index keeps this O(rows) — not a
+    /// scan over every service in the database per report.
+    pub fn apply_cluster_cpu(&mut self, cluster: ClusterId, rows: &[(ServiceId, u64)]) {
+        let named: BTreeSet<ServiceId> = rows.iter().map(|(s, _)| *s).collect();
+        if let Some(prev) = self.cpu_reported.get(&cluster) {
+            for sid in prev.difference(&named) {
+                if let Some(rec) = self.services.get_mut(sid) {
+                    rec.observed_cpu.remove(&cluster);
+                }
+            }
+        }
+        for (sid, cpu) in rows {
+            if let Some(rec) = self.services.get_mut(sid) {
+                rec.observed_cpu.insert(cluster, *cpu);
+            }
+        }
+        if named.is_empty() {
+            self.cpu_reported.remove(&cluster);
+        } else {
+            self.cpu_reported.insert(cluster, named);
+        }
     }
 
     /// Resolve the owning service of any instance the root has ever
@@ -397,6 +440,25 @@ mod tests {
             Err(AdoptError::Retired)
         );
         assert!(db.service(id).unwrap().instance(repl).is_none());
+    }
+
+    #[test]
+    fn cluster_cpu_rows_refresh_and_clear() {
+        let mut db = ServiceDb::default();
+        let (a, _) = db.register(simple_sla("a", 100, 32), SimTime::ZERO);
+        let (b, _) = db.register(simple_sla("b", 100, 32), SimTime::ZERO);
+        db.apply_cluster_cpu(ClusterId(1), &[(a, 70), (b, 140)]);
+        db.apply_cluster_cpu(ClusterId(2), &[(a, 35)]);
+        assert_eq!(db.service(a).unwrap().observed_cpu_mc(), 105);
+        assert_eq!(db.service(b).unwrap().observed_cpu_mc(), 140);
+        // Cluster 1 stops reporting b (drained there): its column clears,
+        // other clusters' columns survive.
+        db.apply_cluster_cpu(ClusterId(1), &[(a, 80)]);
+        assert_eq!(db.service(a).unwrap().observed_cpu_mc(), 115);
+        assert_eq!(db.service(b).unwrap().observed_cpu_mc(), 0);
+        // Rows for unknown services are ignored.
+        db.apply_cluster_cpu(ClusterId(1), &[(ServiceId(99), 10)]);
+        assert_eq!(db.service(a).unwrap().observed_cpu_mc(), 35);
     }
 
     #[test]

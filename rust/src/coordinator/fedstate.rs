@@ -1,0 +1,509 @@
+//! Indexed federation state — the data structures behind the *root*
+//! tier's scheduling hot paths (the design of
+//! [`crate::coordinator::state`] applied one tier up).
+//!
+//! The root used to rebuild a `Vec<(ClusterId, &AggregateStats)>` from
+//! the cluster tree and fully sort it (`rank_clusters`) for **every**
+//! delegation attempt — O(clusters · log clusters) per task even when the
+//! priority-list spill (`DelegationResult{None}` → next cluster) only
+//! needed the *next* candidate. [`ClusterTable`] replaces that with:
+//!
+//! * dense, registration-ordered [`ClusterEntry`] storage plus a
+//!   `ClusterId → slot` map (ordered compaction on deregister, mirroring
+//!   [`crate::coordinator::WorkerTable`]);
+//! * feasibility **pre-filter bitsets maintained on report ingest**, not
+//!   at query time: non-empty clusters, one set per virtualization bit,
+//!   and power-of-two buckets over the best single worker's cpu — a
+//!   request can only fit clusters whose max-worker bucket is ≥ its own,
+//!   so saturated clusters drop out of the scan before being scored;
+//! * [`ClusterTable::top_k`] — K-bounded partial selection over the
+//!   pre-filtered slots (no full sort; K = the delegation attempt budget)
+//!   with an exclusion list so a spill refill never re-offers a cluster
+//!   that just said no.
+//!
+//! Filter and score semantics are *shared* with the brute-force
+//! [`crate::scheduler::rank_clusters`] (same [`cluster_feasible`] /
+//! [`cluster_score`] functions), so `top_k(sla, k, &[])` is bit-identical
+//! to `rank_clusters(..)` truncated to `k` — the `fedstate` property
+//! suite asserts exactly that under random report/register/deregister/
+//! query sequences, and [`ClusterTable::check_consistent`] validates the
+//! bitsets against a brute-force recompute after every mutation.
+
+use std::collections::BTreeMap;
+
+use crate::hierarchy::AggregateStats;
+use crate::model::Virtualization;
+use crate::scheduler::{cluster_feasible, cluster_score, ClusterCandidate};
+use crate::sla::TaskSla;
+use crate::util::ClusterId;
+
+/// Number of virtualization bits indexed (see [`Virtualization`]).
+const VIRT_BITS: usize = 4;
+
+/// Power-of-two cpu buckets for the max-worker pre-filter. Bucket 0 holds
+/// zero-capacity entries; bucket `b ≥ 1` holds `floor(log2(cpu)) + 1`,
+/// saturated at the top so huge values stay conservative.
+const CAP_BUCKETS: usize = 32;
+
+fn cap_bucket(cpu_millicores: u32) -> usize {
+    if cpu_millicores == 0 {
+        0
+    } else {
+        ((32 - cpu_millicores.leading_zeros()) as usize).min(CAP_BUCKETS - 1)
+    }
+}
+
+/// A growable bitset over dense slot indices.
+#[derive(Clone, Debug, Default)]
+struct SlotSet {
+    words: Vec<u64>,
+}
+
+impl SlotSet {
+    fn grow(&mut self, slots: usize) {
+        let need = slots.div_ceil(64);
+        if self.words.len() < need {
+            self.words.resize(need, 0);
+        }
+    }
+    fn set(&mut self, i: usize) {
+        self.grow(i + 1);
+        self.words[i / 64] |= 1u64 << (i % 64);
+    }
+    fn clear(&mut self, i: usize) {
+        if let Some(w) = self.words.get_mut(i / 64) {
+            *w &= !(1u64 << (i % 64));
+        }
+    }
+    fn contains(&self, i: usize) -> bool {
+        self.words
+            .get(i / 64)
+            .map(|w| (w >> (i % 64)) & 1 == 1)
+            .unwrap_or(false)
+    }
+    fn clear_all(&mut self) {
+        for w in &mut self.words {
+            *w = 0;
+        }
+    }
+    fn word(&self, wi: usize) -> u64 {
+        self.words.get(wi).copied().unwrap_or(0)
+    }
+}
+
+/// One attached cluster's root-side scheduling view.
+#[derive(Clone, Debug)]
+pub struct ClusterEntry {
+    pub cluster: ClusterId,
+    /// Latest aggregate ⟨Σ,μ,σ⟩ the cluster pushed (delta-coalesced:
+    /// clusters suppress reports that moved less than the configured
+    /// threshold, so this is fresh-within-threshold, not per-tick).
+    pub stats: AggregateStats,
+    /// Aggregate reports applied to this entry (coalescing visibility).
+    pub reports: u64,
+}
+
+/// The pre-filter key of one entry: (non-empty, virtualization bits,
+/// max-worker cpu bucket). Bitset membership is exactly a function of
+/// this key, so a report only touches the bitsets when the key moves.
+type FilterKey = (bool, u32, usize);
+
+/// Indexed cluster aggregates: dense registration-ordered storage, a
+/// `ClusterId → slot` map and feasibility pre-filter bitsets maintained
+/// incrementally on report ingest (see the module docs).
+#[derive(Clone, Debug, Default)]
+pub struct ClusterTable {
+    entries: Vec<ClusterEntry>,
+    slot: BTreeMap<ClusterId, usize>,
+    /// Slots with `worker_count > 0`. Every other bitset is a subset.
+    nonempty: SlotSet,
+    /// Per virtualization bit: non-empty slots advertising that bit.
+    virt: [SlotSet; VIRT_BITS],
+    /// Per cpu bucket: non-empty slots whose max worker lands there.
+    cap_cpu: [SlotSet; CAP_BUCKETS],
+}
+
+impl ClusterTable {
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+    pub fn contains(&self, cluster: ClusterId) -> bool {
+        self.slot.contains_key(&cluster)
+    }
+
+    /// Register a cluster (empty aggregate until its first report).
+    /// Returns false (and keeps the existing entry) on a duplicate.
+    pub fn register(&mut self, cluster: ClusterId) -> bool {
+        if self.slot.contains_key(&cluster) {
+            return false;
+        }
+        let i = self.entries.len();
+        self.slot.insert(cluster, i);
+        self.entries.push(ClusterEntry {
+            cluster,
+            stats: AggregateStats::default(),
+            reports: 0,
+        });
+        self.grow_filters(i + 1);
+        true
+    }
+
+    /// Deregister a cluster, compacting the dense storage in order (an
+    /// O(n) shift + full bitset rebuild — departures are rare; ranking
+    /// queries are not).
+    pub fn deregister(&mut self, cluster: ClusterId) -> Option<AggregateStats> {
+        let i = self.slot.remove(&cluster)?;
+        let e = self.entries.remove(i);
+        for s in self.slot.values_mut() {
+            if *s > i {
+                *s -= 1;
+            }
+        }
+        self.rebuild_filters();
+        Some(e.stats)
+    }
+
+    /// Ingest one aggregate report: replace the entry's stats and update
+    /// the pre-filter bitsets **only when the filter key moved** — a
+    /// mean/σ drift re-scores the cluster but touches no index. Returns
+    /// false for unregistered clusters.
+    pub fn apply_report(&mut self, cluster: ClusterId, stats: AggregateStats) -> bool {
+        let Some(&i) = self.slot.get(&cluster) else {
+            return false;
+        };
+        let old_key = Self::filter_key(&self.entries[i].stats);
+        let new_key = Self::filter_key(&stats);
+        self.entries[i].stats = stats;
+        self.entries[i].reports += 1;
+        if old_key != new_key {
+            self.clear_filters(i);
+            self.set_filters(i, new_key);
+        }
+        true
+    }
+
+    pub fn stats(&self, cluster: ClusterId) -> Option<&AggregateStats> {
+        self.slot.get(&cluster).map(|&i| &self.entries[i].stats)
+    }
+
+    /// Cluster ids in registration order.
+    pub fn clusters(&self) -> impl Iterator<Item = ClusterId> + '_ {
+        self.entries.iter().map(|e| e.cluster)
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &ClusterEntry> {
+        self.entries.iter()
+    }
+
+    fn filter_key(stats: &AggregateStats) -> FilterKey {
+        (
+            stats.worker_count > 0,
+            stats.virtualization.0,
+            cap_bucket(stats.max_worker.cpu_millicores),
+        )
+    }
+
+    fn grow_filters(&mut self, slots: usize) {
+        self.nonempty.grow(slots);
+        for v in &mut self.virt {
+            v.grow(slots);
+        }
+        for b in &mut self.cap_cpu {
+            b.grow(slots);
+        }
+    }
+
+    fn set_filters(&mut self, i: usize, key: FilterKey) {
+        let (nonempty, virt, bucket) = key;
+        if !nonempty {
+            // Empty clusters are never feasible: keep them out of every
+            // set so the query-time intersection skips them for free.
+            return;
+        }
+        self.nonempty.set(i);
+        self.cap_cpu[bucket].set(i);
+        for b in 0..VIRT_BITS {
+            if (virt >> b) & 1 == 1 {
+                self.virt[b].set(i);
+            }
+        }
+    }
+
+    fn clear_filters(&mut self, i: usize) {
+        self.nonempty.clear(i);
+        for v in &mut self.virt {
+            v.clear(i);
+        }
+        for b in &mut self.cap_cpu {
+            b.clear(i);
+        }
+    }
+
+    fn rebuild_filters(&mut self) {
+        self.nonempty.clear_all();
+        for v in &mut self.virt {
+            v.clear_all();
+        }
+        for b in &mut self.cap_cpu {
+            b.clear_all();
+        }
+        self.grow_filters(self.entries.len());
+        for i in 0..self.entries.len() {
+            let key = Self::filter_key(&self.entries[i].stats);
+            self.set_filters(i, key);
+        }
+    }
+
+    /// Top-K priority-list selection for one task: intersect the
+    /// pre-filter bitsets word-wise, run the exact
+    /// [`cluster_feasible`]/[`cluster_score`] checks only on surviving
+    /// slots, and keep the best K via bounded insertion — no full sort.
+    /// `exclude` lists clusters that already refused this instance (the
+    /// in-flight delegation's spill bookkeeping); they are skipped before
+    /// scoring. Returns the candidates (best first, identical order to
+    /// [`crate::scheduler::rank_clusters`] truncated to K) and the number
+    /// of slots that survived the bitset pre-filter (the work actually
+    /// done, which the root charges as scheduling cost).
+    pub fn top_k(
+        &self,
+        sla: &TaskSla,
+        k: usize,
+        exclude: &[ClusterId],
+    ) -> (Vec<ClusterCandidate>, usize) {
+        if k == 0 || self.entries.is_empty() {
+            return (Vec::new(), 0);
+        }
+        let req = sla.request();
+        let req_virt = sla
+            .virtualization_mask()
+            .unwrap_or(Virtualization::CONTAINER);
+        let req_bucket = cap_bucket(req.cpu_millicores);
+        let words = self.entries.len().div_ceil(64);
+        let mut out: Vec<ClusterCandidate> = Vec::with_capacity(k + 1);
+        let mut scanned = 0usize;
+        for wi in 0..words {
+            let mut w = self.nonempty.word(wi);
+            for b in 0..VIRT_BITS {
+                if (req_virt.0 >> b) & 1 == 1 {
+                    w &= self.virt[b].word(wi);
+                }
+            }
+            let mut cap_union = 0u64;
+            for bucket in req_bucket..CAP_BUCKETS {
+                cap_union |= self.cap_cpu[bucket].word(wi);
+            }
+            w &= cap_union;
+            while w != 0 {
+                let i = wi * 64 + w.trailing_zeros() as usize;
+                w &= w - 1;
+                let e = &self.entries[i];
+                if exclude.contains(&e.cluster) {
+                    continue;
+                }
+                scanned += 1;
+                if !cluster_feasible(&e.stats, &req, req_virt, sla.location.as_ref()) {
+                    continue;
+                }
+                let cand = ClusterCandidate {
+                    cluster: e.cluster,
+                    score: cluster_score(&e.stats, &req),
+                };
+                // Bounded insertion under rank_clusters' exact comparator
+                // (score desc, cluster asc — a strict total order, so the
+                // top-K set and its order are unique).
+                let pos = out
+                    .iter()
+                    .position(|c| {
+                        cand.score
+                            .total_cmp(&c.score)
+                            .then(c.cluster.cmp(&cand.cluster))
+                            == std::cmp::Ordering::Greater
+                    })
+                    .unwrap_or(out.len());
+                if pos < k {
+                    out.insert(pos, cand);
+                    if out.len() > k {
+                        out.pop();
+                    }
+                }
+            }
+        }
+        (out, scanned)
+    }
+
+    /// Validate the slot map and every pre-filter bitset against a
+    /// brute-force recompute from the dense entries.
+    pub fn check_consistent(&self) -> Result<(), String> {
+        if self.slot.len() != self.entries.len() {
+            return Err(format!(
+                "slot count {} != entry count {}",
+                self.slot.len(),
+                self.entries.len()
+            ));
+        }
+        for (c, &i) in &self.slot {
+            match self.entries.get(i) {
+                Some(e) if e.cluster == *c => {}
+                Some(e) => {
+                    return Err(format!("{c} slot {i} holds {}", e.cluster))
+                }
+                None => return Err(format!("{c} slot {i} out of bounds")),
+            }
+        }
+        for (i, e) in self.entries.iter().enumerate() {
+            let (nonempty, virt, bucket) = Self::filter_key(&e.stats);
+            if self.nonempty.contains(i) != nonempty {
+                return Err(format!("{} nonempty bit wrong", e.cluster));
+            }
+            for b in 0..VIRT_BITS {
+                let want = nonempty && (virt >> b) & 1 == 1;
+                if self.virt[b].contains(i) != want {
+                    return Err(format!("{} virt bit {b} wrong", e.cluster));
+                }
+            }
+            for bk in 0..CAP_BUCKETS {
+                let want = nonempty && bk == bucket;
+                if self.cap_cpu[bk].contains(i) != want {
+                    return Err(format!("{} cap bucket {bk} wrong", e.cluster));
+                }
+            }
+        }
+        // No stray bits beyond the live slots (a compaction bug would
+        // leave ghosts that the word-wise scan then dereferences).
+        let limit = self.nonempty.words.len() * 64;
+        for i in self.entries.len()..limit {
+            if self.nonempty.contains(i)
+                || self.virt.iter().any(|v| v.contains(i))
+                || self.cap_cpu.iter().any(|b| b.contains(i))
+            {
+                return Err(format!("stray filter bit at dead slot {i}"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Capacity;
+    use crate::scheduler::rank_clusters;
+    use crate::sla::simple_sla;
+
+    fn stats_of(workers: &[(u32, u32)]) -> AggregateStats {
+        let caps: Vec<Capacity> = workers
+            .iter()
+            .map(|(c, m)| Capacity::new(*c, *m, 0))
+            .collect();
+        AggregateStats::from_workers(
+            caps.iter().map(|c| (c, Virtualization::all())),
+            None,
+        )
+    }
+
+    fn brute(
+        table: &ClusterTable,
+        sla: &TaskSla,
+        k: usize,
+        exclude: &[ClusterId],
+    ) -> Vec<ClusterCandidate> {
+        let pairs: Vec<(ClusterId, &AggregateStats)> = table
+            .iter()
+            .filter(|e| !exclude.contains(&e.cluster))
+            .map(|e| (e.cluster, &e.stats))
+            .collect();
+        let mut want = rank_clusters(sla, &pairs);
+        want.truncate(k);
+        want
+    }
+
+    #[test]
+    fn cap_buckets_are_conservative() {
+        assert_eq!(cap_bucket(0), 0);
+        assert_eq!(cap_bucket(1), 1);
+        assert_eq!(cap_bucket(1000), 10);
+        assert_eq!(cap_bucket(1024), 11);
+        // A request can only fit clusters in its bucket or above.
+        assert!(cap_bucket(999) <= cap_bucket(1000));
+        assert!(cap_bucket(u32::MAX) <= CAP_BUCKETS - 1);
+    }
+
+    #[test]
+    fn top_k_matches_brute_force_rank() {
+        let mut t = ClusterTable::default();
+        for c in 1..=5u32 {
+            assert!(t.register(ClusterId(c)));
+        }
+        assert!(!t.register(ClusterId(3)), "duplicate refused");
+        t.apply_report(ClusterId(1), stats_of(&[(1500, 1024), (1500, 1024)]));
+        t.apply_report(ClusterId(2), stats_of(&[(6000, 6000)]));
+        t.apply_report(ClusterId(3), stats_of(&[(800, 512), (7000, 8000)]));
+        t.apply_report(ClusterId(4), stats_of(&[(2000, 2048)]));
+        // Cluster 5 never reports: empty, never a candidate.
+        t.check_consistent().unwrap();
+
+        let sla = simple_sla("t", 1000, 512);
+        for k in 1..=5 {
+            let (got, scanned) = t.top_k(&sla.constraints[0], k, &[]);
+            assert_eq!(got, brute(&t, &sla.constraints[0], k, &[]), "k={k}");
+            assert!(scanned <= 4, "empty cluster must not be scanned");
+        }
+        // Exclusion (spill bookkeeping) drops the refusing cluster.
+        let excl = [ClusterId(2)];
+        let (got, _) = t.top_k(&sla.constraints[0], 2, &excl);
+        assert_eq!(got, brute(&t, &sla.constraints[0], 2, &excl));
+        assert!(got.iter().all(|c| c.cluster != ClusterId(2)));
+    }
+
+    #[test]
+    fn capacity_bucket_prefilter_skips_saturated_clusters() {
+        let mut t = ClusterTable::default();
+        t.register(ClusterId(1));
+        t.register(ClusterId(2));
+        t.apply_report(ClusterId(1), stats_of(&[(300, 1024)]));
+        t.apply_report(ClusterId(2), stats_of(&[(4000, 4096)]));
+        let sla = simple_sla("t", 1000, 256);
+        let (got, scanned) = t.top_k(&sla.constraints[0], 4, &[]);
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].cluster, ClusterId(2));
+        // Cluster 1's max-worker bucket (300 → 9) is below the request
+        // bucket (1000 → 10): the bitset intersection drops it unscanned.
+        assert_eq!(scanned, 1);
+    }
+
+    #[test]
+    fn report_ingest_moves_filter_membership() {
+        let mut t = ClusterTable::default();
+        t.register(ClusterId(7));
+        let sla = simple_sla("t", 500, 128);
+        assert!(t.top_k(&sla.constraints[0], 1, &[]).0.is_empty());
+        t.apply_report(ClusterId(7), stats_of(&[(2000, 2048)]));
+        t.check_consistent().unwrap();
+        assert_eq!(t.top_k(&sla.constraints[0], 1, &[]).0.len(), 1);
+        // The cluster saturates: its next report empties it again.
+        t.apply_report(ClusterId(7), AggregateStats::default());
+        t.check_consistent().unwrap();
+        assert!(t.top_k(&sla.constraints[0], 1, &[]).0.is_empty());
+        assert_eq!(t.stats(ClusterId(7)).unwrap().worker_count, 0);
+        assert!(!t.apply_report(ClusterId(9), AggregateStats::default()));
+    }
+
+    #[test]
+    fn deregister_compacts_in_order() {
+        let mut t = ClusterTable::default();
+        for c in [5u32, 2, 9, 7] {
+            t.register(ClusterId(c));
+            t.apply_report(ClusterId(c), stats_of(&[(c * 100, 512)]));
+        }
+        t.deregister(ClusterId(2)).unwrap();
+        assert!(t.deregister(ClusterId(2)).is_none());
+        let order: Vec<u32> = t.clusters().map(|c| c.0).collect();
+        assert_eq!(order, vec![5, 9, 7], "registration order survives");
+        t.check_consistent().unwrap();
+        assert!(t.stats(ClusterId(9)).is_some());
+        assert_eq!(t.len(), 3);
+    }
+}

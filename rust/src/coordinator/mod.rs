@@ -22,12 +22,14 @@
 
 mod cluster;
 mod db;
+mod fedstate;
 mod root;
 mod state;
 mod worker;
 
 pub use cluster::{ClusterConfig, ClusterOrchestrator, SchedulerKind};
 pub use db::{AdoptError, ServiceDb, ServiceRecord};
+pub use fedstate::{ClusterEntry, ClusterTable};
 pub use root::{RootConfig, RootOrchestrator};
 pub use state::{InstanceTable, LocalInstance, WorkerTable};
 pub use worker::{WorkerConfig, WorkerEngine};
@@ -67,8 +69,13 @@ pub mod costs {
     /// Root-side successor adoption (lineage validation + record mint +
     /// ack) for one cluster-announced replacement.
     pub const ADOPT_MS: f64 = 0.15;
-    /// Root scheduling: per candidate cluster scored.
+    /// Root scheduling: per candidate cluster actually scanned (after the
+    /// `ClusterTable` feasibility pre-filters — saturated or mismatched
+    /// clusters drop out of the scan and are never charged).
     pub const ROOT_SCHED_PER_CLUSTER_MS: f64 = 0.02;
+    /// One priority-list spill continuation (`DelegationResult{None}` →
+    /// next precomputed candidate): O(1) bookkeeping, no re-rank.
+    pub const ROOT_SPILL_STEP_MS: f64 = 0.004;
     /// Cluster scheduling: per worker scored (ROM).
     pub const ROM_PER_WORKER_MS: f64 = 0.012;
     /// Cluster scheduling: per worker feasibility + constraint math
@@ -133,6 +140,12 @@ pub mod intervals {
     /// timer is armed lazily — an idle cluster schedules nothing.
     pub fn table_dissemination() -> SimTime {
         SimTime::from_millis(250.0)
+    }
+    /// Staleness bound on delta-coalesced cluster→root aggregate reports
+    /// (three aggregate ticks): a steady cluster resends at least this
+    /// often even when nothing moved past the threshold.
+    pub fn aggregate_max_age() -> SimTime {
+        SimTime::from_secs(15.0)
     }
     /// Worker considered dead after this much report silence.
     pub fn worker_dead_after() -> SimTime {

@@ -8,15 +8,15 @@ use std::any::Any;
 use std::collections::BTreeMap;
 
 use crate::api::{self, ApiEnvelope, ApiError, ApiRequest, ApiResponse, API_VERSION, MAX_REPLICAS};
-use crate::hierarchy::{ClusterTree, ROOT};
+use crate::hierarchy::ClusterTree;
 use crate::messaging::{labels, WsLink, WS_FRAME_OVERHEAD};
 use crate::model::ServiceState;
-use crate::scheduler::rank_clusters;
 use crate::sim::{Actor, ActorId, Ctx, OakMsg, ReplacementReason, SimMsg, TimerKind};
 use crate::sla::TaskSla;
 use crate::util::{ClusterId, InstanceId, ServiceId, SimTime, TaskId};
 
 use super::db::ServiceDb;
+use super::fedstate::ClusterTable;
 use super::{costs, intervals, mem};
 
 /// Root tunables.
@@ -37,13 +37,23 @@ impl Default for RootConfig {
     }
 }
 
-/// In-flight delegation bookkeeping for one task instance.
+/// In-flight delegation bookkeeping for one task instance. The candidate
+/// list is the top-K partial selection computed **once** when the
+/// delegation starts; a spill (`DelegationResult{None}`) pops the next
+/// entry in O(1) instead of re-ranking the cluster set, and `refused`
+/// records every cluster that said no so a refill selection (taken only
+/// when the precomputed list runs dry with attempts left) can never
+/// re-offer one.
 #[derive(Clone, Debug)]
 struct PendingDelegation {
     task: TaskId,
     sla: TaskSla,
     /// Remaining candidate clusters (highest priority first).
     remaining: Vec<ClusterId>,
+    /// Clusters that already refused this instance.
+    refused: Vec<ClusterId>,
+    /// Cluster currently holding the in-flight `DelegateTask`.
+    current: ClusterId,
     attempt: u32,
 }
 
@@ -65,7 +75,13 @@ struct ApiWaiter {
 
 pub struct RootOrchestrator {
     pub cfg: RootConfig,
+    /// Cluster topology (attach/detach, parent edges). Aggregates live in
+    /// the indexed [`ClusterTable`] below, not in the tree.
     pub tree: ClusterTree,
+    /// Indexed federation state: dense cluster aggregates + feasibility
+    /// pre-filters, updated incrementally on report ingest and serving
+    /// every delegation's top-K priority-list selection.
+    pub fed: ClusterTable,
     /// ClusterId → orchestrator actor.
     cluster_actors: BTreeMap<ClusterId, ActorId>,
     links: BTreeMap<ClusterId, WsLink>,
@@ -84,6 +100,7 @@ impl RootOrchestrator {
         RootOrchestrator {
             cfg,
             tree: ClusterTree::new(),
+            fed: ClusterTable::default(),
             cluster_actors: BTreeMap::new(),
             links: BTreeMap::new(),
             db: ServiceDb::default(),
@@ -103,50 +120,89 @@ impl RootOrchestrator {
         }
     }
 
-    /// Root-tier scheduling step (paper §4.2 step 1): rank clusters for a
-    /// task and delegate to the best; on later attempts continue down the
-    /// priority list.
+    /// Root-tier scheduling step (paper §4.2 step 1): one top-K partial
+    /// selection over the indexed [`ClusterTable`] builds the priority
+    /// list for the whole delegation (K = the attempt budget); later
+    /// attempts continue down that list in O(1) (see the
+    /// `DelegationResult{None}` arm) instead of re-ranking per attempt.
     fn delegate(&mut self, ctx: &mut Ctx<'_>, instance: InstanceId, task: TaskId, sla: TaskSla) {
-        let stats: Vec<(ClusterId, &crate::hierarchy::AggregateStats)> = self
-            .tree
-            .children_of(ROOT)
-            .iter()
-            .filter_map(|c| self.tree.stats(*c).map(|s| (*c, s)))
-            .collect();
-        ctx.charge_cpu(costs::ROOT_SCHED_PER_CLUSTER_MS * stats.len().max(1) as f64);
+        let k = self.cfg.max_delegation_attempts as usize;
+        let (ranked, scanned) = self.fed.top_k(&sla, k, &[]);
+        ctx.charge_cpu(costs::ROOT_SCHED_PER_CLUSTER_MS * scanned.max(1) as f64);
+        ctx.metrics().inc("root.op.rank");
+        ctx.metrics().observe("root.rank_scanned", scanned as f64);
         self.root_sched_ops += 1;
 
-        let ranked = rank_clusters(&sla, &stats);
-        let remaining: Vec<ClusterId> = ranked
-            .iter()
-            .take(self.cfg.max_delegation_attempts as usize)
-            .map(|c| c.cluster)
-            .collect();
-
-        let mut pd = PendingDelegation {
+        let mut remaining: Vec<ClusterId> = ranked.iter().map(|c| c.cluster).collect();
+        if remaining.is_empty() {
+            // No feasible cluster at all: fail fast — the placement-watch
+            // surfaces the async NoFeasiblePlacement instead of parking
+            // the instance.
+            ctx.metrics().observe("root.delegation_attempts", 0.0);
+            self.fail_instance(ctx, instance, task);
+            return;
+        }
+        let next = remaining.remove(0);
+        let pd = PendingDelegation {
             task,
             sla,
             remaining,
+            refused: Vec::new(),
+            current: next,
             attempt: 0,
         };
-        if let Some(next) = pd.remaining.first().copied() {
-            pd.remaining.remove(0);
-            let actor = self.cluster_actors[&next];
-            let msg = SimMsg::Oak(OakMsg::DelegateTask {
-                task,
-                instance,
-                sla: pd.sla.clone(),
-                attempt: pd.attempt,
-            });
-            let bytes = msg.default_wire_bytes() + WS_FRAME_OVERHEAD;
-            if let Some(rec) = self.db.service_mut(task.service) {
-                rec.placement.insert(instance, next);
+        self.send_delegation(ctx, instance, next, pd);
+    }
+
+    /// Send one `DelegateTask` to `next` and park the bookkeeping. The
+    /// caller has already picked the candidate (initial rank, O(1) spill
+    /// step or refill selection). One checked lookup for every path: a
+    /// cluster that vanished between selection and send — possible once
+    /// detach paths exist — is skipped in favor of the next candidate on
+    /// the list (the same semantics as the spill arm's skip), and only
+    /// an empty list ends the delegation.
+    fn send_delegation(
+        &mut self,
+        ctx: &mut Ctx<'_>,
+        instance: InstanceId,
+        next: ClusterId,
+        mut pd: PendingDelegation,
+    ) {
+        let mut target = Some(next);
+        loop {
+            let Some(c) = target else {
+                ctx.metrics().observe("root.delegation_attempts", pd.attempt as f64);
+                self.fail_instance(ctx, instance, pd.task);
+                return;
+            };
+            if let Some(actor) = self.cluster_actors.get(&c).copied() {
+                pd.current = c;
+                let msg = SimMsg::Oak(OakMsg::DelegateTask {
+                    task: pd.task,
+                    instance,
+                    sla: pd.sla.clone(),
+                    attempt: pd.attempt,
+                });
+                let bytes = msg.default_wire_bytes() + WS_FRAME_OVERHEAD;
+                if let Some(rec) = self.db.service_mut(pd.task.service) {
+                    rec.placement.insert(instance, c);
+                }
+                ctx.metrics().inc("root.op.delegate_send");
+                if pd.attempt > 0 {
+                    ctx.metrics().inc("root.op.spill_send");
+                }
+                self.pending.insert(instance, pd);
+                ctx.send(actor, msg, bytes, labels::ROOT_TO_CLUSTER);
+                return;
             }
-            self.pending.insert(instance, pd);
-            ctx.send(actor, msg, bytes, labels::ROOT_TO_CLUSTER);
-        } else {
-            // No candidate clusters at all: the task fails immediately.
-            self.fail_instance(ctx, instance, task);
+            target = None;
+            while !pd.remaining.is_empty() {
+                let n = pd.remaining.remove(0);
+                if !pd.refused.contains(&n) {
+                    target = Some(n);
+                    break;
+                }
+            }
         }
     }
 
@@ -663,6 +719,7 @@ impl Actor for RootOrchestrator {
                 ctx.charge_cpu(costs::SUBMIT_MS);
                 let accepted = self.tree.attach(cluster, parent).is_ok();
                 if accepted {
+                    self.fed.register(cluster);
                     self.cluster_actors.insert(cluster, orchestrator);
                     self.links.insert(cluster, WsLink::new(ctx.now));
                 }
@@ -675,9 +732,21 @@ impl Actor for RootOrchestrator {
                 cluster,
                 stats,
                 running_instances,
+                service_cpu,
             }) => {
                 ctx.charge_cpu(costs::CLUSTER_REPORT_MS);
-                let _ = self.tree.update_stats(cluster, stats);
+                // Incremental ingest: the entry's stats are replaced in
+                // place and the feasibility pre-filters only move when a
+                // filter-relevant field changed. Clusters delta-coalesce
+                // on their side, so each applied report carries a
+                // threshold-sized move (`root.aggregates.batches` vs the
+                // clusters' sent/suppressed counters exposes the factor).
+                if self.fed.apply_report(cluster, stats) {
+                    ctx.metrics().inc("root.aggregates.batches");
+                }
+                // Per-service observed CPU piggybacks on the (coalesced)
+                // aggregate report: refresh the root's QoS-telemetry view.
+                self.db.apply_cluster_cpu(cluster, &service_cpu);
                 if let Some(l) = self.links.get_mut(&cluster) {
                     l.on_activity(ctx.now);
                 }
@@ -700,7 +769,10 @@ impl Actor for RootOrchestrator {
                     .observe("root.cluster_calc_ms", calc_time.as_millis());
                 match worker {
                     Some(node) => {
-                        self.pending.remove(&instance);
+                        if let Some(pd) = self.pending.remove(&instance) {
+                            ctx.metrics()
+                                .observe("root.delegation_attempts", (pd.attempt + 1) as f64);
+                        }
                         // Placement succeeded: the API waiter has nothing
                         // more to fear from the delegation chain.
                         self.placement_watch.remove(&instance);
@@ -720,28 +792,61 @@ impl Actor for RootOrchestrator {
                         }
                     }
                     None => {
-                        // Try next cluster in the priority list (§4.2
-                        // multi-cluster spill).
+                        // Priority-list spill (§4.2): the cluster refused,
+                        // so continue down the list precomputed when the
+                        // delegation started — an O(1) pop, not a re-rank.
                         if let Some(mut pd) = self.pending.remove(&instance) {
+                            pd.refused.push(pd.current);
                             pd.attempt += 1;
-                            if let Some(next) = pd.remaining.first().copied() {
-                                pd.remaining.remove(0);
-                                let actor = self.cluster_actors[&next];
-                                let msg = SimMsg::Oak(OakMsg::DelegateTask {
-                                    task,
-                                    instance,
-                                    sla: pd.sla.clone(),
-                                    attempt: pd.attempt,
-                                });
-                                let bytes =
-                                    msg.default_wire_bytes() + WS_FRAME_OVERHEAD;
-                                if let Some(rec) = self.db.service_mut(task.service) {
-                                    rec.placement.insert(instance, next);
+                            let mut next = None;
+                            if pd.attempt < self.cfg.max_delegation_attempts {
+                                while !pd.remaining.is_empty() {
+                                    let c = pd.remaining.remove(0);
+                                    // Defensive: never re-offer a refusal,
+                                    // and skip clusters gone since rank.
+                                    if pd.refused.contains(&c)
+                                        || !self.cluster_actors.contains_key(&c)
+                                    {
+                                        continue;
+                                    }
+                                    next = Some(c);
+                                    ctx.charge_cpu(costs::ROOT_SPILL_STEP_MS);
+                                    ctx.metrics().inc("root.op.spill_step");
+                                    break;
                                 }
-                                self.pending.insert(instance, pd);
-                                ctx.send(actor, msg, bytes, labels::ROOT_TO_CLUSTER);
-                            } else {
-                                self.fail_instance(ctx, instance, task);
+                                // The list ran dry with attempts left (the
+                                // feasible set was smaller than K at rank
+                                // time, or shrank): one refill selection
+                                // over *current* aggregates, excluding
+                                // every cluster that already said no.
+                                if next.is_none() {
+                                    let (ranked, scanned) =
+                                        self.fed.top_k(&pd.sla, 1, &pd.refused);
+                                    ctx.charge_cpu(
+                                        costs::ROOT_SCHED_PER_CLUSTER_MS
+                                            * scanned.max(1) as f64,
+                                    );
+                                    ctx.metrics().inc("root.op.rank");
+                                    ctx.metrics()
+                                        .observe("root.rank_scanned", scanned as f64);
+                                    next = ranked.first().map(|c| c.cluster);
+                                }
+                            }
+                            match next {
+                                Some(c) => {
+                                    self.send_delegation(ctx, instance, c, pd);
+                                }
+                                None => {
+                                    // Attempt budget or feasible set
+                                    // exhausted mid-churn: fail fast so
+                                    // the placement-watch surfaces the
+                                    // async NoFeasiblePlacement now.
+                                    ctx.metrics().observe(
+                                        "root.delegation_attempts",
+                                        pd.attempt as f64,
+                                    );
+                                    self.fail_instance(ctx, instance, task);
+                                }
                             }
                         }
                     }
@@ -918,11 +1023,14 @@ impl Actor for RootOrchestrator {
                 }
             }
 
-            SimMsg::Oak(OakMsg::Pong) => {
+            SimMsg::Oak(OakMsg::Pong { cluster }) => {
                 ctx.charge_cpu(costs::PING_MS);
-                // Activity tracking is per-cluster; pongs arrive tagged by
-                // transport in a full implementation. Reports double as
-                // liveness here (on_activity in ClusterReport).
+                // Pongs are the liveness signal now that aggregate
+                // reports are delta-coalesced (a steady cluster may stay
+                // silent past the link's suspect threshold otherwise).
+                if let Some(l) = self.links.get_mut(&cluster) {
+                    l.on_pong(ctx.now);
+                }
             }
 
             SimMsg::Timer(TimerKind::LivenessPing) => {

@@ -121,6 +121,9 @@ pub struct LocalInstance {
     pub node: NodeId,
     pub state: ServiceState,
     pub request: Capacity,
+    /// Latest observed CPU draw reported by the hosting worker, mc
+    /// (QoS telemetry; mutable — no index mirrors it).
+    pub observed_cpu_mc: u32,
     pub sla: TaskSla,
 }
 
@@ -298,6 +301,7 @@ mod tests {
             node: NodeId(node),
             state: ServiceState::Running,
             request: Capacity::new(100, 32, 0),
+            observed_cpu_mc: 0,
             sla: simple_sla("t", 100, 32).constraints[0].clone(),
         }
     }

@@ -26,6 +26,11 @@ pub struct WorkerConfig {
     pub telemetry: UpdatePolicy,
     /// Per-request service time for hosted instances, ms (data plane).
     pub service_time_ms: f64,
+    /// Steady-state duty cycle of a Running container: the observed CPU
+    /// draw reported upstream is `request × run_util` (the simulated
+    /// runtime's cgroup reading; the QoS-telemetry feed behind
+    /// `ServiceStatus.observed_cpu_mc`).
+    pub run_util: f64,
 }
 
 impl WorkerConfig {
@@ -41,6 +46,7 @@ impl WorkerConfig {
                 max_age: SimTime::from_secs(10.0),
             },
             service_time_ms: 0.4,
+            run_util: 0.7,
         }
     }
 }
@@ -149,10 +155,20 @@ impl WorkerEngine {
             .governor
             .should_publish(ctx.now, self.used, total)
         {
-            let instances: Vec<(InstanceId, ServiceState, f64)> = self
+            let instances: Vec<(InstanceId, ServiceState, f64, u32)> = self
                 .hosted
                 .iter()
-                .map(|(id, h)| (*id, h.state, h.qos_ms))
+                .map(|(id, h)| {
+                    // Observed per-container CPU draw: the runtime's
+                    // cgroup reading, modeled as a fixed duty cycle of
+                    // the reservation while Running (0 otherwise).
+                    let cpu = if h.state == ServiceState::Running {
+                        (h.request.cpu_millicores as f64 * self.cfg.run_util) as u32
+                    } else {
+                        0
+                    };
+                    (*id, h.state, h.qos_ms, cpu)
+                })
                 .collect();
             let msg = SimMsg::Oak(OakMsg::WorkerReport {
                 node: self.cfg.spec.node,

@@ -70,6 +70,31 @@ impl AggregateStats {
         agg
     }
 
+    /// Has this aggregate moved enough since `last` to be worth a report?
+    /// The delta-coalescing predicate of cluster→root pushes: any change
+    /// to a feasibility-relevant field (worker count, best single worker,
+    /// virtualization union, area) forces a send — the root's pre-filters
+    /// key on those — while mean/total drifts only count once they exceed
+    /// `frac` relatively. σ drifts alone never force a send: they only
+    /// shade the ranking score, which the threshold semantics accept as
+    /// approximate between reports.
+    pub fn delta_exceeds(&self, last: &AggregateStats, frac: f64) -> bool {
+        fn rel(a: f64, b: f64) -> f64 {
+            (a - b).abs() / b.abs().max(1.0)
+        }
+        self.worker_count != last.worker_count
+            || self.max_worker != last.max_worker
+            || self.virtualization != last.virtualization
+            || self.area != last.area
+            || rel(self.mean_cpu_millicores, last.mean_cpu_millicores) > frac
+            || rel(self.mean_mem_mb, last.mean_mem_mb) > frac
+            || rel(
+                self.total.cpu_millicores as f64,
+                last.total.cpu_millicores as f64,
+            ) > frac
+            || rel(self.total.mem_mb as f64, last.total.mem_mb as f64) > frac
+    }
+
     /// Merge a sub-cluster's aggregate into this one (multi-tier roll-up).
     pub fn absorb(&mut self, child: &AggregateStats) {
         let n1 = self.worker_count as f64;
@@ -118,12 +143,15 @@ impl AggregateStats {
 
 /// The oriented cluster tree. Parent links define the inter-cluster
 /// control edges `E`; every non-root cluster has exactly one parent and
-/// the structure is cycle-free by construction.
+/// the structure is cycle-free by construction. **Topology only**: the
+/// per-cluster aggregates live in the root's indexed
+/// [`crate::coordinator::ClusterTable`] (`RootOrchestrator::fed`), which
+/// maintains the scheduling pre-filters on ingest — storing them here
+/// too would be a silent-staleness trap.
 #[derive(Clone, Debug, Default)]
 pub struct ClusterTree {
     parent: HashMap<ClusterId, ClusterId>,
     children: HashMap<ClusterId, Vec<ClusterId>>,
-    latest: HashMap<ClusterId, AggregateStats>,
 }
 
 #[derive(Clone, Copy, PartialEq, Eq, Debug)]
@@ -174,7 +202,6 @@ impl ClusterTree {
         }
         self.parent.remove(&id);
         self.children.remove(&id);
-        self.latest.remove(&id);
         if let Some(sibs) = self.children.get_mut(&parent) {
             sibs.retain(|c| *c != id);
         }
@@ -202,19 +229,6 @@ impl ClusterTree {
     }
     pub fn is_empty(&self) -> bool {
         self.parent.is_empty()
-    }
-
-    /// Record the latest aggregate pushed by a cluster orchestrator.
-    pub fn update_stats(&mut self, id: ClusterId, stats: AggregateStats) -> Result<(), TreeError> {
-        if !self.contains(id) || id == ROOT {
-            return Err(TreeError::UnknownCluster(id));
-        }
-        self.latest.insert(id, stats);
-        Ok(())
-    }
-
-    pub fn stats(&self, id: ClusterId) -> Option<&AggregateStats> {
-        self.latest.get(&id)
     }
 
     /// Depth of a cluster (root children = 1). The paper's `t`-tier
@@ -350,14 +364,30 @@ mod tests {
     }
 
     #[test]
-    fn stats_update_requires_registration() {
-        let mut t = ClusterTree::new();
-        assert!(t
-            .update_stats(ClusterId(4), AggregateStats::default())
-            .is_err());
-        t.attach(ClusterId(4), ROOT).unwrap();
-        t.update_stats(ClusterId(4), AggregateStats::default())
-            .unwrap();
-        assert!(t.stats(ClusterId(4)).is_some());
+    fn delta_threshold_coalesces_small_moves() {
+        let caps = [cap(1000, 1024), cap(3000, 2048)];
+        let base = AggregateStats::from_workers(
+            caps.iter().map(|c| (c, Virtualization::CONTAINER)),
+            None,
+        );
+        // Identical aggregate: below any threshold.
+        assert!(!base.delta_exceeds(&base, 0.05));
+        // A small mean drift stays coalesced; a big one does not.
+        let mut drift = base.clone();
+        drift.mean_cpu_millicores *= 1.02;
+        assert!(!drift.delta_exceeds(&base, 0.05));
+        drift.mean_cpu_millicores = base.mean_cpu_millicores * 1.10;
+        assert!(drift.delta_exceeds(&base, 0.05));
+        // Feasibility-relevant fields always force a send.
+        let mut fewer = base.clone();
+        fewer.worker_count -= 1;
+        assert!(fewer.delta_exceeds(&base, 0.5));
+        let mut shrunk = base.clone();
+        shrunk.max_worker.cpu_millicores -= 1;
+        assert!(shrunk.delta_exceeds(&base, 0.5));
+        let mut virt = base.clone();
+        virt.virtualization = Virtualization::all();
+        assert!(virt.delta_exceeds(&base, 0.5));
     }
+
 }

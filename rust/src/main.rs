@@ -85,9 +85,16 @@ fn print_help() {
            oakestra bench <fig|all>           figures: 4a 4bc 5 6 7a 7b 8a 8b 9 10 ablations\n\
            oakestra churn [opts]              dynamic-workload churn bench (submit/scale/\n\
                                               migrate storms) → BENCH_churn.json\n\
-             --scenario submit|scale|failover|all   storm generators to run (default all)\n\
-             --seed N --duration S --clusters N --workers N --scheduler rom|ldp\n\
+             --scenario submit|scale|failover|spill|all  storm generators (default all;\n\
+                                              spill = heavy catalog over undersized\n\
+                                              clusters, defaults to a 16x6 shape)\n\
+             --seed N --duration S --scheduler rom|ldp\n\
+             --shape CxW                      topology: C clusters x W workers each\n\
+                                              (e.g. 16x6; --clusters/--workers override)\n\
              --services N                     cap on concurrently live churn services\n\
+             --autoscale-cpu                  autoscaler keys off observed per-service\n\
+                                              CPU telemetry instead of the synthetic\n\
+                                              offered-load walk\n\
              --quick                          small CI-sized storm\n\
              --rejoin-chance P                killed workers rejoin as fresh nodes (0..1)\n\
              --strict                         exit non-zero on leaks, unanswered requests,\n\
@@ -352,7 +359,8 @@ fn cmd_bench(args: &[String]) -> Result<()> {
 /// migrate storms against the northbound API) and emit `BENCH_churn.json`
 /// with per-lifecycle-op latency and control-plane msg/CPU cost.
 fn cmd_churn(args: &[String]) -> Result<()> {
-    let mut cfg = if args.iter().any(|a| a == "--quick") {
+    let quick = args.iter().any(|a| a == "--quick");
+    let mut cfg = if quick {
         bh::ChurnConfig::quick(42)
     } else {
         bh::ChurnConfig::default()
@@ -361,17 +369,40 @@ fn cmd_churn(args: &[String]) -> Result<()> {
         cfg.seed = s.parse()?;
     }
     if let Some(s) = flag_value(args, "--scenario") {
-        cfg.scenario = bh::ChurnScenario::parse(s)
-            .ok_or_else(|| anyhow!("unknown scenario '{s}' (submit|scale|failover|all)"))?;
+        cfg.scenario = bh::ChurnScenario::parse(s).ok_or_else(|| {
+            anyhow!("unknown scenario '{s}' (submit|scale|failover|spill|all)")
+        })?;
+        if cfg.scenario == bh::ChurnScenario::Spill {
+            // The spill storm wants undersized clusters + fast arrivals;
+            // start from its preset and let explicit flags override.
+            // --quick still means quick: shrink the storm window instead
+            // of silently dropping the flag.
+            cfg = bh::ChurnConfig::spill_storm(cfg.seed);
+            if quick {
+                cfg.duration_s = 45.0;
+                cfg.settle_s = 30.0;
+                cfg.clusters = 8;
+                cfg.workers_per_cluster = 4;
+            }
+        }
     }
     if let Some(s) = flag_value(args, "--duration") {
         cfg.duration_s = s.parse()?;
+    }
+    if let Some(s) = flag_value(args, "--shape") {
+        let (c, w) = bh::parse_shape(s)
+            .ok_or_else(|| anyhow!("bad --shape '{s}' (expected CxW, e.g. 16x6)"))?;
+        cfg.clusters = c;
+        cfg.workers_per_cluster = w;
     }
     if let Some(s) = flag_value(args, "--clusters") {
         cfg.clusters = s.parse()?;
     }
     if let Some(s) = flag_value(args, "--workers") {
         cfg.workers_per_cluster = s.parse()?;
+    }
+    if args.iter().any(|a| a == "--autoscale-cpu") {
+        cfg.cpu_autoscale = true;
     }
     if let Some(s) = flag_value(args, "--services") {
         cfg.max_live = s.parse()?;

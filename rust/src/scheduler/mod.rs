@@ -10,7 +10,7 @@ mod root;
 
 pub use ldp::{LdpContext, LdpScheduler, PingFn};
 pub use rom::{RomScheduler, RomStrategy};
-pub use root::{rank_clusters, ClusterCandidate};
+pub use root::{cluster_feasible, cluster_score, rank_clusters, ClusterCandidate};
 
 use crate::model::NodeProfile;
 use crate::sla::TaskSla;

@@ -4,8 +4,9 @@
 //! clusters. The root never sees individual workers — only the ⟨Σ,μ,σ⟩
 //! digests the clusters push (administrative-control boundary).
 
+use crate::geo::GeoPoint;
 use crate::hierarchy::AggregateStats;
-use crate::model::Virtualization;
+use crate::model::{Capacity, Virtualization};
 use crate::sla::TaskSla;
 use crate::util::ClusterId;
 
@@ -16,18 +17,54 @@ pub struct ClusterCandidate {
     pub score: f64,
 }
 
-/// Filter + rank clusters for a task (highest-priority-first).
-///
-/// Filters (paper: "insufficient resource availability, not within target
-/// geographical region, no support for the desired virtualization"):
+/// Exact feasibility filter of the root scheduler (paper: "insufficient
+/// resource availability, not within target geographical region, no
+/// support for the desired virtualization"):
 /// * the cluster's *best single worker* must fit the request — a big sum
 ///   over small workers is useless for one task;
 /// * required virtualization must exist in the cluster;
 /// * any geo pin (SLA `location`) must fall inside the cluster's area.
 ///
-/// Ranking: spare-capacity headroom (mean available minus request, in
-/// comparable units), shaded by the capacity spread σ — a high-variance
-/// cluster is less certain to still fit by the time delegation lands.
+/// Shared by the brute-force [`rank_clusters`] and the indexed
+/// [`crate::coordinator::ClusterTable`] so the two can never disagree on
+/// which clusters qualify (the fedstate property suite asserts this).
+pub fn cluster_feasible(
+    agg: &AggregateStats,
+    req: &Capacity,
+    req_virt: Virtualization,
+    pin: Option<&GeoPoint>,
+) -> bool {
+    agg.worker_count > 0
+        && agg.max_worker.fits(req)
+        && agg.virtualization.supports(req_virt)
+        && match (pin, &agg.area) {
+            (Some(p), Some(area)) => area.contains(p),
+            // No area advertised ⇒ cluster is location-agnostic (cloud).
+            _ => true,
+        }
+}
+
+/// Priority score of one feasible cluster: spare-capacity headroom (mean
+/// available minus request, in comparable units), shaded by the capacity
+/// spread σ — a high-variance cluster is less certain to still fit by the
+/// time delegation lands. Shared with the indexed table (see
+/// [`cluster_feasible`]).
+pub fn cluster_score(agg: &AggregateStats, req: &Capacity) -> f64 {
+    let headroom = (agg.mean_cpu_millicores - req.cpu_millicores as f64) / 1000.0
+        + (agg.mean_mem_mb - req.mem_mb as f64) / 1024.0;
+    let spread_penalty =
+        (agg.std_cpu_millicores / 1000.0 + agg.std_mem_mb / 1024.0) * 0.25;
+    headroom - spread_penalty
+}
+
+/// Filter + rank clusters for a task (highest-priority-first).
+///
+/// The brute-force reference: filter with [`cluster_feasible`], score with
+/// [`cluster_score`], fully sort. The live root now serves delegations
+/// from the incrementally indexed `ClusterTable` instead (top-K partial
+/// selection, no per-task full sort); this function remains the oracle
+/// the property suite checks that table against, and the static benches'
+/// root-tier model.
 pub fn rank_clusters(
     sla: &TaskSla,
     clusters: &[(ClusterId, &AggregateStats)],
@@ -39,25 +76,10 @@ pub fn rank_clusters(
 
     let mut out: Vec<ClusterCandidate> = clusters
         .iter()
-        .filter(|(_, agg)| agg.worker_count > 0)
-        .filter(|(_, agg)| agg.max_worker.fits(&req))
-        .filter(|(_, agg)| agg.virtualization.supports(req_virt))
-        .filter(|(_, agg)| match (&sla.location, &agg.area) {
-            (Some(pin), Some(area)) => area.contains(pin),
-            // No area advertised ⇒ cluster is location-agnostic (cloud).
-            _ => true,
-        })
-        .map(|(id, agg)| {
-            let headroom = (agg.mean_cpu_millicores - req.cpu_millicores as f64)
-                / 1000.0
-                + (agg.mean_mem_mb - req.mem_mb as f64) / 1024.0;
-            let spread_penalty = (agg.std_cpu_millicores / 1000.0
-                + agg.std_mem_mb / 1024.0)
-                * 0.25;
-            ClusterCandidate {
-                cluster: *id,
-                score: headroom - spread_penalty,
-            }
+        .filter(|(_, agg)| cluster_feasible(agg, &req, req_virt, sla.location.as_ref()))
+        .map(|(id, agg)| ClusterCandidate {
+            cluster: *id,
+            score: cluster_score(agg, &req),
         })
         .collect();
 

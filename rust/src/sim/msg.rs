@@ -84,17 +84,29 @@ pub enum OakMsg {
         node: NodeId,
         used: Capacity,
         vivaldi: VivaldiState,
-        instances: Vec<(InstanceId, ServiceState, f64)>, // (id, state, qos_ms)
+        /// (id, state, qos_ms, observed cpu draw in millicores).
+        instances: Vec<(InstanceId, ServiceState, f64, u32)>,
     },
     /// Push-based aggregate over the inter-cluster WebSocket link.
+    /// Delta-coalesced: clusters suppress ticks whose aggregate moved
+    /// less than the configured threshold (bounded by a max-staleness
+    /// resend), so each report the root ingests is a meaningful move.
     ClusterReport {
         cluster: ClusterId,
         stats: AggregateStats,
         running_instances: usize,
+        /// Per-service observed CPU (millicores, Running instances only)
+        /// summed across this cluster's workers — the QoS-telemetry feed
+        /// behind `ServiceStatus.observed_cpu_mc`.
+        service_cpu: Vec<(ServiceId, u64)>,
     },
-    /// WS liveness ping/pong.
+    /// WS liveness ping/pong. The pong names its cluster so the root can
+    /// refresh that link's liveness directly — with aggregate reports
+    /// delta-coalesced they no longer double as a reliable heartbeat.
     Ping,
-    Pong,
+    Pong {
+        cluster: ClusterId,
+    },
     /// Membership gossip: orchestrator → worker sample of peer Vivaldi
     /// states so workers can run decentralized coordinate updates.
     PeerHint {
@@ -334,9 +346,10 @@ impl SimMsg {
                 OakMsg::RegisterClusterAck { .. } => 64,
                 OakMsg::RegisterWorker { .. } => 768,
                 OakMsg::RegisterWorkerAck { .. } => 64,
-                OakMsg::WorkerReport { instances, .. } => 180 + 24 * instances.len(),
-                OakMsg::ClusterReport { .. } => 256,
-                OakMsg::Ping | OakMsg::Pong => 16,
+                OakMsg::WorkerReport { instances, .. } => 180 + 28 * instances.len(),
+                OakMsg::ClusterReport { service_cpu, .. } => 256 + 12 * service_cpu.len(),
+                OakMsg::Ping => 16,
+                OakMsg::Pong { .. } => 24,
                 OakMsg::PeerHint { peers } => 16 + 40 * peers.len(),
                 OakMsg::ApiCall(env) => match &env.request {
                     // A full Schema 1 JSON document dominates the call.

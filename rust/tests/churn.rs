@@ -79,6 +79,69 @@ fn indexed_hot_paths_stay_deterministic_at_scale_and_quiesce() {
 }
 
 #[test]
+fn spill_storm_forces_priority_list_spill_and_stays_deterministic() {
+    // Deliberately undersized clusters + the heavy catalog: sustained
+    // arrivals overrun the root's current best cluster between its
+    // (delta-coalesced) aggregate reports, so DelegationResult{None} →
+    // next-cluster spill must fire — and the whole storm must stay
+    // seed-deterministic, clean and O(K) in root ranking work.
+    let cfg = ChurnConfig {
+        clusters: 6,
+        workers_per_cluster: 3,
+        duration_s: 60.0,
+        settle_s: 35.0,
+        arrival_period_s: 0.8,
+        mean_lifetime_s: 18.0,
+        max_live: 24,
+        ..ChurnConfig::spill_storm(17)
+    };
+    let a = run_churn(&cfg);
+    let b = run_churn(&cfg);
+    assert!(a.op_log.len() > 10, "storm must actually do things");
+    assert_eq!(a.op_log, b.op_log, "spill storm must be seed-deterministic");
+    assert_eq!(a.census, b.census, "identical census across same-seed runs");
+    assert_eq!(a.ctrl_msgs, b.ctrl_msgs);
+
+    assert!(a.submits > 10, "arrivals must submit: {}", a.submits);
+    assert!(
+        a.spill_sends > 0,
+        "undersized clusters must force spill; sends={} rank={}\nop log:\n{}",
+        a.delegation_sends,
+        a.rank_ops,
+        a.op_log.join("\n")
+    );
+    assert!(a.spill_rate > 0.0);
+    assert!(a.delegation_attempts_p95 >= 1.0);
+    // O(K) per attempt: spill continuations pop the precomputed priority
+    // list instead of re-ranking.
+    assert!(
+        a.spill_steps > 0,
+        "spill must take the O(1) continuation path: steps={} sends={}",
+        a.spill_steps,
+        a.spill_sends
+    );
+    // Structural bound: every top-K selection either produces a send or
+    // ends its delegation in failure — spill steps send without ranking,
+    // so ranks can never track the attempt count.
+    assert!(
+        a.rank_ops <= a.delegation_sends + a.placement_failed,
+        "rank_ops {} > sends {} + failures {}",
+        a.rank_ops,
+        a.delegation_sends,
+        a.placement_failed
+    );
+    // Delta-coalescing must have suppressed steady-state aggregates
+    // (warm-up alone has unchanged ticks).
+    assert!(a.aggregate_suppressed > 0, "coalescing never suppressed");
+
+    assert_eq!(a.census_mismatch, 0, "{:?}", a.census_diff);
+    assert_eq!(a.leaked_instances, 0, "census:\n{}", a.census.join("\n"));
+    assert_eq!(a.leaked_capacity_mc, 0);
+    assert_eq!(a.pending_non_timer, 0);
+    assert_eq!(a.unanswered_requests, 0);
+}
+
+#[test]
 fn scale_storm_and_failover_drills_converge_with_no_leaks() {
     let r = run_churn(&storm_cfg(21));
 

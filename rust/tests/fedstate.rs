@@ -1,0 +1,167 @@
+//! Property tests for the root's indexed federation state
+//! (`oakestra::coordinator::ClusterTable`): after an arbitrary sequence
+//! of register / deregister / aggregate-report operations, every top-K
+//! priority-list query — including the spill bookkeeping's exclusion
+//! list — must return exactly what the brute-force
+//! `scheduler::rank_clusters` oracle computes over a mirrored flat model,
+//! and the feasibility pre-filter bitsets must stay consistent with a
+//! brute-force recompute after every single mutation.
+
+use oakestra::coordinator::ClusterTable;
+use oakestra::geo::{Area, GeoPoint};
+use oakestra::hierarchy::AggregateStats;
+use oakestra::model::{Capacity, Virtualization};
+use oakestra::prop_assert;
+use oakestra::propcheck::check;
+use oakestra::scheduler::{rank_clusters, ClusterCandidate};
+use oakestra::sla::{simple_sla, TaskSla};
+use oakestra::util::{ClusterId, Rng};
+
+fn rand_stats(rng: &mut Rng) -> AggregateStats {
+    let n = rng.below(5);
+    if n == 0 {
+        // A cluster whose every worker saturated: empty aggregate,
+        // must drop out of all pre-filters.
+        return AggregateStats::default();
+    }
+    let mut caps = Vec::new();
+    for _ in 0..n {
+        caps.push(Capacity::new(
+            100 + rng.below(6000) as u32,
+            32 + rng.below(6000) as u32,
+            0,
+        ));
+    }
+    let virt = match rng.below(4) {
+        0 => Virtualization::CONTAINER,
+        1 => Virtualization::all(),
+        2 => Virtualization::CONTAINER.union(Virtualization::WASM),
+        _ => Virtualization::CONTAINER.union(Virtualization::VM),
+    };
+    let area = if rng.chance(0.3) {
+        Some(Area {
+            center: GeoPoint::from_degrees(
+                47.5 + rng.f64() * 2.0,
+                10.5 + rng.f64() * 3.0,
+            ),
+            radius_km: 20.0 + 80.0 * rng.f64(),
+        })
+    } else {
+        None
+    };
+    AggregateStats::from_workers(caps.iter().map(|c| (c, virt)), area)
+}
+
+fn rand_sla(rng: &mut Rng) -> TaskSla {
+    let cpu = 100 + rng.below(5000) as u32;
+    let mem = 32 + rng.below(4000) as u32;
+    let mut sla = simple_sla("q", cpu, mem).constraints[0].clone();
+    if rng.chance(0.25) {
+        sla.virtualization = "vm".into();
+    } else if rng.chance(0.2) {
+        sla.virtualization = "container, wasm".into();
+    }
+    if rng.chance(0.3) {
+        sla.location = Some(GeoPoint::from_degrees(
+            47.5 + rng.f64() * 2.0,
+            10.5 + rng.f64() * 3.0,
+        ));
+    }
+    sla
+}
+
+#[test]
+fn prop_cluster_table_topk_matches_brute_force_rerank() {
+    check("ClusterTable top-K vs brute-force re-rank", 150, |rng| {
+        let mut table = ClusterTable::default();
+        // Mirror: the flat model a per-attempt full re-rank would use.
+        let mut mirror: Vec<(ClusterId, AggregateStats)> = Vec::new();
+
+        for _ in 0..100 {
+            match rng.below(10) {
+                // Register (duplicates refused).
+                0 | 1 => {
+                    let c = ClusterId(1 + rng.below(20) as u32);
+                    let inserted = table.register(c);
+                    prop_assert!(
+                        inserted != mirror.iter().any(|(mc, _)| *mc == c),
+                        "duplicate-registration verdict for {c} diverged"
+                    );
+                    if inserted {
+                        mirror.push((c, AggregateStats::default()));
+                    }
+                }
+                // Deregister a random existing cluster.
+                2 => {
+                    if mirror.is_empty() {
+                        continue;
+                    }
+                    let k = rng.below(mirror.len());
+                    let (c, _) = mirror.remove(k);
+                    table.deregister(c).ok_or("deregister lost the entry")?;
+                    prop_assert!(table.deregister(c).is_none());
+                }
+                // Aggregate report ingest (the incremental-update path).
+                3 | 4 | 5 | 6 => {
+                    if mirror.is_empty() {
+                        continue;
+                    }
+                    let stats = rand_stats(rng);
+                    let k = rng.below(mirror.len());
+                    let c = mirror[k].0;
+                    prop_assert!(table.apply_report(c, stats.clone()));
+                    mirror[k].1 = stats;
+                }
+                // Delegation query: top-K with random exclusions (the
+                // in-flight spill's refused set).
+                _ => {
+                    let sla = rand_sla(rng);
+                    let k = 1 + rng.below(5);
+                    let mut exclude: Vec<ClusterId> = Vec::new();
+                    for (c, _) in &mirror {
+                        if rng.chance(0.2) {
+                            exclude.push(*c);
+                        }
+                    }
+                    let pairs: Vec<(ClusterId, &AggregateStats)> = mirror
+                        .iter()
+                        .filter(|(c, _)| !exclude.contains(c))
+                        .map(|(c, s)| (*c, s))
+                        .collect();
+                    let mut want: Vec<ClusterCandidate> = rank_clusters(&sla, &pairs);
+                    want.truncate(k);
+                    let (got, scanned) = table.top_k(&sla, k, &exclude);
+                    prop_assert!(
+                        got == want,
+                        "top_k(k={k}, excl={exclude:?}) diverged:\n  \
+                         indexed {got:?}\n  brute   {want:?}"
+                    );
+                    prop_assert!(
+                        scanned <= mirror.len(),
+                        "scanned {scanned} > {} clusters",
+                        mirror.len()
+                    );
+                    prop_assert!(
+                        got.iter().all(|c| !exclude.contains(&c.cluster)),
+                        "a refused cluster was re-offered"
+                    );
+                }
+            }
+
+            // Bitset invariants hold after every single operation.
+            table.check_consistent()?;
+        }
+
+        // Final deep sweep: every K against the oracle, no exclusions.
+        let pairs: Vec<(ClusterId, &AggregateStats)> =
+            mirror.iter().map(|(c, s)| (*c, s)).collect();
+        for k in 1..=8 {
+            let sla = rand_sla(rng);
+            let mut want = rank_clusters(&sla, &pairs);
+            want.truncate(k);
+            let (got, _) = table.top_k(&sla, k, &[]);
+            prop_assert!(got == want, "final sweep k={k} diverged");
+        }
+        Ok(())
+    });
+}

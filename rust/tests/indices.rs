@@ -28,6 +28,7 @@ fn instance(task: TaskId, node: NodeId) -> LocalInstance {
         node,
         state: ServiceState::Running,
         request: Capacity::new(50, 16, 0),
+        observed_cpu_mc: 0,
         sla: oakestra::sla::simple_sla("p", 50, 16).constraints[0].clone(),
     }
 }

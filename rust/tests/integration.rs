@@ -707,3 +707,164 @@ fn sla_violation_triggers_migration_and_teardown() {
         .sum();
     assert_eq!(hosted_elsewhere, 1);
 }
+
+#[test]
+fn service_status_reports_observed_cpu_from_worker_telemetry() {
+    // QoS-telemetry plumbing end-to-end: worker reports carry a
+    // per-instance observed CPU draw (run_util × reservation), the
+    // cluster sums it per service onto its aggregate report, and
+    // ServiceStatus exposes the cross-cluster total.
+    let mut tb = build_oakestra(OakTestbedConfig::default());
+    tb.warm_up();
+    let req = tb.submit(simple_sla("cpu-probe", 200, 64), SimTime::from_secs(13.0));
+    tb.sim.run_until(SimTime::from_secs(30.0));
+    let Some(ApiResponse::Submitted { service, .. }) = tb.ack(req) else {
+        panic!("submission must be acked");
+    };
+    let service: ServiceId = *service;
+    let sreq = tb.query_status(service, SimTime::from_secs(31.0));
+    tb.sim.run_until(SimTime::from_secs(35.0));
+    let Some(ApiResponse::Status(s)) = tb.ack(sreq) else {
+        panic!("status must be answered");
+    };
+    assert!(s.fully_running);
+    // Default worker duty cycle is 0.7: one Running 200 mc instance
+    // reports 140 mc observed — real telemetry, not the reservation.
+    assert_eq!(
+        s.observed_cpu_mc, 140,
+        "observed CPU must flow worker → cluster → root → status"
+    );
+}
+
+#[test]
+fn spill_exhaustion_fails_fast_through_placement_watch() {
+    // Three clusters of one S worker each. Fillers saturate every
+    // cluster (forcing priority-list spill while aggregates are stale);
+    // once the root's view has caught up, an unplaceable submission must
+    // fail FAST at rank time — the indexed table's feasibility filters
+    // leave no candidates — and surface the async NoFeasiblePlacement.
+    let mut tb = build_oakestra(OakTestbedConfig {
+        clusters: 3,
+        workers_per_cluster: 1,
+        ..OakTestbedConfig::default()
+    });
+    tb.warm_up();
+    for i in 0..3 {
+        tb.submit(
+            simple_sla(&format!("filler-{i}"), 700, 128),
+            SimTime::from_secs(13.0 + 0.4 * i as f64),
+        );
+    }
+    // Let the fills settle and every cluster re-report its (now ~300 mc
+    // max-worker) aggregate.
+    tb.sim.run_until(SimTime::from_secs(26.0));
+    let vreq = tb.submit(simple_sla("victim", 800, 128), SimTime::from_secs(26.5));
+    tb.sim.run_until(SimTime::from_secs(40.0));
+
+    let m = &tb.sim.core.metrics;
+    // The stale-aggregate fill phase must have exercised the spill path
+    // (several fillers chased the same best cluster before its refusal
+    // was visible upstream).
+    assert!(
+        m.counter("root.op.spill_send") >= 1,
+        "saturating 1-worker clusters must spill: sends={} ranks={}",
+        m.counter("root.op.delegate_send"),
+        m.counter("root.op.rank")
+    );
+    // The victim failed fast: no feasible cluster at rank time, async
+    // error delivered through the placement watch.
+    let responses = tb.api_client().responses_for(vreq);
+    assert!(matches!(responses[0], ApiResponse::Submitted { .. }));
+    assert!(
+        responses.iter().any(|r| matches!(
+            r,
+            ApiResponse::Error(ApiError::NoFeasiblePlacement { .. })
+        )),
+        "exhausted feasible set must surface NoFeasiblePlacement: {responses:?}"
+    );
+    let root = tb.sim.actor_as::<RootOrchestrator>(tb.root).unwrap();
+    let victim = root
+        .db
+        .services()
+        .find(|r| r.spec.name == "victim")
+        .expect("victim registered");
+    assert!(victim.instances.iter().all(|i| i.state.is_terminal()));
+}
+
+#[test]
+fn undeploy_races_inflight_spill_retry_without_leaks() {
+    // An undeploy issued while its instance's delegation is mid-spill
+    // (DelegateTask/DelegationResult chains in flight on slow links)
+    // must cancel the retry loop: nothing may deploy afterwards, no
+    // record or capacity may leak, and every request is answered.
+    let mut tb = build_oakestra(OakTestbedConfig {
+        clusters: 3,
+        workers_per_cluster: 1,
+        ..OakTestbedConfig::default()
+    });
+    // Slow control links: each delegation hop takes ~40 ms, so the spill
+    // chain is in flight long enough for the undeploy to race it.
+    tb.sim.core.net.impair_all(40.0, 0.0);
+    tb.warm_up();
+    // Saturate every cluster quickly (one 700 mc instance per 1000 mc
+    // worker) so the victim's delegation gets refused and spills.
+    let mut fillers = Vec::new();
+    for i in 0..3 {
+        fillers.push(tb.submit(
+            simple_sla(&format!("filler-{i}"), 700, 128),
+            SimTime::from_secs(13.0 + 0.1 * i as f64),
+        ));
+    }
+    // Victim submitted while the root's aggregates still show room
+    // (clusters report every 5 s): its delegation will bounce cluster to
+    // cluster...
+    let vreq = tb.submit(simple_sla("victim", 700, 128), SimTime::from_secs(14.0));
+    tb.sim.run_until(SimTime::from_secs(14.05));
+    let victim_service = match tb.ack(vreq) {
+        Some(ApiResponse::Submitted { service, .. }) => *service,
+        other => panic!("victim submit must be acked synchronously: {other:?}"),
+    };
+    // ...and the undeploy lands mid-chain.
+    tb.undeploy(victim_service, SimTime::from_secs(14.1));
+    tb.sim.run_until(SimTime::from_secs(30.0));
+
+    // The victim service is fully terminal at the root and owns nothing
+    // anywhere in the hierarchy.
+    {
+        let root = tb.sim.actor_as::<RootOrchestrator>(tb.root).unwrap();
+        let rec = root.db.service(victim_service).unwrap();
+        assert!(rec.retired);
+        assert!(
+            rec.instances.iter().all(|i| i.state.is_terminal()),
+            "undeploy racing the spill retry must not park the instance"
+        );
+    }
+    // Tear the fillers down too and assert a clean global drain.
+    let down: Vec<ApiRequest> = {
+        let root = tb.sim.actor_as::<RootOrchestrator>(tb.root).unwrap();
+        root.db
+            .services()
+            .filter(|r| !r.retired)
+            .map(|r| ApiRequest::UndeployService { service: r.spec.id })
+            .collect()
+    };
+    tb.api_batch(down, SimTime::from_secs(31.0));
+    tb.sim.run_until(SimTime::from_secs(60.0));
+    for (i, (_, orch)) in tb.clusters.iter().enumerate() {
+        let c = tb.sim.actor_as::<ClusterOrchestrator>(*orch).unwrap();
+        assert!(
+            c.live_instances().is_empty(),
+            "cluster {i} leaked: {:?}",
+            c.live_instances()
+        );
+        assert_eq!(c.reserved().cpu_millicores, 0, "cluster {i} capacity leak");
+    }
+    for (node, engine) in &tb.workers {
+        let w = tb.sim.actor_as::<WorkerEngine>(*engine).unwrap();
+        assert_eq!(w.hosted_count(), 0, "worker {node} must be drained");
+    }
+    assert!(
+        tb.api_client().outstanding().is_empty(),
+        "every request must be answered even through the race"
+    );
+}
