@@ -92,6 +92,7 @@ pub fn ablate_delegation(total_workers: usize, clusters: usize, reps: usize) -> 
             service_hint: ServiceId(0),
             exclude: None,
         };
+        // lint: allow(ambient-time, wall-clock timing is the measurement itself)
         let t0 = std::time::Instant::now();
         let mut s = RomScheduler {
             strategy: RomStrategy::BestFit,
@@ -103,6 +104,7 @@ pub fn ablate_delegation(total_workers: usize, clusters: usize, reps: usize) -> 
         let fabrics: Vec<_> = (0..clusters)
             .map(|c| synthetic_fabric(per, 500 + (r * 64 + c) as u64))
             .collect();
+        // lint: allow(ambient-time, wall-clock timing is the measurement itself)
         let t0 = std::time::Instant::now();
         let aggs: Vec<crate::hierarchy::AggregateStats> = fabrics
             .iter()

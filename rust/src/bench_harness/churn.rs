@@ -1180,6 +1180,7 @@ pub fn count_leaks(tb: &OakTestbed, failed: &BTreeSet<NodeId>) -> (usize, u64) {
 /// collect the report. Fully deterministic in `cfg.seed` (wall-clock
 /// aside, which measures the host, not the simulation).
 pub fn run_churn(cfg: &ChurnConfig) -> ChurnReport {
+    // lint: allow(ambient-time, measures host wall-clock; never feeds the simulation)
     let wall_start = std::time::Instant::now();
     let mut tb = build_oakestra(OakTestbedConfig {
         seed: cfg.seed,

@@ -1325,6 +1325,10 @@ impl Actor for ClusterOrchestrator {
                 );
             }
 
+            // API traffic terminates at the root; ServiceDeployed is a
+            // root→client notification. Declared so `oakestra lint` can
+            // prove every other OakMsg variant has an arm above.
+            // lint: wildcard(OakMsg: ApiCall, ApiReturn, ServiceDeployed)
             _ => {}
         }
     }

@@ -1050,6 +1050,11 @@ impl Actor for RootOrchestrator {
                 );
             }
 
+            // Root never receives worker-tier traffic or its own downward
+            // sends; the manifest below keeps `oakestra lint` honest about
+            // which OakMsg variants this wildcard deliberately swallows.
+            // lint: wildcard(OakMsg: RegisterWorker, RegisterWorkerAck, WorkerReport)
+            // lint: wildcard(OakMsg: PeerHint, DeployInstance, ResolveIp)
             _ => {}
         }
     }

@@ -478,6 +478,14 @@ impl Actor for WorkerEngine {
                 ctx.charge_cpu(rps * 0.2);
             }
 
+            // Workers only speak the worker↔cluster subset of the
+            // protocol; everything cluster↔root or client-facing lands in
+            // the wildcard. Declared for `oakestra lint` protocol coverage.
+            // lint: wildcard(OakMsg: RegisterCluster, RegisterClusterAck, ClusterReport)
+            // lint: wildcard(OakMsg: Ping, Pong, ApiCall, ApiReturn, DelegateTask)
+            // lint: wildcard(OakMsg: DelegationResult, UndeployService, ServiceDeployed)
+            // lint: wildcard(OakMsg: MigrateInstance, InstanceReplaced, InstanceReplacedAck)
+            // lint: wildcard(OakMsg: ResolveIpUp, EscalateReschedule)
             _ => {}
         }
     }

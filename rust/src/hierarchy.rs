@@ -4,7 +4,7 @@
 //! pushes to its parent — the only resource information that crosses
 //! cluster boundaries (administrative-control preservation).
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use crate::geo::Area;
 use crate::model::{Capacity, Virtualization};
@@ -150,8 +150,8 @@ impl AggregateStats {
 /// too would be a silent-staleness trap.
 #[derive(Clone, Debug, Default)]
 pub struct ClusterTree {
-    parent: HashMap<ClusterId, ClusterId>,
-    children: HashMap<ClusterId, Vec<ClusterId>>,
+    parent: BTreeMap<ClusterId, ClusterId>,
+    children: BTreeMap<ClusterId, Vec<ClusterId>>,
 }
 
 #[derive(Clone, Copy, PartialEq, Eq, Debug)]

@@ -1,0 +1,154 @@
+//! Baseline ratchet: violation counts are diffed against the committed
+//! `LINT_BASELINE.json`; a rule's count may shrink (then the baseline
+//! should be re-tightened with `--update-baseline`) but never grow.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Per-rule allowed violation counts.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct Baseline {
+    pub rules: BTreeMap<String, u64>,
+}
+
+impl Baseline {
+    /// The empty baseline: zero tolerated violations for every rule.
+    pub fn zeros() -> Baseline {
+        Baseline {
+            rules: super::ALL_RULES
+                .iter()
+                .map(|r| (r.to_string(), 0))
+                .collect(),
+        }
+    }
+
+    pub fn parse(text: &str) -> Result<Baseline, String> {
+        let v = crate::json::parse(text).map_err(|e| e.to_string())?;
+        let rules = v
+            .get("rules")
+            .as_object()
+            .ok_or("baseline missing `rules` object")?;
+        let mut out = BTreeMap::new();
+        for (k, count) in rules {
+            let n = count
+                .as_f64()
+                .ok_or_else(|| format!("rule `{k}` count is not a number"))?;
+            out.push_str_checked(k, n)?;
+        }
+        Ok(Baseline { rules: out })
+    }
+
+    /// Missing file ⇒ the strict zero baseline (new checkouts stay green
+    /// only when the repo actually is clean).
+    pub fn load(path: &Path) -> Result<Baseline, String> {
+        match std::fs::read_to_string(path) {
+            Ok(text) => Baseline::parse(&text),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(Baseline::zeros()),
+            Err(e) => Err(format!("{}: {e}", path.display())),
+        }
+    }
+
+    pub fn to_json(&self) -> String {
+        let mut s = String::from("{\n  \"rules\": {\n");
+        let rows: Vec<String> = self
+            .rules
+            .iter()
+            .map(|(k, n)| format!("    \"{k}\": {n}"))
+            .collect();
+        s.push_str(&rows.join(",\n"));
+        s.push_str("\n  }\n}\n");
+        s
+    }
+}
+
+/// Helper trait so `parse` can reject non-integer counts inline.
+trait PushChecked {
+    fn push_str_checked(&mut self, k: &str, n: f64) -> Result<(), String>;
+}
+
+impl PushChecked for BTreeMap<String, u64> {
+    fn push_str_checked(&mut self, k: &str, n: f64) -> Result<(), String> {
+        if n < 0.0 || n.fract() != 0.0 {
+            return Err(format!("rule `{k}` count {n} is not a non-negative integer"));
+        }
+        self.insert(k.to_string(), n as u64);
+        Ok(())
+    }
+}
+
+/// One rule's current-vs-baseline standing.
+#[derive(Clone, Debug)]
+pub struct RatchetRow {
+    pub rule: String,
+    pub count: u64,
+    pub baseline: u64,
+}
+
+impl RatchetRow {
+    pub fn regressed(&self) -> bool {
+        self.count > self.baseline
+    }
+    /// The baseline is looser than reality and should be tightened.
+    pub fn slack(&self) -> bool {
+        self.count < self.baseline
+    }
+}
+
+/// Compare current counts to the baseline over the union of rule names.
+pub fn ratchet(counts: &BTreeMap<String, u64>, base: &Baseline) -> Vec<RatchetRow> {
+    let names: std::collections::BTreeSet<&String> =
+        counts.keys().chain(base.rules.keys()).collect();
+    names
+        .into_iter()
+        .map(|rule| RatchetRow {
+            rule: rule.clone(),
+            count: counts.get(rule).copied().unwrap_or(0),
+            baseline: base.rules.get(rule).copied().unwrap_or(0),
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn counts(pairs: &[(&str, u64)]) -> BTreeMap<String, u64> {
+        pairs.iter().map(|(k, n)| (k.to_string(), *n)).collect()
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        let b = Baseline::zeros();
+        let parsed = Baseline::parse(&b.to_json()).unwrap();
+        assert_eq!(parsed, b);
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(Baseline::parse("{}").is_err());
+        assert!(Baseline::parse("{\"rules\": {\"x\": -1}}").is_err());
+        assert!(Baseline::parse("{\"rules\": {\"x\": 1.5}}").is_err());
+        assert!(Baseline::parse("not json").is_err());
+    }
+
+    #[test]
+    fn ratchet_semantics() {
+        let base = Baseline {
+            rules: counts(&[("hash-order", 2), ("float-order", 0)]),
+        };
+        let rows = ratchet(&counts(&[("hash-order", 3), ("pragma", 1)]), &base);
+        let row = |name: &str| rows.iter().find(|r| r.rule == name).unwrap();
+        assert!(row("hash-order").regressed()); // 3 > 2
+        assert!(!row("float-order").regressed()); // 0 == 0
+        assert!(row("pragma").regressed()); // unknown rule defaults to 0
+        let rows2 = ratchet(&counts(&[("hash-order", 1)]), &base);
+        let r = rows2.iter().find(|r| r.rule == "hash-order").unwrap();
+        assert!(!r.regressed() && r.slack()); // 1 < 2: tighten
+    }
+
+    #[test]
+    fn missing_file_is_zero_baseline() {
+        let b = Baseline::load(Path::new("/nonexistent/LINT_BASELINE.json")).unwrap();
+        assert_eq!(b, Baseline::zeros());
+    }
+}

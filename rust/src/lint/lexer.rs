@@ -1,0 +1,467 @@
+//! Minimal Rust token scanner for the determinism linter.
+//!
+//! Deliberately not a real parser: the lint rules only need identifier
+//! and punctuation streams with line numbers, string literals (for the
+//! metrics-key registry), pragma comments, and a conservative marking of
+//! `#[cfg(test)] mod … { … }` regions. Comments, string/char literals
+//! and raw strings are handled so that rule keywords inside them can
+//! never fire.
+
+/// One lexed token.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Tok {
+    Ident(String),
+    Punct(char),
+    /// A string literal's *contents* (escapes left as written).
+    Str(String),
+}
+
+/// Token plus its 1-based source line.
+#[derive(Clone, Debug)]
+pub struct Token {
+    pub line: u32,
+    pub tok: Tok,
+}
+
+/// A pragma comment recognized by the linter (see README for syntax).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Pragma {
+    /// Suppresses `rule` violations on this line and the next code line.
+    Allow { line: u32, rule: String, why: String },
+    /// Declares `OakMsg` variants a dispatch loop leaves to its `_` arm.
+    Wildcard { line: u32, variants: Vec<String> },
+    /// A comment that names the linter but does not parse as a pragma.
+    Malformed { line: u32, text: String },
+}
+
+impl Pragma {
+    pub fn line(&self) -> u32 {
+        match self {
+            Pragma::Allow { line, .. }
+            | Pragma::Wildcard { line, .. }
+            | Pragma::Malformed { line, .. } => *line,
+        }
+    }
+}
+
+/// Scan result for one source file.
+#[derive(Clone, Debug, Default)]
+pub struct Scan {
+    pub tokens: Vec<Token>,
+    pub pragmas: Vec<Pragma>,
+    /// `in_test[i]` — tokens[i] lies inside a `#[cfg(test)] mod` region.
+    pub in_test: Vec<bool>,
+}
+
+impl Scan {
+    /// First line strictly after `line` that carries any token (the
+    /// second line an `allow` pragma covers).
+    pub fn next_code_line(&self, line: u32) -> Option<u32> {
+        self.tokens
+            .iter()
+            .map(|t| t.line)
+            .filter(|l| *l > line)
+            .min()
+    }
+}
+
+pub fn scan(src: &str) -> Scan {
+    let b = src.as_bytes();
+    let mut tokens = Vec::new();
+    let mut pragmas = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1u32;
+    while i < b.len() {
+        let c = b[i];
+        match c {
+            b'\n' => {
+                line += 1;
+                i += 1;
+            }
+            b' ' | b'\t' | b'\r' => i += 1,
+            b'/' if i + 1 < b.len() && b[i + 1] == b'/' => {
+                let start = i + 2;
+                while i < b.len() && b[i] != b'\n' {
+                    i += 1;
+                }
+                let text = &src[start.min(i)..i];
+                parse_pragma(line, text, &mut pragmas);
+            }
+            b'/' if i + 1 < b.len() && b[i + 1] == b'*' => {
+                // Nested block comment (pragmas are line-comment only).
+                let mut depth = 1;
+                i += 2;
+                while i < b.len() && depth > 0 {
+                    if b[i] == b'\n' {
+                        line += 1;
+                        i += 1;
+                    } else if b[i] == b'/' && i + 1 < b.len() && b[i + 1] == b'*' {
+                        depth += 1;
+                        i += 2;
+                    } else if b[i] == b'*' && i + 1 < b.len() && b[i + 1] == b'/' {
+                        depth -= 1;
+                        i += 2;
+                    } else {
+                        i += 1;
+                    }
+                }
+            }
+            b'"' => {
+                let tok_line = line;
+                i += 1;
+                let start = i;
+                while i < b.len() && b[i] != b'"' {
+                    if b[i] == b'\\' {
+                        i += 1; // skip escaped char (incl. \")
+                    } else if b[i] == b'\n' {
+                        line += 1;
+                    }
+                    i += 1;
+                }
+                let s = src[start..i.min(b.len())].to_string();
+                i = (i + 1).min(b.len());
+                tokens.push(Token {
+                    line: tok_line,
+                    tok: Tok::Str(s),
+                });
+            }
+            b'r' | b'b'
+                if is_raw_string_start(b, i) =>
+            {
+                let tok_line = line;
+                // Skip r/br prefix.
+                i += 1;
+                if b[i] == b'r' {
+                    i += 1;
+                }
+                let mut hashes = 0;
+                while i < b.len() && b[i] == b'#' {
+                    hashes += 1;
+                    i += 1;
+                }
+                i += 1; // opening quote
+                let start = i;
+                let mut end = b.len();
+                while i < b.len() {
+                    if b[i] == b'\n' {
+                        line += 1;
+                        i += 1;
+                        continue;
+                    }
+                    if b[i] == b'"' && closing_hashes(b, i + 1) >= hashes {
+                        end = i;
+                        i += 1 + hashes;
+                        break;
+                    }
+                    i += 1;
+                }
+                tokens.push(Token {
+                    line: tok_line,
+                    tok: Tok::Str(src[start..end.min(b.len())].to_string()),
+                });
+            }
+            b'\'' => {
+                // Char literal or lifetime; neither produces a token.
+                if i + 1 < b.len() && b[i + 1] == b'\\' {
+                    // Escaped char literal: skip to closing quote.
+                    i += 2;
+                    while i < b.len() && b[i] != b'\'' {
+                        i += 1;
+                    }
+                    i = (i + 1).min(b.len());
+                } else if i + 2 < b.len() && b[i + 2] == b'\'' {
+                    i += 3; // plain char literal 'x'
+                } else {
+                    // Lifetime: skip the quote; the name lexes as an ident.
+                    i += 1;
+                }
+            }
+            _ if c == b'_' || c.is_ascii_alphabetic() => {
+                let tok_line = line;
+                let start = i;
+                while i < b.len() && (b[i] == b'_' || b[i].is_ascii_alphanumeric()) {
+                    i += 1;
+                }
+                tokens.push(Token {
+                    line: tok_line,
+                    tok: Tok::Ident(src[start..i].to_string()),
+                });
+            }
+            _ if c.is_ascii_digit() => {
+                // Numbers produce no token; consume conservatively so
+                // `0..n` keeps its dots and `1.0f64` is swallowed whole.
+                i += 1;
+                while i < b.len() && (b[i].is_ascii_alphanumeric() || b[i] == b'_') {
+                    i += 1;
+                }
+                if i + 1 < b.len() && b[i] == b'.' && b[i + 1].is_ascii_digit() {
+                    i += 1;
+                    while i < b.len() && (b[i].is_ascii_alphanumeric() || b[i] == b'_') {
+                        i += 1;
+                    }
+                }
+            }
+            _ => {
+                tokens.push(Token {
+                    line,
+                    tok: Tok::Punct(c as char),
+                });
+                i += 1;
+            }
+        }
+    }
+    let in_test = mark_test_regions(&tokens);
+    Scan {
+        tokens,
+        pragmas,
+        in_test,
+    }
+}
+
+fn is_raw_string_start(b: &[u8], i: usize) -> bool {
+    // r"..."  r#"..."#  br"..."  br#"..."#
+    let mut j = i + 1;
+    if b[i] == b'b' {
+        if j >= b.len() || b[j] != b'r' {
+            return false;
+        }
+        j += 1;
+    }
+    while j < b.len() && b[j] == b'#' {
+        j += 1;
+    }
+    j < b.len() && b[j] == b'"'
+}
+
+fn closing_hashes(b: &[u8], mut i: usize) -> usize {
+    let mut n = 0;
+    while i < b.len() && b[i] == b'#' {
+        n += 1;
+        i += 1;
+    }
+    n
+}
+
+fn parse_pragma(line: u32, comment: &str, out: &mut Vec<Pragma>) {
+    let Some(pos) = comment.find("lint:") else {
+        return;
+    };
+    let body = comment[pos + 5..].trim();
+    if let Some(rest) = body.strip_prefix("allow(") {
+        if let Some(end) = rest.find(')') {
+            if let Some((rule, why)) = rest[..end].split_once(',') {
+                let (rule, why) = (rule.trim(), why.trim());
+                if !rule.is_empty() && !why.is_empty() {
+                    out.push(Pragma::Allow {
+                        line,
+                        rule: rule.to_string(),
+                        why: why.to_string(),
+                    });
+                    return;
+                }
+            }
+        }
+    } else if let Some(rest) = body.strip_prefix("wildcard(") {
+        if let Some(end) = rest.find(')') {
+            if let Some((enum_name, list)) = rest[..end].split_once(':') {
+                let variants: Vec<String> = list
+                    .split(',')
+                    .map(|v| v.trim().to_string())
+                    .filter(|v| !v.is_empty())
+                    .collect();
+                if enum_name.trim() == "OakMsg" && !variants.is_empty() {
+                    out.push(Pragma::Wildcard { line, variants });
+                    return;
+                }
+            }
+        }
+    }
+    out.push(Pragma::Malformed {
+        line,
+        text: body.to_string(),
+    });
+}
+
+/// Mark every token inside a `#[cfg(test)] … mod name { … }` item.
+fn mark_test_regions(tokens: &[Token]) -> Vec<bool> {
+    let mut marked = vec![false; tokens.len()];
+    let mut i = 0;
+    while i < tokens.len() {
+        if is_punct(tokens, i, '#') && is_cfg_test_attr(tokens, i + 1) {
+            // Skip over this and any further attributes to the item.
+            let mut j = skip_attr(tokens, i + 1);
+            while is_punct(tokens, j, '#') {
+                j = skip_attr(tokens, j + 1);
+            }
+            if is_ident(tokens, j, "mod")
+                && matches!(tokens.get(j + 1).map(|t| &t.tok), Some(Tok::Ident(_)))
+                && is_punct(tokens, j + 2, '{')
+            {
+                let mut depth = 1;
+                let mut k = j + 3;
+                while k < tokens.len() && depth > 0 {
+                    match tokens[k].tok {
+                        Tok::Punct('{') => depth += 1,
+                        Tok::Punct('}') => depth -= 1,
+                        _ => {}
+                    }
+                    k += 1;
+                }
+                for slot in marked.iter_mut().take(k).skip(i) {
+                    *slot = true;
+                }
+                i = k;
+                continue;
+            }
+        }
+        i += 1;
+    }
+    marked
+}
+
+fn is_punct(tokens: &[Token], i: usize, c: char) -> bool {
+    matches!(tokens.get(i).map(|t| &t.tok), Some(Tok::Punct(p)) if *p == c)
+}
+
+fn is_ident(tokens: &[Token], i: usize, name: &str) -> bool {
+    matches!(tokens.get(i).map(|t| &t.tok), Some(Tok::Ident(id)) if id == name)
+}
+
+/// `tokens[i]` should be the `[` of an attribute; returns the index just
+/// past its matching `]` (or `i` if it isn't an attribute opener).
+fn skip_attr(tokens: &[Token], i: usize) -> usize {
+    if !is_punct(tokens, i, '[') {
+        return i;
+    }
+    let mut depth = 1;
+    let mut j = i + 1;
+    while j < tokens.len() && depth > 0 {
+        match tokens[j].tok {
+            Tok::Punct('[') => depth += 1,
+            Tok::Punct(']') => depth -= 1,
+            _ => {}
+        }
+        j += 1;
+    }
+    j
+}
+
+fn is_cfg_test_attr(tokens: &[Token], i: usize) -> bool {
+    is_punct(tokens, i, '[')
+        && is_ident(tokens, i + 1, "cfg")
+        && is_punct(tokens, i + 2, '(')
+        && is_ident(tokens, i + 3, "test")
+        && is_punct(tokens, i + 4, ')')
+        && is_punct(tokens, i + 5, ']')
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(scan: &Scan) -> Vec<&str> {
+        scan.tokens
+            .iter()
+            .filter_map(|t| match &t.tok {
+                Tok::Ident(s) => Some(s.as_str()),
+                _ => None,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn comments_and_strings_hide_keywords() {
+        let s = scan("// HashMap here\nlet x = \"HashMap\"; /* HashMap */ y");
+        assert_eq!(idents(&s), vec!["let", "x", "y"]);
+        assert!(s
+            .tokens
+            .iter()
+            .any(|t| matches!(&t.tok, Tok::Str(v) if v == "HashMap")));
+    }
+
+    #[test]
+    fn raw_strings_and_chars_are_opaque() {
+        let s = scan("let a = r#\"Instant \"quoted\" inside\"#; let c = '\"'; b");
+        assert_eq!(idents(&s), vec!["let", "a", "let", "c", "b"]);
+    }
+
+    #[test]
+    fn numbers_keep_range_dots() {
+        let s = scan("for i in 0..n { x = 1.5e3; }");
+        let dots = s
+            .tokens
+            .iter()
+            .filter(|t| matches!(t.tok, Tok::Punct('.')))
+            .count();
+        assert_eq!(dots, 2, "both range dots survive");
+        assert_eq!(idents(&s), vec!["for", "i", "in", "n", "x"]);
+    }
+
+    #[test]
+    fn line_numbers_track_newlines() {
+        let s = scan("a\nb\n\nc");
+        let lines: Vec<u32> = s.tokens.iter().map(|t| t.line).collect();
+        assert_eq!(lines, vec![1, 2, 4]);
+        assert_eq!(s.next_code_line(1), Some(2));
+        assert_eq!(s.next_code_line(2), Some(4));
+        assert_eq!(s.next_code_line(4), None);
+    }
+
+    #[test]
+    fn allow_pragma_parses() {
+        let s = scan("// lint: allow(hash-order, lookup only)\nlet m = 1;");
+        assert_eq!(
+            s.pragmas,
+            vec![Pragma::Allow {
+                line: 1,
+                rule: "hash-order".into(),
+                why: "lookup only".into()
+            }]
+        );
+    }
+
+    #[test]
+    fn wildcard_pragma_parses() {
+        let s = scan("// lint: wildcard(OakMsg: Ping, Pong)\n_ => {}");
+        assert_eq!(
+            s.pragmas,
+            vec![Pragma::Wildcard {
+                line: 1,
+                variants: vec!["Ping".into(), "Pong".into()]
+            }]
+        );
+    }
+
+    #[test]
+    fn bad_pragmas_are_malformed() {
+        for src in [
+            "// lint: allow(hash-order)",     // no why
+            "// lint: allow(, reason)",       // no rule
+            "// lint: wildcard(Other: A)",    // wrong enum
+            "// lint: wildcard(OakMsg:)",     // empty list
+            "// lint: nonsense",              // unknown verb
+        ] {
+            let s = scan(src);
+            assert!(
+                matches!(s.pragmas.as_slice(), [Pragma::Malformed { .. }]),
+                "{src} should be malformed, got {:?}",
+                s.pragmas
+            );
+        }
+    }
+
+    #[test]
+    fn cfg_test_mod_is_marked() {
+        let src = "fn live() {}\n#[cfg(test)]\nmod tests {\n  fn t() { HashMap }\n}\nfn after() {}";
+        let s = scan(src);
+        for (i, t) in s.tokens.iter().enumerate() {
+            let inside = matches!(&t.tok, Tok::Ident(n) if n == "t" || n == "HashMap" || n == "tests" || n == "mod");
+            if inside {
+                assert!(s.in_test[i], "{:?} should be in test region", t.tok);
+            }
+            if matches!(&t.tok, Tok::Ident(n) if n == "live" || n == "after") {
+                assert!(!s.in_test[i], "{:?} should be live code", t.tok);
+            }
+        }
+    }
+}

@@ -1,0 +1,207 @@
+//! M1 — metrics-key registry: dotted metric keys referenced by README.md
+//! or jq-gated in ci.yml must exist as string literals in the sources.
+//! The registry is every non-test string literal shaped like a key; doc
+//! candidates are only checked when their leading namespace segment is one
+//! the code actually uses, which keeps prose ("e.g.", version numbers,
+//! file paths) from generating noise.
+
+use std::collections::BTreeSet;
+
+use super::lexer::{Scan, Tok};
+use super::{SourceFile, Violation};
+
+pub const METRICS_KEYS: &str = "metrics-keys";
+
+/// File-ish suffixes that disqualify a candidate (and registry entry).
+const FILE_SUFFIXES: [&str; 10] = [
+    ".rs", ".json", ".yml", ".yaml", ".md", ".toml", ".py", ".txt", ".sh", ".lock",
+];
+
+/// Does `s` look like a metric key: lowercase start, at least one dot,
+/// charset of the crate's dotted keys (incl. `->` labels and `*` globs).
+pub fn is_metric_key(s: &str) -> bool {
+    let Some(first) = s.chars().next() else {
+        return false;
+    };
+    if !first.is_ascii_lowercase() {
+        return false;
+    }
+    if !s.contains('.') || s.ends_with('.') || s.contains("..") {
+        return false;
+    }
+    if FILE_SUFFIXES.iter().any(|suf| s.ends_with(suf)) {
+        return false;
+    }
+    s.chars().all(|c| {
+        c.is_ascii_lowercase() || c.is_ascii_digit() || matches!(c, '.' | '_' | '-' | '>' | '*')
+    })
+}
+
+/// All key-shaped string literals outside test regions.
+pub fn registry(sources: &[SourceFile], scans: &[Scan]) -> BTreeSet<String> {
+    let mut keys = BTreeSet::new();
+    for (_, scan) in sources.iter().zip(scans) {
+        for (i, t) in scan.tokens.iter().enumerate() {
+            if scan.in_test[i] {
+                continue;
+            }
+            if let Tok::Str(s) = &t.tok {
+                if is_metric_key(s) {
+                    keys.insert(s.clone());
+                }
+            }
+        }
+    }
+    keys
+}
+
+/// Maximal runs of key characters in a prose/config line.
+fn candidate_runs(line: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut cur = String::new();
+    for c in line.chars() {
+        let key_char = c.is_ascii_alphanumeric()
+            || matches!(c, '.' | '_' | '-' | '>' | '*');
+        if key_char {
+            cur.push(c);
+        } else if !cur.is_empty() {
+            out.push(std::mem::take(&mut cur));
+        }
+    }
+    if !cur.is_empty() {
+        out.push(cur);
+    }
+    out
+}
+
+pub fn check(
+    sources: &[SourceFile],
+    scans: &[Scan],
+    docs: &[SourceFile],
+    out: &mut Vec<Violation>,
+) {
+    let keys = registry(sources, scans);
+    let namespaces: BTreeSet<&str> = keys
+        .iter()
+        .filter_map(|k| k.split('.').next())
+        .collect();
+    for doc in docs {
+        for (lineno, line) in doc.text.lines().enumerate() {
+            for run in candidate_runs(line) {
+                // A sentence-final dot is punctuation, not part of the key.
+                let run = run.trim_end_matches('.');
+                if !is_metric_key(run) {
+                    continue;
+                }
+                let ns = run.split('.').next().unwrap_or("");
+                if !namespaces.contains(ns) {
+                    continue;
+                }
+                let ok = if let Some(prefix) = run.strip_suffix('*') {
+                    keys.iter().any(|k| k.starts_with(prefix))
+                } else {
+                    keys.contains(run)
+                        || keys
+                            .iter()
+                            .any(|k| k.strip_suffix(".*").is_some_and(|p| run.starts_with(p)))
+                };
+                if !ok {
+                    out.push(Violation {
+                        rule: METRICS_KEYS,
+                        file: doc.path.clone(),
+                        line: lineno as u32 + 1,
+                        message: format!(
+                            "references metric key `{run}` which no source \
+                             string literal defines"
+                        ),
+                    });
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lint::lexer::scan;
+
+    fn src(text: &str) -> (Vec<SourceFile>, Vec<Scan>) {
+        let sources = vec![SourceFile {
+            path: "rust/src/metrics_user.rs".into(),
+            text: text.into(),
+        }];
+        let scans = sources.iter().map(|f| scan(&f.text)).collect();
+        (sources, scans)
+    }
+
+    fn doc(text: &str) -> SourceFile {
+        SourceFile {
+            path: "README.md".into(),
+            text: text.into(),
+        }
+    }
+
+    #[test]
+    fn key_shape() {
+        assert!(is_metric_key("root.op.submit"));
+        assert!(is_metric_key("oak.worker->cluster"));
+        assert!(is_metric_key("root.op.*"));
+        assert!(!is_metric_key("e"));
+        assert!(!is_metric_key("Fig.7a"));
+        assert!(!is_metric_key("trailing."));
+        assert!(!is_metric_key("ci.yml"));
+        assert!(!is_metric_key("no_dot"));
+    }
+
+    #[test]
+    fn documented_existing_key_is_clean() {
+        let (sources, scans) = src(r#"fn f(m: &mut M) { m.inc("root.op.submit"); }"#);
+        let mut v = Vec::new();
+        check(&sources, &scans, &[doc("counts land in `root.op.submit`.")], &mut v);
+        assert!(v.is_empty(), "{v:?}");
+    }
+
+    #[test]
+    fn unknown_key_in_known_namespace_is_flagged() {
+        let (sources, scans) = src(r#"fn f(m: &mut M) { m.inc("root.op.submit"); }"#);
+        let mut v = Vec::new();
+        check(&sources, &scans, &[doc("see root.op.sumbit for totals")], &mut v);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert!(v[0].message.contains("root.op.sumbit"));
+    }
+
+    #[test]
+    fn unknown_namespace_is_ignored() {
+        let (sources, scans) = src(r#"fn f(m: &mut M) { m.inc("root.op.submit"); }"#);
+        let mut v = Vec::new();
+        check(
+            &sources,
+            &scans,
+            &[doc("jq .federation.spill_sends and e.g. v1.2 and a/b.yml")],
+            &mut v,
+        );
+        assert!(v.is_empty(), "{v:?}");
+    }
+
+    #[test]
+    fn glob_suffix_checks_prefix() {
+        let (sources, scans) = src(r#"fn f(m: &mut M) { m.inc("root.op.submit"); }"#);
+        let mut v = Vec::new();
+        check(&sources, &scans, &[doc("all of root.op.* counts")], &mut v);
+        assert!(v.is_empty(), "{v:?}");
+        let mut v = Vec::new();
+        check(&sources, &scans, &[doc("all of root.missing.* counts")], &mut v);
+        assert_eq!(v.len(), 1, "{v:?}");
+    }
+
+    #[test]
+    fn test_only_strings_stay_out_of_registry() {
+        let (sources, scans) = src(
+            "#[cfg(test)]\nmod tests { fn t(m: &mut M) { m.inc(\"root.only_in_test\"); } }\nfn f(m: &mut M) { m.inc(\"root.live\"); }",
+        );
+        let mut v = Vec::new();
+        check(&sources, &scans, &[doc("root.only_in_test")], &mut v);
+        assert_eq!(v.len(), 1, "{v:?}");
+    }
+}

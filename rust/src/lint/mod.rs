@@ -1,0 +1,272 @@
+//! `oakestra lint` — a dependency-free, token-level static analyzer over
+//! the crate's own sources, enforcing the determinism and protocol
+//! invariants every figure in this repo rests on (see README "Static
+//! analysis"):
+//!
+//! - `hash-order` (D1): no `HashMap`/`HashSet` in control-plane modules
+//!   unless an allow pragma justifies that iteration order never escapes.
+//! - `float-order` (D2): no `partial_cmp`-based ordering; use `total_cmp`.
+//! - `ambient-time` (D3): no `Instant`/`SystemTime`/thread RNG outside
+//!   the sim clock and `util::Rng`.
+//! - `protocol-coverage` (P1): every `OakMsg` variant handled (or
+//!   wildcard-declared) in all three tier dispatchers and priced in the
+//!   wire-size model.
+//! - `metrics-keys` (M1): metric keys cited by README/ci.yml exist in
+//!   code.
+//! - `pragma`: pragmas must parse, and allow pragmas must suppress
+//!   something.
+//!
+//! Violations are diffed against the committed `LINT_BASELINE.json`
+//! ratchet: counts may only shrink.
+
+pub mod baseline;
+pub mod lexer;
+mod metrics_keys;
+mod protocol;
+mod rules;
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use lexer::Scan;
+
+pub use metrics_keys::METRICS_KEYS;
+pub use protocol::{enum_variants, referenced_variants, PROTOCOL};
+pub use rules::{AMBIENT_TIME, FLOAT_ORDER, HASH_ORDER, PRAGMA};
+
+/// Every rule id, in report order.
+pub const ALL_RULES: [&str; 6] = [
+    HASH_ORDER,
+    FLOAT_ORDER,
+    AMBIENT_TIME,
+    PROTOCOL,
+    METRICS_KEYS,
+    PRAGMA,
+];
+
+/// One source (or doc) file: repo-relative path with `/` separators.
+#[derive(Clone, Debug)]
+pub struct SourceFile {
+    pub path: String,
+    pub text: String,
+}
+
+impl SourceFile {
+    /// Modules where hash-iteration order can leak into scheduling,
+    /// gossip or output — the D1 scope.
+    pub fn control_plane(&self) -> bool {
+        self.path.contains("/coordinator/")
+            || self.path.contains("/scheduler/")
+            || self.path.contains("/netmanager/")
+            || self.path.contains("/sim/")
+            || self.path.ends_with("hierarchy.rs")
+    }
+}
+
+/// Everything the analyzer looks at, decoupled from the filesystem so
+/// tests can lint fixture inputs.
+#[derive(Clone, Debug, Default)]
+pub struct LintInput {
+    pub sources: Vec<SourceFile>,
+    /// README.md / ci.yml — scanned for metric-key references only.
+    pub docs: Vec<SourceFile>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Violation {
+    pub rule: &'static str,
+    pub file: String,
+    /// 1-based; 0 means the finding is file-scoped.
+    pub line: u32,
+    pub message: String,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct LintReport {
+    pub violations: Vec<Violation>,
+    /// Per-rule totals, zero-filled over [`ALL_RULES`].
+    pub counts: BTreeMap<String, u64>,
+    pub files_scanned: usize,
+}
+
+/// Run every rule over an input set.
+pub fn analyze(input: &LintInput) -> LintReport {
+    let scans: Vec<Scan> = input.sources.iter().map(|f| lexer::scan(&f.text)).collect();
+    let mut violations = Vec::new();
+    for (file, scan) in input.sources.iter().zip(&scans) {
+        rules::FileRules::new(file, scan).run(scan, &mut violations);
+    }
+    protocol::check(&input.sources, &scans, &mut violations);
+    metrics_keys::check(&input.sources, &scans, &input.docs, &mut violations);
+
+    violations.sort_by(|a, b| {
+        (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule))
+    });
+    let mut counts: BTreeMap<String, u64> =
+        ALL_RULES.iter().map(|r| (r.to_string(), 0)).collect();
+    for v in &violations {
+        *counts.entry(v.rule.to_string()).or_insert(0) += 1;
+    }
+    LintReport {
+        violations,
+        counts,
+        files_scanned: input.sources.len(),
+    }
+}
+
+/// Locate the repo root (the directory holding `rust/src/lib.rs`),
+/// starting from `start` and walking up — works from the repo root, from
+/// `rust/` (CI's working-directory) and from deeper build dirs.
+pub fn find_repo_root(start: &Path) -> Option<PathBuf> {
+    let mut dir = Some(start.to_path_buf());
+    while let Some(d) = dir {
+        if d.join("rust/src/lib.rs").is_file() {
+            return Some(d);
+        }
+        dir = d.parent().map(Path::to_path_buf);
+    }
+    None
+}
+
+/// Read the real tree: every `.rs` under `rust/src` (sorted traversal,
+/// so reports and baselines are stable), plus README.md and ci.yml.
+pub fn gather(repo_root: &Path) -> Result<LintInput, String> {
+    let src_root = repo_root.join("rust/src");
+    let mut paths = Vec::new();
+    walk(&src_root, &mut paths).map_err(|e| format!("{}: {e}", src_root.display()))?;
+    paths.sort();
+    let mut sources = Vec::new();
+    for p in paths {
+        let text =
+            std::fs::read_to_string(&p).map_err(|e| format!("{}: {e}", p.display()))?;
+        sources.push(SourceFile {
+            path: rel_path(repo_root, &p),
+            text,
+        });
+    }
+    let mut docs = Vec::new();
+    for doc in ["README.md", ".github/workflows/ci.yml"] {
+        let p = repo_root.join(doc);
+        if let Ok(text) = std::fs::read_to_string(&p) {
+            docs.push(SourceFile {
+                path: doc.to_string(),
+                text,
+            });
+        }
+    }
+    Ok(LintInput { sources, docs })
+}
+
+fn walk(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    let mut entries: Vec<PathBuf> = std::fs::read_dir(dir)?
+        .map(|e| e.map(|e| e.path()))
+        .collect::<std::io::Result<_>>()?;
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            walk(&p, out)?;
+        } else if p.extension().is_some_and(|x| x == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+fn rel_path(root: &Path, p: &Path) -> String {
+    p.strip_prefix(root)
+        .unwrap_or(p)
+        .to_string_lossy()
+        .replace('\\', "/")
+}
+
+/// Render the machine-readable report (`oakestra lint --json`).
+pub fn report_json(report: &LintReport, rows: &[baseline::RatchetRow]) -> String {
+    let mut s = String::from("{\n  \"lint\": 1,\n  \"files_scanned\": ");
+    s.push_str(&report.files_scanned.to_string());
+    s.push_str(",\n  \"counts\": {");
+    let counts: Vec<String> = report
+        .counts
+        .iter()
+        .map(|(k, n)| format!("\"{k}\": {n}"))
+        .collect();
+    s.push_str(&counts.join(", "));
+    s.push_str("},\n  \"regressed\": ");
+    s.push_str(if rows.iter().any(|r| r.regressed()) {
+        "true"
+    } else {
+        "false"
+    });
+    s.push_str(",\n  \"violations\": [");
+    let rows_json: Vec<String> = report
+        .violations
+        .iter()
+        .map(|v| {
+            format!(
+                "\n    {{\"rule\": \"{}\", \"file\": \"{}\", \"line\": {}, \"message\": \"{}\"}}",
+                v.rule,
+                esc(&v.file),
+                v.line,
+                esc(&v.message)
+            )
+        })
+        .collect();
+    s.push_str(&rows_json.join(","));
+    if !report.violations.is_empty() {
+        s.push_str("\n  ");
+    }
+    s.push_str("]\n}\n");
+    s
+}
+
+fn esc(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn control_plane_scope() {
+        let f = |p: &str| SourceFile {
+            path: p.into(),
+            text: String::new(),
+        };
+        assert!(f("rust/src/coordinator/root.rs").control_plane());
+        assert!(f("rust/src/scheduler/ldp.rs").control_plane());
+        assert!(f("rust/src/netmanager/table.rs").control_plane());
+        assert!(f("rust/src/sim/mod.rs").control_plane());
+        assert!(f("rust/src/hierarchy.rs").control_plane());
+        assert!(!f("rust/src/workload.rs").control_plane());
+        assert!(!f("rust/src/metrics.rs").control_plane());
+    }
+
+    #[test]
+    fn analyze_counts_are_zero_filled() {
+        let report = analyze(&LintInput::default());
+        assert_eq!(report.counts.len(), ALL_RULES.len());
+        assert!(report.counts.values().all(|n| *n == 0));
+    }
+
+    #[test]
+    fn report_json_is_valid_json() {
+        let input = LintInput {
+            sources: vec![SourceFile {
+                path: "rust/src/sim/bad.rs".into(),
+                text: "use std::collections::HashMap;".into(),
+            }],
+            docs: vec![],
+        };
+        let report = analyze(&input);
+        assert_eq!(report.counts[HASH_ORDER], 1);
+        let rows = baseline::ratchet(&report.counts, &baseline::Baseline::zeros());
+        let json = report_json(&report, &rows);
+        let v = crate::json::parse(&json).expect("report must be parseable");
+        assert_eq!(v.get("counts").get(HASH_ORDER).as_u64(), Some(1));
+        assert_eq!(v.get("regressed").as_bool(), Some(true));
+        assert_eq!(
+            v.get("violations").as_array().map(|a| a.len()),
+            Some(1)
+        );
+    }
+}

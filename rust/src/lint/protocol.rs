@@ -1,0 +1,275 @@
+//! P1 — protocol coverage: every `OakMsg` variant must be referenced (or
+//! declared in a wildcard manifest) in each tier dispatcher, and priced in
+//! the wire-size model. Token-level "referenced" means the dispatcher
+//! mentions `OakMsg::Variant` anywhere outside `#[cfg(test)]`; adding a
+//! variant without touching a tier therefore fails the lint, and stale or
+//! redundant manifest entries fail it too.
+
+use std::collections::BTreeSet;
+
+use super::lexer::{Pragma, Scan, Tok};
+use super::{SourceFile, Violation};
+
+pub const PROTOCOL: &str = "protocol-coverage";
+
+const ENUM_NAME: &str = "OakMsg";
+/// Path suffix of the message-definition file (also hosts the size model).
+const MSG_FILE: &str = "sim/msg.rs";
+/// Path suffixes of the three tier dispatch loops.
+const DISPATCHERS: [&str; 3] = [
+    "coordinator/root.rs",
+    "coordinator/cluster.rs",
+    "coordinator/worker.rs",
+];
+
+/// Variant names of `enum OakMsg { … }` in declaration order.
+pub fn enum_variants(scan: &Scan, enum_name: &str) -> Vec<String> {
+    let toks = &scan.tokens;
+    let mut i = 0;
+    while i < toks.len() {
+        let is_decl = matches!(&toks[i].tok, Tok::Ident(w) if w == "enum")
+            && matches!(&toks.get(i + 1).map(|t| &t.tok), Some(Tok::Ident(n)) if *n == enum_name)
+            && matches!(toks.get(i + 2).map(|t| &t.tok), Some(Tok::Punct('{')));
+        if !is_decl {
+            i += 1;
+            continue;
+        }
+        let mut out = Vec::new();
+        let mut depth = 1usize;
+        let mut expect_variant = true;
+        let mut j = i + 3;
+        while j < toks.len() && depth > 0 {
+            match &toks[j].tok {
+                Tok::Punct('{') | Tok::Punct('(') | Tok::Punct('[') => depth += 1,
+                Tok::Punct('}') | Tok::Punct(')') | Tok::Punct(']') => depth -= 1,
+                Tok::Punct(',') if depth == 1 => expect_variant = true,
+                Tok::Ident(name) if depth == 1 && expect_variant => {
+                    out.push(name.clone());
+                    expect_variant = false;
+                }
+                _ => {}
+            }
+            j += 1;
+        }
+        return out;
+    }
+    Vec::new()
+}
+
+/// All `Enum::Variant` references outside test regions.
+pub fn referenced_variants(scan: &Scan, enum_name: &str) -> BTreeSet<String> {
+    let toks = &scan.tokens;
+    let mut out = BTreeSet::new();
+    for i in 0..toks.len() {
+        if scan.in_test[i] {
+            continue;
+        }
+        let is_ref = matches!(&toks[i].tok, Tok::Ident(w) if w == enum_name)
+            && matches!(toks.get(i + 1).map(|t| &t.tok), Some(Tok::Punct(':')))
+            && matches!(toks.get(i + 2).map(|t| &t.tok), Some(Tok::Punct(':')));
+        if is_ref {
+            if let Some(Tok::Ident(v)) = toks.get(i + 3).map(|t| &t.tok) {
+                out.insert(v.clone());
+            }
+        }
+    }
+    out
+}
+
+/// Union of a file's wildcard-manifest entries, with the line of each.
+fn wildcard_manifest(scan: &Scan) -> Vec<(u32, String)> {
+    let mut out = Vec::new();
+    for p in &scan.pragmas {
+        if let Pragma::Wildcard { line, variants } = p {
+            for v in variants {
+                out.push((*line, v.clone()));
+            }
+        }
+    }
+    out
+}
+
+pub fn check(sources: &[SourceFile], scans: &[Scan], out: &mut Vec<Violation>) {
+    let Some(msg_idx) = sources.iter().position(|f| f.path.ends_with(MSG_FILE)) else {
+        return; // fixture inputs without a protocol are fine
+    };
+    let variants = enum_variants(&scans[msg_idx], ENUM_NAME);
+    if variants.is_empty() {
+        out.push(Violation {
+            rule: PROTOCOL,
+            file: sources[msg_idx].path.clone(),
+            line: 0,
+            message: format!("could not locate `enum {ENUM_NAME}`"),
+        });
+        return;
+    }
+    let variant_set: BTreeSet<&str> = variants.iter().map(String::as_str).collect();
+
+    // Size model: the pricing match lives in msg.rs itself, so "priced"
+    // means referenced somewhere in that file beyond the declaration.
+    let priced = referenced_variants(&scans[msg_idx], ENUM_NAME);
+    for v in &variants {
+        if !priced.contains(v) {
+            out.push(Violation {
+                rule: PROTOCOL,
+                file: sources[msg_idx].path.clone(),
+                line: 0,
+                message: format!(
+                    "{ENUM_NAME}::{v} has no arm in the wire-size model \
+                     (default_wire_bytes) — it would ship with zero cost"
+                ),
+            });
+        }
+    }
+
+    for suffix in DISPATCHERS {
+        let Some(idx) = sources.iter().position(|f| f.path.ends_with(suffix)) else {
+            continue;
+        };
+        let file = &sources[idx];
+        let refs = referenced_variants(&scans[idx], ENUM_NAME);
+        let manifest = wildcard_manifest(&scans[idx]);
+        let declared: BTreeSet<&str> = manifest.iter().map(|(_, v)| v.as_str()).collect();
+        for v in &variants {
+            if !refs.contains(v) && !declared.contains(v.as_str()) {
+                out.push(Violation {
+                    rule: PROTOCOL,
+                    file: file.path.clone(),
+                    line: 0,
+                    message: format!(
+                        "{ENUM_NAME}::{v} is neither handled nor declared in a \
+                         wildcard manifest in this dispatcher"
+                    ),
+                });
+            }
+        }
+        for (line, v) in &manifest {
+            if !variant_set.contains(v.as_str()) {
+                out.push(Violation {
+                    rule: PROTOCOL,
+                    file: file.path.clone(),
+                    line: *line,
+                    message: format!("wildcard manifest names unknown variant `{v}`"),
+                });
+            } else if refs.contains(v) {
+                out.push(Violation {
+                    rule: PROTOCOL,
+                    file: file.path.clone(),
+                    line: *line,
+                    message: format!(
+                        "wildcard manifest entry `{v}` is redundant: the \
+                         dispatcher already references it"
+                    ),
+                });
+            }
+        }
+    }
+
+    // Wildcard manifests only mean something in dispatcher files.
+    for (file, scan) in sources.iter().zip(scans) {
+        let is_dispatcher = DISPATCHERS.iter().any(|s| file.path.ends_with(s));
+        if is_dispatcher {
+            continue;
+        }
+        for p in &scan.pragmas {
+            if let Pragma::Wildcard { line, .. } = p {
+                out.push(Violation {
+                    rule: PROTOCOL,
+                    file: file.path.clone(),
+                    line: *line,
+                    message: "wildcard manifest outside a tier dispatcher has no effect"
+                        .to_string(),
+                });
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lint::lexer::scan;
+
+    const MSG: &str = "pub enum OakMsg {\n Ping,\n Pong { seq: u64 },\n #[doc = \"x\"]\n Data(Vec<u8>),\n}\nfn price(m: &OakMsg) -> usize { match m {\n OakMsg::Ping => 1,\n OakMsg::Pong { .. } => 2,\n OakMsg::Data(_) => 3,\n} }";
+
+    fn files(dispatcher_src: &str) -> (Vec<SourceFile>, Vec<Scan>) {
+        let sources = vec![
+            SourceFile {
+                path: "rust/src/sim/msg.rs".into(),
+                text: MSG.into(),
+            },
+            SourceFile {
+                path: "rust/src/coordinator/root.rs".into(),
+                text: dispatcher_src.into(),
+            },
+        ];
+        let scans = sources.iter().map(|f| scan(&f.text)).collect();
+        (sources, scans)
+    }
+
+    #[test]
+    fn variant_extraction_handles_payloads_and_attrs() {
+        let s = scan(MSG);
+        assert_eq!(enum_variants(&s, "OakMsg"), vec!["Ping", "Pong", "Data"]);
+        assert!(enum_variants(&s, "Missing").is_empty());
+    }
+
+    #[test]
+    fn fully_covered_dispatcher_is_clean() {
+        let (sources, scans) =
+            files("match m { OakMsg::Ping => {}, OakMsg::Pong { .. } => {}, OakMsg::Data(_) => {} }");
+        let mut v = Vec::new();
+        check(&sources, &scans, &mut v);
+        assert!(v.is_empty(), "{v:?}");
+    }
+
+    #[test]
+    fn missing_variant_is_flagged() {
+        let (sources, scans) = files("match m { OakMsg::Ping => {}, _ => {} }");
+        let mut v = Vec::new();
+        check(&sources, &scans, &mut v);
+        assert_eq!(v.len(), 2, "{v:?}"); // Pong and Data uncovered
+        assert!(v.iter().all(|x| x.rule == PROTOCOL));
+    }
+
+    #[test]
+    fn wildcard_manifest_covers_and_validates() {
+        let (sources, scans) = files(
+            "// lint: wildcard(OakMsg: Pong, Data)\nmatch m { OakMsg::Ping => {}, _ => {} }",
+        );
+        let mut v = Vec::new();
+        check(&sources, &scans, &mut v);
+        assert!(v.is_empty(), "{v:?}");
+
+        // Stale entry: names a variant that does not exist.
+        let (sources, scans) = files(
+            "// lint: wildcard(OakMsg: Pong, Data, Gone)\nmatch m { OakMsg::Ping => {}, _ => {} }",
+        );
+        let mut v = Vec::new();
+        check(&sources, &scans, &mut v);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert!(v[0].message.contains("Gone"));
+
+        // Redundant entry: also matched above the wildcard.
+        let (sources, scans) = files(
+            "// lint: wildcard(OakMsg: Ping, Pong, Data)\nmatch m { OakMsg::Ping => {}, _ => {} }",
+        );
+        let mut v = Vec::new();
+        check(&sources, &scans, &mut v);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert!(v[0].message.contains("redundant"));
+    }
+
+    #[test]
+    fn unpriced_variant_is_flagged() {
+        let sources = vec![SourceFile {
+            path: "rust/src/sim/msg.rs".into(),
+            text: "pub enum OakMsg { Ping, Pong }\nfn price(m: &OakMsg) -> usize { match m { OakMsg::Ping => 1, _ => 0 } }".into(),
+        }];
+        let scans: Vec<Scan> = sources.iter().map(|f| scan(&f.text)).collect();
+        let mut v = Vec::new();
+        check(&sources, &scans, &mut v);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert!(v[0].message.contains("Pong"));
+    }
+}

@@ -1,0 +1,198 @@
+//! Per-file token rules: hash-order (D1), float-order (D2),
+//! ambient-time (D3) and pragma hygiene.
+
+use super::lexer::{Pragma, Scan, Tok};
+use super::{SourceFile, Violation};
+
+pub const HASH_ORDER: &str = "hash-order";
+pub const FLOAT_ORDER: &str = "float-order";
+pub const AMBIENT_TIME: &str = "ambient-time";
+pub const PRAGMA: &str = "pragma";
+
+/// One `allow` pragma with its coverage window and use tracking.
+struct AllowSlot {
+    rule: String,
+    pragma_line: u32,
+    covered: [Option<u32>; 2],
+    used: bool,
+}
+
+pub struct FileRules<'a> {
+    file: &'a SourceFile,
+    allows: Vec<AllowSlot>,
+}
+
+impl<'a> FileRules<'a> {
+    pub fn new(file: &'a SourceFile, scan: &Scan) -> Self {
+        let allows = scan
+            .pragmas
+            .iter()
+            .filter_map(|p| match p {
+                Pragma::Allow { line, rule, .. } => Some(AllowSlot {
+                    rule: rule.clone(),
+                    pragma_line: *line,
+                    covered: [Some(*line), scan.next_code_line(*line)],
+                    used: false,
+                }),
+                _ => None,
+            })
+            .collect();
+        FileRules { file, allows }
+    }
+
+    /// Record a violation at `line` unless an allow pragma covers it.
+    fn flag(&mut self, out: &mut Vec<Violation>, rule: &'static str, line: u32, message: String) {
+        for slot in &mut self.allows {
+            if slot.rule == rule && slot.covered.contains(&Some(line)) {
+                slot.used = true;
+                return;
+            }
+        }
+        out.push(Violation {
+            rule,
+            file: self.file.path.clone(),
+            line,
+            message,
+        });
+    }
+
+    pub fn run(mut self, scan: &Scan, out: &mut Vec<Violation>) {
+        for (i, t) in scan.tokens.iter().enumerate() {
+            if scan.in_test[i] {
+                continue;
+            }
+            let Tok::Ident(name) = &t.tok else { continue };
+            let line = t.line;
+            match name.as_str() {
+                "HashMap" | "HashSet" if self.file.control_plane() => {
+                    self.flag(
+                        out,
+                        HASH_ORDER,
+                        line,
+                        format!(
+                            "{name} in a control-plane module; use BTreeMap/BTreeSet \
+                             or justify with an allow pragma"
+                        ),
+                    );
+                }
+                "partial_cmp" if !prev_ident_is(scan, i, "fn") => {
+                    self.flag(
+                        out,
+                        FLOAT_ORDER,
+                        line,
+                        "partial_cmp-based ordering; use f64::total_cmp \
+                         (NaN-safe, total)"
+                            .to_string(),
+                    );
+                }
+                "Instant" | "SystemTime" | "thread_rng" | "ThreadRng" => {
+                    self.flag(
+                        out,
+                        AMBIENT_TIME,
+                        line,
+                        format!(
+                            "{name} is ambient nondeterminism; use the sim clock \
+                             or util::Rng"
+                        ),
+                    );
+                }
+                _ => {}
+            }
+        }
+
+        for p in &scan.pragmas {
+            if let Pragma::Malformed { line, text } = p {
+                out.push(Violation {
+                    rule: PRAGMA,
+                    file: self.file.path.clone(),
+                    line: *line,
+                    message: format!("unparseable lint pragma: `{text}`"),
+                });
+            }
+        }
+        for slot in &self.allows {
+            if !slot.used {
+                out.push(Violation {
+                    rule: PRAGMA,
+                    file: self.file.path.clone(),
+                    line: slot.pragma_line,
+                    message: format!(
+                        "allow({}) pragma suppresses nothing; delete it",
+                        slot.rule
+                    ),
+                });
+            }
+        }
+    }
+}
+
+/// Is the nearest preceding token the identifier `name`?
+fn prev_ident_is(scan: &Scan, i: usize, name: &str) -> bool {
+    i > 0 && matches!(&scan.tokens[i - 1].tok, Tok::Ident(id) if id == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lint::lexer::scan;
+
+    fn check(path: &str, src: &str) -> Vec<Violation> {
+        let file = SourceFile {
+            path: path.to_string(),
+            text: src.to_string(),
+        };
+        let s = scan(&file.text);
+        let mut out = Vec::new();
+        FileRules::new(&file, &s).run(&s, &mut out);
+        out
+    }
+
+    #[test]
+    fn hash_order_only_in_control_plane() {
+        let src = "use std::collections::HashMap;";
+        assert_eq!(check("rust/src/sim/foo.rs", src).len(), 1);
+        assert_eq!(check("rust/src/coordinator/root.rs", src).len(), 1);
+        assert!(check("rust/src/workload.rs", src).is_empty());
+    }
+
+    #[test]
+    fn allow_pragma_suppresses_and_counts_as_used() {
+        let src = "// lint: allow(hash-order, lookup only)\nuse std::collections::HashMap;";
+        assert!(check("rust/src/sim/foo.rs", src).is_empty());
+    }
+
+    #[test]
+    fn unused_allow_is_flagged() {
+        let v = check("rust/src/sim/foo.rs", "// lint: allow(hash-order, stale)\nlet x = 1;");
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].rule, PRAGMA);
+    }
+
+    #[test]
+    fn float_order_skips_trait_impls() {
+        let src = "fn partial_cmp(&self, o: &Self) -> Option<Ordering> { Some(self.cmp(o)) }";
+        assert!(check("rust/src/any.rs", src).is_empty());
+        let v = check("rust/src/any.rs", "xs.sort_by(|a, b| a.partial_cmp(b).unwrap());");
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].rule, FLOAT_ORDER);
+    }
+
+    #[test]
+    fn ambient_time_applies_crate_wide() {
+        let v = check("rust/src/workload.rs", "let t = std::time::Instant::now();");
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].rule, AMBIENT_TIME);
+    }
+
+    #[test]
+    fn test_mods_are_exempt() {
+        let src = "#[cfg(test)]\nmod tests {\n use std::collections::HashMap;\n}";
+        assert!(check("rust/src/sim/foo.rs", src).is_empty());
+    }
+
+    #[test]
+    fn strings_and_comments_never_fire() {
+        let src = "// HashMap Instant partial_cmp\nlet s = \"HashMap Instant\";";
+        assert!(check("rust/src/sim/foo.rs", src).is_empty());
+    }
+}

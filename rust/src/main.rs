@@ -12,6 +12,7 @@
 //! oakestra bench <fig|all>                regenerate a paper figure table
 //! oakestra churn [--scenario all]         churn storm → BENCH_churn.json
 //! oakestra ldp --workers N                one PJRT-accelerated LDP solve
+//! oakestra lint [--strict] [--json]       determinism/protocol static analysis
 //! oakestra check-artifacts                verify AOT artifacts load + run
 //! oakestra init-config [path]             write an example config
 //! ```
@@ -19,6 +20,11 @@
 //! The lifecycle subcommands drive the typed northbound API v1
 //! ([`oakestra::api`]) against a simulated testbed — the same code path
 //! the integration tests and benches use.
+
+// Same clippy triage as lib.rs (this file is its own crate root).
+#![allow(clippy::too_many_arguments)]
+#![allow(clippy::collapsible_if)]
+#![allow(clippy::collapsible_else_if)]
 
 use anyhow::{anyhow, Result};
 use oakestra::api::ApiResponse;
@@ -57,6 +63,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         Some("bench") => cmd_bench(args),
         Some("churn") => cmd_churn(args),
         Some("ldp") => cmd_ldp(args),
+        Some("lint") => cmd_lint(args),
         Some("check-artifacts") => cmd_check_artifacts(),
         Some("init-config") => {
             let path = args.get(1).map(String::as_str).unwrap_or("oakestra.json");
@@ -101,6 +108,13 @@ fn print_help() {
                                               undrained messages or a census mismatch\n\
              --out PATH                       artifact path (default BENCH_churn.json)\n\
            oakestra ldp [--workers N]         PJRT-accelerated LDP placement demo\n\
+           oakestra lint [opts]               token-level determinism/protocol analyzer\n\
+             --strict                         exit non-zero if any rule exceeds the\n\
+                                              LINT_BASELINE.json ratchet\n\
+             --json                           machine-readable report on stdout\n\
+             --update-baseline                rewrite LINT_BASELINE.json to current counts\n\
+             --repo PATH                      repo root (default: nearest ancestor with\n\
+                                              rust/src/lib.rs)\n\
            oakestra check-artifacts           verify the AOT artifact bundle\n\
            oakestra init-config [path]        write an example config\n\
          \n\
@@ -485,6 +499,77 @@ fn cmd_ldp(args: &[String]) -> Result<()> {
         .unwrap_or(500);
     let t = bh::fig8b_schedulers_scale(&[n], 3);
     println!("{t}");
+    Ok(())
+}
+
+fn cmd_lint(args: &[String]) -> Result<()> {
+    use oakestra::lint::{self, baseline};
+
+    let strict = args.iter().any(|a| a == "--strict");
+    let json = args.iter().any(|a| a == "--json");
+    let update = args.iter().any(|a| a == "--update-baseline");
+
+    let root = match flag_value(args, "--repo") {
+        Some(p) => std::path::PathBuf::from(p),
+        None => {
+            let cwd = std::env::current_dir()?;
+            lint::find_repo_root(&cwd).ok_or_else(|| {
+                anyhow!(
+                    "no repo root (rust/src/lib.rs) above {}; pass --repo PATH",
+                    cwd.display()
+                )
+            })?
+        }
+    };
+    let input = lint::gather(&root).map_err(|e| anyhow!(e))?;
+    let report = lint::analyze(&input);
+
+    let baseline_path = root.join("LINT_BASELINE.json");
+    let base = baseline::Baseline::load(&baseline_path).map_err(|e| anyhow!(e))?;
+    let rows = baseline::ratchet(&report.counts, &base);
+
+    if update {
+        let b = baseline::Baseline {
+            rules: report.counts.clone(),
+        };
+        std::fs::write(&baseline_path, b.to_json())?;
+        println!("wrote {}", baseline_path.display());
+        return Ok(());
+    }
+
+    if json {
+        print!("{}", lint::report_json(&report, &rows));
+    } else {
+        for v in &report.violations {
+            println!("{}:{}: [{}] {}", v.file, v.line, v.rule, v.message);
+        }
+        println!(
+            "lint: {} file(s), {} violation(s)",
+            report.files_scanned,
+            report.violations.len()
+        );
+        for r in &rows {
+            let status = if r.regressed() {
+                "REGRESSED"
+            } else if r.slack() {
+                "slack (tighten baseline)"
+            } else {
+                "ok"
+            };
+            println!("  {:<18} {:>3} / baseline {:>3}  {status}", r.rule, r.count, r.baseline);
+        }
+    }
+
+    let regressed: Vec<&baseline::RatchetRow> =
+        rows.iter().filter(|r| r.regressed()).collect();
+    if strict && !regressed.is_empty() {
+        let names: Vec<&str> = regressed.iter().map(|r| r.rule.as_str()).collect();
+        return Err(anyhow!(
+            "lint --strict: {} rule(s) exceed the baseline ratchet: {}",
+            regressed.len(),
+            names.join(", ")
+        ));
+    }
     Ok(())
 }
 

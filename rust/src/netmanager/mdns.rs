@@ -2,7 +2,7 @@
 //! `name.policy` names (e.g. `serviceB.closest`) instead of raw IPs; the
 //! worker-local resolver maps names to semantic ServiceIPs.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use crate::util::TaskId;
 
@@ -11,7 +11,7 @@ use super::ServiceIp;
 /// Worker-local name resolver.
 #[derive(Clone, Debug, Default)]
 pub struct Mdns {
-    names: HashMap<String, TaskId>,
+    names: BTreeMap<String, TaskId>,
 }
 
 impl Mdns {

@@ -2,7 +2,7 @@
 //! subnetwork during the registration handshake (paper §6 Networking) and
 //! maps each deployed instance to a logical address inside it.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use crate::util::{InstanceId, NodeId};
 
@@ -11,9 +11,9 @@ use crate::util::{InstanceId, NodeId};
 #[derive(Clone, Debug, Default)]
 pub struct SubnetAllocator {
     next: u32,
-    by_node: HashMap<NodeId, u32>,
+    by_node: BTreeMap<NodeId, u32>,
     /// next host index within each subnet
-    host_next: HashMap<u32, u32>,
+    host_next: BTreeMap<u32, u32>,
     freed: Vec<u32>,
 }
 

@@ -4,7 +4,7 @@
 //! resolution, and are invalidated/refreshed by push updates from the
 //! orchestrator on migrations, scaling and undeployment.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use crate::util::TaskId;
 
@@ -20,9 +20,9 @@ pub struct TableEntry {
 /// The conversion table held by each worker's NetManager.
 #[derive(Clone, Debug, Default)]
 pub struct ConversionTable {
-    entries: HashMap<TaskId, Vec<InstanceLocation>>,
+    entries: BTreeMap<TaskId, Vec<InstanceLocation>>,
     /// Round-robin cursors per task.
-    rr_cursor: HashMap<TaskId, usize>,
+    rr_cursor: BTreeMap<TaskId, usize>,
     /// Resolution misses observed (each triggers a ResolveIp round-trip).
     pub misses: u64,
     /// Push updates applied (one per table row replaced).

@@ -369,7 +369,7 @@ impl LdpAccel {
             .zip(mask.iter())
             .enumerate()
             .filter(|(_, (_, m))| **m)
-            .max_by(|a, b| a.1 .0.partial_cmp(b.1 .0).unwrap())
+            .max_by(|a, b| a.1 .0.total_cmp(b.1 .0))
             .map(|(i, _)| i))
     }
 }

@@ -8,7 +8,7 @@
 //! 8-15). The PJRT-accelerated batch variant of the same math lives in
 //! [`crate::runtime::LdpAccel`]; both must agree (cross-checked in tests).
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use super::{Placement, PlacementInput, TaskScheduler};
 use crate::geo::GeoPoint;
@@ -27,7 +27,7 @@ pub type PingFn<'a> = dyn FnMut(NodeId, &S2uConstraint) -> f64 + 'a;
 /// orchestrator's service manager.
 #[derive(Clone, Debug, Default)]
 pub struct LdpContext {
-    targets: HashMap<TaskId, Vec<(GeoPoint, Coord)>>,
+    targets: BTreeMap<TaskId, Vec<(GeoPoint, Coord)>>,
 }
 
 impl LdpContext {

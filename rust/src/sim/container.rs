@@ -6,7 +6,7 @@
 //! image cache (first pull pays bytes/bandwidth, repeats are free) plus a
 //! lognormal-ish start latency.
 
-use std::collections::HashSet;
+use std::collections::BTreeSet;
 
 use crate::util::{NodeId, Rng, SimTime};
 
@@ -14,7 +14,7 @@ use crate::util::{NodeId, Rng, SimTime};
 #[derive(Clone, Debug, Default)]
 pub struct ContainerRuntime {
     /// (node, image-id) pairs already present locally.
-    cache: HashSet<(NodeId, u64)>,
+    cache: BTreeSet<(NodeId, u64)>,
     /// Registry bandwidth for image pulls, Mbit/s.
     pub registry_mbps: f64,
 }

@@ -20,7 +20,7 @@ pub use network::{LinkProfile, Network, Transport};
 
 use std::any::Any;
 use std::cmp::Reverse;
-use std::collections::{BinaryHeap, HashMap, HashSet};
+use std::collections::BinaryHeap;
 
 use crate::metrics::Metrics;
 use crate::model::NodeClass;
@@ -83,12 +83,13 @@ pub struct SimCore {
     pub net: Network,
     pub rng: Rng,
     pub metrics: Metrics,
-    nodes: HashMap<NodeId, SimNode>,
+    /// Node table indexed by dense `NodeId` (same keying discipline as
+    /// `metrics.node_usage`); `None` slots are never-registered ids.
+    nodes: Vec<Option<SimNode>>,
     actor_node: Vec<NodeId>,
-    /// Nodes currently failed (messages to/from them are dropped). A set,
-    /// not a `NodeId → bool` map: membership is the only question asked,
-    /// and `send` asks it twice per message.
-    failed: HashSet<NodeId>,
+    /// `failed[node]` — `send` asks this twice per message, so it's a
+    /// dense bitmap rather than a set; ids beyond the end are healthy.
+    failed: Vec<bool>,
     pub containers: ContainerRuntime,
 }
 
@@ -112,19 +113,25 @@ impl SimCore {
     }
 
     pub fn node_class(&self, node: NodeId) -> NodeClass {
-        self.nodes[&node].class
+        self.nodes[node.0 as usize]
+            .as_ref()
+            .unwrap_or_else(|| panic!("unknown node {node}"))
+            .class
     }
 
     pub fn is_failed(&self, node: NodeId) -> bool {
-        self.failed.contains(&node)
+        self.failed.get(node.0 as usize).copied().unwrap_or(false)
     }
 
     pub fn set_failed(&mut self, node: NodeId, failed: bool) {
-        if failed {
-            self.failed.insert(node);
-        } else {
-            self.failed.remove(&node);
+        let i = node.0 as usize;
+        if i >= self.failed.len() {
+            if !failed {
+                return; // clearing a node that was never failed
+            }
+            self.failed.resize(i + 1, false);
         }
+        self.failed[i] = failed;
     }
 }
 
@@ -261,22 +268,29 @@ impl Sim {
                 net: Network::default(),
                 rng: Rng::seeded(seed),
                 metrics: Metrics::default(),
-                nodes: HashMap::new(),
+                nodes: Vec::new(),
                 actor_node: Vec::new(),
-                failed: HashSet::new(),
+                failed: Vec::new(),
                 containers: ContainerRuntime::default(),
             },
         }
     }
 
     pub fn add_node(&mut self, node: NodeId, class: NodeClass) {
-        let prev = self.core.nodes.insert(node, SimNode { class });
+        let i = node.0 as usize;
+        if i >= self.core.nodes.len() {
+            self.core.nodes.resize_with(i + 1, || None);
+        }
+        let prev = self.core.nodes[i].replace(SimNode { class });
         assert!(prev.is_none(), "node {node} registered twice");
     }
 
     pub fn add_actor(&mut self, node: NodeId, actor: Box<dyn Actor>) -> ActorId {
         assert!(
-            self.core.nodes.contains_key(&node),
+            self.core
+                .nodes
+                .get(node.0 as usize)
+                .map_or(false, |n| n.is_some()),
             "actor on unknown node {node}"
         );
         let id = ActorId(self.actors.len() as u32);

@@ -217,10 +217,6 @@ pub enum OakMsg {
     },
 
     // -- failure handling ---------------------------------------------------
-    /// Health sweep found a dead worker: all its instances failed.
-    WorkerDead {
-        node: NodeId,
-    },
     /// Cluster tells root it cannot host an instance anymore (reschedule
     /// up the hierarchy, §4.2).
     EscalateReschedule {
@@ -377,7 +373,6 @@ impl SimMsg {
                 OakMsg::InstanceReplacedAck { .. } => 64,
                 OakMsg::ResolveIp { .. } | OakMsg::ResolveIpUp { .. } => 96,
                 OakMsg::TableUpdate { entries } => 48 + 48 * entries.len(),
-                OakMsg::WorkerDead { .. } => 64,
                 OakMsg::EscalateReschedule { .. } => 640,
             },
             SimMsg::Kube(m) => match m {

@@ -3,6 +3,7 @@
 //! Fig. 5). Reliable transports absorb loss as retransmission delay
 //! (TCP-like RTO); unreliable transports drop.
 
+// lint: allow(hash-order, link overrides are lookup-only; never iterated)
 use std::collections::HashMap;
 
 use crate::util::{NodeId, Rng, SimTime};
@@ -74,6 +75,7 @@ pub enum Transport {
 #[derive(Clone, Debug)]
 pub struct Network {
     default: LinkProfile,
+    // lint: allow(hash-order, keyed point lookups on the per-message hot path; order never observed)
     overrides: HashMap<(NodeId, NodeId), LinkProfile>,
     /// Global impairment applied to every link (tc on the shared segment).
     impair_delay_ms: f64,
@@ -84,6 +86,7 @@ impl Default for Network {
     fn default() -> Self {
         Network {
             default: LinkProfile::lan(),
+            // lint: allow(hash-order, construction only; see field comment)
             overrides: HashMap::new(),
             impair_delay_ms: 0.0,
             impair_loss: 0.0,

@@ -194,6 +194,7 @@ pub fn video_stage_costs_real() -> anyhow::Result<VideoStageCosts> {
     let frames: Vec<f32> = (0..64 * 64 * 3).map(|i| (i % 251) as f32 / 251.0).collect();
     // Warm up (compile) then time a few executions.
     det.detect(&frames, 1)?;
+    // lint: allow(ambient-time, times real PJRT detector execution on the host)
     let t0 = std::time::Instant::now();
     const REPS: usize = 20;
     for _ in 0..REPS {

@@ -1,0 +1,163 @@
+//! Integration tests for `oakestra::lint`: end-to-end fixture runs of the
+//! analyzer plus the meta-test that the linter runs clean — zero strict
+//! violations and no ratchet regression — on this repo's own sources.
+
+use std::path::Path;
+
+use oakestra::lint::baseline::{ratchet, Baseline};
+use oakestra::lint::{
+    analyze, find_repo_root, gather, report_json, LintInput, SourceFile, ALL_RULES,
+    AMBIENT_TIME, FLOAT_ORDER, HASH_ORDER, METRICS_KEYS, PRAGMA, PROTOCOL,
+};
+
+fn src(path: &str, text: &str) -> SourceFile {
+    SourceFile {
+        path: path.to_string(),
+        text: text.to_string(),
+    }
+}
+
+#[test]
+fn fixture_all_rules_fire_and_report() {
+    // One input exercising every rule family at once.
+    let input = LintInput {
+        sources: vec![
+            src(
+                "rust/src/sim/msg.rs",
+                "pub enum OakMsg { Ping, Pong }\n\
+                 pub fn price(m: &OakMsg) -> usize { match m { OakMsg::Ping => 8, _ => 0 } }\n",
+            ),
+            src(
+                "rust/src/coordinator/root.rs",
+                "use std::collections::HashMap;\n\
+                 fn dispatch(m: &OakMsg) { match m { OakMsg::Ping => {}, _ => {} } }\n\
+                 fn worst(xs: &mut [f64]) { xs.sort_by(|a, b| a.partial_cmp(b).unwrap()); }\n\
+                 fn stamp() { let _ = std::time::Instant::now(); }\n",
+            ),
+            src("rust/src/geo.rs", "fn live(m: &mut M) { m.inc(\"root.live_key\"); }\n"),
+        ],
+        docs: vec![src("README.md", "metrics: root.live_key and root.not_a_key here\n")],
+    };
+    let report = analyze(&input);
+    // hash-order: HashMap in a control-plane file.
+    assert_eq!(report.counts[HASH_ORDER], 1, "{:?}", report.violations);
+    // float-order: partial_cmp comparator.
+    assert_eq!(report.counts[FLOAT_ORDER], 1);
+    // ambient-time: Instant.
+    assert_eq!(report.counts[AMBIENT_TIME], 1);
+    // protocol-coverage: Pong unpriced in msg.rs + Pong unhandled in root.rs
+    // (the other two dispatchers are absent from the fixture, so no charge).
+    assert_eq!(report.counts[PROTOCOL], 2);
+    // metrics-keys: root.not_a_key shares the `root` namespace but no
+    // source literal defines it; root.live_key is clean.
+    assert_eq!(report.counts[METRICS_KEYS], 1);
+    assert_eq!(report.counts[PRAGMA], 0);
+
+    // Violations are sorted and the JSON report round-trips.
+    let sorted = report
+        .violations
+        .windows(2)
+        .all(|w| (&w[0].file, w[0].line) <= (&w[1].file, w[1].line));
+    assert!(sorted);
+    let rows = ratchet(&report.counts, &Baseline::zeros());
+    let json = report_json(&report, &rows);
+    let v = oakestra::json::parse(&json).expect("report JSON parses");
+    assert_eq!(
+        v.get("violations").as_array().map(|a| a.len()),
+        Some(report.violations.len())
+    );
+    assert_eq!(v.get("regressed").as_bool(), Some(true));
+}
+
+#[test]
+fn fixture_pragmas_suppress_and_ratchet_clears() {
+    let input = LintInput {
+        sources: vec![src(
+            "rust/src/sim/cache.rs",
+            "// lint: allow(hash-order, lookup-only table; iteration order never escapes)\n\
+             use std::collections::HashMap;\n\
+             pub struct C { m: HashMap<u32, u32> }\n",
+        )],
+        docs: vec![],
+    };
+    let report = analyze(&input);
+    // The pragma covers its own line and the next code line — the `use` —
+    // but NOT the struct field two code lines below.
+    assert_eq!(report.counts[HASH_ORDER], 1, "{:?}", report.violations);
+    assert_eq!(report.counts[PRAGMA], 0);
+
+    let rows = ratchet(&report.counts, &Baseline::zeros());
+    assert!(rows.iter().any(|r| r.regressed()));
+
+    // A baseline admitting the finding makes the run green; shrinking the
+    // count back below it shows as slack, never a regression.
+    let base = Baseline::parse("{\"rules\": {\"hash-order\": 1}}").unwrap();
+    let rows = ratchet(&report.counts, &base);
+    assert!(rows.iter().all(|r| !r.regressed()));
+    let clean = analyze(&LintInput::default());
+    let rows = ratchet(&clean.counts, &base);
+    assert!(rows.iter().all(|r| !r.regressed()));
+    assert!(rows.iter().any(|r| r.slack()));
+}
+
+#[test]
+fn fixture_unused_allow_and_malformed_pragma_are_violations() {
+    let input = LintInput {
+        sources: vec![src(
+            "rust/src/netmanager/x.rs",
+            "// lint: allow(hash-order, stale justification)\n\
+             fn f() {}\n\
+             // lint: allom(hash-order, typo in verb)\n\
+             fn g() {}\n",
+        )],
+        docs: vec![],
+    };
+    let report = analyze(&input);
+    assert_eq!(report.counts[PRAGMA], 2, "{:?}", report.violations);
+}
+
+#[test]
+fn baseline_file_matches_tool_output_format() {
+    let b = Baseline::zeros();
+    let reparsed = Baseline::parse(&b.to_json()).unwrap();
+    assert_eq!(reparsed, b);
+    assert_eq!(b.rules.len(), ALL_RULES.len());
+}
+
+/// Meta-test: the linter runs clean on the repository's own tree. This is
+/// the same invariant CI's `oakestra lint --strict` step gates on.
+#[test]
+fn repo_sources_lint_clean_against_committed_baseline() {
+    let manifest = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let root = find_repo_root(manifest).expect("repo root above rust/");
+    let input = gather(&root).expect("gather repo sources");
+    assert!(
+        input.sources.iter().any(|f| f.path.ends_with("sim/msg.rs")),
+        "protocol file must be part of the scan"
+    );
+    assert!(
+        input.docs.iter().any(|d| d.path == "README.md"),
+        "README must be part of the metrics-key scan"
+    );
+    let report = analyze(&input);
+    assert!(
+        report.violations.is_empty(),
+        "repo must lint clean, found:\n{}",
+        report
+            .violations
+            .iter()
+            .map(|v| format!("  {}:{}: [{}] {}", v.file, v.line, v.rule, v.message))
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+    let base = Baseline::load(&root.join("LINT_BASELINE.json")).expect("baseline parses");
+    let rows = ratchet(&report.counts, &base);
+    assert!(
+        rows.iter().all(|r| !r.regressed()),
+        "ratchet regression: {:?}",
+        rows.iter()
+            .filter(|r| r.regressed())
+            .map(|r| (&r.rule, r.count, r.baseline))
+            .collect::<Vec<_>>()
+    );
+}
