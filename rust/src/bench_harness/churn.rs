@@ -396,6 +396,7 @@ impl ChurnDriver {
     fn call(&mut self, ctx: &mut Ctx<'_>, request: ApiRequest) -> u64 {
         let env = self.client.envelope(request, ctx.self_id);
         let id = env.request_id;
+        // lint: route(root, northbound call addressed to the root orchestrator)
         ctx.send_local(self.root, SimMsg::Oak(OakMsg::ApiCall(Box::new(env))));
         id
     }

@@ -226,6 +226,7 @@ impl OakTestbed {
             .envelope(request, client);
         let id = env.request_id;
         self.sim
+            // lint: route(root, northbound call addressed to the root orchestrator)
             .inject(at, self.root, SimMsg::Oak(OakMsg::ApiCall(Box::new(env))));
         id
     }
@@ -242,6 +243,7 @@ impl OakTestbed {
         let ids: Vec<u64> = envs.iter().map(|e| e.request_id).collect();
         for env in envs {
             self.sim
+                // lint: route(root, northbound call addressed to the root orchestrator)
                 .inject(at, self.root, SimMsg::Oak(OakMsg::ApiCall(Box::new(env))));
         }
         ids

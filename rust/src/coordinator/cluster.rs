@@ -1027,7 +1027,7 @@ impl Actor for ClusterOrchestrator {
                             .worker_actors
                             .get(&node)
                             .copied()
-                            .filter(|_| !ctx.core.is_failed(node));
+                            .filter(|_| !ctx.is_failed(node));
                         match reachable {
                             Some(a) => {
                                 let msg =
@@ -1123,7 +1123,7 @@ impl Actor for ClusterOrchestrator {
                         .worker_actors
                         .get(&node)
                         .copied()
-                        .filter(|_| !ctx.core.is_failed(node));
+                        .filter(|_| !ctx.is_failed(node));
                     match reachable {
                         Some(a) => {
                             let msg =

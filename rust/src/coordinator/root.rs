@@ -277,6 +277,7 @@ impl RootOrchestrator {
         response: ApiResponse,
     ) {
         if let Some(dst) = reply_to {
+            // lint: route(client, API reply goes back to the northbound caller)
             ctx.send_local(
                 dst,
                 SimMsg::Oak(OakMsg::ApiReturn {
@@ -698,6 +699,7 @@ impl RootOrchestrator {
             let elapsed = ctx.now.saturating_sub(submitted);
             ctx.metrics().observe("root.deploy_time_ms", elapsed.as_millis());
             if let Some(dst) = tr.reply_to {
+                // lint: route(client, deployment event goes back to the submitter)
                 ctx.send_local(
                     dst,
                     SimMsg::Oak(OakMsg::ServiceDeployed { service, elapsed }),

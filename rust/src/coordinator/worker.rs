@@ -197,7 +197,7 @@ impl WorkerEngine {
             self.vivaldi.observe(state, rtt);
         }
         // Also spring against the orchestrator (always reachable).
-        let orch_node = ctx.core.node_of(self.orchestrator);
+        let orch_node = ctx.node_of(self.orchestrator);
         let rtt = ctx.rtt_ms(me, orch_node);
         self.vivaldi.observe(&VivaldiState::default(), rtt);
     }
@@ -368,18 +368,8 @@ impl Actor for WorkerEngine {
                     .register(&format!("task-{}-{}", task.service.0, task.index), task);
                 // Container runtime: image pull + start latency.
                 let me = self.cfg.spec.node;
-                let pull = ctx
-                    .core
-                    .containers
-                    .pull_time(me, 0x1000 + task.service.0 as u64, image_mb);
-                let start = {
-                    let rng = &mut ctx.core.rng;
-                    ctx.core.containers.start_latency(rng)
-                };
-                let speed = ctx.core.node_class(me).speed_factor();
-                let total = SimTime::from_micros(
-                    ((pull + start).as_micros() as f64 / speed) as u64,
-                );
+                let total =
+                    ctx.container_deploy_time(me, 0x1000 + task.service.0 as u64, image_mb);
                 ctx.schedule(
                     total,
                     SimMsg::Timer(TimerKind::Custom(1_000_000 + instance.0 as u32)),

@@ -1,0 +1,760 @@
+//! Protocol flow-graph analysis: who sends which `OakMsg` variant to
+//! which tier, and which dispatcher arm handles it.
+//!
+//! Send sites are every `send` / `send_unreliable` / `send_local` /
+//! `schedule` / `schedule_for` / `inject` call whose message resolves to
+//! an `OakMsg` variant (inline `SimMsg::Oak(OakMsg::V …)` or through the
+//! nearest `let msg = …` binding). The destination tier comes from the
+//! wire label (`labels::CLUSTER_TO_ROOT` ⇒ root), from a self-addressed
+//! `send_local(ctx.self_id, …)` / `schedule`, or — for dynamic
+//! addressees — from a `route(tier, why)` pragma comment.
+//!
+//! Dispatcher arms are the `OakMsg::V … =>` match arms of the three
+//! coordinator files. The graph closes when every (variant, dest-tier)
+//! edge lands on a real arm (`flow-handled`), every arm has at least one
+//! sender (`flow-dead-arm`), and every declared request/reply pair sends
+//! its reply somewhere in the handler's call closure (`reply-pairing`,
+//! deferrable with a `defer(Reply, why)` pragma comment inside the arm).
+
+use std::collections::BTreeMap;
+
+use super::lexer::{is_ident, is_punct, skip_attr, Pragma, Scan, Tok};
+use super::rules::{FileAllows, PRAGMA};
+use super::{SourceFile, Violation};
+
+pub const FLOW_HANDLED: &str = "flow-handled";
+pub const FLOW_DEAD_ARM: &str = "flow-dead-arm";
+pub const REPLY_PAIRING: &str = "reply-pairing";
+
+/// Declared request/reply obligations: (request, reply, handling tier).
+/// The tier's handler for the request must send the reply on some path
+/// of its call closure or carry a defer pragma.
+pub const REPLY_PAIRS: &[(&str, &str, &str)] = &[
+    ("ApiCall", "ApiReturn", "root"),
+    ("DelegateTask", "DelegationResult", "cluster"),
+    ("InstanceReplaced", "InstanceReplacedAck", "root"),
+    ("Ping", "Pong", "cluster"),
+    ("RegisterCluster", "RegisterClusterAck", "root"),
+    ("RegisterWorker", "RegisterWorkerAck", "cluster"),
+];
+
+/// Which tier a dispatcher file implements, if any.
+pub fn dispatcher_tier(path: &str) -> Option<&'static str> {
+    if path.ends_with("coordinator/root.rs") {
+        Some("root")
+    } else if path.ends_with("coordinator/cluster.rs") {
+        Some("cluster")
+    } else if path.ends_with("coordinator/worker.rs") {
+        Some("worker")
+    } else {
+        None
+    }
+}
+
+/// Tier a file *sends from*: its dispatcher tier, or `client` for
+/// drivers, benches and the API layer (environment actors).
+fn file_tier(path: &str) -> &'static str {
+    dispatcher_tier(path).unwrap_or("client")
+}
+
+/// Files that are the transport/analysis substrate itself, not protocol
+/// participants: their internal `push`/`send` plumbing is not a flow
+/// edge.
+fn is_transport(path: &str) -> bool {
+    path.contains("/sim/") || path.contains("/lint/")
+}
+
+fn label_dest(label: &str) -> Option<&'static str> {
+    match label {
+        "ROOT_TO_CLUSTER" => Some("cluster"),
+        "CLUSTER_TO_ROOT" => Some("root"),
+        "CLUSTER_TO_WORKER" => Some("worker"),
+        "WORKER_TO_CLUSTER" => Some("cluster"),
+        _ => None,
+    }
+}
+
+/// `(message-arg index, addressee-arg index, label-arg index)` for each
+/// transmit-path method (see `sim::Ctx` / `Sim::inject` signatures).
+fn trigger(name: &str) -> Option<(usize, Option<usize>, Option<usize>)> {
+    match name {
+        "send" | "send_unreliable" => Some((1, Some(0), Some(3))),
+        "send_local" => Some((1, Some(0), None)),
+        "schedule" => Some((1, None, None)),
+        "schedule_for" => Some((2, Some(0), None)),
+        "inject" => Some((2, Some(1), None)),
+        _ => None,
+    }
+}
+
+/// One send of an `OakMsg` variant (or a send the analyzer gave up on:
+/// `variant`/`to` of `None` become `flow-handled` findings).
+#[derive(Clone, Debug)]
+pub struct SendSite {
+    pub file: String,
+    pub line: u32,
+    pub col: u32,
+    pub variant: Option<String>,
+    pub from: &'static str,
+    pub to: Option<String>,
+    /// Token index of the method-name ident (closure membership tests).
+    pub(crate) idx: usize,
+}
+
+/// One `OakMsg::V … =>` dispatcher match arm.
+#[derive(Clone, Debug)]
+pub struct Arm {
+    pub tier: &'static str,
+    pub file: String,
+    pub variant: String,
+    pub line: u32,
+    pub col: u32,
+    /// Token range of the handler body (after `=>`), exclusive end.
+    pub(crate) body: (usize, usize),
+    /// Last source line of the body — the defer-pragma window.
+    pub(crate) end_line: u32,
+    /// OakMsg variants sent anywhere in the arm's call closure (sorted,
+    /// deduped) — the reply certificate.
+    pub replies: Vec<String>,
+}
+
+/// The extracted tier-aware send→handle graph for the whole tree.
+#[derive(Debug, Default)]
+pub struct FlowAnalysis {
+    pub sites: Vec<SendSite>,
+    pub arms: Vec<Arm>,
+    /// tier → variants its dispatcher deliberately leaves to `_`.
+    pub wildcards: BTreeMap<String, Vec<String>>,
+    /// Unused `route(...)` pragmas: (file, line, col, tier).
+    unused_routes: Vec<(String, u32, u32, String)>,
+    /// Defer pragmas per dispatcher tier: (variant, line, col, used).
+    defers: BTreeMap<String, Vec<(String, u32, u32, bool)>>,
+    /// Per-dispatcher-file scan index into the caller's slices, so the
+    /// isolation pass can reuse arm bodies against the right scan.
+    pub(crate) dispatcher_files: Vec<(usize, &'static str)>,
+}
+
+/// A named function's body token range — the unit of the call-closure
+/// walk shared by reply-pairing and the isolation certificate.
+pub(crate) struct FnTable {
+    fns: Vec<(String, (usize, usize))>,
+}
+
+pub(crate) fn fn_table(scan: &Scan) -> FnTable {
+    let toks = &scan.tokens;
+    let mut fns = Vec::new();
+    let mut i = 0;
+    while i < toks.len() {
+        if is_ident(toks, i, "fn") {
+            if let Some(Tok::Ident(name)) = toks.get(i + 1).map(|t| &t.tok) {
+                // First `{` past the signature opens the body (types in
+                // signatures never contain braces).
+                let mut j = i + 2;
+                while j < toks.len() && !is_punct(toks, j, '{') {
+                    // A signature-less decl (trait method `fn f();`)
+                    // has no body.
+                    if is_punct(toks, j, ';') {
+                        break;
+                    }
+                    j += 1;
+                }
+                if is_punct(toks, j, '{') {
+                    let end = skip_balanced(toks, j, '{', '}');
+                    fns.push((name.clone(), (j, end)));
+                }
+            }
+        }
+        i += 1;
+    }
+    FnTable { fns }
+}
+
+/// Token ranges reachable from `body` by following same-file calls
+/// (`self.helper(…)` or bare `helper(…)`) transitively.
+pub(crate) fn closure_ranges(scan: &Scan, table: &FnTable, body: (usize, usize)) -> Vec<(usize, usize)> {
+    let toks = &scan.tokens;
+    let mut ranges = vec![body];
+    let mut seen: Vec<String> = Vec::new();
+    let mut work = vec![body];
+    while let Some((start, end)) = work.pop() {
+        for k in start..end.min(toks.len()) {
+            let Tok::Ident(name) = &toks[k].tok else {
+                continue;
+            };
+            if !is_punct(toks, k + 1, '(') || is_punct(toks, k.wrapping_sub(1), ':') {
+                continue;
+            }
+            if seen.contains(name) {
+                continue;
+            }
+            if let Some((_, range)) = table.fns.iter().find(|(n, _)| n == name) {
+                seen.push(name.clone());
+                ranges.push(*range);
+                work.push(*range);
+            }
+        }
+    }
+    ranges
+}
+
+/// Index just past the token matching the opener at `i`.
+fn skip_balanced(toks: &[super::lexer::Token], i: usize, open: char, close: char) -> usize {
+    let mut depth = 1;
+    let mut j = i + 1;
+    while j < toks.len() && depth > 0 {
+        match &toks[j].tok {
+            Tok::Punct(c) if *c == open => depth += 1,
+            Tok::Punct(c) if *c == close => depth -= 1,
+            _ => {}
+        }
+        j += 1;
+    }
+    j
+}
+
+/// The `_ => …` wildcard arm's anchor token, if the file has one.
+pub(crate) fn wildcard_arm_anchor(scan: &Scan) -> Option<(u32, u32)> {
+    let toks = &scan.tokens;
+    for (i, t) in toks.iter().enumerate() {
+        if scan.in_test[i] {
+            continue;
+        }
+        if matches!(&t.tok, Tok::Ident(n) if n == "_")
+            && is_punct(toks, i + 1, '=')
+            && is_punct(toks, i + 2, '>')
+        {
+            return Some((t.line, t.col));
+        }
+    }
+    None
+}
+
+/// Split the balanced argument list opening at `open_idx` (a `(`) into
+/// top-level comma-separated token ranges. Returns `None` when the list
+/// never closes.
+fn split_args(toks: &[super::lexer::Token], open_idx: usize) -> Option<Vec<(usize, usize)>> {
+    let mut args = Vec::new();
+    let mut depth = 1;
+    let mut start = open_idx + 1;
+    let mut j = open_idx + 1;
+    while j < toks.len() {
+        match &toks[j].tok {
+            Tok::Punct('(') | Tok::Punct('[') | Tok::Punct('{') => depth += 1,
+            Tok::Punct(')') | Tok::Punct(']') | Tok::Punct('}') => {
+                depth -= 1;
+                if depth == 0 {
+                    if j > start {
+                        args.push((start, j));
+                    }
+                    return Some(args);
+                }
+            }
+            Tok::Punct(',') if depth == 1 => {
+                args.push((start, j));
+                start = j + 1;
+            }
+            _ => {}
+        }
+        j += 1;
+    }
+    None
+}
+
+/// What a message-argument token range resolves to.
+enum MsgKind {
+    Oak(String),
+    NonProtocol,
+    Unknown,
+}
+
+fn classify_msg(toks: &[super::lexer::Token], range: (usize, usize)) -> MsgKind {
+    let (start, end) = range;
+    for k in start..end.min(toks.len()) {
+        if is_ident(toks, k, "OakMsg") && is_punct(toks, k + 1, ':') && is_punct(toks, k + 2, ':') {
+            if let Some(Tok::Ident(v)) = toks.get(k + 3).map(|t| &t.tok) {
+                return MsgKind::Oak(v.clone());
+            }
+        }
+        if is_ident(toks, k, "SimMsg") && is_punct(toks, k + 1, ':') && is_punct(toks, k + 2, ':') {
+            match toks.get(k + 3).map(|t| &t.tok) {
+                Some(Tok::Ident(tag)) if tag == "Data" || tag == "Timer" || tag == "Kube" => {
+                    return MsgKind::NonProtocol;
+                }
+                _ => {}
+            }
+        }
+    }
+    MsgKind::Unknown
+}
+
+/// Resolve a single-identifier message argument through its nearest
+/// preceding `let <var> = …;` binding.
+fn resolve_binding(toks: &[super::lexer::Token], var: &str, before: usize) -> MsgKind {
+    for k in (0..before).rev() {
+        let Tok::Ident(name) = &toks[k].tok else {
+            continue;
+        };
+        if name != var || !is_punct(toks, k + 1, '=') || is_punct(toks, k + 2, '=') {
+            continue;
+        }
+        // `var ==`, `var =` as comparison rhs, and `var.method()` are
+        // excluded above / by the '=' requirement; scan the initializer
+        // up to its terminating `;`.
+        let mut end = k + 2;
+        let mut depth = 0i32;
+        while end < toks.len() {
+            match &toks[end].tok {
+                Tok::Punct('(') | Tok::Punct('[') | Tok::Punct('{') => depth += 1,
+                Tok::Punct(')') | Tok::Punct(']') | Tok::Punct('}') => depth -= 1,
+                Tok::Punct(';') if depth <= 0 => break,
+                _ => {}
+            }
+            end += 1;
+        }
+        return classify_msg(toks, (k + 2, end));
+    }
+    MsgKind::Unknown
+}
+
+/// Extract the full flow graph (send sites, arms, reply closures,
+/// wildcard declarations) from the scanned tree. `scans` parallels
+/// `sources`.
+pub fn extract(sources: &[SourceFile], scans: &[Scan]) -> FlowAnalysis {
+    let mut fa = FlowAnalysis::default();
+
+    for (fi, (file, scan)) in sources.iter().zip(scans).enumerate() {
+        if is_transport(&file.path) || !file.path.ends_with(".rs") {
+            continue;
+        }
+        let from = file_tier(&file.path);
+
+        // Route pragmas with their coverage windows.
+        let mut routes: Vec<(Vec<u32>, String, u32, u32, bool)> = scan
+            .pragmas
+            .iter()
+            .filter_map(|p| match p {
+                Pragma::Route {
+                    line, col, tier, ..
+                } => Some((scan.allow_window(*line), tier.clone(), *line, *col, false)),
+                _ => None,
+            })
+            .collect();
+
+        let toks = &scan.tokens;
+        for i in 0..toks.len() {
+            if scan.in_test[i] {
+                continue;
+            }
+            let Tok::Ident(name) = &toks[i].tok else {
+                continue;
+            };
+            let Some((msg_idx, dest_idx, label_idx)) = trigger(name) else {
+                continue;
+            };
+            if !is_punct(toks, i.wrapping_sub(1), '.') || !is_punct(toks, i + 1, '(') {
+                continue;
+            }
+            let Some(args) = split_args(toks, i + 1) else {
+                continue;
+            };
+            let Some(&msg_range) = args.get(msg_idx) else {
+                continue;
+            };
+
+            let kind = match classify_msg(toks, msg_range) {
+                MsgKind::Unknown if msg_range.1 == msg_range.0 + 1 => {
+                    match &toks[msg_range.0].tok {
+                        Tok::Ident(var) => resolve_binding(toks, var, i),
+                        _ => MsgKind::Unknown,
+                    }
+                }
+                k => k,
+            };
+            let variant = match kind {
+                MsgKind::Oak(v) => Some(v),
+                MsgKind::NonProtocol => continue,
+                MsgKind::Unknown => None,
+            };
+
+            // Destination tier: wire label, then self-addressing, then a
+            // route pragma covering the call line.
+            let mut to: Option<String> = None;
+            if let Some(li) = label_idx {
+                if let Some(&(ls, le)) = args.get(li) {
+                    for k in ls..le.min(toks.len()) {
+                        if is_ident(toks, k, "labels") {
+                            if let Some(Tok::Ident(l)) = toks.get(k + 3).map(|t| &t.tok) {
+                                to = label_dest(l).map(str::to_string);
+                            }
+                        }
+                    }
+                }
+            }
+            if to.is_none() {
+                let self_addressed = match dest_idx {
+                    None => true, // `schedule` targets self
+                    Some(di) => args.get(di).is_some_and(|&(ds, de)| {
+                        de == ds + 3
+                            && is_ident(toks, ds, "ctx")
+                            && is_punct(toks, ds + 1, '.')
+                            && is_ident(toks, ds + 2, "self_id")
+                    }),
+                };
+                if self_addressed {
+                    to = Some(from.to_string());
+                }
+            }
+            let line = toks[i].line;
+            if to.is_none() {
+                if let Some(r) = routes
+                    .iter_mut()
+                    .find(|(window, ..)| window.contains(&line))
+                {
+                    to = Some(r.1.clone());
+                    r.4 = true;
+                }
+            }
+
+            fa.sites.push(SendSite {
+                file: file.path.clone(),
+                line,
+                col: toks[i].col,
+                variant,
+                from,
+                to,
+                idx: i,
+            });
+        }
+
+        for (_window, tier, line, col, used) in routes {
+            if !used {
+                fa.unused_routes
+                    .push((file.path.clone(), line, col, tier));
+            }
+        }
+
+        // Dispatcher-only extraction: arms, wildcard manifest, defers.
+        let Some(tier) = dispatcher_tier(&file.path) else {
+            continue;
+        };
+        fa.dispatcher_files.push((fi, tier));
+        let table = fn_table(scan);
+
+        for p in &scan.pragmas {
+            match p {
+                Pragma::Wildcard { variants, .. } => {
+                    let slot = fa.wildcards.entry(tier.to_string()).or_default();
+                    for v in variants {
+                        if !slot.contains(v) {
+                            slot.push(v.clone());
+                        }
+                    }
+                }
+                Pragma::Defer {
+                    line, col, variant, ..
+                } => {
+                    fa.defers.entry(tier.to_string()).or_default().push((
+                        variant.clone(),
+                        *line,
+                        *col,
+                        false,
+                    ));
+                }
+                _ => {}
+            }
+        }
+
+        let mut i = 0;
+        while i < toks.len() {
+            if scan.in_test[i]
+                || !is_ident(toks, i, "OakMsg")
+                || !is_punct(toks, i + 1, ':')
+                || !is_punct(toks, i + 2, ':')
+            {
+                i += 1;
+                continue;
+            }
+            let Some(Tok::Ident(variant)) = toks.get(i + 3).map(|t| &t.tok) else {
+                i += 1;
+                continue;
+            };
+            let (line, col) = (toks[i + 3].line, toks[i + 3].col);
+            let mut j = i + 4;
+            if is_punct(toks, j, '{') {
+                j = skip_balanced(toks, j, '{', '}');
+            } else if is_punct(toks, j, '(') {
+                j = skip_balanced(toks, j, '(', ')');
+            }
+            while is_punct(toks, j, ')') {
+                j += 1;
+            }
+            // Arm if the pattern position continues with `=>`, an
+            // alternation `|`, or an `if` guard; otherwise this is a
+            // message construction.
+            let is_arm = (is_punct(toks, j, '=') && is_punct(toks, j + 1, '>'))
+                || is_punct(toks, j, '|')
+                || is_ident(toks, j, "if");
+            if !is_arm {
+                i += 4;
+                continue;
+            }
+            // Find the arm's `=>` (crosses guards and alternations).
+            let mut a = j;
+            while a < toks.len() && !(is_punct(toks, a, '=') && is_punct(toks, a + 1, '>')) {
+                a += 1;
+            }
+            let body_start = a + 2;
+            let body_end = if is_punct(toks, body_start, '{') {
+                skip_balanced(toks, body_start, '{', '}')
+            } else {
+                // Unbraced arm: runs to the top-level `,`.
+                let mut depth = 0i32;
+                let mut k = body_start;
+                while k < toks.len() {
+                    match &toks[k].tok {
+                        Tok::Punct('(') | Tok::Punct('[') | Tok::Punct('{') => depth += 1,
+                        Tok::Punct(')') | Tok::Punct(']') | Tok::Punct('}') => depth -= 1,
+                        Tok::Punct(',') if depth <= 0 => break,
+                        _ => {}
+                    }
+                    k += 1;
+                }
+                k
+            };
+            let end_line = toks
+                .get(body_end.saturating_sub(1))
+                .map_or(line, |t| t.line);
+
+            let ranges = closure_ranges(scan, &table, (body_start, body_end));
+            let mut replies: Vec<String> = Vec::new();
+            for s in &fa.sites {
+                if s.file == file.path {
+                    if let Some(v) = &s.variant {
+                        if ranges.iter().any(|&(rs, re)| s.idx >= rs && s.idx < re)
+                            && !replies.contains(v)
+                        {
+                            replies.push(v.clone());
+                        }
+                    }
+                }
+            }
+            replies.sort();
+
+            fa.arms.push(Arm {
+                tier,
+                file: file.path.clone(),
+                variant: variant.clone(),
+                line,
+                col,
+                body: (body_start, body_end),
+                end_line,
+                replies,
+            });
+            i = j;
+        }
+    }
+    fa
+}
+
+/// Status of each declared request/reply pair, in declaration order —
+/// the `pairs` section of `PROTOCOL.json`. `paired` means the handler's
+/// call closure sends the reply; `deferred` means a defer pragma inside
+/// the arm claims it; `open` is a `reply-pairing` finding; `unhandled`
+/// means the request has no arm at all (a `flow-handled` finding).
+pub fn pair_statuses(
+    fa: &FlowAnalysis,
+) -> Vec<(&'static str, &'static str, &'static str, &'static str)> {
+    REPLY_PAIRS
+        .iter()
+        .map(|&(req, reply, tier)| {
+            let status = match fa.arms.iter().find(|a| a.tier == tier && a.variant == req) {
+                None => "unhandled",
+                Some(arm) if arm.replies.iter().any(|r| r == reply) => "paired",
+                Some(arm) => {
+                    let deferred = fa.defers.get(tier).is_some_and(|ds| {
+                        ds.iter().any(|(v, line, _, _)| {
+                            v == reply && *line >= arm.line && *line <= arm.end_line
+                        })
+                    });
+                    if deferred {
+                        "deferred"
+                    } else {
+                        "open"
+                    }
+                }
+            };
+            (req, reply, tier, status)
+        })
+        .collect()
+}
+
+/// Run the three flow rules over the extracted graph.
+pub fn check(
+    fa: &FlowAnalysis,
+    sources: &[SourceFile],
+    allows: &mut [FileAllows],
+    out: &mut Vec<Violation>,
+) {
+    let allow_idx = |path: &str| sources.iter().position(|f| f.path == path);
+    let mut flag =
+        |allows: &mut [FileAllows], rule: &'static str, file: &str, line: u32, col: u32, message: String| {
+            if let Some(ai) = allow_idx(file) {
+                if allows[ai].covers(rule, line) {
+                    return;
+                }
+            }
+            out.push(Violation {
+                rule,
+                file: file.to_string(),
+                line,
+                col,
+                message,
+            });
+        };
+
+    // flow-handled: every resolved edge lands on a real arm; unresolved
+    // sends are findings too (the analyzer must not silently skip them).
+    for s in &fa.sites {
+        match (&s.variant, &s.to) {
+            (None, _) => flag(
+                allows,
+                FLOW_HANDLED,
+                &s.file,
+                s.line,
+                s.col,
+                "cannot resolve this send's OakMsg variant; construct the message \
+                 as `SimMsg::Oak(OakMsg::…)` in a nearby `let` binding"
+                    .to_string(),
+            ),
+            (Some(v), None) => flag(
+                allows,
+                FLOW_HANDLED,
+                &s.file,
+                s.line,
+                s.col,
+                format!(
+                    "cannot infer the destination tier of this {v} send; \
+                     annotate with `// lint: route(tier, why)`"
+                ),
+            ),
+            (Some(v), Some(to)) => {
+                if to == "client" {
+                    continue; // environment actors: no dispatcher to land on
+                }
+                let handled = fa
+                    .arms
+                    .iter()
+                    .any(|a| a.tier == to.as_str() && &a.variant == v);
+                if !handled {
+                    let wildcarded = fa
+                        .wildcards
+                        .get(to.as_str())
+                        .is_some_and(|ws| ws.contains(v));
+                    let hint = if wildcarded {
+                        " (the tier wildcard-drops it — a silent discard)"
+                    } else {
+                        ""
+                    };
+                    flag(
+                        allows,
+                        FLOW_HANDLED,
+                        &s.file,
+                        s.line,
+                        s.col,
+                        format!("{v} sent to the {to} tier, but its dispatcher has no arm for it{hint}"),
+                    );
+                }
+            }
+        }
+    }
+
+    // flow-dead-arm: every real arm is reachable from some send site.
+    for a in &fa.arms {
+        let reached = fa.sites.iter().any(|s| {
+            s.variant.as_deref() == Some(a.variant.as_str())
+                && s.to.as_deref() == Some(a.tier)
+        });
+        if !reached {
+            flag(
+                allows,
+                FLOW_DEAD_ARM,
+                &a.file,
+                a.line,
+                a.col,
+                format!(
+                    "no send site addresses {} to the {} tier; dead arm",
+                    a.variant, a.tier
+                ),
+            );
+        }
+    }
+
+    // reply-pairing: declared request/reply pairs must answer (or defer).
+    let mut defers = fa.defers.clone();
+    for &(req, reply, tier) in REPLY_PAIRS {
+        let Some(arm) = fa
+            .arms
+            .iter()
+            .find(|a| a.tier == tier && a.variant == req)
+        else {
+            continue; // missing arm is flow-handled's finding, not ours
+        };
+        if arm.replies.iter().any(|r| r == reply) {
+            continue;
+        }
+        let deferred = defers.get_mut(tier).is_some_and(|ds| {
+            ds.iter_mut()
+                .find(|(v, line, _, _)| v == reply && *line >= arm.line && *line <= arm.end_line)
+                .map(|d| d.3 = true)
+                .is_some()
+        });
+        if deferred {
+            continue;
+        }
+        flag(
+            allows,
+            REPLY_PAIRING,
+            &arm.file,
+            arm.line,
+            arm.col,
+            format!(
+                "{req} handler never sends its declared reply {reply} \
+                 (checked through the call closure); reply or declare \
+                 `// lint: defer({reply}, why)` inside the arm"
+            ),
+        );
+    }
+
+    // Pragma hygiene for the new verbs: a route pragma that resolved no
+    // send, or a defer pragma no pair consulted, is stale.
+    for (file, line, col, tier) in &fa.unused_routes {
+        out.push(Violation {
+            rule: PRAGMA,
+            file: file.clone(),
+            line: *line,
+            col: *col,
+            message: format!("route({tier}) pragma covers no unresolved send; delete it"),
+        });
+    }
+    for (tier, ds) in &defers {
+        for (variant, line, col, used) in ds {
+            if !used {
+                let file = sources
+                    .iter()
+                    .map(|f| f.path.clone())
+                    .find(|p| dispatcher_tier(p) == Some(tier.as_str()))
+                    .unwrap_or_default();
+                out.push(Violation {
+                    rule: PRAGMA,
+                    file,
+                    line: *line,
+                    col: *col,
+                    message: format!(
+                        "defer({variant}) pragma defers nothing (the reply is sent \
+                         or no pair requires it); delete it"
+                    ),
+                });
+            }
+        }
+    }
+}

@@ -1,0 +1,136 @@
+//! Lane-isolation analysis: each tier's dispatcher may touch only its
+//! own lane's state — tiers interact exclusively through `OakMsg`.
+//!
+//! Every stateful control-plane type is assigned an owning tier below;
+//! a dispatcher that names a type owned by another tier (or reaches
+//! into the sim core directly instead of going through `Ctx`) gets a
+//! `lane-isolation` finding. Message *payload* types (`TableEntry`,
+//! `InstanceLocation`, `ServiceIp`, `AggregateStats`, `VivaldiState`)
+//! are deliberately unowned: they cross tiers by design, on the wire.
+//!
+//! The same pass computes the per-arm isolation certificate — the set
+//! of `self.<field>` touches over the handler's call closure — which
+//! `oakestra lint --graph` embeds in `PROTOCOL.json`. That certificate
+//! is the machine-checked precondition for sharding the event loop
+//! per-cluster lane (ROADMAP: parallel sim core).
+
+use super::flow::{closure_ranges, dispatcher_tier, fn_table, FlowAnalysis};
+use super::lexer::{is_punct, Scan, Tok};
+use super::rules::FileAllows;
+use super::{SourceFile, Violation};
+
+pub const LANE_ISOLATION: &str = "lane-isolation";
+
+/// Stateful type → the only tier whose dispatcher may name it.
+/// `coordinator/state.rs` and the cluster's transport/subnet state are
+/// cluster-lane; `db.rs`/`fedstate.rs`/`hierarchy.rs` trees are
+/// root-lane; the node-local runtime/table/tunnel machinery is
+/// worker-lane.
+const OWNERS: &[(&str, &str)] = &[
+    ("ClusterEntry", "root"),
+    ("ClusterTable", "root"),
+    ("ClusterTree", "root"),
+    ("ServiceDb", "root"),
+    ("ServiceRecord", "root"),
+    ("InstanceTable", "cluster"),
+    ("LocalInstance", "cluster"),
+    ("MqttBroker", "cluster"),
+    ("SubnetAllocator", "cluster"),
+    ("WorkerTable", "cluster"),
+    ("ContainerRuntime", "worker"),
+    ("ConversionTable", "worker"),
+    ("Mdns", "worker"),
+    ("ProxyTun", "worker"),
+    ("TelemetryGovernor", "worker"),
+    ("TunnelState", "worker"),
+];
+
+/// Flag cross-lane state references and direct sim-core access in the
+/// three dispatcher files.
+pub fn check(
+    sources: &[SourceFile],
+    scans: &[Scan],
+    allows: &mut [FileAllows],
+    out: &mut Vec<Violation>,
+) {
+    for (fi, (file, scan)) in sources.iter().zip(scans).enumerate() {
+        let Some(tier) = dispatcher_tier(&file.path) else {
+            continue;
+        };
+        for (i, t) in scan.tokens.iter().enumerate() {
+            if scan.in_test[i] {
+                continue;
+            }
+            let Tok::Ident(name) = &t.tok else { continue };
+            let message = if name == "core" && is_punct(&scan.tokens, i.wrapping_sub(1), '.') {
+                Some(
+                    "direct sim-core access from a dispatcher; go through a \
+                     Ctx method so the lane boundary stays rerouteable"
+                        .to_string(),
+                )
+            } else {
+                OWNERS
+                    .iter()
+                    .find(|(ty, owner)| ty == name && *owner != tier)
+                    .map(|(ty, owner)| {
+                        format!(
+                            "{ty} is {owner}-lane state; the {tier} dispatcher may \
+                             not touch it — tiers interact only through OakMsg"
+                        )
+                    })
+            };
+            if let Some(message) = message {
+                if allows[fi].covers(LANE_ISOLATION, t.line) {
+                    continue;
+                }
+                out.push(Violation {
+                    rule: LANE_ISOLATION,
+                    file: file.path.clone(),
+                    line: t.line,
+                    col: t.col,
+                    message,
+                });
+            }
+        }
+    }
+}
+
+/// Per-arm isolation certificates, parallel to `fa.arms`: the sorted
+/// set of `self.<field>` accesses over each handler's call closure.
+pub fn certificates(sources: &[SourceFile], scans: &[Scan], fa: &FlowAnalysis) -> Vec<Vec<String>> {
+    let mut out = Vec::with_capacity(fa.arms.len());
+    // fn tables are per-file; arms of one file are contiguous enough
+    // that a one-slot cache avoids recomputation.
+    let mut cached: Option<(usize, super::flow::FnTable)> = None;
+    for arm in &fa.arms {
+        let Some(fi) = sources.iter().position(|f| f.path == arm.file) else {
+            out.push(Vec::new());
+            continue;
+        };
+        let scan = &scans[fi];
+        if cached.as_ref().map(|(i, _)| *i) != Some(fi) {
+            cached = Some((fi, fn_table(scan)));
+        }
+        let table = &cached.as_ref().unwrap().1;
+        let mut touches: Vec<String> = Vec::new();
+        for (start, end) in closure_ranges(scan, table, arm.body) {
+            for k in start..end.min(scan.tokens.len()) {
+                let Tok::Ident(s) = &scan.tokens[k].tok else {
+                    continue;
+                };
+                if s != "self" || !is_punct(&scan.tokens, k + 1, '.') {
+                    continue;
+                }
+                if let Some(Tok::Ident(field)) = scan.tokens.get(k + 2).map(|t| &t.tok) {
+                    // A following `(` is a method call, not a field.
+                    if !is_punct(&scan.tokens, k + 3, '(') && !touches.contains(field) {
+                        touches.push(field.clone());
+                    }
+                }
+            }
+        }
+        touches.sort();
+        out.push(touches);
+    }
+    out
+}

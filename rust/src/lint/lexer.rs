@@ -1,11 +1,11 @@
 //! Minimal Rust token scanner for the determinism linter.
 //!
 //! Deliberately not a real parser: the lint rules only need identifier
-//! and punctuation streams with line numbers, string literals (for the
-//! metrics-key registry), pragma comments, and a conservative marking of
-//! `#[cfg(test)] mod … { … }` regions. Comments, string/char literals
-//! and raw strings are handled so that rule keywords inside them can
-//! never fire.
+//! and punctuation streams with line/column positions, string literals
+//! (for the metrics-key registry), pragma comments, and a conservative
+//! marking of `#[cfg(test)] mod … { … }` regions. Comments, string/char
+//! literals and raw strings are handled so that rule keywords inside
+//! them can never fire.
 
 /// One lexed token.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -16,22 +16,50 @@ pub enum Tok {
     Str(String),
 }
 
-/// Token plus its 1-based source line.
+/// Token plus its 1-based source line and (byte) column.
 #[derive(Clone, Debug)]
 pub struct Token {
     pub line: u32,
+    pub col: u32,
     pub tok: Tok,
 }
 
 /// A pragma comment recognized by the linter (see README for syntax).
+/// `col` is the column of the `//` that opens the comment.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum Pragma {
-    /// Suppresses `rule` violations on this line and the next code line.
-    Allow { line: u32, rule: String, why: String },
+    /// Suppresses `rule` violations on the lines of its coverage window
+    /// (see [`Scan::allow_window`]).
+    Allow {
+        line: u32,
+        col: u32,
+        rule: String,
+        why: String,
+    },
     /// Declares `OakMsg` variants a dispatch loop leaves to its `_` arm.
-    Wildcard { line: u32, variants: Vec<String> },
+    Wildcard {
+        line: u32,
+        col: u32,
+        variants: Vec<String>,
+    },
+    /// Declares the destination tier of a send whose addressee the flow
+    /// analyzer cannot infer (dynamic actor expression).
+    Route {
+        line: u32,
+        col: u32,
+        tier: String,
+        why: String,
+    },
+    /// Declares that a handler intentionally defers (or omits) the reply
+    /// `variant` required by a request/reply pair on some path.
+    Defer {
+        line: u32,
+        col: u32,
+        variant: String,
+        why: String,
+    },
     /// A comment that names the linter but does not parse as a pragma.
-    Malformed { line: u32, text: String },
+    Malformed { line: u32, col: u32, text: String },
 }
 
 impl Pragma {
@@ -39,10 +67,27 @@ impl Pragma {
         match self {
             Pragma::Allow { line, .. }
             | Pragma::Wildcard { line, .. }
+            | Pragma::Route { line, .. }
+            | Pragma::Defer { line, .. }
             | Pragma::Malformed { line, .. } => *line,
         }
     }
+
+    pub fn col(&self) -> u32 {
+        match self {
+            Pragma::Allow { col, .. }
+            | Pragma::Wildcard { col, .. }
+            | Pragma::Route { col, .. }
+            | Pragma::Defer { col, .. }
+            | Pragma::Malformed { col, .. } => *col,
+        }
+    }
 }
+
+/// Destination tiers a `route(...)` pragma may name. `client` marks
+/// traffic that terminates outside the three dispatchers (API clients,
+/// bench drivers) — the flow graph records it but requires no arm.
+pub const ROUTE_TIERS: [&str; 4] = ["root", "cluster", "worker", "client"];
 
 /// Scan result for one source file.
 #[derive(Clone, Debug, Default)]
@@ -54,14 +99,57 @@ pub struct Scan {
 }
 
 impl Scan {
-    /// First line strictly after `line` that carries any token (the
-    /// second line an `allow` pragma covers).
+    /// First line strictly after `line` that carries any token.
     pub fn next_code_line(&self, line: u32) -> Option<u32> {
         self.tokens
             .iter()
             .map(|t| t.line)
             .filter(|l| *l > line)
             .min()
+    }
+
+    /// The lines a pragma on `line` covers: its own line plus the next
+    /// code line, looking *through* attribute lines (`#[...]` / `#![...]`)
+    /// so a pragma above a derive still reaches the item it annotates —
+    /// the attribute lines themselves are covered too. A pragma on the
+    /// last line of a file covers exactly that line.
+    pub fn allow_window(&self, line: u32) -> Vec<u32> {
+        let mut covered = vec![line];
+        // First token index past `line` (tokens are in source order).
+        let mut idx = match self.tokens.iter().position(|t| t.line > line) {
+            Some(i) => i,
+            None => return covered,
+        };
+        // Skip attribute groups: `#` `[` … `]` (and inner `#` `!` `[`).
+        loop {
+            let mut j = idx;
+            if !is_punct(&self.tokens, j, '#') {
+                break;
+            }
+            j += 1;
+            if is_punct(&self.tokens, j, '!') {
+                j += 1;
+            }
+            if !is_punct(&self.tokens, j, '[') {
+                break;
+            }
+            let end = skip_attr(&self.tokens, j);
+            for t in &self.tokens[idx..end.min(self.tokens.len())] {
+                if !covered.contains(&t.line) {
+                    covered.push(t.line);
+                }
+            }
+            idx = end;
+            if idx >= self.tokens.len() {
+                return covered;
+            }
+        }
+        if let Some(t) = self.tokens.get(idx) {
+            if !covered.contains(&t.line) {
+                covered.push(t.line);
+            }
+        }
+        covered
     }
 }
 
@@ -71,21 +159,25 @@ pub fn scan(src: &str) -> Scan {
     let mut pragmas = Vec::new();
     let mut i = 0usize;
     let mut line = 1u32;
+    // Byte offset where the current line starts (columns are 1-based).
+    let mut line_start = 0usize;
     while i < b.len() {
         let c = b[i];
         match c {
             b'\n' => {
                 line += 1;
                 i += 1;
+                line_start = i;
             }
             b' ' | b'\t' | b'\r' => i += 1,
             b'/' if i + 1 < b.len() && b[i + 1] == b'/' => {
+                let col = (i - line_start + 1) as u32;
                 let start = i + 2;
                 while i < b.len() && b[i] != b'\n' {
                     i += 1;
                 }
                 let text = &src[start.min(i)..i];
-                parse_pragma(line, text, &mut pragmas);
+                parse_pragma(line, col, text, &mut pragmas);
             }
             b'/' if i + 1 < b.len() && b[i + 1] == b'*' => {
                 // Nested block comment (pragmas are line-comment only).
@@ -95,6 +187,7 @@ pub fn scan(src: &str) -> Scan {
                     if b[i] == b'\n' {
                         line += 1;
                         i += 1;
+                        line_start = i;
                     } else if b[i] == b'/' && i + 1 < b.len() && b[i + 1] == b'*' {
                         depth += 1;
                         i += 2;
@@ -108,6 +201,7 @@ pub fn scan(src: &str) -> Scan {
             }
             b'"' => {
                 let tok_line = line;
+                let tok_col = (i - line_start + 1) as u32;
                 i += 1;
                 let start = i;
                 while i < b.len() && b[i] != b'"' {
@@ -115,6 +209,7 @@ pub fn scan(src: &str) -> Scan {
                         i += 1; // skip escaped char (incl. \")
                     } else if b[i] == b'\n' {
                         line += 1;
+                        line_start = i + 1;
                     }
                     i += 1;
                 }
@@ -122,13 +217,13 @@ pub fn scan(src: &str) -> Scan {
                 i = (i + 1).min(b.len());
                 tokens.push(Token {
                     line: tok_line,
+                    col: tok_col,
                     tok: Tok::Str(s),
                 });
             }
-            b'r' | b'b'
-                if is_raw_string_start(b, i) =>
-            {
+            b'r' | b'b' if is_raw_string_start(b, i) => {
                 let tok_line = line;
+                let tok_col = (i - line_start + 1) as u32;
                 // Skip r/br prefix.
                 i += 1;
                 if b[i] == b'r' {
@@ -146,6 +241,7 @@ pub fn scan(src: &str) -> Scan {
                     if b[i] == b'\n' {
                         line += 1;
                         i += 1;
+                        line_start = i;
                         continue;
                     }
                     if b[i] == b'"' && closing_hashes(b, i + 1) >= hashes {
@@ -157,6 +253,7 @@ pub fn scan(src: &str) -> Scan {
                 }
                 tokens.push(Token {
                     line: tok_line,
+                    col: tok_col,
                     tok: Tok::Str(src[start..end.min(b.len())].to_string()),
                 });
             }
@@ -178,12 +275,14 @@ pub fn scan(src: &str) -> Scan {
             }
             _ if c == b'_' || c.is_ascii_alphabetic() => {
                 let tok_line = line;
+                let tok_col = (i - line_start + 1) as u32;
                 let start = i;
                 while i < b.len() && (b[i] == b'_' || b[i].is_ascii_alphanumeric()) {
                     i += 1;
                 }
                 tokens.push(Token {
                     line: tok_line,
+                    col: tok_col,
                     tok: Tok::Ident(src[start..i].to_string()),
                 });
             }
@@ -204,6 +303,7 @@ pub fn scan(src: &str) -> Scan {
             _ => {
                 tokens.push(Token {
                     line,
+                    col: (i - line_start + 1) as u32,
                     tok: Tok::Punct(c as char),
                 });
                 i += 1;
@@ -242,7 +342,7 @@ fn closing_hashes(b: &[u8], mut i: usize) -> usize {
     n
 }
 
-fn parse_pragma(line: u32, comment: &str, out: &mut Vec<Pragma>) {
+fn parse_pragma(line: u32, col: u32, comment: &str, out: &mut Vec<Pragma>) {
     let Some(pos) = comment.find("lint:") else {
         return;
     };
@@ -254,6 +354,7 @@ fn parse_pragma(line: u32, comment: &str, out: &mut Vec<Pragma>) {
                 if !rule.is_empty() && !why.is_empty() {
                     out.push(Pragma::Allow {
                         line,
+                        col,
                         rule: rule.to_string(),
                         why: why.to_string(),
                     });
@@ -270,7 +371,44 @@ fn parse_pragma(line: u32, comment: &str, out: &mut Vec<Pragma>) {
                     .filter(|v| !v.is_empty())
                     .collect();
                 if enum_name.trim() == "OakMsg" && !variants.is_empty() {
-                    out.push(Pragma::Wildcard { line, variants });
+                    out.push(Pragma::Wildcard {
+                        line,
+                        col,
+                        variants,
+                    });
+                    return;
+                }
+            }
+        }
+    } else if let Some(rest) = body.strip_prefix("route(") {
+        if let Some(end) = rest.find(')') {
+            if let Some((tier, why)) = rest[..end].split_once(',') {
+                let (tier, why) = (tier.trim(), why.trim());
+                if ROUTE_TIERS.contains(&tier) && !why.is_empty() {
+                    out.push(Pragma::Route {
+                        line,
+                        col,
+                        tier: tier.to_string(),
+                        why: why.to_string(),
+                    });
+                    return;
+                }
+            }
+        }
+    } else if let Some(rest) = body.strip_prefix("defer(") {
+        if let Some(end) = rest.find(')') {
+            if let Some((variant, why)) = rest[..end].split_once(',') {
+                let (variant, why) = (variant.trim(), why.trim());
+                let valid = !variant.is_empty()
+                    && variant.chars().all(|c| c.is_ascii_alphanumeric())
+                    && variant.starts_with(|c: char| c.is_ascii_uppercase());
+                if valid && !why.is_empty() {
+                    out.push(Pragma::Defer {
+                        line,
+                        col,
+                        variant: variant.to_string(),
+                        why: why.to_string(),
+                    });
                     return;
                 }
             }
@@ -278,6 +416,7 @@ fn parse_pragma(line: u32, comment: &str, out: &mut Vec<Pragma>) {
     }
     out.push(Pragma::Malformed {
         line,
+        col,
         text: body.to_string(),
     });
 }
@@ -319,17 +458,17 @@ fn mark_test_regions(tokens: &[Token]) -> Vec<bool> {
     marked
 }
 
-fn is_punct(tokens: &[Token], i: usize, c: char) -> bool {
+pub(crate) fn is_punct(tokens: &[Token], i: usize, c: char) -> bool {
     matches!(tokens.get(i).map(|t| &t.tok), Some(Tok::Punct(p)) if *p == c)
 }
 
-fn is_ident(tokens: &[Token], i: usize, name: &str) -> bool {
+pub(crate) fn is_ident(tokens: &[Token], i: usize, name: &str) -> bool {
     matches!(tokens.get(i).map(|t| &t.tok), Some(Tok::Ident(id)) if id == name)
 }
 
 /// `tokens[i]` should be the `[` of an attribute; returns the index just
 /// past its matching `]` (or `i` if it isn't an attribute opener).
-fn skip_attr(tokens: &[Token], i: usize) -> usize {
+pub(crate) fn skip_attr(tokens: &[Token], i: usize) -> usize {
     if !is_punct(tokens, i, '[') {
         return i;
     }
@@ -408,12 +547,31 @@ mod tests {
     }
 
     #[test]
+    fn columns_are_one_based_bytes() {
+        let s = scan("ab cd\n  ef = \"g\"");
+        let pos: Vec<(u32, u32)> = s.tokens.iter().map(|t| (t.line, t.col)).collect();
+        assert_eq!(pos, vec![(1, 1), (1, 4), (2, 3), (2, 6), (2, 8)]);
+    }
+
+    #[test]
+    fn columns_reset_after_multiline_strings() {
+        let s = scan("let a = \"x\ny\";\nb");
+        let b = s
+            .tokens
+            .iter()
+            .find(|t| matches!(&t.tok, Tok::Ident(n) if n == "b"))
+            .unwrap();
+        assert_eq!((b.line, b.col), (3, 1));
+    }
+
+    #[test]
     fn allow_pragma_parses() {
         let s = scan("// lint: allow(hash-order, lookup only)\nlet m = 1;");
         assert_eq!(
             s.pragmas,
             vec![Pragma::Allow {
                 line: 1,
+                col: 1,
                 rule: "hash-order".into(),
                 why: "lookup only".into()
             }]
@@ -427,7 +585,32 @@ mod tests {
             s.pragmas,
             vec![Pragma::Wildcard {
                 line: 1,
+                col: 1,
                 variants: vec!["Ping".into(), "Pong".into()]
+            }]
+        );
+    }
+
+    #[test]
+    fn route_and_defer_pragmas_parse() {
+        let s = scan("// lint: route(client, API reply to the caller)\nx");
+        assert_eq!(
+            s.pragmas,
+            vec![Pragma::Route {
+                line: 1,
+                col: 1,
+                tier: "client".into(),
+                why: "API reply to the caller".into()
+            }]
+        );
+        let s = scan("  // lint: defer(ApiReturn, replied from respond())\nx");
+        assert_eq!(
+            s.pragmas,
+            vec![Pragma::Defer {
+                line: 1,
+                col: 3,
+                variant: "ApiReturn".into(),
+                why: "replied from respond()".into()
             }]
         );
     }
@@ -435,11 +618,15 @@ mod tests {
     #[test]
     fn bad_pragmas_are_malformed() {
         for src in [
-            "// lint: allow(hash-order)",     // no why
-            "// lint: allow(, reason)",       // no rule
-            "// lint: wildcard(Other: A)",    // wrong enum
-            "// lint: wildcard(OakMsg:)",     // empty list
-            "// lint: nonsense",              // unknown verb
+            "// lint: allow(hash-order)",         // no why
+            "// lint: allow(, reason)",           // no rule
+            "// lint: wildcard(Other: A)",        // wrong enum
+            "// lint: wildcard(OakMsg:)",         // empty list
+            "// lint: nonsense",                  // unknown verb
+            "// lint: route(nowhere, why)",       // unknown tier
+            "// lint: route(root)",               // no why
+            "// lint: defer(lowercase, why)",     // not a variant name
+            "// lint: defer(ApiReturn)",          // no why
         ] {
             let s = scan(src);
             assert!(
@@ -448,6 +635,47 @@ mod tests {
                 s.pragmas
             );
         }
+    }
+
+    #[test]
+    fn allow_window_covers_pragma_and_next_code_line() {
+        let s = scan("// lint: allow(hash-order, x)\nuse std::collections::HashMap;\nstruct S;");
+        let w = s.allow_window(1);
+        assert!(w.contains(&1) && w.contains(&2) && !w.contains(&3));
+    }
+
+    #[test]
+    fn allow_window_sees_through_attribute_lines() {
+        // The pragma's target is the item *under* the attributes; both
+        // the attribute lines and the item line are covered.
+        let src = "// lint: allow(hash-order, keyed by opaque id)\n\
+                   #[derive(Clone, Debug)]\n\
+                   #[allow(dead_code)]\n\
+                   pub struct S { m: HashMap<u32, u32> }\n\
+                   fn after() {}\n";
+        let s = scan(src);
+        let w = s.allow_window(1);
+        assert!(w.contains(&1), "pragma line");
+        assert!(w.contains(&2) && w.contains(&3), "attribute lines");
+        assert!(w.contains(&4), "the annotated item itself");
+        assert!(!w.contains(&5), "window must stop at the item");
+    }
+
+    #[test]
+    fn allow_window_on_last_line_covers_only_itself() {
+        // Trailing pragma with and without a final newline: the window
+        // is exactly the pragma's own line, never line+1 of a next file.
+        for src in [
+            "fn f() {}\n// lint: allow(hash-order, trailing)",
+            "fn f() {}\n// lint: allow(hash-order, trailing)\n",
+        ] {
+            let s = scan(src);
+            assert_eq!(s.pragmas.len(), 1);
+            assert_eq!(s.allow_window(2), vec![2], "{src:?}");
+        }
+        // Pragma above the last code line still covers both.
+        let s = scan("// lint: allow(hash-order, x)\nuse std::collections::HashMap;");
+        assert_eq!(s.allow_window(1), vec![1, 2]);
     }
 
     #[test]

@@ -11,15 +11,28 @@
 //! - `protocol-coverage` (P1): every `OakMsg` variant handled (or
 //!   wildcard-declared) in all three tier dispatchers and priced in the
 //!   wire-size model.
-//! - `metrics-keys` (M1): metric keys cited by README/ci.yml exist in
-//!   code.
-//! - `pragma`: pragmas must parse, and allow pragmas must suppress
-//!   something.
+//! - `flow-handled` (P2): every send site resolves to an `OakMsg`
+//!   variant and a destination tier, and that (variant, tier) edge lands
+//!   on a real dispatcher arm.
+//! - `flow-dead-arm` (P3): every dispatcher arm is reachable from some
+//!   send site.
+//! - `reply-pairing` (P4): declared request/reply pairs answer within
+//!   the handler's call closure or carry a defer pragma.
+//! - `lane-isolation` (L1): each tier's dispatcher touches only its own
+//!   lane's state; tiers interact exclusively through `OakMsg`.
+//! - `metrics-keys` (M1): doc-cited metric keys exist in code, and every
+//!   source key is documented in the generated `METRICS.md`.
+//! - `pragma`: pragmas must parse, and allow/route/defer pragmas must
+//!   suppress or resolve something.
 //!
 //! Violations are diffed against the committed `LINT_BASELINE.json`
-//! ratchet: counts may only shrink.
+//! ratchet: counts may only shrink. `--graph` additionally emits the
+//! extracted protocol flow graph plus per-arm isolation certificates as
+//! `PROTOCOL.json`, which CI diffs against the committed artifact.
 
 pub mod baseline;
+pub mod flow;
+pub mod isolation;
 pub mod lexer;
 mod metrics_keys;
 mod protocol;
@@ -30,16 +43,22 @@ use std::path::{Path, PathBuf};
 
 use lexer::Scan;
 
+pub use flow::{FLOW_DEAD_ARM, FLOW_HANDLED, REPLY_PAIRING};
+pub use isolation::LANE_ISOLATION;
 pub use metrics_keys::METRICS_KEYS;
 pub use protocol::{enum_variants, referenced_variants, PROTOCOL};
 pub use rules::{AMBIENT_TIME, FLOAT_ORDER, HASH_ORDER, PRAGMA};
 
 /// Every rule id, in report order.
-pub const ALL_RULES: [&str; 6] = [
+pub const ALL_RULES: [&str; 10] = [
     HASH_ORDER,
     FLOAT_ORDER,
     AMBIENT_TIME,
     PROTOCOL,
+    FLOW_HANDLED,
+    FLOW_DEAD_ARM,
+    REPLY_PAIRING,
+    LANE_ISOLATION,
     METRICS_KEYS,
     PRAGMA,
 ];
@@ -68,7 +87,8 @@ impl SourceFile {
 #[derive(Clone, Debug, Default)]
 pub struct LintInput {
     pub sources: Vec<SourceFile>,
-    /// README.md / ci.yml — scanned for metric-key references only.
+    /// README.md / METRICS.md / ci.yml — scanned for metric-key
+    /// references (and, for METRICS.md, documentation coverage).
     pub docs: Vec<SourceFile>,
 }
 
@@ -78,6 +98,8 @@ pub struct Violation {
     pub file: String,
     /// 1-based; 0 means the finding is file-scoped.
     pub line: u32,
+    /// 1-based byte column; 0 means the finding is line- or file-scoped.
+    pub col: u32,
     pub message: String,
 }
 
@@ -92,15 +114,32 @@ pub struct LintReport {
 /// Run every rule over an input set.
 pub fn analyze(input: &LintInput) -> LintReport {
     let scans: Vec<Scan> = input.sources.iter().map(|f| lexer::scan(&f.text)).collect();
+    // Allow pragmas are shared by every pass; "unused allow" is judged
+    // only after all of them ran.
+    let mut allows: Vec<rules::FileAllows> = scans.iter().map(rules::FileAllows::new).collect();
     let mut violations = Vec::new();
-    for (file, scan) in input.sources.iter().zip(&scans) {
-        rules::FileRules::new(file, scan).run(scan, &mut violations);
+    for (i, (file, scan)) in input.sources.iter().zip(&scans).enumerate() {
+        rules::FileRules::new(file).run(scan, &mut allows[i], &mut violations);
     }
     protocol::check(&input.sources, &scans, &mut violations);
     metrics_keys::check(&input.sources, &scans, &input.docs, &mut violations);
+    let fa = flow::extract(&input.sources, &scans);
+    flow::check(&fa, &input.sources, &mut allows, &mut violations);
+    isolation::check(&input.sources, &scans, &mut allows, &mut violations);
+    for (file, fa) in input.sources.iter().zip(&allows) {
+        for (rule, line, col) in fa.unused() {
+            violations.push(Violation {
+                rule: PRAGMA,
+                file: file.path.clone(),
+                line,
+                col,
+                message: format!("allow({rule}) pragma suppresses nothing; delete it"),
+            });
+        }
+    }
 
     violations.sort_by(|a, b| {
-        (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule))
+        (&a.file, a.line, a.col, a.rule).cmp(&(&b.file, b.line, b.col, b.rule))
     });
     let mut counts: BTreeMap<String, u64> =
         ALL_RULES.iter().map(|r| (r.to_string(), 0)).collect();
@@ -129,7 +168,7 @@ pub fn find_repo_root(start: &Path) -> Option<PathBuf> {
 }
 
 /// Read the real tree: every `.rs` under `rust/src` (sorted traversal,
-/// so reports and baselines are stable), plus README.md and ci.yml.
+/// so reports and baselines are stable), plus the scanned docs.
 pub fn gather(repo_root: &Path) -> Result<LintInput, String> {
     let src_root = repo_root.join("rust/src");
     let mut paths = Vec::new();
@@ -145,7 +184,7 @@ pub fn gather(repo_root: &Path) -> Result<LintInput, String> {
         });
     }
     let mut docs = Vec::new();
-    for doc in ["README.md", ".github/workflows/ci.yml"] {
+    for doc in ["README.md", "METRICS.md", ".github/workflows/ci.yml"] {
         let p = repo_root.join(doc);
         if let Ok(text) = std::fs::read_to_string(&p) {
             docs.push(SourceFile {
@@ -202,10 +241,11 @@ pub fn report_json(report: &LintReport, rows: &[baseline::RatchetRow]) -> String
         .iter()
         .map(|v| {
             format!(
-                "\n    {{\"rule\": \"{}\", \"file\": \"{}\", \"line\": {}, \"message\": \"{}\"}}",
+                "\n    {{\"rule\": \"{}\", \"file\": \"{}\", \"line\": {}, \"col\": {}, \"message\": \"{}\"}}",
                 v.rule,
                 esc(&v.file),
                 v.line,
+                v.col,
                 esc(&v.message)
             )
         })
@@ -216,6 +256,130 @@ pub fn report_json(report: &LintReport, rows: &[baseline::RatchetRow]) -> String
     }
     s.push_str("]\n}\n");
     s
+}
+
+/// Render the protocol flow graph plus per-arm isolation certificates
+/// (`oakestra lint --graph`) — the committed, CI-diffed `PROTOCOL.json`.
+///
+/// Deterministic by construction: variants sorted, edges sorted by
+/// (variant, from, to) with sorted `file:line` sites, arms sorted by
+/// (tier, variant, line), pairs in declaration order, wildcard manifests
+/// sorted per tier.
+pub fn protocol_graph_json(input: &LintInput) -> String {
+    let scans: Vec<Scan> = input.sources.iter().map(|f| lexer::scan(&f.text)).collect();
+    let fa = flow::extract(&input.sources, &scans);
+    let touches = isolation::certificates(&input.sources, &scans, &fa);
+
+    let mut variants: Vec<String> = input
+        .sources
+        .iter()
+        .position(|f| f.path.ends_with("sim/msg.rs"))
+        .map(|i| {
+            enum_variants(&scans[i], "OakMsg")
+                .into_iter()
+                .map(|(v, _, _)| v)
+                .collect()
+        })
+        .unwrap_or_default();
+    variants.sort();
+
+    let mut edges: BTreeMap<(String, String, String), Vec<String>> = BTreeMap::new();
+    for s in &fa.sites {
+        let (Some(v), Some(to)) = (&s.variant, &s.to) else {
+            continue; // unresolved sites are flow-handled findings, not edges
+        };
+        edges
+            .entry((v.clone(), s.from.to_string(), to.clone()))
+            .or_default()
+            .push(format!("{}:{}", s.file, s.line));
+    }
+
+    let mut arm_rows: Vec<(&flow::Arm, &Vec<String>)> = fa.arms.iter().zip(&touches).collect();
+    arm_rows.sort_by(|(a, _), (b, _)| {
+        (a.tier, &a.variant, a.line).cmp(&(b.tier, &b.variant, b.line))
+    });
+
+    let quoted = |xs: &[String]| {
+        xs.iter()
+            .map(|x| format!("\"{x}\""))
+            .collect::<Vec<_>>()
+            .join(", ")
+    };
+
+    let mut s = String::from(
+        "{\n  \"protocol\": 1,\n  \"tiers\": [\"root\", \"cluster\", \"worker\", \"client\"],\n  \"variants\": [",
+    );
+    s.push_str(&quoted(&variants));
+    s.push_str("],\n  \"edges\": [");
+    let edge_rows: Vec<String> = edges
+        .iter()
+        .map(|((v, from, to), sites)| {
+            let mut sites = sites.clone();
+            sites.sort();
+            format!(
+                "\n    {{\"variant\": \"{v}\", \"from\": \"{from}\", \"to\": \"{to}\", \"sites\": [{}]}}",
+                quoted(&sites)
+            )
+        })
+        .collect();
+    s.push_str(&edge_rows.join(","));
+    if !edge_rows.is_empty() {
+        s.push_str("\n  ");
+    }
+    s.push_str("],\n  \"arms\": [");
+    let arm_json: Vec<String> = arm_rows
+        .iter()
+        .map(|(a, touches)| {
+            format!(
+                "\n    {{\"tier\": \"{}\", \"variant\": \"{}\", \"line\": {}, \"replies\": [{}], \"touches\": [{}]}}",
+                a.tier,
+                a.variant,
+                a.line,
+                quoted(&a.replies),
+                quoted(touches)
+            )
+        })
+        .collect();
+    s.push_str(&arm_json.join(","));
+    if !arm_json.is_empty() {
+        s.push_str("\n  ");
+    }
+    s.push_str("],\n  \"pairs\": [");
+    let pair_rows: Vec<String> = flow::pair_statuses(&fa)
+        .iter()
+        .map(|(req, reply, tier, status)| {
+            format!(
+                "\n    {{\"request\": \"{req}\", \"reply\": \"{reply}\", \"tier\": \"{tier}\", \"status\": \"{status}\"}}"
+            )
+        })
+        .collect();
+    s.push_str(&pair_rows.join(","));
+    if !pair_rows.is_empty() {
+        s.push_str("\n  ");
+    }
+    s.push_str("],\n  \"wildcards\": {");
+    let wc_rows: Vec<String> = fa
+        .wildcards
+        .iter()
+        .map(|(tier, vs)| {
+            let mut vs = vs.clone();
+            vs.sort();
+            format!("\n    \"{tier}\": [{}]", quoted(&vs))
+        })
+        .collect();
+    s.push_str(&wc_rows.join(","));
+    if !wc_rows.is_empty() {
+        s.push_str("\n  ");
+    }
+    s.push_str("}\n}\n");
+    s
+}
+
+/// Render `METRICS.md` from the source registry
+/// (`oakestra lint --metrics-doc`).
+pub fn metrics_doc_md(input: &LintInput) -> String {
+    let scans: Vec<Scan> = input.sources.iter().map(|f| lexer::scan(&f.text)).collect();
+    metrics_keys::metrics_doc(&input.sources, &scans)
 }
 
 fn esc(s: &str) -> String {
@@ -268,5 +432,16 @@ mod tests {
             v.get("violations").as_array().map(|a| a.len()),
             Some(1)
         );
+        let row = &v.get("violations").as_array().unwrap()[0];
+        assert_eq!(row.get("line").as_u64(), Some(1));
+        assert_eq!(row.get("col").as_u64(), Some(23));
+    }
+
+    #[test]
+    fn empty_graph_is_valid_json() {
+        let json = protocol_graph_json(&LintInput::default());
+        let v = crate::json::parse(&json).expect("graph must be parseable");
+        assert_eq!(v.get("protocol").as_u64(), Some(1));
+        assert_eq!(v.get("edges").as_array().map(|a| a.len()), Some(0));
     }
 }

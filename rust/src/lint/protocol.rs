@@ -22,8 +22,9 @@ const DISPATCHERS: [&str; 3] = [
     "coordinator/worker.rs",
 ];
 
-/// Variant names of `enum OakMsg { … }` in declaration order.
-pub fn enum_variants(scan: &Scan, enum_name: &str) -> Vec<String> {
+/// `(name, line, col)` of each `enum OakMsg { … }` variant, in
+/// declaration order. The span anchors pricing/coverage findings.
+pub fn enum_variants(scan: &Scan, enum_name: &str) -> Vec<(String, u32, u32)> {
     let toks = &scan.tokens;
     let mut i = 0;
     while i < toks.len() {
@@ -44,7 +45,7 @@ pub fn enum_variants(scan: &Scan, enum_name: &str) -> Vec<String> {
                 Tok::Punct('}') | Tok::Punct(')') | Tok::Punct(']') => depth -= 1,
                 Tok::Punct(',') if depth == 1 => expect_variant = true,
                 Tok::Ident(name) if depth == 1 && expect_variant => {
-                    out.push(name.clone());
+                    out.push((name.clone(), toks[j].line, toks[j].col));
                     expect_variant = false;
                 }
                 _ => {}
@@ -76,13 +77,18 @@ pub fn referenced_variants(scan: &Scan, enum_name: &str) -> BTreeSet<String> {
     out
 }
 
-/// Union of a file's wildcard-manifest entries, with the line of each.
-fn wildcard_manifest(scan: &Scan) -> Vec<(u32, String)> {
+/// Union of a file's wildcard-manifest entries, with each one's span.
+fn wildcard_manifest(scan: &Scan) -> Vec<(u32, u32, String)> {
     let mut out = Vec::new();
     for p in &scan.pragmas {
-        if let Pragma::Wildcard { line, variants } = p {
+        if let Pragma::Wildcard {
+            line,
+            col,
+            variants,
+        } = p
+        {
             for v in variants {
-                out.push((*line, v.clone()));
+                out.push((*line, *col, v.clone()));
             }
         }
     }
@@ -99,21 +105,23 @@ pub fn check(sources: &[SourceFile], scans: &[Scan], out: &mut Vec<Violation>) {
             rule: PROTOCOL,
             file: sources[msg_idx].path.clone(),
             line: 0,
+            col: 0,
             message: format!("could not locate `enum {ENUM_NAME}`"),
         });
         return;
     }
-    let variant_set: BTreeSet<&str> = variants.iter().map(String::as_str).collect();
+    let variant_set: BTreeSet<&str> = variants.iter().map(|(v, _, _)| v.as_str()).collect();
 
     // Size model: the pricing match lives in msg.rs itself, so "priced"
     // means referenced somewhere in that file beyond the declaration.
     let priced = referenced_variants(&scans[msg_idx], ENUM_NAME);
-    for v in &variants {
+    for (v, line, col) in &variants {
         if !priced.contains(v) {
             out.push(Violation {
                 rule: PROTOCOL,
                 file: sources[msg_idx].path.clone(),
-                line: 0,
+                line: *line,
+                col: *col,
                 message: format!(
                     "{ENUM_NAME}::{v} has no arm in the wire-size model \
                      (default_wire_bytes) — it would ship with zero cost"
@@ -129,13 +137,17 @@ pub fn check(sources: &[SourceFile], scans: &[Scan], out: &mut Vec<Violation>) {
         let file = &sources[idx];
         let refs = referenced_variants(&scans[idx], ENUM_NAME);
         let manifest = wildcard_manifest(&scans[idx]);
-        let declared: BTreeSet<&str> = manifest.iter().map(|(_, v)| v.as_str()).collect();
-        for v in &variants {
+        let declared: BTreeSet<&str> = manifest.iter().map(|(_, _, v)| v.as_str()).collect();
+        // An uncovered variant is the `_` arm's fault: anchor there.
+        let (wc_line, wc_col) =
+            super::flow::wildcard_arm_anchor(&scans[idx]).unwrap_or((0, 0));
+        for (v, _, _) in &variants {
             if !refs.contains(v) && !declared.contains(v.as_str()) {
                 out.push(Violation {
                     rule: PROTOCOL,
                     file: file.path.clone(),
-                    line: 0,
+                    line: wc_line,
+                    col: wc_col,
                     message: format!(
                         "{ENUM_NAME}::{v} is neither handled nor declared in a \
                          wildcard manifest in this dispatcher"
@@ -143,12 +155,13 @@ pub fn check(sources: &[SourceFile], scans: &[Scan], out: &mut Vec<Violation>) {
                 });
             }
         }
-        for (line, v) in &manifest {
+        for (line, col, v) in &manifest {
             if !variant_set.contains(v.as_str()) {
                 out.push(Violation {
                     rule: PROTOCOL,
                     file: file.path.clone(),
                     line: *line,
+                    col: *col,
                     message: format!("wildcard manifest names unknown variant `{v}`"),
                 });
             } else if refs.contains(v) {
@@ -156,6 +169,7 @@ pub fn check(sources: &[SourceFile], scans: &[Scan], out: &mut Vec<Violation>) {
                     rule: PROTOCOL,
                     file: file.path.clone(),
                     line: *line,
+                    col: *col,
                     message: format!(
                         "wildcard manifest entry `{v}` is redundant: the \
                          dispatcher already references it"
@@ -172,11 +186,12 @@ pub fn check(sources: &[SourceFile], scans: &[Scan], out: &mut Vec<Violation>) {
             continue;
         }
         for p in &scan.pragmas {
-            if let Pragma::Wildcard { line, .. } = p {
+            if let Pragma::Wildcard { line, col, .. } = p {
                 out.push(Violation {
                     rule: PROTOCOL,
                     file: file.path.clone(),
                     line: *line,
+                    col: *col,
                     message: "wildcard manifest outside a tier dispatcher has no effect"
                         .to_string(),
                 });
@@ -210,7 +225,12 @@ mod tests {
     #[test]
     fn variant_extraction_handles_payloads_and_attrs() {
         let s = scan(MSG);
-        assert_eq!(enum_variants(&s, "OakMsg"), vec!["Ping", "Pong", "Data"]);
+        let names: Vec<String> = enum_variants(&s, "OakMsg")
+            .into_iter()
+            .map(|(v, _, _)| v)
+            .collect();
+        assert_eq!(names, vec!["Ping", "Pong", "Data"]);
+        assert_eq!(enum_variants(&s, "OakMsg")[0].1, 2, "Ping is on line 2");
         assert!(enum_variants(&s, "Missing").is_empty());
     }
 
@@ -224,12 +244,16 @@ mod tests {
     }
 
     #[test]
-    fn missing_variant_is_flagged() {
+    fn missing_variant_is_flagged_at_the_wildcard_arm() {
         let (sources, scans) = files("match m { OakMsg::Ping => {}, _ => {} }");
         let mut v = Vec::new();
         check(&sources, &scans, &mut v);
         assert_eq!(v.len(), 2, "{v:?}"); // Pong and Data uncovered
         assert!(v.iter().all(|x| x.rule == PROTOCOL));
+        assert!(
+            v.iter().all(|x| x.line == 1 && x.col > 1),
+            "anchored at the `_` arm: {v:?}"
+        );
     }
 
     #[test]
@@ -261,7 +285,7 @@ mod tests {
     }
 
     #[test]
-    fn unpriced_variant_is_flagged() {
+    fn unpriced_variant_is_flagged_at_its_declaration() {
         let sources = vec![SourceFile {
             path: "rust/src/sim/msg.rs".into(),
             text: "pub enum OakMsg { Ping, Pong }\nfn price(m: &OakMsg) -> usize { match m { OakMsg::Ping => 1, _ => 0 } }".into(),
@@ -271,5 +295,6 @@ mod tests {
         check(&sources, &scans, &mut v);
         assert_eq!(v.len(), 1, "{v:?}");
         assert!(v[0].message.contains("Pong"));
+        assert_eq!((v[0].line, v[0].col), (1, 25), "anchored at `Pong` decl");
     }
 }

@@ -13,62 +13,106 @@ pub const PRAGMA: &str = "pragma";
 struct AllowSlot {
     rule: String,
     pragma_line: u32,
-    covered: [Option<u32>; 2],
+    pragma_col: u32,
+    covered: Vec<u32>,
     used: bool,
 }
 
-pub struct FileRules<'a> {
-    file: &'a SourceFile,
-    allows: Vec<AllowSlot>,
+/// All `allow` pragmas of one file, shared by every analysis pass (the
+/// per-file token rules here plus the cross-file flow/isolation passes)
+/// so that "unused allow" is judged only after *all* passes ran.
+pub struct FileAllows {
+    slots: Vec<AllowSlot>,
 }
 
-impl<'a> FileRules<'a> {
-    pub fn new(file: &'a SourceFile, scan: &Scan) -> Self {
-        let allows = scan
+impl FileAllows {
+    pub fn new(scan: &Scan) -> Self {
+        let slots = scan
             .pragmas
             .iter()
             .filter_map(|p| match p {
-                Pragma::Allow { line, rule, .. } => Some(AllowSlot {
+                Pragma::Allow {
+                    line, col, rule, ..
+                } => Some(AllowSlot {
                     rule: rule.clone(),
                     pragma_line: *line,
-                    covered: [Some(*line), scan.next_code_line(*line)],
+                    pragma_col: *col,
+                    covered: scan.allow_window(*line),
                     used: false,
                 }),
                 _ => None,
             })
             .collect();
-        FileRules { file, allows }
+        FileAllows { slots }
     }
 
-    /// Record a violation at `line` unless an allow pragma covers it.
-    fn flag(&mut self, out: &mut Vec<Violation>, rule: &'static str, line: u32, message: String) {
-        for slot in &mut self.allows {
-            if slot.rule == rule && slot.covered.contains(&Some(line)) {
+    /// Does an allow pragma for `rule` cover `line`? Marks it used.
+    pub fn covers(&mut self, rule: &str, line: u32) -> bool {
+        for slot in &mut self.slots {
+            if slot.rule == rule && slot.covered.contains(&line) {
                 slot.used = true;
-                return;
+                return true;
             }
+        }
+        false
+    }
+
+    /// `(rule, line, col)` of every allow that suppressed nothing.
+    pub fn unused(&self) -> Vec<(&str, u32, u32)> {
+        self.slots
+            .iter()
+            .filter(|s| !s.used)
+            .map(|s| (s.rule.as_str(), s.pragma_line, s.pragma_col))
+            .collect()
+    }
+}
+
+pub struct FileRules<'a> {
+    file: &'a SourceFile,
+}
+
+impl<'a> FileRules<'a> {
+    pub fn new(file: &'a SourceFile) -> Self {
+        FileRules { file }
+    }
+
+    /// Record a violation at `line:col` unless an allow pragma covers it.
+    fn flag(
+        &mut self,
+        allows: &mut FileAllows,
+        out: &mut Vec<Violation>,
+        rule: &'static str,
+        line: u32,
+        col: u32,
+        message: String,
+    ) {
+        if allows.covers(rule, line) {
+            return;
         }
         out.push(Violation {
             rule,
             file: self.file.path.clone(),
             line,
+            col,
             message,
         });
     }
 
-    pub fn run(mut self, scan: &Scan, out: &mut Vec<Violation>) {
+    pub fn run(mut self, scan: &Scan, allows: &mut FileAllows, out: &mut Vec<Violation>) {
         for (i, t) in scan.tokens.iter().enumerate() {
             if scan.in_test[i] {
                 continue;
             }
             let Tok::Ident(name) = &t.tok else { continue };
-            let line = t.line;
+            let (line, col) = (t.line, t.col);
             match name.as_str() {
                 "HashMap" | "HashSet" if self.file.control_plane() => {
                     self.flag(
+                        allows,
                         out,
                         HASH_ORDER,
                         line,
+                        col,
                         format!(
                             "{name} in a control-plane module; use BTreeMap/BTreeSet \
                              or justify with an allow pragma"
@@ -77,9 +121,11 @@ impl<'a> FileRules<'a> {
                 }
                 "partial_cmp" if !prev_ident_is(scan, i, "fn") => {
                     self.flag(
+                        allows,
                         out,
                         FLOAT_ORDER,
                         line,
+                        col,
                         "partial_cmp-based ordering; use f64::total_cmp \
                          (NaN-safe, total)"
                             .to_string(),
@@ -87,9 +133,11 @@ impl<'a> FileRules<'a> {
                 }
                 "Instant" | "SystemTime" | "thread_rng" | "ThreadRng" => {
                     self.flag(
+                        allows,
                         out,
                         AMBIENT_TIME,
                         line,
+                        col,
                         format!(
                             "{name} is ambient nondeterminism; use the sim clock \
                              or util::Rng"
@@ -101,25 +149,13 @@ impl<'a> FileRules<'a> {
         }
 
         for p in &scan.pragmas {
-            if let Pragma::Malformed { line, text } = p {
+            if let Pragma::Malformed { line, col, text } = p {
                 out.push(Violation {
                     rule: PRAGMA,
                     file: self.file.path.clone(),
                     line: *line,
+                    col: *col,
                     message: format!("unparseable lint pragma: `{text}`"),
-                });
-            }
-        }
-        for slot in &self.allows {
-            if !slot.used {
-                out.push(Violation {
-                    rule: PRAGMA,
-                    file: self.file.path.clone(),
-                    line: slot.pragma_line,
-                    message: format!(
-                        "allow({}) pragma suppresses nothing; delete it",
-                        slot.rule
-                    ),
                 });
             }
         }
@@ -142,8 +178,18 @@ mod tests {
             text: src.to_string(),
         };
         let s = scan(&file.text);
+        let mut allows = FileAllows::new(&s);
         let mut out = Vec::new();
-        FileRules::new(&file, &s).run(&s, &mut out);
+        FileRules::new(&file).run(&s, &mut allows, &mut out);
+        for (rule, line, col) in allows.unused() {
+            out.push(Violation {
+                rule: PRAGMA,
+                file: file.path.clone(),
+                line,
+                col,
+                message: format!("allow({rule}) pragma suppresses nothing; delete it"),
+            });
+        }
         out
     }
 
@@ -162,6 +208,14 @@ mod tests {
     }
 
     #[test]
+    fn allow_pragma_reaches_through_attributes() {
+        let src = "// lint: allow(hash-order, opaque keys)\n\
+                   #[derive(Default)]\n\
+                   pub struct C { m: HashMap<u32, u32> }\n";
+        assert!(check("rust/src/sim/foo.rs", src).is_empty());
+    }
+
+    #[test]
     fn unused_allow_is_flagged() {
         let v = check("rust/src/sim/foo.rs", "// lint: allow(hash-order, stale)\nlet x = 1;");
         assert_eq!(v.len(), 1);
@@ -175,6 +229,7 @@ mod tests {
         let v = check("rust/src/any.rs", "xs.sort_by(|a, b| a.partial_cmp(b).unwrap());");
         assert_eq!(v.len(), 1);
         assert_eq!(v[0].rule, FLOAT_ORDER);
+        assert!(v[0].col > 1, "span must point at the call, not the line start");
     }
 
     #[test]

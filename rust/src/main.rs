@@ -12,7 +12,9 @@
 //! oakestra bench <fig|all>                regenerate a paper figure table
 //! oakestra churn [--scenario all]         churn storm → BENCH_churn.json
 //! oakestra ldp --workers N                one PJRT-accelerated LDP solve
-//! oakestra lint [--strict] [--json]       determinism/protocol static analysis
+//! oakestra lint [--strict] [--json]       determinism/protocol/flow static analysis
+//! oakestra lint --graph                   emit PROTOCOL.json (flow graph + certificates)
+//! oakestra lint --metrics-doc             emit METRICS.md from the source key registry
 //! oakestra check-artifacts                verify AOT artifacts load + run
 //! oakestra init-config [path]             write an example config
 //! ```
@@ -112,6 +114,9 @@ fn print_help() {
              --strict                         exit non-zero if any rule exceeds the\n\
                                               LINT_BASELINE.json ratchet\n\
              --json                           machine-readable report on stdout\n\
+             --graph                          emit the protocol flow graph + isolation\n\
+                                              certificates (PROTOCOL.json) and exit\n\
+             --metrics-doc                    emit the generated METRICS.md and exit\n\
              --update-baseline                rewrite LINT_BASELINE.json to current counts\n\
              --repo PATH                      repo root (default: nearest ancestor with\n\
                                               rust/src/lib.rs)\n\
@@ -508,6 +513,8 @@ fn cmd_lint(args: &[String]) -> Result<()> {
     let strict = args.iter().any(|a| a == "--strict");
     let json = args.iter().any(|a| a == "--json");
     let update = args.iter().any(|a| a == "--update-baseline");
+    let graph = args.iter().any(|a| a == "--graph");
+    let metrics_doc = args.iter().any(|a| a == "--metrics-doc");
 
     let root = match flag_value(args, "--repo") {
         Some(p) => std::path::PathBuf::from(p),
@@ -522,6 +529,15 @@ fn cmd_lint(args: &[String]) -> Result<()> {
         }
     };
     let input = lint::gather(&root).map_err(|e| anyhow!(e))?;
+    if graph {
+        // Artifact mode: print PROTOCOL.json for CI to diff, nothing else.
+        print!("{}", lint::protocol_graph_json(&input));
+        return Ok(());
+    }
+    if metrics_doc {
+        print!("{}", lint::metrics_doc_md(&input));
+        return Ok(());
+    }
     let report = lint::analyze(&input);
 
     let baseline_path = root.join("LINT_BASELINE.json");
@@ -541,7 +557,7 @@ fn cmd_lint(args: &[String]) -> Result<()> {
         print!("{}", lint::report_json(&report, &rows));
     } else {
         for v in &report.violations {
-            println!("{}:{}: [{}] {}", v.file, v.line, v.rule, v.message);
+            println!("{}:{}:{}: [{}] {}", v.file, v.line, v.col, v.rule, v.message);
         }
         println!(
             "lint: {} file(s), {} violation(s)",

@@ -248,6 +248,36 @@ impl<'a> Ctx<'a> {
     pub fn rtt_ms(&mut self, a: NodeId, b: NodeId) -> f64 {
         self.core.net.rtt_ms(a, b, &mut self.core.rng)
     }
+
+    /// Node hosting `actor`. Dispatchers must use this instead of
+    /// reaching into `core` directly: `Ctx` is the lane boundary the
+    /// `lane-isolation` lint certifies, and the future sharded event
+    /// loop reroutes exactly these calls at lane edges.
+    pub fn node_of(&self, actor: ActorId) -> NodeId {
+        self.core.node_of(actor)
+    }
+
+    /// Crash-stop status of `node` (see [`Ctx::node_of`] for why this
+    /// wrapper exists).
+    pub fn is_failed(&self, node: NodeId) -> bool {
+        self.core.is_failed(node)
+    }
+
+    /// Container cold-start time on `node`: image pull (cached layers
+    /// skip the registry) + runtime start jitter, scaled by the node's
+    /// speed class. Bundled here so dispatchers never touch the
+    /// container-runtime or rng state directly.
+    pub fn container_deploy_time(
+        &mut self,
+        node: NodeId,
+        image_key: u64,
+        image_mb: u32,
+    ) -> SimTime {
+        let pull = self.core.containers.pull_time(node, image_key, image_mb);
+        let start = self.core.containers.start_latency(&mut self.core.rng);
+        let speed = self.core.node_class(node).speed_factor();
+        SimTime::from_micros(((pull + start).as_micros() as f64 / speed) as u64)
+    }
 }
 
 /// The simulator: actor table + core.

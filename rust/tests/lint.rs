@@ -1,13 +1,16 @@
 //! Integration tests for `oakestra::lint`: end-to-end fixture runs of the
-//! analyzer plus the meta-test that the linter runs clean — zero strict
-//! violations and no ratchet regression — on this repo's own sources.
+//! analyzer plus the meta-tests that the linter runs clean on this repo's
+//! own sources, that the repo's protocol flow graph is closed, and that
+//! the committed `PROTOCOL.json` / `METRICS.md` artifacts match
+//! regeneration — the same invariants CI gates on.
 
 use std::path::Path;
 
 use oakestra::lint::baseline::{ratchet, Baseline};
 use oakestra::lint::{
-    analyze, find_repo_root, gather, report_json, LintInput, SourceFile, ALL_RULES,
-    AMBIENT_TIME, FLOAT_ORDER, HASH_ORDER, METRICS_KEYS, PRAGMA, PROTOCOL,
+    analyze, find_repo_root, gather, metrics_doc_md, protocol_graph_json, report_json,
+    LintInput, SourceFile, ALL_RULES, AMBIENT_TIME, FLOAT_ORDER, FLOW_DEAD_ARM, FLOW_HANDLED,
+    HASH_ORDER, LANE_ISOLATION, METRICS_KEYS, PRAGMA, PROTOCOL, REPLY_PAIRING,
 };
 
 fn src(path: &str, text: &str) -> SourceFile {
@@ -48,6 +51,13 @@ fn fixture_all_rules_fire_and_report() {
     // protocol-coverage: Pong unpriced in msg.rs + Pong unhandled in root.rs
     // (the other two dispatchers are absent from the fixture, so no charge).
     assert_eq!(report.counts[PROTOCOL], 2);
+    // flow-dead-arm: the root Ping arm has no send site addressing it.
+    assert_eq!(report.counts[FLOW_DEAD_ARM], 1);
+    // No send sites at all, so nothing for flow-handled to resolve; the
+    // Ping reply pair is cluster-tier and that dispatcher is absent.
+    assert_eq!(report.counts[FLOW_HANDLED], 0);
+    assert_eq!(report.counts[REPLY_PAIRING], 0);
+    assert_eq!(report.counts[LANE_ISOLATION], 0);
     // metrics-keys: root.not_a_key shares the `root` namespace but no
     // source literal defines it; root.live_key is clean.
     assert_eq!(report.counts[METRICS_KEYS], 1);
@@ -117,6 +127,254 @@ fn fixture_unused_allow_and_malformed_pragma_are_violations() {
 }
 
 #[test]
+fn fixture_flow_handled_fires_and_is_suppressible() {
+    // Ping is sent up to the root tier, but no root dispatcher (hence no
+    // arm) is in the input.
+    let send = "fn up(&mut self, ctx: &mut Ctx<'_>) {\n\
+                \x20   ctx.send(self.up, SimMsg::Oak(OakMsg::Ping), 64, labels::CLUSTER_TO_ROOT);\n\
+                }\n";
+    let input = LintInput {
+        sources: vec![src("rust/src/coordinator/cluster.rs", send)],
+        docs: vec![],
+    };
+    let report = analyze(&input);
+    assert_eq!(report.counts[FLOW_HANDLED], 1, "{:?}", report.violations);
+    let v = &report.violations[0];
+    assert_eq!((v.line, v.col), (2, 9), "anchored at the send call");
+
+    let suppressed = format!("// lint: allow(flow-handled, fixture)\n{send}");
+    let input = LintInput {
+        sources: vec![src("rust/src/coordinator/cluster.rs", &suppressed)],
+        docs: vec![],
+    };
+    let report = analyze(&input);
+    // The pragma covers the `fn` line, not the send two lines down.
+    assert_eq!(report.counts[FLOW_HANDLED], 1);
+    let suppressed = send.replace(
+        "    ctx.send",
+        "    // lint: allow(flow-handled, fixture)\n    ctx.send",
+    );
+    let input = LintInput {
+        sources: vec![src("rust/src/coordinator/cluster.rs", &suppressed)],
+        docs: vec![],
+    };
+    let report = analyze(&input);
+    assert_eq!(report.counts[FLOW_HANDLED], 0, "{:?}", report.violations);
+    assert_eq!(report.counts[PRAGMA], 0, "allow counted as used");
+}
+
+#[test]
+fn fixture_unresolvable_send_needs_route_pragma() {
+    // Dynamic destination with no wire label: unresolvable without a
+    // route pragma; resolvable (and edge-checked) with one.
+    let body = "fn f(&mut self, ctx: &mut Ctx<'_>) {\n\
+                \x20   ctx.send_local(self.peer, SimMsg::Oak(OakMsg::Ping));\n\
+                }\n";
+    let input = LintInput {
+        sources: vec![src("rust/src/bench_harness/driver.rs", body)],
+        docs: vec![],
+    };
+    let report = analyze(&input);
+    assert_eq!(report.counts[FLOW_HANDLED], 1, "{:?}", report.violations);
+    assert!(report.violations[0].message.contains("route(tier, why)"));
+
+    let routed = body.replace(
+        "    ctx.send_local",
+        "    // lint: route(cluster, fixture peer is the cluster orchestrator)\n    ctx.send_local",
+    );
+    let cluster_arm = "fn dispatch(&mut self, m: &OakMsg) {\n\
+                       \x20   match m {\n\
+                       \x20       OakMsg::Ping => {\n\
+                       \x20           // lint: defer(Pong, fixture never answers)\n\
+                       \x20           self.seen += 1;\n\
+                       \x20       }\n\
+                       \x20       _ => {}\n\
+                       \x20   }\n\
+                       }\n";
+    let input = LintInput {
+        sources: vec![
+            src("rust/src/bench_harness/driver.rs", &routed),
+            src("rust/src/coordinator/cluster.rs", cluster_arm),
+        ],
+        docs: vec![],
+    };
+    let report = analyze(&input);
+    // Routed edge lands on the Ping arm; the arm is reached; the missing
+    // Pong reply is declared deferred; the route pragma is used.
+    assert_eq!(report.counts[FLOW_HANDLED], 0, "{:?}", report.violations);
+    assert_eq!(report.counts[FLOW_DEAD_ARM], 0);
+    assert_eq!(report.counts[REPLY_PAIRING], 0);
+    assert_eq!(report.counts[PRAGMA], 0);
+}
+
+#[test]
+fn fixture_dead_arm_fires_and_is_suppressible() {
+    let arm = "fn dispatch(m: &OakMsg) {\n\
+               \x20   match m {\n\
+               \x20       OakMsg::Ping => {}\n\
+               \x20       _ => {}\n\
+               \x20   }\n\
+               }\n";
+    let input = LintInput {
+        sources: vec![src("rust/src/coordinator/worker.rs", arm)],
+        docs: vec![],
+    };
+    let report = analyze(&input);
+    assert_eq!(report.counts[FLOW_DEAD_ARM], 1, "{:?}", report.violations);
+    assert!(report.violations[0].message.contains("dead arm"));
+
+    let suppressed = arm.replace(
+        "        OakMsg::Ping",
+        "        // lint: allow(flow-dead-arm, fixture)\n        OakMsg::Ping",
+    );
+    let input = LintInput {
+        sources: vec![src("rust/src/coordinator/worker.rs", &suppressed)],
+        docs: vec![],
+    };
+    let report = analyze(&input);
+    assert_eq!(report.counts[FLOW_DEAD_ARM], 0, "{:?}", report.violations);
+    assert_eq!(report.counts[PRAGMA], 0);
+}
+
+#[test]
+fn fixture_reply_pairing_fires_and_is_suppressible() {
+    // A reached Ping arm that never sends Pong: reply-pairing, nothing
+    // else. The reply is checked through the call closure, so pushing the
+    // non-reply into a helper must not hide it.
+    let send = "fn up(&mut self, ctx: &mut Ctx<'_>) {\n\
+                \x20   // lint: route(cluster, fixture)\n\
+                \x20   ctx.send_local(self.peer, SimMsg::Oak(OakMsg::Ping));\n\
+                }\n";
+    let arm = "fn dispatch(&mut self, m: &OakMsg) {\n\
+               \x20   match m {\n\
+               \x20       OakMsg::Ping => self.note(),\n\
+               \x20       _ => {}\n\
+               \x20   }\n\
+               }\n\
+               fn note(&mut self) { self.seen += 1; }\n";
+    let input = LintInput {
+        sources: vec![
+            src("rust/src/bench_harness/driver.rs", send),
+            src("rust/src/coordinator/cluster.rs", arm),
+        ],
+        docs: vec![],
+    };
+    let report = analyze(&input);
+    assert_eq!(report.counts[REPLY_PAIRING], 1, "{:?}", report.violations);
+    assert!(report.violations[0].message.contains("Pong"));
+
+    let suppressed = arm.replace(
+        "        OakMsg::Ping",
+        "        // lint: allow(reply-pairing, fixture)\n        OakMsg::Ping",
+    );
+    let input = LintInput {
+        sources: vec![
+            src("rust/src/bench_harness/driver.rs", send),
+            src("rust/src/coordinator/cluster.rs", &suppressed),
+        ],
+        docs: vec![],
+    };
+    let report = analyze(&input);
+    assert_eq!(report.counts[REPLY_PAIRING], 0, "{:?}", report.violations);
+    assert_eq!(report.counts[PRAGMA], 0);
+}
+
+#[test]
+fn fixture_lane_isolation_fires_and_is_suppressible() {
+    // A cluster dispatcher naming root-lane state, and reaching into the
+    // sim core directly.
+    let body = "fn f(&mut self, ctx: &mut Ctx<'_>, db: &mut ClusterTable) {\n\
+                \x20   db.touch();\n\
+                \x20   ctx.core.tick();\n\
+                }\n";
+    let input = LintInput {
+        sources: vec![src("rust/src/coordinator/cluster.rs", body)],
+        docs: vec![],
+    };
+    let report = analyze(&input);
+    // One finding for the cross-lane type mention, one for the core poke.
+    assert_eq!(report.counts[LANE_ISOLATION], 2, "{:?}", report.violations);
+    assert!(report
+        .violations
+        .iter()
+        .any(|v| v.message.contains("root-lane state")));
+    assert!(report
+        .violations
+        .iter()
+        .any(|v| v.message.contains("direct sim-core access")));
+
+    let suppressed = "// lint: allow(lane-isolation, fixture handoff)\n\
+                      fn f(&mut self, ctx: &mut Ctx<'_>, db: &mut ClusterTable) {\n\
+                      \x20   db.touch();\n\
+                      \x20   // lint: allow(lane-isolation, fixture core poke)\n\
+                      \x20   ctx.core.tick();\n\
+                      }\n";
+    let input = LintInput {
+        sources: vec![src("rust/src/coordinator/cluster.rs", suppressed)],
+        docs: vec![],
+    };
+    let report = analyze(&input);
+    assert_eq!(report.counts[LANE_ISOLATION], 0, "{:?}", report.violations);
+    assert_eq!(report.counts[PRAGMA], 0);
+}
+
+#[test]
+fn fixture_stale_route_and_defer_pragmas_are_flagged() {
+    let input = LintInput {
+        sources: vec![
+            src(
+                "rust/src/bench_harness/driver.rs",
+                "// lint: route(root, nothing here needs it)\nfn f() {}\n",
+            ),
+            src(
+                "rust/src/coordinator/worker.rs",
+                "fn dispatch() {\n    // lint: defer(Pong, no pair consults this)\n    let x = 1;\n}\n",
+            ),
+        ],
+        docs: vec![],
+    };
+    let report = analyze(&input);
+    assert_eq!(report.counts[PRAGMA], 2, "{:?}", report.violations);
+    assert!(report
+        .violations
+        .iter()
+        .any(|v| v.message.contains("route(root) pragma covers no unresolved send")));
+    assert!(report
+        .violations
+        .iter()
+        .any(|v| v.message.contains("defer(Pong) pragma defers nothing")));
+}
+
+#[test]
+fn fixture_undocumented_metric_key_fires_against_committed_doc() {
+    let sources = vec![src(
+        "rust/src/geo.rs",
+        "fn live(m: &mut M) { m.inc(\"root.live_key\"); m.inc(\"root.other_key\"); }\n",
+    )];
+    let stale_doc = src(
+        "METRICS.md",
+        "# Metrics registry\n| Key | Defined in |\n| --- | --- |\n| `root.live_key` | rust/src/geo.rs |\n",
+    );
+    let report = analyze(&LintInput {
+        sources: sources.clone(),
+        docs: vec![stale_doc],
+    });
+    assert_eq!(report.counts[METRICS_KEYS], 1, "{:?}", report.violations);
+    assert!(report.violations[0].message.contains("root.other_key"));
+    // Regenerating the doc clears it.
+    let input = LintInput {
+        sources,
+        docs: vec![],
+    };
+    let fresh = metrics_doc_md(&input);
+    let report = analyze(&LintInput {
+        sources: input.sources.clone(),
+        docs: vec![src("METRICS.md", &fresh)],
+    });
+    assert_eq!(report.counts[METRICS_KEYS], 0, "{:?}", report.violations);
+}
+
+#[test]
 fn baseline_file_matches_tool_output_format() {
     let b = Baseline::zeros();
     let reparsed = Baseline::parse(&b.to_json()).unwrap();
@@ -124,13 +382,18 @@ fn baseline_file_matches_tool_output_format() {
     assert_eq!(b.rules.len(), ALL_RULES.len());
 }
 
+fn repo_input() -> (std::path::PathBuf, LintInput) {
+    let manifest = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let root = find_repo_root(manifest).expect("repo root above rust/");
+    let input = gather(&root).expect("gather repo sources");
+    (root, input)
+}
+
 /// Meta-test: the linter runs clean on the repository's own tree. This is
 /// the same invariant CI's `oakestra lint --strict` step gates on.
 #[test]
 fn repo_sources_lint_clean_against_committed_baseline() {
-    let manifest = Path::new(env!("CARGO_MANIFEST_DIR"));
-    let root = find_repo_root(manifest).expect("repo root above rust/");
-    let input = gather(&root).expect("gather repo sources");
+    let (root, input) = repo_input();
     assert!(
         input.sources.iter().any(|f| f.path.ends_with("sim/msg.rs")),
         "protocol file must be part of the scan"
@@ -139,6 +402,10 @@ fn repo_sources_lint_clean_against_committed_baseline() {
         input.docs.iter().any(|d| d.path == "README.md"),
         "README must be part of the metrics-key scan"
     );
+    assert!(
+        input.docs.iter().any(|d| d.path == "METRICS.md"),
+        "the generated metrics doc must be part of the scan"
+    );
     let report = analyze(&input);
     assert!(
         report.violations.is_empty(),
@@ -146,7 +413,7 @@ fn repo_sources_lint_clean_against_committed_baseline() {
         report
             .violations
             .iter()
-            .map(|v| format!("  {}:{}: [{}] {}", v.file, v.line, v.rule, v.message))
+            .map(|v| format!("  {}:{}:{}: [{}] {}", v.file, v.line, v.col, v.rule, v.message))
             .collect::<Vec<_>>()
             .join("\n")
     );
@@ -159,5 +426,71 @@ fn repo_sources_lint_clean_against_committed_baseline() {
             .filter(|r| r.regressed())
             .map(|r| (&r.rule, r.count, r.baseline))
             .collect::<Vec<_>>()
+    );
+}
+
+/// Meta-test: the repo's own flow graph is closed — every non-client
+/// edge lands on an arm, every arm has a sender, every declared
+/// request/reply pair is answered.
+#[test]
+fn repo_flow_graph_is_closed() {
+    let (_, input) = repo_input();
+    let graph = protocol_graph_json(&input);
+    let v = oakestra::json::parse(&graph).expect("graph JSON parses");
+    let edges = v.get("edges").as_array().expect("edges");
+    let arms = v.get("arms").as_array().expect("arms");
+    assert!(!edges.is_empty() && !arms.is_empty(), "graph must be non-trivial");
+    for e in edges {
+        let to = e.get("to").as_str().unwrap();
+        if to == "client" {
+            continue;
+        }
+        let variant = e.get("variant").as_str().unwrap();
+        assert!(
+            arms.iter().any(|a| {
+                a.get("tier").as_str() == Some(to) && a.get("variant").as_str() == Some(variant)
+            }),
+            "edge {variant}→{to} has no arm"
+        );
+    }
+    for a in arms {
+        let tier = a.get("tier").as_str().unwrap();
+        let variant = a.get("variant").as_str().unwrap();
+        assert!(
+            edges.iter().any(|e| {
+                e.get("to").as_str() == Some(tier) && e.get("variant").as_str() == Some(variant)
+            }),
+            "arm {tier}/{variant} has no sender"
+        );
+    }
+    for p in v.get("pairs").as_array().expect("pairs") {
+        assert_eq!(
+            p.get("status").as_str(),
+            Some("paired"),
+            "unanswered pair: {:?}→{:?}",
+            p.get("request").as_str(),
+            p.get("reply").as_str()
+        );
+    }
+}
+
+/// Meta-test: the committed artifacts byte-match regeneration (CI diffs
+/// `oakestra lint --graph` / `--metrics-doc` output against them).
+#[test]
+fn committed_artifacts_match_regeneration() {
+    let (root, input) = repo_input();
+    let committed = std::fs::read_to_string(root.join("PROTOCOL.json"))
+        .expect("PROTOCOL.json is committed");
+    assert_eq!(
+        committed,
+        protocol_graph_json(&input),
+        "stale PROTOCOL.json: regenerate with `oakestra lint --graph`"
+    );
+    let committed = std::fs::read_to_string(root.join("METRICS.md"))
+        .expect("METRICS.md is committed");
+    assert_eq!(
+        committed,
+        metrics_doc_md(&input),
+        "stale METRICS.md: regenerate with `oakestra lint --metrics-doc`"
     );
 }
