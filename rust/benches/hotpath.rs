@@ -14,7 +14,7 @@ fn main() {
     let w0 = Instant::now();
     tb.sim.run_until(SimTime::from_secs(600.0));
     let events_wall = w0.elapsed().as_secs_f64();
-    let msgs = tb.sim.core.metrics.total_msgs();
+    let msgs = tb.sim.metrics().total_msgs();
     println!("sim steady-state: {msgs} control msgs over 600 sim-s in {events_wall:.3} wall-s");
 
     // L3: host LDP placement throughput.

@@ -545,17 +545,7 @@ impl Actor for FlatKubelet {
                 self.used += request;
                 ctx.add_mem(p.kubelet_per_pod_mem_mb);
                 let me = self.node;
-                let pull = ctx
-                    .core
-                    .containers
-                    .pull_time(me, 0x2000 + service.0 as u64, image_mb);
-                let start = {
-                    let rng = &mut ctx.core.rng;
-                    ctx.core.containers.start_latency(rng)
-                };
-                let speed = ctx.core.node_class(me).speed_factor();
-                let total =
-                    SimTime::from_micros(((pull + start).as_micros() as f64 / speed) as u64);
+                let total = ctx.container_deploy_time(me, 0x2000 + service.0 as u64, image_mb);
                 ctx.schedule(
                     total,
                     SimMsg::Timer(TimerKind::Custom(2_000_000 + service.0)),
@@ -719,6 +709,6 @@ mod tests {
             }),
         );
         sim.run_until(SimTime::from_secs(30.0));
-        assert_eq!(sim.core.metrics.counter("kube.unschedulable"), 1);
+        assert_eq!(sim.metrics().counter("kube.unschedulable"), 1);
     }
 }

@@ -153,6 +153,11 @@ pub struct ChurnConfig {
     /// failed placement can legitimately never converge; the watch must
     /// not pin its service forever).
     pub watch_timeout_s: f64,
+    /// Lane-sharded sim: `0` = classic single-lane sequential loop,
+    /// `N >= 1` = one event lane per cluster (plus the root lane)
+    /// drained by up to `N` threads. Any `N >= 1` yields the identical
+    /// report for a given seed; `0` matches the pre-lane golden.
+    pub threads: usize,
 }
 
 impl Default for ChurnConfig {
@@ -186,6 +191,7 @@ impl Default for ChurnConfig {
             cpu_per_replica_mc: 70.0,
             pre_drain_hold_s: 8.0,
             watch_timeout_s: 30.0,
+            threads: 0,
         }
     }
 }
@@ -224,6 +230,32 @@ impl ChurnConfig {
             mean_lifetime_s: 25.0,
             max_live: 64,
             catalog: 8,
+            ..ChurnConfig::default()
+        }
+    }
+
+    /// The 10k-worker storm (ROADMAP: raw-speed substrate): 64 clusters
+    /// × 160 workers under the full scenario mix, on the lane-sharded
+    /// engine with 4 worker threads. Arrivals are fast and the live cap
+    /// high so the control plane stays under sustained mutation pressure
+    /// across the whole fleet, but the storm window is short enough to
+    /// fit the CI wall-clock budget.
+    pub fn storm_10k(seed: u64) -> Self {
+        ChurnConfig {
+            seed,
+            scenario: ChurnScenario::All,
+            clusters: 64,
+            workers_per_cluster: 160,
+            threads: 4,
+            duration_s: 60.0,
+            settle_s: 40.0,
+            arrival_period_s: 0.25,
+            mean_lifetime_s: 25.0,
+            max_live: 256,
+            catalog: 8,
+            autoscaled: 6,
+            drills: 8,
+            drill_every: 10,
             ..ChurnConfig::default()
         }
     }
@@ -568,7 +600,7 @@ impl ChurnDriver {
         let kill = self.rng.chance(self.cfg.fail_worker_chance)
             && self.failed_workers.len() < total_workers / 2;
         if kill {
-            ctx.core.set_failed(node, true);
+            ctx.set_node_failed(node, true);
             self.failed_workers.insert(node);
             ctx.metrics().inc("churn.worker_killed");
             // The hardware may come back: schedule a rejoin under a
@@ -1020,6 +1052,14 @@ pub struct ChurnReport {
     /// suppressed below the threshold.
     pub aggregate_sent: u64,
     pub aggregate_suppressed: u64,
+    /// Event-loop lanes the storm ran on (1 = the classic sequential
+    /// sim; `clusters + 1` when lane-sharded).
+    pub lanes: usize,
+    /// Same-tick delivery batching across all lanes: events drained and
+    /// drain rounds — their ratio is the batching factor the raw-speed
+    /// ROADMAP item gates on.
+    pub lane_batch_events: u64,
+    pub lane_batch_drains: u64,
     /// Host wall-clock seconds the whole run took (build + storm +
     /// drain) — the raw speed axis of the per-PR perf trajectory.
     /// Varies machine to machine; excluded from determinism checks.
@@ -1188,6 +1228,7 @@ pub fn run_churn(cfg: &ChurnConfig) -> ChurnReport {
         clusters: cfg.clusters,
         workers_per_cluster: cfg.workers_per_cluster,
         scheduler: cfg.scheduler,
+        threads: cfg.threads,
         ..OakTestbedConfig::default()
     });
     tb.warm_up();
@@ -1198,11 +1239,10 @@ pub fn run_churn(cfg: &ChurnConfig) -> ChurnReport {
         crate::messaging::labels::CLUSTER_TO_ROOT,
         crate::messaging::labels::ROOT_TO_CLUSTER,
     ];
-    let msgs0: u64 = oak_labels.iter().map(|l| tb.sim.core.metrics.msgs(l)).sum();
-    let bytes0: u64 = oak_labels
-        .iter()
-        .map(|l| tb.sim.core.metrics.bytes(l))
-        .sum();
+    let m0 = tb.sim.metrics();
+    let msgs0: u64 = oak_labels.iter().map(|l| m0.msgs(l)).sum();
+    let bytes0: u64 = oak_labels.iter().map(|l| m0.bytes(l)).sum();
+    drop(m0);
 
     let start = tb.sim.now() + SimTime::from_secs(1.0);
     let driver_id = tb
@@ -1258,13 +1298,9 @@ pub fn run_churn(cfg: &ChurnConfig) -> ChurnReport {
     let pending_events = tb.sim.pending_events();
     let pending_non_timer = tb.sim.pending_non_timer_events();
 
-    let msgs1: u64 = oak_labels.iter().map(|l| tb.sim.core.metrics.msgs(l)).sum();
-    let bytes1: u64 = oak_labels
-        .iter()
-        .map(|l| tb.sim.core.metrics.bytes(l))
-        .sum();
-
-    let m = &tb.sim.core.metrics;
+    let m = tb.sim.metrics();
+    let msgs1: u64 = oak_labels.iter().map(|l| m.msgs(l)).sum();
+    let bytes1: u64 = oak_labels.iter().map(|l| m.bytes(l)).sum();
     let elapsed_ms = horizon.saturating_sub(start).as_millis();
     let root_cpu_ms = m
         .usage(tb.root_node)
@@ -1304,6 +1340,9 @@ pub fn run_churn(cfg: &ChurnConfig) -> ChurnReport {
         .unwrap_or(0.0);
     let aggregate_sent = m.counter("cluster.report_sent");
     let aggregate_suppressed = m.counter("cluster.report_suppressed");
+    let lanes = tb.sim.lane_count();
+    let lane_batch_events = m.counter(crate::sim::lane::BATCH_EVENTS_KEY);
+    let lane_batch_drains = m.counter(crate::sim::lane::BATCH_DRAINS_KEY);
 
     let d = tb
         .sim
@@ -1356,6 +1395,9 @@ pub fn run_churn(cfg: &ChurnConfig) -> ChurnReport {
         delegation_attempts_p95,
         aggregate_sent,
         aggregate_suppressed,
+        lanes,
+        lane_batch_events,
+        lane_batch_drains,
         wall_clock_s: wall_start.elapsed().as_secs_f64(),
         pending_events,
         pending_non_timer,
@@ -1404,10 +1446,25 @@ impl ChurnReport {
                 format!("[\n{}\n  ]", rows.join(",\n"))
             }
         };
+        // Lane-sharded runs carry an extra "sim" object; the classic
+        // single-lane sim omits it entirely so legacy reports stay
+        // byte-identical to the pre-lane golden fixture.
+        let sim_json = if self.lanes > 1 {
+            format!(
+                "\"sim\": {{\"lanes\": {}, \"lane\": {{\"batch\": {:.2}, \
+                 \"batch_events\": {}, \"batch_drains\": {}}}}},\n  ",
+                self.lanes,
+                self.lane_batch_events as f64 / self.lane_batch_drains.max(1) as f64,
+                self.lane_batch_events,
+                self.lane_batch_drains,
+            )
+        } else {
+            String::new()
+        };
         format!(
             "{{\n  \"bench\": \"churn\",\n  \"seed\": {},\n  \"scenario\": \"{}\",\n  \
              \"topology\": {{\"clusters\": {}, \"workers_per_cluster\": {}, \
-             \"shape\": \"{}x{}\"}},\n  \
+             \"shape\": \"{}x{}\"}},\n  {}\
              \"duration_s\": {},\n  \"wall_clock_s\": {:.3},\n  \
              \"ops_issued\": {},\n  \"unanswered_requests\": {},\n  \
              \"counts\": {{\"submit\": {}, \"undeploy\": {}, \"scale_up\": {}, \
@@ -1438,6 +1495,7 @@ impl ChurnReport {
             self.workers_per_cluster,
             self.clusters,
             self.workers_per_cluster,
+            sim_json,
             self.duration_s,
             self.wall_clock_s,
             self.ops_issued,
@@ -1558,6 +1616,18 @@ impl ChurnReport {
             "wall_clock_s".into(),
             format!("{:.2}", self.wall_clock_s),
         ]);
+        if self.lanes > 1 {
+            cost.row(vec!["sim_lanes".into(), self.lanes.to_string()]);
+            cost.row(vec![
+                "lane_batch".into(),
+                format!(
+                    "{:.2} ({} events / {} drains)",
+                    self.lane_batch_events as f64 / self.lane_batch_drains.max(1) as f64,
+                    self.lane_batch_events,
+                    self.lane_batch_drains
+                ),
+            ]);
+        }
         cost.row(vec![
             "pending_non_timer".into(),
             self.pending_non_timer.to_string(),
@@ -1692,5 +1762,38 @@ mod tests {
             "post-drain quiescence must leave no message in flight"
         );
         assert!(v.get("control_plane").get("sched_ms_p95").as_f64().is_some());
+        // Single-lane runs must NOT carry the "sim" object — its absence
+        // is what keeps legacy reports byte-identical to the pre-lane
+        // golden fixture.
+        assert!(v.get("sim").get("lanes").as_u64().is_none());
+    }
+
+    /// Same seed, same storm, different `--threads`: the lane engine must
+    /// emit byte-identical reports (op log, census, metrics and all) for
+    /// every thread count — the merge-order determinism contract.
+    #[test]
+    fn sharded_storm_is_thread_count_invariant() {
+        let run = |threads: usize| {
+            let cfg = ChurnConfig {
+                scenario: ChurnScenario::Submit,
+                duration_s: 30.0,
+                settle_s: 25.0,
+                arrival_period_s: 4.0,
+                mean_lifetime_s: 15.0,
+                clusters: 2,
+                workers_per_cluster: 4,
+                threads,
+                ..ChurnConfig::default()
+            };
+            let mut report = run_churn(&cfg);
+            report.wall_clock_s = 0.0;
+            report.to_json()
+        };
+        let one = run(1);
+        assert_eq!(one, run(2), "lane engine must be thread-count invariant");
+        let v = crate::json::parse(&one).unwrap();
+        assert_eq!(v.get("sim").get("lanes").as_u64(), Some(3));
+        let batch = v.get("sim").get("lane").get("batch").as_f64().unwrap_or(0.0);
+        assert!(batch >= 1.0, "batch={batch}");
     }
 }

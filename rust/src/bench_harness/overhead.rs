@@ -19,10 +19,9 @@ fn idle_sample(
     from: SimTime,
     to: SimTime,
 ) -> (f64, f64, f64, f64) {
+    let m = sim.metrics();
     let u = |n: NodeId| {
-        sim.core
-            .metrics
-            .usage(n)
+        m.usage(n)
             .map(|u| (u.cpu_util(from, to) * 100.0, u.mem_mb))
             .unwrap_or((0.0, 0.0))
     };
@@ -126,6 +125,7 @@ pub fn fig7a_control_messages(service_counts: &[usize]) -> Table {
             ..OakTestbedConfig::default()
         });
         oak.warm_up();
+        let m = oak.sim.metrics();
         let m0: u64 = [
             labels::WORKER_TO_CLUSTER,
             labels::CLUSTER_TO_WORKER,
@@ -133,7 +133,7 @@ pub fn fig7a_control_messages(service_counts: &[usize]) -> Table {
             labels::ROOT_TO_CLUSTER,
         ]
         .iter()
-        .map(|l| oak.sim.core.metrics.msgs(l))
+        .map(|l| m.msgs(l))
         .sum();
         for r in 0..s {
             oak.submit(
@@ -143,6 +143,7 @@ pub fn fig7a_control_messages(service_counts: &[usize]) -> Table {
         }
         let end = SimTime::from_secs(13.0 + 0.2 * s as f64 + 60.0);
         oak.sim.run_until(end);
+        let m = oak.sim.metrics();
         let oak_msgs: u64 = [
             labels::WORKER_TO_CLUSTER,
             labels::CLUSTER_TO_WORKER,
@@ -150,7 +151,7 @@ pub fn fig7a_control_messages(service_counts: &[usize]) -> Table {
             labels::ROOT_TO_CLUSTER,
         ]
         .iter()
-        .map(|l| oak.sim.core.metrics.msgs(l))
+        .map(|l| m.msgs(l))
         .sum::<u64>()
             - m0;
 
@@ -164,9 +165,10 @@ pub fn fig7a_control_messages(service_counts: &[usize]) -> Table {
             2_000.0,
         );
         k3s.warm_up();
+        let m = k3s.sim.metrics();
         let k0: u64 = [labels::KUBE_NODE_TO_MASTER, labels::KUBE_MASTER_TO_NODE]
             .iter()
-            .map(|l| k3s.sim.core.metrics.msgs(l))
+            .map(|l| m.msgs(l))
             .sum();
         for r in 0..s {
             k3s.submit_pod(
@@ -176,9 +178,10 @@ pub fn fig7a_control_messages(service_counts: &[usize]) -> Table {
             );
         }
         k3s.sim.run_until(end);
+        let m = k3s.sim.metrics();
         let k3s_msgs: u64 = [labels::KUBE_NODE_TO_MASTER, labels::KUBE_MASTER_TO_NODE]
             .iter()
-            .map(|l| k3s.sim.core.metrics.msgs(l))
+            .map(|l| m.msgs(l))
             .sum::<u64>()
             - k0;
 

@@ -62,6 +62,11 @@ pub struct OakTestbedConfig {
     pub heterogeneous: bool,
     /// Fast local registry (pre-warmed images between repeated runs).
     pub registry_mbps: f64,
+    /// Lane-sharded event loop: `0` keeps the classic single-lane
+    /// sequential sim; `N >= 1` cuts one lane per cluster subtree (plus
+    /// the root lane) drained by up to `N` worker threads per window.
+    /// The event trace is identical for every `N >= 1`.
+    pub threads: usize,
 }
 
 impl Default for OakTestbedConfig {
@@ -74,6 +79,7 @@ impl Default for OakTestbedConfig {
             worker_class: NodeClass::S,
             heterogeneous: false,
             registry_mbps: 2_000.0,
+            threads: 0,
         }
     }
 }
@@ -117,7 +123,12 @@ pub fn het_class(i: usize) -> NodeClass {
 
 pub fn build_oakestra(cfg: OakTestbedConfig) -> OakTestbed {
     let mut sim = Sim::new(cfg.seed);
-    sim.core.containers.registry_mbps = cfg.registry_mbps;
+    if cfg.threads > 0 {
+        // Lane 0 = root tier (+ client); lane c+1 = cluster c's subtree —
+        // the shard boundaries the lane-isolation certificates prove safe.
+        sim.shard_lanes(cfg.clusters + 1, cfg.threads);
+    }
+    sim.set_registry_mbps(cfg.registry_mbps);
     if cfg.heterogeneous {
         sim.core.net.set_default(LinkProfile::wifi());
     } else {
@@ -136,9 +147,10 @@ pub fn build_oakestra(cfg: OakTestbedConfig) -> OakTestbed {
     let mut worker_cluster = std::collections::BTreeMap::new();
     let mut next_node = 1u32;
     for c in 0..cfg.clusters {
+        let lane = if cfg.threads > 0 { c + 1 } else { 0 };
         let cnode = NodeId(next_node);
         next_node += 1;
-        sim.add_node(cnode, NodeClass::L);
+        sim.add_node_in_lane(cnode, NodeClass::L, lane);
         let cid = ClusterId(c as u32 + 1);
         let orch = sim.add_actor(
             cnode,
@@ -164,7 +176,7 @@ pub fn build_oakestra(cfg: OakTestbedConfig) -> OakTestbed {
             } else {
                 cfg.worker_class
             };
-            sim.add_node(wnode, class);
+            sim.add_node_in_lane(wnode, class, lane);
             let spec = WorkerSpec {
                 node: wnode,
                 class,
@@ -286,7 +298,13 @@ impl OakTestbed {
         let node = NodeId(self.next_node);
         self.next_node += 1;
         spec.node = node;
-        self.sim.add_node(node, spec.class);
+        // Reborn hardware rejoins its cluster's lane (lane 0 unsharded).
+        let lane = if self.sim.lane_count() > 1 {
+            cluster_idx + 1
+        } else {
+            0
+        };
+        self.sim.add_node_in_lane(node, spec.class, lane);
         let engine = self.sim.add_actor(
             node,
             Box::new(WorkerEngine::new(WorkerConfig::new(spec), orch)),
@@ -394,7 +412,7 @@ pub fn build_flat(
     registry_mbps: f64,
 ) -> FlatTestbed {
     let mut sim = Sim::new(seed);
-    sim.core.containers.registry_mbps = registry_mbps;
+    sim.set_registry_mbps(registry_mbps);
     if heterogeneous {
         sim.core.net.set_default(LinkProfile::wifi());
     } else {

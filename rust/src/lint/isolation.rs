@@ -13,9 +13,16 @@
 //! `oakestra lint --graph` embeds in `PROTOCOL.json`. That certificate
 //! is the machine-checked precondition for sharding the event loop
 //! per-cluster lane (ROADMAP: parallel sim core).
+//!
+//! Since the sharded engine landed, the pass also polices the lane
+//! containers themselves: a `struct Lane*` under `/sim/` may not embed
+//! a tier-owned type unless that type is defined under `/sim/` (the
+//! simulated runtime the lane legitimately owns, e.g.
+//! `ContainerRuntime`). Anything else would let one lane reach another
+//! lane's state without going through the window merge.
 
 use super::flow::{closure_ranges, dispatcher_tier, fn_table, FlowAnalysis};
-use super::lexer::{is_punct, Scan, Tok};
+use super::lexer::{is_ident, is_punct, Scan, Tok, Token};
 use super::rules::FileAllows;
 use super::{SourceFile, Violation};
 
@@ -46,7 +53,8 @@ const OWNERS: &[(&str, &str)] = &[
 ];
 
 /// Flag cross-lane state references and direct sim-core access in the
-/// three dispatcher files.
+/// three dispatcher files, and tier-owned types embedded in `/sim/`
+/// lane structs.
 pub fn check(
     sources: &[SourceFile],
     scans: &[Scan],
@@ -93,6 +101,117 @@ pub fn check(
             }
         }
     }
+    check_lane_structs(sources, scans, allows, out);
+}
+
+/// The lane containers of the sharded sim core: a `struct Lane*` in a
+/// `/sim/` file may hold only sim-defined and std types — never a type
+/// the OWNERS table assigns to a tier, because that would hand one lane
+/// a mutable alias of another lane's state outside the window merge.
+fn check_lane_structs(
+    sources: &[SourceFile],
+    scans: &[Scan],
+    allows: &mut [FileAllows],
+    out: &mut Vec<Violation>,
+) {
+    let sim_defined = sim_defined_types(sources, scans);
+    for (fi, (file, scan)) in sources.iter().zip(scans).enumerate() {
+        if !file.path.contains("/sim/") {
+            continue;
+        }
+        let mut i = 0;
+        while i < scan.tokens.len() {
+            if scan.in_test[i] || !is_ident(&scan.tokens, i, "struct") {
+                i += 1;
+                continue;
+            }
+            let lane_name = match scan.tokens.get(i + 1).map(|t| &t.tok) {
+                Some(Tok::Ident(n)) if n.starts_with("Lane") => n,
+                _ => {
+                    i += 1;
+                    continue;
+                }
+            };
+            let (start, end) = struct_body(&scan.tokens, i + 2);
+            for k in start..end {
+                let t = &scan.tokens[k];
+                let Tok::Ident(name) = &t.tok else { continue };
+                if sim_defined.iter().any(|d| d == name) {
+                    continue;
+                }
+                let Some((ty, owner)) = OWNERS.iter().find(|(ty, _)| ty == name) else {
+                    continue;
+                };
+                if allows[fi].covers(LANE_ISOLATION, t.line) {
+                    continue;
+                }
+                out.push(Violation {
+                    rule: LANE_ISOLATION,
+                    file: file.path.clone(),
+                    line: t.line,
+                    col: t.col,
+                    message: format!(
+                        "{ty} is {owner}-lane state; lane struct {lane_name} may \
+                         not embed another lane's owned types — cross-lane effects \
+                         travel only through the window merge"
+                    ),
+                });
+            }
+            i = end.max(i + 1);
+        }
+    }
+}
+
+/// Names of every type declared in a `/sim/` source file (outside test
+/// modules) — the set a lane struct may legitimately own.
+fn sim_defined_types(sources: &[SourceFile], scans: &[Scan]) -> Vec<String> {
+    let mut out = Vec::new();
+    for (file, scan) in sources.iter().zip(scans) {
+        if !file.path.contains("/sim/") {
+            continue;
+        }
+        for (i, t) in scan.tokens.iter().enumerate() {
+            let Tok::Ident(kw) = &t.tok else { continue };
+            if scan.in_test[i] || (kw != "struct" && kw != "enum") {
+                continue;
+            }
+            if let Some(Tok::Ident(name)) = scan.tokens.get(i + 1).map(|t| &t.tok) {
+                if !out.contains(name) {
+                    out.push(name.clone());
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Token range of a struct's body, searching just past its name: the
+/// contents of `{ … }` (field struct) or `( … )` (tuple struct), both
+/// exclusive of the delimiters; a unit struct yields an empty range.
+fn struct_body(tokens: &[Token], mut i: usize) -> (usize, usize) {
+    while i < tokens.len() {
+        let open = match &tokens[i].tok {
+            Tok::Punct(';') => return (i, i),
+            Tok::Punct(c) if *c == '{' || *c == '(' => *c,
+            _ => {
+                i += 1;
+                continue;
+            }
+        };
+        let close = if open == '{' { '}' } else { ')' };
+        let mut depth = 1;
+        let mut j = i + 1;
+        while j < tokens.len() && depth > 0 {
+            match &tokens[j].tok {
+                Tok::Punct(c) if *c == open => depth += 1,
+                Tok::Punct(c) if *c == close => depth -= 1,
+                _ => {}
+            }
+            j += 1;
+        }
+        return (i + 1, j.saturating_sub(1));
+    }
+    (i, i)
 }
 
 /// Per-arm isolation certificates, parallel to `fa.arms`: the sorted
@@ -133,4 +252,93 @@ pub fn certificates(sources: &[SourceFile], scans: &[Scan], fa: &FlowAnalysis) -
         out.push(touches);
     }
     out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::lexer::scan;
+    use super::*;
+
+    fn run(files: &[(&str, &str)]) -> Vec<Violation> {
+        let sources: Vec<SourceFile> = files
+            .iter()
+            .map(|(p, t)| SourceFile {
+                path: (*p).into(),
+                text: (*t).into(),
+            })
+            .collect();
+        let scans: Vec<Scan> = sources.iter().map(|f| scan(&f.text)).collect();
+        let mut allows: Vec<FileAllows> = scans.iter().map(FileAllows::new).collect();
+        let mut out = Vec::new();
+        check(&sources, &scans, &mut allows, &mut out);
+        out
+    }
+
+    #[test]
+    fn lane_struct_may_not_embed_foreign_lane_state() {
+        let v = run(&[(
+            "rust/src/sim/lane.rs",
+            "pub(crate) struct LaneCore { table: WorkerTable }",
+        )]);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert_eq!(v[0].rule, LANE_ISOLATION);
+        assert!(v[0].message.contains("WorkerTable"));
+        assert!(v[0].message.contains("LaneCore"));
+    }
+
+    #[test]
+    fn sim_defined_types_are_lane_local() {
+        // ContainerRuntime is tier-owned *and* defined under /sim/ — the
+        // per-lane copy of the simulated runtime is exactly the point.
+        let v = run(&[
+            (
+                "rust/src/sim/container.rs",
+                "pub struct ContainerRuntime { pub registry_mbps: f64 }",
+            ),
+            (
+                "rust/src/sim/lane.rs",
+                "pub(crate) struct LaneCore { containers: ContainerRuntime }",
+            ),
+        ]);
+        assert!(v.is_empty(), "{v:?}");
+    }
+
+    #[test]
+    fn lane_rule_scopes_to_lane_structs_outside_tests() {
+        // Non-Lane structs in /sim/ are out of scope (the dispatcher
+        // rule, not this one, polices real cross-lane use)...
+        let harness = run(&[(
+            "rust/src/sim/mod.rs",
+            "struct Harness { t: WorkerTable }",
+        )]);
+        assert!(harness.is_empty(), "{harness:?}");
+        // ...as are lane structs declared inside #[cfg(test)] modules.
+        let fixture = run(&[(
+            "rust/src/sim/lane.rs",
+            "#[cfg(test)]\nmod tests {\n    struct LaneFixture {\n        t: WorkerTable,\n    }\n}\n",
+        )]);
+        assert!(fixture.is_empty(), "{fixture:?}");
+    }
+
+    #[test]
+    fn allow_pragma_suppresses_lane_struct_finding() {
+        let v = run(&[(
+            "rust/src/sim/lane.rs",
+            "pub(crate) struct LaneOutbox {\n    \
+             // lint: allow(lane-isolation, read-only census mirror)\n    \
+             table: WorkerTable,\n}\n",
+        )]);
+        assert!(v.is_empty(), "{v:?}");
+    }
+
+    #[test]
+    fn tuple_and_unit_lane_structs_are_covered() {
+        let v = run(&[(
+            "rust/src/sim/lane.rs",
+            "struct LaneTag;\nstruct LaneRef(ClusterTable);\n",
+        )]);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert!(v[0].message.contains("ClusterTable"));
+        assert!(v[0].message.contains("LaneRef"));
+    }
 }

@@ -100,6 +100,12 @@ fn print_help() {
              --seed N --duration S --scheduler rom|ldp\n\
              --shape CxW                      topology: C clusters x W workers each\n\
                                               (e.g. 16x6; --clusters/--workers override)\n\
+             --threads N                      lane-sharded parallel sim core: one lane\n\
+                                              per cluster drained by up to N threads\n\
+                                              (0 = classic single-lane loop; reports\n\
+                                              are bit-identical for every N >= 1)\n\
+             --storm-10k                      64x160 10k-worker storm preset on the\n\
+                                              lane engine (threads=4; flags override)\n\
              --services N                     cap on concurrently live churn services\n\
              --autoscale-cpu                  autoscaler keys off observed per-service\n\
                                               CPU telemetry instead of the synthetic\n\
@@ -159,7 +165,7 @@ fn cmd_run(args: &[String]) -> Result<()> {
         cfg.services.len(),
         oakestra::util::mean(&times)
     );
-    let m = &tb.sim.core.metrics;
+    let m = tb.sim.metrics();
     println!(
         "control messages: worker→cluster {}  cluster→worker {}  cluster→root {}  root→cluster {}",
         m.msgs(oakestra::messaging::labels::WORKER_TO_CLUSTER),
@@ -405,6 +411,11 @@ fn cmd_churn(args: &[String]) -> Result<()> {
             }
         }
     }
+    if args.iter().any(|a| a == "--storm-10k") {
+        // The 10k-worker lane-sharded storm; explicit flags below still
+        // override individual knobs (shape, duration, threads, ...).
+        cfg = bh::ChurnConfig::storm_10k(cfg.seed);
+    }
     if let Some(s) = flag_value(args, "--duration") {
         cfg.duration_s = s.parse()?;
     }
@@ -432,16 +443,21 @@ fn cmd_churn(args: &[String]) -> Result<()> {
     if let Some(s) = flag_value(args, "--rejoin-chance") {
         cfg.rejoin_chance = s.parse()?;
     }
+    if let Some(s) = flag_value(args, "--threads") {
+        cfg.threads = s.parse()?;
+    }
     let strict = args.iter().any(|a| a == "--strict");
     let out = flag_value(args, "--out").unwrap_or("BENCH_churn.json");
     println!(
-        "churn: scenario={:?} seed={} topology {}x{} scheduler {:?}, {}s virtual churn",
+        "churn: scenario={:?} seed={} topology {}x{} scheduler {:?}, \
+         {}s virtual churn, threads={}",
         cfg.scenario,
         cfg.seed,
         cfg.clusters,
         cfg.workers_per_cluster,
         cfg.scheduler,
-        cfg.duration_s
+        cfg.duration_s,
+        cfg.threads
     );
     let report = bh::run_churn(&cfg);
     print_tables(&report.tables());

@@ -176,6 +176,21 @@ impl NodeUsage {
         self.set_mem((self.mem_mb + delta_mb).max(0.0));
     }
 
+    /// Fold another node's usage record into this one (lane-merge path;
+    /// in practice each node is charged from exactly one lane, so at most
+    /// one side carries data).
+    pub fn merge_from(&mut self, other: &NodeUsage) {
+        debug_assert_eq!(self.window, other.window, "mismatched usage windows");
+        if other.cpu_busy_ms.len() > self.cpu_busy_ms.len() {
+            self.cpu_busy_ms.resize(other.cpu_busy_ms.len(), 0.0);
+        }
+        for (i, v) in other.cpu_busy_ms.iter().enumerate() {
+            self.cpu_busy_ms[i] += v;
+        }
+        self.mem_mb += other.mem_mb;
+        self.peak_mem_mb = self.peak_mem_mb.max(other.peak_mem_mb);
+    }
+
     /// Mean CPU utilization (fraction of one core) across the window range
     /// `[from, to)`. Empty windows count as idle; an empty or inverted
     /// range (`to <= from`, which spans zero windows) is 0.0 rather than
@@ -315,6 +330,53 @@ impl Metrics {
         self.node_usage
             .get(node.0 as usize)
             .and_then(|u| u.as_ref())
+    }
+
+    /// Fold another sink into this one. The lane-sharded sim gives every
+    /// lane its own `Metrics` and merges them **in lane-index order** at
+    /// read points — counters commute, but histogram sample order and
+    /// float accumulation do not, so the fixed fold order is what keeps
+    /// merged reports identical across `--threads` values. Keys are the
+    /// same `&'static str` literals on both sides, so re-interning via
+    /// the public record paths stays on the pointer-memo fast path.
+    pub fn merge_from(&mut self, other: &Metrics) {
+        debug_assert_eq!(self.window, other.window, "mismatched metrics windows");
+        for (i, &name) in other.counter_keys.names.iter().enumerate() {
+            let v = other.counter_vals.get(i).copied().unwrap_or(0);
+            if v > 0 {
+                self.add(name, v);
+            }
+        }
+        for (i, &name) in other.hist_keys.names.iter().enumerate() {
+            if let Some(h) = other.hists.get(i) {
+                for &s in h.samples() {
+                    self.observe(name, s);
+                }
+            }
+        }
+        for (i, &name) in other.msg_keys.names.iter().enumerate() {
+            let count = other.msg_counts.get(i).copied().unwrap_or(0);
+            if count == 0 {
+                continue;
+            }
+            let j = self.msg_keys.resolve(name);
+            if j >= self.msg_counts.len() {
+                self.msg_counts.resize(j + 1, 0);
+                self.msg_bytes.resize(j + 1, 0);
+            }
+            self.msg_counts[j] += count;
+            self.msg_bytes[j] += other.msg_bytes.get(i).copied().unwrap_or(0);
+        }
+        if other.node_usage.len() > self.node_usage.len() {
+            self.node_usage.resize(other.node_usage.len(), None);
+        }
+        for (i, u) in other.node_usage.iter().enumerate() {
+            let Some(u) = u else { continue };
+            match &mut self.node_usage[i] {
+                Some(mine) => mine.merge_from(u),
+                slot @ None => *slot = Some(u.clone()),
+            }
+        }
     }
 }
 
@@ -477,6 +539,36 @@ mod tests {
         m.observe("cluster.sched_ms", 2.5);
         assert_eq!(m.histogram("cluster.sched_ms").unwrap().count(), 2);
         assert!(m.histogram("missing").is_none());
+    }
+
+    #[test]
+    fn merge_folds_every_store() {
+        let mut a = Metrics::default();
+        let mut b = Metrics::default();
+        a.inc("root.op.submit");
+        b.add("root.op.submit", 2);
+        b.inc("cluster.worker_dead");
+        a.observe("cluster.sched_ms", 1.0);
+        b.observe("cluster.sched_ms", 2.0);
+        b.observe("root.rank_ms", 9.0);
+        a.record_msg("worker->cluster", 100);
+        b.record_msg("worker->cluster", 50);
+        b.record_msg("cluster->root", 512);
+        a.usage_mut(NodeId(0)).charge_cpu(SimTime::ZERO, 10.0);
+        b.usage_mut(NodeId(2)).charge_cpu(SimTime::ZERO, 500.0);
+        a.merge_from(&b);
+        assert_eq!(a.counter("root.op.submit"), 3);
+        assert_eq!(a.counter("cluster.worker_dead"), 1);
+        // Histogram samples append in fold order: a's own first, then b's.
+        assert_eq!(a.histogram("cluster.sched_ms").unwrap().samples(), &[1.0, 2.0]);
+        assert_eq!(a.histogram("root.rank_ms").unwrap().count(), 1);
+        assert_eq!(a.msgs("worker->cluster"), 2);
+        assert_eq!(a.bytes("worker->cluster"), 150);
+        assert_eq!(a.total_msgs(), 3);
+        let u2 = a.usage(NodeId(2)).unwrap();
+        let util = u2.cpu_util(SimTime::ZERO, SimTime::from_secs(1.0));
+        assert!((util - 0.5).abs() < 1e-9, "util={util}");
+        assert!(a.usage(NodeId(1)).is_none());
     }
 
     #[test]

@@ -1,0 +1,374 @@
+//! Per-lane event machinery for the sharded simulator core.
+//!
+//! A **lane** is one independently drainable shard of the event loop:
+//! its own event heap, RNG stream, metrics sink, container-runtime cache
+//! and failure bitmap, plus the actors homed on its nodes. Lanes are cut
+//! along the certified isolation boundaries (`rust/src/lint/isolation.rs`:
+//! root lane + one lane per cluster subtree), so within a synchronization
+//! window no two lanes touch the same state and they can drain in
+//! parallel.
+//!
+//! Cross-lane interaction rides the network: a send whose target actor
+//! lives on another lane is staged in a [`LaneOutbox`] slot and merged
+//! into the target lane's heap at the window barrier, in fixed
+//! `(origin_lane, origin_ix)` order — which makes the merged event order
+//! (and therefore every downstream RNG draw) independent of how many
+//! threads drained the window. Node-failure flips staged by an actor are
+//! broadcast the same way.
+//!
+//! Within a lane, all events at the minimal pending `SimTime` are drained
+//! as one **batch** before the heap is consulted again: new events pushed
+//! during the batch park in a defer buffer and join the heap afterwards.
+//! Because every push carries `at >= now` and a fresh (higher) sequence
+//! number, batch order is exactly the order the one-event-at-a-time loop
+//! would have produced — the batch only saves heap churn. The win is
+//! counted under `sim.lane.batch_events` / `sim.lane.batch_drains`.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+use std::sync::Mutex;
+
+use crate::metrics::Metrics;
+use crate::util::{NodeId, Rng, SimTime};
+
+use super::{Actor, ActorId, ContainerRuntime, Ctx, SimCore, SimMsg};
+
+pub(crate) const BATCH_EVENTS_KEY: &str = "sim.lane.batch_events";
+pub(crate) const BATCH_DRAINS_KEY: &str = "sim.lane.batch_drains";
+
+/// One queued delivery. Orders by `(at, seq)`: virtual time first, then
+/// the per-lane push sequence number as a deterministic tiebreak.
+#[derive(Debug)]
+pub(crate) struct Event {
+    pub(crate) at: SimTime,
+    pub(crate) seq: u64,
+    pub(crate) target: ActorId,
+    pub(crate) msg: SimMsg,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at && self.seq == other.seq
+    }
+}
+impl Eq for Event {}
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        (self.at, self.seq).cmp(&(other.at, other.seq))
+    }
+}
+
+/// A delivery bound for another lane, parked until the window barrier.
+/// `(origin_lane, origin_ix)` is a unique, thread-count-independent stamp
+/// that fixes the merge order.
+#[derive(Debug)]
+pub(crate) struct OutMsg {
+    pub(crate) at: SimTime,
+    pub(crate) target: ActorId,
+    pub(crate) msg: SimMsg,
+    pub(crate) origin_lane: u32,
+    pub(crate) origin_ix: u64,
+}
+
+/// A node-failure transition staged by an actor mid-window; applied to
+/// every other lane's failure bitmap at the barrier.
+#[derive(Clone, Debug)]
+pub(crate) struct Flip {
+    pub(crate) origin_lane: u32,
+    pub(crate) origin_ix: u64,
+    pub(crate) node: NodeId,
+    pub(crate) failed: bool,
+}
+
+/// Everything one lane owns except its actors (split out so a dispatched
+/// actor can borrow the core mutably while it is detached).
+pub(crate) struct LaneCore {
+    pub(crate) id: u32,
+    /// Virtual time of the last event this lane executed.
+    pub(crate) clock: SimTime,
+    queue: BinaryHeap<Reverse<Event>>,
+    seq: u64,
+    /// O(1)-maintained mirror of `queue.len() + defer.len()`.
+    n_events: usize,
+    /// Queued events that are NOT timers (messages in flight). Timers are
+    /// self-rescheduling background noise; this counter is what
+    /// quiescence (and churn's leak audits) actually care about.
+    pub(crate) non_timer_pending: usize,
+    pub(crate) rng: Rng,
+    pub(crate) metrics: Metrics,
+    /// Image-pull cache; per-lane is exact because a node's pulls are
+    /// only ever issued from its own lane.
+    pub(crate) containers: ContainerRuntime,
+    /// `failed[node]` — this lane's view of the crash bitmap. Flips made
+    /// by other lanes arrive at window barriers.
+    failed: Vec<bool>,
+    /// Same-tick batch parking: pushes made while draining a batch land
+    /// here (already sequenced) and join the heap when the batch ends.
+    defer: Vec<Event>,
+    deferring: bool,
+    /// Monotonic stamp shared by cross-lane messages and failure flips.
+    cross_ix: u64,
+}
+
+impl LaneCore {
+    pub(crate) fn new(id: u32, rng: Rng) -> Self {
+        LaneCore {
+            id,
+            clock: SimTime::ZERO,
+            queue: BinaryHeap::new(),
+            seq: 0,
+            n_events: 0,
+            non_timer_pending: 0,
+            rng,
+            metrics: Metrics::default(),
+            containers: ContainerRuntime::default(),
+            failed: Vec::new(),
+            defer: Vec::new(),
+            deferring: false,
+            cross_ix: 0,
+        }
+    }
+
+    pub(crate) fn push(&mut self, at: SimTime, target: ActorId, msg: SimMsg) {
+        if !matches!(msg, SimMsg::Timer(_)) {
+            self.non_timer_pending += 1;
+        }
+        self.n_events += 1;
+        let seq = self.seq;
+        self.seq += 1;
+        let ev = Event {
+            at,
+            seq,
+            target,
+            msg,
+        };
+        if self.deferring {
+            self.defer.push(ev);
+        } else {
+            self.queue.push(Reverse(ev));
+        }
+    }
+
+    /// Virtual time of the next queued event, if any.
+    pub(crate) fn next_at(&self) -> Option<SimTime> {
+        self.queue.peek().map(|Reverse(e)| e.at)
+    }
+
+    /// Pop the next event only if it sits exactly at `at` (batch drain).
+    fn pop_at(&mut self, at: SimTime) -> Option<Event> {
+        if !matches!(self.queue.peek(), Some(Reverse(e)) if e.at == at) {
+            return None;
+        }
+        let Reverse(ev) = self.queue.pop().unwrap();
+        self.note_pop(&ev);
+        Some(ev)
+    }
+
+    /// Pop the next event unconditionally (legacy quiescence loop).
+    pub(crate) fn pop_next(&mut self) -> Option<Event> {
+        let Reverse(ev) = self.queue.pop()?;
+        self.note_pop(&ev);
+        Some(ev)
+    }
+
+    fn note_pop(&mut self, ev: &Event) {
+        if !matches!(ev.msg, SimMsg::Timer(_)) {
+            self.non_timer_pending -= 1;
+        }
+        self.n_events -= 1;
+    }
+
+    fn flush_defer(&mut self) {
+        while let Some(ev) = self.defer.pop() {
+            self.queue.push(Reverse(ev));
+        }
+        debug_assert_eq!(
+            self.n_events,
+            self.queue.len(),
+            "lane {} event counter drifted from its heap",
+            self.id
+        );
+    }
+
+    /// Total queued events (timers included), O(1).
+    pub(crate) fn pending_events(&self) -> usize {
+        debug_assert_eq!(self.n_events, self.queue.len() + self.defer.len());
+        self.n_events
+    }
+
+    pub(crate) fn is_failed(&self, node: NodeId) -> bool {
+        self.failed.get(node.0 as usize).copied().unwrap_or(false)
+    }
+
+    pub(crate) fn set_failed(&mut self, node: NodeId, failed: bool) {
+        let i = node.0 as usize;
+        if i >= self.failed.len() {
+            if !failed {
+                return; // clearing a node that was never failed
+            }
+            self.failed.resize(i + 1, false);
+        }
+        self.failed[i] = failed;
+    }
+
+    pub(crate) fn next_cross_ix(&mut self) -> u64 {
+        let ix = self.cross_ix;
+        self.cross_ix += 1;
+        ix
+    }
+}
+
+/// One shard of the simulator: its actors plus the lane core.
+pub(crate) struct Lane {
+    pub(crate) actors: Vec<Option<Box<dyn Actor>>>,
+    pub(crate) core: LaneCore,
+}
+
+impl Lane {
+    pub(crate) fn new(id: u32, rng: Rng) -> Self {
+        Lane {
+            actors: Vec::new(),
+            core: LaneCore::new(id, rng),
+        }
+    }
+}
+
+/// Per-window staging area for cross-lane traffic: one mutex-guarded
+/// inbox per target lane plus the shared failure-flip list. Append order
+/// under threads is arbitrary; the merge sorts by the origin stamp, so
+/// nothing downstream can observe it.
+pub(crate) struct LaneOutbox {
+    boxes: Vec<Mutex<Vec<OutMsg>>>,
+    flips: Mutex<Vec<Flip>>,
+}
+
+impl LaneOutbox {
+    pub(crate) fn new(n_lanes: usize) -> Self {
+        LaneOutbox {
+            boxes: (0..n_lanes).map(|_| Mutex::new(Vec::new())).collect(),
+            flips: Mutex::new(Vec::new()),
+        }
+    }
+
+    pub(crate) fn post(&self, target_lane: usize, msg: OutMsg) {
+        self.boxes[target_lane].lock().unwrap().push(msg);
+    }
+
+    pub(crate) fn stage_flip(&self, flip: Flip) {
+        self.flips.lock().unwrap().push(flip);
+    }
+
+    /// Snapshot (not drain): every worker thread applies the same sorted
+    /// list to its own lanes; the lead thread clears it at the barrier.
+    pub(crate) fn flips_snapshot_sorted(&self) -> Vec<Flip> {
+        let mut v = self.flips.lock().unwrap().clone();
+        v.sort_unstable_by_key(|f| (f.origin_lane, f.origin_ix));
+        v
+    }
+
+    pub(crate) fn clear_flips(&self) {
+        self.flips.lock().unwrap().clear();
+    }
+
+    pub(crate) fn take_inbox(&self, lane: usize) -> Vec<OutMsg> {
+        std::mem::take(&mut *self.boxes[lane].lock().unwrap())
+    }
+}
+
+/// Dispatch one event to its actor on this lane.
+pub(crate) fn dispatch_event(
+    lane: &mut Lane,
+    shared: &SimCore,
+    outbox: Option<&LaneOutbox>,
+    ev: Event,
+) {
+    let Event { at, target, msg, .. } = ev;
+    lane.core.clock = at;
+    let slot = shared.slot_of(target);
+    // Detach the actor so it can borrow the lane core mutably.
+    let Some(mut actor) = lane.actors[slot].take() else {
+        return; // actor removed mid-flight
+    };
+    let node = shared.node_of(target);
+    {
+        let mut ctx = Ctx {
+            now: at,
+            self_id: target,
+            self_node: node,
+            lane: &mut lane.core,
+            shared,
+            outbox,
+        };
+        actor.handle(&mut ctx, msg);
+    }
+    lane.actors[slot] = Some(actor);
+}
+
+/// Drain every event with `at <= limit`, batching same-instant runs.
+/// With `outbox: None` (single-lane sim) this IS the legacy `run_until`
+/// loop: identical dispatch order, fewer heap operations.
+pub(crate) fn drain_lane(
+    lane: &mut Lane,
+    limit: SimTime,
+    shared: &SimCore,
+    outbox: Option<&LaneOutbox>,
+) {
+    loop {
+        let Some(at) = lane.core.next_at() else {
+            break;
+        };
+        if at > limit {
+            break;
+        }
+        lane.core.deferring = true;
+        let mut batched = 0u64;
+        while let Some(ev) = lane.core.pop_at(at) {
+            batched += 1;
+            dispatch_event(lane, shared, outbox, ev);
+        }
+        lane.core.deferring = false;
+        lane.core.flush_defer();
+        lane.core.metrics.add(BATCH_EVENTS_KEY, batched);
+        lane.core.metrics.inc(BATCH_DRAINS_KEY);
+    }
+}
+
+/// Fold one window's cross-lane arrivals (and other lanes' failure
+/// flips) into this lane. `inbox` is sorted by the origin stamp so the
+/// resulting sequence numbers — and every later tiebreak — are the same
+/// no matter which thread drained which lane.
+pub(crate) fn merge_lane(
+    lane: &mut Lane,
+    mut inbox: Vec<OutMsg>,
+    flips: &[Flip],
+    horizon: SimTime,
+) {
+    inbox.sort_unstable_by_key(|m| (m.origin_lane, m.origin_ix));
+    for m in inbox {
+        debug_assert!(
+            m.at > horizon,
+            "cross-lane delivery at {} inside the window ending {horizon}: \
+             cross-lane interaction must ride the network (>= the minimum \
+             remote link delay)",
+            m.at
+        );
+        lane.core.push(m.at, m.target, m.msg);
+    }
+    for f in flips {
+        if f.origin_lane != lane.core.id {
+            lane.core.set_failed(f.node, f.failed);
+        }
+    }
+}
+
+/// Per-lane RNG stream: lane 0 keeps the master seed's stream (so a
+/// single-lane sim is bit-identical to the unsharded simulator); lane k
+/// derives an independent stream by golden-ratio offset.
+pub(crate) fn lane_rng(seed: u64, k: u32) -> Rng {
+    Rng::seeded(seed.wrapping_add((k as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)))
+}

@@ -6,11 +6,40 @@
 //! drivers) are [`Actor`]s pinned to simulated nodes. Actors exchange
 //! [`SimMsg`]s through a network model with per-link delay/jitter/loss/
 //! bandwidth, consume CPU via explicit cost charging (feeding the
-//! utilization figures), and set timers. Event order is fully
-//! deterministic: ties on the virtual clock break by sequence number, and
-//! all randomness flows from one seeded RNG.
+//! utilization figures), and set timers.
+//!
+//! # Lane-sharded event loop
+//!
+//! The event loop is sharded into **lanes** ([`lane::Lane`]) cut along
+//! the boundaries the `lane-isolation` lint certifies: by convention
+//! lane 0 hosts the root tier (plus clients/drivers co-located on the
+//! root node) and each cluster subtree gets its own lane. Every lane
+//! owns its heap, RNG stream, metrics sink and failure bitmap; [`Ctx`]
+//! is the single reroute point — a send whose target actor is homed on
+//! another lane parks in a [`lane::LaneOutbox`] instead of a heap.
+//!
+//! Lanes drain **conservatively** in windows: with `T` the minimum next
+//! event time across lanes and `L` the minimum remote link delay
+//! ([`Network::min_remote_delay_us`]), every lane may safely run to
+//! `T + L - 1` because no cross-lane message sent inside the window can
+//! arrive before `T + L`. At the window barrier, staged messages merge
+//! into their target lanes in fixed `(origin_lane, origin_ix)` order, so
+//! the sequence numbers they draw — and every later event tiebreak and
+//! RNG draw — are identical whether the window was drained by one thread
+//! or eight. Same seed, same `--threads`-independent trace, enforced by
+//! `rust/tests/golden.rs` and `rust/tests/lane_props.rs`.
+//!
+//! A sim left unsharded (the default: `Sim::new` without
+//! [`Sim::shard_lanes`]) has exactly one lane and skips the window
+//! machinery entirely — that path is bit-identical to the pre-lane
+//! sequential simulator, which the churn golden fixture pins.
+//!
+//! Event order is fully deterministic in both modes: ties on the virtual
+//! clock break by per-lane sequence number, and all randomness flows
+//! from seeded per-lane RNG streams.
 
 mod container;
+pub(crate) mod lane;
 mod msg;
 mod network;
 
@@ -19,12 +48,16 @@ pub use msg::{DataMsg, KubeMsg, OakMsg, ReplacementReason, SimMsg, TimerKind};
 pub use network::{LinkProfile, Network, Transport};
 
 use std::any::Any;
-use std::cmp::Reverse;
-use std::collections::BinaryHeap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Barrier;
 
 use crate::metrics::Metrics;
 use crate::model::NodeClass;
 use crate::util::{NodeId, Rng, SimTime};
+
+use lane::{
+    dispatch_event, drain_lane, lane_rng, merge_lane, Flip, Lane, LaneCore, LaneOutbox, OutMsg,
+};
 
 /// Dense actor handle (index into the actor table).
 #[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord, Debug)]
@@ -32,36 +65,14 @@ pub struct ActorId(pub u32);
 
 /// A simulated entity. `handle` runs to completion at a virtual instant;
 /// side effects (sends, timers, cpu charges) go through [`Ctx`].
-pub trait Actor {
+///
+/// `Send` because lanes (and the actors homed on them) migrate across
+/// the worker threads that drain a window.
+pub trait Actor: Send {
     fn handle(&mut self, ctx: &mut Ctx<'_>, msg: SimMsg);
     /// Downcasting support so tests/benches can inspect actor state.
     fn as_any(&self) -> &dyn Any;
     fn as_any_mut(&mut self) -> &mut dyn Any;
-}
-
-#[derive(Debug)]
-struct Event {
-    at: SimTime,
-    seq: u64,
-    target: ActorId,
-    msg: SimMsg,
-}
-
-impl PartialEq for Event {
-    fn eq(&self, other: &Self) -> bool {
-        self.at == other.at && self.seq == other.seq
-    }
-}
-impl Eq for Event {}
-impl PartialOrd for Event {
-    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
-        Some(self.cmp(other))
-    }
-}
-impl Ord for Event {
-    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        (self.at, self.seq).cmp(&(other.at, other.seq))
-    }
 }
 
 /// Static description of a simulated node.
@@ -70,44 +81,28 @@ pub struct SimNode {
     pub class: NodeClass,
 }
 
-/// Everything except the actor table — actors receive `&mut SimCore`
-/// through [`Ctx`] while they are temporarily detached for dispatch.
+/// State shared read-only by every lane while a window drains: the node
+/// and actor tables (append-only between runs), the network model, and
+/// the lane topology. Mutable per-run state (heaps, RNGs, metrics,
+/// failure bitmaps) lives in each [`LaneCore`].
 pub struct SimCore {
-    pub clock: SimTime,
-    queue: BinaryHeap<Reverse<Event>>,
-    seq: u64,
-    /// Queued events that are NOT timers (messages in flight). Timers are
-    /// self-rescheduling background noise; this counter is what
-    /// quiescence (and churn's leak audits) actually care about.
-    non_timer_pending: usize,
     pub net: Network,
-    pub rng: Rng,
-    pub metrics: Metrics,
     /// Node table indexed by dense `NodeId` (same keying discipline as
     /// `metrics.node_usage`); `None` slots are never-registered ids.
     nodes: Vec<Option<SimNode>>,
     actor_node: Vec<NodeId>,
-    /// `failed[node]` — `send` asks this twice per message, so it's a
-    /// dense bitmap rather than a set; ids beyond the end are healthy.
-    failed: Vec<bool>,
-    pub containers: ContainerRuntime,
+    /// Lane homing an actor / a node (parallel to `actor_node`/`nodes`).
+    actor_lane: Vec<u32>,
+    /// Index of the actor within its lane's actor table.
+    actor_slot: Vec<u32>,
+    node_lane: Vec<u32>,
+    /// Worker threads a sharded sim may use per window (0/1 = drain
+    /// lanes sequentially; still windowed once sharded).
+    threads: usize,
+    master_seed: u64,
 }
 
 impl SimCore {
-    fn push(&mut self, at: SimTime, target: ActorId, msg: SimMsg) {
-        if !matches!(msg, SimMsg::Timer(_)) {
-            self.non_timer_pending += 1;
-        }
-        let seq = self.seq;
-        self.seq += 1;
-        self.queue.push(Reverse(Event {
-            at,
-            seq,
-            target,
-            msg,
-        }));
-    }
-
     pub fn node_of(&self, actor: ActorId) -> NodeId {
         self.actor_node[actor.0 as usize]
     }
@@ -119,33 +114,57 @@ impl SimCore {
             .class
     }
 
-    pub fn is_failed(&self, node: NodeId) -> bool {
-        self.failed.get(node.0 as usize).copied().unwrap_or(false)
+    pub(crate) fn lane_of(&self, actor: ActorId) -> u32 {
+        self.actor_lane[actor.0 as usize]
     }
 
-    pub fn set_failed(&mut self, node: NodeId, failed: bool) {
-        let i = node.0 as usize;
-        if i >= self.failed.len() {
-            if !failed {
-                return; // clearing a node that was never failed
-            }
-            self.failed.resize(i + 1, false);
-        }
-        self.failed[i] = failed;
+    pub(crate) fn slot_of(&self, actor: ActorId) -> usize {
+        self.actor_slot[actor.0 as usize] as usize
     }
 }
 
-/// Actor-facing API for one dispatch.
+/// Actor-facing API for one dispatch. This is the lane boundary the
+/// `lane-isolation` lint certifies: every accessor below touches only
+/// the dispatching lane's own state (`lane`) or the append-frozen shared
+/// tables (`shared`), and the push path reroutes cross-lane sends into
+/// the window outbox.
 pub struct Ctx<'a> {
     pub now: SimTime,
     pub self_id: ActorId,
     /// Node hosting `self_id`, resolved once per dispatch instead of once
     /// per `send`/`charge_cpu` call (the sim's hottest lookups).
     pub self_node: NodeId,
-    pub core: &'a mut SimCore,
+    pub(crate) lane: &'a mut LaneCore,
+    pub(crate) shared: &'a SimCore,
+    pub(crate) outbox: Option<&'a LaneOutbox>,
 }
 
 impl<'a> Ctx<'a> {
+    /// Route a delivery: own lane goes straight onto the heap (or the
+    /// same-tick defer buffer); another lane's parks in the outbox until
+    /// the window barrier.
+    fn push(&mut self, at: SimTime, to: ActorId, msg: SimMsg) {
+        let target_lane = self.shared.lane_of(to);
+        if target_lane == self.lane.id {
+            self.lane.push(at, to, msg);
+            return;
+        }
+        let outbox = self
+            .outbox
+            .expect("cross-lane send outside a window (unsharded sim has one lane)");
+        let origin_ix = self.lane.next_cross_ix();
+        outbox.post(
+            target_lane as usize,
+            OutMsg {
+                at,
+                target: to,
+                msg,
+                origin_lane: self.lane.id,
+                origin_ix,
+            },
+        );
+    }
+
     /// Shared transmit path of [`Ctx::send`] and
     /// [`Ctx::send_unreliable`]: one failed-endpoint check, one message
     /// accounting record, one delivery-delay draw.
@@ -158,22 +177,22 @@ impl<'a> Ctx<'a> {
         transport: Transport,
     ) {
         let src = self.self_node;
-        let dst = self.core.node_of(to);
-        if self.core.is_failed(src) || self.core.is_failed(dst) {
-            self.core.metrics.inc("net.dropped_failed_node");
+        let dst = self.shared.node_of(to);
+        if self.lane.is_failed(src) || self.lane.is_failed(dst) {
+            self.lane.metrics.inc("net.dropped_failed_node");
             return;
         }
-        self.core.metrics.record_msg(label, bytes);
+        self.lane.metrics.record_msg(label, bytes);
         match self
-            .core
+            .shared
             .net
-            .delivery_delay(src, dst, bytes, transport, &mut self.core.rng)
+            .delivery_delay(src, dst, bytes, transport, &mut self.lane.rng)
         {
             Some(delay) => {
                 let at = self.now + delay;
-                self.core.push(at, to, msg);
+                self.push(at, to, msg);
             }
-            None => self.core.metrics.inc("net.lost"),
+            None => self.lane.metrics.inc("net.lost"),
         }
     }
 
@@ -197,46 +216,47 @@ impl<'a> Ctx<'a> {
     }
 
     /// Deliver without touching the network (same-process components, e.g.
-    /// service manager → scheduler inside one orchestrator).
+    /// service manager → scheduler inside one orchestrator). Same-process
+    /// means same node, so this never crosses a lane.
     pub fn send_local(&mut self, to: ActorId, msg: SimMsg) {
         let at = self.now;
-        self.core.push(at, to, msg);
+        self.push(at, to, msg);
     }
 
     /// Set a timer on self.
     pub fn schedule(&mut self, delay: SimTime, msg: SimMsg) {
         let at = self.now + delay;
         let id = self.self_id;
-        self.core.push(at, id, msg);
+        self.push(at, id, msg);
     }
 
     /// Set a timer for another actor (used by experiment drivers).
     pub fn schedule_for(&mut self, to: ActorId, delay: SimTime, msg: SimMsg) {
         let at = self.now + delay;
-        self.core.push(at, to, msg);
+        self.push(at, to, msg);
     }
 
     /// Charge control-plane CPU time to this actor's node, scaled by the
     /// node's speed factor (a Pi burns more wall-clock per unit work).
     pub fn charge_cpu(&mut self, cpu_ms: f64) {
         let node = self.self_node;
-        let scaled = cpu_ms / self.core.node_class(node).speed_factor();
+        let scaled = cpu_ms / self.shared.node_class(node).speed_factor();
         let now = self.now;
-        self.core.metrics.usage_mut(node).charge_cpu(now, scaled);
+        self.lane.metrics.usage_mut(node).charge_cpu(now, scaled);
     }
 
     /// Adjust this node's resident-memory gauge.
     pub fn add_mem(&mut self, delta_mb: f64) {
         let node = self.self_node;
-        self.core.metrics.usage_mut(node).add_mem(delta_mb);
+        self.lane.metrics.usage_mut(node).add_mem(delta_mb);
     }
 
     pub fn rng(&mut self) -> &mut Rng {
-        &mut self.core.rng
+        &mut self.lane.rng
     }
 
     pub fn metrics(&mut self) -> &mut Metrics {
-        &mut self.core.metrics
+        &mut self.lane.metrics
     }
 
     pub fn my_node(&self) -> NodeId {
@@ -246,21 +266,45 @@ impl<'a> Ctx<'a> {
     /// Ground-truth RTT between two nodes (for ping emulation: Vivaldi
     /// feeds on these; the *scheduler* never reads them directly).
     pub fn rtt_ms(&mut self, a: NodeId, b: NodeId) -> f64 {
-        self.core.net.rtt_ms(a, b, &mut self.core.rng)
+        self.shared.net.rtt_ms(a, b, &mut self.lane.rng)
     }
 
     /// Node hosting `actor`. Dispatchers must use this instead of
-    /// reaching into `core` directly: `Ctx` is the lane boundary the
-    /// `lane-isolation` lint certifies, and the future sharded event
-    /// loop reroutes exactly these calls at lane edges.
+    /// reaching into the core directly: `Ctx` is the lane boundary the
+    /// `lane-isolation` lint certifies, and the sharded event loop
+    /// reroutes exactly these calls at lane edges.
     pub fn node_of(&self, actor: ActorId) -> NodeId {
-        self.core.node_of(actor)
+        self.shared.node_of(actor)
     }
 
-    /// Crash-stop status of `node` (see [`Ctx::node_of`] for why this
-    /// wrapper exists).
+    /// Crash-stop status of `node` — this lane's view of it; transitions
+    /// made from other lanes become visible at the next window barrier
+    /// (bounded by the minimum remote link delay, i.e. no sooner than
+    /// any message from that lane could have told us).
     pub fn is_failed(&self, node: NodeId) -> bool {
-        self.core.is_failed(node)
+        self.lane.is_failed(node)
+    }
+
+    /// Fail / recover a node from inside the simulation (drill drivers).
+    /// Applies to this lane immediately and broadcasts to the other
+    /// lanes at the window barrier.
+    pub fn set_node_failed(&mut self, node: NodeId, failed: bool) {
+        self.lane.set_failed(node, failed);
+        if let Some(outbox) = self.outbox {
+            let origin_ix = self.lane.next_cross_ix();
+            outbox.stage_flip(Flip {
+                origin_lane: self.lane.id,
+                origin_ix,
+                node,
+                failed,
+            });
+        }
+    }
+
+    /// Hardware class of `node` (see [`Ctx::node_of`] for why this
+    /// wrapper exists).
+    pub fn node_class(&self, node: NodeId) -> NodeClass {
+        self.shared.node_class(node)
     }
 
     /// Container cold-start time on `node`: image pull (cached layers
@@ -273,109 +317,241 @@ impl<'a> Ctx<'a> {
         image_key: u64,
         image_mb: u32,
     ) -> SimTime {
-        let pull = self.core.containers.pull_time(node, image_key, image_mb);
-        let start = self.core.containers.start_latency(&mut self.core.rng);
-        let speed = self.core.node_class(node).speed_factor();
+        let pull = self.lane.containers.pull_time(node, image_key, image_mb);
+        let start = self.lane.containers.start_latency(&mut self.lane.rng);
+        let speed = self.shared.node_class(node).speed_factor();
         SimTime::from_micros(((pull + start).as_micros() as f64 / speed) as u64)
     }
 }
 
-/// The simulator: actor table + core.
+/// What a windowed run is trying to reach (see [`window_horizon`]).
+#[derive(Clone, Copy)]
+enum RunMode {
+    /// Drain everything with `at <= until`.
+    Until(SimTime),
+    /// Drain until no message (non-timer event) is in flight, or the
+    /// hard limit passes.
+    Quiesce(SimTime),
+}
+
+/// Pure stop/continue decision for one window, given the global minimum
+/// next-event time `t_us` and the global in-flight message count. Every
+/// worker thread evaluates this on identical inputs and reaches the
+/// identical decision — no leader, no extra barrier.
+fn window_horizon(t_us: u64, live: usize, lmin_us: u64, mode: RunMode) -> Option<u64> {
+    match mode {
+        RunMode::Until(until) => {
+            if t_us == u64::MAX || t_us > until.0 {
+                None
+            } else {
+                Some(until.0.min(t_us + lmin_us - 1))
+            }
+        }
+        RunMode::Quiesce(hard_limit) => {
+            if live == 0 || t_us == u64::MAX || t_us > hard_limit.0 {
+                None
+            } else {
+                Some(hard_limit.0.min(t_us + lmin_us - 1))
+            }
+        }
+    }
+}
+
+/// Windowed engine, one thread: barrier-free but the same
+/// window/drain/merge phase structure as the threaded path, so the event
+/// trace is identical by construction. Returns the non-timer backlog at
+/// the stop decision.
+fn run_windows_seq(
+    lanes: &mut [Lane],
+    core: &SimCore,
+    outbox: &LaneOutbox,
+    lmin_us: u64,
+    mode: RunMode,
+) -> usize {
+    loop {
+        let mut t = u64::MAX;
+        let mut live = 0usize;
+        for lane in lanes.iter() {
+            if let Some(at) = lane.core.next_at() {
+                t = t.min(at.0);
+            }
+            live += lane.core.non_timer_pending;
+        }
+        let Some(h) = window_horizon(t, live, lmin_us, mode) else {
+            return live;
+        };
+        let horizon = SimTime(h);
+        for lane in lanes.iter_mut() {
+            drain_lane(lane, horizon, core, Some(outbox));
+        }
+        let flips = outbox.flips_snapshot_sorted();
+        for lane in lanes.iter_mut() {
+            let inbox = outbox.take_inbox(lane.core.id as usize);
+            merge_lane(lane, inbox, &flips, horizon);
+        }
+        outbox.clear_flips();
+    }
+}
+
+/// Windowed engine, scoped worker threads over contiguous lane chunks.
+/// Four barriers per window: publish minima → (all read the same
+/// decision inputs) drain → (all drains done) merge → (all merges done)
+/// lead thread resets the accumulators → next window.
+fn run_windows_par(
+    lanes: &mut [Lane],
+    core: &SimCore,
+    outbox: &LaneOutbox,
+    lmin_us: u64,
+    mode: RunMode,
+    threads: usize,
+) -> usize {
+    let chunk = lanes.len().div_ceil(threads);
+    let chunks: Vec<&mut [Lane]> = lanes.chunks_mut(chunk).collect();
+    let barrier = Barrier::new(chunks.len());
+    let t_min = AtomicU64::new(u64::MAX);
+    let live = AtomicUsize::new(0);
+    let leftover = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for (ti, my_lanes) in chunks.into_iter().enumerate() {
+            let (barrier, t_min, live, leftover) = (&barrier, &t_min, &live, &leftover);
+            s.spawn(move || loop {
+                let mut local_t = u64::MAX;
+                let mut local_live = 0usize;
+                for lane in my_lanes.iter() {
+                    if let Some(at) = lane.core.next_at() {
+                        local_t = local_t.min(at.0);
+                    }
+                    local_live += lane.core.non_timer_pending;
+                }
+                t_min.fetch_min(local_t, Ordering::SeqCst);
+                live.fetch_add(local_live, Ordering::SeqCst);
+                barrier.wait();
+                let t = t_min.load(Ordering::SeqCst);
+                let g_live = live.load(Ordering::SeqCst);
+                let Some(h) = window_horizon(t, g_live, lmin_us, mode) else {
+                    leftover.fetch_add(local_live, Ordering::SeqCst);
+                    break;
+                };
+                let horizon = SimTime(h);
+                for lane in my_lanes.iter_mut() {
+                    drain_lane(lane, horizon, core, Some(outbox));
+                }
+                barrier.wait();
+                let flips = outbox.flips_snapshot_sorted();
+                for lane in my_lanes.iter_mut() {
+                    let inbox = outbox.take_inbox(lane.core.id as usize);
+                    merge_lane(lane, inbox, &flips, horizon);
+                }
+                barrier.wait();
+                if ti == 0 {
+                    t_min.store(u64::MAX, Ordering::SeqCst);
+                    live.store(0, Ordering::SeqCst);
+                    outbox.clear_flips();
+                }
+                barrier.wait();
+            });
+        }
+    });
+    leftover.into_inner()
+}
+
+/// The simulator: lanes (actors + per-lane cores) over the shared core.
 pub struct Sim {
-    actors: Vec<Option<Box<dyn Actor>>>,
+    lanes: Vec<Lane>,
     pub core: SimCore,
 }
 
 impl Sim {
     pub fn new(seed: u64) -> Self {
         Sim {
-            actors: Vec::new(),
+            lanes: vec![Lane::new(0, lane_rng(seed, 0))],
             core: SimCore {
-                clock: SimTime::ZERO,
-                queue: BinaryHeap::new(),
-                seq: 0,
-                non_timer_pending: 0,
                 net: Network::default(),
-                rng: Rng::seeded(seed),
-                metrics: Metrics::default(),
                 nodes: Vec::new(),
                 actor_node: Vec::new(),
-                failed: Vec::new(),
-                containers: ContainerRuntime::default(),
+                actor_lane: Vec::new(),
+                actor_slot: Vec::new(),
+                node_lane: Vec::new(),
+                threads: 0,
+                master_seed: seed,
             },
         }
     }
 
+    /// Split the event loop into `n_lanes` lanes drained by up to
+    /// `threads` worker threads per window (`0`/`1` = windowed but
+    /// sequential). Must be called before any node or actor is added:
+    /// lane homing is fixed at registration. Lane 0 keeps the master
+    /// RNG stream; lanes `1..` get derived independent streams.
+    pub fn shard_lanes(&mut self, n_lanes: usize, threads: usize) {
+        assert!(n_lanes >= 1, "a sim needs at least one lane");
+        assert!(
+            self.core.nodes.is_empty() && self.core.actor_node.is_empty(),
+            "shard_lanes must run before nodes/actors are registered"
+        );
+        let seed = self.core.master_seed;
+        self.lanes = (0..n_lanes as u32).map(|k| Lane::new(k, lane_rng(seed, k))).collect();
+        self.core.threads = threads;
+    }
+
+    /// Re-derive every lane's RNG stream from a fresh master seed
+    /// (test harnesses that rebuild identical topologies).
+    pub fn reseed(&mut self, seed: u64) {
+        self.core.master_seed = seed;
+        for (k, lane) in self.lanes.iter_mut().enumerate() {
+            lane.core.rng = lane_rng(seed, k as u32);
+        }
+    }
+
     pub fn add_node(&mut self, node: NodeId, class: NodeClass) {
+        self.add_node_in_lane(node, class, 0);
+    }
+
+    /// Register `node` homed on `lane`. Nodes (and the actors on them)
+    /// never migrate between lanes.
+    pub fn add_node_in_lane(&mut self, node: NodeId, class: NodeClass, lane: usize) {
+        assert!(lane < self.lanes.len(), "lane {lane} out of range");
         let i = node.0 as usize;
         if i >= self.core.nodes.len() {
             self.core.nodes.resize_with(i + 1, || None);
+            self.core.node_lane.resize(i + 1, 0);
         }
         let prev = self.core.nodes[i].replace(SimNode { class });
         assert!(prev.is_none(), "node {node} registered twice");
+        self.core.node_lane[i] = lane as u32;
     }
 
     pub fn add_actor(&mut self, node: NodeId, actor: Box<dyn Actor>) -> ActorId {
         assert!(
-            self.core
-                .nodes
-                .get(node.0 as usize)
-                .map_or(false, |n| n.is_some()),
+            matches!(self.core.nodes.get(node.0 as usize), Some(Some(_))),
             "actor on unknown node {node}"
         );
-        let id = ActorId(self.actors.len() as u32);
-        self.actors.push(Some(actor));
+        let id = ActorId(self.core.actor_node.len() as u32);
+        let lane_ix = self.core.node_lane[node.0 as usize];
+        let lane = &mut self.lanes[lane_ix as usize];
+        self.core.actor_lane.push(lane_ix);
+        self.core.actor_slot.push(lane.actors.len() as u32);
+        lane.actors.push(Some(actor));
         self.core.actor_node.push(node);
         id
     }
 
     /// Inject a message at a given virtual time (experiment drivers).
     pub fn inject(&mut self, at: SimTime, target: ActorId, msg: SimMsg) {
-        self.core.push(at, target, msg);
+        let lane = self.core.lane_of(target) as usize;
+        self.lanes[lane].core.push(at, target, msg);
     }
 
-    /// Pop and dispatch the single next event. Returns false when the
-    /// queue is empty. The shared step of [`Sim::run_until`] and
-    /// [`Sim::run_to_quiescence`] — the non-timer backlog counter is
-    /// maintained exactly here and in [`SimCore::push`].
-    fn dispatch_one(&mut self) -> bool {
-        let Some(Reverse(ev)) = self.core.queue.pop() else {
-            return false;
-        };
-        if !matches!(ev.msg, SimMsg::Timer(_)) {
-            self.core.non_timer_pending -= 1;
-        }
-        self.core.clock = ev.at;
-        let idx = ev.target.0 as usize;
-        // Detach the actor so it can borrow the core mutably.
-        let Some(mut actor) = self.actors[idx].take() else {
-            return true; // actor removed mid-flight
-        };
-        let node = self.core.node_of(ev.target);
-        {
-            let mut ctx = Ctx {
-                now: ev.at,
-                self_id: ev.target,
-                self_node: node,
-                core: &mut self.core,
-            };
-            actor.handle(&mut ctx, ev.msg);
-        }
-        self.actors[idx] = Some(actor);
-        true
-    }
-
-    /// Run until the queue drains or the next event lies beyond `until`.
+    /// Run until the queues drain or the next event lies beyond `until`.
     /// The clock is left at the last *executed* event.
     pub fn run_until(&mut self, until: SimTime) {
-        while self
-            .core
-            .queue
-            .peek()
-            .map_or(false, |Reverse(e)| e.at <= until)
-        {
-            self.dispatch_one();
+        if self.lanes.len() == 1 {
+            // Single lane: the legacy sequential loop (batched; no
+            // windows, no outbox, bit-identical to the unsharded sim).
+            drain_lane(&mut self.lanes[0], until, &self.core, None);
+            return;
         }
+        self.run_windows(RunMode::Until(until));
     }
 
     /// Drain every in-flight **message** (non-timer event), processing
@@ -386,49 +562,114 @@ impl Sim {
     /// convergence point (churn's leak audits snapshot state here).
     /// Returns the non-timer backlog still pending (0 unless
     /// `hard_limit` was hit first).
+    ///
+    /// A sharded sim stops at window granularity: the zero-in-flight
+    /// check runs at each barrier, so a timer firing inside the final
+    /// window may push the stop one window (< the minimum link delay)
+    /// later than the unsharded loop would — identically so for every
+    /// thread count.
     pub fn run_to_quiescence(&mut self, hard_limit: SimTime) -> usize {
-        while self.core.non_timer_pending > 0
-            && self
-                .core
-                .queue
-                .peek()
-                .map_or(false, |Reverse(e)| e.at <= hard_limit)
-        {
-            self.dispatch_one();
+        if self.lanes.len() == 1 {
+            // Exact legacy per-event loop: quiescence is re-checked
+            // after every single dispatch.
+            loop {
+                let lane = &mut self.lanes[0];
+                if lane.core.non_timer_pending == 0 {
+                    break;
+                }
+                match lane.core.next_at() {
+                    Some(at) if at <= hard_limit => {}
+                    _ => break,
+                }
+                let ev = lane.core.pop_next().unwrap();
+                dispatch_event(lane, &self.core, None, ev);
+            }
+            return self.lanes[0].core.non_timer_pending;
         }
-        self.core.non_timer_pending
+        self.run_windows(RunMode::Quiesce(hard_limit))
     }
 
-    /// Total queued events (timers included).
+    fn run_windows(&mut self, mode: RunMode) -> usize {
+        let lmin_us = self.core.net.min_remote_delay_us();
+        let outbox = LaneOutbox::new(self.lanes.len());
+        let threads = self.core.threads.clamp(1, self.lanes.len());
+        let core = &self.core;
+        let lanes = &mut self.lanes[..];
+        if threads == 1 {
+            run_windows_seq(lanes, core, &outbox, lmin_us, mode)
+        } else {
+            run_windows_par(lanes, core, &outbox, lmin_us, mode, threads)
+        }
+    }
+
+    /// Total queued events (timers included) — an O(lanes) sum of
+    /// per-lane maintained counters.
     pub fn pending_events(&self) -> usize {
-        self.core.queue.len()
+        self.lanes.iter().map(|l| l.core.pending_events()).sum()
     }
 
     /// Queued events that are in-flight messages rather than timers.
     pub fn pending_non_timer_events(&self) -> usize {
-        self.core.non_timer_pending
+        self.lanes.iter().map(|l| l.core.non_timer_pending).sum()
     }
 
+    /// Virtual time of the last executed event across all lanes.
     pub fn now(&self) -> SimTime {
-        self.core.clock
+        self.lanes
+            .iter()
+            .map(|l| l.core.clock)
+            .max()
+            .unwrap_or(SimTime::ZERO)
+    }
+
+    /// Number of event-loop lanes (1 unless [`Sim::shard_lanes`] ran).
+    pub fn lane_count(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// Merged view of every lane's metrics sink, folded in lane-index
+    /// order (deterministic for counters, histogram sample order, and
+    /// float accumulation alike).
+    pub fn metrics(&self) -> Metrics {
+        let mut merged = self.lanes[0].core.metrics.clone();
+        for lane in &self.lanes[1..] {
+            merged.merge_from(&lane.core.metrics);
+        }
+        merged
+    }
+
+    /// Set the shared container-registry bandwidth on every lane's
+    /// runtime cache.
+    pub fn set_registry_mbps(&mut self, mbps: f64) {
+        for lane in &mut self.lanes {
+            lane.core.containers.registry_mbps = mbps;
+        }
     }
 
     /// Inspect an actor's state (tests/benches).
     pub fn actor_as<T: 'static>(&self, id: ActorId) -> Option<&T> {
-        self.actors[id.0 as usize]
+        let lane = self.core.lane_of(id) as usize;
+        let slot = self.core.slot_of(id);
+        self.lanes[lane].actors[slot]
             .as_deref()
             .and_then(|a| a.as_any().downcast_ref::<T>())
     }
 
     pub fn actor_as_mut<T: 'static>(&mut self, id: ActorId) -> Option<&mut T> {
-        self.actors[id.0 as usize]
+        let lane = self.core.lane_of(id) as usize;
+        let slot = self.core.slot_of(id);
+        self.lanes[lane].actors[slot]
             .as_deref_mut()
             .and_then(|a| a.as_any_mut().downcast_mut::<T>())
     }
 
     /// Fail / recover a node (failure-injection experiments, §4.2).
+    /// External callers run between windows, so the flip lands on every
+    /// lane's bitmap synchronously.
     pub fn set_node_failed(&mut self, node: NodeId, failed: bool) {
-        self.core.set_failed(node, failed);
+        for lane in &mut self.lanes {
+            lane.core.set_failed(node, failed);
+        }
     }
 }
 
@@ -509,14 +750,14 @@ mod tests {
         assert_eq!(pb.got, 5); // seqs 1,3,5,7,9
         assert_eq!(pa.got, 5); // seqs 2,4,6,8,10
         assert!(sim.now() > SimTime::ZERO);
-        assert_eq!(sim.core.metrics.msgs("test"), 10);
+        assert_eq!(sim.metrics().msgs("test"), 10);
     }
 
     #[test]
     fn identical_seeds_identical_traces() {
         let run = |seed| {
             let (mut sim, a, _) = build();
-            sim.core.rng = Rng::seeded(seed);
+            sim.reseed(seed);
             sim.core.net.set_default(LinkProfile::wan(50.0, 5.0, 0.0));
             sim.inject(SimTime::ZERO, a, SimMsg::Timer(TimerKind::Custom(0)));
             sim.run_until(SimTime::from_secs(30.0));
@@ -533,7 +774,7 @@ mod tests {
         sim.inject(SimTime::ZERO, a, SimMsg::Timer(TimerKind::Custom(0)));
         sim.run_until(SimTime::from_secs(5.0));
         assert_eq!(
-            sim.core.metrics.counter("net.dropped_failed_node"),
+            sim.metrics().counter("net.dropped_failed_node"),
             1,
             "send to failed node must be dropped"
         );
@@ -599,13 +840,99 @@ mod tests {
         let a = sim.add_actor(NodeId(0), Box::new(Burner));
         sim.inject(SimTime::ZERO, a, SimMsg::Timer(TimerKind::Custom(0)));
         sim.run_until(SimTime::from_secs(1.0));
-        let util = sim
-            .core
-            .metrics
+        let metrics = sim.metrics();
+        let util = metrics
             .usage(NodeId(0))
             .unwrap()
             .cpu_util(SimTime::ZERO, SimTime::from_secs(1.0));
         // 35ms at 0.35 speed = 100ms busy in a 1000ms window.
         assert!((util - 0.1).abs() < 1e-9, "util={util}");
+    }
+
+    /// Two-lane sim: same topology as `build()` but with each node homed
+    /// on its own lane, so every ping crosses the window merge path.
+    fn build_sharded(threads: usize) -> (Sim, ActorId, ActorId) {
+        let mut sim = Sim::new(9);
+        sim.shard_lanes(2, threads);
+        sim.add_node_in_lane(NodeId(0), NodeClass::S, 0);
+        sim.add_node_in_lane(NodeId(1), NodeClass::S, 1);
+        sim.core.net.set_default(LinkProfile::wan(50.0, 5.0, 0.0));
+        let a = sim.add_actor(
+            NodeId(0),
+            Box::new(Pinger {
+                peer: None,
+                sent: 0,
+                got: 0,
+                limit: 10,
+            }),
+        );
+        let b = sim.add_actor(
+            NodeId(1),
+            Box::new(Pinger {
+                peer: Some(a),
+                sent: 0,
+                got: 0,
+                limit: 10,
+            }),
+        );
+        sim.actor_as_mut::<Pinger>(a).unwrap().peer = Some(b);
+        (sim, a, b)
+    }
+
+    #[test]
+    fn lane_engine_is_thread_count_invariant() {
+        let run = |threads: usize| {
+            let (mut sim, a, b) = build_sharded(threads);
+            sim.inject(SimTime::ZERO, a, SimMsg::Timer(TimerKind::Custom(0)));
+            sim.run_until(SimTime::from_secs(30.0));
+            let m = sim.metrics();
+            let got = (
+                sim.actor_as::<Pinger>(a).unwrap().got,
+                sim.actor_as::<Pinger>(b).unwrap().got,
+            );
+            (sim.now().as_micros(), m.msgs("test"), got, sim.pending_events())
+        };
+        let one = run(1);
+        assert_eq!(one, run(2), "threads must not change the trace");
+        assert_eq!(one.2, (5, 5), "full exchange across the lane boundary");
+    }
+
+    #[test]
+    fn sharded_quiescence_matches_across_thread_counts() {
+        let run = |threads: usize| {
+            let (mut sim, a, _) = build_sharded(threads);
+            sim.inject(SimTime::ZERO, a, SimMsg::Timer(TimerKind::Custom(0)));
+            let leftover = sim.run_to_quiescence(SimTime::from_secs(60.0));
+            (leftover, sim.now().as_micros(), sim.pending_non_timer_events())
+        };
+        let one = run(1);
+        assert_eq!(one, run(4));
+        assert_eq!(one.0, 0, "pings must drain");
+    }
+
+    #[test]
+    fn same_tick_batching_is_counted() {
+        let (mut sim, a, _) = build();
+        // Three independent deliveries at the same instant: one drain
+        // round, three events.
+        for _ in 0..3 {
+            sim.inject(SimTime::from_secs(1.0), a, SimMsg::Timer(TimerKind::Custom(7)));
+        }
+        sim.run_until(SimTime::from_secs(2.0));
+        let m = sim.metrics();
+        let events = m.counter("sim.lane.batch_events");
+        let drains = m.counter("sim.lane.batch_drains");
+        assert!(events >= 3, "events={events}");
+        assert!(drains >= 1 && drains < events, "drains={drains} events={events}");
+    }
+
+    #[test]
+    fn pending_counters_stay_consistent() {
+        let (mut sim, a, _) = build();
+        sim.inject(SimTime::ZERO, a, SimMsg::Timer(TimerKind::Custom(0)));
+        assert_eq!(sim.pending_events(), 1);
+        assert_eq!(sim.pending_non_timer_events(), 0, "timers are not messages");
+        sim.run_until(SimTime::from_secs(10.0));
+        assert_eq!(sim.pending_events(), 0, "lan ping-pong drains fully");
     }
 }

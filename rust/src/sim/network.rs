@@ -174,6 +174,23 @@ impl Network {
         }
     }
 
+    /// Lower bound, in µs, on the delivery delay of any **remote**
+    /// (src != dst) message under the current profiles — the lookahead
+    /// window the lane-sharded sim may drain ahead of a barrier. Jitter,
+    /// serialization and retransmissions only ever add delay, and the
+    /// floor is monotone, so `floor(min(delay_ms) + impair) * 1000` is a
+    /// safe bound; clamped to ≥ 1 µs so windows always make progress.
+    /// Same-node delivery (a fixed 50 µs socket hop) never crosses a
+    /// lane: nodes are homed whole onto lanes.
+    pub(crate) fn min_remote_delay_us(&self) -> u64 {
+        let min_ms = self
+            .overrides
+            .values()
+            .map(|p| p.delay_ms)
+            .fold(self.default.delay_ms, f64::min);
+        (((min_ms + self.impair_delay_ms) * 1000.0).floor() as u64).max(1)
+    }
+
     /// Steady-state TCP throughput on this link in Mbit/s: the minimum of
     /// the link bandwidth, the receive-window limit (1 MiB window / RTT)
     /// and the Mathis loss model MSS/(RTT·√loss) — used for the bulk
@@ -261,6 +278,24 @@ mod tests {
         // Symmetric lookup.
         let q = net.profile(NodeId(1), NodeId(0));
         assert!((q.delay_ms - p.delay_ms).abs() < 1e-9);
+    }
+
+    #[test]
+    fn min_remote_delay_tracks_fastest_link() {
+        let mut net = Network::default();
+        assert_eq!(net.min_remote_delay_us(), 250); // lan() default, 0.25ms
+        net.set_default(LinkProfile::wan(50.0, 5.0, 0.0));
+        assert_eq!(net.min_remote_delay_us(), 50_000);
+        // A faster override lowers the bound.
+        net.set_link(NodeId(0), NodeId(1), LinkProfile::lan());
+        assert_eq!(net.min_remote_delay_us(), 250);
+        // Impairment raises every link uniformly.
+        net.impair_all(10.0, 0.0);
+        assert_eq!(net.min_remote_delay_us(), 10_250);
+        // Degenerate zero-delay profile still clamps to 1µs progress.
+        let mut z = Network::default();
+        z.set_default(LinkProfile::wan(0.0, 0.0, 0.0));
+        assert_eq!(z.min_remote_delay_us(), 1);
     }
 
     #[test]

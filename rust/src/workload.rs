@@ -391,7 +391,8 @@ mod tests {
         let mean = crate::util::mean(&last.e2e_ms);
         // Sum of stage costs (339) + network; detection dominates.
         assert!(mean > 300.0 && mean < 600.0, "mean={mean}");
-        let det = sim.core.metrics.histogram("video.detection_ms").unwrap();
+        let m = sim.metrics();
+        let det = m.histogram("video.detection_ms").unwrap();
         assert!(det.mean() > 200.0);
     }
 

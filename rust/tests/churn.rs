@@ -242,7 +242,7 @@ fn batched_submit_wave_survives_worker_kill_and_drains() {
     tb.fail_worker(victim);
     tb.sim.run_until(SimTime::from_secs(60.0));
     assert!(
-        tb.sim.core.metrics.counter("cluster.worker_dead") >= 1,
+        tb.sim.metrics().counter("cluster.worker_dead") >= 1,
         "kill must be detected"
     );
 

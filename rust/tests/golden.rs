@@ -1,0 +1,77 @@
+//! Golden-fixture pins for the churn report.
+//!
+//! `churn_quick_seed42.json` pins the **default single-lane engine**: it
+//! was generated from the pre-refactor sequential loop (one global
+//! `BinaryHeap`, one RNG stream) and the lane-sharded sim core must keep
+//! reproducing it byte-for-byte when unsharded — same seed, same storm,
+//! same JSON. `churn_quick_seed42_lanes.json` pins the **lane engine**
+//! (`threads >= 1`), whose windowed trace is additionally asserted
+//! byte-identical across thread counts. `wall_clock_s` is the only
+//! nondeterministic field and is zeroed before comparison.
+//!
+//! A missing fixture is **bootstrapped**: the test writes it and passes,
+//! and CI's trajectory-commit step checks it in on main — from then on
+//! byte-identity is pinned. Regenerate deliberately (only when the report
+//! format changes) with:
+//!
+//! ```text
+//! UPDATE_GOLDEN=1 cargo test --release --test golden
+//! ```
+
+use oakestra::bench_harness::{run_churn, ChurnConfig};
+
+fn golden_path(name: &str) -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/golden")
+        .join(name)
+}
+
+/// Run the storm and normalize away wall-clock (the one ambient input).
+fn normalized_json(cfg: &ChurnConfig) -> String {
+    let mut report = run_churn(cfg);
+    report.wall_clock_s = 0.0;
+    report.to_json()
+}
+
+fn assert_matches_golden(json: &str, name: &str) {
+    let path = golden_path(name);
+    if std::env::var("UPDATE_GOLDEN").is_ok() || !path.exists() {
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, json).unwrap();
+        eprintln!("wrote {}", path.display());
+        return;
+    }
+    let want = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("reading golden {name}: {e}"));
+    assert!(
+        json == want,
+        "churn report diverged from {} (byte-identity contract); \
+         first difference at byte {}",
+        name,
+        json.bytes()
+            .zip(want.bytes())
+            .position(|(a, b)| a != b)
+            .unwrap_or_else(|| json.len().min(want.len())),
+    );
+}
+
+/// The default engine must reproduce the pre-refactor sequential loop
+/// byte-for-byte: same op log, same census, same metrics-derived stats.
+#[test]
+fn legacy_quick_storm_matches_pre_refactor_golden() {
+    let cfg = ChurnConfig::quick(42);
+    assert_matches_golden(&normalized_json(&cfg), "churn_quick_seed42.json");
+}
+
+/// The lane engine: byte-identical reports for every `--threads` value
+/// (1 vs 4 here), pinned against its own golden fixture across PRs.
+#[test]
+fn lane_quick_storm_is_thread_invariant_and_matches_golden() {
+    let mut cfg = ChurnConfig::quick(42);
+    cfg.threads = 1;
+    let t1 = normalized_json(&cfg);
+    cfg.threads = 4;
+    let t4 = normalized_json(&cfg);
+    assert_eq!(t1, t4, "thread count leaked into the churn report");
+    assert_matches_golden(&t1, "churn_quick_seed42_lanes.json");
+}

@@ -75,7 +75,7 @@ fn worker_failure_triggers_recovery_within_cluster() {
     tb.sim.set_node_failed(hosting, true);
     tb.sim.run_until(SimTime::from_secs(90.0));
 
-    let m = &tb.sim.core.metrics;
+    let m = tb.sim.metrics();
     assert!(
         m.counter("cluster.worker_dead") >= 1,
         "health sweep must detect the dead worker"
@@ -289,7 +289,7 @@ fn invalid_sla_is_rejected_at_the_root() {
     let req = tb.submit(sla, SimTime::from_secs(13.0));
     tb.sim.run_until(SimTime::from_secs(30.0));
     assert!(tb.deploy_times_ms().is_empty());
-    assert_eq!(tb.sim.core.metrics.counter("root.sla_rejected"), 1);
+    assert_eq!(tb.sim.metrics().counter("root.sla_rejected"), 1);
     // The rejection is a typed validation error, not a silent drop.
     assert!(
         matches!(
@@ -320,7 +320,7 @@ fn deterministic_replay_same_seed_same_outcome() {
         tb.sim.run_until(SimTime::from_secs(60.0));
         let mut t = tb.deploy_times_ms();
         t.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        (t, tb.sim.core.metrics.total_msgs())
+        (t, tb.sim.metrics().total_msgs())
     };
     let a = run(1234);
     let b = run(1234);
@@ -360,7 +360,7 @@ fn scale_up_adds_a_second_running_instance() {
         .filter(|i| i.state == ServiceState::Running)
         .collect();
     assert_eq!(running.len(), 2, "scale-up must yield two live instances");
-    assert_eq!(tb.sim.core.metrics.counter("root.scale_up"), 1);
+    assert_eq!(tb.sim.metrics().counter("root.scale_up"), 1);
     // The replica carries a bumped generation.
     assert!(rec.instances.iter().any(|i| i.generation == 1));
 }
@@ -502,7 +502,7 @@ fn api_full_lifecycle_end_to_end() {
         Some(ApiResponse::MigrationStarted { .. })
     ));
     assert!(
-        tb.sim.core.metrics.counter("cluster.migration_completed") >= 1,
+        tb.sim.metrics().counter("cluster.migration_completed") >= 1,
         "migration must complete (replacement Running, original undeployed)"
     );
     {
@@ -691,7 +691,7 @@ fn sla_violation_triggers_migration_and_teardown() {
         .inject_qos(500.0); // way past 20 ms × 1.5
     tb.sim.run_until(SimTime::from_secs(90.0));
 
-    let m = &tb.sim.core.metrics;
+    let m = tb.sim.metrics();
     assert!(m.counter("cluster.sla_violation") >= 1, "violation detected");
     assert_eq!(m.counter("cluster.migration_started"), 1);
     assert_eq!(m.counter("cluster.migration_completed"), 1);
@@ -761,7 +761,7 @@ fn spill_exhaustion_fails_fast_through_placement_watch() {
     let vreq = tb.submit(simple_sla("victim", 800, 128), SimTime::from_secs(26.5));
     tb.sim.run_until(SimTime::from_secs(40.0));
 
-    let m = &tb.sim.core.metrics;
+    let m = tb.sim.metrics();
     // The stale-aggregate fill phase must have exercised the spill path
     // (several fillers chased the same best cluster before its refusal
     // was visible upstream).

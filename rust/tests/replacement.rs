@@ -78,7 +78,7 @@ fn migrate_fail_remigrate_keeps_root_view_authoritative() {
         (r1, r.worker.unwrap())
     };
     assert!(
-        tb.sim.core.metrics.counter("root.adopted_migration") >= 1,
+        tb.sim.metrics().counter("root.adopted_migration") >= 1,
         "root must adopt the migration successor"
     );
     assert!(
@@ -104,7 +104,7 @@ fn migrate_fail_remigrate_keeps_root_view_authoritative() {
         r2
     };
     assert!(
-        tb.sim.core.metrics.counter("root.adopted_recovery") >= 1,
+        tb.sim.metrics().counter("root.adopted_recovery") >= 1,
         "root must adopt the recovery successor"
     );
     assert!(census_diff(&tb).is_empty(), "{:?}", census_diff(&tb));
@@ -222,7 +222,7 @@ fn scale_mid_migration_counts_lineage_pair_once() {
     // The migration completed undisturbed and the service converged at
     // the requested two replicas.
     assert!(
-        tb.sim.core.metrics.counter("cluster.migration_completed") >= 1,
+        tb.sim.metrics().counter("cluster.migration_completed") >= 1,
         "the in-flight migration must cut over normally"
     );
     let root = tb.sim.actor_as::<RootOrchestrator>(tb.root).unwrap();
@@ -268,7 +268,7 @@ fn late_replacement_registration_after_undeploy_is_refused() {
     );
     tb.sim.run_until(SimTime::from_secs(50.0));
 
-    let m = &tb.sim.core.metrics;
+    let m = tb.sim.metrics();
     assert_eq!(
         m.counter("root.adopt_refused_retired"),
         1,
@@ -308,7 +308,7 @@ fn revived_worker_rejoins_under_fresh_identity() {
 
     tb.fail_worker(hosting);
     tb.sim.run_until(SimTime::from_secs(60.0));
-    assert!(tb.sim.core.metrics.counter("cluster.worker_dead") >= 1);
+    assert!(tb.sim.metrics().counter("cluster.worker_dead") >= 1);
     {
         let c = tb
             .sim
@@ -372,7 +372,7 @@ fn same_id_reregistration_resets_worker_state() {
     );
     tb.sim.run_until(SimTime::from_secs(60.0));
 
-    let m = &tb.sim.core.metrics;
+    let m = tb.sim.metrics();
     assert_eq!(m.counter("cluster.worker_reregistered"), 1);
     assert!(
         m.counter("cluster.local_recovery") >= 1,
