@@ -177,6 +177,11 @@ pub struct ServiceStatusInfo {
     /// (delta-coalesced) aggregate reports — real QoS telemetry an
     /// autoscaler can key off, not the reservation.
     pub observed_cpu_mc: u64,
+    /// Clusters holding placements of this service whose federation
+    /// lease is currently partitioned: rows for instances placed there
+    /// are a last-known-good view, not live truth (degraded-mode
+    /// staleness; cleared by the post-heal anti-entropy resync).
+    pub stale_clusters: Vec<ClusterId>,
     pub instances: Vec<InstanceStatusInfo>,
 }
 
@@ -251,6 +256,7 @@ pub fn status_of(rec: &ServiceRecord) -> ServiceStatusInfo {
         fully_running: rec.fully_running(),
         tasks: rec.spec.tasks.len(),
         observed_cpu_mc: rec.observed_cpu_mc(),
+        stale_clusters: rec.degraded.keys().copied().collect(),
         instances: rec
             .instances
             .iter()
@@ -300,6 +306,13 @@ pub fn format_status(s: &ServiceStatusInfo) -> String {
         s.fully_running,
         s.observed_cpu_mc
     );
+    if !s.stale_clusters.is_empty() {
+        let list: Vec<String> = s.stale_clusters.iter().map(|c| c.to_string()).collect();
+        out.push_str(&format!(
+            "  ! DEGRADED: cluster(s) {} partitioned — their rows are last-known-good\n",
+            list.join(", ")
+        ));
+    }
     for i in &s.instances {
         let mut lineage = String::new();
         if let Some(p) = i.predecessor {
@@ -475,6 +488,7 @@ mod tests {
         }
         let s = status_of(db.service(id).unwrap());
         assert_eq!(s.observed_cpu_mc, 123);
+        assert!(s.stale_clusters.is_empty());
         assert_eq!(s.tasks, 2);
         assert_eq!(s.instances.len(), 2);
         assert_eq!(s.count(ServiceState::Running), 1);
@@ -489,6 +503,22 @@ mod tests {
         assert!(rendered.contains("Running"));
         assert!(rendered.contains("superseded-by i42"));
         assert!(rendered.contains("observed_cpu=123mc"));
+    }
+
+    #[test]
+    fn status_surfaces_degraded_clusters() {
+        let mut db = ServiceDb::default();
+        let (id, ids) = db.register(simple_sla("edge", 500, 64), SimTime::ZERO);
+        {
+            let rec = db.service_mut(id).unwrap();
+            rec.placement.insert(ids[0], ClusterId(3));
+        }
+        db.mark_cluster_degraded(ClusterId(3), SimTime::from_secs(40.0));
+        let s = status_of(db.service(id).unwrap());
+        assert_eq!(s.stale_clusters, vec![ClusterId(3)]);
+        let rendered = format_status(&s);
+        assert!(rendered.contains("DEGRADED"));
+        assert!(rendered.contains("last-known-good"));
     }
 
     #[test]

@@ -50,6 +50,14 @@ pub enum ChurnScenario {
     /// sustained load. Pair with a many-small-clusters `--shape`
     /// (e.g. 16x6).
     Spill,
+    /// Arrival churn + migration drills under a seeded schedule of
+    /// cluster-uplink cuts and flaps (the partition-tolerance bench):
+    /// root↔cluster links go down mid-storm, clusters run autonomously,
+    /// and each heal triggers the anti-entropy resync whose convergence
+    /// latency the report gates. Pair with `partition_clusters`/
+    /// `partition_cycles` > 0 (the [`ChurnConfig::partition_storm`]
+    /// preset) or no link ever actually drops.
+    Partition,
     /// Submit + autoscale + failover composed.
     All,
 }
@@ -61,6 +69,7 @@ impl ChurnScenario {
             "scale" | "autoscale" => ChurnScenario::Scale,
             "failover" | "migrate" => ChurnScenario::Failover,
             "spill" => ChurnScenario::Spill,
+            "partition" => ChurnScenario::Partition,
             "all" => ChurnScenario::All,
             _ => return None,
         })
@@ -68,14 +77,27 @@ impl ChurnScenario {
     fn arrivals(self) -> bool {
         matches!(
             self,
-            ChurnScenario::Submit | ChurnScenario::Spill | ChurnScenario::All
+            ChurnScenario::Submit
+                | ChurnScenario::Spill
+                | ChurnScenario::Partition
+                | ChurnScenario::All
         )
     }
     fn autoscale(self) -> bool {
         matches!(self, ChurnScenario::Scale | ChurnScenario::All)
     }
     fn drills(self) -> bool {
-        matches!(self, ChurnScenario::Failover | ChurnScenario::All)
+        // Partition keeps the migration drills: a cut racing an
+        // in-flight cutover is exactly the reconciliation case the
+        // heal-time resync must settle.
+        matches!(
+            self,
+            ChurnScenario::Failover | ChurnScenario::Partition | ChurnScenario::All
+        )
+    }
+    /// Does this scenario install the seeded uplink-cut schedule?
+    fn partitions(self) -> bool {
+        matches!(self, ChurnScenario::Partition)
     }
     /// Spill storms draw from the deliberately heavy SLA catalog.
     fn heavy_catalog(self) -> bool {
@@ -153,6 +175,24 @@ pub struct ChurnConfig {
     /// failed placement can legitimately never converge; the watch must
     /// not pin its service forever).
     pub watch_timeout_s: f64,
+    /// Partition scenario: how many cluster uplinks (a prefix of the
+    /// cluster list) the seeded fault schedule cuts. 0 = no partitions.
+    pub partition_clusters: usize,
+    /// Cut/heal cycles per affected cluster. The middle cycle of each
+    /// schedule is a short *flap* ([`Self::partition_flap_s`]) instead
+    /// of a full cut.
+    pub partition_cycles: usize,
+    /// Length of one full cut window, seconds. Must exceed the WsLink
+    /// `partitioned_after` lease (30 s) or the root never detects it.
+    pub partition_s: f64,
+    /// Length of one flap window, seconds: long enough to trip the
+    /// lease into Suspect (> 12 s), short enough never to reach
+    /// Partitioned — exercising outbox buffering without a resync.
+    pub partition_flap_s: f64,
+    /// Healed gap between consecutive windows of one cluster, seconds.
+    pub partition_gap_s: f64,
+    /// Quiet lead-in before the first cut, seconds after storm start.
+    pub partition_lead_s: f64,
     /// Lane-sharded sim: `0` = classic single-lane sequential loop,
     /// `N >= 1` = one event lane per cluster (plus the root lane)
     /// drained by up to `N` threads. Any `N >= 1` yields the identical
@@ -191,6 +231,12 @@ impl Default for ChurnConfig {
             cpu_per_replica_mc: 70.0,
             pre_drain_hold_s: 8.0,
             watch_timeout_s: 30.0,
+            partition_clusters: 0,
+            partition_cycles: 0,
+            partition_s: 42.0,
+            partition_flap_s: 15.0,
+            partition_gap_s: 18.0,
+            partition_lead_s: 15.0,
             threads: 0,
         }
     }
@@ -230,6 +276,35 @@ impl ChurnConfig {
             mean_lifetime_s: 25.0,
             max_live: 64,
             catalog: 8,
+            ..ChurnConfig::default()
+        }
+    }
+
+    /// The partition-tolerance storm: 16 clusters × 12 workers on the
+    /// lane engine, arrival churn + migration drills while a seeded
+    /// schedule cuts and flaps 4 of the 16 cluster uplinks (two full
+    /// >30 s cuts and one Suspect-only flap each). The storm window is
+    /// sized so the last heal lands well before the storm ends — the
+    /// heal-to-convergence latency is measured against live churn, not
+    /// against the final drain.
+    pub fn partition_storm(seed: u64) -> Self {
+        ChurnConfig {
+            seed,
+            scenario: ChurnScenario::Partition,
+            clusters: 16,
+            workers_per_cluster: 12,
+            threads: 4,
+            duration_s: 170.0,
+            settle_s: 45.0,
+            arrival_period_s: 1.0,
+            mean_lifetime_s: 40.0,
+            max_live: 96,
+            catalog: 8,
+            drills: 12,
+            drill_every: 8,
+            fail_worker_chance: 0.25,
+            partition_clusters: 4,
+            partition_cycles: 3,
             ..ChurnConfig::default()
         }
     }
@@ -333,6 +408,12 @@ pub struct ChurnDriver {
     /// The driver cannot spawn sim nodes itself; [`run_churn`] applies
     /// due entries between slices via [`OakTestbed::revive_worker`].
     pending_rejoin: Vec<(NodeId, SimTime)>,
+    /// Every abandoned convergence watch: (expired at, service, the
+    /// workers its instances were last seen running on). [`run_churn`]
+    /// cross-checks each entry against the partition schedule — an
+    /// abandonment is only excusable when the service had a foot in a
+    /// cluster whose uplink was cut during the watch window.
+    pub expired_watches: Vec<(SimTime, ServiceId, Vec<NodeId>)>,
     // Counters for the report.
     pub submits: u64,
     pub undeploys: u64,
@@ -388,6 +469,7 @@ impl ChurnDriver {
             failed_workers: BTreeSet::new(),
             api_errors: BTreeMap::new(),
             pending_rejoin: Vec::new(),
+            expired_watches: Vec::new(),
             submits: 0,
             undeploys: 0,
             scale_ups: 0,
@@ -650,30 +732,36 @@ impl ChurnDriver {
     fn expire_watches(&mut self, ctx: &mut Ctx<'_>) {
         let cutoff = SimTime::from_secs(self.cfg.watch_timeout_s);
         let now = ctx.now;
-        let mut expired: Vec<String> = Vec::new();
+        let mut expired: Vec<(String, ServiceId)> = Vec::new();
         self.scale_watch.retain(|s, (_, t0)| {
             let keep = now.saturating_sub(*t0) < cutoff;
             if !keep {
-                expired.push(format!("scale-watch-expired {s}"));
+                expired.push((format!("scale-watch-expired {s}"), *s));
             }
             keep
         });
         self.migrate_watch.retain(|i, (s, t0)| {
             let keep = now.saturating_sub(*t0) < cutoff;
             if !keep {
-                expired.push(format!("migrate-watch-expired {s}/{i}"));
+                expired.push((format!("migrate-watch-expired {s}/{i}"), *s));
             }
             keep
         });
         self.undeploy_watch.retain(|s, t0| {
             let keep = now.saturating_sub(*t0) < cutoff;
             if !keep {
-                expired.push(format!("undeploy-watch-expired {s}"));
+                expired.push((format!("undeploy-watch-expired {s}"), *s));
             }
             keep
         });
-        for line in expired {
+        for (line, service) in expired {
             ctx.metrics().inc("churn.watch_expired");
+            let nodes: Vec<NodeId> = self
+                .running_cache
+                .get(&service)
+                .map(|insts| insts.iter().map(|(_, n)| *n).collect())
+                .unwrap_or_default();
+            self.expired_watches.push((now, service, nodes));
             self.log(now, line);
         }
     }
@@ -986,6 +1074,55 @@ impl OpStats {
     }
 }
 
+/// Partition-tolerance accounting of one churn run: the seeded fault
+/// schedule, what the root and clusters observed of it, and how fast the
+/// anti-entropy resync reconverged after each heal. Present only when
+/// the scenario installed uplink cuts.
+#[derive(Clone, Debug, Default)]
+pub struct PartitionStats {
+    /// Scheduled full-cut windows (lease trips Partitioned).
+    pub cuts: u64,
+    /// Scheduled flap windows (Suspect only — must NOT trip the lease).
+    pub flaps: u64,
+    /// Root-side detections / heals (`root.partition_*`).
+    pub detected: u64,
+    pub healed: u64,
+    /// `ResyncRequest`s sent by the root / snapshots answered.
+    pub resyncs: u64,
+    pub snapshots: u64,
+    /// Service rows marked Degraded on detection / cleared on heal.
+    pub services_degraded: u64,
+    pub services_restored: u64,
+    /// Detection→heal window per partition (root clock).
+    pub degraded_window: OpStats,
+    /// Heal→(root census == cluster census) latency, measured by the
+    /// harness polling [`census_diff`] at slice boundaries.
+    pub heal_to_convergence: OpStats,
+    /// Heals whose census never drained before the run ended (gate: 0).
+    pub unconverged_heals: usize,
+    /// Resync reconciliation outcomes: replayed adoptions, benign
+    /// duplicates, lineage conflicts (double adoptions — gate: 0),
+    /// true orphans torn down, lost instances re-minted, and
+    /// delegations the census settled.
+    pub resync_adopted: u64,
+    pub resync_duplicates: u64,
+    pub resync_conflicts: u64,
+    pub resync_orphans: u64,
+    pub resync_lost: u64,
+    pub resync_settled: u64,
+    /// Cluster-side uplink lease + critical-message outbox traffic.
+    pub uplink_partitioned: u64,
+    pub uplink_healed: u64,
+    pub outbox_buffered: u64,
+    pub outbox_replayed: u64,
+    pub outbox_retry: u64,
+    pub outbox_dropped: u64,
+    /// Transport-level fault accounting (`net.*`).
+    pub retransmits: u64,
+    pub dropped_after_retry: u64,
+    pub net_lost: u64,
+}
+
 /// Everything `oakestra churn` emits: latency + cost under churn, the
 /// deterministic op log and the final placement census (the determinism
 /// and leak assertions of the integration suite run on these).
@@ -1081,6 +1218,15 @@ pub struct ChurnReport {
     pub census_diff: Vec<String>,
     /// Virtual ms (since sim start) at which the snapshot was taken.
     pub census_checked_at_ms: f64,
+    /// Convergence watches abandoned at `watch_timeout_s`, and how many
+    /// of those belonged to a service with *no* foot in a partitioned
+    /// cluster during the watch window (`--strict` gates these at 0 —
+    /// only a partition excuses an abandonment).
+    pub watch_expired: u64,
+    pub watch_expired_unexcused: u64,
+    /// Partition-tolerance accounting; `None` unless the scenario
+    /// installed uplink cuts.
+    pub partition: Option<PartitionStats>,
     pub op_log: Vec<String>,
     pub census: Vec<String>,
 }
@@ -1250,6 +1396,48 @@ pub fn run_churn(cfg: &ChurnConfig) -> ChurnReport {
         .add_actor(tb.root_node, Box::new(ChurnDriver::new(cfg.clone(), tb.root)));
     tb.sim
         .inject(start, driver_id, SimMsg::Timer(TimerKind::Custom(0)));
+
+    // Seeded partition schedule: a prefix of the cluster uplinks gets a
+    // series of cut/heal windows with per-cluster jitter. Installed now,
+    // before events drain past the first `from` — the schedule is part
+    // of the run's seed-determined identity, never mutated mid-storm.
+    // Rows: (cluster index, from, until, is_flap).
+    let mut partition_windows: Vec<(usize, SimTime, SimTime, bool)> = Vec::new();
+    if cfg.scenario.partitions() && cfg.partition_clusters > 0 && cfg.partition_cycles > 0 {
+        let mut prng = Rng::seeded(cfg.seed ^ 0x9A12_7C0F_FEE0_DD01);
+        for ci in 0..cfg.partition_clusters.min(cfg.clusters) {
+            let mut at = start
+                + SimTime::from_secs(cfg.partition_lead_s)
+                + SimTime::from_millis(prng.below(5_000) as f64);
+            for cycle in 0..cfg.partition_cycles {
+                // The middle window of each cluster's schedule is a
+                // flap: Suspect-only, so it exercises outbox buffering
+                // and the lease's false-trip resistance without a
+                // detection/resync round.
+                let flap = cfg.partition_cycles >= 3 && cycle == cfg.partition_cycles / 2;
+                let len = if flap {
+                    cfg.partition_flap_s
+                } else {
+                    cfg.partition_s
+                };
+                let until = at + SimTime::from_secs(len);
+                tb.cut_cluster_uplink(ci, at, until);
+                partition_windows.push((ci, at, until, flap));
+                at = until
+                    + SimTime::from_secs(cfg.partition_gap_s)
+                    + SimTime::from_millis(prng.below(3_000) as f64);
+            }
+        }
+    }
+    // Heal times of the full cuts, in order: after each one the harness
+    // polls the census until root and clusters agree again.
+    let mut pending_heals: Vec<SimTime> = partition_windows
+        .iter()
+        .filter(|w| !w.3)
+        .map(|w| w.2)
+        .collect();
+    pending_heals.sort();
+    let mut heal_convergence = Histogram::default();
     let horizon = start
         + SimTime::from_secs(
             cfg.duration_s + cfg.pre_drain_hold_s + cfg.settle_s + 5.0,
@@ -1286,6 +1474,19 @@ pub fn run_churn(cfg: &ChurnConfig) -> ChurnReport {
         }
         if census_diff_rows.is_none() && next >= census_at {
             census_diff_rows = Some((next, census_diff(&tb)));
+        }
+        // Heal-to-convergence: once a heal has elapsed, the root's
+        // records and the clusters' placements must re-agree. The first
+        // slice boundary where the census diff is empty closes every
+        // elapsed heal (storm-transient delegation rows keep the diff
+        // non-empty for a boundary or two — that latency is real and
+        // belongs in the measurement).
+        while let Some(&healed_at) = pending_heals.first() {
+            if healed_at > next || !census_diff(&tb).is_empty() {
+                break;
+            }
+            heal_convergence.record(next.saturating_sub(healed_at).as_millis());
+            pending_heals.remove(0);
         }
     }
     let (census_checked_at, census_gap) =
@@ -1352,6 +1553,68 @@ pub fn run_churn(cfg: &ChurnConfig) -> ChurnReport {
         (d.submits + d.scale_ups + d.scale_downs + d.migrations + d.undeploys).max(1);
     let (leaked_instances, leaked_capacity_mc) = count_leaks(&tb, &d.failed_workers);
 
+    // Watch-abandonment audit: an expired watch is excused only when its
+    // service had an instance in a cluster whose uplink was cut at some
+    // point during the watch window (a partitioned cluster legitimately
+    // stalls convergence past any timeout). Everything else is a real
+    // convergence failure `--strict` must surface.
+    let watch_cutoff = SimTime::from_secs(cfg.watch_timeout_s);
+    let watch_expired = d.expired_watches.len() as u64;
+    let watch_expired_unexcused = d
+        .expired_watches
+        .iter()
+        .filter(|(at, _, nodes)| {
+            let w0 = at.saturating_sub(watch_cutoff);
+            let overlapping: Vec<usize> = partition_windows
+                .iter()
+                .filter(|(_, from, until, _)| *from < *at && *until > w0)
+                .map(|(ci, _, _, _)| *ci)
+                .collect();
+            let excused = !overlapping.is_empty()
+                && (nodes.is_empty()
+                    || nodes.iter().any(|n| {
+                        tb.worker_cluster
+                            .get(n)
+                            .is_some_and(|ci| overlapping.contains(ci))
+                    }));
+            !excused
+        })
+        .count() as u64;
+
+    let partition = if partition_windows.is_empty() {
+        None
+    } else {
+        let ops = |h: Option<&Histogram>| OpStats::from(h);
+        Some(PartitionStats {
+            cuts: partition_windows.iter().filter(|w| !w.3).count() as u64,
+            flaps: partition_windows.iter().filter(|w| w.3).count() as u64,
+            detected: m.counter("root.partition_detected"),
+            healed: m.counter("root.partition_healed"),
+            resyncs: m.counter("root.resync_requested"),
+            snapshots: m.counter("cluster.resync_sent"),
+            services_degraded: m.counter("root.services_degraded"),
+            services_restored: m.counter("root.services_restored"),
+            degraded_window: ops(m.histogram("root.degraded_window_ms")),
+            heal_to_convergence: ops(Some(&heal_convergence)),
+            unconverged_heals: pending_heals.len(),
+            resync_adopted: m.counter("root.resync_adopted"),
+            resync_duplicates: m.counter("root.resync_adopt_duplicate"),
+            resync_conflicts: m.counter("root.resync_adopt_conflict"),
+            resync_orphans: m.counter("root.resync_orphans"),
+            resync_lost: m.counter("root.resync_lost"),
+            resync_settled: m.counter("root.resync_settled_delegations"),
+            uplink_partitioned: m.counter("cluster.uplink_partitioned"),
+            uplink_healed: m.counter("cluster.uplink_healed"),
+            outbox_buffered: m.counter("cluster.outbox_buffered"),
+            outbox_replayed: m.counter("cluster.outbox_replayed"),
+            outbox_retry: m.counter("cluster.outbox_retry"),
+            outbox_dropped: m.counter("cluster.outbox_dropped"),
+            retransmits: m.counter("net.retransmit"),
+            dropped_after_retry: m.counter("net.dropped_after_retry"),
+            net_lost: m.counter("net.lost"),
+        })
+    };
+
     ChurnReport {
         seed: cfg.seed,
         scenario: format!("{:?}", cfg.scenario).to_ascii_lowercase(),
@@ -1406,6 +1669,9 @@ pub fn run_churn(cfg: &ChurnConfig) -> ChurnReport {
         census_mismatch: census_gap.len(),
         census_diff: census_gap,
         census_checked_at_ms: census_checked_at.as_millis(),
+        watch_expired,
+        watch_expired_unexcused,
+        partition,
         op_log: d.ops.clone(),
         census: placement_census(&tb),
     }
@@ -1445,6 +1711,52 @@ impl ChurnReport {
             } else {
                 format!("[\n{}\n  ]", rows.join(",\n"))
             }
+        };
+        // Partition runs carry an extra "partition" object; every other
+        // scenario omits it entirely (same pattern as "sim" below).
+        let partition_json = match &self.partition {
+            None => String::new(),
+            Some(p) => format!(
+                "\"partition\": {{\"cuts\": {}, \"flaps\": {}, \"detected\": {}, \
+                 \"healed\": {}, \"resyncs\": {}, \"snapshots\": {}, \
+                 \"services_degraded\": {}, \"services_restored\": {},\n    \
+                 \"degraded_window_ms\": {},\n    \
+                 \"heal_to_convergence_ms\": {},\n    \
+                 \"unconverged_heals\": {},\n    \
+                 \"resync\": {{\"adopted\": {}, \"duplicates\": {}, \"conflicts\": {}, \
+                 \"orphans\": {}, \"lost\": {}, \"settled\": {}}},\n    \
+                 \"uplink\": {{\"partitioned\": {}, \"healed\": {}, \
+                 \"outbox_buffered\": {}, \"outbox_replayed\": {}, \
+                 \"outbox_retry\": {}, \"outbox_dropped\": {}}},\n    \
+                 \"net\": {{\"retransmits\": {}, \"dropped_after_retry\": {}, \
+                 \"lost\": {}}}}},\n  ",
+                p.cuts,
+                p.flaps,
+                p.detected,
+                p.healed,
+                p.resyncs,
+                p.snapshots,
+                p.services_degraded,
+                p.services_restored,
+                stats(&p.degraded_window),
+                stats(&p.heal_to_convergence),
+                p.unconverged_heals,
+                p.resync_adopted,
+                p.resync_duplicates,
+                p.resync_conflicts,
+                p.resync_orphans,
+                p.resync_lost,
+                p.resync_settled,
+                p.uplink_partitioned,
+                p.uplink_healed,
+                p.outbox_buffered,
+                p.outbox_replayed,
+                p.outbox_retry,
+                p.outbox_dropped,
+                p.retransmits,
+                p.dropped_after_retry,
+                p.net_lost,
+            ),
         };
         // Lane-sharded runs carry an extra "sim" object; the classic
         // single-lane sim omits it entirely so legacy reports stay
@@ -1488,6 +1800,7 @@ impl ChurnReport {
              \"leaks\": {{\"instances\": {}, \"capacity_mc\": {}}},\n  \
              \"census_consistency\": {{\"checked_at_ms\": {:.1}, \
              \"mismatch\": {}, \"diff\": {}}},\n  \
+             \"watches\": {{\"expired\": {}, \"unexcused\": {}}},\n  {}\
              \"op_log\": {},\n  \"census\": {}\n}}\n",
             self.seed,
             self.scenario,
@@ -1538,6 +1851,9 @@ impl ChurnReport {
             self.census_checked_at_ms,
             self.census_mismatch,
             strings(&self.census_diff),
+            self.watch_expired,
+            self.watch_expired_unexcused,
+            partition_json,
             strings(&self.op_log),
             strings(&self.census),
         )
@@ -1649,7 +1965,82 @@ impl ChurnReport {
             "leaked_capacity_mc".into(),
             self.leaked_capacity_mc.to_string(),
         ]);
-        vec![lat, cost]
+        cost.row(vec![
+            "watch_expired".into(),
+            format!(
+                "{} ({} unexcused)",
+                self.watch_expired, self.watch_expired_unexcused
+            ),
+        ]);
+        let Some(p) = &self.partition else {
+            return vec![lat, cost];
+        };
+        let mut part = Table::new(
+            "Churn — partition tolerance",
+            &["metric", "value"],
+        );
+        part.row(vec![
+            "windows".into(),
+            format!("{} cuts / {} flaps", p.cuts, p.flaps),
+        ]);
+        part.row(vec![
+            "detected/healed".into(),
+            format!("{} / {}", p.detected, p.healed),
+        ]);
+        part.row(vec![
+            "resyncs".into(),
+            format!("{} requested / {} snapshots", p.resyncs, p.snapshots),
+        ]);
+        part.row(vec![
+            "services degraded/restored".into(),
+            format!("{} / {}", p.services_degraded, p.services_restored),
+        ]);
+        part.row(vec![
+            "degraded_window_ms p50/p95".into(),
+            format!(
+                "{} / {}",
+                fmt_stat(p.degraded_window.count, p.degraded_window.p50_ms),
+                fmt_stat(p.degraded_window.count, p.degraded_window.p95_ms)
+            ),
+        ]);
+        part.row(vec![
+            "heal_to_convergence_ms p50/p95".into(),
+            format!(
+                "{} / {}",
+                fmt_stat(p.heal_to_convergence.count, p.heal_to_convergence.p50_ms),
+                fmt_stat(p.heal_to_convergence.count, p.heal_to_convergence.p95_ms)
+            ),
+        ]);
+        part.row(vec![
+            "unconverged_heals".into(),
+            p.unconverged_heals.to_string(),
+        ]);
+        part.row(vec![
+            "resync adopted/dup/conflict".into(),
+            format!(
+                "{} / {} / {}",
+                p.resync_adopted, p.resync_duplicates, p.resync_conflicts
+            ),
+        ]);
+        part.row(vec![
+            "resync orphans/lost/settled".into(),
+            format!("{} / {} / {}", p.resync_orphans, p.resync_lost, p.resync_settled),
+        ]);
+        part.row(vec![
+            "outbox buffered/replayed/dropped".into(),
+            format!(
+                "{} / {} / {}",
+                p.outbox_buffered, p.outbox_replayed, p.outbox_dropped
+            ),
+        ]);
+        part.row(vec![
+            "net retransmit/dropped/lost".into(),
+            format!(
+                "{} / {} / {}",
+                p.retransmits, p.dropped_after_retry, p.net_lost
+            ),
+        ]);
+        vec![lat, cost, part]
     }
 }
 
@@ -1687,6 +2078,17 @@ mod tests {
         assert!(!ChurnScenario::Spill.drills());
         assert!(ChurnScenario::Spill.heavy_catalog());
         assert!(!ChurnScenario::All.heavy_catalog());
+        // Partition: arrival churn + migration drills racing the seeded
+        // uplink cuts; only this scenario installs the fault schedule.
+        assert_eq!(
+            ChurnScenario::parse("partition"),
+            Some(ChurnScenario::Partition)
+        );
+        assert!(ChurnScenario::Partition.arrivals());
+        assert!(ChurnScenario::Partition.drills());
+        assert!(!ChurnScenario::Partition.autoscale());
+        assert!(ChurnScenario::Partition.partitions());
+        assert!(!ChurnScenario::All.partitions());
     }
 
     #[test]
@@ -1766,6 +2168,11 @@ mod tests {
         // is what keeps legacy reports byte-identical to the pre-lane
         // golden fixture.
         assert!(v.get("sim").get("lanes").as_u64().is_none());
+        // Watch-abandonment accounting is always present; the partition
+        // object only appears when the scenario installed uplink cuts.
+        assert!(v.get("watches").get("expired").as_u64().is_some());
+        assert!(v.get("watches").get("unexcused").as_u64().is_some());
+        assert!(v.get("partition").get("cuts").as_u64().is_none());
     }
 
     /// Same seed, same storm, different `--threads`: the lane engine must
@@ -1795,5 +2202,64 @@ mod tests {
         assert_eq!(v.get("sim").get("lanes").as_u64(), Some(3));
         let batch = v.get("sim").get("lane").get("batch").as_f64().unwrap_or(0.0);
         assert!(batch >= 1.0, "batch={batch}");
+    }
+
+    /// The partition storm must (a) be thread-count invariant like every
+    /// other scenario — this byte-equality doubles as the retransmit
+    /// determinism regression, since `net.retransmit` and
+    /// `net.dropped_after_retry` are embedded in the report JSON — and
+    /// (b) actually reconcile: every scheduled cut is detected, healed
+    /// and resynced, the census reconverges after every heal, and no
+    /// adoption conflicts, leaks or unexcused watch abandonments remain.
+    #[test]
+    fn partition_storm_reconciles_and_is_thread_invariant() {
+        let run = |threads: usize| {
+            let cfg = ChurnConfig {
+                threads,
+                clusters: 3,
+                workers_per_cluster: 4,
+                partition_clusters: 2,
+                // Last heal lands by ~144s (10s lead + two 42s cuts +
+                // one 15s flap + jittered 12s gaps); 150s keeps the
+                // census snapshot (duration + 0.75*hold) comfortably
+                // past the post-heal resync.
+                duration_s: 150.0,
+                settle_s: 40.0,
+                arrival_period_s: 2.0,
+                mean_lifetime_s: 30.0,
+                max_live: 24,
+                drills: 4,
+                drill_every: 10,
+                partition_gap_s: 12.0,
+                partition_lead_s: 10.0,
+                ..ChurnConfig::partition_storm(7)
+            };
+            let mut report = run_churn(&cfg);
+            report.wall_clock_s = 0.0;
+            report
+        };
+        let one = run(1);
+        assert_eq!(
+            one.to_json(),
+            run(4).to_json(),
+            "partition storm must be thread-count invariant"
+        );
+        let p = one.partition.as_ref().expect("partition stats present");
+        assert_eq!(p.cuts, 4, "2 clusters x 2 full cuts each");
+        assert_eq!(p.flaps, 2, "1 Suspect-only flap per partitioned cluster");
+        assert_eq!(p.detected, p.cuts, "every >30s cut must trip the lease");
+        assert_eq!(p.healed, p.detected, "every detection must heal");
+        assert_eq!(p.resyncs, p.healed, "every heal must trigger a resync");
+        assert!(p.snapshots >= p.resyncs, "clusters must answer resyncs");
+        assert_eq!(p.resync_conflicts, 0, "no double adoptions");
+        assert_eq!(p.unconverged_heals, 0, "census must drain after each heal");
+        assert_eq!(p.heal_to_convergence.count as u64, p.cuts);
+        assert!(
+            p.retransmits > 0,
+            "cuts must force reliable-transport retries"
+        );
+        assert_eq!(one.census_mismatch, 0, "{:?}", one.census_diff);
+        assert_eq!(one.leaked_instances, 0);
+        assert_eq!(one.watch_expired_unexcused, 0);
     }
 }

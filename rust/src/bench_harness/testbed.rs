@@ -267,6 +267,18 @@ impl OakTestbed {
         self.sim.set_node_failed(node, true);
     }
 
+    /// Fault injection: sever cluster `cluster_idx`'s uplink — the
+    /// root↔cluster-orchestrator link — for `from <= t < until`. Traffic
+    /// inside the cluster subtree keeps flowing, so the cluster operates
+    /// autonomously for the window; root-side detection, degraded
+    /// marking, and heal-time resync are exercised by the partition
+    /// churn scenario. Must be installed before events drain past
+    /// `from` (the schedule is seeded, not mutated mid-run).
+    pub fn cut_cluster_uplink(&mut self, cluster_idx: usize, from: SimTime, until: SimTime) {
+        let cnode = self.clusters[cluster_idx].0;
+        self.sim.core.net.cut_link(self.root_node, cnode, from, until);
+    }
+
     /// Worker rejoin (ROADMAP: recovery, not just crash-stop): the
     /// hardware behind a crashed worker comes back as a **fresh node id**
     /// with an empty instance set and re-registers with the same cluster

@@ -9,7 +9,9 @@ use std::collections::{BTreeMap, BTreeSet};
 
 use crate::geo::Area;
 use crate::hierarchy::AggregateStats;
-use crate::messaging::{labels, MqttBroker, MQTT_FRAME_OVERHEAD, WS_FRAME_OVERHEAD};
+use crate::messaging::{
+    labels, LinkHealth, MqttBroker, Outbox, WsLink, MQTT_FRAME_OVERHEAD, WS_FRAME_OVERHEAD,
+};
 use crate::model::{Capacity, NodeProfile, ServiceState};
 use crate::netmanager::{InstanceLocation, ServiceIp, SubnetAllocator, TableEntry};
 use crate::scheduler::{
@@ -121,11 +123,37 @@ pub struct ClusterOrchestrator {
     /// delegations, recoveries and migrations for them are refused.
     dead_services: BTreeSet<ServiceId>,
     /// Replacements announced to the root whose adoption verdict is
-    /// still pending: replacement → (original, reason, target worker).
-    /// Consulted when the `InstanceReplacedAck` arrives (refused ⇒ tear
-    /// the replacement down; a recovery refusal escalates instead so the
-    /// replica is not silently lost).
-    pending_adoptions: BTreeMap<InstanceId, (InstanceId, ReplacementReason, NodeId)>,
+    /// still pending: replacement → (original, reason, target worker,
+    /// task). Consulted when the `InstanceReplacedAck` arrives (refused
+    /// ⇒ tear the replacement down; a recovery refusal escalates instead
+    /// so the replica is not silently lost). Doubles as the
+    /// minted-replacement log shipped in `ResyncSnapshot`: every entry
+    /// here is an adoption the root may have never seen.
+    pending_adoptions: BTreeMap<InstanceId, (InstanceId, ReplacementReason, NodeId, TaskId)>,
+    /// The cluster's own lease on the root uplink, fed by root-originated
+    /// traffic (the 5s liveness `Ping` is the cadence signal). Mirrors
+    /// the root's per-cluster link state machine.
+    uplink: WsLink,
+    /// Set when the uplink lease was observed `Partitioned` on an
+    /// aggregate tick; the first root message afterwards heals it and
+    /// replays the outbox.
+    uplink_partitioned: bool,
+    /// Bounded-retry buffer for critical cluster→root messages sent
+    /// while the lease is unhealthy (`ClusterReport`,
+    /// `InstanceReplaced`, `DelegationResult`): the reliable transport's
+    /// retransmit cap means a long cut WOULD drop them. At-least-once —
+    /// the root's receive paths are idempotent — and budget-bounded: an
+    /// entry that exhausts its retries is dropped and the post-heal
+    /// anti-entropy resync becomes the recovery path of last resort.
+    outbox: Outbox<OakMsg>,
+    /// Outbox seq of the latest buffered `ClusterReport`; each newer
+    /// report supersedes it (a fresher aggregate makes it meaningless).
+    report_seq: Option<u64>,
+    /// Replacement id → outbox seq of its buffered `InstanceReplaced`
+    /// (cleared by the `InstanceReplacedAck`).
+    replaced_seq: BTreeMap<InstanceId, u64>,
+    /// Outbox drops already mirrored into metrics.
+    outbox_dropped_seen: u64,
     /// Last scheduler wall time (reported to root for Fig. 6/8).
     pub last_calc: SimTime,
     pub sched_ops: u64,
@@ -171,6 +199,12 @@ impl ClusterOrchestrator {
             interest: BTreeMap::new(),
             migrations: BTreeMap::new(),
             pending_adoptions: BTreeMap::new(),
+            uplink: WsLink::new(SimTime::ZERO),
+            uplink_partitioned: false,
+            outbox: Outbox::new(4, SimTime::from_secs(8.0)),
+            report_seq: None,
+            replaced_seq: BTreeMap::new(),
+            outbox_dropped_seen: 0,
             next_local: 0,
             undeploy_tombstones: BTreeSet::new(),
             dead_services: BTreeSet::new(),
@@ -261,6 +295,42 @@ impl ClusterOrchestrator {
         )
     }
 
+    /// Any root-originated message proves the uplink works: refresh the
+    /// lease, and when it was observed Partitioned, heal — replaying the
+    /// buffered critical messages (at-least-once; the root's receive
+    /// paths are idempotent).
+    fn note_root_activity(&mut self, ctx: &mut Ctx<'_>) {
+        self.uplink.on_activity(ctx.now);
+        if self.uplink_partitioned {
+            self.uplink_partitioned = false;
+            ctx.metrics().inc("cluster.uplink_healed");
+            for (_seq, msg) in self.outbox.replay_all(ctx.now) {
+                ctx.metrics().inc("cluster.outbox_replayed");
+                let wire = SimMsg::Oak(msg);
+                let bytes = wire.default_wire_bytes() + WS_FRAME_OVERHEAD;
+                // lint: allow(flow-handled, retransmit of a buffered critical message; the visible send at each enqueue site carries this flow edge)
+                ctx.send(self.root, wire, bytes, labels::CLUSTER_TO_ROOT);
+            }
+        }
+    }
+
+    /// Record the retry obligation for a critical cluster→root message
+    /// the caller just put on the wire: when the uplink lease is not
+    /// Healthy, a copy is parked in the bounded-retry outbox — the
+    /// reliable transport alone parks-and-retries only up to its
+    /// retransmit cap, so a long cut would silently drop the message.
+    /// Returns the outbox seq when a copy was buffered.
+    fn buffer_critical(&mut self, ctx: &mut Ctx<'_>, wire: &SimMsg) -> Option<u64> {
+        if self.uplink.health(ctx.now) == LinkHealth::Healthy {
+            return None;
+        }
+        let SimMsg::Oak(payload) = wire else {
+            return None;
+        };
+        ctx.metrics().inc("cluster.outbox_buffered");
+        Some(self.outbox.enqueue(payload.clone(), ctx.now))
+    }
+
     /// Register a locally-minted successor with the root (the cluster
     /// half of the replacement-tracking protocol). Sent at mint time so
     /// the root's placement view stays authoritative; the verdict comes
@@ -277,7 +347,7 @@ impl ClusterOrchestrator {
         };
         let (task, node) = (li.task, li.node);
         self.pending_adoptions
-            .insert(replacement, (original, reason, node));
+            .insert(replacement, (original, reason, node, task));
         let msg = SimMsg::Oak(OakMsg::InstanceReplaced {
             cluster: self.cfg.id,
             service: task.service,
@@ -286,6 +356,9 @@ impl ClusterOrchestrator {
             replacement,
             reason,
         });
+        if let Some(seq) = self.buffer_critical(ctx, &msg) {
+            self.replaced_seq.insert(replacement, seq);
+        }
         let bytes = msg.default_wire_bytes() + WS_FRAME_OVERHEAD;
         ctx.send(self.root, msg, bytes, labels::CLUSTER_TO_ROOT);
     }
@@ -889,6 +962,10 @@ impl Actor for ClusterOrchestrator {
                 // An undeploy that raced this delegation already arrived:
                 // the instance (or its whole service) is cancelled, and
                 // deploying it would leak a container nobody tracks.
+                // A DelegateTask arriving is root traffic: it proves the
+                // uplink (and may heal a partitioned lease — e.g. the
+                // root's send was parked in the cut and just delivered).
+                self.note_root_activity(ctx);
                 if self.undeploy_tombstones.remove(&instance)
                     || self.dead_services.contains(&task.service)
                 {
@@ -897,6 +974,11 @@ impl Actor for ClusterOrchestrator {
                 }
                 let placement = self.run_scheduler(ctx, task, &sla, None);
                 let calc_time = self.last_calc;
+                // The result is critical: the root's pending-delegation
+                // entry (and any API waiter behind it) hangs until it
+                // arrives, so it rides the outbox when the lease is
+                // unhealthy. No ack exists — retries stop at the budget
+                // and the resync census settles whatever was lost.
                 match placement {
                     Placement::Placed { worker, .. } => {
                         self.deploy_to(ctx, instance, task, sla, worker);
@@ -906,6 +988,7 @@ impl Actor for ClusterOrchestrator {
                             worker: Some(worker),
                             calc_time,
                         });
+                        self.buffer_critical(ctx, &msg);
                         let bytes = msg.default_wire_bytes() + WS_FRAME_OVERHEAD;
                         ctx.send(self.root, msg, bytes, labels::CLUSTER_TO_ROOT);
                     }
@@ -917,6 +1000,7 @@ impl Actor for ClusterOrchestrator {
                             worker: None,
                             calc_time,
                         });
+                        self.buffer_critical(ctx, &msg);
                         let bytes = msg.default_wire_bytes() + WS_FRAME_OVERHEAD;
                         ctx.send(self.root, msg, bytes, labels::CLUSTER_TO_ROOT);
                     }
@@ -929,6 +1013,12 @@ impl Actor for ClusterOrchestrator {
                 adopted,
             }) => {
                 ctx.charge_cpu(costs::PING_MS);
+                self.note_root_activity(ctx);
+                // The verdict confirms delivery: clear the buffered
+                // announcement so the outbox stops replaying it.
+                if let Some(seq) = self.replaced_seq.remove(&replacement) {
+                    self.outbox.ack(seq);
+                }
                 let pending = self.pending_adoptions.remove(&replacement);
                 if adopted {
                     ctx.metrics().inc("cluster.replacement_adopted");
@@ -942,7 +1032,7 @@ impl Actor for ClusterOrchestrator {
                         // back (second failure): the root adopted a
                         // record whose Failed report it may have dropped
                         // pre-adoption — settle it now.
-                        None => pending.map(|(_, _, node)| (node, ServiceState::Failed)),
+                        None => pending.map(|(_, _, node, _)| (node, ServiceState::Failed)),
                     };
                     if let Some((node, state)) = status {
                         let msg = SimMsg::Oak(OakMsg::InstanceStatus {
@@ -959,7 +1049,7 @@ impl Actor for ClusterOrchestrator {
                     // refusal — same discipline as ServiceRetired.
                     ctx.metrics().inc("cluster.replacement_refused");
                     let escalate = match (pending, self.instances.get(replacement)) {
-                        (Some((_, ReplacementReason::LocalRecovery, _)), Some(li))
+                        (Some((_, ReplacementReason::LocalRecovery, _, _)), Some(li))
                             if !self.dead_services.contains(&li.task.service) =>
                         {
                             // A refused *recovery* would silently lose a
@@ -1210,6 +1300,10 @@ impl Actor for ClusterOrchestrator {
 
             SimMsg::Oak(OakMsg::Ping) => {
                 ctx.charge_cpu(costs::PING_MS);
+                // The root's liveness ping is the uplink lease's cadence
+                // signal (mirrors the root treating our Pong the same
+                // way) — and the first ping after a partition heals it.
+                self.note_root_activity(ctx);
                 let msg = SimMsg::Oak(OakMsg::Pong {
                     cluster: self.cfg.id,
                 });
@@ -1254,16 +1348,56 @@ impl Actor for ClusterOrchestrator {
                     self.last_aggregate = Some((ctx.now, stats.clone()));
                     self.last_service_cpu = service_cpu.clone();
                     ctx.metrics().inc("cluster.report_sent");
+                    // A fresher report supersedes any older one still
+                    // parked in the outbox: the root only wants the
+                    // latest aggregate, so at most one ClusterReport is
+                    // ever buffered for replay.
+                    if let Some(old) = self.report_seq.take() {
+                        self.outbox.ack(old);
+                    }
                     let msg = SimMsg::Oak(OakMsg::ClusterReport {
                         cluster: self.cfg.id,
                         stats,
                         running_instances: running,
                         service_cpu,
                     });
+                    self.report_seq = self.buffer_critical(ctx, &msg);
                     let bytes = msg.default_wire_bytes() + WS_FRAME_OVERHEAD;
                     ctx.send(self.root, msg, bytes, labels::CLUSTER_TO_ROOT);
                 } else {
                     ctx.metrics().inc("cluster.report_suppressed");
+                }
+
+                // Uplink lease sweep: the aggregate tick is this
+                // orchestrator's steady heartbeat, so it doubles as the
+                // partition detector (mirror of the root's LivenessPing
+                // sweep). Root-originated traffic through
+                // `note_root_activity` flips it back.
+                if !self.uplink_partitioned
+                    && self.uplink.health(ctx.now) == LinkHealth::Partitioned
+                {
+                    self.uplink_partitioned = true;
+                    ctx.metrics().inc("cluster.uplink_partitioned");
+                }
+
+                // Outbox pump: re-send critical messages whose backoff
+                // expired. The lease may still be down — the re-sends
+                // just die in the cut — but retries are bounded, so a
+                // short flap loses nothing and a long partition falls
+                // back to the heal-time resync.
+                for (_seq, msg) in self.outbox.due(ctx.now) {
+                    ctx.metrics().inc("cluster.outbox_retry");
+                    let wire = SimMsg::Oak(msg);
+                    let bytes = wire.default_wire_bytes() + WS_FRAME_OVERHEAD;
+                    // lint: allow(flow-handled, retransmit of a buffered critical message; the visible send at each enqueue site carries this flow edge)
+                    ctx.send(self.root, wire, bytes, labels::CLUSTER_TO_ROOT);
+                }
+                if self.outbox.dropped > self.outbox_dropped_seen {
+                    ctx.metrics().add(
+                        "cluster.outbox_dropped",
+                        self.outbox.dropped - self.outbox_dropped_seen,
+                    );
+                    self.outbox_dropped_seen = self.outbox.dropped;
                 }
 
                 // Vivaldi gossip: send each worker a small peer sample
@@ -1298,6 +1432,39 @@ impl Actor for ClusterOrchestrator {
                 );
             }
 
+            SimMsg::Oak(OakMsg::ResyncRequest) => {
+                ctx.charge_cpu(costs::AGGREGATE_MS);
+                // Only a healed root asks, so the request itself is
+                // proof of life (and replays the outbox first — the
+                // root's reconciliation then sees both channels).
+                self.note_root_activity(ctx);
+                ctx.metrics().inc("cluster.resync_sent");
+                // Census: every live instance this cluster tracks.
+                let instances: Vec<(InstanceId, TaskId, ServiceState, NodeId)> = self
+                    .instances
+                    .iter()
+                    .filter(|(_, li)| !li.state.is_terminal())
+                    .map(|(iid, li)| (iid, li.task, li.state, li.node))
+                    .collect();
+                // Minted-replacement log: adoptions still awaiting the
+                // root's verdict — exactly the lineage edges the root
+                // may have missed while the uplink was cut.
+                let replacements: Vec<_> = self
+                    .pending_adoptions
+                    .iter()
+                    .map(|(repl, &(orig, reason, _node, task))| {
+                        (task.service, task, orig, *repl, reason)
+                    })
+                    .collect();
+                let msg = SimMsg::Oak(OakMsg::ResyncSnapshot {
+                    cluster: self.cfg.id,
+                    instances,
+                    replacements,
+                });
+                let bytes = msg.default_wire_bytes() + WS_FRAME_OVERHEAD;
+                ctx.send(self.root, msg, bytes, labels::CLUSTER_TO_ROOT);
+            }
+
             SimMsg::Timer(TimerKind::TableFlush) => {
                 // Dissemination tick: flush the coalesced buffer. The
                 // timer re-arms lazily — the next dirty row schedules the
@@ -1326,7 +1493,8 @@ impl Actor for ClusterOrchestrator {
             }
 
             // API traffic terminates at the root; ServiceDeployed is a
-            // root→client notification. Declared so `oakestra lint` can
+            // root→client notification; ResyncSnapshot is this tier's
+            // own cluster→root reply. Declared so `oakestra lint` can
             // prove every other OakMsg variant has an arm above.
             // lint: wildcard(OakMsg: ApiCall, ApiReturn, ServiceDeployed)
             _ => {}

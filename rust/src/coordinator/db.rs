@@ -59,6 +59,14 @@ pub struct ServiceRecord {
     /// otherwise a teardown racing an in-flight recovery resurrects
     /// instances the broadcast already missed.
     pub retired: bool,
+    /// Partition overlay (NOT a lifecycle state — instances keep their
+    /// [`ServiceState`]): clusters currently unreachable that hold live
+    /// placements of this service, with the time each degradation
+    /// started. While non-empty, status answers for those placements are
+    /// a last-known-good view and the root must not storm reschedules —
+    /// the cluster keeps operating autonomously and the post-heal
+    /// anti-entropy resync reconciles.
+    pub degraded: BTreeMap<ClusterId, SimTime>,
 }
 
 impl ServiceRecord {
@@ -91,6 +99,12 @@ impl ServiceRecord {
     /// telemetry `ServiceStatus` exposes.
     pub fn observed_cpu_mc(&self) -> u64 {
         self.observed_cpu.values().sum()
+    }
+
+    /// Whether any cluster holding this service's placements is currently
+    /// partitioned (degraded-mode staleness applies to status answers).
+    pub fn is_degraded(&self) -> bool {
+        !self.degraded.is_empty()
     }
 }
 
@@ -153,6 +167,7 @@ impl ServiceDb {
             placement: BTreeMap::new(),
             observed_cpu: BTreeMap::new(),
             retired: false,
+            degraded: BTreeMap::new(),
         };
         let mut ids = Vec::new();
         for t in &tasks {
@@ -294,6 +309,54 @@ impl ServiceDb {
     }
     pub fn is_empty(&self) -> bool {
         self.services.is_empty()
+    }
+
+    /// Mark every service with a live placement in `cluster` as degraded
+    /// (the cluster's federation lease partitioned). Returns how many
+    /// services were newly marked.
+    pub fn mark_cluster_degraded(&mut self, cluster: ClusterId, now: SimTime) -> u64 {
+        let mut marked = 0;
+        for rec in self.services.values_mut() {
+            if rec.retired || rec.degraded.contains_key(&cluster) {
+                continue;
+            }
+            let placed = rec.instances.iter().any(|i| {
+                !i.state.is_terminal() && rec.placement.get(&i.instance) == Some(&cluster)
+            });
+            if placed {
+                rec.degraded.insert(cluster, now);
+                marked += 1;
+            }
+        }
+        marked
+    }
+
+    /// Lift the degraded overlay for `cluster` on heal. Returns how many
+    /// services carried the marker.
+    pub fn clear_cluster_degraded(&mut self, cluster: ClusterId) -> u64 {
+        let mut cleared = 0;
+        for rec in self.services.values_mut() {
+            if rec.degraded.remove(&cluster).is_some() {
+                cleared += 1;
+            }
+        }
+        cleared
+    }
+
+    /// Every live (non-terminal) root record currently placed in
+    /// `cluster` — the root's half of the anti-entropy census diff.
+    pub fn live_placed_in(&self, cluster: ClusterId) -> Vec<(ServiceId, TaskId, InstanceId)> {
+        let mut out = Vec::new();
+        for (sid, rec) in &self.services {
+            for i in &rec.instances {
+                if !i.state.is_terminal()
+                    && rec.placement.get(&i.instance) == Some(&cluster)
+                {
+                    out.push((*sid, i.task, i.instance));
+                }
+            }
+        }
+        out
     }
 
     /// All running locations of a task across clusters (root-tier
@@ -459,6 +522,48 @@ mod tests {
         // Rows for unknown services are ignored.
         db.apply_cluster_cpu(ClusterId(1), &[(ServiceId(99), 10)]);
         assert_eq!(db.service(a).unwrap().observed_cpu_mc(), 35);
+    }
+
+    #[test]
+    fn degraded_overlay_marks_and_clears_per_cluster() {
+        let mut db = ServiceDb::default();
+        let (a, ids_a) = db.register(simple_sla("a", 100, 32), SimTime::ZERO);
+        let (b, ids_b) = db.register(simple_sla("b", 100, 32), SimTime::ZERO);
+        db.service_mut(a)
+            .unwrap()
+            .placement
+            .insert(ids_a[0], ClusterId(1));
+        db.service_mut(b)
+            .unwrap()
+            .placement
+            .insert(ids_b[0], ClusterId(2));
+        let t = SimTime::from_secs(30.0);
+        assert_eq!(db.mark_cluster_degraded(ClusterId(1), t), 1);
+        // Idempotent: a second sweep marks nothing new.
+        assert_eq!(db.mark_cluster_degraded(ClusterId(1), t), 0);
+        assert!(db.service(a).unwrap().is_degraded());
+        assert!(!db.service(b).unwrap().is_degraded());
+        assert_eq!(
+            db.live_placed_in(ClusterId(1)),
+            vec![(
+                a,
+                TaskId {
+                    service: a,
+                    index: 0
+                },
+                ids_a[0]
+            )]
+        );
+        // Terminal records leave the census view.
+        db.service_mut(a)
+            .unwrap()
+            .instance_mut(ids_a[0])
+            .unwrap()
+            .state = ServiceState::Failed;
+        assert!(db.live_placed_in(ClusterId(1)).is_empty());
+        assert_eq!(db.clear_cluster_degraded(ClusterId(1)), 1);
+        assert!(!db.service(a).unwrap().is_degraded());
+        assert_eq!(db.clear_cluster_degraded(ClusterId(1)), 0);
     }
 
     #[test]

@@ -5,17 +5,17 @@
 //! delegation) over the [`crate::coordinator::db`].
 
 use std::any::Any;
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 
 use crate::api::{self, ApiEnvelope, ApiError, ApiRequest, ApiResponse, API_VERSION, MAX_REPLICAS};
 use crate::hierarchy::ClusterTree;
-use crate::messaging::{labels, WsLink, WS_FRAME_OVERHEAD};
+use crate::messaging::{labels, LinkHealth, WsLink, WS_FRAME_OVERHEAD};
 use crate::model::ServiceState;
 use crate::sim::{Actor, ActorId, Ctx, OakMsg, ReplacementReason, SimMsg, TimerKind};
 use crate::sla::TaskSla;
 use crate::util::{ClusterId, InstanceId, ServiceId, SimTime, TaskId};
 
-use super::db::ServiceDb;
+use super::db::{AdoptError, ServiceDb};
 use super::fedstate::ClusterTable;
 use super::{costs, intervals, mem};
 
@@ -90,6 +90,14 @@ pub struct RootOrchestrator {
     tracking: BTreeMap<ServiceId, DeployTracking>,
     /// Instance → API caller to notify if its placement fails.
     placement_watch: BTreeMap<InstanceId, ApiWaiter>,
+    /// Clusters whose federation lease is currently `Partitioned`:
+    /// cluster → when the partition was detected. Drives the Degraded
+    /// service overlay, keeps new delegations away from the black hole,
+    /// and arms the on-heal anti-entropy resync. The root deliberately
+    /// does NOT fail or reschedule a partitioned cluster's instances —
+    /// the cluster keeps operating autonomously and the post-heal
+    /// census reconciles (no reschedule storm during the grace window).
+    partitioned: BTreeMap<ClusterId, SimTime>,
     /// Scheduling decisions taken (for Fig. 6 instrumentation).
     pub root_sched_ops: u64,
     started: bool,
@@ -107,6 +115,7 @@ impl RootOrchestrator {
             pending: BTreeMap::new(),
             tracking: BTreeMap::new(),
             placement_watch: BTreeMap::new(),
+            partitioned: BTreeMap::new(),
             root_sched_ops: 0,
             started: false,
         }
@@ -127,7 +136,11 @@ impl RootOrchestrator {
     /// `DelegationResult{None}` arm) instead of re-ranking per attempt.
     fn delegate(&mut self, ctx: &mut Ctx<'_>, instance: InstanceId, task: TaskId, sla: TaskSla) {
         let k = self.cfg.max_delegation_attempts as usize;
-        let (ranked, scanned) = self.fed.top_k(&sla, k, &[]);
+        // Partitioned clusters are excluded up front: delegating into a
+        // black hole would park the instance behind the retransmit cap
+        // and burn the attempt budget on silence.
+        let exclude: Vec<ClusterId> = self.partitioned.keys().copied().collect();
+        let (ranked, scanned) = self.fed.top_k(&sla, k, &exclude);
         ctx.charge_cpu(costs::ROOT_SCHED_PER_CLUSTER_MS * scanned.max(1) as f64);
         ctx.metrics().inc("root.op.rank");
         ctx.metrics().observe("root.rank_scanned", scanned as f64);
@@ -157,8 +170,8 @@ impl RootOrchestrator {
     /// Send one `DelegateTask` to `next` and park the bookkeeping. The
     /// caller has already picked the candidate (initial rank, O(1) spill
     /// step or refill selection). One checked lookup for every path: a
-    /// cluster that vanished between selection and send — possible once
-    /// detach paths exist — is skipped in favor of the next candidate on
+    /// cluster that vanished — or whose lease partitioned — between
+    /// selection and send is skipped in favor of the next candidate on
     /// the list (the same semantics as the spill arm's skip), and only
     /// an empty list ends the delegation.
     fn send_delegation(
@@ -175,7 +188,12 @@ impl RootOrchestrator {
                 self.fail_instance(ctx, instance, pd.task);
                 return;
             };
-            if let Some(actor) = self.cluster_actors.get(&c).copied() {
+            let actor = if self.partitioned.contains_key(&c) {
+                None
+            } else {
+                self.cluster_actors.get(&c).copied()
+            };
+            if let Some(actor) = actor {
                 pd.current = c;
                 let msg = SimMsg::Oak(OakMsg::DelegateTask {
                     task: pd.task,
@@ -670,7 +688,16 @@ impl RootOrchestrator {
 
             ApiRequest::ServiceStatus { service } => {
                 let response = match self.db.service(service) {
-                    Some(rec) => ApiResponse::Status(api::status_of(rec)),
+                    Some(rec) => {
+                        if rec.is_degraded() {
+                            // Degraded-mode staleness is surfaced, not
+                            // hidden: the status view names the
+                            // partitioned clusters whose rows are
+                            // last-known-good (`stale_clusters`).
+                            ctx.metrics().inc("root.status_stale");
+                        }
+                        ApiResponse::Status(api::status_of(rec))
+                    }
                     None => ApiResponse::Error(ApiError::UnknownService(service)),
                 };
                 self.respond(ctx, reply_to, request_id, response);
@@ -681,6 +708,104 @@ impl RootOrchestrator {
                 self.respond(ctx, reply_to, request_id, ApiResponse::Services(rows));
             }
         }
+    }
+
+    /// First proof of life from a cluster marked partitioned: close the
+    /// degraded window, lift the service overlay and solicit the
+    /// anti-entropy census (paper §6: the WebSocket lease "triggers
+    /// remedial actions in case of failures"). Idempotent — only the
+    /// first proof after a detection acts.
+    fn heal_partition(&mut self, ctx: &mut Ctx<'_>, cluster: ClusterId) {
+        let Some(since) = self.partitioned.remove(&cluster) else {
+            return;
+        };
+        let window = ctx.now.saturating_sub(since);
+        ctx.metrics().inc("root.partition_healed");
+        ctx.metrics()
+            .observe("root.degraded_window_ms", window.as_millis());
+        let restored = self.db.clear_cluster_degraded(cluster);
+        ctx.metrics().add("root.services_restored", restored);
+        if let Some(actor) = self.cluster_actors.get(&cluster).copied() {
+            ctx.metrics().inc("root.resync_requested");
+            let msg = SimMsg::Oak(OakMsg::ResyncRequest);
+            let bytes = msg.default_wire_bytes() + WS_FRAME_OVERHEAD;
+            ctx.send(actor, msg, bytes, labels::ROOT_TO_CLUSTER);
+        }
+    }
+
+    /// Shared adoption path for live `InstanceReplaced` announcements
+    /// and resync-replayed replacement-log entries: run the idempotent
+    /// adoption machinery, mirror the placement/lineage/watch
+    /// bookkeeping, and always ack the cluster (the ack is what clears
+    /// its outbox entry and pending-adoption record, so replays settle
+    /// instead of retrying forever).
+    #[allow(clippy::too_many_arguments)]
+    fn handle_replacement(
+        &mut self,
+        ctx: &mut Ctx<'_>,
+        cluster: ClusterId,
+        service: ServiceId,
+        task: TaskId,
+        original: InstanceId,
+        replacement: InstanceId,
+        reason: ReplacementReason,
+    ) -> Result<bool, AdoptError> {
+        let outcome = self.db.adopt_successor(service, task, original, replacement);
+        let adopted = match outcome {
+            Ok(newly) => {
+                if newly {
+                    ctx.metrics().inc(match reason {
+                        ReplacementReason::Migration => "root.adopted_migration",
+                        ReplacementReason::LocalRecovery => "root.adopted_recovery",
+                    });
+                    // The adopted record is live bookkeeping, charged
+                    // exactly like a root-minted one and released on its
+                    // terminal transition.
+                    ctx.add_mem(mem::PER_INSTANCE_MB);
+                    if let Some(rec) = self.db.service_mut(service) {
+                        // The successor runs where its lineage ran:
+                        // inherit the original's delegation target so
+                        // shrink/undeploy/migrate can route to it.
+                        rec.placement.insert(replacement, cluster);
+                    }
+                    // Inherit any placement-watch waiter: the caller
+                    // asked about the lineage, not one id.
+                    if let Some(w) = self.placement_watch.remove(&original) {
+                        self.placement_watch.insert(replacement, w);
+                    }
+                    if reason == ReplacementReason::LocalRecovery {
+                        // The original died with its worker; its Failed
+                        // status may be in flight or lost, so settle the
+                        // record (and release its bookkeeping) here. A
+                        // later duplicate terminal report is a no-op.
+                        self.transition_instance(
+                            ctx,
+                            original,
+                            service,
+                            ServiceState::Failed,
+                        );
+                    }
+                }
+                true
+            }
+            Err(e) => {
+                ctx.metrics().inc(match e {
+                    AdoptError::Retired => "root.adopt_refused_retired",
+                    _ => "root.adopt_refused",
+                });
+                false
+            }
+        };
+        if let Some(actor) = self.cluster_actors.get(&cluster).copied() {
+            let msg = SimMsg::Oak(OakMsg::InstanceReplacedAck {
+                original,
+                replacement,
+                adopted,
+            });
+            let bytes = msg.default_wire_bytes() + WS_FRAME_OVERHEAD;
+            ctx.send(actor, msg, bytes, labels::ROOT_TO_CLUSTER);
+        }
+        outcome
     }
 
     fn maybe_notify_deployed(&mut self, ctx: &mut Ctx<'_>, service: ServiceId) {
@@ -752,6 +877,10 @@ impl Actor for RootOrchestrator {
                 if let Some(l) = self.links.get_mut(&cluster) {
                     l.on_activity(ctx.now);
                 }
+                // A buffered report replayed after a partition proves
+                // the uplink works again — heal without waiting for the
+                // next pong.
+                self.heal_partition(ctx, cluster);
                 ctx.metrics()
                     .add("root.instances_reported", running_instances as u64);
             }
@@ -805,9 +934,11 @@ impl Actor for RootOrchestrator {
                                 while !pd.remaining.is_empty() {
                                     let c = pd.remaining.remove(0);
                                     // Defensive: never re-offer a refusal,
-                                    // and skip clusters gone since rank.
+                                    // and skip clusters gone — or
+                                    // partitioned — since rank.
                                     if pd.refused.contains(&c)
                                         || !self.cluster_actors.contains_key(&c)
+                                        || self.partitioned.contains_key(&c)
                                     {
                                         continue;
                                     }
@@ -822,8 +953,10 @@ impl Actor for RootOrchestrator {
                                 // over *current* aggregates, excluding
                                 // every cluster that already said no.
                                 if next.is_none() {
+                                    let mut exclude = pd.refused.clone();
+                                    exclude.extend(self.partitioned.keys().copied());
                                     let (ranked, scanned) =
-                                        self.fed.top_k(&pd.sla, 1, &pd.refused);
+                                        self.fed.top_k(&pd.sla, 1, &exclude);
                                     ctx.charge_cpu(
                                         costs::ROOT_SCHED_PER_CLUSTER_MS
                                             * scanned.max(1) as f64,
@@ -899,65 +1032,21 @@ impl Actor for RootOrchestrator {
                 reason,
             }) => {
                 ctx.charge_cpu(costs::ADOPT_MS);
-                let adopted = match self.db.adopt_successor(service, task, original, replacement)
-                {
-                    Ok(newly) => {
-                        if newly {
-                            ctx.metrics().inc(match reason {
-                                ReplacementReason::Migration => "root.adopted_migration",
-                                ReplacementReason::LocalRecovery => {
-                                    "root.adopted_recovery"
-                                }
-                            });
-                            // The adopted record is live bookkeeping,
-                            // charged exactly like a root-minted one and
-                            // released on its terminal transition.
-                            ctx.add_mem(mem::PER_INSTANCE_MB);
-                            if let Some(rec) = self.db.service_mut(service) {
-                                // The successor runs where its lineage
-                                // ran: inherit the original's delegation
-                                // target so shrink/undeploy/migrate can
-                                // route to it.
-                                rec.placement.insert(replacement, cluster);
-                            }
-                            // Inherit any placement-watch waiter: the
-                            // caller asked about the lineage, not one id.
-                            if let Some(w) = self.placement_watch.remove(&original) {
-                                self.placement_watch.insert(replacement, w);
-                            }
-                            if reason == ReplacementReason::LocalRecovery {
-                                // The original died with its worker; its
-                                // Failed status may be in flight or lost,
-                                // so settle the record (and release its
-                                // bookkeeping) here. A later duplicate
-                                // terminal report is a no-op.
-                                self.transition_instance(
-                                    ctx,
-                                    original,
-                                    service,
-                                    ServiceState::Failed,
-                                );
-                            }
-                        }
-                        true
-                    }
-                    Err(e) => {
-                        ctx.metrics().inc(match e {
-                            super::db::AdoptError::Retired => "root.adopt_refused_retired",
-                            _ => "root.adopt_refused",
-                        });
-                        false
-                    }
-                };
-                if let Some(actor) = self.cluster_actors.get(&cluster).copied() {
-                    let msg = SimMsg::Oak(OakMsg::InstanceReplacedAck {
-                        original,
-                        replacement,
-                        adopted,
-                    });
-                    let bytes = msg.default_wire_bytes() + WS_FRAME_OVERHEAD;
-                    ctx.send(actor, msg, bytes, labels::ROOT_TO_CLUSTER);
+                if let Some(l) = self.links.get_mut(&cluster) {
+                    l.on_activity(ctx.now);
                 }
+                // A replayed announcement arriving after a partition is
+                // proof of life too.
+                self.heal_partition(ctx, cluster);
+                let _ = self.handle_replacement(
+                    ctx,
+                    cluster,
+                    service,
+                    task,
+                    original,
+                    replacement,
+                    reason,
+                );
             }
 
             SimMsg::Oak(OakMsg::EscalateReschedule {
@@ -1033,6 +1122,148 @@ impl Actor for RootOrchestrator {
                 if let Some(l) = self.links.get_mut(&cluster) {
                     l.on_pong(ctx.now);
                 }
+                // The first pong after a partition heals the lease and
+                // kicks off the anti-entropy resync.
+                self.heal_partition(ctx, cluster);
+            }
+
+            SimMsg::Oak(OakMsg::ResyncSnapshot {
+                cluster,
+                instances,
+                replacements,
+            }) => {
+                ctx.charge_cpu(costs::CLUSTER_REPORT_MS);
+                ctx.metrics().inc("root.resyncs");
+                if let Some(l) = self.links.get_mut(&cluster) {
+                    l.on_activity(ctx.now);
+                }
+                // Phase 1: replay the minted-replacement log through the
+                // idempotent adoption machinery. Entries the live
+                // announcement (or an outbox replay) already delivered
+                // come back `Ok(false)` — benign duplicates; a genuine
+                // `LineageConflict` is the double-adoption the CI gate
+                // watches for.
+                for &(service, task, original, replacement, reason) in &replacements {
+                    ctx.charge_cpu(costs::ADOPT_MS);
+                    match self.handle_replacement(
+                        ctx,
+                        cluster,
+                        service,
+                        task,
+                        original,
+                        replacement,
+                        reason,
+                    ) {
+                        Ok(true) => ctx.metrics().inc("root.resync_adopted"),
+                        Ok(false) => {
+                            ctx.metrics().inc("root.resync_adopt_duplicate")
+                        }
+                        Err(AdoptError::LineageConflict) => {
+                            ctx.metrics().inc("root.resync_adopt_conflict")
+                        }
+                        Err(_) => {}
+                    }
+                }
+                // Phase 2: the census is cluster-side truth for every
+                // row it carries. Rows the root has already written off
+                // (retired service, terminal record — a teardown the
+                // partition swallowed) or never knew (an introduction
+                // dropped past the retry budget with no adoptable
+                // lineage) are true orphans: torn down, nothing else.
+                let census: BTreeSet<InstanceId> =
+                    instances.iter().map(|r| r.0).collect();
+                for &(iid, task, state, node) in &instances {
+                    ctx.charge_cpu(costs::TABLE_OP_MS);
+                    let sid = task.service;
+                    let known = self.db.service_of_instance(iid) == Some(sid);
+                    let written_off = !known
+                        || self
+                            .db
+                            .service(sid)
+                            .map(|rec| {
+                                rec.retired
+                                    || rec
+                                        .instance(iid)
+                                        .map(|i| i.state.is_terminal())
+                                        .unwrap_or(true)
+                            })
+                            .unwrap_or(true);
+                    if written_off {
+                        ctx.metrics().inc("root.resync_orphans");
+                        self.send_undeploy(ctx, iid, Some(cluster));
+                        continue;
+                    }
+                    // A delegation answered only by the census: its
+                    // DelegationResult died in the partition — settle
+                    // the pending entry and the API waiter now.
+                    if self.pending.remove(&iid).is_some() {
+                        self.placement_watch.remove(&iid);
+                        ctx.metrics().inc("root.resync_settled_delegations");
+                    }
+                    if let Some(rec) = self.db.service_mut(sid) {
+                        rec.placement.insert(iid, cluster);
+                        if let Some(inst) = rec.instance_mut(iid) {
+                            if inst.state == ServiceState::Requested {
+                                let _ = inst.transition(ServiceState::Scheduled);
+                            }
+                            if !inst.state.is_terminal() {
+                                inst.worker = Some(node);
+                            }
+                        }
+                    }
+                    self.transition_instance(ctx, iid, sid, state);
+                    if state == ServiceState::Running {
+                        self.maybe_notify_deployed(ctx, sid);
+                    }
+                }
+                // Phase 3: root records placed in the cluster but absent
+                // from the census are lost (the instance or its final
+                // report died inside the partition): settle them Failed
+                // and reschedule through the normal priority-list path —
+                // measured recovery, not a blind grace-window storm.
+                // Instances still pending delegation are skipped: the
+                // cluster never deployed them and their `DelegateTask`
+                // may still be parked in the network.
+                let placed = self.db.live_placed_in(cluster);
+                for (sid, task, iid) in placed {
+                    if census.contains(&iid) || self.pending.contains_key(&iid) {
+                        continue;
+                    }
+                    ctx.metrics().inc("root.resync_lost");
+                    self.transition_instance(ctx, iid, sid, ServiceState::Failed);
+                    self.placement_watch.remove(&iid);
+                    let (retired, sla) = match self.db.service_mut(sid) {
+                        Some(rec) => {
+                            rec.placement.remove(&iid);
+                            (rec.retired, rec.spec.task(task).map(|t| t.sla.clone()))
+                        }
+                        None => (true, None),
+                    };
+                    if retired {
+                        continue;
+                    }
+                    let Some(sla) = sla else { continue };
+                    if let Some(new_id) = self.db.mint_replacement(task) {
+                        ctx.metrics().inc("root.reschedules");
+                        ctx.add_mem(mem::PER_INSTANCE_MB);
+                        // Lost-instance succession mirrors the escalate
+                        // arm: link the lineage when the settled record
+                        // has no successor yet, so status views keep the
+                        // replacement chain intact.
+                        if let Some(rec) = self.db.service_mut(sid) {
+                            let orig_dead = rec
+                                .instance(iid)
+                                .map(|i| i.state.is_terminal() && i.successor.is_none())
+                                .unwrap_or(false);
+                            if orig_dead {
+                                rec.instance_mut(iid).unwrap().successor = Some(new_id);
+                                rec.instance_mut(new_id).unwrap().predecessor =
+                                    Some(iid);
+                            }
+                        }
+                        self.delegate(ctx, new_id, task, sla);
+                    }
+                }
             }
 
             SimMsg::Timer(TimerKind::LivenessPing) => {
@@ -1045,6 +1276,30 @@ impl Actor for RootOrchestrator {
                 }
                 for l in self.links.values_mut() {
                     l.on_ping_sent();
+                }
+                // Partition detection sweep: a lease past
+                // `partitioned_after` flips the cluster into degraded
+                // mode — its services are marked (staleness surfaces on
+                // status answers), new delegations route around it, and
+                // the root deliberately does NOT fail or reschedule its
+                // instances: the cluster keeps operating autonomously
+                // and the post-heal resync reconciles, so a transient
+                // cut never triggers a reschedule storm.
+                let now = ctx.now;
+                let newly: Vec<ClusterId> = self
+                    .links
+                    .iter()
+                    .filter(|(c, l)| {
+                        l.health(now) == LinkHealth::Partitioned
+                            && !self.partitioned.contains_key(c)
+                    })
+                    .map(|(c, _)| *c)
+                    .collect();
+                for c in newly {
+                    self.partitioned.insert(c, now);
+                    ctx.metrics().inc("root.partition_detected");
+                    let marked = self.db.mark_cluster_degraded(c, now);
+                    ctx.metrics().add("root.services_degraded", marked);
                 }
                 ctx.schedule(
                     self.cfg.liveness_interval,

@@ -476,6 +476,7 @@ impl Actor for WorkerEngine {
             // lint: wildcard(OakMsg: DelegationResult, UndeployService, ServiceDeployed)
             // lint: wildcard(OakMsg: MigrateInstance, InstanceReplaced, InstanceReplacedAck)
             // lint: wildcard(OakMsg: ResolveIpUp, EscalateReschedule)
+            // lint: wildcard(OakMsg: ResyncRequest, ResyncSnapshot)
             _ => {}
         }
     }

@@ -36,6 +36,7 @@ pub const REPLY_PAIRS: &[(&str, &str, &str)] = &[
     ("Ping", "Pong", "cluster"),
     ("RegisterCluster", "RegisterClusterAck", "root"),
     ("RegisterWorker", "RegisterWorkerAck", "cluster"),
+    ("ResyncRequest", "ResyncSnapshot", "cluster"),
 ];
 
 /// Which tier a dispatcher file implements, if any.

@@ -94,9 +94,14 @@ fn print_help() {
            oakestra bench <fig|all>           figures: 4a 4bc 5 6 7a 7b 8a 8b 9 10 ablations\n\
            oakestra churn [opts]              dynamic-workload churn bench (submit/scale/\n\
                                               migrate storms) → BENCH_churn.json\n\
-             --scenario submit|scale|failover|spill|all  storm generators (default all;\n\
+             --scenario submit|scale|failover|spill|partition|all\n\
+                                              storm generators (default all;\n\
                                               spill = heavy catalog over undersized\n\
-                                              clusters, defaults to a 16x6 shape)\n\
+                                              clusters, defaults to a 16x6 shape;\n\
+                                              partition = arrival churn + migration\n\
+                                              drills under seeded cluster-uplink\n\
+                                              cuts/flaps, defaults to 16x12 with the\n\
+                                              heal-time anti-entropy resync gated)\n\
              --seed N --duration S --scheduler rom|ldp\n\
              --shape CxW                      topology: C clusters x W workers each\n\
                                               (e.g. 16x6; --clusters/--workers override)\n\
@@ -395,7 +400,7 @@ fn cmd_churn(args: &[String]) -> Result<()> {
     }
     if let Some(s) = flag_value(args, "--scenario") {
         cfg.scenario = bh::ChurnScenario::parse(s).ok_or_else(|| {
-            anyhow!("unknown scenario '{s}' (submit|scale|failover|spill|all)")
+            anyhow!("unknown scenario '{s}' (submit|scale|failover|spill|partition|all)")
         })?;
         if cfg.scenario == bh::ChurnScenario::Spill {
             // The spill storm wants undersized clusters + fast arrivals;
@@ -408,6 +413,20 @@ fn cmd_churn(args: &[String]) -> Result<()> {
                 cfg.settle_s = 30.0;
                 cfg.clusters = 8;
                 cfg.workers_per_cluster = 4;
+            }
+        }
+        if cfg.scenario == bh::ChurnScenario::Partition {
+            // The partition storm needs its fault schedule installed;
+            // start from the 16x12 flapping-uplink preset and let
+            // explicit flags override. --quick shrinks the fleet, not
+            // the cut windows — cuts must stay past the 30s lease or
+            // the root never detects anything.
+            cfg = bh::ChurnConfig::partition_storm(cfg.seed);
+            if quick {
+                cfg.clusters = 6;
+                cfg.workers_per_cluster = 4;
+                cfg.partition_clusters = 2;
+                cfg.settle_s = 35.0;
             }
         }
     }
@@ -490,6 +509,32 @@ fn cmd_churn(args: &[String]) -> Result<()> {
             report.pending_non_timer
         );
     }
+    if report.watch_expired_unexcused > 0 {
+        eprintln!(
+            "warning: {} convergence watch(es) abandoned for services with \
+             no partitioned cluster to blame",
+            report.watch_expired_unexcused
+        );
+    }
+    let partition_bad = report
+        .partition
+        .as_ref()
+        .is_some_and(|p| p.resync_conflicts > 0 || p.unconverged_heals > 0);
+    if let Some(p) = &report.partition {
+        if p.resync_conflicts > 0 {
+            eprintln!(
+                "warning: {} resync adoption conflict(s) — an instance was \
+                 adopted twice across a partition",
+                p.resync_conflicts
+            );
+        }
+        if p.unconverged_heals > 0 {
+            eprintln!(
+                "warning: {} heal(s) never reconverged the census",
+                p.unconverged_heals
+            );
+        }
+    }
     std::fs::write(out, report.to_json())
         .map_err(|e| anyhow!("writing {out}: {e}"))?;
     println!("wrote {out}");
@@ -498,16 +543,21 @@ fn cmd_churn(args: &[String]) -> Result<()> {
             || report.leaked_capacity_mc > 0
             || report.unanswered_requests > 0
             || report.census_mismatch > 0
-            || report.pending_non_timer > 0)
+            || report.pending_non_timer > 0
+            || report.watch_expired_unexcused > 0
+            || partition_bad)
     {
         return Err(anyhow!(
             "strict churn check failed: leaks={}/{}mc unanswered={} \
-             census_mismatch={} pending_non_timer={}",
+             census_mismatch={} pending_non_timer={} watch_unexcused={} \
+             partition_bad={}",
             report.leaked_instances,
             report.leaked_capacity_mc,
             report.unanswered_requests,
             report.census_mismatch,
-            report.pending_non_timer
+            report.pending_non_timer,
+            report.watch_expired_unexcused,
+            partition_bad
         ));
     }
     Ok(())

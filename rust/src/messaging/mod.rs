@@ -9,7 +9,7 @@ mod broker;
 mod wslink;
 
 pub use broker::{MqttBroker, Topic};
-pub use wslink::{LinkHealth, WsLink};
+pub use wslink::{LinkHealth, Outbox, OutboxEntry, WsLink};
 
 /// Fixed per-message framing overhead in bytes.
 ///

@@ -2,6 +2,17 @@
 //! §6: HTTP(S) WebSockets between cluster and root "implicitly allows us
 //! to monitor the liveness of both orchestrator endpoints and trigger
 //! remedial actions in case of failures").
+//!
+//! The link is a **lease**: `Healthy → Suspect → Partitioned`, driven by
+//! pong silence. Both federation endpoints hold one — the root per
+//! cluster link, the cluster for its uplink — and the coordinator tiers
+//! key degraded-mode autonomy and the anti-entropy resync off the
+//! `Partitioned` edge. A bounded-retry [`Outbox`] buffers critical
+//! messages while the lease is unhealthy so a heal replays them instead
+//! of losing them silently; receiver-side idempotency (adoption lineage,
+//! pending-delegation maps) makes the replays safe to double-deliver.
+
+use std::collections::VecDeque;
 
 use crate::util::SimTime;
 
@@ -11,8 +22,10 @@ pub enum LinkHealth {
     Healthy,
     /// No pong for > `suspect_after` — degrade gracefully.
     Suspect,
-    /// No pong for > `dead_after` — peer considered failed.
-    Dead,
+    /// No pong for > `partitioned_after` — the lease is lost: the peer
+    /// is unreachable (crashed or partitioned; the difference is
+    /// invisible from here) and remedial action is warranted.
+    Partitioned,
 }
 
 /// One endpoint's view of the link.
@@ -20,7 +33,7 @@ pub enum LinkHealth {
 pub struct WsLink {
     pub ping_interval: SimTime,
     pub suspect_after: SimTime,
-    pub dead_after: SimTime,
+    pub partitioned_after: SimTime,
     last_pong: SimTime,
     pub pings_sent: u64,
     pub pongs_received: u64,
@@ -31,7 +44,7 @@ impl WsLink {
         WsLink {
             ping_interval: SimTime::from_secs(5.0),
             suspect_after: SimTime::from_secs(12.0),
-            dead_after: SimTime::from_secs(30.0),
+            partitioned_after: SimTime::from_secs(30.0),
             last_pong: now,
             pings_sent: 0,
             pongs_received: 0,
@@ -54,13 +67,129 @@ impl WsLink {
 
     pub fn health(&self, now: SimTime) -> LinkHealth {
         let silence = now.saturating_sub(self.last_pong);
-        if silence >= self.dead_after {
-            LinkHealth::Dead
+        if silence >= self.partitioned_after {
+            LinkHealth::Partitioned
         } else if silence >= self.suspect_after {
             LinkHealth::Suspect
         } else {
             LinkHealth::Healthy
         }
+    }
+}
+
+/// One buffered critical message awaiting delivery confirmation (or
+/// supersession, or retry exhaustion).
+#[derive(Clone, Debug)]
+pub struct OutboxEntry<M> {
+    pub seq: u64,
+    pub msg: M,
+    /// Resends burned so far (0 = only the original send went out).
+    pub retries: u32,
+    /// Don't resend before this instant.
+    pub next_retry: SimTime,
+}
+
+/// Bounded-retry send buffer for critical messages over an unhealthy
+/// lease. Generic over the message type so the messaging tier stays
+/// decoupled from the protocol enum; the cluster orchestrator
+/// instantiates it with `OakMsg`.
+///
+/// Replay is **at-least-once**: entries stay buffered until explicitly
+/// acked ([`Outbox::ack`]), superseded (caller removes stale seqs), or
+/// `max_retries` resends are exhausted — after which the entry is
+/// dropped and counted, and the anti-entropy resync is the recovery
+/// path of last resort. Receivers must be idempotent.
+#[derive(Clone, Debug)]
+pub struct Outbox<M> {
+    next_seq: u64,
+    pub max_retries: u32,
+    /// Base pacing between resends of one entry (doubles per retry).
+    pub retry_backoff: SimTime,
+    entries: VecDeque<OutboxEntry<M>>,
+    /// Entries that exhausted their retry budget and were dropped.
+    pub dropped: u64,
+}
+
+impl<M: Clone> Outbox<M> {
+    pub fn new(max_retries: u32, retry_backoff: SimTime) -> Self {
+        Outbox {
+            next_seq: 0,
+            max_retries,
+            retry_backoff,
+            entries: VecDeque::new(),
+            dropped: 0,
+        }
+    }
+
+    /// Buffer a message (already sent once by the caller); returns its
+    /// seq for later [`Outbox::ack`]/supersession.
+    pub fn enqueue(&mut self, msg: M, now: SimTime) -> u64 {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.entries.push_back(OutboxEntry {
+            seq,
+            msg,
+            retries: 0,
+            next_retry: now + self.retry_backoff,
+        });
+        seq
+    }
+
+    /// Entries due for a resend at `now`: each returned entry has its
+    /// retry budget decremented and its next attempt pushed out on an
+    /// exponential backoff. Entries whose budget is exhausted are
+    /// dropped (counted in `dropped`) instead of returned.
+    pub fn due(&mut self, now: SimTime) -> Vec<(u64, M)> {
+        let mut out = Vec::new();
+        let mut kept = VecDeque::with_capacity(self.entries.len());
+        while let Some(mut e) = self.entries.pop_front() {
+            if e.next_retry > now {
+                kept.push_back(e);
+                continue;
+            }
+            if e.retries >= self.max_retries {
+                self.dropped += 1;
+                continue;
+            }
+            e.retries += 1;
+            let backoff = SimTime(self.retry_backoff.0 << e.retries.min(10));
+            e.next_retry = now + backoff;
+            out.push((e.seq, e.msg.clone()));
+            kept.push_back(e);
+        }
+        self.entries = kept;
+        out
+    }
+
+    /// Confirm delivery of `seq` (peer ack, or the caller observed the
+    /// effect). Returns whether the entry was still buffered.
+    pub fn ack(&mut self, seq: u64) -> bool {
+        let before = self.entries.len();
+        self.entries.retain(|e| e.seq != seq);
+        self.entries.len() != before
+    }
+
+    /// Drop every buffered entry matching the predicate (supersession:
+    /// e.g. a fresher `ClusterReport` makes older ones meaningless).
+    pub fn retain(&mut self, keep: impl FnMut(&OutboxEntry<M>) -> bool) {
+        self.entries.retain(keep);
+    }
+
+    /// Everything still buffered, for an on-heal replay. Entries stay
+    /// buffered (the replay itself may be lost); each burns one retry.
+    pub fn replay_all(&mut self, now: SimTime) -> Vec<(u64, M)> {
+        for e in &mut self.entries {
+            e.next_retry = now; // due immediately
+        }
+        self.due(now)
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
     }
 }
 
@@ -73,9 +202,36 @@ mod tests {
         let mut l = WsLink::new(SimTime::ZERO);
         assert_eq!(l.health(SimTime::from_secs(1.0)), LinkHealth::Healthy);
         assert_eq!(l.health(SimTime::from_secs(15.0)), LinkHealth::Suspect);
-        assert_eq!(l.health(SimTime::from_secs(31.0)), LinkHealth::Dead);
+        assert_eq!(l.health(SimTime::from_secs(31.0)), LinkHealth::Partitioned);
         l.on_pong(SimTime::from_secs(31.0));
         assert_eq!(l.health(SimTime::from_secs(32.0)), LinkHealth::Healthy);
+    }
+
+    #[test]
+    fn silence_past_suspect_then_pong_recovers() {
+        let mut l = WsLink::new(SimTime::ZERO);
+        // Exactly at the suspect threshold the lease degrades…
+        assert_eq!(l.health(l.suspect_after), LinkHealth::Suspect);
+        // …one pong restores it instantly (no hysteresis on recovery:
+        // the wire demonstrably works).
+        l.on_pong(SimTime::from_secs(13.0));
+        assert_eq!(l.health(SimTime::from_secs(14.0)), LinkHealth::Healthy);
+        assert_eq!(l.pongs_received, 1);
+    }
+
+    #[test]
+    fn partitioned_edge_is_reached_through_suspect() {
+        let l = WsLink::new(SimTime::ZERO);
+        let mut edges = Vec::new();
+        let mut last = l.health(SimTime::ZERO);
+        for s in 0..40 {
+            let h = l.health(SimTime::from_secs(s as f64));
+            if h != last {
+                edges.push(h);
+                last = h;
+            }
+        }
+        assert_eq!(edges, vec![LinkHealth::Suspect, LinkHealth::Partitioned]);
     }
 
     #[test]
@@ -83,6 +239,28 @@ mod tests {
         let mut l = WsLink::new(SimTime::ZERO);
         l.on_activity(SimTime::from_secs(29.0));
         assert_eq!(l.health(SimTime::from_secs(35.0)), LinkHealth::Healthy);
+    }
+
+    /// A delta-coalesced aggregate quiet period (no `ClusterReport` for
+    /// far longer than `partitioned_after`) must never trip the lease:
+    /// liveness rides the ping/pong exchange, which keeps flowing while
+    /// reports are suppressed.
+    #[test]
+    fn coalesced_report_quiet_period_never_trips_lease() {
+        let mut l = WsLink::new(SimTime::ZERO);
+        // 120 virtual seconds of report silence, but pongs arrive on
+        // every 5s ping tick.
+        for tick in 1..=24u64 {
+            let now = SimTime::from_secs(5.0 * tick as f64);
+            l.on_ping_sent();
+            assert_eq!(
+                l.health(now),
+                LinkHealth::Healthy,
+                "lease must not degrade at t={now} on pong cadence alone"
+            );
+            l.on_pong(now);
+        }
+        assert_eq!(l.pongs_received, 24);
     }
 
     #[test]
@@ -93,5 +271,54 @@ mod tests {
         l.on_pong(SimTime::from_secs(1.0));
         assert_eq!(l.pings_sent, 2);
         assert_eq!(l.pongs_received, 1);
+    }
+
+    #[test]
+    fn outbox_retries_then_drops_after_budget() {
+        let mut ob: Outbox<&'static str> =
+            Outbox::new(2, SimTime::from_secs(1.0));
+        let seq = ob.enqueue("report", SimTime::ZERO);
+        assert_eq!(ob.len(), 1);
+        // Not due before the backoff elapses.
+        assert!(ob.due(SimTime::from_secs(0.5)).is_empty());
+        // First retry at +1s; second pushed out on doubled backoff.
+        let due = ob.due(SimTime::from_secs(1.0));
+        assert_eq!(due, vec![(seq, "report")]);
+        assert!(ob.due(SimTime::from_secs(2.0)).is_empty(), "2^1 backoff");
+        let due = ob.due(SimTime::from_secs(3.0));
+        assert_eq!(due.len(), 1);
+        // Budget (2) exhausted: the next due scan drops it.
+        assert!(ob.due(SimTime::from_secs(60.0)).is_empty());
+        assert_eq!(ob.dropped, 1);
+        assert!(ob.is_empty());
+    }
+
+    #[test]
+    fn outbox_ack_and_supersession_remove_entries() {
+        let mut ob: Outbox<u32> = Outbox::new(5, SimTime::from_secs(1.0));
+        let a = ob.enqueue(1, SimTime::ZERO);
+        let _b = ob.enqueue(2, SimTime::ZERO);
+        let c = ob.enqueue(3, SimTime::ZERO);
+        assert!(ob.ack(a));
+        assert!(!ob.ack(a), "double-ack is a no-op");
+        // Supersede everything but seq c.
+        ob.retain(|e| e.seq == c);
+        assert_eq!(ob.len(), 1);
+        let due = ob.replay_all(SimTime::from_secs(10.0));
+        assert_eq!(due, vec![(c, 3)]);
+        assert_eq!(ob.dropped, 0);
+    }
+
+    #[test]
+    fn outbox_replay_burns_retries_and_is_idempotent_on_ack() {
+        let mut ob: Outbox<&'static str> =
+            Outbox::new(1, SimTime::from_secs(1.0));
+        let seq = ob.enqueue("delegation", SimTime::ZERO);
+        // Heal replay: entry goes out once more…
+        assert_eq!(ob.replay_all(SimTime::from_secs(5.0)).len(), 1);
+        // …and the peer's ack clears it before the budget drops it.
+        assert!(ob.ack(seq));
+        assert!(ob.is_empty());
+        assert_eq!(ob.dropped, 0);
     }
 }

@@ -342,6 +342,11 @@ pub(crate) fn drain_lane(
 /// flips) into this lane. `inbox` is sorted by the origin stamp so the
 /// resulting sequence numbers — and every later tiebreak — are the same
 /// no matter which thread drained which lane.
+///
+/// Link faults don't weaken the `m.at > horizon` invariant below: a cut
+/// link either drops the message (it never reaches an inbox) or parks it
+/// with RTO backoff, and a parked delivery lands *no earlier than* the
+/// link's base delay after the send — still past the window horizon.
 pub(crate) fn merge_lane(
     lane: &mut Lane,
     mut inbox: Vec<OutMsg>,

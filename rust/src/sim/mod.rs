@@ -45,7 +45,7 @@ mod network;
 
 pub use container::ContainerRuntime;
 pub use msg::{DataMsg, KubeMsg, OakMsg, ReplacementReason, SimMsg, TimerKind};
-pub use network::{LinkProfile, Network, Transport};
+pub use network::{Delivery, FaultScope, LinkFault, LinkProfile, Network, Transport};
 
 use std::any::Any;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
@@ -183,16 +183,24 @@ impl<'a> Ctx<'a> {
             return;
         }
         self.lane.metrics.record_msg(label, bytes);
+        let now = self.now;
         match self
             .shared
             .net
-            .delivery_delay(src, dst, bytes, transport, &mut self.lane.rng)
+            .deliver(src, dst, bytes, transport, now, &mut self.lane.rng)
         {
-            Some(delay) => {
+            Delivery::Delivered { delay, retransmits } => {
+                if retransmits > 0 {
+                    self.lane.metrics.add("net.retransmit", retransmits as u64);
+                }
                 let at = self.now + delay;
                 self.push(at, to, msg);
             }
-            None => self.lane.metrics.inc("net.lost"),
+            Delivery::Lost => self.lane.metrics.inc("net.lost"),
+            Delivery::DroppedAfterRetry { retransmits } => {
+                self.lane.metrics.add("net.retransmit", retransmits as u64);
+                self.lane.metrics.inc("net.dropped_after_retry");
+            }
         }
     }
 

@@ -224,6 +224,27 @@ pub enum OakMsg {
         instance: InstanceId,
         sla: TaskSla,
     },
+
+    // -- partition recovery (anti-entropy resync) ---------------------------
+    /// Root → cluster after a lease heal: "your uplink was partitioned;
+    /// send me your authoritative census so we can reconcile." Answered
+    /// by [`OakMsg::ResyncSnapshot`].
+    ResyncRequest,
+    /// Cluster → root: the full live-instance census plus the log of
+    /// replacements minted while the uplink was down and still awaiting
+    /// an adoption verdict. The root replays the log through the
+    /// idempotent adoption machinery, fails root-side records absent
+    /// from the census, and tears down true orphans — nothing is lost or
+    /// double-applied even when the snapshot races duplicate outbox
+    /// replays.
+    ResyncSnapshot {
+        cluster: ClusterId,
+        /// Every non-terminal local record: (instance, task, state, node).
+        instances: Vec<(InstanceId, TaskId, ServiceState, NodeId)>,
+        /// Unacked minted replacements: (service, task, original,
+        /// replacement, reason).
+        replacements: Vec<(ServiceId, TaskId, InstanceId, InstanceId, ReplacementReason)>,
+    },
 }
 
 /// Flat Kubernetes-family control protocol (baselines; DESIGN.md ledger).
@@ -374,6 +395,12 @@ impl SimMsg {
                 OakMsg::ResolveIp { .. } | OakMsg::ResolveIpUp { .. } => 96,
                 OakMsg::TableUpdate { entries } => 48 + 48 * entries.len(),
                 OakMsg::EscalateReschedule { .. } => 640,
+                OakMsg::ResyncRequest => 64,
+                OakMsg::ResyncSnapshot {
+                    instances,
+                    replacements,
+                    ..
+                } => 128 + 40 * instances.len() + 48 * replacements.len(),
             },
             SimMsg::Kube(m) => match m {
                 // Kubernetes node status objects are famously fat

@@ -1,7 +1,13 @@
 //! Link model: per-pair delay/jitter/loss/bandwidth with `tc`-style
 //! impairment overlays (the paper degrades its HET testbed with `tc`,
 //! Fig. 5). Reliable transports absorb loss as retransmission delay
-//! (TCP-like RTO); unreliable transports drop.
+//! (TCP-like RTO with exponential backoff, capped — a partitioned link
+//! eventually *drops* instead of retrying forever); unreliable
+//! transports drop. Scheduled [`LinkFault`]s cut a (src,dst) pair or a
+//! whole node island's uplink over a virtual-time window, so partition
+//! storms are seeded data installed before the run — the `Network` stays
+//! immutable while events drain and thread-count determinism holds by
+//! construction.
 
 // lint: allow(hash-order, link overrides are lookup-only; never iterated)
 use std::collections::HashMap;
@@ -65,13 +71,66 @@ impl LinkProfile {
 /// Transport semantics for a message.
 #[derive(Clone, Copy, PartialEq, Eq, Debug)]
 pub enum Transport {
-    /// TCP-like: loss becomes retransmission delay, delivery guaranteed.
+    /// TCP-like: loss becomes retransmission delay, delivery guaranteed
+    /// up to the retransmit cap.
     Reliable,
     /// UDP-like: loss drops the message.
     Unreliable,
 }
 
-/// The network: default profile + per-pair overrides (symmetric).
+/// What a scheduled [`LinkFault`] severs.
+#[derive(Clone, Copy, Debug)]
+pub enum FaultScope {
+    /// One symmetric (a, b) link.
+    Pair(NodeId, NodeId),
+    /// Every link with exactly one endpoint inside the inclusive node-id
+    /// range `[lo, hi]` — an island partition: the range keeps talking to
+    /// itself, the rest of the world keeps talking to itself, and nothing
+    /// crosses the boundary. Cluster subtrees are minted with contiguous
+    /// node ids, so one island fault cuts a whole cluster's uplink.
+    Island(NodeId, NodeId),
+}
+
+/// One seeded partition window: the scoped links are down for
+/// `from <= t < until`. Installed before the run; never mutated while
+/// events drain.
+#[derive(Clone, Copy, Debug)]
+pub struct LinkFault {
+    pub scope: FaultScope,
+    pub from: SimTime,
+    pub until: SimTime,
+}
+
+impl LinkFault {
+    fn cuts(&self, a: NodeId, b: NodeId, at: SimTime) -> bool {
+        if at < self.from || at >= self.until {
+            return false;
+        }
+        match self.scope {
+            FaultScope::Pair(x, y) => Network::key(a, b) == Network::key(x, y),
+            FaultScope::Island(lo, hi) => {
+                let inside = |n: NodeId| lo <= n && n <= hi;
+                inside(a) != inside(b)
+            }
+        }
+    }
+}
+
+/// Outcome of one [`Network::deliver`] draw.
+#[derive(Clone, Copy, Debug)]
+pub enum Delivery {
+    /// The message arrives after `delay`, having burned `retransmits`
+    /// RTO-paced resends first (0 for a clean first attempt).
+    Delivered { delay: SimTime, retransmits: u32 },
+    /// Unreliable loss (or an unreliable send into a cut link).
+    Lost,
+    /// Reliable send exhausted the retransmit cap — the link stayed
+    /// lossy/cut past every backoff attempt and the sender gives up.
+    DroppedAfterRetry { retransmits: u32 },
+}
+
+/// The network: default profile + per-pair overrides (symmetric) + a
+/// schedule of partition faults.
 #[derive(Clone, Debug)]
 pub struct Network {
     default: LinkProfile,
@@ -80,6 +139,13 @@ pub struct Network {
     /// Global impairment applied to every link (tc on the shared segment).
     impair_delay_ms: f64,
     impair_loss: f64,
+    /// Seeded partition schedule. Order-independent (membership test
+    /// only); cuts only ever *add* delay or drop messages, so the
+    /// [`Self::min_remote_delay_us`] lane-lookahead bound stays valid
+    /// under any fault schedule.
+    faults: Vec<LinkFault>,
+    /// Max RTO-paced resends a reliable send burns before giving up.
+    retransmit_cap: u32,
 }
 
 impl Default for Network {
@@ -90,6 +156,8 @@ impl Default for Network {
             overrides: HashMap::new(),
             impair_delay_ms: 0.0,
             impair_loss: 0.0,
+            faults: Vec::new(),
+            retransmit_cap: 16,
         }
     }
 }
@@ -117,6 +185,35 @@ impl Network {
         self.impair_loss = add_loss;
     }
 
+    /// Schedule a cut of the symmetric (a, b) link for `from <= t < until`.
+    pub fn cut_link(&mut self, a: NodeId, b: NodeId, from: SimTime, until: SimTime) {
+        self.faults.push(LinkFault {
+            scope: FaultScope::Pair(a, b),
+            from,
+            until,
+        });
+    }
+
+    /// Schedule an island partition: every link with exactly one endpoint
+    /// in `[lo, hi]` is down for `from <= t < until`.
+    pub fn cut_island(&mut self, lo: NodeId, hi: NodeId, from: SimTime, until: SimTime) {
+        self.faults.push(LinkFault {
+            scope: FaultScope::Island(lo, hi),
+            from,
+            until,
+        });
+    }
+
+    /// Cap on RTO-paced reliable resends (default 16).
+    pub fn set_retransmit_cap(&mut self, cap: u32) {
+        self.retransmit_cap = cap;
+    }
+
+    /// Is the (a, b) link severed by any scheduled fault at `at`?
+    pub fn is_cut(&self, a: NodeId, b: NodeId, at: SimTime) -> bool {
+        self.faults.iter().any(|f| f.cuts(a, b, at))
+    }
+
     pub fn profile(&self, a: NodeId, b: NodeId) -> LinkProfile {
         let base = self
             .overrides
@@ -135,41 +232,68 @@ impl Network {
         2.0 * (p.delay_ms + rng.range(0.0, p.jitter_ms.max(1e-9)))
     }
 
-    /// Delivery delay for one message, or `None` if dropped (unreliable
-    /// only). Reliable loss turns into RTO-backoff retransmissions.
-    pub fn delivery_delay(
+    /// Resolve one message send issued at `now`. Unreliable sends into a
+    /// cut link (or a lossy draw) are [`Delivery::Lost`]. Reliable sends
+    /// park and retry on an exponential RTO backoff — an attempt that
+    /// lands inside a cut window fails without consuming an rng draw (the
+    /// wire is down; there is nothing probabilistic about it) — until
+    /// either an attempt lands on a healed, non-lossy draw (delivered
+    /// with the accumulated backoff as extra delay) or the retransmit cap
+    /// is exhausted ([`Delivery::DroppedAfterRetry`]). With no faults
+    /// scheduled the rng draw order is identical to the classic model:
+    /// one jitter draw, then one loss draw per attempt.
+    pub fn deliver(
         &self,
         src: NodeId,
         dst: NodeId,
         bytes: usize,
         transport: Transport,
+        now: SimTime,
         rng: &mut Rng,
-    ) -> Option<SimTime> {
+    ) -> Delivery {
         if src == dst {
-            return Some(SimTime::from_micros(50)); // local socket
+            return Delivery::Delivered {
+                delay: SimTime::from_micros(50), // local socket
+                retransmits: 0,
+            };
         }
         let p = self.profile(src, dst);
         let serialize_ms = (bytes as f64 * 8.0) / (p.bandwidth_mbps * 1000.0);
         let base_ms = p.delay_ms + rng.range(0.0, p.jitter_ms.max(1e-9)) + serialize_ms;
         match transport {
             Transport::Unreliable => {
-                if rng.chance(p.loss) {
-                    None
+                if self.is_cut(src, dst, now) || rng.chance(p.loss) {
+                    Delivery::Lost
                 } else {
-                    Some(SimTime::from_millis(base_ms))
+                    Delivery::Delivered {
+                        delay: SimTime::from_millis(base_ms),
+                        retransmits: 0,
+                    }
                 }
             }
             Transport::Reliable => {
-                // Geometric retransmission count; each retry waits an RTO
-                // of max(200ms, 2*RTT) — the classic TCP floor.
-                let mut total = base_ms;
-                let rto_ms = (2.0 * 2.0 * p.delay_ms).max(200.0);
-                let mut tries = 0;
-                while rng.chance(p.loss) && tries < 16 {
-                    total += rto_ms;
-                    tries += 1;
+                // RTO floor: max(200ms, 2*RTT) — the classic TCP floor —
+                // doubling per retry, capped per-interval at 15s.
+                let mut rto_ms = (2.0 * 2.0 * p.delay_ms).max(200.0);
+                let mut offset_ms = 0.0;
+                let mut retransmits = 0u32;
+                loop {
+                    let at = now + SimTime::from_millis(offset_ms);
+                    let attempt_lost =
+                        self.is_cut(src, dst, at) || rng.chance(p.loss);
+                    if !attempt_lost {
+                        return Delivery::Delivered {
+                            delay: SimTime::from_millis(offset_ms + base_ms),
+                            retransmits,
+                        };
+                    }
+                    if retransmits >= self.retransmit_cap {
+                        return Delivery::DroppedAfterRetry { retransmits };
+                    }
+                    retransmits += 1;
+                    offset_ms += rto_ms;
+                    rto_ms = (rto_ms * 2.0).min(15_000.0);
                 }
-                Some(SimTime::from_millis(total))
             }
         }
     }
@@ -180,6 +304,9 @@ impl Network {
     /// serialization and retransmissions only ever add delay, and the
     /// floor is monotone, so `floor(min(delay_ms) + impair) * 1000` is a
     /// safe bound; clamped to ≥ 1 µs so windows always make progress.
+    /// Scheduled link faults never lower it either: a cut attempt adds
+    /// RTO backoff or drops the message entirely, so every delivery that
+    /// *does* happen is still at least one base propagation delay out.
     /// Same-node delivery (a fixed 50 µs socket hop) never crosses a
     /// lane: nodes are homed whole onto lanes.
     pub(crate) fn min_remote_delay_us(&self) -> u64 {
@@ -213,13 +340,38 @@ impl Network {
 mod tests {
     use super::*;
 
+    fn deliver_at(
+        net: &Network,
+        src: NodeId,
+        dst: NodeId,
+        bytes: usize,
+        transport: Transport,
+        now: SimTime,
+        rng: &mut Rng,
+    ) -> Delivery {
+        net.deliver(src, dst, bytes, transport, now, rng)
+    }
+
+    fn delivered(d: Delivery) -> SimTime {
+        match d {
+            Delivery::Delivered { delay, .. } => delay,
+            other => panic!("expected delivery, got {other:?}"),
+        }
+    }
+
     #[test]
     fn lan_delivery_fast_and_lossless() {
         let net = Network::default();
         let mut rng = Rng::seeded(1);
-        let d = net
-            .delivery_delay(NodeId(0), NodeId(1), 256, Transport::Unreliable, &mut rng)
-            .unwrap();
+        let d = delivered(deliver_at(
+            &net,
+            NodeId(0),
+            NodeId(1),
+            256,
+            Transport::Unreliable,
+            SimTime::ZERO,
+            &mut rng,
+        ));
         assert!(d.as_millis() < 1.0, "{d}");
     }
 
@@ -227,9 +379,15 @@ mod tests {
     fn local_delivery_is_socket_cost() {
         let net = Network::default();
         let mut rng = Rng::seeded(1);
-        let d = net
-            .delivery_delay(NodeId(3), NodeId(3), 1 << 20, Transport::Reliable, &mut rng)
-            .unwrap();
+        let d = delivered(deliver_at(
+            &net,
+            NodeId(3),
+            NodeId(3),
+            1 << 20,
+            Transport::Reliable,
+            SimTime::ZERO,
+            &mut rng,
+        ));
         assert_eq!(d.as_micros(), 50);
     }
 
@@ -240,10 +398,18 @@ mod tests {
         let mut rng = Rng::seeded(2);
         let mut drops = 0;
         for _ in 0..1000 {
-            if net
-                .delivery_delay(NodeId(0), NodeId(1), 64, Transport::Unreliable, &mut rng)
-                .is_none()
-            {
+            if matches!(
+                deliver_at(
+                    &net,
+                    NodeId(0),
+                    NodeId(1),
+                    64,
+                    Transport::Unreliable,
+                    SimTime::ZERO,
+                    &mut rng
+                ),
+                Delivery::Lost
+            ) {
                 drops += 1;
             }
         }
@@ -256,15 +422,131 @@ mod tests {
         net.set_default(LinkProfile::wan(10.0, 0.0, 0.3));
         let mut rng = Rng::seeded(3);
         let mut total = 0.0;
+        let mut retransmits = 0u32;
         for _ in 0..1000 {
-            total += net
-                .delivery_delay(NodeId(0), NodeId(1), 64, Transport::Reliable, &mut rng)
-                .unwrap()
-                .as_millis();
+            match deliver_at(
+                &net,
+                NodeId(0),
+                NodeId(1),
+                64,
+                Transport::Reliable,
+                SimTime::ZERO,
+                &mut rng,
+            ) {
+                Delivery::Delivered { delay, retransmits: r } => {
+                    total += delay.as_millis();
+                    retransmits += r;
+                }
+                other => panic!("loss=0.3 never exhausts a 16-retry cap: {other:?}"),
+            }
         }
         let mean = total / 1000.0;
-        // ~0.3/(1-0.3) expected retransmissions * 200ms RTO + 10ms base.
-        assert!(mean > 60.0 && mean < 130.0, "mean={mean}");
+        // E[extra] = Σ 0.3^k · 200·2^(k-1) ≈ 150ms of backoff + 10ms base.
+        assert!(mean > 80.0 && mean < 260.0, "mean={mean}");
+        // ~0.3/(1-0.3) ≈ 0.43 expected retransmissions per send.
+        assert!((300..600).contains(&retransmits), "retransmits={retransmits}");
+    }
+
+    #[test]
+    fn cut_link_drops_unreliable_and_parks_reliable() {
+        let mut net = Network::default();
+        net.set_default(LinkProfile::wan(10.0, 0.0, 0.0));
+        let cut_from = SimTime::from_secs(10.0);
+        let cut_until = SimTime::from_secs(11.0);
+        net.cut_link(NodeId(0), NodeId(1), cut_from, cut_until);
+        let mut rng = Rng::seeded(4);
+
+        // Before the window: clean first-attempt delivery.
+        let d = deliver_at(
+            &net,
+            NodeId(0),
+            NodeId(1),
+            64,
+            Transport::Reliable,
+            SimTime::ZERO,
+            &mut rng,
+        );
+        match d {
+            Delivery::Delivered { retransmits, .. } => assert_eq!(retransmits, 0),
+            other => panic!("{other:?}"),
+        }
+
+        // Inside the window: unreliable drops, symmetric in direction.
+        for (a, b) in [(NodeId(0), NodeId(1)), (NodeId(1), NodeId(0))] {
+            assert!(matches!(
+                deliver_at(&net, a, b, 64, Transport::Unreliable, cut_from, &mut rng),
+                Delivery::Lost
+            ));
+        }
+
+        // Inside the window: reliable parks on RTO backoff and arrives
+        // only after the heal (cut attempts consume no rng draw, so this
+        // is exact: 1s cut, 200ms RTO → 5 burned attempts, 200+400ms of
+        // backoff already exceed the window).
+        let sent = SimTime::from_secs(10.5);
+        match deliver_at(&net, NodeId(0), NodeId(1), 64, Transport::Reliable, sent, &mut rng)
+        {
+            Delivery::Delivered { delay, retransmits } => {
+                assert!(retransmits > 0, "must have parked");
+                assert!(
+                    sent + delay >= cut_until,
+                    "arrived at {} before heal {}",
+                    sent + delay,
+                    cut_until
+                );
+            }
+            other => panic!("{other:?}"),
+        }
+
+        // Unaffected pair keeps flowing during the window.
+        assert!(matches!(
+            deliver_at(&net, NodeId(2), NodeId(3), 64, Transport::Unreliable, sent, &mut rng),
+            Delivery::Delivered { .. }
+        ));
+    }
+
+    #[test]
+    fn long_cut_exhausts_retransmit_cap() {
+        let mut net = Network::default();
+        net.set_default(LinkProfile::wan(10.0, 0.0, 0.0));
+        net.set_retransmit_cap(4);
+        // A cut far longer than 4 backoff attempts can outwait.
+        net.cut_link(NodeId(0), NodeId(1), SimTime::ZERO, SimTime::from_secs(3600.0));
+        let mut rng = Rng::seeded(5);
+        match deliver_at(
+            &net,
+            NodeId(0),
+            NodeId(1),
+            64,
+            Transport::Reliable,
+            SimTime::from_secs(1.0),
+            &mut rng,
+        ) {
+            Delivery::DroppedAfterRetry { retransmits } => assert_eq!(retransmits, 4),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn island_cut_severs_only_boundary_links() {
+        let mut net = Network::default();
+        net.set_default(LinkProfile::wan(5.0, 0.0, 0.0));
+        // Island [10, 19] partitioned for the whole test window.
+        net.cut_island(
+            NodeId(10),
+            NodeId(19),
+            SimTime::ZERO,
+            SimTime::from_secs(100.0),
+        );
+        let at = SimTime::from_secs(1.0);
+        // Boundary-crossing links are down, both directions.
+        assert!(net.is_cut(NodeId(0), NodeId(10), at));
+        assert!(net.is_cut(NodeId(19), NodeId(20), at));
+        // Intra-island and outside-world links keep working.
+        assert!(!net.is_cut(NodeId(10), NodeId(19), at));
+        assert!(!net.is_cut(NodeId(0), NodeId(20), at));
+        // And the window actually ends.
+        assert!(!net.is_cut(NodeId(0), NodeId(10), SimTime::from_secs(100.0)));
     }
 
     #[test]
@@ -296,6 +578,11 @@ mod tests {
         let mut z = Network::default();
         z.set_default(LinkProfile::wan(0.0, 0.0, 0.0));
         assert_eq!(z.min_remote_delay_us(), 1);
+        // Fault schedules never lower the lookahead bound: cuts only add
+        // backoff delay or drop outright.
+        let mut c = Network::default();
+        c.cut_island(NodeId(0), NodeId(9), SimTime::ZERO, SimTime::from_secs(60.0));
+        assert_eq!(c.min_remote_delay_us(), 250);
     }
 
     #[test]
