@@ -177,10 +177,12 @@ pub struct ServiceStatusInfo {
     /// (delta-coalesced) aggregate reports — real QoS telemetry an
     /// autoscaler can key off, not the reservation.
     pub observed_cpu_mc: u64,
-    /// Clusters holding placements of this service whose federation
-    /// lease is currently partitioned: rows for instances placed there
-    /// are a last-known-good view, not live truth (degraded-mode
-    /// staleness; cleared by the post-heal anti-entropy resync).
+    /// Clusters holding placements of this service whose rows are a
+    /// last-known-good view, not live truth: the cluster's federation
+    /// lease is currently partitioned, or its orchestrator
+    /// crash-restarted and is still rebuilding its census (degraded-mode
+    /// staleness; cleared by the anti-entropy resync once the census
+    /// converges).
     pub stale_clusters: Vec<ClusterId>,
     pub instances: Vec<InstanceStatusInfo>,
 }
@@ -309,7 +311,7 @@ pub fn format_status(s: &ServiceStatusInfo) -> String {
     if !s.stale_clusters.is_empty() {
         let list: Vec<String> = s.stale_clusters.iter().map(|c| c.to_string()).collect();
         out.push_str(&format!(
-            "  ! DEGRADED: cluster(s) {} partitioned — their rows are last-known-good\n",
+            "  ! DEGRADED: cluster(s) {} partitioned/recovering — their rows are last-known-good\n",
             list.join(", ")
         ));
     }

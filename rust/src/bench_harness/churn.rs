@@ -58,6 +58,17 @@ pub enum ChurnScenario {
     /// `partition_cycles` > 0 (the [`ChurnConfig::partition_storm`]
     /// preset) or no link ever actually drops.
     Partition,
+    /// Arrival churn + migration drills under a seeded schedule of
+    /// cluster-orchestrator *crash-stops* (the crash-recovery bench):
+    /// the orchestrator actor is killed outright — state discarded,
+    /// in-flight messages dropped — and later restarted cold under a
+    /// higher incarnation epoch. The restarted cluster rebuilds its
+    /// tables bottom-up from worker re-register censuses, re-attaches
+    /// to the root, and the report gates the crash-to-converged
+    /// latency and lost-replica count. Pair with `crash_clusters`/
+    /// `crash_cycles` > 0 (the [`ChurnConfig::crash_storm`] preset)
+    /// or no orchestrator ever actually dies.
+    Crash,
     /// Submit + autoscale + failover composed.
     All,
 }
@@ -70,6 +81,7 @@ impl ChurnScenario {
             "failover" | "migrate" => ChurnScenario::Failover,
             "spill" => ChurnScenario::Spill,
             "partition" => ChurnScenario::Partition,
+            "crash" => ChurnScenario::Crash,
             "all" => ChurnScenario::All,
             _ => return None,
         })
@@ -80,6 +92,7 @@ impl ChurnScenario {
             ChurnScenario::Submit
                 | ChurnScenario::Spill
                 | ChurnScenario::Partition
+                | ChurnScenario::Crash
                 | ChurnScenario::All
         )
     }
@@ -89,15 +102,24 @@ impl ChurnScenario {
     fn drills(self) -> bool {
         // Partition keeps the migration drills: a cut racing an
         // in-flight cutover is exactly the reconciliation case the
-        // heal-time resync must settle.
+        // heal-time resync must settle. Crash keeps them for the same
+        // reason — a migration mid-cutover when the orchestrator dies
+        // is exactly what the census-seeded recovery must finish.
         matches!(
             self,
-            ChurnScenario::Failover | ChurnScenario::Partition | ChurnScenario::All
+            ChurnScenario::Failover
+                | ChurnScenario::Partition
+                | ChurnScenario::Crash
+                | ChurnScenario::All
         )
     }
     /// Does this scenario install the seeded uplink-cut schedule?
     fn partitions(self) -> bool {
         matches!(self, ChurnScenario::Partition)
+    }
+    /// Does this scenario install the seeded orchestrator-crash schedule?
+    fn crashes(self) -> bool {
+        matches!(self, ChurnScenario::Crash)
     }
     /// Spill storms draw from the deliberately heavy SLA catalog.
     fn heavy_catalog(self) -> bool {
@@ -193,6 +215,28 @@ pub struct ChurnConfig {
     pub partition_gap_s: f64,
     /// Quiet lead-in before the first cut, seconds after storm start.
     pub partition_lead_s: f64,
+    /// Crash scenario: how many cluster orchestrators (a prefix of the
+    /// cluster list) the seeded crash schedule kills. 0 = no crashes.
+    pub crash_clusters: usize,
+    /// Kill/restart cycles per affected cluster. Odd-numbered cycles
+    /// (the second, fourth, …) are *long* outages
+    /// ([`Self::crash_down_long_s`]); the rest are short.
+    pub crash_cycles: usize,
+    /// Orchestrator downtime of a short outage, seconds. Sized inside
+    /// the root's Suspect window (> 12 s lease silence, < 30 s
+    /// Partitioned escalation): the higher-epoch re-register must
+    /// cancel the escalation, not double-count a detection.
+    pub crash_down_s: f64,
+    /// Downtime of a long outage, seconds. Must exceed the WsLink
+    /// `partitioned_after` lease (30 s) so the root escalates to
+    /// Partitioned *before* the restart re-registers — the crash is
+    /// then absorbed through the same Degraded-overlay path as a
+    /// healed partition.
+    pub crash_down_long_s: f64,
+    /// Gap between one cluster's restart and its next kill, seconds.
+    pub crash_gap_s: f64,
+    /// Quiet lead-in before the first kill, seconds after storm start.
+    pub crash_lead_s: f64,
     /// Lane-sharded sim: `0` = classic single-lane sequential loop,
     /// `N >= 1` = one event lane per cluster (plus the root lane)
     /// drained by up to `N` threads. Any `N >= 1` yields the identical
@@ -237,6 +281,12 @@ impl Default for ChurnConfig {
             partition_flap_s: 15.0,
             partition_gap_s: 18.0,
             partition_lead_s: 15.0,
+            crash_clusters: 0,
+            crash_cycles: 0,
+            crash_down_s: 15.0,
+            crash_down_long_s: 35.0,
+            crash_gap_s: 25.0,
+            crash_lead_s: 12.0,
             threads: 0,
         }
     }
@@ -305,6 +355,35 @@ impl ChurnConfig {
             fail_worker_chance: 0.25,
             partition_clusters: 4,
             partition_cycles: 3,
+            ..ChurnConfig::default()
+        }
+    }
+
+    /// The coordinator crash-recovery storm: 16 clusters × 12 workers on
+    /// the lane engine, arrival churn + migration drills while a seeded
+    /// schedule crash-stops and cold-restarts 4 of the 16 cluster
+    /// orchestrators (one short Suspect-window outage and one long
+    /// escalated outage each). The storm window is sized so the last
+    /// restart lands ≥ 20 s before the storm ends — crash-to-converged
+    /// latency is measured against live churn, not the final drain.
+    pub fn crash_storm(seed: u64) -> Self {
+        ChurnConfig {
+            seed,
+            scenario: ChurnScenario::Crash,
+            clusters: 16,
+            workers_per_cluster: 12,
+            threads: 4,
+            duration_s: 130.0,
+            settle_s: 45.0,
+            arrival_period_s: 1.0,
+            mean_lifetime_s: 40.0,
+            max_live: 96,
+            catalog: 8,
+            drills: 12,
+            drill_every: 8,
+            fail_worker_chance: 0.25,
+            crash_clusters: 4,
+            crash_cycles: 2,
             ..ChurnConfig::default()
         }
     }
@@ -499,6 +578,20 @@ impl ChurnDriver {
     pub fn note_rejoined(&mut self, at: SimTime, old: NodeId, fresh: NodeId) {
         self.rejoins += 1;
         self.log(at, format!("worker-rejoined {old} as {fresh}"));
+    }
+
+    /// Record a scheduled orchestrator crash-stop the testbed applied
+    /// (`dropped` = in-flight messages that died with the actor).
+    pub fn note_cluster_crashed(&mut self, at: SimTime, cluster: usize, dropped: usize) {
+        self.log(
+            at,
+            format!("cluster-crashed idx={cluster} inflight_dropped={dropped}"),
+        );
+    }
+
+    /// Record a cold restart under a fresh incarnation epoch.
+    pub fn note_cluster_restarted(&mut self, at: SimTime, cluster: usize, epoch: u64) {
+        self.log(at, format!("cluster-restarted idx={cluster} epoch={epoch}"));
     }
 
     fn log(&mut self, now: SimTime, line: String) {
@@ -1123,6 +1216,65 @@ pub struct PartitionStats {
     pub net_lost: u64,
 }
 
+/// Crash-recovery accounting of one churn run: the seeded orchestrator
+/// kill/restart schedule, the epoch-fenced re-registration traffic it
+/// produced, and how fast each cold restart rebuilt a census the root
+/// agrees with. Present only when the scenario installed crashes.
+#[derive(Clone, Debug, Default)]
+pub struct CrashStats {
+    /// Scheduled orchestrator crash-stops applied / cold restarts.
+    pub kills: u64,
+    pub restarts: u64,
+    /// Short (Suspect-window) vs long (escalated past the 30 s lease)
+    /// outages in the schedule.
+    pub short_outages: u64,
+    pub long_outages: u64,
+    /// In-flight messages dropped on the floor by the kills.
+    pub inflight_dropped: u64,
+    /// Outages the root escalated to Partitioned before the restart
+    /// re-registered (`root.partition_detected` — long outages only;
+    /// a short outage's higher-epoch re-register inside the Suspect
+    /// window must cancel the escalation, never double-count it).
+    pub escalated: u64,
+    /// Higher-epoch re-registrations accepted (`root.cluster_restarted`)
+    /// and stale-epoch registrations fenced (`root.register_stale_epoch`).
+    pub restart_registers: u64,
+    pub stale_registers: u64,
+    /// Worker-side recovery traffic: solicited re-register handshakes
+    /// and messages fenced for carrying a dead incarnation's epoch.
+    pub worker_reregistered: u64,
+    pub epoch_fenced: u64,
+    /// Bottom-up state rebuild: census rows seeded from re-register
+    /// handshakes, recoveries declared complete, census-seeded
+    /// migration replacements cut over, resyncs deferred until
+    /// Recovering ended, and delegations refused while recovering.
+    pub census_seeded: u64,
+    pub recovery_completed: u64,
+    pub recovery_cutover: u64,
+    pub resync_deferred: u64,
+    pub delegations_refused: u64,
+    /// Root-side reconciliation through the crash-resync: standard
+    /// anti-entropy outcomes plus delegations that died with the
+    /// crashed outbox and were re-driven (`root.resync_redelegated`).
+    pub resync_adopted: u64,
+    pub resync_duplicates: u64,
+    pub resync_conflicts: u64,
+    pub resync_orphans: u64,
+    pub resync_lost: u64,
+    pub resync_settled: u64,
+    pub redelegated: u64,
+    /// Kill→(root census == cluster census) latency per outage,
+    /// measured by the harness polling [`census_diff`] at slice
+    /// boundaries after each restart.
+    pub crash_to_converged: OpStats,
+    /// Restarts whose census never drained before the run ended (gate: 0).
+    pub unconverged_crashes: usize,
+    /// `root-only` rows of the quiet-hold census snapshot: replicas the
+    /// root still believes in that no cluster hosts — capacity lost to
+    /// the crashes (gate: 0).
+    pub lost_replicas: usize,
+}
+
 /// Everything `oakestra churn` emits: latency + cost under churn, the
 /// deterministic op log and the final placement census (the determinism
 /// and leak assertions of the integration suite run on these).
@@ -1227,6 +1379,9 @@ pub struct ChurnReport {
     /// Partition-tolerance accounting; `None` unless the scenario
     /// installed uplink cuts.
     pub partition: Option<PartitionStats>,
+    /// Crash-recovery accounting; `None` unless the scenario installed
+    /// orchestrator crashes.
+    pub crash: Option<CrashStats>,
     pub op_log: Vec<String>,
     pub census: Vec<String>,
 }
@@ -1252,10 +1407,12 @@ pub fn census_diff(tb: &OakTestbed) -> Vec<String> {
     }
     let mut cluster_live: BTreeSet<InstanceId> = BTreeSet::new();
     for (_, orch) in &tb.clusters {
-        let c = tb
-            .sim
-            .actor_as::<ClusterOrchestrator>(*orch)
-            .expect("cluster actor");
+        // A crash-stopped orchestrator has no state at all: every
+        // instance the root still tracks there shows up `root-only`
+        // until the restarted incarnation's census rebuild converges.
+        let Some(c) = tb.sim.actor_as::<ClusterOrchestrator>(*orch) else {
+            continue;
+        };
         for (iid, _, _, _) in c.live_instances() {
             cluster_live.insert(iid);
         }
@@ -1438,6 +1595,60 @@ pub fn run_churn(cfg: &ChurnConfig) -> ChurnReport {
         .collect();
     pending_heals.sort();
     let mut heal_convergence = Histogram::default();
+
+    // Seeded orchestrator-crash schedule: a prefix of the clusters gets
+    // kill/restart cycles with per-cluster jitter. Like the partition
+    // schedule it is fixed up-front — part of the run's seed-determined
+    // identity — but unlike uplink cuts the kills cannot be installed
+    // into the network: crash/restart mutate the actor table, which only
+    // the testbed (not an in-sim actor) may touch, so the events are
+    // applied at slice boundaries below. Windows: (cluster index, kill
+    // at, restart at, is_long).
+    let mut crash_windows: Vec<(usize, SimTime, SimTime, bool)> = Vec::new();
+    if cfg.scenario.crashes() && cfg.crash_clusters > 0 && cfg.crash_cycles > 0 {
+        let mut crng = Rng::seeded(cfg.seed ^ 0xC4A5_4ED0_0B5E_55ED);
+        for ci in 0..cfg.crash_clusters.min(cfg.clusters) {
+            let mut at = start
+                + SimTime::from_secs(cfg.crash_lead_s)
+                + SimTime::from_millis(crng.below(4_000) as f64);
+            for cycle in 0..cfg.crash_cycles {
+                // Every second cycle is a long outage: downtime past the
+                // 30 s Partitioned lease, so the root escalates and the
+                // restart is absorbed like a healed partition. The rest
+                // are short: the restart re-registers inside the Suspect
+                // window and must *cancel* the escalation.
+                let long = cycle % 2 == 1;
+                let down = if long {
+                    cfg.crash_down_long_s
+                } else {
+                    cfg.crash_down_s
+                };
+                let back = at + SimTime::from_secs(down);
+                crash_windows.push((ci, at, back, long));
+                at = back
+                    + SimTime::from_secs(cfg.crash_gap_s)
+                    + SimTime::from_millis(crng.below(3_000) as f64);
+            }
+        }
+    }
+    // The schedule flattened to (time, cluster, is_restart) events in
+    // application order, and the per-outage convergence watch list
+    // (kill at, restart at) ordered by restart time.
+    let mut crash_events: Vec<(SimTime, usize, bool)> = crash_windows
+        .iter()
+        .flat_map(|&(ci, at, back, _)| [(at, ci, false), (back, ci, true)])
+        .collect();
+    crash_events.sort();
+    let mut pending_crashes: Vec<(SimTime, SimTime)> = crash_windows
+        .iter()
+        .map(|&(_, at, back, _)| (at, back))
+        .collect();
+    pending_crashes.sort_by_key(|&(_, back)| back);
+    let mut crash_convergence = Histogram::default();
+    let mut crash_kills = 0u64;
+    let mut crash_restarts = 0u64;
+    let mut crash_inflight_dropped = 0u64;
+
     let horizon = start
         + SimTime::from_secs(
             cfg.duration_s + cfg.pre_drain_hold_s + cfg.settle_s + 5.0,
@@ -1458,6 +1669,30 @@ pub fn run_churn(cfg: &ChurnConfig) -> ChurnReport {
     while next < horizon {
         next = std::cmp::min(next + slice, horizon);
         tb.sim.run_until(next);
+        // Apply due orchestrator kills/restarts. Slice boundaries are
+        // fixed virtual times, so the quantized apply instants — and
+        // everything downstream of them — are seed-deterministic and
+        // identical for every `--threads` count.
+        while let Some(&(at, ci, is_restart)) = crash_events.first() {
+            if at > next {
+                break;
+            }
+            crash_events.remove(0);
+            if is_restart {
+                let epoch = tb.restart_cluster(ci);
+                crash_restarts += 1;
+                if let Some(d) = tb.sim.actor_as_mut::<ChurnDriver>(driver_id) {
+                    d.note_cluster_restarted(next, ci, epoch);
+                }
+            } else {
+                let dropped = tb.crash_cluster(ci);
+                crash_kills += 1;
+                crash_inflight_dropped += dropped as u64;
+                if let Some(d) = tb.sim.actor_as_mut::<ChurnDriver>(driver_id) {
+                    d.note_cluster_crashed(next, ci, dropped);
+                }
+            }
+        }
         let due = tb
             .sim
             .actor_as_mut::<ChurnDriver>(driver_id)
@@ -1487,6 +1722,18 @@ pub fn run_churn(cfg: &ChurnConfig) -> ChurnReport {
             }
             heal_convergence.record(next.saturating_sub(healed_at).as_millis());
             pending_heals.remove(0);
+        }
+        // Crash-to-converged: once a restart has elapsed, the rebuilt
+        // census must re-agree with the root. The first slice boundary
+        // where the diff is empty closes every elapsed outage, measured
+        // from the *kill* — downtime plus the whole recover/resync tail
+        // is the latency a crashed coordinator actually costs.
+        while let Some(&(killed_at, back_at)) = pending_crashes.first() {
+            if back_at > next || !census_diff(&tb).is_empty() {
+                break;
+            }
+            crash_convergence.record(next.saturating_sub(killed_at).as_millis());
+            pending_crashes.remove(0);
         }
     }
     let (census_checked_at, census_gap) =
@@ -1554,10 +1801,23 @@ pub fn run_churn(cfg: &ChurnConfig) -> ChurnReport {
     let (leaked_instances, leaked_capacity_mc) = count_leaks(&tb, &d.failed_workers);
 
     // Watch-abandonment audit: an expired watch is excused only when its
-    // service had an instance in a cluster whose uplink was cut at some
-    // point during the watch window (a partitioned cluster legitimately
-    // stalls convergence past any timeout). Everything else is a real
-    // convergence failure `--strict` must surface.
+    // service had an instance in a cluster whose uplink was cut — or
+    // whose orchestrator was crashed/recovering — at some point during
+    // the watch window (both legitimately stall convergence past any
+    // timeout). Everything else is a real convergence failure `--strict`
+    // must surface. Crash windows are padded past the restart instant:
+    // a restarted orchestrator is still census-rebuilding and resyncing
+    // for a few seconds after it comes back.
+    let crash_excuse_pad = SimTime::from_secs(10.0);
+    let excuse_windows: Vec<(usize, SimTime, SimTime)> = partition_windows
+        .iter()
+        .map(|&(ci, from, until, _)| (ci, from, until))
+        .chain(
+            crash_windows
+                .iter()
+                .map(|&(ci, from, until, _)| (ci, from, until + crash_excuse_pad)),
+        )
+        .collect();
     let watch_cutoff = SimTime::from_secs(cfg.watch_timeout_s);
     let watch_expired = d.expired_watches.len() as u64;
     let watch_expired_unexcused = d
@@ -1565,10 +1825,10 @@ pub fn run_churn(cfg: &ChurnConfig) -> ChurnReport {
         .iter()
         .filter(|(at, _, nodes)| {
             let w0 = at.saturating_sub(watch_cutoff);
-            let overlapping: Vec<usize> = partition_windows
+            let overlapping: Vec<usize> = excuse_windows
                 .iter()
-                .filter(|(_, from, until, _)| *from < *at && *until > w0)
-                .map(|(ci, _, _, _)| *ci)
+                .filter(|(_, from, until)| *from < *at && *until > w0)
+                .map(|(ci, _, _)| *ci)
                 .collect();
             let excused = !overlapping.is_empty()
                 && (nodes.is_empty()
@@ -1612,6 +1872,41 @@ pub fn run_churn(cfg: &ChurnConfig) -> ChurnReport {
             retransmits: m.counter("net.retransmit"),
             dropped_after_retry: m.counter("net.dropped_after_retry"),
             net_lost: m.counter("net.lost"),
+        })
+    };
+
+    let crash = if crash_windows.is_empty() {
+        None
+    } else {
+        Some(CrashStats {
+            kills: crash_kills,
+            restarts: crash_restarts,
+            short_outages: crash_windows.iter().filter(|w| !w.3).count() as u64,
+            long_outages: crash_windows.iter().filter(|w| w.3).count() as u64,
+            inflight_dropped: crash_inflight_dropped,
+            escalated: m.counter("root.partition_detected"),
+            restart_registers: m.counter("root.cluster_restarted"),
+            stale_registers: m.counter("root.register_stale_epoch"),
+            worker_reregistered: m.counter("worker.reregistered"),
+            epoch_fenced: m.counter("worker.epoch_fenced"),
+            census_seeded: m.counter("cluster.census_seeded"),
+            recovery_completed: m.counter("cluster.recovery_completed"),
+            recovery_cutover: m.counter("cluster.recovery_cutover"),
+            resync_deferred: m.counter("cluster.resync_deferred"),
+            delegations_refused: m.counter("cluster.delegation_while_recovering"),
+            resync_adopted: m.counter("root.resync_adopted"),
+            resync_duplicates: m.counter("root.resync_adopt_duplicate"),
+            resync_conflicts: m.counter("root.resync_adopt_conflict"),
+            resync_orphans: m.counter("root.resync_orphans"),
+            resync_lost: m.counter("root.resync_lost"),
+            resync_settled: m.counter("root.resync_settled_delegations"),
+            redelegated: m.counter("root.resync_redelegated"),
+            crash_to_converged: OpStats::from(Some(&crash_convergence)),
+            unconverged_crashes: pending_crashes.len(),
+            lost_replicas: census_gap
+                .iter()
+                .filter(|r| r.starts_with("root-only"))
+                .count(),
         })
     };
 
@@ -1672,6 +1967,7 @@ pub fn run_churn(cfg: &ChurnConfig) -> ChurnReport {
         watch_expired,
         watch_expired_unexcused,
         partition,
+        crash,
         op_log: d.ops.clone(),
         census: placement_census(&tb),
     }
@@ -1758,6 +2054,51 @@ impl ChurnReport {
                 p.net_lost,
             ),
         };
+        // Crash runs carry an extra "crash" object; every other scenario
+        // omits it entirely (same pattern as "partition" above).
+        let crash_json = match &self.crash {
+            None => String::new(),
+            Some(c) => format!(
+                "\"crash\": {{\"kills\": {}, \"restarts\": {}, \
+                 \"short_outages\": {}, \"long_outages\": {}, \
+                 \"inflight_dropped\": {}, \"escalated\": {},\n    \
+                 \"registers\": {{\"restart\": {}, \"stale\": {}}},\n    \
+                 \"workers\": {{\"reregistered\": {}, \"epoch_fenced\": {}}},\n    \
+                 \"recovery\": {{\"census_seeded\": {}, \"completed\": {}, \
+                 \"cutover\": {}, \"resync_deferred\": {}, \
+                 \"delegations_refused\": {}}},\n    \
+                 \"resync\": {{\"adopted\": {}, \"duplicates\": {}, \"conflicts\": {}, \
+                 \"orphans\": {}, \"lost\": {}, \"settled\": {}, \
+                 \"redelegated\": {}}},\n    \
+                 \"crash_to_converged_ms\": {},\n    \
+                 \"unconverged_crashes\": {}, \"lost_replicas\": {}}},\n  ",
+                c.kills,
+                c.restarts,
+                c.short_outages,
+                c.long_outages,
+                c.inflight_dropped,
+                c.escalated,
+                c.restart_registers,
+                c.stale_registers,
+                c.worker_reregistered,
+                c.epoch_fenced,
+                c.census_seeded,
+                c.recovery_completed,
+                c.recovery_cutover,
+                c.resync_deferred,
+                c.delegations_refused,
+                c.resync_adopted,
+                c.resync_duplicates,
+                c.resync_conflicts,
+                c.resync_orphans,
+                c.resync_lost,
+                c.resync_settled,
+                c.redelegated,
+                stats(&c.crash_to_converged),
+                c.unconverged_crashes,
+                c.lost_replicas,
+            ),
+        };
         // Lane-sharded runs carry an extra "sim" object; the classic
         // single-lane sim omits it entirely so legacy reports stay
         // byte-identical to the pre-lane golden fixture.
@@ -1800,7 +2141,7 @@ impl ChurnReport {
              \"leaks\": {{\"instances\": {}, \"capacity_mc\": {}}},\n  \
              \"census_consistency\": {{\"checked_at_ms\": {:.1}, \
              \"mismatch\": {}, \"diff\": {}}},\n  \
-             \"watches\": {{\"expired\": {}, \"unexcused\": {}}},\n  {}\
+             \"watches\": {{\"expired\": {}, \"unexcused\": {}}},\n  {}{}\
              \"op_log\": {},\n  \"census\": {}\n}}\n",
             self.seed,
             self.scenario,
@@ -1854,6 +2195,7 @@ impl ChurnReport {
             self.watch_expired,
             self.watch_expired_unexcused,
             partition_json,
+            crash_json,
             strings(&self.op_log),
             strings(&self.census),
         )
@@ -1972,9 +2314,17 @@ impl ChurnReport {
                 self.watch_expired, self.watch_expired_unexcused
             ),
         ]);
-        let Some(p) = &self.partition else {
-            return vec![lat, cost];
-        };
+        let mut out = vec![lat, cost];
+        if let Some(p) = &self.partition {
+            out.push(self.partition_table(p));
+        }
+        if let Some(c) = &self.crash {
+            out.push(self.crash_table(c));
+        }
+        out
+    }
+
+    fn partition_table(&self, p: &PartitionStats) -> Table {
         let mut part = Table::new(
             "Churn — partition tolerance",
             &["metric", "value"],
@@ -2040,7 +2390,80 @@ impl ChurnReport {
                 p.retransmits, p.dropped_after_retry, p.net_lost
             ),
         ]);
-        vec![lat, cost, part]
+        part
+    }
+
+    fn crash_table(&self, c: &CrashStats) -> Table {
+        let mut t = Table::new(
+            "Churn — coordinator crash recovery",
+            &["metric", "value"],
+        );
+        t.row(vec![
+            "outages".into(),
+            format!(
+                "{} kills / {} restarts ({} short, {} long)",
+                c.kills, c.restarts, c.short_outages, c.long_outages
+            ),
+        ]);
+        t.row(vec![
+            "inflight_dropped".into(),
+            c.inflight_dropped.to_string(),
+        ]);
+        t.row(vec![
+            "escalated (long outages only)".into(),
+            c.escalated.to_string(),
+        ]);
+        t.row(vec![
+            "registers restart/stale".into(),
+            format!("{} / {}", c.restart_registers, c.stale_registers),
+        ]);
+        t.row(vec![
+            "workers reregistered/fenced".into(),
+            format!("{} / {}", c.worker_reregistered, c.epoch_fenced),
+        ]);
+        t.row(vec![
+            "census_seeded".into(),
+            c.census_seeded.to_string(),
+        ]);
+        t.row(vec![
+            "recovery completed/cutover".into(),
+            format!("{} / {}", c.recovery_completed, c.recovery_cutover),
+        ]);
+        t.row(vec![
+            "resync deferred / delegations refused".into(),
+            format!("{} / {}", c.resync_deferred, c.delegations_refused),
+        ]);
+        t.row(vec![
+            "resync adopted/dup/conflict".into(),
+            format!(
+                "{} / {} / {}",
+                c.resync_adopted, c.resync_duplicates, c.resync_conflicts
+            ),
+        ]);
+        t.row(vec![
+            "resync orphans/lost/settled/redelegated".into(),
+            format!(
+                "{} / {} / {} / {}",
+                c.resync_orphans, c.resync_lost, c.resync_settled, c.redelegated
+            ),
+        ]);
+        t.row(vec![
+            "crash_to_converged_ms p50/p95".into(),
+            format!(
+                "{} / {}",
+                fmt_stat(c.crash_to_converged.count, c.crash_to_converged.p50_ms),
+                fmt_stat(c.crash_to_converged.count, c.crash_to_converged.p95_ms)
+            ),
+        ]);
+        t.row(vec![
+            "unconverged_crashes".into(),
+            c.unconverged_crashes.to_string(),
+        ]);
+        t.row(vec![
+            "lost_replicas".into(),
+            c.lost_replicas.to_string(),
+        ]);
+        t
     }
 }
 
@@ -2089,6 +2512,17 @@ mod tests {
         assert!(!ChurnScenario::Partition.autoscale());
         assert!(ChurnScenario::Partition.partitions());
         assert!(!ChurnScenario::All.partitions());
+        // Crash: arrival churn + migration drills racing the seeded
+        // orchestrator kills; only this scenario installs the crash
+        // schedule, and it never cuts uplinks.
+        assert_eq!(ChurnScenario::parse("crash"), Some(ChurnScenario::Crash));
+        assert!(ChurnScenario::Crash.arrivals());
+        assert!(ChurnScenario::Crash.drills());
+        assert!(!ChurnScenario::Crash.autoscale());
+        assert!(ChurnScenario::Crash.crashes());
+        assert!(!ChurnScenario::Crash.partitions());
+        assert!(!ChurnScenario::Partition.crashes());
+        assert!(!ChurnScenario::All.crashes());
     }
 
     #[test]
@@ -2169,10 +2603,12 @@ mod tests {
         // golden fixture.
         assert!(v.get("sim").get("lanes").as_u64().is_none());
         // Watch-abandonment accounting is always present; the partition
-        // object only appears when the scenario installed uplink cuts.
+        // and crash objects only appear when the scenario installed
+        // uplink cuts / orchestrator kills respectively.
         assert!(v.get("watches").get("expired").as_u64().is_some());
         assert!(v.get("watches").get("unexcused").as_u64().is_some());
         assert!(v.get("partition").get("cuts").as_u64().is_none());
+        assert!(v.get("crash").get("kills").as_u64().is_none());
     }
 
     /// Same seed, same storm, different `--threads`: the lane engine must
@@ -2261,5 +2697,80 @@ mod tests {
         assert_eq!(one.census_mismatch, 0, "{:?}", one.census_diff);
         assert_eq!(one.leaked_instances, 0);
         assert_eq!(one.watch_expired_unexcused, 0);
+    }
+
+    /// The crash storm must (a) be thread-count invariant — the epoch
+    /// handshakes, census seeding and redelegation sweeps are all
+    /// embedded in the report JSON, so byte-equality doubles as the
+    /// crash-recovery determinism regression — and (b) actually
+    /// recover: every kill is restarted under a higher epoch the root
+    /// accepts, short outages never escalate to Partitioned, the census
+    /// reconverges after every outage, and no replicas are lost, no
+    /// adoptions conflict, no leaks or unexcused abandonments remain.
+    #[test]
+    fn crash_storm_recovers_and_is_thread_invariant() {
+        let run = |threads: usize| {
+            let cfg = ChurnConfig {
+                threads,
+                clusters: 3,
+                workers_per_cluster: 4,
+                crash_clusters: 2,
+                // Last restart lands by ~95s (12s lead + 15s short cut +
+                // jittered 25s gap + 35s long cut); 120s keeps it ≥ 20s
+                // of live churn before the storm ends, and the census
+                // snapshot (duration + 0.75*hold) well past the final
+                // recovery resync.
+                duration_s: 120.0,
+                settle_s: 40.0,
+                arrival_period_s: 2.0,
+                mean_lifetime_s: 30.0,
+                max_live: 24,
+                drills: 4,
+                drill_every: 10,
+                ..ChurnConfig::crash_storm(7)
+            };
+            let mut report = run_churn(&cfg);
+            report.wall_clock_s = 0.0;
+            report
+        };
+        let one = run(1);
+        assert_eq!(
+            one.to_json(),
+            run(4).to_json(),
+            "crash storm must be thread-count invariant"
+        );
+        let c = one.crash.as_ref().expect("crash stats present");
+        assert_eq!(c.kills, 4, "2 clusters x 2 kills each");
+        assert_eq!(c.restarts, 4, "every kill must cold-restart");
+        assert_eq!(c.short_outages, 2);
+        assert_eq!(c.long_outages, 2);
+        assert_eq!(
+            c.restart_registers, 4,
+            "every restart must re-register under a higher epoch"
+        );
+        assert_eq!(
+            c.escalated, c.long_outages,
+            "only >30s outages may trip Partitioned — a Suspect-window \
+             re-register must cancel the escalation"
+        );
+        assert_eq!(c.recovery_completed, 4, "every restart must finish recovery");
+        assert!(
+            c.worker_reregistered >= 4 * 4,
+            "every worker of a crashed cluster re-registers per outage \
+             (got {})",
+            c.worker_reregistered
+        );
+        assert!(
+            c.census_seeded > 0,
+            "recovering clusters must rebuild state from worker censuses"
+        );
+        assert_eq!(c.resync_conflicts, 0, "no double adoptions");
+        assert_eq!(c.unconverged_crashes, 0, "census must drain after each outage");
+        assert_eq!(c.crash_to_converged.count as u64, c.kills);
+        assert_eq!(c.lost_replicas, 0, "no replica may be lost to a crash");
+        assert_eq!(one.census_mismatch, 0, "{:?}", one.census_diff);
+        assert_eq!(one.leaked_instances, 0);
+        assert_eq!(one.watch_expired_unexcused, 0);
+        assert_eq!(one.pending_non_timer, 0);
     }
 }

@@ -14,7 +14,7 @@ mod video;
 
 pub use churn::{
     census_diff, count_leaks, parse_shape, placement_census, run_churn, ChurnConfig,
-    ChurnDriver, ChurnReport, ChurnScenario,
+    ChurnDriver, ChurnReport, ChurnScenario, CrashStats, PartitionStats,
 };
 pub use deploy::{fig4a_deploy_time, fig5_network_degradation};
 pub use net::{fig9_left_closest_rtt, fig9_right_tunnel_transfer};

@@ -97,6 +97,9 @@ pub struct OakTestbed {
     /// Worker node → index into `clusters` (owning orchestrator), kept
     /// current across [`OakTestbed::revive_worker`] rebirths.
     pub worker_cluster: std::collections::BTreeMap<NodeId, usize>,
+    /// Per-cluster orchestrator incarnation epoch (starts at 1; bumped
+    /// by every [`OakTestbed::restart_cluster`]).
+    pub cluster_epochs: Vec<u64>,
     /// Next unused simulated-node id (revivals mint fresh identities).
     next_node: u32,
     /// The northbound [`ApiClient`] actor (the "developer").
@@ -208,6 +211,7 @@ pub fn build_oakestra(cfg: OakTestbedConfig) -> OakTestbed {
         }
     }
 
+    let cluster_epochs = vec![1u64; cfg.clusters];
     OakTestbed {
         sim,
         root,
@@ -215,6 +219,7 @@ pub fn build_oakestra(cfg: OakTestbedConfig) -> OakTestbed {
         clusters,
         workers,
         worker_cluster,
+        cluster_epochs,
         next_node,
         client,
         cfg,
@@ -277,6 +282,67 @@ impl OakTestbed {
     pub fn cut_cluster_uplink(&mut self, cluster_idx: usize, from: SimTime, until: SimTime) {
         let cnode = self.clusters[cluster_idx].0;
         self.sim.core.net.cut_link(self.root_node, cnode, from, until);
+    }
+
+    /// Fault injection (crash-recovery tentpole): crash-stop cluster
+    /// `cluster_idx`'s orchestrator actor. Its entire authoritative
+    /// state (worker table, instance table, outbox, migration
+    /// bookkeeping) is discarded and every in-flight message addressed
+    /// to it is dropped — distinct from [`OakTestbed::fail_worker`],
+    /// which kills a *node*; here the node stays up and a fresh process
+    /// can take over via [`OakTestbed::restart_cluster`]. Returns the
+    /// number of dropped non-timer in-flight messages.
+    pub fn crash_cluster(&mut self, cluster_idx: usize) -> usize {
+        let orch = self.clusters[cluster_idx].1;
+        self.sim.crash_actor(orch)
+    }
+
+    /// Cold-restart a crashed cluster orchestrator under the next
+    /// incarnation epoch. The new process comes up Recovering with empty
+    /// tables, re-registers with the root (epoch-stamped, so the root
+    /// takes the fast-restart path instead of a partition escalation)
+    /// and solicits worker re-registration — the simulated "broker
+    /// connection reset" every worker observes — whose census-carrying
+    /// handshakes rebuild the tables bottom-up. Returns the new epoch.
+    pub fn restart_cluster(&mut self, cluster_idx: usize) -> u64 {
+        let orch = self.clusters[cluster_idx].1;
+        self.cluster_epochs[cluster_idx] += 1;
+        let epoch = self.cluster_epochs[cluster_idx];
+        let cid = ClusterId(cluster_idx as u32 + 1);
+        let now = self.sim.now();
+        self.sim.restart_actor(
+            orch,
+            Box::new(ClusterOrchestrator::restarted(
+                ClusterConfig::new(cid, self.cfg.scheduler),
+                self.root,
+                epoch,
+                now,
+            )),
+        );
+        self.sim.inject(
+            now + SimTime::from_millis(1.0),
+            orch,
+            SimMsg::Timer(TimerKind::Custom(0)),
+        );
+        // Broker reconnect staggers like the build-time registration
+        // wave: each surviving worker of this cluster re-runs the
+        // handshake, census attached. Workers on failed nodes are
+        // solicited too — their handshake dies on the (dead) wire,
+        // exactly as a real broker reset would play out.
+        let mine: Vec<ActorId> = self
+            .workers
+            .iter()
+            .filter(|(n, _)| self.worker_cluster.get(n) == Some(&cluster_idx))
+            .map(|(_, a)| *a)
+            .collect();
+        for (i, engine) in mine.into_iter().enumerate() {
+            self.sim.inject(
+                now + SimTime::from_millis(5.0 + i as f64),
+                engine,
+                SimMsg::Timer(TimerKind::Custom(2)),
+            );
+        }
+        epoch
     }
 
     /// Worker rejoin (ROADMAP: recovery, not just crash-stop): the

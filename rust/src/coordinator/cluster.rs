@@ -169,12 +169,31 @@ pub struct ClusterOrchestrator {
     /// autoscaler) is never staler than one aggregate tick after a
     /// change.
     last_service_cpu: Vec<(ServiceId, u64)>,
+    /// Incarnation number of this orchestrator process. Starts at 1; a
+    /// crash-restart comes up under `old + 1` (see [`Self::restarted`]).
+    /// Stamped into every worker-bound command and the registration
+    /// handshake so workers can fence messages queued by a dead
+    /// incarnation (epoch 0 on the wire means unset/legacy).
+    pub epoch: u64,
+    /// True between a cold restart and the Recovering→Active transition:
+    /// the tables are being rebuilt bottom-up from worker re-register
+    /// censuses and are not yet authoritative — delegations are refused,
+    /// the root's resync solicitation is deferred, and the grace timer
+    /// (`intervals::recovery_grace`) ends the window.
+    recovering: bool,
+    /// A `ResyncRequest` arrived while still Recovering: answer it with
+    /// the rebuilt census at the Recovering→Active transition instead of
+    /// shipping a half-built snapshot.
+    resync_pending: bool,
     registered: bool,
     started: bool,
 }
 
 /// Locally-minted replacement ids: bit 63 tags failure recoveries, bit 62
-/// migration replacements; the cluster id sits at bits 48..56 and the
+/// migration replacements; the incarnation epoch (low 6 bits) sits at
+/// bits 56..62 — so a restarted orchestrator, whose mint counter starts
+/// from zero again, can never re-issue an id the dead incarnation already
+/// registered with the root — the cluster id sits at bits 48..56 and the
 /// low bits hold `LOCAL_MINT_BASE + counter`. The base keeps the low
 /// 32 bits (used by the worker's deploy-ack timer codes) disjoint from
 /// root-minted ids, which count up from zero.
@@ -213,9 +232,28 @@ impl ClusterOrchestrator {
             aggregate_ticks: 0,
             last_aggregate: None,
             last_service_cpu: Vec::new(),
+            epoch: 1,
+            recovering: false,
+            resync_pending: false,
             registered: false,
             started: false,
         }
+    }
+
+    /// Cold-restart constructor: a fresh orchestrator process for a
+    /// cluster whose previous incarnation crashed. All authoritative
+    /// state is gone — tables rebuild bottom-up from worker re-register
+    /// censuses during the Recovering window. `epoch` must be strictly
+    /// greater than every epoch the old incarnation ever used, and `now`
+    /// is the restart instant: the uplink lease starts from it (a lease
+    /// born at time zero would read Partitioned immediately on a late
+    /// restart and pollute the partition counters).
+    pub fn restarted(cfg: ClusterConfig, root: ActorId, epoch: u64, now: SimTime) -> Self {
+        let mut c = Self::new(cfg, root);
+        c.epoch = epoch;
+        c.recovering = true;
+        c.uplink = WsLink::new(now);
+        c
     }
 
     fn ensure_started(&mut self, ctx: &mut Ctx<'_>) {
@@ -241,6 +279,7 @@ impl ClusterOrchestrator {
                 cluster: self.cfg.id,
                 orchestrator: ctx.self_id,
                 parent: crate::hierarchy::ROOT,
+                epoch: self.epoch,
             });
             let bytes = msg.default_wire_bytes() + WS_FRAME_OVERHEAD;
             ctx.send(self.root, msg, bytes, labels::CLUSTER_TO_ROOT);
@@ -290,7 +329,8 @@ impl ClusterOrchestrator {
     fn mint_local(&mut self, tag: u64) -> InstanceId {
         self.next_local += 1;
         InstanceId(
-            tag | ((self.cfg.id.0 as u64 & 0xFF) << 48)
+            tag | ((self.epoch & 0x3F) << 56)
+                | ((self.cfg.id.0 as u64 & 0xFF) << 48)
                 | (LOCAL_MINT_BASE + self.next_local),
         )
     }
@@ -641,7 +681,14 @@ impl ClusterOrchestrator {
                     // dead instance so the global replica count stays
                     // authoritative.
                     let new_id = self.mint_local(RECOVERY_TAG);
-                    self.deploy_to(ctx, new_id, task, sla, worker);
+                    self.deploy_to(
+                        ctx,
+                        new_id,
+                        task,
+                        sla,
+                        worker,
+                        Some((iid, ReplacementReason::LocalRecovery)),
+                    );
                     self.announce_replacement(
                         ctx,
                         iid,
@@ -707,7 +754,14 @@ impl ClusterOrchestrator {
                 ctx.metrics().inc("cluster.migration_started");
                 let replacement = self.mint_local(MIGRATION_TAG);
                 self.migrations.insert(replacement, original);
-                self.deploy_to(ctx, replacement, task, sla, worker);
+                self.deploy_to(
+                    ctx,
+                    replacement,
+                    task,
+                    sla,
+                    worker,
+                    Some((original, ReplacementReason::Migration)),
+                );
                 self.announce_replacement(
                     ctx,
                     original,
@@ -739,6 +793,7 @@ impl ClusterOrchestrator {
         task: TaskId,
         sla: TaskSla,
         worker: NodeId,
+        origin: Option<(InstanceId, ReplacementReason)>,
     ) {
         // Reserve capacity eagerly so concurrent placements see it.
         let request = sla.request();
@@ -754,7 +809,7 @@ impl ClusterOrchestrator {
                 state: ServiceState::Scheduled,
                 request,
                 observed_cpu_mc: 0,
-                sla,
+                sla: sla.clone(),
             },
         );
         ctx.add_mem(mem::PER_INSTANCE_MB);
@@ -768,9 +823,84 @@ impl ClusterOrchestrator {
                 ServiceIp::RoundRobin(task),
                 ServiceIp::Closest(task),
             ],
+            sla,
+            origin,
+            epoch: self.epoch,
         });
         let bytes = msg.default_wire_bytes() + MQTT_FRAME_OVERHEAD;
         ctx.send(actor, msg, bytes, labels::CLUSTER_TO_WORKER);
+    }
+
+    /// Ship the anti-entropy census to the root: every live instance
+    /// plus the minted-replacement log (adoptions still awaiting a
+    /// verdict — exactly the lineage edges the root may have missed).
+    fn send_resync_snapshot(&mut self, ctx: &mut Ctx<'_>) {
+        ctx.metrics().inc("cluster.resync_sent");
+        let instances: Vec<(InstanceId, TaskId, ServiceState, NodeId)> = self
+            .instances
+            .iter()
+            .filter(|(_, li)| !li.state.is_terminal())
+            .map(|(iid, li)| (iid, li.task, li.state, li.node))
+            .collect();
+        let replacements: Vec<_> = self
+            .pending_adoptions
+            .iter()
+            .map(|(repl, &(orig, reason, _node, task))| {
+                (task.service, task, orig, *repl, reason)
+            })
+            .collect();
+        let msg = SimMsg::Oak(OakMsg::ResyncSnapshot {
+            cluster: self.cfg.id,
+            instances,
+            replacements,
+        });
+        let bytes = msg.default_wire_bytes() + WS_FRAME_OVERHEAD;
+        ctx.send(self.root, msg, bytes, labels::CLUSTER_TO_ROOT);
+    }
+
+    /// Recovering → Active: the census window is over and the rebuilt
+    /// tables are now authoritative. Completes migration cutovers the
+    /// crash froze (a census-seeded replacement already Running will
+    /// never produce a *fresh* Running transition, so the normal
+    /// cutover trigger can't fire) and answers a deferred resync
+    /// solicitation with the full census.
+    fn finish_recovery(&mut self, ctx: &mut Ctx<'_>) {
+        if !self.recovering {
+            return;
+        }
+        self.recovering = false;
+        ctx.metrics().inc("cluster.recovery_completed");
+        let ready: Vec<(InstanceId, InstanceId)> = self
+            .migrations
+            .iter()
+            .filter(|(r, _)| {
+                self.instances
+                    .get(**r)
+                    .map(|li| li.state == ServiceState::Running)
+                    .unwrap_or(false)
+            })
+            .map(|(r, o)| (*r, *o))
+            .collect();
+        for (replacement, original) in ready {
+            self.migrations.remove(&replacement);
+            // The original may have died with a worker before the crash
+            // (its record was never census-rebuilt): nothing to tear
+            // down then, the stale cutover entry just retires.
+            if self.instances.get(original).is_some() {
+                ctx.metrics().inc("cluster.recovery_cutover");
+                ctx.send_local(
+                    ctx.self_id,
+                    SimMsg::Oak(OakMsg::UndeployInstance {
+                        instance: original,
+                        epoch: self.epoch,
+                    }),
+                );
+            }
+        }
+        if self.resync_pending {
+            self.resync_pending = false;
+            self.send_resync_snapshot(ctx);
+        }
     }
 }
 
@@ -778,9 +908,23 @@ impl Actor for ClusterOrchestrator {
     fn handle(&mut self, ctx: &mut Ctx<'_>, msg: SimMsg) {
         self.ensure_started(ctx);
         match msg {
-            // Driver bootstrap: register with the root.
+            // Driver bootstrap: register with the root. A restarted
+            // incarnation also arms the recovery-grace timer: once it
+            // fires, the bottom-up rebuild is declared done
+            // (Recovering → Active, see `finish_recovery`).
             SimMsg::Timer(TimerKind::Custom(0)) => {
                 self.register(ctx);
+                if self.recovering {
+                    ctx.schedule(
+                        intervals::recovery_grace(),
+                        SimMsg::Timer(TimerKind::Custom(1)),
+                    );
+                }
+            }
+
+            // Recovery-grace expiry: the census window is over.
+            SimMsg::Timer(TimerKind::Custom(1)) => {
+                self.finish_recovery(ctx);
             }
 
             SimMsg::Oak(OakMsg::RegisterClusterAck { accepted }) => {
@@ -790,21 +934,28 @@ impl Actor for ClusterOrchestrator {
                 }
             }
 
-            SimMsg::Oak(OakMsg::RegisterWorker { spec, engine }) => {
+            SimMsg::Oak(OakMsg::RegisterWorker { spec, engine, census }) => {
                 ctx.charge_cpu(costs::SUBMIT_MS * 0.5);
                 let node = spec.node;
-                if self.workers.contains(node) {
+                if self.workers.contains(node) && census.is_empty() {
                     // Re-register handshake: a worker process restarted
                     // under an id this cluster still tracks. The
                     // returning engine has an empty instance set, so
                     // everything attributed to the old process died with
                     // it — run the dead-worker path (finalize + local
                     // recovery/escalation) before accepting the fresh
-                    // registration below.
+                    // registration below. A census-carrying re-register
+                    // (orchestrator restart, not worker restart) takes
+                    // the seeding path instead: the worker kept its
+                    // containers, only this side's tables were lost —
+                    // and a duplicate handshake must stay idempotent.
                     ctx.metrics().inc("cluster.worker_reregistered");
                     self.handle_worker_dead(ctx, node);
                 }
-                ctx.add_mem(mem::PER_WORKER_MB);
+                if !self.workers.contains(node) {
+                    ctx.add_mem(mem::PER_WORKER_MB);
+                    self.workers.insert(NodeProfile::new(spec));
+                }
                 let subnet = self.subnets.subnet_for(node);
                 self.broker.subscribe(
                     &format!("cluster/{}/worker/{}/cmd", self.cfg.id.0, node.0),
@@ -812,8 +963,57 @@ impl Actor for ClusterOrchestrator {
                 );
                 self.worker_actors.insert(node, engine);
                 self.last_report.insert(node, ctx.now);
-                self.workers.insert(NodeProfile::new(spec));
-                let msg = SimMsg::Oak(OakMsg::RegisterWorkerAck { subnet });
+                // Bottom-up rebuild: each census row this incarnation
+                // does not track becomes a fresh `InstanceTable` record,
+                // re-reserving the worker's capacity and re-arming the
+                // replacement lineage (pending adoption + migration
+                // cutover bookkeeping) exactly as the dead incarnation
+                // held them. Rows already tracked are duplicates of an
+                // earlier handshake and are skipped.
+                let mut seeded_tasks: BTreeSet<TaskId> = BTreeSet::new();
+                for row in census {
+                    if row.state.is_terminal() || self.instances.get(row.instance).is_some()
+                    {
+                        continue;
+                    }
+                    ctx.metrics().inc("cluster.census_seeded");
+                    if let Some(p) = self.profile_mut(node) {
+                        p.used += row.request;
+                        p.instances += 1;
+                    }
+                    self.instances.insert(
+                        row.instance,
+                        LocalInstance {
+                            task: row.task,
+                            node,
+                            state: row.state,
+                            request: row.request,
+                            observed_cpu_mc: 0,
+                            sla: row.sla,
+                        },
+                    );
+                    ctx.add_mem(mem::PER_INSTANCE_MB);
+                    if let Some((original, reason)) = row.origin {
+                        // The adoption verdict may have died with the old
+                        // incarnation's outbox: re-arm the pending entry
+                        // (shipped to the root in the deferred resync
+                        // snapshot; the root's adoption is idempotent).
+                        self.pending_adoptions
+                            .insert(row.instance, (original, reason, node, row.task));
+                        if reason == ReplacementReason::Migration {
+                            self.migrations.insert(row.instance, original);
+                        }
+                    }
+                    seeded_tasks.insert(row.task);
+                }
+                for task in seeded_tasks {
+                    self.refresh_ldp_target(task);
+                    self.mark_table_dirty(ctx, task);
+                }
+                let msg = SimMsg::Oak(OakMsg::RegisterWorkerAck {
+                    subnet,
+                    epoch: self.epoch,
+                });
                 let bytes = msg.default_wire_bytes() + MQTT_FRAME_OVERHEAD;
                 ctx.send(engine, msg, bytes, labels::CLUSTER_TO_WORKER);
             }
@@ -900,6 +1100,7 @@ impl Actor for ClusterOrchestrator {
                         ctx.metrics().inc("cluster.migration_completed");
                         let undeploy = SimMsg::Oak(OakMsg::UndeployInstance {
                             instance: original,
+                            epoch: self.epoch,
                         });
                         ctx.send_local(ctx.self_id, undeploy);
                     }
@@ -972,6 +1173,23 @@ impl Actor for ClusterOrchestrator {
                     ctx.metrics().inc("cluster.delegation_tombstoned");
                     return;
                 }
+                if self.recovering {
+                    // Mid-rebuild tables are not a placement basis:
+                    // refuse so the root's priority list spills to the
+                    // next cluster instead of parking the instance on a
+                    // half-seen worker set.
+                    ctx.metrics().inc("cluster.delegation_while_recovering");
+                    let msg = SimMsg::Oak(OakMsg::DelegationResult {
+                        task,
+                        instance,
+                        worker: None,
+                        calc_time: SimTime::ZERO,
+                    });
+                    self.buffer_critical(ctx, &msg);
+                    let bytes = msg.default_wire_bytes() + WS_FRAME_OVERHEAD;
+                    ctx.send(self.root, msg, bytes, labels::CLUSTER_TO_ROOT);
+                    return;
+                }
                 let placement = self.run_scheduler(ctx, task, &sla, None);
                 let calc_time = self.last_calc;
                 // The result is critical: the root's pending-delegation
@@ -981,7 +1199,7 @@ impl Actor for ClusterOrchestrator {
                 // and the resync census settles whatever was lost.
                 match placement {
                     Placement::Placed { worker, .. } => {
-                        self.deploy_to(ctx, instance, task, sla, worker);
+                        self.deploy_to(ctx, instance, task, sla, worker, None);
                         let msg = SimMsg::Oak(OakMsg::DelegationResult {
                             task,
                             instance,
@@ -1067,6 +1285,7 @@ impl Actor for ClusterOrchestrator {
                         ctx.self_id,
                         SimMsg::Oak(OakMsg::UndeployInstance {
                             instance: replacement,
+                            epoch: self.epoch,
                         }),
                     );
                     if let Some((task, sla)) = escalate {
@@ -1081,7 +1300,10 @@ impl Actor for ClusterOrchestrator {
                 }
             }
 
-            SimMsg::Oak(OakMsg::UndeployInstance { instance }) => {
+            // `epoch` is not fenced here: the cluster is the fencing
+            // *authority*, not a subject — root-originated teardowns
+            // arrive stamped 0 and self-sends carry the current epoch.
+            SimMsg::Oak(OakMsg::UndeployInstance { instance, epoch: _ }) => {
                 ctx.charge_cpu(costs::TABLE_OP_MS);
                 // A targeted teardown of a migration *replacement*
                 // (root-side scale-shrink now sees adopted successors):
@@ -1107,7 +1329,10 @@ impl Actor for ClusterOrchestrator {
                     ctx.metrics().inc("cluster.migration_cancelled");
                     ctx.send_local(
                         ctx.self_id,
-                        SimMsg::Oak(OakMsg::UndeployInstance { instance: r }),
+                        SimMsg::Oak(OakMsg::UndeployInstance {
+                            instance: r,
+                            epoch: self.epoch,
+                        }),
                     );
                 }
                 match self.instances.get(instance) {
@@ -1120,8 +1345,10 @@ impl Actor for ClusterOrchestrator {
                             .filter(|_| !ctx.is_failed(node));
                         match reachable {
                             Some(a) => {
-                                let msg =
-                                    SimMsg::Oak(OakMsg::UndeployInstance { instance });
+                                let msg = SimMsg::Oak(OakMsg::UndeployInstance {
+                                    instance,
+                                    epoch: self.epoch,
+                                });
                                 let bytes =
                                     msg.default_wire_bytes() + MQTT_FRAME_OVERHEAD;
                                 ctx.send(a, msg, bytes, labels::CLUSTER_TO_WORKER);
@@ -1216,8 +1443,10 @@ impl Actor for ClusterOrchestrator {
                         .filter(|_| !ctx.is_failed(node));
                     match reachable {
                         Some(a) => {
-                            let msg =
-                                SimMsg::Oak(OakMsg::UndeployInstance { instance: iid });
+                            let msg = SimMsg::Oak(OakMsg::UndeployInstance {
+                                instance: iid,
+                                epoch: self.epoch,
+                            });
                             let bytes = msg.default_wire_bytes() + MQTT_FRAME_OVERHEAD;
                             ctx.send(a, msg, bytes, labels::CLUSTER_TO_WORKER);
                         }
@@ -1438,31 +1667,17 @@ impl Actor for ClusterOrchestrator {
                 // proof of life (and replays the outbox first — the
                 // root's reconciliation then sees both channels).
                 self.note_root_activity(ctx);
-                ctx.metrics().inc("cluster.resync_sent");
-                // Census: every live instance this cluster tracks.
-                let instances: Vec<(InstanceId, TaskId, ServiceState, NodeId)> = self
-                    .instances
-                    .iter()
-                    .filter(|(_, li)| !li.state.is_terminal())
-                    .map(|(iid, li)| (iid, li.task, li.state, li.node))
-                    .collect();
-                // Minted-replacement log: adoptions still awaiting the
-                // root's verdict — exactly the lineage edges the root
-                // may have missed while the uplink was cut.
-                let replacements: Vec<_> = self
-                    .pending_adoptions
-                    .iter()
-                    .map(|(repl, &(orig, reason, _node, task))| {
-                        (task.service, task, orig, *repl, reason)
-                    })
-                    .collect();
-                let msg = SimMsg::Oak(OakMsg::ResyncSnapshot {
-                    cluster: self.cfg.id,
-                    instances,
-                    replacements,
-                });
-                let bytes = msg.default_wire_bytes() + WS_FRAME_OVERHEAD;
-                ctx.send(self.root, msg, bytes, labels::CLUSTER_TO_ROOT);
+                if self.recovering {
+                    // A half-built census would masquerade as the
+                    // authoritative ground truth and the root's phase-3
+                    // sweep would fail every instance whose worker has
+                    // not re-registered yet. Answer at Recovering→Active
+                    // instead.
+                    self.resync_pending = true;
+                    ctx.metrics().inc("cluster.resync_deferred");
+                    return;
+                }
+                self.send_resync_snapshot(ctx);
             }
 
             SimMsg::Timer(TimerKind::TableFlush) => {

@@ -151,4 +151,12 @@ pub mod intervals {
     pub fn worker_dead_after() -> SimTime {
         SimTime::from_secs(12.0)
     }
+    /// How long a restarted cluster orchestrator stays in Recovering,
+    /// absorbing worker re-register censuses, before it declares its
+    /// rebuilt tables authoritative (Recovering → Active). Sized to one
+    /// worker telemetry period: every live worker re-registers within
+    /// one solicited handshake round-trip, well inside this window.
+    pub fn recovery_grace() -> SimTime {
+        SimTime::from_secs(2.0)
+    }
 }

@@ -84,6 +84,11 @@ pub struct RootOrchestrator {
     pub fed: ClusterTable,
     /// ClusterId → orchestrator actor.
     cluster_actors: BTreeMap<ClusterId, ActorId>,
+    /// Highest incarnation epoch each cluster has registered under. A
+    /// re-register with a higher epoch is a crash-restart (fresh lease,
+    /// degraded overlay, resync solicitation); one with a lower epoch is
+    /// a straggler from a dead incarnation and is fenced.
+    cluster_epochs: BTreeMap<ClusterId, u64>,
     links: BTreeMap<ClusterId, WsLink>,
     pub db: ServiceDb,
     pending: BTreeMap<InstanceId, PendingDelegation>,
@@ -98,6 +103,13 @@ pub struct RootOrchestrator {
     /// the cluster keeps operating autonomously and the post-heal
     /// census reconciles (no reschedule storm during the grace window).
     partitioned: BTreeMap<ClusterId, SimTime>,
+    /// Clusters whose next `ResyncSnapshot` follows a crash-restart
+    /// (not a partition heal). Only then may the reconciliation re-drive
+    /// pending delegations parked on the cluster: the crash provably
+    /// dropped the in-flight `DelegateTask`, so a re-offer cannot
+    /// double-deploy — after a mere partition the original send may
+    /// still be parked in the network and re-driving would race it.
+    restart_resync: BTreeSet<ClusterId>,
     /// Scheduling decisions taken (for Fig. 6 instrumentation).
     pub root_sched_ops: u64,
     started: bool,
@@ -110,12 +122,14 @@ impl RootOrchestrator {
             tree: ClusterTree::new(),
             fed: ClusterTable::default(),
             cluster_actors: BTreeMap::new(),
+            cluster_epochs: BTreeMap::new(),
             links: BTreeMap::new(),
             db: ServiceDb::default(),
             pending: BTreeMap::new(),
             tracking: BTreeMap::new(),
             placement_watch: BTreeMap::new(),
             partitioned: BTreeMap::new(),
+            restart_resync: BTreeSet::new(),
             root_sched_ops: 0,
             started: false,
         }
@@ -319,7 +333,10 @@ impl RootOrchestrator {
             ctx.metrics().inc("root.undeploy_unroutable");
             return false;
         };
-        let msg = SimMsg::Oak(OakMsg::UndeployInstance { instance });
+        // Epoch 0 = unset: the cluster re-stamps its own epoch when it
+        // forwards the teardown to the hosting worker, so root-originated
+        // commands are never fenced.
+        let msg = SimMsg::Oak(OakMsg::UndeployInstance { instance, epoch: 0 });
         let bytes = msg.default_wire_bytes() + WS_FRAME_OVERHEAD;
         ctx.send(actor, msg, bytes, labels::ROOT_TO_CLUSTER);
         true
@@ -842,12 +859,67 @@ impl Actor for RootOrchestrator {
                 cluster,
                 orchestrator,
                 parent,
+                epoch,
             }) => {
                 ctx.charge_cpu(costs::SUBMIT_MS);
+                match self.cluster_epochs.get(&cluster).copied() {
+                    Some(cur) if epoch < cur => {
+                        // A registration from a dead incarnation, parked
+                        // in the network across its crash: fence it —
+                        // answering (or worse, repointing the actor map
+                        // at a corpse) would undo the live incarnation.
+                        ctx.metrics().inc("root.register_stale_epoch");
+                        return;
+                    }
+                    Some(cur) if epoch > cur => {
+                        // Crash-restart: same cluster, higher incarnation.
+                        // The fresh lease cancels a Suspect-window
+                        // escalation in flight — a fast restart is not a
+                        // partition, so `root.partition_detected` must
+                        // not fire for it. State-wise the restart is
+                        // treated like a healed partition: services go
+                        // under the degraded overlay (status answers
+                        // surface staleness, delegations route around)
+                        // until the census converges — no reschedule
+                        // storm against a cluster that is rebuilding.
+                        ctx.metrics().inc("root.cluster_restarted");
+                        self.cluster_epochs.insert(cluster, epoch);
+                        self.cluster_actors.insert(cluster, orchestrator);
+                        self.links.insert(cluster, WsLink::new(ctx.now));
+                        if let Some(since) = self.partitioned.remove(&cluster) {
+                            // The dead window already escalated: close
+                            // the partition accounting here; the overlay
+                            // below persists until the resync lands.
+                            ctx.metrics().inc("root.partition_healed");
+                            ctx.metrics().observe(
+                                "root.degraded_window_ms",
+                                ctx.now.saturating_sub(since).as_millis(),
+                            );
+                        }
+                        let marked = self.db.mark_cluster_degraded(cluster, ctx.now);
+                        ctx.metrics().add("root.services_degraded", marked);
+                        let msg =
+                            SimMsg::Oak(OakMsg::RegisterClusterAck { accepted: true });
+                        let bytes = msg.default_wire_bytes() + WS_FRAME_OVERHEAD;
+                        ctx.send(orchestrator, msg, bytes, labels::ROOT_TO_CLUSTER);
+                        // Solicit the anti-entropy census. The recovering
+                        // cluster answers at its Recovering→Active edge;
+                        // only that restart-resync may re-drive parked
+                        // delegations (the crash dropped their sends).
+                        self.restart_resync.insert(cluster);
+                        ctx.metrics().inc("root.resync_requested");
+                        let msg = SimMsg::Oak(OakMsg::ResyncRequest);
+                        let bytes = msg.default_wire_bytes() + WS_FRAME_OVERHEAD;
+                        ctx.send(orchestrator, msg, bytes, labels::ROOT_TO_CLUSTER);
+                        return;
+                    }
+                    _ => {}
+                }
                 let accepted = self.tree.attach(cluster, parent).is_ok();
                 if accepted {
                     self.fed.register(cluster);
                     self.cluster_actors.insert(cluster, orchestrator);
+                    self.cluster_epochs.insert(cluster, epoch);
                     self.links.insert(cluster, WsLink::new(ctx.now));
                 }
                 let msg = SimMsg::Oak(OakMsg::RegisterClusterAck { accepted });
@@ -1264,6 +1336,35 @@ impl Actor for RootOrchestrator {
                         self.delegate(ctx, new_id, task, sla);
                     }
                 }
+                // Phase 4 (restart resyncs only): delegations parked on
+                // this cluster whose instances the census does not carry
+                // died with the crashed incarnation's inbox — the crash
+                // provably dropped the `DelegateTask` (or its result), so
+                // re-driving the delegation cannot double-deploy. After a
+                // mere partition heal this sweep must NOT run: the
+                // original send may still be parked in the network.
+                if self.restart_resync.remove(&cluster) {
+                    let stranded: Vec<(InstanceId, PendingDelegation)> = self
+                        .pending
+                        .iter()
+                        .filter(|(iid, pd)| {
+                            pd.current == cluster && !census.contains(iid)
+                        })
+                        .map(|(iid, pd)| (*iid, pd.clone()))
+                        .collect();
+                    for (iid, pd) in stranded {
+                        ctx.metrics().inc("root.resync_redelegated");
+                        self.pending.remove(&iid);
+                        let next = pd.current;
+                        self.send_delegation(ctx, iid, next, pd);
+                    }
+                }
+                // Census converged: lift the degraded overlay armed at
+                // the crash-restart re-registration. Idempotent — after
+                // a partition heal (overlay already lifted) this clears
+                // nothing.
+                let restored = self.db.clear_cluster_degraded(cluster);
+                ctx.metrics().add("root.services_restored", restored);
             }
 
             SimMsg::Timer(TimerKind::LivenessPing) => {

@@ -13,7 +13,10 @@ use crate::model::{Capacity, ServiceState, WorkerSpec};
 use crate::netmanager::{
     pick_instance, ConversionTable, Mdns, ProxyTun, ServiceIp,
 };
-use crate::sim::{Actor, ActorId, Ctx, DataMsg, OakMsg, SimMsg, TimerKind};
+use crate::sim::{
+    Actor, ActorId, CensusRow, Ctx, DataMsg, OakMsg, ReplacementReason, SimMsg, TimerKind,
+};
+use crate::sla::TaskSla;
 use crate::telemetry::{TelemetryGovernor, UpdatePolicy};
 use crate::util::{InstanceId, NodeId, SimTime, TaskId};
 use crate::vivaldi::VivaldiState;
@@ -51,7 +54,10 @@ impl WorkerConfig {
     }
 }
 
-/// One locally hosted instance.
+/// One locally hosted instance. Carries everything the census needs to
+/// rebuild the cluster orchestrator's table row after a crash — the SLA
+/// and replacement lineage ride along with the deploy command precisely
+/// so they survive down here when the orchestrator's state does not.
 #[derive(Clone, Debug)]
 struct HostedInstance {
     task: TaskId,
@@ -59,6 +65,8 @@ struct HostedInstance {
     state: ServiceState,
     /// Simulated QoS sample reported upstream (ms).
     qos_ms: f64,
+    sla: TaskSla,
+    origin: Option<(InstanceId, ReplacementReason)>,
 }
 
 pub struct WorkerEngine {
@@ -84,6 +92,10 @@ pub struct WorkerEngine {
     /// arrival or the container runs untracked forever.
     undeploy_tombstones: BTreeSet<InstanceId>,
     registered: bool,
+    /// Highest cluster-orchestrator incarnation seen (via
+    /// `RegisterWorkerAck`); commands stamped with a lower epoch come
+    /// from a dead incarnation and are fenced. 0 = unset.
+    pub epoch: u64,
 }
 
 impl WorkerEngine {
@@ -105,6 +117,7 @@ impl WorkerEngine {
             node_actors: BTreeMap::new(),
             undeploy_tombstones: BTreeSet::new(),
             registered: false,
+            epoch: 0,
         }
     }
 
@@ -134,16 +147,34 @@ impl WorkerEngine {
     }
 
     /// Kick off registration (call once via an injected Custom timer, or
-    /// directly from the driver).
+    /// directly from the driver). The handshake carries the full local
+    /// instance census — empty on a first join, the crash-recovery seed
+    /// when a restarted orchestrator solicits re-registration.
     fn register(&mut self, ctx: &mut Ctx<'_>) {
         if self.registered {
             return;
         }
+        let first = self.subnet.is_none();
         self.registered = true;
-        ctx.add_mem(mem::WORKER_BASE_MB);
+        if first {
+            ctx.add_mem(mem::WORKER_BASE_MB);
+        }
+        let census: Vec<CensusRow> = self
+            .hosted
+            .iter()
+            .map(|(id, h)| CensusRow {
+                instance: *id,
+                task: h.task,
+                state: h.state,
+                request: h.request,
+                sla: h.sla.clone(),
+                origin: h.origin,
+            })
+            .collect();
         let msg = SimMsg::Oak(OakMsg::RegisterWorker {
             spec: self.cfg.spec.clone(),
             engine: ctx.self_id,
+            census,
         });
         let bytes = msg.default_wire_bytes() + MQTT_FRAME_OVERHEAD;
         ctx.send(self.orchestrator, msg, bytes, labels::WORKER_TO_CLUSTER);
@@ -282,15 +313,36 @@ impl Actor for WorkerEngine {
                 self.register(ctx);
             }
 
-            SimMsg::Oak(OakMsg::RegisterWorkerAck { subnet }) => {
+            // Broker connection reset: the cluster orchestrator restarted
+            // under a new incarnation and solicits re-registration. Run
+            // the handshake again, this time with a populated census.
+            SimMsg::Timer(TimerKind::Custom(2)) => {
+                self.registered = false;
+                ctx.metrics().inc("worker.reregistered");
+                self.register(ctx);
+            }
+
+            SimMsg::Oak(OakMsg::RegisterWorkerAck { subnet, epoch }) => {
+                if epoch < self.epoch {
+                    // Ack from an incarnation that already died (in-flight
+                    // reordering): never regress the fence.
+                    ctx.metrics().inc("worker.epoch_fenced");
+                    return;
+                }
+                self.epoch = epoch;
+                let first = self.subnet.is_none();
                 self.subnet = Some(subnet);
-                // Start the telemetry loop.
-                let iv = self.governor.tick_interval();
-                ctx.schedule(iv, SimMsg::Timer(TimerKind::WorkerTelemetry));
-                ctx.schedule(
-                    intervals::tunnel_gc(),
-                    SimMsg::Timer(TimerKind::TunnelGc),
-                );
+                if first {
+                    // Start the telemetry loop — once: a re-registration
+                    // ack after an orchestrator restart must not stack a
+                    // second timer chain onto the surviving one.
+                    let iv = self.governor.tick_interval();
+                    ctx.schedule(iv, SimMsg::Timer(TimerKind::WorkerTelemetry));
+                    ctx.schedule(
+                        intervals::tunnel_gc(),
+                        SimMsg::Timer(TimerKind::TunnelGc),
+                    );
+                }
             }
 
             SimMsg::Timer(TimerKind::WorkerTelemetry) => {
@@ -322,7 +374,18 @@ impl Actor for WorkerEngine {
                 request,
                 image_mb,
                 service_ips: _,
+                sla,
+                origin,
+                epoch,
             }) => {
+                if epoch != 0 && epoch < self.epoch {
+                    // Command from a dead incarnation: the restarted
+                    // orchestrator rebuilt its tables from our census and
+                    // knows nothing of this deploy — accepting it would
+                    // leak the container forever.
+                    ctx.metrics().inc("worker.epoch_fenced");
+                    return;
+                }
                 ctx.charge_cpu(costs::DEPLOY_MS);
                 if self.undeploy_tombstones.remove(&instance) {
                     // The teardown overtook this deploy in flight: refuse
@@ -362,6 +425,8 @@ impl Actor for WorkerEngine {
                         request,
                         state: ServiceState::Scheduled,
                         qos_ms: 0.0,
+                        sla,
+                        origin,
                     },
                 );
                 self.mdns
@@ -401,7 +466,13 @@ impl Actor for WorkerEngine {
                 }
             }
 
-            SimMsg::Oak(OakMsg::UndeployInstance { instance }) => {
+            SimMsg::Oak(OakMsg::UndeployInstance { instance, epoch }) => {
+                if epoch != 0 && epoch < self.epoch {
+                    // Teardown queued by a dead incarnation — the rebuilt
+                    // census may have re-legitimized this instance.
+                    ctx.metrics().inc("worker.epoch_fenced");
+                    return;
+                }
                 ctx.charge_cpu(costs::DEPLOY_MS * 0.3);
                 match self.hosted.remove(&instance) {
                     None => {

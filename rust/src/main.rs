@@ -94,14 +94,20 @@ fn print_help() {
            oakestra bench <fig|all>           figures: 4a 4bc 5 6 7a 7b 8a 8b 9 10 ablations\n\
            oakestra churn [opts]              dynamic-workload churn bench (submit/scale/\n\
                                               migrate storms) → BENCH_churn.json\n\
-             --scenario submit|scale|failover|spill|partition|all\n\
+             --scenario submit|scale|failover|spill|partition|crash|all\n\
                                               storm generators (default all;\n\
                                               spill = heavy catalog over undersized\n\
                                               clusters, defaults to a 16x6 shape;\n\
                                               partition = arrival churn + migration\n\
                                               drills under seeded cluster-uplink\n\
                                               cuts/flaps, defaults to 16x12 with the\n\
-                                              heal-time anti-entropy resync gated)\n\
+                                              heal-time anti-entropy resync gated;\n\
+                                              crash = arrival churn + migration drills\n\
+                                              under seeded cluster-orchestrator\n\
+                                              crash-stops and epoch-fenced cold\n\
+                                              restarts, defaults to 16x12 with the\n\
+                                              crash-to-converged latency and\n\
+                                              lost-replica count gated)\n\
              --seed N --duration S --scheduler rom|ldp\n\
              --shape CxW                      topology: C clusters x W workers each\n\
                                               (e.g. 16x6; --clusters/--workers override)\n\
@@ -400,7 +406,10 @@ fn cmd_churn(args: &[String]) -> Result<()> {
     }
     if let Some(s) = flag_value(args, "--scenario") {
         cfg.scenario = bh::ChurnScenario::parse(s).ok_or_else(|| {
-            anyhow!("unknown scenario '{s}' (submit|scale|failover|spill|partition|all)")
+            anyhow!(
+                "unknown scenario '{s}' \
+                 (submit|scale|failover|spill|partition|crash|all)"
+            )
         })?;
         if cfg.scenario == bh::ChurnScenario::Spill {
             // The spill storm wants undersized clusters + fast arrivals;
@@ -426,6 +435,20 @@ fn cmd_churn(args: &[String]) -> Result<()> {
                 cfg.clusters = 6;
                 cfg.workers_per_cluster = 4;
                 cfg.partition_clusters = 2;
+                cfg.settle_s = 35.0;
+            }
+        }
+        if cfg.scenario == bh::ChurnScenario::Crash {
+            // The crash storm needs its kill/restart schedule installed;
+            // start from the 16x12 preset and let explicit flags
+            // override. --quick shrinks the fleet, not the outage
+            // windows — the long outage must stay past the 30s lease or
+            // the escalated-recovery path is never exercised.
+            cfg = bh::ChurnConfig::crash_storm(cfg.seed);
+            if quick {
+                cfg.clusters = 6;
+                cfg.workers_per_cluster = 4;
+                cfg.crash_clusters = 2;
                 cfg.settle_s = 35.0;
             }
         }
@@ -535,6 +558,42 @@ fn cmd_churn(args: &[String]) -> Result<()> {
             );
         }
     }
+    let crash_bad = report.crash.as_ref().is_some_and(|c| {
+        c.lost_replicas > 0
+            || c.resync_conflicts > 0
+            || c.unconverged_crashes > 0
+            || c.restarts != c.kills
+            || c.restart_registers < c.restarts
+    });
+    if let Some(c) = &report.crash {
+        if c.lost_replicas > 0 {
+            eprintln!(
+                "warning: {} replica(s) lost to coordinator crashes — the \
+                 root still tracks capacity no cluster hosts",
+                c.lost_replicas
+            );
+        }
+        if c.resync_conflicts > 0 {
+            eprintln!(
+                "warning: {} resync adoption conflict(s) across a crash \
+                 recovery",
+                c.resync_conflicts
+            );
+        }
+        if c.unconverged_crashes > 0 {
+            eprintln!(
+                "warning: {} crash(es) never reconverged the census",
+                c.unconverged_crashes
+            );
+        }
+        if c.restart_registers < c.restarts {
+            eprintln!(
+                "warning: only {} of {} restarts re-registered under a \
+                 higher epoch",
+                c.restart_registers, c.restarts
+            );
+        }
+    }
     std::fs::write(out, report.to_json())
         .map_err(|e| anyhow!("writing {out}: {e}"))?;
     println!("wrote {out}");
@@ -545,19 +604,21 @@ fn cmd_churn(args: &[String]) -> Result<()> {
             || report.census_mismatch > 0
             || report.pending_non_timer > 0
             || report.watch_expired_unexcused > 0
-            || partition_bad)
+            || partition_bad
+            || crash_bad)
     {
         return Err(anyhow!(
             "strict churn check failed: leaks={}/{}mc unanswered={} \
              census_mismatch={} pending_non_timer={} watch_unexcused={} \
-             partition_bad={}",
+             partition_bad={} crash_bad={}",
             report.leaked_instances,
             report.leaked_capacity_mc,
             report.unanswered_requests,
             report.census_mismatch,
             report.pending_non_timer,
             report.watch_expired_unexcused,
-            partition_bad
+            partition_bad,
+            crash_bad
         ));
     }
     Ok(())

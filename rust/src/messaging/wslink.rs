@@ -321,4 +321,72 @@ mod tests {
         assert!(ob.is_empty());
         assert_eq!(ob.dropped, 0);
     }
+
+    /// Acks for seqs the outbox never issued — or issued and already
+    /// resolved — must be pure no-ops: `false` back, nothing disturbed.
+    /// A crash-restarted peer can ack seqs from the dead incarnation's
+    /// outbox, which this incarnation has never minted.
+    #[test]
+    fn outbox_unknown_and_stale_seq_acks_are_idempotent_noops() {
+        let mut ob: Outbox<&'static str> = Outbox::new(3, SimTime::from_secs(1.0));
+        let a = ob.enqueue("a", SimTime::ZERO);
+        let b = ob.enqueue("b", SimTime::ZERO);
+        // Unknown seq: never minted by this outbox.
+        assert!(!ob.ack(9_999));
+        assert_eq!(ob.len(), 2, "unknown ack must not disturb live entries");
+        // Stale seq: minted, resolved, acked again.
+        assert!(ob.ack(a));
+        assert!(!ob.ack(a), "second ack of a resolved seq is a no-op");
+        assert!(!ob.ack(9_999));
+        assert_eq!(ob.len(), 1);
+        // The survivor is untouched — same seq, same payload, full
+        // retry budget still available.
+        let due = ob.replay_all(SimTime::from_secs(10.0));
+        assert_eq!(due, vec![(b, "b")]);
+        assert_eq!(ob.dropped, 0);
+    }
+
+    /// Once an entry exhausts its retry budget and is dropped, no later
+    /// heal replay may resurrect it: the drop is final and the
+    /// anti-entropy resync is the only remaining recovery path.
+    #[test]
+    fn outbox_replay_after_retry_cap_drop_does_not_resurrect() {
+        let mut ob: Outbox<&'static str> = Outbox::new(1, SimTime::from_secs(1.0));
+        ob.enqueue("doomed", SimTime::ZERO);
+        // Burn the single retry, then let the next scan drop it.
+        assert_eq!(ob.due(SimTime::from_secs(1.0)).len(), 1);
+        assert!(ob.due(SimTime::from_secs(60.0)).is_empty());
+        assert_eq!(ob.dropped, 1);
+        assert!(ob.is_empty());
+        // A heal replay long after must find nothing — and must not
+        // double-count the drop either.
+        assert!(ob.replay_all(SimTime::from_secs(120.0)).is_empty());
+        assert_eq!(ob.dropped, 1);
+        // New traffic keeps minting fresh, monotonically later seqs.
+        let fresh = ob.enqueue("fresh", SimTime::from_secs(121.0));
+        assert_eq!(fresh, 1, "seqs continue past dropped entries");
+    }
+
+    /// Replay order is enqueue order (seq order), no matter how acks
+    /// and fresh enqueues interleave: receivers rely on replayed
+    /// critical messages arriving in their original causal order.
+    #[test]
+    fn outbox_replay_ordering_is_stable_across_interleaved_enqueues() {
+        let mut ob: Outbox<&'static str> = Outbox::new(5, SimTime::from_secs(1.0));
+        let a = ob.enqueue("a", SimTime::ZERO);
+        let b = ob.enqueue("b", SimTime::from_secs(1.0));
+        assert!(ob.ack(a));
+        let c = ob.enqueue("c", SimTime::from_secs(2.0));
+        let d = ob.enqueue("d", SimTime::from_secs(3.0));
+        assert!(ob.ack(c));
+        let e = ob.enqueue("e", SimTime::from_secs(4.0));
+        // Survivors replay as b, d, e — original enqueue order, with the
+        // acked entries excised but never reordering their neighbours.
+        let due = ob.replay_all(SimTime::from_secs(30.0));
+        assert_eq!(due, vec![(b, "b"), (d, "d"), (e, "e")]);
+        // A second replay keeps the same order (backoff pushed each
+        // entry out uniformly — relative order is preserved).
+        let due = ob.replay_all(SimTime::from_secs(60.0));
+        assert_eq!(due, vec![(b, "b"), (d, "d"), (e, "e")]);
+    }
 }

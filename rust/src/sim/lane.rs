@@ -221,6 +221,49 @@ impl LaneCore {
         self.cross_ix += 1;
         ix
     }
+
+    /// Drop every queued event addressed to `target` — crash injection:
+    /// the in-flight messages and pending timers of a crash-stopped
+    /// actor die with it. Returns how many of the dropped events were
+    /// messages (non-timers), which the harness reports as the crash's
+    /// message loss. Maintains the O(1) `n_events` / `non_timer_pending`
+    /// mirrors; heap order among survivors is untouched because
+    /// `(at, seq)` stamps are preserved.
+    pub(crate) fn purge_actor(&mut self, target: ActorId) -> usize {
+        let mut dropped_msgs = 0usize;
+        let mut note_drop = |ev: &Event, msgs: &mut usize, non_timer: &mut usize| {
+            if !matches!(ev.msg, SimMsg::Timer(_)) {
+                *non_timer -= 1;
+                *msgs += 1;
+            }
+        };
+        let drained = std::mem::take(&mut self.queue).into_vec();
+        let mut kept = Vec::with_capacity(drained.len());
+        for Reverse(ev) in drained {
+            if ev.target == target {
+                self.n_events -= 1;
+                note_drop(&ev, &mut dropped_msgs, &mut self.non_timer_pending);
+            } else {
+                kept.push(Reverse(ev));
+            }
+        }
+        self.queue = BinaryHeap::from(kept);
+        // External crash calls run between windows, so `defer` is
+        // normally empty — but keep the counters exact regardless.
+        let before = self.defer.len();
+        let mut kept_defer = Vec::with_capacity(before);
+        for ev in std::mem::take(&mut self.defer) {
+            if ev.target == target {
+                self.n_events -= 1;
+                note_drop(&ev, &mut dropped_msgs, &mut self.non_timer_pending);
+            } else {
+                kept_defer.push(ev);
+            }
+        }
+        self.defer = kept_defer;
+        debug_assert_eq!(self.n_events, self.queue.len() + self.defer.len());
+        dropped_msgs
+    }
 }
 
 /// One shard of the simulator: its actors plus the lane core.

@@ -44,7 +44,7 @@ mod msg;
 mod network;
 
 pub use container::ContainerRuntime;
-pub use msg::{DataMsg, KubeMsg, OakMsg, ReplacementReason, SimMsg, TimerKind};
+pub use msg::{CensusRow, DataMsg, KubeMsg, OakMsg, ReplacementReason, SimMsg, TimerKind};
 pub use network::{Delivery, FaultScope, LinkFault, LinkProfile, Network, Transport};
 
 use std::any::Any;
@@ -679,6 +679,36 @@ impl Sim {
             lane.core.set_failed(node, failed);
         }
     }
+
+    /// Crash-stop an actor: discard its state and drop every event
+    /// already queued for it — in-flight messages and pending timers die
+    /// with the process. The slot stays reserved, so the `ActorId`
+    /// remains valid: peers keep addressing it, and deliveries arriving
+    /// while the slot is empty are silently dropped (exactly what a dead
+    /// process looks like from the network). Repopulate the slot with
+    /// [`Sim::restart_actor`]. Returns the number of in-flight messages
+    /// destroyed. External callers must run between windows, the same
+    /// discipline as [`Sim::set_node_failed`].
+    pub fn crash_actor(&mut self, id: ActorId) -> usize {
+        let lane = self.core.lane_of(id) as usize;
+        let slot = self.core.slot_of(id);
+        self.lanes[lane].actors[slot] = None;
+        self.lanes[lane].core.purge_actor(id)
+    }
+
+    /// Cold-restart a crashed actor: a fresh instance takes over the
+    /// same slot, so the `ActorId` (and every peer's stored address)
+    /// stays valid across the incarnation change. Panics if the slot is
+    /// still occupied — crash first.
+    pub fn restart_actor(&mut self, id: ActorId, actor: Box<dyn Actor>) {
+        let lane = self.core.lane_of(id) as usize;
+        let slot = self.core.slot_of(id);
+        assert!(
+            self.lanes[lane].actors[slot].is_none(),
+            "restart_actor over a live actor {id:?}; crash_actor first"
+        );
+        self.lanes[lane].actors[slot] = Some(actor);
+    }
 }
 
 #[cfg(test)]
@@ -932,6 +962,69 @@ mod tests {
         let drains = m.counter("sim.lane.batch_drains");
         assert!(events >= 3, "events={events}");
         assert!(drains >= 1 && drains < events, "drains={drains} events={events}");
+    }
+
+    #[test]
+    fn crash_purges_inflight_and_restart_reuses_the_actor_id() {
+        let (mut sim, a, b) = build();
+        // One ping in flight towards b, plus a pending timer on b.
+        sim.inject(SimTime::ZERO, a, SimMsg::Timer(TimerKind::Custom(0)));
+        sim.run_until(SimTime::ZERO);
+        sim.inject(SimTime::from_secs(5.0), b, SimMsg::Timer(TimerKind::Custom(1)));
+        assert_eq!(sim.pending_non_timer_events(), 1, "ping in flight");
+        let total_before = sim.pending_events();
+
+        // Crash b: the in-flight ping and its timer both die.
+        let dropped = sim.crash_actor(b);
+        assert_eq!(dropped, 1, "exactly the ping is message loss");
+        assert_eq!(sim.pending_non_timer_events(), 0);
+        assert_eq!(sim.pending_events(), total_before - 2, "timer purged too");
+        assert!(sim.actor_as::<Pinger>(b).is_none(), "state is gone");
+
+        // Deliveries to the empty slot are silently dropped.
+        sim.inject(SimTime::from_secs(1.0), b, SimMsg::Data(DataMsg::Ping { seq: 1 }));
+        sim.run_until(SimTime::from_secs(2.0));
+        assert_eq!(sim.pending_non_timer_events(), 0, "dropped at dispatch");
+
+        // Restart under the same ActorId: peers reach the new incarnation
+        // without relearning addresses.
+        sim.restart_actor(
+            b,
+            Box::new(Pinger {
+                peer: Some(a),
+                sent: 0,
+                got: 0,
+                limit: 10,
+            }),
+        );
+        sim.inject(SimTime::from_secs(3.0), a, SimMsg::Timer(TimerKind::Custom(0)));
+        sim.run_until(SimTime::from_secs(10.0));
+        let pb = sim.actor_as::<Pinger>(b).unwrap();
+        assert!(pb.got >= 1, "fresh incarnation receives on the old id");
+    }
+
+    #[test]
+    fn crash_is_deterministic_across_same_seed_runs() {
+        let run = |seed| {
+            let (mut sim, a, b) = build();
+            sim.reseed(seed);
+            sim.inject(SimTime::ZERO, a, SimMsg::Timer(TimerKind::Custom(0)));
+            sim.run_until(SimTime::from_millis(1.0));
+            let dropped = sim.crash_actor(b);
+            sim.restart_actor(
+                b,
+                Box::new(Pinger {
+                    peer: Some(a),
+                    sent: 0,
+                    got: 0,
+                    limit: 4,
+                }),
+            );
+            sim.inject(SimTime::from_secs(1.0), b, SimMsg::Timer(TimerKind::Custom(0)));
+            sim.run_until(SimTime::from_secs(20.0));
+            (dropped, sim.now().as_micros(), sim.metrics().msgs("test"))
+        };
+        assert_eq!(run(3), run(3));
     }
 
     #[test]

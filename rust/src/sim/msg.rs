@@ -54,28 +54,58 @@ pub enum ReplacementReason {
     LocalRecovery,
 }
 
+/// One row of the local-instance census a worker attaches to its
+/// (re-)registration handshake: everything a freshly restarted cluster
+/// orchestrator needs to rebuild its `InstanceTable` entry for a
+/// surviving container bottom-up — the reservation (capacity
+/// re-derivation), the SLA (QoS watching must keep working), and the
+/// replacement lineage (pending root adoptions must survive the crash).
+#[derive(Clone, Debug)]
+pub struct CensusRow {
+    pub instance: InstanceId,
+    pub task: TaskId,
+    pub state: ServiceState,
+    pub request: Capacity,
+    pub sla: TaskSla,
+    /// `(original, reason)` if this instance is a cluster-minted
+    /// replacement whose adoption verdict may have died with the old
+    /// incarnation's outbox.
+    pub origin: Option<(InstanceId, ReplacementReason)>,
+}
+
 /// Oakestra control-plane protocol (paper Fig. 1 steps ①–⑪).
 #[derive(Clone, Debug)]
 pub enum OakMsg {
     // -- registration ----------------------------------------------------
     /// Operator registers a cluster orchestrator with the root (or a
-    /// sub-cluster with its parent).
+    /// sub-cluster with its parent). `epoch` is the orchestrator's
+    /// incarnation number: a crash-restart re-registers under a higher
+    /// epoch, which is how the root tells a fast restart apart from a
+    /// duplicate registration or a partitioned straggler.
     RegisterCluster {
         cluster: ClusterId,
         orchestrator: ActorId,
         parent: ClusterId,
+        epoch: u64,
     },
     RegisterClusterAck {
         accepted: bool,
     },
     /// Worker joins its cluster orchestrator; carries capacity &
-    /// capabilities (§3.2.3) and receives its overlay subnet.
+    /// capabilities (§3.2.3) and receives its overlay subnet. On a
+    /// re-registration (cluster orchestrator restarted) the census
+    /// carries every locally hosted instance so the new incarnation can
+    /// rebuild its tables bottom-up; a first registration sends it empty.
     RegisterWorker {
         spec: WorkerSpec,
         engine: ActorId,
+        census: Vec<CensusRow>,
     },
+    /// `epoch` stamps the answering incarnation: workers remember the
+    /// highest epoch seen and fence commands from older (dead) ones.
     RegisterWorkerAck {
         subnet: u32,
+        epoch: u64,
     },
 
     // -- telemetry (§4.1) --------------------------------------------------
@@ -143,12 +173,19 @@ pub enum OakMsg {
         calc_time: SimTime,
     },
     /// Cluster orchestrator instructs a worker's NodeEngine (step ⑦).
+    /// Carries the full SLA and (for minted replacements) the lineage so
+    /// the worker's census can reconstruct the cluster's tables after an
+    /// orchestrator crash; `epoch` fences the command against arriving
+    /// from an incarnation that has since died (0 = unset/legacy).
     DeployInstance {
         instance: InstanceId,
         task: TaskId,
         request: Capacity,
         image_mb: u32,
         service_ips: Vec<ServiceIp>,
+        sla: TaskSla,
+        origin: Option<(InstanceId, ReplacementReason)>,
+        epoch: u64,
     },
     /// NodeEngine confirms the container is up (→ Running) or failed.
     InstanceStatus {
@@ -156,8 +193,12 @@ pub enum OakMsg {
         node: NodeId,
         state: ServiceState,
     },
+    /// Epoch-fenced like [`OakMsg::DeployInstance`]: a teardown queued by
+    /// a dead incarnation must not fire under the new one, whose rebuilt
+    /// census may have re-legitimized the instance.
     UndeployInstance {
         instance: InstanceId,
+        epoch: u64,
     },
     /// Root tears a whole service down: every cluster undeploys all local
     /// instances of the service, including replacements it minted itself
@@ -359,10 +400,12 @@ impl SimMsg {
         match self {
             SimMsg::Timer(_) => 0,
             SimMsg::Oak(m) => match m {
-                OakMsg::RegisterCluster { .. } => 512,
+                OakMsg::RegisterCluster { .. } => 520,
                 OakMsg::RegisterClusterAck { .. } => 64,
-                OakMsg::RegisterWorker { .. } => 768,
-                OakMsg::RegisterWorkerAck { .. } => 64,
+                // Census rows carry the full SLA, so they are priced like
+                // small SLA documents rather than bare instance triples.
+                OakMsg::RegisterWorker { census, .. } => 768 + 96 * census.len(),
+                OakMsg::RegisterWorkerAck { .. } => 72,
                 OakMsg::WorkerReport { instances, .. } => 180 + 28 * instances.len(),
                 OakMsg::ClusterReport { service_cpu, .. } => 256 + 12 * service_cpu.len(),
                 OakMsg::Ping => 16,
@@ -383,10 +426,10 @@ impl SimMsg {
                 OakMsg::DelegateTask { .. } => 640,
                 OakMsg::DelegationResult { .. } => 96,
                 OakMsg::DeployInstance { service_ips, .. } => {
-                    256 + 32 * service_ips.len()
+                    384 + 32 * service_ips.len()
                 }
                 OakMsg::InstanceStatus { .. } => 96,
-                OakMsg::UndeployInstance { .. } => 64,
+                OakMsg::UndeployInstance { .. } => 72,
                 OakMsg::UndeployService { .. } => 64,
                 OakMsg::ServiceDeployed { .. } => 64,
                 OakMsg::MigrateInstance { .. } => 64,

@@ -5,14 +5,16 @@
 
 use oakestra::api::{ApiRequest, ApiResponse};
 use oakestra::bench_harness::{
-    build_oakestra, run_churn, ChurnConfig, ChurnScenario, OakTestbedConfig,
+    build_oakestra, census_diff, run_churn, ChurnConfig, ChurnScenario,
+    OakTestbedConfig,
 };
 use oakestra::coordinator::{
     ClusterOrchestrator, RootOrchestrator, SchedulerKind, WorkerEngine,
 };
 use oakestra::model::ServiceState;
+use oakestra::sim::{OakMsg, SimMsg};
 use oakestra::sla::simple_sla;
-use oakestra::util::{ServiceId, SimTime};
+use oakestra::util::{InstanceId, ServiceId, SimTime};
 
 /// Small all-scenario storm kept fast enough for CI.
 fn storm_cfg(seed: u64) -> ChurnConfig {
@@ -340,4 +342,204 @@ fn killed_workers_rejoin_as_fresh_nodes() {
     assert_eq!(r.census_mismatch, 0, "{:?}", r.census_diff);
     assert_eq!(r.leaked_instances, 0);
     assert_eq!(r.leaked_capacity_mc, 0);
+}
+
+#[test]
+fn crashed_cluster_rebuilds_census_and_fences_dead_incarnation_epochs() {
+    // Drive crash-recovery through the *testbed* surface: deploy a wave,
+    // crash-stop the cluster orchestrator (state discarded, in-flight
+    // messages dropped), cold-restart it under a higher epoch, and
+    // assert the bottom-up rebuild: workers re-register with a full
+    // census, the root accepts the higher-epoch registration, and the
+    // root-vs-cluster census reconverges with nothing lost. Then inject
+    // a command stamped with the dead incarnation's epoch and assert the
+    // worker-side fence rejects it.
+    let mut tb = build_oakestra(OakTestbedConfig {
+        clusters: 2,
+        workers_per_cluster: 4,
+        ..OakTestbedConfig::default()
+    });
+    tb.warm_up();
+
+    let wave: Vec<ApiRequest> = (0..6)
+        .map(|i| ApiRequest::SubmitService {
+            sla: simple_sla(&format!("crashwave-{i}"), 100, 32),
+        })
+        .collect();
+    let reqs = tb.api_batch(wave, SimTime::from_secs(13.0));
+    tb.sim.run_until(SimTime::from_secs(30.0));
+    for r in &reqs {
+        assert!(
+            matches!(tb.ack(*r), Some(ApiResponse::Submitted { .. })),
+            "wave submit must be acked"
+        );
+    }
+    assert_eq!(
+        tb.deploy_times_ms().len(),
+        6,
+        "whole wave must reach Running before the crash"
+    );
+    assert!(census_diff(&tb).is_empty(), "pre-crash census must agree");
+    // Crash the cluster that actually hosts instances (the root may
+    // have concentrated the whole wave on one of the two).
+    let hosted_in = |tb: &oakestra::bench_harness::OakTestbed, ci: usize| -> usize {
+        tb.workers
+            .iter()
+            .filter(|(n, _)| tb.worker_cluster.get(n) == Some(&ci))
+            .map(|(_, e)| tb.sim.actor_as::<WorkerEngine>(*e).unwrap().hosted_count())
+            .sum()
+    };
+    let target = (0..tb.clusters.len())
+        .max_by_key(|ci| hosted_in(&tb, *ci))
+        .unwrap();
+    let hosted_before = hosted_in(&tb, target);
+    assert!(hosted_before > 0, "the wave must have placed something");
+
+    // Crash-stop the target cluster's orchestrator. Its workers keep
+    // their containers — only the control tier dies.
+    tb.crash_cluster(target);
+    tb.sim.run_until(SimTime::from_secs(35.0));
+    assert!(
+        !census_diff(&tb).is_empty(),
+        "a dead orchestrator must show as root-only census rows"
+    );
+
+    // Cold restart under epoch 2: Recovering → census rebuild from the
+    // solicited worker re-registers → resync with the root.
+    let epoch = tb.restart_cluster(target);
+    assert_eq!(epoch, 2, "first restart bumps the incarnation epoch to 2");
+    tb.sim.run_until(SimTime::from_secs(55.0));
+
+    let m = tb.sim.metrics();
+    assert_eq!(
+        m.counter("root.cluster_restarted"),
+        1,
+        "root must accept exactly one higher-epoch re-registration"
+    );
+    assert_eq!(
+        m.counter("cluster.recovery_completed"),
+        1,
+        "the restarted orchestrator must leave Recovering"
+    );
+    assert!(
+        m.counter("worker.reregistered") >= 4,
+        "every worker of the crashed cluster must re-register"
+    );
+    assert_eq!(
+        m.counter("cluster.census_seeded") as usize,
+        hosted_before,
+        "every surviving container must be re-seeded from the census"
+    );
+    assert_eq!(
+        m.counter("root.resync_adopt_conflict"),
+        0,
+        "census rebuild must not double-adopt"
+    );
+    drop(m);
+    assert!(
+        census_diff(&tb).is_empty(),
+        "census must reconverge after recovery: {:?}",
+        census_diff(&tb)
+    );
+
+    // The workers now hold epoch 2; a command stamped by the dead
+    // incarnation (epoch 1) must be fenced, not applied.
+    let (victim_node, victim_engine) = *tb
+        .workers
+        .iter()
+        .find(|(n, _)| tb.worker_cluster.get(n) == Some(&target))
+        .expect("the crashed cluster has workers");
+    let w = tb.sim.actor_as::<WorkerEngine>(victim_engine).unwrap();
+    assert_eq!(w.epoch, 2, "worker {victim_node} must have learned epoch 2");
+    let hosted = w.hosted_count();
+    let fenced_before = tb.sim.metrics().counter("worker.epoch_fenced");
+    tb.sim.inject(
+        SimTime::from_secs(56.0),
+        victim_engine,
+        SimMsg::Oak(OakMsg::UndeployInstance {
+            instance: InstanceId(999_999),
+            epoch: 1,
+        }),
+    );
+    tb.sim.run_until(SimTime::from_secs(57.0));
+    assert_eq!(
+        tb.sim.metrics().counter("worker.epoch_fenced"),
+        fenced_before + 1,
+        "a dead incarnation's command must trip the epoch fence"
+    );
+    let w = tb.sim.actor_as::<WorkerEngine>(victim_engine).unwrap();
+    assert_eq!(
+        w.hosted_count(),
+        hosted,
+        "the fenced teardown must not touch hosted containers"
+    );
+
+    // Zero-epoch commands are root-originated and never fenced: the full
+    // teardown still drains everything clean after the crash cycle.
+    let services: Vec<ServiceId> = {
+        let root = tb.sim.actor_as::<RootOrchestrator>(tb.root).unwrap();
+        root.db.services().map(|rec| rec.spec.id).collect()
+    };
+    let down: Vec<ApiRequest> = services
+        .iter()
+        .map(|s| ApiRequest::UndeployService { service: *s })
+        .collect();
+    tb.api_batch(down, SimTime::from_secs(60.0));
+    tb.sim.run_until(SimTime::from_secs(100.0));
+    for (_, orch) in &tb.clusters {
+        let c = tb.sim.actor_as::<ClusterOrchestrator>(*orch).unwrap();
+        assert!(
+            c.live_instances().is_empty(),
+            "cluster records drained: {:?}",
+            c.live_instances()
+        );
+        assert_eq!(c.reserved().cpu_millicores, 0, "no reserved capacity");
+    }
+    for (node, engine) in &tb.workers {
+        let w = tb.sim.actor_as::<WorkerEngine>(*engine).unwrap();
+        assert_eq!(w.hosted_count(), 0, "worker {node} drained");
+    }
+}
+
+#[test]
+fn stale_epoch_cluster_registration_is_fenced_at_the_root() {
+    // A register stamped with an older epoch than the root has accepted
+    // (the dead incarnation's register parked in flight, or a rogue
+    // replayed handshake) must be dropped without touching the actor
+    // map: the live incarnation keeps the attachment.
+    let mut tb = build_oakestra(OakTestbedConfig {
+        clusters: 2,
+        workers_per_cluster: 2,
+        ..OakTestbedConfig::default()
+    });
+    tb.warm_up();
+    tb.crash_cluster(0);
+    tb.sim.run_until(SimTime::from_secs(14.0));
+    assert_eq!(tb.restart_cluster(0), 2);
+    tb.sim.run_until(SimTime::from_secs(20.0));
+    assert_eq!(tb.sim.metrics().counter("root.cluster_restarted"), 1);
+
+    // Replay the dead incarnation's handshake (epoch 1 < accepted 2).
+    let cluster_actor = tb.clusters[0].1;
+    tb.sim.inject(
+        SimTime::from_secs(21.0),
+        tb.root,
+        SimMsg::Oak(OakMsg::RegisterCluster {
+            cluster: oakestra::util::ClusterId(1),
+            orchestrator: cluster_actor,
+            parent: oakestra::util::ClusterId(0),
+            epoch: 1,
+        }),
+    );
+    tb.sim.run_until(SimTime::from_secs(25.0));
+    assert_eq!(
+        tb.sim.metrics().counter("root.register_stale_epoch"),
+        1,
+        "the stale-epoch register must be fenced"
+    );
+    assert!(
+        census_diff(&tb).is_empty(),
+        "the live incarnation keeps a consistent attachment: {:?}",
+        census_diff(&tb)
+    );
 }
